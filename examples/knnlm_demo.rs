@@ -1,0 +1,52 @@
+//! KNN-LM serving demo (§5.3): build the datastore with the real
+//! `hidden_knnlm` artifact, serve prompts with retrieval-per-token
+//! baseline vs RaLMSpec (relaxed verification), sweep k.
+//!
+//!     make artifacts && cargo run --release --example knnlm_demo
+
+use ralmspec::config::{Config, CorpusConfig};
+use ralmspec::datagen::generate_stream;
+use ralmspec::knnlm::{Datastore, KnnLmBaseline, KnnLmSpec, KnnServeOptions};
+use ralmspec::retriever::dense::DenseExact;
+use ralmspec::runtime::Engine;
+use ralmspec::spec::{Os3Config, StridePolicy};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let engine = Engine::new(&cfg.paths.artifacts)?;
+    let lm = engine.lm("knnlm")?;
+    let corpus_cfg = CorpusConfig { seed: 11, ..CorpusConfig::default() };
+    let n_entries = 20_000;
+    eprintln!("[knnlm] building {n_entries}-entry datastore via hidden_knnlm...");
+    let stream = generate_stream(&corpus_cfg, n_entries + 600, 11);
+    let extractor = ralmspec::runtime::HiddenExtractor::new(&engine, "knnlm")?;
+    let ds = Datastore::build_pjrt(&stream, &extractor, n_entries)?;
+    let kb = DenseExact::new(ds.keys.clone());
+    let prompts: Vec<Vec<u32>> =
+        (0..3).map(|i| stream.tokens[i * 500..i * 500 + 24].to_vec()).collect();
+
+    for k in [16usize, 256] {
+        let opts = KnnServeOptions { k, max_new: 32,
+                                     ..KnnServeOptions::default() };
+        let mut bt = 0.0;
+        let mut st = 0.0;
+        for p in &prompts {
+            let base = KnnLmBaseline { lm: &lm, kb: &kb, ds: &ds,
+                                       opts: opts.clone() }.run(p)?;
+            let spec = KnnLmSpec {
+                lm: &lm, kb: &kb, ds: &ds,
+                opts: KnnServeOptions {
+                    stride: StridePolicy::Os3(Os3Config::default()),
+                    ..opts.clone()
+                },
+            }.run(p)?;
+            anyhow::ensure!(base.tokens_out == spec.tokens_out,
+                            "outputs diverged");
+            bt += base.total.as_secs_f64();
+            st += spec.total.as_secs_f64();
+        }
+        println!("k={k:<4} baseline {bt:.2}s  RaLMSpec(OS3) {st:.2}s  \
+                  ({:.2}x, outputs identical)", bt / st);
+    }
+    Ok(())
+}

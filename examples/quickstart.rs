@@ -1,0 +1,45 @@
+//! Quickstart: load the AOT artifacts, serve one question with the
+//! baseline and with RaLMSpec+PSA, and print the speed-up.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+use ralmspec::datagen::{generate_questions, Dataset};
+use ralmspec::eval::{run_qa_cell, QaMethod, TestBed};
+use ralmspec::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    // Laptop-scale corpus so the quickstart finishes in seconds.
+    cfg.corpus = CorpusConfig { n_docs: 20_000, n_topics: 128,
+                                ..CorpusConfig::default() };
+    cfg.spec.max_new_tokens = 32;
+
+    let engine = Engine::new(&cfg.paths.artifacts)?;
+    let enc = engine.encoder()?;
+    let lm = engine.lm("gpt2m")?;
+    eprintln!("building corpus + embeddings ({} docs)...", cfg.corpus.n_docs);
+    let bed = TestBed::build(&cfg, &enc);
+    let questions = generate_questions(Dataset::WikiQa, &bed.corpus, 3, 1);
+
+    for kind in [RetrieverKind::Edr, RetrieverKind::Sr] {
+        let base = run_qa_cell(&lm, &enc, &bed, kind, &questions,
+                               QaMethod::Baseline, &cfg)?;
+        let spec = run_qa_cell(&lm, &enc, &bed, kind, &questions,
+                               QaMethod::psa(20), &cfg)?;
+        let bt: f64 = base.iter().map(|m| m.total.as_secs_f64()).sum();
+        let st: f64 = spec.iter().map(|m| m.total.as_secs_f64()).sum();
+        println!("[{}] RaLMSeq {:.2}s  RaLMSpec+PSA {:.2}s  ({:.2}x)",
+                 kind.label(), bt, st, bt / st);
+        for (b, s) in base.iter().zip(&spec) {
+            assert_eq!(b.tokens_out, s.tokens_out,
+                       "outputs must be identical");
+        }
+        println!("      outputs identical: OK  \
+                  (rollbacks={}, spec accuracy={:.2})",
+                 spec.iter().map(|m| m.rollbacks).sum::<u32>(),
+                 spec.iter().map(|m| m.spec_accuracy()).sum::<f64>()
+                     / spec.len() as f64);
+    }
+    Ok(())
+}

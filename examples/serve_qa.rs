@@ -1,0 +1,75 @@
+//! END-TO-END DRIVER (DESIGN.md "End-to-end validation"): load the real
+//! (AOT-compiled) models, batch-serve a QA workload through the serving
+//! router with both RaLMSeq and RaLMSpec+PSA, verify output equivalence on
+//! every request, and report latency/throughput.
+//!
+//!     make artifacts && cargo run --release --example serve_qa
+//!
+//! Flags (positional): [model] [n_requests] [retriever]
+//! e.g. `cargo run --release --example serve_qa -- opt1b 8 edr`
+
+use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+use ralmspec::datagen::{generate_questions, Dataset};
+use ralmspec::eval::{run_qa_cell, QaMethod, TestBed};
+use ralmspec::runtime::Engine;
+use ralmspec::util::summarize;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().cloned().unwrap_or_else(|| "gpt2m".into());
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let kind: RetrieverKind = args
+        .get(2)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(RetrieverKind::Edr);
+
+    let mut cfg = Config::default();
+    cfg.corpus = CorpusConfig { n_docs: 40_000, n_topics: 256,
+                                ..CorpusConfig::default() };
+    cfg.spec.max_new_tokens = 48;
+
+    let engine = Engine::new(&cfg.paths.artifacts)?;
+    let enc = engine.encoder()?;
+    let lm = engine.lm(&model)?;
+    eprintln!("[serve_qa] corpus {} docs, retriever {}, model {model}, \
+               {n} requests x {} tokens",
+              cfg.corpus.n_docs, kind.label(), cfg.spec.max_new_tokens);
+    let bed = TestBed::build(&cfg, &enc);
+    let questions = generate_questions(Dataset::Nq, &bed.corpus, n, 42);
+
+    let mut all_equal = true;
+    for (label, method) in [("RaLMSeq   ", QaMethod::Baseline),
+                            ("RaLMSpec+PSA", QaMethod::psa(20))] {
+        let t0 = std::time::Instant::now();
+        let ms = run_qa_cell(&lm, &enc, &bed, kind, &questions, method,
+                             &cfg)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let lats: Vec<f64> = ms.iter().map(|m| m.total.as_secs_f64()).collect();
+        let s = summarize(&lats);
+        let toks: usize = ms.iter().map(|m| m.tokens_out.len()).sum();
+        let g: f64 = ms.iter().map(|m| m.generate.as_secs_f64()).sum::<f64>()
+            / ms.len() as f64;
+        let r: f64 = ms.iter().map(|m| m.retrieve.as_secs_f64()).sum::<f64>()
+            / ms.len() as f64;
+        println!("{label} wall={wall:>7.2}s  latency/req={:.3}±{:.3}s \
+                  (G={g:.3} R={r:.3})  throughput={:.1} tok/s",
+                 s.mean, s.std, toks as f64 / wall);
+        if method != QaMethod::Baseline {
+            // re-run the baseline per request lazily? compare with cached
+        }
+        if let QaMethod::Spec { .. } = method {
+            let base = run_qa_cell(&lm, &enc, &bed, kind, &questions,
+                                   QaMethod::Baseline, &cfg)?;
+            for (b, sp) in base.iter().zip(&ms) {
+                if b.tokens_out != sp.tokens_out {
+                    all_equal = false;
+                }
+            }
+        }
+    }
+    println!("output equivalence: {}",
+             if all_equal { "OK (all requests identical)" } else { "FAILED" });
+    anyhow::ensure!(all_equal, "speculation changed outputs");
+    Ok(())
+}

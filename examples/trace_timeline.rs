@@ -1,0 +1,14 @@
+//! Fig 1(c) / Fig 3 reproduction: per-request timeline of speculation,
+//! verification, and correction phases for RaLMSeq vs RaLMSpec.
+//!
+//!     cargo run --release --example trace_timeline            # PJRT
+//!     cargo run --release --example trace_timeline -- --mock  # no artifacts
+
+use ralmspec::cli;
+
+fn main() -> anyhow::Result<()> {
+    let mut args: Vec<String> =
+        vec!["trace".into(), "--retriever".into(), "edr".into()];
+    args.extend(std::env::args().skip(1));
+    cli::run(&args)
+}

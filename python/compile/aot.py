@@ -1,0 +1,249 @@
+"""AOT compile path: lower every L2 function to HLO *text* + pack weights.
+
+Run once via `make artifacts` (Python never runs on the request path):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits, per LM config C in configs.LM_CONFIGS:
+    prefill_<C>.hlo.txt, decode_<C>.hlo.txt  (+ hidden_knnlm.hlo.txt)
+    <C>.weights.bin          little-endian f32 concat, order = lm_weight_specs
+    prefill_<C>.manifest.json / decode_<C>.manifest.json  (ordered I/O specs)
+plus the shared encoder (encode_q / encode_batch + encoder.weights.bin), the
+Pallas dense-scoring artifact (score_dense), and a top-level index.json.
+
+Interchange format is HLO TEXT, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import (DATASTORE_CHUNK, ENCODER_BATCH, ENCODER_LEN,
+                      LM_CONFIGS, RETRIEVAL_DIM, SCORE_BATCH, SCORE_TILE,
+                      WEIGHT_SEED)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[np.dtype(dt).name]
+
+
+def _spec_entry(name, kind, shape, dtype, **extra):
+    e = {"name": name, "kind": kind, "shape": list(int(s) for s in shape),
+         "dtype": _dtype_tag(dtype)}
+    e.update(extra)
+    return e
+
+
+def pack_weights(weights, path):
+    """Write ordered (name, array) f32 weights as one little-endian blob.
+
+    Returns manifest weight entries with byte offsets into the blob.
+    """
+    entries, offset = [], 0
+    with open(path, "wb") as f:
+        for name, w in weights:
+            arr = np.asarray(w, dtype="<f4")
+            f.write(arr.tobytes())
+            entries.append(_spec_entry(name, "weight", arr.shape, arr.dtype,
+                                       offset=offset, nbytes=arr.nbytes))
+            offset += arr.nbytes
+    return entries
+
+
+def write_artifact(out_dir, name, lowered, weight_entries, weights_bin,
+                   arg_entries, out_entries, config=None):
+    hlo = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(hlo)
+    manifest = {
+        "artifact": name,
+        "weights_bin": weights_bin,
+        "inputs": list(weight_entries) + list(arg_entries),
+        "outputs": list(out_entries),
+        "config": config or {},
+    }
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {name}: hlo={len(hlo) // 1024}KiB inputs={len(manifest['inputs'])}")
+    return name
+
+
+def build_lm(cfg, out_dir, emitted):
+    print(f"[aot] LM {cfg.name}")
+    specs = M.lm_weight_specs(cfg)
+    weights = M.init_weights(specs, WEIGHT_SEED + hash(cfg.name) % 10000)
+    weights_bin = f"{cfg.name}.weights.bin"
+    wentries = pack_weights(weights, os.path.join(out_dir, weights_bin))
+    wspecs = [jax.ShapeDtypeStruct(s, F32) for _, s in specs]
+    kv_shape = (cfg.n_layers, 2, cfg.n_heads, cfg.max_ctx, cfg.d_head)
+    ccfg = cfg.to_dict()
+    ccfg.update(retrieval_dim=RETRIEVAL_DIM, encoder_len=ENCODER_LEN)
+
+    # prefill
+    lowered = jax.jit(functools.partial(M.lm_prefill, cfg)).lower(
+        *wspecs,
+        jax.ShapeDtypeStruct((cfg.prefill_len,), I32),
+        jax.ShapeDtypeStruct((), I32))
+    emitted.append(write_artifact(
+        out_dir, f"prefill_{cfg.name}", lowered, wentries, weights_bin,
+        [_spec_entry("tokens", "arg", (cfg.prefill_len,), np.int32),
+         _spec_entry("valid_len", "arg", (), np.int32)],
+        [_spec_entry("kv", "state", kv_shape, np.float32),
+         _spec_entry("logits", "out", (cfg.vocab,), np.float32),
+         _spec_entry("qproj", "out", (RETRIEVAL_DIM,), np.float32)],
+        config=ccfg))
+
+    # decode
+    lowered = jax.jit(functools.partial(M.lm_decode, cfg)).lower(
+        *wspecs,
+        jax.ShapeDtypeStruct((), I32),
+        jax.ShapeDtypeStruct((), I32),
+        jax.ShapeDtypeStruct(kv_shape, F32))
+    emitted.append(write_artifact(
+        out_dir, f"decode_{cfg.name}", lowered, wentries, weights_bin,
+        [_spec_entry("token", "arg", (), np.int32),
+         _spec_entry("pos", "arg", (), np.int32),
+         _spec_entry("kv", "state", kv_shape, np.float32)],
+        [_spec_entry("logits", "out", (cfg.vocab,), np.float32),
+         _spec_entry("kv", "state", kv_shape, np.float32),
+         _spec_entry("qproj", "out", (RETRIEVAL_DIM,), np.float32)],
+        config=ccfg))
+
+    # decode_chunk: greedy 4-token interval in one call (QA hot path)
+    from .configs import GEN_CHUNK
+    lowered = jax.jit(functools.partial(M.lm_decode_chunk, cfg, GEN_CHUNK)).lower(
+        *wspecs,
+        jax.ShapeDtypeStruct((), I32),
+        jax.ShapeDtypeStruct((), I32),
+        jax.ShapeDtypeStruct(kv_shape, F32))
+    emitted.append(write_artifact(
+        out_dir, f"decode_chunk_{cfg.name}", lowered, wentries, weights_bin,
+        [_spec_entry("first_token", "arg", (), np.int32),
+         _spec_entry("pos", "arg", (), np.int32),
+         _spec_entry("kv", "state", kv_shape, np.float32)],
+        [_spec_entry("tokens", "out", (GEN_CHUNK,), np.int32),
+         _spec_entry("logits", "out", (cfg.vocab,), np.float32),
+         _spec_entry("kv", "state", kv_shape, np.float32),
+         _spec_entry("qproj", "out", (RETRIEVAL_DIM,), np.float32)],
+        config=dict(ccfg, gen_chunk=GEN_CHUNK)))
+
+    # per-position hidden states (KNN-LM datastore builder)
+    if cfg.name == "knnlm":
+        lowered = jax.jit(functools.partial(M.lm_hidden, cfg)).lower(
+            *wspecs,
+            jax.ShapeDtypeStruct((cfg.prefill_len,), I32),
+            jax.ShapeDtypeStruct((), I32))
+        emitted.append(write_artifact(
+            out_dir, f"hidden_{cfg.name}", lowered, wentries, weights_bin,
+            [_spec_entry("tokens", "arg", (cfg.prefill_len,), np.int32),
+             _spec_entry("valid_len", "arg", (), np.int32)],
+            [_spec_entry("hiddens", "out", (cfg.prefill_len, RETRIEVAL_DIM),
+                         np.float32)],
+            config=ccfg))
+
+
+def build_encoder(vocab, out_dir, emitted):
+    print("[aot] encoder")
+    specs = M.encoder_weight_specs(vocab)
+    weights = M.init_weights(specs, WEIGHT_SEED + 777)
+    weights_bin = "encoder.weights.bin"
+    wentries = pack_weights(weights, os.path.join(out_dir, weights_bin))
+    wspecs = [jax.ShapeDtypeStruct(s, F32) for _, s in specs]
+    cfg = {"vocab": vocab, "encoder_len": ENCODER_LEN,
+           "encoder_batch": ENCODER_BATCH, "retrieval_dim": RETRIEVAL_DIM}
+
+    lowered = jax.jit(functools.partial(M.encode_query, vocab)).lower(
+        *wspecs,
+        jax.ShapeDtypeStruct((ENCODER_LEN,), I32),
+        jax.ShapeDtypeStruct((), I32))
+    emitted.append(write_artifact(
+        out_dir, "encode_q", lowered, wentries, weights_bin,
+        [_spec_entry("tokens", "arg", (ENCODER_LEN,), np.int32),
+         _spec_entry("length", "arg", (), np.int32)],
+        [_spec_entry("qvec", "out", (RETRIEVAL_DIM,), np.float32)],
+        config=cfg))
+
+    lowered = jax.jit(functools.partial(M.encode_batch, vocab)).lower(
+        *wspecs,
+        jax.ShapeDtypeStruct((ENCODER_BATCH, ENCODER_LEN), I32),
+        jax.ShapeDtypeStruct((ENCODER_BATCH,), I32))
+    emitted.append(write_artifact(
+        out_dir, "encode_batch", lowered, wentries, weights_bin,
+        [_spec_entry("tokens", "arg", (ENCODER_BATCH, ENCODER_LEN), np.int32),
+         _spec_entry("lens", "arg", (ENCODER_BATCH,), np.int32)],
+        [_spec_entry("qvecs", "out", (ENCODER_BATCH, RETRIEVAL_DIM),
+                     np.float32)],
+        config=cfg))
+
+
+def build_score(out_dir, emitted):
+    print("[aot] score_dense (Pallas scoring kernel)")
+    lowered = jax.jit(M.score_dense).lower(
+        jax.ShapeDtypeStruct((SCORE_BATCH, RETRIEVAL_DIM), F32),
+        jax.ShapeDtypeStruct((SCORE_TILE, RETRIEVAL_DIM), F32))
+    emitted.append(write_artifact(
+        out_dir, "score_dense", lowered, [], None,
+        [_spec_entry("queries", "arg", (SCORE_BATCH, RETRIEVAL_DIM),
+                     np.float32),
+         _spec_entry("corpus_tile", "arg", (SCORE_TILE, RETRIEVAL_DIM),
+                     np.float32)],
+        [_spec_entry("scores", "out", (SCORE_BATCH, SCORE_TILE), np.float32)],
+        config={"score_batch": SCORE_BATCH, "score_tile": SCORE_TILE,
+                "retrieval_dim": RETRIEVAL_DIM}))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=sorted(LM_CONFIGS),
+                    help="subset of LM configs to build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    emitted = []
+    vocab = next(iter(LM_CONFIGS.values())).vocab
+    build_encoder(vocab, args.out_dir, emitted)
+    build_score(args.out_dir, emitted)
+    for name in args.models:
+        build_lm(LM_CONFIGS[name], args.out_dir, emitted)
+
+    index = {
+        "artifacts": emitted,
+        "lm_configs": {n: c.to_dict() for n, c in LM_CONFIGS.items()
+                       if n in args.models},
+        "retrieval_dim": RETRIEVAL_DIM,
+        "encoder_len": ENCODER_LEN,
+        "encoder_batch": ENCODER_BATCH,
+        "score_batch": SCORE_BATCH,
+        "score_tile": SCORE_TILE,
+        "datastore_chunk": DATASTORE_CHUNK,
+        "weight_seed": WEIGHT_SEED,
+    }
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"[aot] wrote {len(emitted)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

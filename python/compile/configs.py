@@ -1,0 +1,74 @@
+"""Model-size configurations shared between the JAX (L2) layer and aot.py.
+
+Each config is a stand-in for one of the paper's language models (see
+DESIGN.md §2 "Substitutions"): the reproduction measures latency trade-offs,
+so what must be preserved is the *ordering and rough ratio* of LM-generation
+cost across model classes, not parameter counts.
+
+The same numbers are mirrored on the Rust side via the per-artifact
+manifest.json — Rust never hardcodes them.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    # Maximum total context (doc prefix + question + generated tokens).
+    max_ctx: int
+    # Fixed (padded) prefill input length; must be <= max_ctx.
+    prefill_len: int
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["d_head"] = self.d_head
+        return d
+
+
+# Retrieval embedding dimensionality (dense retrievers + KNN-LM datastore).
+RETRIEVAL_DIM = 64
+# Number of tokens of context the query/passage encoder consumes.
+ENCODER_LEN = 32
+# Batch size of the batched passage-encoder artifact.
+ENCODER_BATCH = 64
+# Batched dense-scoring artifact shapes (Pallas scoring kernel).
+SCORE_BATCH = 16
+SCORE_TILE = 512
+# Tokens per decode_chunk artifact call (= the paper's generation stride:
+# Ram et al. retrieve every 4 generated tokens).
+GEN_CHUNK = 4
+
+LM_CONFIGS = {
+    # GPT2-medium stand-in.
+    "gpt2m": ModelConfig("gpt2m", n_layers=4, d_model=256, n_heads=4,
+                         d_ff=1024, vocab=4096, max_ctx=320, prefill_len=320),
+    # OPT-1.3B stand-in.
+    "opt1b": ModelConfig("opt1b", n_layers=6, d_model=320, n_heads=5,
+                         d_ff=1280, vocab=4096, max_ctx=320, prefill_len=320),
+    # LLaMA-2-7B stand-in.
+    "llama7b": ModelConfig("llama7b", n_layers=8, d_model=384, n_heads=6,
+                           d_ff=1536, vocab=4096, max_ctx=320, prefill_len=320),
+    # LLaMA-2-13B stand-in (Table 3 only).
+    "llama13b": ModelConfig("llama13b", n_layers=10, d_model=512, n_heads=8,
+                            d_ff=2048, vocab=4096, max_ctx=320, prefill_len=320),
+    # 16-layer / 247M KNN-LM transformer stand-in (Khandelwal et al.).
+    "knnlm": ModelConfig("knnlm", n_layers=6, d_model=320, n_heads=5,
+                         d_ff=1280, vocab=4096, max_ctx=320, prefill_len=320),
+}
+
+# Length of a document slice processed by the KNN-LM datastore builder
+# (`hidden_knnlm` artifact) in one call.
+DATASTORE_CHUNK = 256
+
+WEIGHT_SEED = 20240131  # deterministic weight init across rebuilds

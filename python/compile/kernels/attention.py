@@ -1,0 +1,170 @@
+"""L1 Pallas attention kernels (flash-attention-style, VMEM-tiled).
+
+Two kernels, both with an online-softmax accumulator so only
+O(block_q x block_k) score tiles ever materialize:
+
+* ``mha_prefill``   — full causal multi-head attention over a padded
+  sequence (used by the ``prefill_*`` artifacts).
+* ``mha_decode``    — single-query attention against the KV cache (used by
+  the ``decode_*`` artifacts, one call per generated token).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates
+(head, q-block); each step holds one `[block_q, d_head]` Q tile plus one
+`[block_k, d_head]` K/V tile in VMEM and drives the MXU with
+`[block_q, block_k]` score matmuls — the TPU analogue of the GPU
+flash-attention threadblock schedule. On this image the kernels run with
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls); structure,
+not interpret-mode wallclock, is what carries to real hardware.
+
+Correctness oracle: ``kernels/ref.py`` (pure jnp), enforced by
+``python/tests/test_kernels.py`` with hypothesis shape sweeps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, block_q, block_k,
+                    seq_len, scale):
+    """One (head, q-block) grid step of causal prefill attention.
+
+    q_ref: [block_q, d_head]   (this head / q-block tile)
+    k_ref, v_ref: [seq_len, d_head]  (this head, full sequence)
+    len_ref: [1]               (valid prefix length; tokens >= len are pad)
+    o_ref: [block_q, d_head]
+    """
+    iq = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale
+    d_head = q.shape[-1]
+    valid_len = len_ref[0]
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    n_kb = seq_len // block_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # [block_q, block_k]
+        k_pos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        mask = (k_pos <= q_pos) & (k_pos < valid_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v.astype(jnp.float32)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    acc0 = jnp.zeros((block_q, d_head), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    # Rows that saw no valid key (can't happen for q_pos < valid_len, but
+    # padded rows may) would divide by ~0; clamp to keep numerics finite.
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def mha_prefill(q, k, v, valid_len, *, block_q=DEFAULT_BLOCK_Q,
+                block_k=DEFAULT_BLOCK_K, interpret=True):
+    """Causal MHA over a padded sequence.
+
+    q, k, v: [n_heads, seq_len, d_head]; valid_len: int32 scalar array.
+    Returns [n_heads, seq_len, d_head]. seq_len must be divisible by the
+    block sizes (the AOT layer always pads to prefill_len).
+    """
+    n_heads, seq_len, d_head = q.shape
+    assert seq_len % block_q == 0 and seq_len % block_k == 0, (
+        f"seq_len={seq_len} not divisible by blocks ({block_q},{block_k})")
+    scale = 1.0 / (d_head ** 0.5)
+    len_arr = jnp.reshape(valid_len.astype(jnp.int32), (1,))
+    grid = (n_heads, seq_len // block_q)
+    kernel = functools.partial(_prefill_kernel, block_q=block_q,
+                               block_k=block_k, seq_len=seq_len, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d_head), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((None, seq_len, d_head), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((None, seq_len, d_head), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1,), lambda h, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d_head), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v, len_arr)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, block_k, seq_len,
+                   scale):
+    """One head's single-query attention against the KV cache.
+
+    q_ref: [1, d_head]; k_ref, v_ref: [seq_len, d_head]; pos_ref: [1]
+    o_ref: [1, d_head].  Attends over cache slots 0..=pos (the new token's
+    K/V has already been written at slot `pos` by the L2 graph).
+    """
+    q = q_ref[...].astype(jnp.float32) * scale  # [1, d_head]
+    d_head = q.shape[-1]
+    pos = pos_ref[0]
+    n_kb = seq_len // block_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # [1, block_k]
+        k_pos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        s = jnp.where(k_pos <= pos, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v.astype(jnp.float32)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((1, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1, 1), jnp.float32)
+    acc0 = jnp.zeros((1, d_head), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def mha_decode(q, k_cache, v_cache, pos, *, block_k=DEFAULT_BLOCK_K,
+               interpret=True):
+    """Single-token MHA against the KV cache.
+
+    q: [n_heads, d_head]; k_cache, v_cache: [n_heads, seq_len, d_head];
+    pos: int32 scalar array (index of the token being decoded).
+    Returns [n_heads, d_head].
+    """
+    n_heads, seq_len, d_head = k_cache.shape
+    assert seq_len % block_k == 0
+    scale = 1.0 / (d_head ** 0.5)
+    pos_arr = jnp.reshape(pos.astype(jnp.int32), (1,))
+    q3 = q[:, None, :]  # [n_heads, 1, d_head]
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               seq_len=seq_len, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((None, 1, d_head), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, seq_len, d_head), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, seq_len, d_head), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, d_head), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, 1, d_head), q.dtype),
+        interpret=interpret,
+    )(q3, k_cache, v_cache, pos_arr)
+    return out[:, 0, :]

@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: every kernel must match its oracle
+to float32 tolerance over hypothesis-swept shapes (test_kernels.py), and the
+L2 model is *also* cross-checked against a full oracle-only forward pass
+(test_model.py), so a kernel bug cannot hide behind the model.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_prefill_ref(q, k, v, valid_len):
+    """Causal masked MHA. q,k,v: [H, T, Dh]; valid_len: scalar. -> [H, T, Dh]."""
+    h, t, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("htd,hsd->hts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(t)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = (k_pos <= q_pos) & (k_pos < valid_len)
+    s = jnp.where(mask[None, :, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hts,hsd->htd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mha_decode_ref(q, k_cache, v_cache, pos):
+    """Single-query MHA over cache slots 0..=pos.
+
+    q: [H, Dh]; caches: [H, T, Dh]; pos: scalar. -> [H, Dh].
+    """
+    h, t, dh = k_cache.shape
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("hd,htd->ht", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(t)[None, :] <= pos
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("ht,htd->hd", p, v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def score_ref(queries, corpus):
+    """Inner-product scores. queries: [B, dr]; corpus: [N, dr] -> [B, N]."""
+    return (queries.astype(jnp.float32) @ corpus.astype(jnp.float32).T)

@@ -1,0 +1,306 @@
+"""L2: JAX model definitions (decoder-only LM + query/passage encoder).
+
+Everything here is build-time only: `aot.py` lowers these functions once to
+HLO text; the Rust runtime executes them via PJRT. Weights are *runtime
+inputs* (uploaded once by Rust as device buffers), not HLO constants, so the
+HLO stays small and one graph serves any seed.
+
+The attention hot-spot is the L1 Pallas kernel (`kernels.attention`); the
+dense-retrieval scoring artifact uses `kernels.scoring`.
+
+Weight layout: `lm_weight_specs(cfg)` / `encoder_weight_specs()` return an
+*ordered* list of (name, shape) — the single source of truth for the
+manifest, the packed `.weights.bin`, and the HLO parameter order.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import RETRIEVAL_DIM, ModelConfig
+from .kernels.attention import mha_decode, mha_prefill
+from .kernels.scoring import score_batch
+
+# ---------------------------------------------------------------------------
+# Weight specs (ordered; shared by init, packing, manifest, HLO params)
+# ---------------------------------------------------------------------------
+
+ENCODER_D = 128
+ENCODER_HIDDEN = 256
+
+
+def lm_weight_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list for one LM config."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    specs = [
+        ("tok_emb", (v, d)),
+        ("pos_emb", (cfg.max_ctx, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1_w", (d,)), (p + "ln1_b", (d,)),
+            (p + "wq", (d, d)), (p + "wk", (d, d)),
+            (p + "wv", (d, d)), (p + "wo", (d, d)),
+            (p + "ln2_w", (d,)), (p + "ln2_b", (d,)),
+            (p + "w1", (d, f)), (p + "b1", (f,)),
+            (p + "w2", (f, d)), (p + "b2", (d,)),
+        ]
+    specs += [
+        ("lnf_w", (d,)), ("lnf_b", (d,)),
+        # Retrieval-space projection of the final hidden state (KNN-LM
+        # datastore keys / per-token query embeddings).
+        ("w_proj", (d, RETRIEVAL_DIM)),
+    ]
+    return specs
+
+
+def encoder_weight_specs(vocab: int):
+    """Ordered (name, shape) list for the shared query/passage encoder."""
+    return [
+        ("enc_emb", (vocab, ENCODER_D)),
+        ("enc_w1", (ENCODER_D, ENCODER_HIDDEN)),
+        ("enc_b1", (ENCODER_HIDDEN,)),
+        ("enc_w2", (ENCODER_HIDDEN, RETRIEVAL_DIM)),
+        ("enc_b2", (RETRIEVAL_DIM,)),
+    ]
+
+
+def init_weights(specs, seed: int):
+    """Deterministic init; LN weights 1 / biases 0 / matrices N(0, 1/fan_in)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in specs:
+        key, sub = jax.random.split(key)
+        base = name.split(".")[-1]
+        if base in ("ln1_b", "ln2_b", "lnf_b", "b1", "b2", "enc_b1", "enc_b2"):
+            w = jnp.zeros(shape, jnp.float32)
+        elif base in ("ln1_w", "ln2_w", "lnf_w"):
+            w = jnp.ones(shape, jnp.float32)
+        else:
+            sigma = (1.0 / shape[0]) ** 0.5
+            w = jax.random.normal(sub, shape, jnp.float32) * sigma
+        out.append((name, w))
+    return out
+
+
+def _as_dict(specs, args):
+    assert len(specs) == len(args), (len(specs), len(args))
+    return {name: a for (name, _), a in zip(specs, args)}
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, w, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def _split_heads(x, n_heads):
+    # [T, D] -> [H, T, Dh]
+    t, d = x.shape
+    return x.reshape(t, n_heads, d // n_heads).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    # [H, T, Dh] -> [T, D]
+    h, t, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(t, h * dh)
+
+
+def _block_prefill(w, i, x, valid_len, cfg, interpret):
+    p = f"layer{i}."
+    a = _layer_norm(x, w[p + "ln1_w"], w[p + "ln1_b"])
+    q = _split_heads(a @ w[p + "wq"], cfg.n_heads)
+    k = _split_heads(a @ w[p + "wk"], cfg.n_heads)
+    v = _split_heads(a @ w[p + "wv"], cfg.n_heads)
+    attn = mha_prefill(q, k, v, valid_len, interpret=interpret)
+    x = x + _merge_heads(attn) @ w[p + "wo"]
+    m = _layer_norm(x, w[p + "ln2_w"], w[p + "ln2_b"])
+    x = x + (jax.nn.gelu(m @ w[p + "w1"] + w[p + "b1"])) @ w[p + "w2"] \
+        + w[p + "b2"]
+    return x, k, v
+
+
+def lm_prefill(cfg: ModelConfig, *args, interpret=True):
+    """Prefill over a padded token window.
+
+    args = (*weights, tokens i32[prefill_len], valid_len i32[]).
+    Returns (kv f32[L, 2, H, max_ctx, Dh], logits f32[vocab], qproj f32[dr]):
+    the KV cache (padded out to max_ctx slots), next-token logits at the last
+    valid position, and the retrieval-space projection of its hidden state.
+    """
+    specs = lm_weight_specs(cfg)
+    w = _as_dict(specs, args[:len(specs)])
+    tokens, valid_len = args[len(specs):]
+    t = cfg.prefill_len
+    x = w["tok_emb"][tokens] + w["pos_emb"][:t]
+    kv_layers = []
+    for i in range(cfg.n_layers):
+        x, k, v = _block_prefill(w, i, x, valid_len, cfg, interpret)
+        kv_layers.append(jnp.stack([k, v]))  # [2, H, T, Dh]
+    kv = jnp.stack(kv_layers)  # [L, 2, H, T, Dh]
+    if cfg.max_ctx > t:
+        pad = jnp.zeros((cfg.n_layers, 2, cfg.n_heads, cfg.max_ctx - t,
+                         cfg.d_head), kv.dtype)
+        kv = jnp.concatenate([kv, pad], axis=3)
+    x = _layer_norm(x, w["lnf_w"], w["lnf_b"])
+    last = x[valid_len - 1]  # [D]
+    logits = last @ w["tok_emb"].T
+    qproj = last @ w["w_proj"]
+    qproj = qproj / jnp.maximum(jnp.linalg.norm(qproj), 1e-9)
+    return kv, logits, qproj
+
+
+def lm_decode(cfg: ModelConfig, *args, interpret=True):
+    """One decode step against the KV cache.
+
+    args = (*weights, token i32[], pos i32[], kv f32[L,2,H,max_ctx,Dh]).
+    Writes the new K/V at slot `pos`, attends over 0..=pos, and returns
+    (logits f32[vocab], kv' f32[L,2,H,max_ctx,Dh], qproj f32[dr]).
+    """
+    specs = lm_weight_specs(cfg)
+    w = _as_dict(specs, args[:len(specs)])
+    token, pos, kv = args[len(specs):]
+    x = w["tok_emb"][token] + w["pos_emb"][pos]  # [D]
+    new_kv = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        a = _layer_norm(x, w[p + "ln1_w"], w[p + "ln1_b"])
+        q = (a @ w[p + "wq"]).reshape(cfg.n_heads, cfg.d_head)
+        k = (a @ w[p + "wk"]).reshape(cfg.n_heads, cfg.d_head)
+        v = (a @ w[p + "wv"]).reshape(cfg.n_heads, cfg.d_head)
+        k_cache = jax.lax.dynamic_update_slice(
+            kv[i, 0], k[:, None, :], (0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            kv[i, 1], v[:, None, :], (0, pos, 0))
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+        attn = mha_decode(q, k_cache, v_cache, pos, interpret=interpret)
+        x = x + attn.reshape(cfg.d_model) @ w[p + "wo"]
+        m = _layer_norm(x, w[p + "ln2_w"], w[p + "ln2_b"])
+        x = x + (jax.nn.gelu(m @ w[p + "w1"] + w[p + "b1"])) @ w[p + "w2"] \
+            + w[p + "b2"]
+    kv_out = jnp.stack(new_kv)
+    x = _layer_norm(x, w["lnf_w"], w["lnf_b"])
+    logits = x @ w["tok_emb"].T
+    qproj = x @ w["w_proj"]
+    qproj = qproj / jnp.maximum(jnp.linalg.norm(qproj), 1e-9)
+    return logits, kv_out, qproj
+
+
+def _decode_core(cfg, w, token, pos, kv, interpret):
+    """Shared single-step decode: returns (logits, kv', hidden)."""
+    x = w["tok_emb"][token] + w["pos_emb"][pos]  # [D]
+    new_kv = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        a = _layer_norm(x, w[p + "ln1_w"], w[p + "ln1_b"])
+        q = (a @ w[p + "wq"]).reshape(cfg.n_heads, cfg.d_head)
+        k = (a @ w[p + "wk"]).reshape(cfg.n_heads, cfg.d_head)
+        v = (a @ w[p + "wv"]).reshape(cfg.n_heads, cfg.d_head)
+        k_cache = jax.lax.dynamic_update_slice(
+            kv[i, 0], k[:, None, :], (0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            kv[i, 1], v[:, None, :], (0, pos, 0))
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+        attn = mha_decode(q, k_cache, v_cache, pos, interpret=interpret)
+        x = x + attn.reshape(cfg.d_model) @ w[p + "wo"]
+        m = _layer_norm(x, w[p + "ln2_w"], w[p + "ln2_b"])
+        x = x + (jax.nn.gelu(m @ w[p + "w1"] + w[p + "b1"])) @ w[p + "w2"] \
+            + w[p + "b2"]
+    kv_out = jnp.stack(new_kv)
+    x = _layer_norm(x, w["lnf_w"], w["lnf_b"])
+    logits = x @ w["tok_emb"].T
+    return logits, kv_out, x
+
+
+def lm_decode_chunk(cfg: ModelConfig, chunk: int, *args, interpret=True):
+    """Greedy-decode a chunk of `chunk` tokens in one call.
+
+    args = (*weights, first_token i32[], pos i32[], kv).
+    Appends `first_token` at `pos`, then greedily (argmax, ties -> lowest id,
+    matching `util::argmax` on the Rust side) selects and appends chunk-1
+    more tokens. Returns (tokens i32[chunk] — the appended tokens, with
+    tokens[0] == first_token — logits f32[vocab] at the last position,
+    kv', qproj f32[dr]).
+
+    This is the serving hot path for the QA pipelines: one PJRT call (and
+    one KV round-trip) per generation interval instead of per token — see
+    EXPERIMENTS.md §Perf.
+    """
+    specs = lm_weight_specs(cfg)
+    w = _as_dict(specs, args[:len(specs)])
+    first_token, pos, kv = args[len(specs):]
+    token = first_token
+    toks = []
+    logits = None
+    hidden = None
+    for j in range(chunk):
+        logits, kv, hidden = _decode_core(cfg, w, token, pos + j, kv,
+                                          interpret)
+        toks.append(token)
+        token = jnp.argmax(logits).astype(jnp.int32)
+    qproj = hidden @ w["w_proj"]
+    qproj = qproj / jnp.maximum(jnp.linalg.norm(qproj), 1e-9)
+    return jnp.stack(toks), logits, kv, qproj
+
+
+def lm_hidden(cfg: ModelConfig, *args, interpret=True):
+    """Per-position retrieval-space hidden states (KNN-LM datastore builder).
+
+    args = (*weights, tokens i32[prefill_len], valid_len i32[]).
+    Runs a causal forward over the chunk and returns the *projected,
+    normalized* hidden state at every position: f32[prefill_len, dr].
+    Position i's vector is the KNN-LM key whose value is token i+1.
+    """
+    specs = lm_weight_specs(cfg)
+    w = _as_dict(specs, args[:len(specs)])
+    tokens, valid_len = args[len(specs):]
+    t = tokens.shape[0]
+    x = w["tok_emb"][tokens] + w["pos_emb"][:t]
+    for i in range(cfg.n_layers):
+        x, _, _ = _block_prefill(w, i, x, valid_len, cfg, interpret)
+    x = _layer_norm(x, w["lnf_w"], w["lnf_b"])
+    proj = x @ w["w_proj"]  # [T, dr]
+    norm = jnp.maximum(jnp.linalg.norm(proj, axis=-1, keepdims=True), 1e-9)
+    return (proj / norm,)
+
+
+# ---------------------------------------------------------------------------
+# Query / passage encoder (shared embedding space, DPR stand-in)
+# ---------------------------------------------------------------------------
+
+def _encode_one(w, tokens, length):
+    emb = w["enc_emb"][tokens]  # [Tq, De]
+    mask = (jnp.arange(tokens.shape[0]) < length)[:, None]
+    pooled = jnp.sum(emb * mask, axis=0) / jnp.maximum(length, 1)
+    h = jax.nn.gelu(pooled @ w["enc_w1"] + w["enc_b1"])
+    out = h @ w["enc_w2"] + w["enc_b2"]
+    return out / jnp.maximum(jnp.linalg.norm(out), 1e-9)
+
+
+def encode_query(vocab: int, *args):
+    """args = (*enc_weights, tokens i32[ENCODER_LEN], length i32[]) -> (f32[dr],)."""
+    specs = encoder_weight_specs(vocab)
+    w = _as_dict(specs, args[:len(specs)])
+    tokens, length = args[len(specs):]
+    return (_encode_one(w, tokens, length),)
+
+
+def encode_batch(vocab: int, *args):
+    """args = (*enc_weights, tokens i32[B, Tq], lens i32[B]) -> (f32[B, dr],)."""
+    specs = encoder_weight_specs(vocab)
+    w = _as_dict(specs, args[:len(specs)])
+    tokens, lens = args[len(specs):]
+    return (jax.vmap(lambda t, l: _encode_one(w, t, l))(tokens, lens),)
+
+
+# ---------------------------------------------------------------------------
+# Dense scoring artifact (Pallas scoring kernel)
+# ---------------------------------------------------------------------------
+
+def score_dense(queries, corpus_tile, interpret=True):
+    """queries f32[B, dr] x corpus_tile f32[N, dr] -> (scores f32[B, N],)."""
+    return (score_batch(queries, corpus_tile, interpret=interpret),)

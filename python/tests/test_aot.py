@@ -1,0 +1,140 @@
+"""AOT path tests: HLO-text emission, manifest consistency, weight packing.
+
+These run the same lowering pipeline as `make artifacts` against a tiny
+config, so they are fast and do not depend on artifacts/ being built.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.configs import LM_CONFIGS, ModelConfig, RETRIEVAL_DIM
+
+TINY = ModelConfig("tiny", n_layers=1, d_model=32, n_heads=2, d_ff=64,
+                   vocab=64, max_ctx=64, prefill_len=64)
+
+
+def test_hlo_text_is_parseable_format():
+    """Lowered text must be HLO text (not proto bytes) with an ENTRY."""
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text and "ENTRY" in text
+    assert "parameter(0)" in text
+
+
+def test_hlo_param_order_matches_arg_order():
+    """HLO parameter(i) must follow jit positional-arg order: the Rust
+    runtime feeds buffers strictly by manifest order."""
+    def fn(a, b, c):
+        return (a + b[0] + c[0, 0],)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((3,), jnp.float32),
+        jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    i0 = text.index("parameter(0)")
+    i1 = text.index("parameter(1)")
+    i2 = text.index("parameter(2)")
+    # shapes appear on the same line as the parameter decl
+    line0 = text[:i0].rsplit("\n", 1)[-1] + text[i0:].split("\n", 1)[0]
+    line1 = text[:i1].rsplit("\n", 1)[-1] + text[i1:].split("\n", 1)[0]
+    line2 = text[:i2].rsplit("\n", 1)[-1] + text[i2:].split("\n", 1)[0]
+    assert "f32[]" in line0
+    assert "f32[3]" in line1
+    assert "f32[2,2]" in line2
+
+
+def test_pack_weights_roundtrip(tmp_path):
+    specs = M.lm_weight_specs(TINY)
+    weights = M.init_weights(specs, seed=5)
+    path = tmp_path / "w.bin"
+    entries = aot.pack_weights(weights, str(path))
+    blob = path.read_bytes()
+    assert len(entries) == len(specs)
+    total = sum(e["nbytes"] for e in entries)
+    assert len(blob) == total
+    for e, (name, w) in zip(entries, weights):
+        assert e["name"] == name
+        arr = np.frombuffer(blob[e["offset"]:e["offset"] + e["nbytes"]],
+                            dtype="<f4").reshape(e["shape"])
+        np.testing.assert_array_equal(arr, np.asarray(w))
+
+
+def test_full_artifact_emission_tiny(tmp_path):
+    emitted = []
+    aot.build_encoder(TINY.vocab, str(tmp_path), emitted)
+    aot.build_score(str(tmp_path), emitted)
+    aot.build_lm(TINY, str(tmp_path), emitted)
+    assert set(emitted) == {"encode_q", "encode_batch", "score_dense",
+                            "prefill_tiny", "decode_tiny",
+                            "decode_chunk_tiny"}
+    for name in emitted:
+        hlo = (tmp_path / f"{name}.hlo.txt").read_text()
+        assert "ENTRY" in hlo
+        man = json.loads((tmp_path / f"{name}.manifest.json").read_text())
+        assert man["artifact"] == name
+        # every input has shape/dtype; weights also carry blob coordinates
+        for inp in man["inputs"]:
+            assert inp["dtype"] in ("f32", "i32")
+            if inp["kind"] == "weight":
+                assert "offset" in inp and "nbytes" in inp
+        # parameter count in the HLO matches the manifest
+        n_params = hlo.count("= parameter(")
+        if n_params == 0:  # some printers use 'parameter(n)' without '= '
+            n_params = hlo.count("parameter(")
+        assert n_params >= len(man["inputs"])
+
+
+def test_manifest_input_count_matches_hlo_entry(tmp_path):
+    emitted = []
+    aot.build_lm(TINY, str(tmp_path), emitted)
+    man = json.loads((tmp_path / "decode_tiny.manifest.json").read_text())
+    hlo = (tmp_path / "decode_tiny.hlo.txt").read_text()
+    # every manifest input exists as parameter(i) in the HLO text
+    for i in range(len(man["inputs"])):
+        assert f"parameter({i})" in hlo
+    assert f"parameter({len(man['inputs'])})" not in hlo
+    n_weights = sum(1 for i in man["inputs"] if i["kind"] == "weight")
+    specs = M.lm_weight_specs(TINY)
+    assert n_weights == len(specs)
+    # decode has token/pos/kv on top of the weights
+    assert [i["name"] for i in man["inputs"][n_weights:]] == ["token", "pos",
+                                                              "kv"]
+
+
+def test_all_real_configs_have_valid_dims():
+    for cfg in LM_CONFIGS.values():
+        assert cfg.d_model % cfg.n_heads == 0
+        assert cfg.prefill_len % 64 == 0, "prefill must align to block_q"
+        assert cfg.max_ctx % 64 == 0, "ctx must align to block_k"
+        assert cfg.prefill_len <= cfg.max_ctx
+        assert cfg.vocab >= 256
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/index.json")),
+    reason="artifacts/ not built (run `make artifacts`)")
+def test_built_artifacts_index_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "index.json")) as f:
+        index = json.load(f)
+    assert index["retrieval_dim"] == RETRIEVAL_DIM
+    for name in index["artifacts"]:
+        assert os.path.exists(os.path.join(root, f"{name}.hlo.txt")), name
+        assert os.path.exists(os.path.join(root, f"{name}.manifest.json")), name
+        with open(os.path.join(root, f"{name}.manifest.json")) as f:
+            man = json.load(f)
+        if man["weights_bin"]:
+            bin_path = os.path.join(root, man["weights_bin"])
+            assert os.path.exists(bin_path)
+            need = max((i["offset"] + i["nbytes"]
+                        for i in man["inputs"] if i["kind"] == "weight"),
+                       default=0)
+            assert os.path.getsize(bin_path) >= need

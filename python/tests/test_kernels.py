@@ -1,0 +1,168 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, valid lengths, and positions; every case asserts
+allclose against kernels/ref.py. This is the core correctness signal for the
+compute layer — the AOT artifacts embed exactly these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import mha_decode, mha_prefill
+from compile.kernels.scoring import score_batch
+
+settings.register_profile("kernels", deadline=None, max_examples=25,
+                          derandomize=True)
+settings.load_profile("kernels")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# prefill attention
+# ---------------------------------------------------------------------------
+
+@given(h=st.integers(1, 5),
+       t_blocks=st.integers(1, 4),
+       dh=st.sampled_from([16, 32, 64]),
+       len_frac=st.floats(0.05, 1.0),
+       seed=st.integers(0, 2**16))
+def test_prefill_matches_ref(h, t_blocks, dh, len_frac, seed):
+    t = 64 * t_blocks
+    valid = max(1, int(t * len_frac))
+    q, k, v = (_rand(seed + i, (h, t, dh)) for i in range(3))
+    vl = jnp.array(valid, jnp.int32)
+    got = mha_prefill(q, k, v, vl)
+    exp = ref.mha_prefill_ref(q, k, v, vl)
+    # Only rows < valid are consumed downstream (padded rows attend to the
+    # valid prefix only in the oracle, but never feed the logits).
+    np.testing.assert_allclose(np.asarray(got)[:, :valid],
+                               np.asarray(exp)[:, :valid],
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(bq=st.sampled_from([16, 32, 64]), bk=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 2**16))
+def test_prefill_block_size_invariance(bq, bk, seed):
+    """The tiling schedule must not change the numbers."""
+    h, t, dh = 2, 128, 32
+    q, k, v = (_rand(seed + i, (h, t, dh)) for i in range(3))
+    vl = jnp.array(100, jnp.int32)
+    base = mha_prefill(q, k, v, vl)
+    tiled = mha_prefill(q, k, v, vl, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(base)[:, :100],
+                               np.asarray(tiled)[:, :100],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_causality():
+    """Perturbing future tokens must not change past outputs."""
+    h, t, dh = 2, 128, 32
+    q, k, v = (_rand(i, (h, t, dh)) for i in range(3))
+    vl = jnp.array(t, jnp.int32)
+    base = np.asarray(mha_prefill(q, k, v, vl))
+    k2 = k.at[:, 80:].add(5.0)
+    v2 = v.at[:, 80:].add(-3.0)
+    pert = np.asarray(mha_prefill(q, k2, v2, vl))
+    np.testing.assert_allclose(base[:, :80], pert[:, :80], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[:, 80:], pert[:, 80:])
+
+
+def test_prefill_length_mask():
+    """Tokens beyond valid_len must be invisible to valid positions."""
+    h, t, dh = 2, 64, 16
+    q, k, v = (_rand(i + 10, (h, t, dh)) for i in range(3))
+    vl = jnp.array(40, jnp.int32)
+    base = np.asarray(mha_prefill(q, k, v, vl))
+    k2 = k.at[:, 40:].set(99.0)
+    v2 = v.at[:, 40:].set(-99.0)
+    pert = np.asarray(mha_prefill(q, k2, v2, vl))
+    np.testing.assert_allclose(base[:, :40], pert[:, :40], rtol=1e-6, atol=1e-6)
+
+
+def test_prefill_rejects_unaligned():
+    q = jnp.zeros((1, 100, 16))
+    with pytest.raises(AssertionError):
+        mha_prefill(q, q, q, jnp.array(10))
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@given(h=st.integers(1, 6),
+       t_blocks=st.integers(1, 4),
+       dh=st.sampled_from([16, 32, 64]),
+       pos_frac=st.floats(0.0, 1.0),
+       seed=st.integers(0, 2**16))
+def test_decode_matches_ref(h, t_blocks, dh, pos_frac, seed):
+    t = 64 * t_blocks
+    pos = min(t - 1, int(t * pos_frac))
+    q = _rand(seed, (h, dh))
+    k = _rand(seed + 1, (h, t, dh))
+    v = _rand(seed + 2, (h, t, dh))
+    p = jnp.array(pos, jnp.int32)
+    got = mha_decode(q, k, v, p)
+    exp = ref.mha_decode_ref(q, k, v, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_ignores_future_cache_slots():
+    h, t, dh = 2, 128, 32
+    q = _rand(0, (h, dh))
+    k = _rand(1, (h, t, dh))
+    v = _rand(2, (h, t, dh))
+    pos = jnp.array(17, jnp.int32)
+    base = np.asarray(mha_decode(q, k, v, pos))
+    k2 = k.at[:, 18:].set(123.0)
+    v2 = v.at[:, 18:].set(-123.0)
+    pert = np.asarray(mha_decode(q, k2, v2, pos))
+    np.testing.assert_allclose(base, pert, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_pos0_attends_only_slot0():
+    h, t, dh = 1, 64, 8
+    q = _rand(3, (h, dh))
+    k = _rand(4, (h, t, dh))
+    v = _rand(5, (h, t, dh))
+    got = np.asarray(mha_decode(q, k, v, jnp.array(0, jnp.int32)))
+    np.testing.assert_allclose(got, np.asarray(v[:, 0, :]), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dense scoring
+# ---------------------------------------------------------------------------
+
+@given(b=st.sampled_from([1, 4, 16]),
+       n_tiles=st.integers(1, 4),
+       dr=st.sampled_from([16, 64, 128]),
+       seed=st.integers(0, 2**16))
+def test_score_matches_ref(b, n_tiles, dr, seed):
+    n = 512 * n_tiles
+    q = _rand(seed, (b, dr))
+    c = _rand(seed + 1, (n, dr))
+    got = score_batch(q, c)
+    exp = ref.score_ref(q, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_score_tile_invariance():
+    q = _rand(0, (8, 64))
+    c = _rand(1, (2048, 64))
+    a = np.asarray(score_batch(q, c, tile_n=512))
+    b = np.asarray(score_batch(q, c, tile_n=256))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_score_rejects_dim_mismatch():
+    with pytest.raises(AssertionError):
+        score_batch(jnp.zeros((4, 32)), jnp.zeros((512, 64)))

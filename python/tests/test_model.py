@@ -1,0 +1,172 @@
+"""L2 model correctness: prefill/decode consistency + oracle cross-check.
+
+Uses a tiny ad-hoc config so the full forward stays fast; the same code paths
+are what aot.py lowers for the real configs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import ModelConfig, RETRIEVAL_DIM
+from compile.kernels import ref
+
+TINY = ModelConfig("tiny", n_layers=2, d_model=64, n_heads=2, d_ff=128,
+                   vocab=128, max_ctx=64, prefill_len=64)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return [w for _, w in M.init_weights(M.lm_weight_specs(TINY), seed=7)]
+
+
+def _pad_tokens(tokens, n):
+    out = np.zeros(n, np.int32)
+    out[:len(tokens)] = tokens
+    return jnp.asarray(out)
+
+
+def _oracle_forward(weights, tokens_valid):
+    """Full-precision forward using only ref.py attention (no Pallas)."""
+    w = {name: a for (name, _), a in zip(M.lm_weight_specs(TINY), weights)}
+    t = len(tokens_valid)
+    x = w["tok_emb"][jnp.asarray(tokens_valid)] + w["pos_emb"][:t]
+    for i in range(TINY.n_layers):
+        p = f"layer{i}."
+        a = M._layer_norm(x, w[p + "ln1_w"], w[p + "ln1_b"])
+        q = M._split_heads(a @ w[p + "wq"], TINY.n_heads)
+        k = M._split_heads(a @ w[p + "wk"], TINY.n_heads)
+        v = M._split_heads(a @ w[p + "wv"], TINY.n_heads)
+        attn = ref.mha_prefill_ref(q, k, v, jnp.array(t))
+        x = x + M._merge_heads(attn) @ w[p + "wo"]
+        m = M._layer_norm(x, w[p + "ln2_w"], w[p + "ln2_b"])
+        x = x + (jax.nn.gelu(m @ w[p + "w1"] + w[p + "b1"])) @ w[p + "w2"] \
+            + w[p + "b2"]
+    x = M._layer_norm(x, w["lnf_w"], w["lnf_b"])
+    return x[-1] @ w["tok_emb"].T
+
+
+def test_prefill_matches_oracle(weights):
+    tokens = [5, 9, 100, 3, 42, 17, 64, 2, 2, 33, 71]
+    kv, logits, qproj = M.lm_prefill(
+        TINY, *weights, _pad_tokens(tokens, TINY.prefill_len),
+        jnp.array(len(tokens), jnp.int32))
+    exp = _oracle_forward(weights, tokens)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(exp),
+                               rtol=5e-4, atol=5e-4)
+    assert kv.shape == (2, 2, 2, 64, 32)
+    np.testing.assert_allclose(float(jnp.linalg.norm(qproj)), 1.0, rtol=1e-4)
+
+
+def test_prefill_padding_invariance(weights):
+    """Garbage in the padded tail must not change the logits."""
+    tokens = [1, 2, 3, 4, 5]
+    base = _pad_tokens(tokens, TINY.prefill_len)
+    noisy = np.asarray(base).copy()
+    noisy[len(tokens):] = 77
+    vl = jnp.array(len(tokens), jnp.int32)
+    _, l1, q1 = M.lm_prefill(TINY, *weights, base, vl)
+    _, l2, q2 = M.lm_prefill(TINY, *weights, jnp.asarray(noisy), vl)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_decode_consistent_with_prefill(weights):
+    """prefill(n) followed by decode(tokens[n..m]) == prefill(m)."""
+    tokens = [5, 9, 100, 3, 42, 17, 64, 2, 2, 33, 71, 8, 90, 11]
+    n = 10
+    vl = jnp.array(n, jnp.int32)
+    kv, _, _ = M.lm_prefill(TINY, *weights, _pad_tokens(tokens, TINY.prefill_len), vl)
+    logits = None
+    for pos in range(n, len(tokens)):
+        logits, kv, qproj = M.lm_decode(
+            TINY, *weights, jnp.array(tokens[pos], jnp.int32),
+            jnp.array(pos, jnp.int32), kv)
+    _, exp_logits, exp_qproj = M.lm_prefill(
+        TINY, *weights, _pad_tokens(tokens, TINY.prefill_len),
+        jnp.array(len(tokens), jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(exp_logits),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(qproj), np.asarray(exp_qproj),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_chunk_matches_stepwise_greedy(weights):
+    """decode_chunk's in-graph argmax must equal stepwise decode+argmax."""
+    tokens = [5, 9, 100, 3, 42, 17, 64]
+    n = len(tokens)
+    vl = jnp.array(n, jnp.int32)
+    kv0, logits0, _ = M.lm_prefill(
+        TINY, *weights, _pad_tokens(tokens, TINY.prefill_len), vl)
+    first = jnp.argmax(logits0).astype(jnp.int32)
+
+    # stepwise reference
+    kv, tok = kv0, first
+    step_tokens = []
+    step_logits = None
+    for j in range(4):
+        step_logits, kv, _ = M.lm_decode(
+            TINY, *weights, tok, jnp.array(n + j, jnp.int32), kv)
+        step_tokens.append(int(tok))
+        tok = jnp.argmax(step_logits).astype(jnp.int32)
+
+    out_toks, out_logits, out_kv, qproj = M.lm_decode_chunk(
+        TINY, 4, *weights, first, jnp.array(n, jnp.int32), kv0)
+    assert [int(t) for t in out_toks] == step_tokens
+    np.testing.assert_allclose(np.asarray(out_logits),
+                               np.asarray(step_logits), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out_kv), np.asarray(kv),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(jnp.linalg.norm(qproj)), 1.0, rtol=1e-4)
+
+
+def test_hidden_positions_match_prefill_qproj(weights):
+    """hidden[i] == prefill qproj when the context is tokens[..=i]."""
+    tokens = [4, 8, 15, 16, 23, 42]
+    vl = jnp.array(len(tokens), jnp.int32)
+    (hiddens,) = M.lm_hidden(TINY, *weights,
+                             _pad_tokens(tokens, TINY.prefill_len), vl)
+    assert hiddens.shape == (TINY.prefill_len, RETRIEVAL_DIM)
+    for i in (2, 5):
+        _, _, qproj = M.lm_prefill(
+            TINY, *weights, _pad_tokens(tokens[:i + 1], TINY.prefill_len),
+            jnp.array(i + 1, jnp.int32))
+        np.testing.assert_allclose(np.asarray(hiddens[i]), np.asarray(qproj),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_encoder_normalized_and_length_sensitive():
+    specs = M.encoder_weight_specs(128)
+    weights = [w for _, w in M.init_weights(specs, seed=3)]
+    toks = jnp.asarray(np.arange(32, dtype=np.int32) % 128)
+    (v1,) = M.encode_query(128, *weights, toks, jnp.array(10, jnp.int32))
+    (v2,) = M.encode_query(128, *weights, toks, jnp.array(20, jnp.int32))
+    np.testing.assert_allclose(float(jnp.linalg.norm(v1)), 1.0, rtol=1e-5)
+    assert not np.allclose(np.asarray(v1), np.asarray(v2))
+
+
+def test_encode_batch_matches_single():
+    specs = M.encoder_weight_specs(128)
+    weights = [w for _, w in M.init_weights(specs, seed=3)]
+    rng = np.random.RandomState(0)
+    toks = rng.randint(0, 128, size=(64, 32)).astype(np.int32)
+    lens = rng.randint(1, 33, size=(64,)).astype(np.int32)
+    (batch,) = M.encode_batch(128, *weights, jnp.asarray(toks),
+                              jnp.asarray(lens))
+    for i in (0, 17, 63):
+        (single,) = M.encode_query(128, *weights, jnp.asarray(toks[i]),
+                                   jnp.array(lens[i], jnp.int32))
+        np.testing.assert_allclose(np.asarray(batch[i]), np.asarray(single),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_weight_specs_deterministic():
+    a = M.init_weights(M.lm_weight_specs(TINY), seed=11)
+    b = M.init_weights(M.lm_weight_specs(TINY), seed=11)
+    for (na, wa), (nb, wb) in zip(a, b):
+        assert na == nb
+        np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))

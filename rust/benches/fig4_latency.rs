@@ -1,0 +1,9 @@
+//! cargo-bench driver for paper artifact "fig4" (see DESIGN.md §5).
+//! Small default scale; env RALMSPEC_BENCH_* overrides. The full-scale
+//! reproduction is `ralmspec bench fig4`.
+fn main() {
+    if let Err(e) = ralmspec::eval::drivers::bench_entry("fig4") {
+        eprintln!("bench fig4 failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,80 @@
+//! Micro-benchmarks of the L3 hot paths (in-tree harness — no criterion on
+//! this image): dense scan, HNSW walk, BM25 postings, cache lookup, top-k.
+//! Run via `cargo bench micro` or directly.
+
+use ralmspec::cache::LocalCache;
+use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+use ralmspec::datagen::{Encoder, HashEncoder};
+use ralmspec::eval::TestBed;
+use ralmspec::retriever::{Retriever, SpecQuery};
+use ralmspec::util::{topk_from_scores, Rng};
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..iters.div_ceil(10) {
+        f();
+    }
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t.elapsed().as_secs_f64() / iters as f64;
+    let (v, unit) = if per >= 1e-3 {
+        (per * 1e3, "ms")
+    } else {
+        (per * 1e6, "us")
+    };
+    println!("{name:<40} {v:>10.2} {unit}/iter  ({iters} iters)");
+}
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.corpus = CorpusConfig { n_docs: 60_000, n_topics: 256,
+                                ..CorpusConfig::default() };
+    let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, 1);
+    eprintln!("building testbed (60k docs)...");
+    let bed = TestBed::build(&cfg, &enc);
+    let mut rng = Rng::new(2);
+    let qd = SpecQuery::dense_only(enc.encode(&bed.corpus.doc(7).tokens));
+    let qs = SpecQuery::sparse_only(bed.corpus.doc(7).tokens[..12].to_vec());
+
+    let edr = bed.retriever(RetrieverKind::Edr);
+    bench("EDR flat scan top-20 (60k x 64)", 50, || {
+        let _ = edr.retrieve_topk(&qd, 20);
+    });
+    let batch: Vec<SpecQuery> = (0..8).map(|_| qd.clone()).collect();
+    bench("EDR batched scan top-20 (batch 8)", 50, || {
+        let _ = edr.retrieve_batch(&batch, 20);
+    });
+
+    let adr = bed.retriever(RetrieverKind::Adr);
+    bench("ADR HNSW top-20", 2000, || {
+        let _ = adr.retrieve_topk(&qd, 20);
+    });
+
+    let sr = bed.retriever(RetrieverKind::Sr);
+    bench("SR BM25 top-20", 500, || {
+        let _ = sr.retrieve_topk(&qs, 20);
+    });
+    let sbatch: Vec<SpecQuery> = (0..8).map(|_| qs.clone()).collect();
+    bench("SR BM25 batched (batch 8)", 200, || {
+        let _ = sr.retrieve_batch(&sbatch, 20);
+    });
+
+    let mut cache = LocalCache::new(4096);
+    let ids: Vec<u32> = (0..256).map(|_| rng.gen_range(60_000) as u32).collect();
+    cache.insert_ids(&ids);
+    bench("cache lookup (256 entries, dense)", 5000, || {
+        let _ = cache.retrieve(&qd, edr.as_ref());
+    });
+
+    let scores: Vec<f32> = (0..60_000).map(|_| rng.next_f32()).collect();
+    bench("top-20 select over 60k scores", 500, || {
+        let _ = topk_from_scores(&scores, 20);
+    });
+
+    bench("HashEncoder encode (32 tokens)", 5000, || {
+        let _ = enc.encode(&bed.corpus.doc(9).tokens);
+    });
+}

@@ -1,0 +1,9 @@
+//! cargo-bench driver for paper artifact "table1" (see DESIGN.md §5).
+//! Small default scale; env RALMSPEC_BENCH_* overrides. The full-scale
+//! reproduction is `ralmspec bench table1`.
+fn main() {
+    if let Err(e) = ralmspec::eval::drivers::bench_entry("table1") {
+        eprintln!("bench table1 failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,9 @@
+//! cargo-bench driver for paper artifact "table3" (see DESIGN.md §5).
+//! Small default scale; env RALMSPEC_BENCH_* overrides. The full-scale
+//! reproduction is `ralmspec bench table3`.
+fn main() {
+    if let Err(e) = ralmspec::eval::drivers::bench_entry("table3") {
+        eprintln!("bench table3 failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,9 @@
+//! cargo-bench driver for paper artifact "table4" (see DESIGN.md §5).
+//! Small default scale; env RALMSPEC_BENCH_* overrides. The full-scale
+//! reproduction is `ralmspec bench table4`.
+fn main() {
+    if let Err(e) = ralmspec::eval::drivers::bench_entry("table4") {
+        eprintln!("bench table4 failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,91 @@
+//! RaLMSeq — the naive iterative RaLM serving baseline (Ram et al. 2023,
+//! as implemented in the paper §5.1): retrieve from the knowledge base with
+//! the latest context every `gen_stride` (=4) generated tokens; the latest
+//! retrieved chunk replaces the previous document prefix.
+//!
+//! Structured identically to the speculative pipeline's *verified* path so
+//! output equivalence is provable step by step: same query construction,
+//! same top-1 selection, same document conditioning, same greedy decoding.
+
+use crate::datagen::Corpus;
+use crate::lm::{GenState, LanguageModel};
+use crate::metrics::{timed, EventKind, ReqMetrics, Stopwatch};
+use crate::retriever::Retriever;
+use crate::spec::query::QueryBuilder;
+
+#[derive(Debug, Clone)]
+pub struct BaselineOptions {
+    pub gen_stride: usize,
+    pub max_new: usize,
+    pub max_doc_tokens: usize,
+}
+
+impl Default for BaselineOptions {
+    fn default() -> Self {
+        let c = crate::config::SpecConfig::default();
+        Self {
+            gen_stride: c.gen_stride,
+            max_new: c.max_new_tokens,
+            max_doc_tokens: c.max_doc_tokens,
+        }
+    }
+}
+
+pub struct RalmSeq<'a, L: LanguageModel> {
+    pub lm: &'a L,
+    pub kb: &'a dyn Retriever,
+    pub corpus: &'a Corpus,
+    pub queries: QueryBuilder<'a>,
+    pub opts: BaselineOptions,
+}
+
+impl<'a, L: LanguageModel> RalmSeq<'a, L> {
+    pub fn run(&self, question: &[u32]) -> anyhow::Result<ReqMetrics> {
+        let total = Stopwatch::start();
+        let mut m = ReqMetrics::default();
+
+        // Initial retrieval from the question alone.
+        let q0 = timed(&mut m.retrieve,
+                       || self.queries.build_from_window(question));
+        let top0 = timed(&mut m.retrieve, || self.kb.retrieve(&q0));
+        m.kb_calls += 1;
+        m.kb_queries += 1;
+        let doc0 = top0.ok_or_else(|| anyhow::anyhow!("empty knowledge base"))?;
+
+        let prefill_t = Stopwatch::start();
+        let mut state = timed(&mut m.generate, || {
+            GenState::new(self.lm, Some(doc0.id),
+                          &self.corpus.doc(doc0.id).tokens, question,
+                          self.opts.max_doc_tokens, self.opts.max_new)
+        })?;
+        m.prefills += 1;
+        m.event(EventKind::Prefill, &total, prefill_t.elapsed());
+
+        while !state.done {
+            // Retrieve with the latest context, swap the document prefix...
+            let r_t = Stopwatch::start();
+            let q = timed(&mut m.retrieve, || self.queries.build(&state));
+            let d = timed(&mut m.retrieve, || self.kb.retrieve(&q))
+                .ok_or_else(|| anyhow::anyhow!("empty knowledge base"))?;
+            m.kb_calls += 1;
+            m.kb_queries += 1;
+            m.event(EventKind::Verify, &total, r_t.elapsed());
+            let g_t = Stopwatch::start();
+            timed(&mut m.generate, || -> anyhow::Result<()> {
+                if state.set_doc(self.lm, d.id,
+                                 &self.corpus.doc(d.id).tokens)? {
+                    m.prefills += 1;
+                }
+                // ...then generate the next interval of tokens.
+                state.generate(self.lm, self.opts.gen_stride)?;
+                Ok(())
+            })?;
+            m.event(EventKind::SpecStep, &total, g_t.elapsed());
+        }
+
+        m.tokens_out = state.generated.clone();
+        m.decode_tokens = state.generated.len() as u32;
+        m.total = total.elapsed();
+        Ok(m)
+    }
+}

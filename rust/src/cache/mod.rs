@@ -1,0 +1,189 @@
+//! Per-request local retrieval cache — the speculation substrate (§3).
+//!
+//! The cache is a *retrieval* cache, not an exact-match cache: a lookup
+//! ranks every cached document under the **same scoring metric as the
+//! knowledge base** (`Retriever::score_doc`) and returns the best. This
+//! yields the paper's rank-preservation property: if the KB's top-1 for a
+//! query is present in the cache, the cache lookup returns exactly it —
+//! tested here and by proptest in rust/tests.
+//!
+//! Verification steps populate the cache with either the top-1 document per
+//! query or the top-k ("prefetching", Fig 2), controlled by the configured
+//! prefetch size.
+
+use crate::retriever::{DocId, Retriever, SpecQuery};
+use crate::util::Scored;
+use std::collections::HashMap;
+
+/// Default capacity: generous relative to requests' working sets; eviction
+/// is FIFO on first-insertion order (entries are re-scored on every lookup,
+/// so recency bookkeeping buys nothing).
+pub const DEFAULT_CACHE_CAP: usize = 4096;
+
+#[derive(Debug, Clone)]
+pub struct LocalCache {
+    /// Insertion ring (for eviction).
+    order: std::collections::VecDeque<DocId>,
+    /// Membership + pin count (a doc re-inserted while present is not
+    /// duplicated).
+    present: HashMap<DocId, ()>,
+    cap: usize,
+    /// Statistics for γ estimation and reports.
+    pub lookups: u64,
+    pub hits_nonempty: u64,
+}
+
+impl Default for LocalCache {
+    fn default() -> Self {
+        Self::new(DEFAULT_CACHE_CAP)
+    }
+}
+
+impl LocalCache {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            order: std::collections::VecDeque::new(),
+            present: HashMap::new(),
+            cap,
+            lookups: 0,
+            hits_nonempty: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn contains(&self, doc: DocId) -> bool {
+        self.present.contains_key(&doc)
+    }
+
+    /// Speculative retrieval: rank all cached docs with the KB's own metric.
+    /// Returns None when empty (caller falls back to the current document).
+    pub fn retrieve(&mut self, q: &SpecQuery, kb: &dyn Retriever)
+                    -> Option<Scored> {
+        self.lookups += 1;
+        if self.order.is_empty() {
+            return None;
+        }
+        self.hits_nonempty += 1;
+        let mut best: Option<Scored> = None;
+        for &doc in &self.order {
+            let s = Scored { id: doc, score: kb.score_doc(q, doc) };
+            if best.map_or(true, |b| s.better_than(&b)) {
+                best = Some(s);
+            }
+        }
+        best
+    }
+
+    /// Insert verification results (top-1 or top-k per the prefetch size).
+    pub fn insert(&mut self, entries: &[Scored]) {
+        for e in entries {
+            if self.present.contains_key(&e.id) {
+                continue;
+            }
+            if self.order.len() == self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.present.remove(&old);
+                }
+            }
+            self.order.push_back(e.id);
+            self.present.insert(e.id, ());
+        }
+    }
+
+    pub fn insert_ids(&mut self, ids: &[DocId]) {
+        let scored: Vec<Scored> =
+            ids.iter().map(|&id| Scored { id, score: 0.0 }).collect();
+        self.insert(&scored);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retriever::dense::{DenseExact, EmbeddingMatrix};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn setup(n: usize, d: usize) -> (Arc<EmbeddingMatrix>, DenseExact) {
+        let mut rng = Rng::new(1);
+        let mut data = Vec::new();
+        for _ in 0..n {
+            data.extend(rng.unit_vector(d));
+        }
+        let emb = Arc::new(EmbeddingMatrix::new(d, data));
+        (emb.clone(), DenseExact::new(emb))
+    }
+
+    #[test]
+    fn empty_cache_misses() {
+        let (_, kb) = setup(50, 8);
+        let mut cache = LocalCache::new(16);
+        let q = SpecQuery::dense_only(vec![1.0; 8]);
+        assert!(cache.retrieve(&q, &kb).is_none());
+        assert_eq!(cache.lookups, 1);
+    }
+
+    #[test]
+    fn rank_preservation_top1() {
+        // If the KB top-1 is cached, the cache must return exactly it.
+        let (_, kb) = setup(200, 16);
+        let mut rng = Rng::new(2);
+        use crate::retriever::Retriever;
+        for trial in 0..20 {
+            let q = SpecQuery::dense_only(rng.unit_vector(16));
+            let truth = kb.retrieve_topk(&q, 5);
+            let mut cache = LocalCache::new(64);
+            // cache holds top-1 plus distractors
+            cache.insert(&truth);
+            cache.insert_ids(&[7, 19, 77, 131]);
+            let got = cache.retrieve(&q, &kb).unwrap();
+            assert_eq!(got.id, truth[0].id, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn eviction_is_fifo_and_capped() {
+        let (_, kb) = setup(50, 8);
+        let mut cache = LocalCache::new(3);
+        cache.insert_ids(&[1, 2, 3]);
+        assert!(cache.contains(1));
+        cache.insert_ids(&[4]);
+        assert!(!cache.contains(1), "oldest evicted");
+        assert!(cache.contains(4));
+        assert_eq!(cache.len(), 3);
+        let _ = &kb;
+    }
+
+    #[test]
+    fn reinsert_does_not_duplicate() {
+        let (_, kb) = setup(50, 8);
+        let mut cache = LocalCache::new(10);
+        cache.insert_ids(&[5, 5, 5, 6]);
+        assert_eq!(cache.len(), 2);
+        let _ = &kb;
+    }
+
+    #[test]
+    fn retrieve_is_deterministic_on_ties() {
+        let emb = Arc::new(EmbeddingMatrix::new(
+            4,
+            vec![
+                1.0, 0.0, 0.0, 0.0, // doc 0
+                1.0, 0.0, 0.0, 0.0, // doc 1 (identical)
+            ],
+        ));
+        let kb = DenseExact::new(emb);
+        let mut cache = LocalCache::new(8);
+        cache.insert_ids(&[1, 0]);
+        let q = SpecQuery::dense_only(vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(cache.retrieve(&q, &kb).unwrap().id, 0, "lower id wins ties");
+    }
+}

@@ -1,0 +1,135 @@
+//! Command-line interface (hand-rolled; the offline image has no clap).
+//!
+//! Subcommands:
+//!   show-config                      print the resolved configuration
+//!   bench <id|all> [--fast]          regenerate a paper table/figure
+//!   serve [--model M] [...]          batch-serve a QA workload via the router
+//!   trace [--retriever R]            emit a Fig-1(c)-style timeline trace
+//!
+//! Global flags: --config <file.json>, plus per-command flags parsed below.
+
+use crate::config::Config;
+use std::collections::HashMap;
+
+/// Parsed flags: `--key value` pairs plus positional args.
+#[derive(Debug, Default)]
+pub struct Flags {
+    pub positional: Vec<String>,
+    pub named: HashMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+pub fn parse_flags(args: &[String]) -> Flags {
+    let mut f = Flags::default();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            // `--key value` unless the next token is another flag / absent.
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                f.named.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                f.switches.push(key.to_string());
+                i += 1;
+            }
+        } else {
+            f.positional.push(a.clone());
+            i += 1;
+        }
+    }
+    f
+}
+
+impl Flags {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("--{key}: {e}"))
+            })
+            .transpose()
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+const USAGE: &str = "\
+ralmspec — speculative retrieval for iterative RaLM serving
+
+USAGE:
+    ralmspec [--config cfg.json] <COMMAND> [flags]
+
+COMMANDS:
+    show-config              print the resolved configuration (JSON)
+    bench <id|all> [--fast]  regenerate a paper table/figure into reports/
+                             ids: fig4 table1 table2 fig5 table3 table4
+                                  table5 fig6
+                             --fast shrinks the grid for smoke runs
+                             --mock uses the hash-chain LM (no artifacts)
+    serve [--model gpt2m] [--requests N] [--dataset wikiqa]
+          [--retriever edr|adr|sr] [--method baseline|spec|psa]
+                             batch-serve a QA workload through the router
+    trace [--retriever edr] [--mock]
+                             emit a Fig-1(c)-style per-request timeline
+    help                     this text
+";
+
+pub fn run(args: &[String]) -> anyhow::Result<()> {
+    let flags = parse_flags(args);
+    let cfg = Config::load_or_default(
+        flags.get("config").map(std::path::Path::new))?;
+    let cmd = flags.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "show-config" => {
+            println!("{}", cfg.to_json().pretty());
+            Ok(())
+        }
+        "bench" => crate::eval::drivers::run_bench(&cfg, &flags),
+        "serve" => crate::eval::drivers::run_serve(&cfg, &flags),
+        "trace" => crate::eval::drivers::run_trace(&cfg, &flags),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positional_named_switches() {
+        let f = parse_flags(&s(&["bench", "fig4", "--requests", "5",
+                                 "--fast"]));
+        assert_eq!(f.positional, vec!["bench", "fig4"]);
+        assert_eq!(f.get("requests"), Some("5"));
+        assert!(f.has("fast"));
+        assert_eq!(f.get_usize("requests").unwrap(), Some(5));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_switch() {
+        let f = parse_flags(&s(&["--mock", "--requests", "3"]));
+        assert!(f.has("mock"));
+        assert_eq!(f.get("requests"), Some("3"));
+    }
+
+    #[test]
+    fn bad_usize_errors() {
+        let f = parse_flags(&s(&["--requests", "abc"]));
+        assert!(f.get_usize("requests").is_err());
+    }
+}

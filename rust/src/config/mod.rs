@@ -1,0 +1,521 @@
+//! Configuration system: one tree, loadable from JSON (parsed by the
+//! in-tree `util::json` — the offline image has no serde), with defaults
+//! matching the paper's settings (§5.1 "Implementation Details") scaled to
+//! this testbed where noted in DESIGN.md.
+//!
+//! Every layer reads from here — the CLI, serving router, pipelines, and
+//! the eval harness — so an experiment is fully described by (config, seed).
+
+use crate::util::json::{self, Value};
+use std::path::{Path, PathBuf};
+
+/// Paper defaults (§5.1): retrieval every 4 generated tokens, constant
+/// stride 3 when OS³ is off, window w=5, γ_max=0.6, prefetch 20.
+pub const GEN_STRIDE: usize = 4;
+pub const DEFAULT_STRIDE: usize = 3;
+pub const OS3_WINDOW: usize = 5;
+pub const GAMMA_MAX: f64 = 0.6;
+pub const PREFETCH: usize = 20;
+pub const PREFETCH_LARGE: usize = 256;
+
+macro_rules! merge_fields {
+    ($self:ident, $v:ident, { $($key:literal => $field:expr => $conv:ident),* $(,)? }) => {
+        $(
+            if let Some(x) = $v.get($key) {
+                if let Some(x) = conv::$conv(x) {
+                    $field = x;
+                }
+            }
+        )*
+    };
+}
+
+mod conv {
+    use super::Value;
+
+    pub fn usize(v: &Value) -> Option<usize> {
+        v.as_usize()
+    }
+
+    pub fn u64(v: &Value) -> Option<u64> {
+        v.as_u64()
+    }
+
+    pub fn f64(v: &Value) -> Option<f64> {
+        v.as_f64()
+    }
+
+    pub fn f32(v: &Value) -> Option<f32> {
+        v.as_f64().map(|x| x as f32)
+    }
+
+    pub fn path(v: &Value) -> Option<std::path::PathBuf> {
+        v.as_str().map(std::path::PathBuf::from)
+    }
+
+    pub fn len_pair(v: &Value) -> Option<(usize, usize)> {
+        let a = v.as_arr()?;
+        if a.len() != 2 {
+            return None;
+        }
+        Some((a[0].as_usize()?, a[1].as_usize()?))
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub paths: Paths,
+    pub corpus: CorpusConfig,
+    pub retriever: RetrieverConfig,
+    pub spec: SpecConfig,
+    pub knnlm: KnnLmConfig,
+    pub eval: EvalConfig,
+    pub serving: ServingConfig,
+}
+
+impl Config {
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let v = json::parse(&text)?;
+        let mut cfg = Config::default();
+        cfg.merge(&v);
+        Ok(cfg)
+    }
+
+    /// Load `path` if given, else defaults.
+    pub fn load_or_default(path: Option<&Path>) -> anyhow::Result<Self> {
+        match path {
+            Some(p) => Self::load(p),
+            None => Ok(Self::default()),
+        }
+    }
+
+    /// Overlay a (possibly partial) JSON tree onto the current values.
+    pub fn merge(&mut self, v: &Value) {
+        if let Some(x) = v.get("paths") {
+            self.paths.merge(x);
+        }
+        if let Some(x) = v.get("corpus") {
+            self.corpus.merge(x);
+        }
+        if let Some(x) = v.get("retriever") {
+            self.retriever.merge(x);
+        }
+        if let Some(x) = v.get("spec") {
+            self.spec.merge(x);
+        }
+        if let Some(x) = v.get("knnlm") {
+            self.knnlm.merge(x);
+        }
+        if let Some(x) = v.get("eval") {
+            self.eval.merge(x);
+        }
+        if let Some(x) = v.get("serving") {
+            self.serving.merge(x);
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("paths", self.paths.to_json()),
+            ("corpus", self.corpus.to_json()),
+            ("retriever", self.retriever.to_json()),
+            ("spec", self.spec.to_json()),
+            ("knnlm", self.knnlm.to_json()),
+            ("eval", self.eval.to_json()),
+            ("serving", self.serving.to_json()),
+        ])
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Paths {
+    pub artifacts: PathBuf,
+    pub data: PathBuf,
+    pub reports: PathBuf,
+}
+
+impl Default for Paths {
+    fn default() -> Self {
+        Self {
+            artifacts: PathBuf::from("artifacts"),
+            data: PathBuf::from("data"),
+            reports: PathBuf::from("reports"),
+        }
+    }
+}
+
+impl Paths {
+    fn merge(&mut self, v: &Value) {
+        merge_fields!(self, v, {
+            "artifacts" => self.artifacts => path,
+            "data" => self.data => path,
+            "reports" => self.reports => path,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("artifacts", Value::str(self.artifacts.display().to_string())),
+            ("data", Value::str(self.data.display().to_string())),
+            ("reports", Value::str(self.reports.display().to_string())),
+        ])
+    }
+}
+
+/// Synthetic corpus (Wikipedia stand-in) — see DESIGN.md §2.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub n_docs: usize,
+    pub n_topics: usize,
+    pub doc_len: (usize, usize),
+    pub token_skew: f64,
+    pub vocab: usize,
+    pub reserved: usize,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        Self {
+            n_docs: 160_000,
+            n_topics: 512,
+            doc_len: (48, 256),
+            token_skew: 1.05,
+            vocab: 4096,
+            reserved: 4,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl CorpusConfig {
+    fn merge(&mut self, v: &Value) {
+        merge_fields!(self, v, {
+            "n_docs" => self.n_docs => usize,
+            "n_topics" => self.n_topics => usize,
+            "doc_len" => self.doc_len => len_pair,
+            "token_skew" => self.token_skew => f64,
+            "vocab" => self.vocab => usize,
+            "reserved" => self.reserved => usize,
+            "seed" => self.seed => u64,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("n_docs", Value::num(self.n_docs as f64)),
+            ("n_topics", Value::num(self.n_topics as f64)),
+            ("doc_len", Value::Arr(vec![Value::num(self.doc_len.0 as f64),
+                                        Value::num(self.doc_len.1 as f64)])),
+            ("token_skew", Value::num(self.token_skew)),
+            ("vocab", Value::num(self.vocab as f64)),
+            ("reserved", Value::num(self.reserved as f64)),
+            ("seed", Value::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RetrieverConfig {
+    pub hnsw_m: usize,
+    pub hnsw_ef_construction: usize,
+    pub hnsw_ef_search: usize,
+    pub bm25_k1: f32,
+    pub bm25_b: f32,
+    pub sparse_query_len: usize,
+    pub dense_query_len: usize,
+}
+
+impl Default for RetrieverConfig {
+    fn default() -> Self {
+        Self {
+            hnsw_m: 16,
+            hnsw_ef_construction: 100,
+            hnsw_ef_search: 64,
+            bm25_k1: 0.9,
+            bm25_b: 0.4,
+            sparse_query_len: 32,
+            dense_query_len: 32,
+        }
+    }
+}
+
+impl RetrieverConfig {
+    fn merge(&mut self, v: &Value) {
+        merge_fields!(self, v, {
+            "hnsw_m" => self.hnsw_m => usize,
+            "hnsw_ef_construction" => self.hnsw_ef_construction => usize,
+            "hnsw_ef_search" => self.hnsw_ef_search => usize,
+            "bm25_k1" => self.bm25_k1 => f32,
+            "bm25_b" => self.bm25_b => f32,
+            "sparse_query_len" => self.sparse_query_len => usize,
+            "dense_query_len" => self.dense_query_len => usize,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("hnsw_m", Value::num(self.hnsw_m as f64)),
+            ("hnsw_ef_construction",
+             Value::num(self.hnsw_ef_construction as f64)),
+            ("hnsw_ef_search", Value::num(self.hnsw_ef_search as f64)),
+            ("bm25_k1", Value::num(self.bm25_k1 as f64)),
+            ("bm25_b", Value::num(self.bm25_b as f64)),
+            ("sparse_query_len", Value::num(self.sparse_query_len as f64)),
+            ("dense_query_len", Value::num(self.dense_query_len as f64)),
+        ])
+    }
+}
+
+/// RaLMSpec pipeline parameters (paper §5.1).
+#[derive(Debug, Clone)]
+pub struct SpecConfig {
+    pub gen_stride: usize,
+    pub stride: usize,
+    pub max_stride: usize,
+    pub prefetch: usize,
+    pub os3_window: usize,
+    pub gamma_max: f64,
+    pub max_new_tokens: usize,
+    pub max_doc_tokens: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        Self {
+            gen_stride: GEN_STRIDE,
+            stride: DEFAULT_STRIDE,
+            max_stride: 16,
+            prefetch: PREFETCH,
+            os3_window: OS3_WINDOW,
+            gamma_max: GAMMA_MAX,
+            max_new_tokens: 48,
+            max_doc_tokens: 192,
+        }
+    }
+}
+
+impl SpecConfig {
+    fn merge(&mut self, v: &Value) {
+        merge_fields!(self, v, {
+            "gen_stride" => self.gen_stride => usize,
+            "stride" => self.stride => usize,
+            "max_stride" => self.max_stride => usize,
+            "prefetch" => self.prefetch => usize,
+            "os3_window" => self.os3_window => usize,
+            "gamma_max" => self.gamma_max => f64,
+            "max_new_tokens" => self.max_new_tokens => usize,
+            "max_doc_tokens" => self.max_doc_tokens => usize,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("gen_stride", Value::num(self.gen_stride as f64)),
+            ("stride", Value::num(self.stride as f64)),
+            ("max_stride", Value::num(self.max_stride as f64)),
+            ("prefetch", Value::num(self.prefetch as f64)),
+            ("os3_window", Value::num(self.os3_window as f64)),
+            ("gamma_max", Value::num(self.gamma_max)),
+            ("max_new_tokens", Value::num(self.max_new_tokens as f64)),
+            ("max_doc_tokens", Value::num(self.max_doc_tokens as f64)),
+        ])
+    }
+}
+
+/// KNN-LM serving (§5.3).
+#[derive(Debug, Clone)]
+pub struct KnnLmConfig {
+    pub n_entries: usize,
+    pub k: usize,
+    pub lambda: f64,
+    pub tau: f64,
+    pub next_n: usize,
+    pub cache_cap: usize,
+    pub seed: u64,
+}
+
+impl Default for KnnLmConfig {
+    fn default() -> Self {
+        Self {
+            n_entries: 100_000,
+            k: 16,
+            lambda: 0.25,
+            tau: 0.1,
+            next_n: 10,
+            cache_cap: 4096,
+            seed: 0xDA7A,
+        }
+    }
+}
+
+impl KnnLmConfig {
+    fn merge(&mut self, v: &Value) {
+        merge_fields!(self, v, {
+            "n_entries" => self.n_entries => usize,
+            "k" => self.k => usize,
+            "lambda" => self.lambda => f64,
+            "tau" => self.tau => f64,
+            "next_n" => self.next_n => usize,
+            "cache_cap" => self.cache_cap => usize,
+            "seed" => self.seed => u64,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("n_entries", Value::num(self.n_entries as f64)),
+            ("k", Value::num(self.k as f64)),
+            ("lambda", Value::num(self.lambda)),
+            ("tau", Value::num(self.tau)),
+            ("next_n", Value::num(self.next_n as f64)),
+            ("cache_cap", Value::num(self.cache_cap as f64)),
+            ("seed", Value::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalConfig {
+    pub requests: usize,
+    pub runs: usize,
+    pub seed: u64,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self { requests: 12, runs: 3, seed: 7 }
+    }
+}
+
+impl EvalConfig {
+    fn merge(&mut self, v: &Value) {
+        merge_fields!(self, v, {
+            "requests" => self.requests => usize,
+            "runs" => self.runs => usize,
+            "seed" => self.seed => u64,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("requests", Value::num(self.requests as f64)),
+            ("runs", Value::num(self.runs as f64)),
+            ("seed", Value::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub queue_cap: usize,
+    pub workers: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self { queue_cap: 256, workers: 1 }
+    }
+}
+
+impl ServingConfig {
+    fn merge(&mut self, v: &Value) {
+        merge_fields!(self, v, {
+            "queue_cap" => self.queue_cap => usize,
+            "workers" => self.workers => usize,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("queue_cap", Value::num(self.queue_cap as f64)),
+            ("workers", Value::num(self.workers as f64)),
+        ])
+    }
+}
+
+/// The three retriever classes evaluated in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RetrieverKind {
+    /// Exact dense retriever (DPR / IndexFlatIP stand-in).
+    Edr,
+    /// Approximate dense retriever (DPR-HNSW stand-in).
+    Adr,
+    /// Sparse retriever (BM25).
+    Sr,
+}
+
+impl RetrieverKind {
+    pub fn all() -> [RetrieverKind; 3] {
+        [RetrieverKind::Edr, RetrieverKind::Adr, RetrieverKind::Sr]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RetrieverKind::Edr => "EDR",
+            RetrieverKind::Adr => "ADR",
+            RetrieverKind::Sr => "SR",
+        }
+    }
+}
+
+impl std::str::FromStr for RetrieverKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "edr" | "exact" | "flat" => Ok(RetrieverKind::Edr),
+            "adr" | "hnsw" | "approx" => Ok(RetrieverKind::Adr),
+            "sr" | "bm25" | "sparse" => Ok(RetrieverKind::Sr),
+            other => Err(anyhow::anyhow!("unknown retriever kind: {other}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_settings() {
+        let c = Config::default();
+        assert_eq!(c.spec.gen_stride, 4);
+        assert_eq!(c.spec.stride, 3);
+        assert_eq!(c.spec.os3_window, 5);
+        assert!((c.spec.gamma_max - 0.6).abs() < 1e-12);
+        assert_eq!(c.spec.prefetch, 20);
+        assert_eq!(c.knnlm.next_n, 10);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = Config::default();
+        let text = c.to_json().pretty();
+        let v = json::parse(&text).unwrap();
+        let mut back = Config::default();
+        back.corpus.n_docs = 0; // will be restored by merge
+        back.merge(&v);
+        assert_eq!(back.spec.stride, c.spec.stride);
+        assert_eq!(back.corpus.n_docs, c.corpus.n_docs);
+        assert_eq!(back.corpus.doc_len, c.corpus.doc_len);
+    }
+
+    #[test]
+    fn partial_json_fills_defaults() {
+        let v = json::parse(r#"{"spec": {"stride": 5}}"#).unwrap();
+        let mut c = Config::default();
+        c.merge(&v);
+        assert_eq!(c.spec.stride, 5);
+        assert_eq!(c.spec.gen_stride, 4); // default preserved
+        assert_eq!(c.corpus.n_docs, CorpusConfig::default().n_docs);
+    }
+
+    #[test]
+    fn retriever_kind_parsing() {
+        assert_eq!("edr".parse::<RetrieverKind>().unwrap(), RetrieverKind::Edr);
+        assert_eq!("HNSW".parse::<RetrieverKind>().unwrap(), RetrieverKind::Adr);
+        assert_eq!("bm25".parse::<RetrieverKind>().unwrap(), RetrieverKind::Sr);
+        assert!("nope".parse::<RetrieverKind>().is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! Synthetic knowledge-base corpus (Wikipedia stand-in).
+//!
+//! A latent-topic generator: each topic owns a Zipf-weighted pool of token
+//! ids; passages sample from their topic's pool plus a global common-word
+//! pool. Passages from the same topic therefore share vocabulary, which
+//! gives (a) clustered dense embeddings under *any* bag-of-words encoder and
+//! (b) realistic document-frequency skew for BM25 — the two properties the
+//! paper's temporal/spatial retrieval locality rests on (DESIGN.md §2).
+
+use crate::config::CorpusConfig;
+use crate::util::{Rng, Zipf};
+
+/// Special token ids (bottom of the vocabulary).
+pub const PAD: u32 = 0;
+pub const EOS: u32 = 1;
+pub const SEP: u32 = 2;
+
+#[derive(Debug, Clone)]
+pub struct Document {
+    pub id: u32,
+    pub topic: u32,
+    pub tokens: Vec<u32>,
+}
+
+#[derive(Debug)]
+pub struct Corpus {
+    pub docs: Vec<Document>,
+    pub vocab: usize,
+    pub n_topics: usize,
+    /// Per-topic token pools (used by the QA workload generator to phrase
+    /// questions "about" a topic).
+    topic_pools: Vec<TopicPool>,
+    common_pool: Vec<u32>,
+}
+
+#[derive(Debug, Clone)]
+struct TopicPool {
+    tokens: Vec<u32>,
+    zipf: Zipf,
+}
+
+/// Fraction of tokens drawn from the global common pool (stop-words).
+const COMMON_FRAC: f64 = 0.25;
+const COMMON_POOL: usize = 64;
+const TOPIC_POOL: usize = 192;
+
+impl Corpus {
+    pub fn generate(cfg: &CorpusConfig) -> Self {
+        assert!(cfg.vocab > cfg.reserved + COMMON_POOL + TOPIC_POOL,
+                "vocab too small for pools");
+        let mut rng = Rng::new(cfg.seed);
+
+        // Common pool: the most "frequent" ids right above the reserved ones.
+        let common_pool: Vec<u32> =
+            (cfg.reserved as u32..(cfg.reserved + COMMON_POOL) as u32).collect();
+        let content_lo = cfg.reserved + COMMON_POOL;
+
+        // Topic pools: deterministic per-topic subsets of the content range.
+        let mut topic_pools = Vec::with_capacity(cfg.n_topics);
+        for t in 0..cfg.n_topics {
+            let mut trng = rng.fork(t as u64 + 1);
+            let tokens: Vec<u32> = (0..TOPIC_POOL)
+                .map(|_| trng.gen_range_in(content_lo, cfg.vocab) as u32)
+                .collect();
+            topic_pools.push(TopicPool {
+                tokens,
+                zipf: Zipf::new(TOPIC_POOL, cfg.token_skew),
+            });
+        }
+        let common_zipf = Zipf::new(COMMON_POOL, 1.2);
+
+        let mut docs = Vec::with_capacity(cfg.n_docs);
+        for id in 0..cfg.n_docs {
+            let mut drng = rng.fork(0x1000_0000 + id as u64);
+            let topic = drng.gen_range(cfg.n_topics) as u32;
+            let len = drng.length(cfg.doc_len.0, cfg.doc_len.1);
+            let pool = &topic_pools[topic as usize];
+            let tokens: Vec<u32> = (0..len)
+                .map(|_| {
+                    if drng.next_f64() < COMMON_FRAC {
+                        common_pool[common_zipf.sample(&mut drng)]
+                    } else {
+                        pool.tokens[pool.zipf.sample(&mut drng)]
+                    }
+                })
+                .collect();
+            docs.push(Document { id: id as u32, topic, tokens });
+        }
+
+        Self {
+            docs,
+            vocab: cfg.vocab,
+            n_topics: cfg.n_topics,
+            topic_pools,
+            common_pool,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    pub fn doc(&self, id: u32) -> &Document {
+        &self.docs[id as usize]
+    }
+
+    /// Sample `n` tokens "about" a topic (question phrasing).
+    pub fn topic_tokens(&self, topic: u32, n: usize, rng: &mut Rng) -> Vec<u32> {
+        let pool = &self.topic_pools[topic as usize];
+        (0..n)
+            .map(|_| {
+                if rng.next_f64() < 0.15 {
+                    self.common_pool[rng.gen_range(self.common_pool.len())]
+                } else {
+                    pool.tokens[pool.zipf.sample(rng)]
+                }
+            })
+            .collect()
+    }
+
+    /// Average document length in tokens (BM25 needs this).
+    pub fn avg_doc_len(&self) -> f64 {
+        if self.docs.is_empty() {
+            return 0.0;
+        }
+        self.docs.iter().map(|d| d.tokens.len()).sum::<usize>() as f64
+            / self.docs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> CorpusConfig {
+        CorpusConfig { n_docs: 500, n_topics: 16, doc_len: (20, 60),
+                       ..CorpusConfig::default() }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = small_cfg();
+        let a = Corpus::generate(&cfg);
+        let b = Corpus::generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        for (da, db) in a.docs.iter().zip(&b.docs) {
+            assert_eq!(da.tokens, db.tokens);
+            assert_eq!(da.topic, db.topic);
+        }
+    }
+
+    #[test]
+    fn doc_lengths_in_range() {
+        let cfg = small_cfg();
+        let c = Corpus::generate(&cfg);
+        for d in &c.docs {
+            assert!(d.tokens.len() >= cfg.doc_len.0);
+            assert!(d.tokens.len() <= cfg.doc_len.1);
+        }
+    }
+
+    #[test]
+    fn tokens_avoid_reserved_range() {
+        let cfg = small_cfg();
+        let c = Corpus::generate(&cfg);
+        for d in &c.docs {
+            for &t in &d.tokens {
+                assert!(t >= cfg.reserved as u32);
+                assert!((t as usize) < cfg.vocab);
+            }
+        }
+    }
+
+    #[test]
+    fn same_topic_docs_share_vocabulary() {
+        let cfg = small_cfg();
+        let c = Corpus::generate(&cfg);
+        // Find two docs with the same topic and two with different topics;
+        // same-topic overlap (Jaccard) should exceed cross-topic overlap.
+        let overlap = |a: &Document, b: &Document| {
+            let sa: std::collections::HashSet<u32> =
+                a.tokens.iter().copied().collect();
+            let sb: std::collections::HashSet<u32> =
+                b.tokens.iter().copied().collect();
+            let inter = sa.intersection(&sb).count() as f64;
+            inter / (sa.len().min(sb.len()) as f64)
+        };
+        let d0 = &c.docs[0];
+        let same = c.docs.iter().find(|d| d.id != d0.id && d.topic == d0.topic);
+        let diff = c.docs.iter().find(|d| d.topic != d0.topic).unwrap();
+        if let Some(same) = same {
+            assert!(overlap(d0, same) > overlap(d0, diff),
+                    "same-topic docs should overlap more");
+        }
+    }
+
+    #[test]
+    fn topic_tokens_deterministic_given_rng() {
+        let cfg = small_cfg();
+        let c = Corpus::generate(&cfg);
+        let a = c.topic_tokens(3, 10, &mut Rng::new(5));
+        let b = c.topic_tokens(3, 10, &mut Rng::new(5));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn avg_doc_len_sane() {
+        let cfg = small_cfg();
+        let c = Corpus::generate(&cfg);
+        let avg = c.avg_doc_len();
+        assert!(avg >= cfg.doc_len.0 as f64 && avg <= cfg.doc_len.1 as f64);
+    }
+}

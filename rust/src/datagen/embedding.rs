@@ -1,0 +1,189 @@
+//! Encoder abstraction: token window -> unit retrieval vector.
+//!
+//! Two implementations exist:
+//!   * [`HashEncoder`] (here): pure-Rust deterministic bag-of-words encoder.
+//!     Each token id maps to a fixed pseudo-random unit vector; a window
+//!     encodes to the normalized mean. Used by unit/property tests and the
+//!     synthetic-embedding path so the retrieval stack is testable without
+//!     AOT artifacts.
+//!   * `runtime::PjrtEncoder`: the real AOT `encode_q` / `encode_batch`
+//!     artifacts (the L2 JAX encoder). Same trait, same geometry (mean of
+//!     per-token embeddings -> MLP -> normalize), so locality behaves the
+//!     same way in both modes.
+
+use crate::util::Rng;
+
+/// Maps a token window to a unit-norm embedding of dimension `dim()`.
+///
+/// Deliberately NOT Send/Sync: the PJRT-backed implementation holds raw
+/// device handles. Encoding happens on the pipeline thread; only the
+/// retriever (plain data, Sync) crosses into the async-verification thread.
+pub trait Encoder {
+    fn dim(&self) -> usize;
+
+    /// Encode one window (uses at most the encoder's native window length).
+    fn encode(&self, tokens: &[u32]) -> Vec<f32>;
+
+    /// Batched encode; default = sequential.
+    fn encode_batch(&self, windows: &[&[u32]]) -> Vec<Vec<f32>> {
+        windows.iter().map(|w| self.encode(w)).collect()
+    }
+
+    /// Native window length (tokens beyond this are truncated from the
+    /// *front* — queries keep the most recent context).
+    fn window(&self) -> usize {
+        32
+    }
+}
+
+/// Deterministic hash-based bag-of-words encoder.
+#[derive(Debug, Clone)]
+pub struct HashEncoder {
+    dim: usize,
+    seed: u64,
+    window: usize,
+}
+
+impl HashEncoder {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        Self { dim, seed, window: 32 }
+    }
+
+    fn token_vec(&self, token: u32) -> Vec<f32> {
+        let mut rng = Rng::new(self.seed ^ ((token as u64 + 1) * 0x9E3779B9));
+        rng.unit_vector(self.dim)
+    }
+}
+
+impl Encoder for HashEncoder {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+
+    fn encode(&self, tokens: &[u32]) -> Vec<f32> {
+        let start = tokens.len().saturating_sub(self.window);
+        let window = &tokens[start..];
+        let mut acc = vec![0.0f32; self.dim];
+        if window.is_empty() {
+            acc[0] = 1.0;
+            return acc;
+        }
+        for &t in window {
+            let v = self.token_vec(t);
+            for (a, x) in acc.iter_mut().zip(&v) {
+                *a += x;
+            }
+        }
+        let norm = acc.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        for a in &mut acc {
+            *a /= norm;
+        }
+        acc
+    }
+}
+
+/// Embed every corpus document (first `window` tokens, like a passage
+/// encoder). Returns a row-major [n_docs, dim] matrix.
+pub fn embed_corpus(enc: &dyn Encoder,
+                    docs: &[crate::datagen::corpus::Document]) -> Vec<f32> {
+    let dim = enc.dim();
+    let mut out = vec![0.0f32; docs.len() * dim];
+    let windows: Vec<&[u32]> = docs
+        .iter()
+        .map(|d| &d.tokens[..d.tokens.len().min(enc.window())])
+        .collect();
+    // Chunked batches keep the PJRT encoder's fixed batch shape busy.
+    for (chunk_i, chunk) in windows.chunks(256).enumerate() {
+        let vecs = enc.encode_batch(chunk);
+        for (j, v) in vecs.into_iter().enumerate() {
+            let row = chunk_i * 256 + j;
+            out[row * dim..(row + 1) * dim].copy_from_slice(&v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_is_deterministic_and_normalized() {
+        let e = HashEncoder::new(64, 9);
+        let a = e.encode(&[5, 6, 7, 8]);
+        let b = e.encode(&[5, 6, 7, 8]);
+        assert_eq!(a, b);
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn windows_truncate_from_front() {
+        let e = HashEncoder::new(16, 9);
+        let long: Vec<u32> = (0..100).collect();
+        let tail: Vec<u32> = (68..100).collect();
+        assert_eq!(e.encode(&long), e.encode(&tail));
+    }
+
+    #[test]
+    fn similar_windows_are_close() {
+        let e = HashEncoder::new(64, 9);
+        let base: Vec<u32> = (10..42).collect();
+        let mut shifted = base.clone();
+        shifted.rotate_left(1);
+        shifted[31] = 999; // one token differs
+        let (a, b) = (e.encode(&base), e.encode(&shifted));
+        let cos: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!(cos > 0.9, "1-token change should keep cosine high: {cos}");
+        let unrelated: Vec<u32> = (2000..2032).collect();
+        let c = e.encode(&unrelated);
+        let cos2: f32 = a.iter().zip(&c).map(|(x, y)| x * y).sum();
+        assert!(cos2 < cos, "unrelated window should be farther");
+    }
+
+    #[test]
+    fn empty_window_is_safe() {
+        let e = HashEncoder::new(8, 1);
+        let v = e.encode(&[]);
+        assert_eq!(v.len(), 8);
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn embed_corpus_shapes_and_clustering() {
+        use crate::config::CorpusConfig;
+        use crate::datagen::corpus::Corpus;
+        let cfg = CorpusConfig { n_docs: 300, n_topics: 6,
+                                 ..CorpusConfig::default() };
+        let corpus = Corpus::generate(&cfg);
+        let enc = HashEncoder::new(32, 4);
+        let emb = embed_corpus(&enc, &corpus.docs);
+        assert_eq!(emb.len(), 300 * 32);
+        // same-topic docs should on average be closer than cross-topic
+        let row = |i: usize| &emb[i * 32..(i + 1) * 32];
+        let cos = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| x * y).sum()
+        };
+        let mut same = vec![];
+        let mut cross = vec![];
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let c = cos(row(i), row(j));
+                if corpus.docs[i].topic == corpus.docs[j].topic {
+                    same.push(c);
+                } else {
+                    cross.push(c);
+                }
+            }
+        }
+        if !same.is_empty() {
+            let ms = same.iter().sum::<f32>() / same.len() as f32;
+            let mc = cross.iter().sum::<f32>() / cross.len() as f32;
+            assert!(ms > mc, "topic clustering expected: same={ms} cross={mc}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic data generation: corpus (Wikipedia stand-in), QA workloads
+//! (the paper's four datasets), the KNN-LM token stream (WikiText-103
+//! stand-in), and the encoder abstraction shared with the runtime.
+
+pub mod corpus;
+pub mod embedding;
+pub mod qa;
+pub mod wikitext;
+
+pub use corpus::{Corpus, Document, EOS, PAD, SEP};
+pub use embedding::{embed_corpus, Encoder, HashEncoder};
+pub use qa::{generate_questions, Dataset, Question};
+pub use wikitext::{generate_stream, TokenStream};

@@ -1,0 +1,149 @@
+//! Synthetic QA workloads standing in for the paper's four datasets
+//! (Wiki-QA, Web Questions, Natural Questions, Trivia-QA).
+//!
+//! In the paper the four datasets act as repeated trials with slightly
+//! different question statistics; speedups are similar across them. We
+//! preserve that role: each preset differs in question length and topic
+//! popularity skew (DESIGN.md §2).
+
+use crate::datagen::corpus::Corpus;
+use crate::util::{Rng, Zipf};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    WikiQa,
+    WebQ,
+    Nq,
+    TriviaQa,
+}
+
+impl Dataset {
+    pub fn all() -> [Dataset; 4] {
+        [Dataset::WikiQa, Dataset::WebQ, Dataset::Nq, Dataset::TriviaQa]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dataset::WikiQa => "WikiQA",
+            Dataset::WebQ => "WQ",
+            Dataset::Nq => "NQ",
+            Dataset::TriviaQa => "TriviaQA",
+        }
+    }
+
+    /// (min_len, max_len, topic_skew, seed_salt)
+    fn params(&self) -> (usize, usize, f64, u64) {
+        match self {
+            Dataset::WikiQa => (6, 12, 1.10, 0x11),
+            Dataset::WebQ => (4, 9, 1.30, 0x22),
+            Dataset::Nq => (8, 16, 1.00, 0x33),
+            Dataset::TriviaQa => (10, 20, 0.90, 0x44),
+        }
+    }
+}
+
+impl std::str::FromStr for Dataset {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "wikiqa" | "wiki-qa" | "wiki_qa" => Ok(Dataset::WikiQa),
+            "webq" | "wq" | "webquestions" => Ok(Dataset::WebQ),
+            "nq" | "naturalquestions" => Ok(Dataset::Nq),
+            "triviaqa" | "trivia-qa" | "trivia_qa" => Ok(Dataset::TriviaQa),
+            other => Err(anyhow::anyhow!("unknown dataset: {other}")),
+        }
+    }
+}
+
+/// One serving request: a question (token ids) about a latent topic.
+#[derive(Debug, Clone)]
+pub struct Question {
+    pub id: u64,
+    pub dataset: Dataset,
+    pub topic: u32,
+    pub tokens: Vec<u32>,
+}
+
+/// Generate `n` questions for a dataset over a corpus. Deterministic in
+/// (dataset, corpus topics, seed).
+pub fn generate_questions(dataset: Dataset, corpus: &Corpus, n: usize,
+                          seed: u64) -> Vec<Question> {
+    let (lo, hi, skew, salt) = dataset.params();
+    let mut rng = Rng::new(seed ^ (salt << 32));
+    let topic_zipf = Zipf::new(corpus.n_topics, skew);
+    // Deterministic topic permutation so "popular" topics differ by dataset.
+    let mut perm: Vec<u32> = (0..corpus.n_topics as u32).collect();
+    for i in (1..perm.len()).rev() {
+        let j = rng.gen_range(i + 1);
+        perm.swap(i, j);
+    }
+    (0..n)
+        .map(|i| {
+            let mut qrng = rng.fork(i as u64);
+            let topic = perm[topic_zipf.sample(&mut qrng)];
+            let len = qrng.gen_range_in(lo, hi + 1);
+            let tokens = corpus.topic_tokens(topic, len, &mut qrng);
+            Question { id: i as u64, dataset, topic, tokens }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(&CorpusConfig {
+            n_docs: 200, n_topics: 16, ..CorpusConfig::default()
+        })
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let c = corpus();
+        let a = generate_questions(Dataset::WikiQa, &c, 10, 42);
+        let b = generate_questions(Dataset::WikiQa, &c, 10, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.topic, y.topic);
+        }
+        let c2 = generate_questions(Dataset::WikiQa, &c, 10, 43);
+        assert!(a.iter().zip(&c2).any(|(x, y)| x.tokens != y.tokens));
+    }
+
+    #[test]
+    fn lengths_respect_preset() {
+        let c = corpus();
+        for ds in Dataset::all() {
+            let (lo, hi, _, _) = ds.params();
+            for q in generate_questions(ds, &c, 50, 7) {
+                assert!(q.tokens.len() >= lo && q.tokens.len() <= hi,
+                        "{ds:?} len {}", q.tokens.len());
+            }
+        }
+    }
+
+    #[test]
+    fn datasets_differ() {
+        let c = corpus();
+        let a = generate_questions(Dataset::WikiQa, &c, 20, 7);
+        let b = generate_questions(Dataset::TriviaQa, &c, 20, 7);
+        assert!(a.iter().zip(&b).any(|(x, y)| x.tokens != y.tokens));
+    }
+
+    #[test]
+    fn topics_in_range() {
+        let c = corpus();
+        for q in generate_questions(Dataset::Nq, &c, 100, 3) {
+            assert!((q.topic as usize) < c.n_topics);
+        }
+    }
+
+    #[test]
+    fn parse_labels() {
+        assert_eq!("wikiqa".parse::<Dataset>().unwrap(), Dataset::WikiQa);
+        assert_eq!("WQ".parse::<Dataset>().unwrap(), Dataset::WebQ);
+        assert!("bogus".parse::<Dataset>().is_err());
+    }
+}

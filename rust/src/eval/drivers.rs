@@ -1,0 +1,851 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §5), plus the
+//! `serve` and `trace` CLI commands.
+//!
+//! Every driver works in two modes:
+//!   * **PJRT** (default): real AOT artifacts via `runtime::Engine`;
+//!   * **mock** (`--mock`): the deterministic hash-chain LM + HashEncoder —
+//!     same code paths, no artifacts, used for smoke runs and CI.
+
+use crate::cli::Flags;
+use crate::config::{Config, RetrieverKind};
+use crate::datagen::{Dataset, Encoder, HashEncoder};
+use crate::eval::report::{cell_stats, speedup, CellStats, Report};
+use crate::eval::runner::{questions_for, run_qa_cell, QaMethod};
+use crate::eval::workload::TestBed;
+use crate::knnlm::{Datastore, KnnLmBaseline, KnnLmSpec, KnnServeOptions};
+use crate::lm::{LanguageModel, MockLm};
+use crate::metrics::ReqMetrics;
+use crate::retriever::dense::DenseExact;
+use crate::retriever::hnsw::Hnsw;
+use crate::retriever::{Retriever, SpecQuery};
+use crate::runtime::{Engine, RETRIEVAL_DIM};
+use crate::spec::StridePolicy;
+use crate::util::json::Value;
+use crate::util::{summarize, Rng};
+
+/// The QA models of Fig 4 (paper: GPT2-medium / OPT-1.3B / LLaMA-2-7B).
+pub const FIG4_MODELS: [&str; 3] = ["gpt2m", "opt1b", "llama7b"];
+pub const TABLE3_MODEL: &str = "llama13b";
+pub const KNN_MODEL: &str = "knnlm";
+
+// ---------------------------------------------------------------------------
+// Providers: who supplies the LM and the encoder
+// ---------------------------------------------------------------------------
+
+pub enum Provider {
+    Mock { seed: u64 },
+    Pjrt(Engine),
+}
+
+impl Provider {
+    pub fn from_flags(cfg: &Config, flags: &Flags) -> anyhow::Result<Self> {
+        if flags.has("mock") {
+            Ok(Provider::Mock { seed: cfg.eval.seed })
+        } else {
+            Ok(Provider::Pjrt(Engine::new(&cfg.paths.artifacts)?))
+        }
+    }
+
+    pub fn encoder(&self) -> anyhow::Result<Box<dyn Encoder>> {
+        match self {
+            Provider::Mock { seed } => {
+                Ok(Box::new(HashEncoder::new(RETRIEVAL_DIM, seed ^ 0xEC)))
+            }
+            Provider::Pjrt(engine) => Ok(Box::new(engine.encoder()?)),
+        }
+    }
+
+    /// Models actually available (PJRT: those in index.json).
+    pub fn has_model(&self, name: &str) -> bool {
+        match self {
+            Provider::Mock { .. } => true,
+            Provider::Pjrt(e) => e.index.has_model(name),
+        }
+    }
+
+    /// Run `f` with the LM for `model` (mock or PJRT — monomorphised both
+    /// ways).
+    pub fn with_lm<R>(
+        &self, cfg: &Config, model: &str,
+        f: &mut dyn FnMut(&dyn ErasedLm) -> anyhow::Result<R>)
+        -> anyhow::Result<R> {
+        match self {
+            Provider::Mock { seed } => {
+                // Per-model seeds so "models" differ like real checkpoints.
+                let mut h = 0u64;
+                for b in model.bytes() {
+                    h = h.wrapping_mul(31).wrapping_add(b as u64);
+                }
+                let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ h);
+                f(&MockHolder(lm))
+            }
+            Provider::Pjrt(engine) => {
+                let lm = engine.lm(model)?;
+                f(&PjrtHolder(lm))
+            }
+        }
+    }
+}
+
+/// Object-safe wrapper so drivers can hold "some LM" without generics
+/// leaking into every signature. Each holder forwards to the typed runner.
+pub trait ErasedLm {
+    fn run_qa(&self, encoder: &dyn Encoder, bed: &TestBed,
+              kind: RetrieverKind, questions: &[crate::datagen::Question],
+              method: QaMethod, cfg: &Config)
+              -> anyhow::Result<Vec<ReqMetrics>>;
+
+    fn run_knn(&self, kb: &dyn Retriever, ds: &Datastore,
+               opts: &KnnServeOptions, prompts: &[Vec<u32>], baseline: bool)
+               -> anyhow::Result<Vec<ReqMetrics>>;
+
+    fn qproj_of_prompt(&self, prompt: &[u32]) -> anyhow::Result<Vec<f32>>;
+}
+
+struct MockHolder(MockLm);
+struct PjrtHolder(crate::runtime::PjrtLm);
+
+fn knn_run<L: LanguageModel>(lm: &L, kb: &dyn Retriever, ds: &Datastore,
+                             opts: &KnnServeOptions, prompts: &[Vec<u32>],
+                             baseline: bool)
+                             -> anyhow::Result<Vec<ReqMetrics>> {
+    let mut out = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        if baseline {
+            let pipe = KnnLmBaseline { lm, kb, ds, opts: opts.clone() };
+            out.push(pipe.run(p)?);
+        } else {
+            let pipe = KnnLmSpec { lm, kb, ds, opts: opts.clone() };
+            out.push(pipe.run(p)?);
+        }
+    }
+    Ok(out)
+}
+
+macro_rules! impl_holder {
+    ($holder:ty) => {
+        impl ErasedLm for $holder {
+            fn run_qa(&self, encoder: &dyn Encoder, bed: &TestBed,
+                      kind: RetrieverKind,
+                      questions: &[crate::datagen::Question],
+                      method: QaMethod, cfg: &Config)
+                      -> anyhow::Result<Vec<ReqMetrics>> {
+                run_qa_cell(&self.0, encoder, bed, kind, questions, method,
+                            cfg)
+            }
+
+            fn run_knn(&self, kb: &dyn Retriever, ds: &Datastore,
+                       opts: &KnnServeOptions, prompts: &[Vec<u32>],
+                       baseline: bool) -> anyhow::Result<Vec<ReqMetrics>> {
+                knn_run(&self.0, kb, ds, opts, prompts, baseline)
+            }
+
+            fn qproj_of_prompt(&self, prompt: &[u32])
+                               -> anyhow::Result<Vec<f32>> {
+                let st = self.0.prefill(prompt)?;
+                Ok(self.0.qproj(&st).to_vec())
+            }
+        }
+    };
+}
+
+impl_holder!(MockHolder);
+impl_holder!(PjrtHolder);
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+fn apply_scale(cfg: &mut Config, flags: &Flags) -> anyhow::Result<()> {
+    if flags.has("fast") || flags.has("mock") {
+        // Smoke scale: small corpus, short generations.
+        cfg.corpus.n_docs = cfg.corpus.n_docs.min(8_000);
+        cfg.corpus.n_topics = cfg.corpus.n_topics.min(64);
+        cfg.eval.requests = cfg.eval.requests.min(3);
+        cfg.eval.runs = cfg.eval.runs.min(2);
+        cfg.spec.max_new_tokens = cfg.spec.max_new_tokens.min(24);
+        cfg.knnlm.n_entries = cfg.knnlm.n_entries.min(20_000);
+    }
+    if let Some(n) = flags.get_usize("requests")? {
+        cfg.eval.requests = n;
+    }
+    if let Some(n) = flags.get_usize("runs")? {
+        cfg.eval.runs = n;
+    }
+    if let Some(n) = flags.get_usize("max-new")? {
+        cfg.spec.max_new_tokens = n;
+    }
+    if let Some(n) = flags.get_usize("docs")? {
+        cfg.corpus.n_docs = n;
+    }
+    Ok(())
+}
+
+/// Run one cell over `runs` independent runs.
+fn qa_cell_runs(lm: &dyn ErasedLm, encoder: &dyn Encoder, bed: &TestBed,
+                kind: RetrieverKind, ds: Dataset, method: QaMethod,
+                cfg: &Config) -> anyhow::Result<CellStats> {
+    let mut runs = Vec::with_capacity(cfg.eval.runs);
+    for r in 0..cfg.eval.runs {
+        let qs = questions_for(bed, ds, cfg.eval.requests, r, cfg.eval.seed);
+        runs.push(lm.run_qa(encoder, bed, kind, &qs, method, cfg)?);
+    }
+    Ok(cell_stats(&method.label(), &runs))
+}
+
+fn fmt_cell(c: &CellStats) -> String {
+    format!("{:<22} {:>8.3}±{:<6.3} G={:>7.3} R={:>7.3} acc={:>5.2} rb={}",
+            c.label, c.mean_s, c.std_s, c.gen_s, c.retr_s, c.spec_accuracy,
+            c.rollbacks)
+}
+
+// ---------------------------------------------------------------------------
+// bench dispatch
+// ---------------------------------------------------------------------------
+
+pub fn run_bench(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
+    let mut cfg = cfg.clone();
+    apply_scale(&mut cfg, flags)?;
+    let id = flags
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let provider = Provider::from_flags(&cfg, flags)?;
+    let run_one = |id: &str| -> anyhow::Result<()> {
+        match id {
+            "fig4" => fig4(&cfg, &provider),
+            "table1" => table1(&cfg, &provider),
+            "table2" => table2(&cfg, &provider),
+            "fig5" => fig5(&cfg, &provider),
+            "table3" => table3(&cfg, &provider),
+            "table4" => table4(&cfg, &provider),
+            "table5" => table5(&cfg, &provider),
+            "fig6" => fig6(&cfg, &provider),
+            other => anyhow::bail!("unknown bench id `{other}`"),
+        }
+    };
+    if id == "all" {
+        for id in ["fig6", "table4", "table5", "table2", "table1", "fig5",
+                   "table3", "fig4"] {
+            eprintln!("=== bench {id} ===");
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(id)
+    }
+}
+
+/// Build the shared QA testbed (corpus + embeddings via the provider's
+/// encoder).
+fn build_bed(cfg: &Config, provider: &Provider) -> anyhow::Result<TestBed> {
+    let enc = provider.encoder()?;
+    eprintln!("[bed] generating corpus ({} docs) + embeddings...",
+              cfg.corpus.n_docs);
+    Ok(TestBed::build(cfg, enc.as_ref()))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4 (+ Tables 6/7/8): the full latency grid
+// ---------------------------------------------------------------------------
+
+fn fig4_methods() -> Vec<QaMethod> {
+    vec![
+        QaMethod::Baseline,
+        QaMethod::plain_spec(),
+        QaMethod::spec(crate::config::PREFETCH, false, false),
+        QaMethod::spec(crate::config::PREFETCH_LARGE, false, false),
+        QaMethod::spec(1, true, false),
+        QaMethod::spec(1, false, true),
+        QaMethod::psa(crate::config::PREFETCH),
+        QaMethod::psa(crate::config::PREFETCH_LARGE),
+    ]
+}
+
+fn fig4(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
+    let bed = build_bed(cfg, provider)?;
+    let enc = provider.encoder()?;
+    let mut report = Report::new(
+        "fig4",
+        "Latency comparison (G/R decomposition) — Fig 4 + Tables 6/7/8");
+    for model in FIG4_MODELS {
+        if !provider.has_model(model) {
+            report.line(&format!("## {model}: artifacts missing, skipped"));
+            continue;
+        }
+        provider.with_lm(cfg, model, &mut |lm| {
+            for kind in RetrieverKind::all() {
+                report.line(&format!("## {} / {}", model, kind.label()));
+                for ds in Dataset::all() {
+                    report.line(&format!("### dataset {}", ds.label()));
+                    let mut base: Option<CellStats> = None;
+                    for method in fig4_methods() {
+                        let c = qa_cell_runs(lm, enc.as_ref(), &bed, kind,
+                                             ds, method, cfg)?;
+                        let sp = base.as_ref().map(|b| speedup(b, &c));
+                        report.line(&format!(
+                            "{}{}", fmt_cell(&c),
+                            sp.map(|s| format!("  ({s:.2}x)"))
+                                .unwrap_or_default()));
+                        let mut row = c.to_json();
+                        if let Value::Obj(pairs) = &mut row {
+                            pairs.insert(0, ("model".into(),
+                                             Value::str(model)));
+                            pairs.insert(1, ("retriever".into(),
+                                             Value::str(kind.label())));
+                            pairs.insert(2, ("dataset".into(),
+                                             Value::str(ds.label())));
+                        }
+                        report.row(row);
+                        if c.label == "Baseline" {
+                            base = Some(c);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })?;
+    }
+    report.write(&cfg.paths.reports)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: per-component ablation (averaged over datasets)
+// ---------------------------------------------------------------------------
+
+fn table1(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
+    let bed = build_bed(cfg, provider)?;
+    let enc = provider.encoder()?;
+    let methods = vec![
+        QaMethod::plain_spec(),
+        QaMethod::spec(crate::config::PREFETCH, false, false),
+        QaMethod::spec(1, true, false),
+        QaMethod::spec(1, false, true),
+        QaMethod::psa(crate::config::PREFETCH),
+    ];
+    let mut report = Report::new(
+        "table1", "Component ablation speed-ups vs RaLMSeq — Table 1");
+    for kind in RetrieverKind::all() {
+        report.line(&format!("## retriever {}", kind.label()));
+        for model in FIG4_MODELS {
+            if !provider.has_model(model) {
+                continue;
+            }
+            provider.with_lm(cfg, model, &mut |lm| {
+                // Average latency across the four datasets per method.
+                let avg = |method: QaMethod| -> anyhow::Result<f64> {
+                    let mut total = 0.0;
+                    for ds in Dataset::all() {
+                        total += qa_cell_runs(lm, enc.as_ref(), &bed, kind,
+                                              ds, method, cfg)?.mean_s;
+                    }
+                    Ok(total / Dataset::all().len() as f64)
+                };
+                let base = avg(QaMethod::Baseline)?;
+                for &method in &methods {
+                    let mean = avg(method)?;
+                    let sp = base / mean.max(1e-12);
+                    report.line(&format!("{:<10} {:<22} {:>5.2}x", model,
+                                         method.label(), sp));
+                    report.row(Value::obj(vec![
+                        ("retriever", Value::str(kind.label())),
+                        ("model", Value::str(model)),
+                        ("method", Value::str(method.label())),
+                        ("speedup", Value::num(sp)),
+                    ]));
+                }
+                Ok(())
+            })?;
+        }
+    }
+    report.write(&cfg.paths.reports)
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: prefetch size 20 vs 256
+// ---------------------------------------------------------------------------
+
+fn table2(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
+    let bed = build_bed(cfg, provider)?;
+    let enc = provider.encoder()?;
+    let mut report = Report::new(
+        "table2", "Prefetch size ablation (P(20) vs P(256)) — Table 2");
+    for kind in RetrieverKind::all() {
+        report.line(&format!("## retriever {}", kind.label()));
+        for model in FIG4_MODELS {
+            if !provider.has_model(model) {
+                continue;
+            }
+            provider.with_lm(cfg, model, &mut |lm| {
+                let avg = |method: QaMethod| -> anyhow::Result<f64> {
+                    let mut total = 0.0;
+                    for ds in Dataset::all() {
+                        total += qa_cell_runs(lm, enc.as_ref(), &bed, kind,
+                                              ds, method, cfg)?.mean_s;
+                    }
+                    Ok(total / Dataset::all().len() as f64)
+                };
+                let base = avg(QaMethod::Baseline)?;
+                for p in [crate::config::PREFETCH,
+                          crate::config::PREFETCH_LARGE] {
+                    let m = QaMethod::spec(p, false, false);
+                    let sp = base / avg(m)?.max(1e-12);
+                    report.line(&format!("{:<10} {:<22} {:>5.2}x", model,
+                                         m.label(), sp));
+                    report.row(Value::obj(vec![
+                        ("retriever", Value::str(kind.label())),
+                        ("model", Value::str(model)),
+                        ("prefetch", Value::num(p as f64)),
+                        ("speedup", Value::num(sp)),
+                    ]));
+                }
+                Ok(())
+            })?;
+        }
+    }
+    report.write(&cfg.paths.reports)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5: KNN-LM speedups vs k
+// ---------------------------------------------------------------------------
+
+fn knn_fixture(cfg: &Config, provider: &Provider, lm: &dyn ErasedLm)
+               -> anyhow::Result<(Datastore, Vec<Vec<u32>>)> {
+    let stream = crate::datagen::generate_stream(
+        &cfg.corpus, cfg.knnlm.n_entries + 600, cfg.knnlm.seed);
+    let ds = match provider {
+        Provider::Mock { seed } => Datastore::build_mock(
+            &stream, RETRIEVAL_DIM, seed ^ 0xE, cfg.knnlm.n_entries),
+        Provider::Pjrt(engine) => {
+            let ex = crate::runtime::HiddenExtractor::new(engine, KNN_MODEL)?;
+            Datastore::build_pjrt(&stream, &ex, cfg.knnlm.n_entries)?
+        }
+    };
+    let _ = lm;
+    // Prompts: held-out windows from beyond the datastore region.
+    let mut rng = Rng::new(cfg.knnlm.seed ^ 0x9999);
+    let prompts: Vec<Vec<u32>> = (0..cfg.eval.requests)
+        .map(|_| {
+            let start = rng.gen_range(stream.len().saturating_sub(64));
+            stream.tokens[start..(start + 24).min(stream.len())].to_vec()
+        })
+        .collect();
+    Ok((ds, prompts))
+}
+
+fn fig5(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
+    if !provider.has_model(KNN_MODEL) {
+        eprintln!("fig5: knnlm artifacts missing, skipped");
+        return Ok(());
+    }
+    let mut report = Report::new(
+        "fig5", "KNN-LM speed-up vs k (EDR + ADR) — Fig 5");
+    provider.with_lm(cfg, KNN_MODEL, &mut |lm| {
+        let (ds, prompts) = knn_fixture(cfg, provider, lm)?;
+        let edr = DenseExact::new(ds.keys.clone());
+        let adr = Hnsw::build(ds.keys.clone(), cfg.retriever.hnsw_m,
+                              cfg.retriever.hnsw_ef_construction,
+                              cfg.retriever.hnsw_ef_search,
+                              cfg.knnlm.seed ^ 0x42);
+        let retrievers: [(&str, &dyn Retriever); 2] =
+            [("EDR", &edr), ("ADR", &adr)];
+        let ks = [1usize, 16, 256, 1024];
+        for (rname, kb) in retrievers {
+            report.line(&format!("## retriever {rname}"));
+            for &k in &ks {
+                let k = k.min(ds.len());
+                let mk_opts = |stride: StridePolicy| KnnServeOptions {
+                    k,
+                    stride,
+                    max_new: cfg.spec.max_new_tokens,
+                    lambda: cfg.knnlm.lambda,
+                    tau: cfg.knnlm.tau,
+                    next_n: cfg.knnlm.next_n,
+                    cache_cap: cfg.knnlm.cache_cap.max(4 * k),
+                };
+                let base = cell_stats("baseline", &[lm.run_knn(
+                    kb, &ds, &mk_opts(StridePolicy::Fixed(1)), &prompts,
+                    true)?]);
+                let variants = vec![
+                    ("s=4", StridePolicy::Fixed(4)),
+                    ("s=8", StridePolicy::Fixed(8)),
+                    ("OS3", StridePolicy::Os3(crate::spec::Os3Config {
+                        window: cfg.spec.os3_window,
+                        gamma_max: cfg.spec.gamma_max,
+                        max_stride: cfg.spec.max_stride,
+                        async_mode: false,
+                    })),
+                ];
+                for (vname, stride) in variants {
+                    let c = cell_stats(vname, &[lm.run_knn(
+                        kb, &ds, &mk_opts(stride), &prompts, false)?]);
+                    let sp = speedup(&base, &c);
+                    report.line(&format!(
+                        "k={:<5} {:<5} {:>7.3}s vs base {:>7.3}s  ({:.2}x) acc={:.2}",
+                        k, vname, c.mean_s, base.mean_s, sp,
+                        c.spec_accuracy));
+                    report.row(Value::obj(vec![
+                        ("retriever", Value::str(rname)),
+                        ("k", Value::num(k as f64)),
+                        ("variant", Value::str(vname)),
+                        ("baseline_s", Value::num(base.mean_s)),
+                        ("spec_s", Value::num(c.mean_s)),
+                        ("speedup", Value::num(sp)),
+                        ("accuracy", Value::num(c.spec_accuracy)),
+                    ]));
+                }
+            }
+        }
+        Ok(())
+    })?;
+    report.write(&cfg.paths.reports)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3: LLaMA-2-13B stand-in, +PSA over four datasets
+// ---------------------------------------------------------------------------
+
+fn table3(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
+    if !provider.has_model(TABLE3_MODEL) {
+        eprintln!("table3: {TABLE3_MODEL} artifacts missing, skipped");
+        return Ok(());
+    }
+    let bed = build_bed(cfg, provider)?;
+    let enc = provider.encoder()?;
+    let mut report = Report::new(
+        "table3", "LLaMA-2-13B stand-in: RaLMSpec+PSA speed-up — Table 3");
+    provider.with_lm(cfg, TABLE3_MODEL, &mut |lm| {
+        for kind in RetrieverKind::all() {
+            for ds in Dataset::all() {
+                let base = qa_cell_runs(lm, enc.as_ref(), &bed, kind, ds,
+                                        QaMethod::Baseline, cfg)?;
+                let psa = qa_cell_runs(lm, enc.as_ref(), &bed, kind, ds,
+                                       QaMethod::psa(crate::config::PREFETCH),
+                                       cfg)?;
+                let sp = speedup(&base, &psa);
+                report.line(&format!("{:<4} {:<10} {:>5.2}x", kind.label(),
+                                     ds.label(), sp));
+                report.row(Value::obj(vec![
+                    ("retriever", Value::str(kind.label())),
+                    ("dataset", Value::str(ds.label())),
+                    ("speedup", Value::num(sp)),
+                ]));
+            }
+        }
+        Ok(())
+    })?;
+    report.write(&cfg.paths.reports)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 / Fig 7: all P/S/A combinations (LLaMA-7B stand-in, WikiQA)
+// ---------------------------------------------------------------------------
+
+fn table4(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
+    let model = "llama7b";
+    if !provider.has_model(model) {
+        eprintln!("table4: {model} artifacts missing, skipped");
+        return Ok(());
+    }
+    let bed = build_bed(cfg, provider)?;
+    let enc = provider.encoder()?;
+    let combos: Vec<(&str, QaMethod)> = vec![
+        ("B", QaMethod::Baseline),
+        ("P", QaMethod::spec(crate::config::PREFETCH, false, false)),
+        ("S", QaMethod::spec(1, true, false)),
+        ("A", QaMethod::spec(1, false, true)),
+        ("PS", QaMethod::spec(crate::config::PREFETCH, true, false)),
+        ("SA", QaMethod::spec(1, true, true)),
+        ("PA", QaMethod::spec(crate::config::PREFETCH, false, true)),
+        ("PSA", QaMethod::psa(crate::config::PREFETCH)),
+    ];
+    let mut report = Report::new(
+        "table4",
+        "P/S/A combination latencies (LLaMA-7B stand-in, WikiQA) — Table 4 / Fig 7");
+    provider.with_lm(cfg, model, &mut |lm| {
+        for kind in RetrieverKind::all() {
+            report.line(&format!("## retriever {}", kind.label()));
+            for (name, method) in &combos {
+                let c = qa_cell_runs(lm, enc.as_ref(), &bed, kind,
+                                     Dataset::WikiQa, *method, cfg)?;
+                report.line(&format!("{:<4} {}", name, fmt_cell(&c)));
+                report.row(Value::obj(vec![
+                    ("retriever", Value::str(kind.label())),
+                    ("combo", Value::str(*name)),
+                    ("latency_s", Value::num(c.mean_s)),
+                ]));
+            }
+        }
+        Ok(())
+    })?;
+    report.write(&cfg.paths.reports)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5: fixed strides vs OS³
+// ---------------------------------------------------------------------------
+
+fn table5(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
+    let model = "llama7b";
+    if !provider.has_model(model) {
+        eprintln!("table5: {model} artifacts missing, skipped");
+        return Ok(());
+    }
+    let bed = build_bed(cfg, provider)?;
+    let enc = provider.encoder()?;
+    let variants: Vec<(String, QaMethod)> = [2usize, 4, 8]
+        .iter()
+        .map(|&s| (format!("S={s}"), QaMethod::Spec {
+            prefetch: 1, os3: false, async_verify: false, stride: s,
+        }))
+        .chain(std::iter::once(
+            ("OS3".to_string(), QaMethod::spec(1, true, false))))
+        .collect();
+    let mut report = Report::new(
+        "table5", "Speculation stride ablation (WikiQA) — Table 5");
+    provider.with_lm(cfg, model, &mut |lm| {
+        for kind in RetrieverKind::all() {
+            report.line(&format!("## retriever {}", kind.label()));
+            for (name, method) in &variants {
+                let c = qa_cell_runs(lm, enc.as_ref(), &bed, kind,
+                                     Dataset::WikiQa, *method, cfg)?;
+                report.line(&format!("{:<5} {}", name, fmt_cell(&c)));
+                report.row(Value::obj(vec![
+                    ("retriever", Value::str(kind.label())),
+                    ("variant", Value::str(name.clone())),
+                    ("latency_s", Value::num(c.mean_s)),
+                ]));
+            }
+        }
+        Ok(())
+    })?;
+    report.write(&cfg.paths.reports)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6: batched retrieval latency per query vs batch size
+// ---------------------------------------------------------------------------
+
+fn fig6(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
+    let bed = build_bed(cfg, provider)?;
+    let enc = provider.encoder()?;
+    let mut report = Report::new(
+        "fig6", "Batched retrieval: latency per query vs batch size — Fig 6 (A.1)");
+    let mut rng = Rng::new(cfg.eval.seed ^ 0xF16);
+    // Realistic queries: encoded topic windows.
+    let windows: Vec<Vec<u32>> = (0..32)
+        .map(|i| bed.corpus.topic_tokens(
+            (i % bed.corpus.n_topics) as u32, 16, &mut rng))
+        .collect();
+    let dense: Vec<SpecQuery> = windows
+        .iter()
+        .map(|w| SpecQuery::dense_only(enc.encode(w)))
+        .collect();
+    let sparse: Vec<SpecQuery> = windows
+        .iter()
+        .map(|w| SpecQuery::sparse_only(w.clone()))
+        .collect();
+    let trials = 12usize;
+    for kind in RetrieverKind::all() {
+        let kb = bed.retriever(kind);
+        let queries = match kind {
+            RetrieverKind::Sr => &sparse,
+            _ => &dense,
+        };
+        report.line(&format!("## retriever {}", kind.label()));
+        for bs in [1usize, 2, 4, 8, 16] {
+            let mut per_query = Vec::with_capacity(trials);
+            for t in 0..trials {
+                let start = (t * bs) % (queries.len() - bs + 1);
+                let batch = &queries[start..start + bs];
+                let sw = crate::metrics::Stopwatch::start();
+                let res = kb.retrieve_batch(batch, 10);
+                let dt = sw.elapsed().as_secs_f64();
+                assert_eq!(res.len(), bs);
+                per_query.push(dt / bs as f64 * 1e3); // ms/query
+            }
+            let s = summarize(&per_query);
+            report.line(&format!(
+                "batch={:<3} {:>8.3} ms/query  (95% CI ±{:.3})",
+                bs, s.mean, s.ci95));
+            report.row(Value::obj(vec![
+                ("retriever", Value::str(kind.label())),
+                ("batch", Value::num(bs as f64)),
+                ("ms_per_query", Value::num(s.mean)),
+                ("ci95", Value::num(s.ci95)),
+            ]));
+        }
+    }
+    report.write(&cfg.paths.reports)
+}
+
+// ---------------------------------------------------------------------------
+// serve / trace commands
+// ---------------------------------------------------------------------------
+
+pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
+    let mut cfg = cfg.clone();
+    apply_scale(&mut cfg, flags)?;
+    let model = flags.get("model").unwrap_or("gpt2m").to_string();
+    let dataset: Dataset = flags.get("dataset").unwrap_or("wikiqa").parse()?;
+    let kind: RetrieverKind = flags.get("retriever").unwrap_or("edr").parse()?;
+    let method = match flags.get("method").unwrap_or("psa") {
+        "baseline" => QaMethod::Baseline,
+        "spec" => QaMethod::plain_spec(),
+        "psa" => QaMethod::psa(cfg.spec.prefetch),
+        other => anyhow::bail!("unknown method {other}"),
+    };
+    let provider = Provider::from_flags(&cfg, flags)?;
+    anyhow::ensure!(provider.has_model(&model), "model {model} not built");
+    let bed = build_bed(&cfg, &provider)?;
+    let enc = provider.encoder()?;
+    let questions = questions_for(&bed, dataset, cfg.eval.requests, 0,
+                                  cfg.eval.seed);
+    eprintln!("[serve] {} requests via {} on {}/{} ({})",
+              questions.len(), method.label(), model, kind.label(),
+              dataset.label());
+    provider.with_lm(&cfg, &model, &mut |lm| {
+        let sw = crate::metrics::Stopwatch::start();
+        let ms = lm.run_qa(enc.as_ref(), &bed, kind, &questions, method,
+                           &cfg)?;
+        let wall = sw.elapsed().as_secs_f64();
+        let total_tokens: usize =
+            ms.iter().map(|m| m.tokens_out.len()).sum();
+        let lat: Vec<f64> =
+            ms.iter().map(|m| m.total.as_secs_f64()).collect();
+        let s = summarize(&lat);
+        println!("requests={} wall={:.2}s throughput={:.2} tok/s \
+                  latency mean={:.3}s p_min={:.3} p_max={:.3}",
+                 ms.len(), wall, total_tokens as f64 / wall, s.mean, s.min,
+                 s.max);
+        Ok(())
+    })
+}
+
+pub fn run_trace(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
+    let mut cfg = cfg.clone();
+    apply_scale(&mut cfg, flags)?;
+    let kind: RetrieverKind = flags.get("retriever").unwrap_or("edr").parse()?;
+    let model = flags.get("model").unwrap_or("gpt2m").to_string();
+    let provider = Provider::from_flags(&cfg, flags)?;
+    anyhow::ensure!(provider.has_model(&model), "model {model} not built");
+    let bed = build_bed(&cfg, &provider)?;
+    let enc = provider.encoder()?;
+    let questions = questions_for(&bed, Dataset::WikiQa, 1, 0, cfg.eval.seed);
+    let mut report = Report::new(
+        "fig1c", "Timeline trace: RaLMSeq vs RaLMSpec — Fig 1(c) / Fig 3");
+    provider.with_lm(&cfg, &model, &mut |lm| {
+        for (name, method) in [("RaLMSeq", QaMethod::Baseline),
+                               ("RaLMSpec+PSA",
+                                QaMethod::psa(cfg.spec.prefetch))] {
+            let m = lm.run_qa(enc.as_ref(), &bed, kind, &questions, method,
+                              &cfg)?
+                .pop()
+                .unwrap();
+            report.line(&format!(
+                "## {name}: total={:.3}s G={:.3}s R={:.3}s tokens={}",
+                m.total.as_secs_f64(), m.generate.as_secs_f64(),
+                m.retrieve.as_secs_f64(), m.tokens_out.len()));
+            for e in &m.events {
+                let bar_len = (e.dur.as_secs_f64() * 200.0).ceil() as usize;
+                report.line(&format!(
+                    "{:>9.3}s {:<9} {}",
+                    e.start.as_secs_f64(), e.kind.label(),
+                    "#".repeat(bar_len.clamp(1, 80))));
+                report.row(Value::obj(vec![
+                    ("method", Value::str(name)),
+                    ("kind", Value::str(e.kind.label())),
+                    ("start_s", Value::num(e.start.as_secs_f64())),
+                    ("dur_s", Value::num(e.dur.as_secs_f64())),
+                ]));
+            }
+        }
+        Ok(())
+    })?;
+    report.write(&cfg.paths.reports)
+}
+
+// ---------------------------------------------------------------------------
+// cargo-bench entry (harness = false): each rust/benches/<id>.rs calls this
+// ---------------------------------------------------------------------------
+
+/// Entry point for the `cargo bench` binaries. Scale is intentionally
+/// smaller than `ralmspec bench <id>` (the full reproduction): override via
+/// env RALMSPEC_BENCH_{DOCS,REQUESTS,RUNS,MAXNEW,MOCK}.
+pub fn bench_entry(id: &str) -> anyhow::Result<()> {
+    let env_usize = |k: &str, d: usize| -> usize {
+        std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+    };
+    let mut cfg = Config::default();
+    cfg.corpus.n_docs = env_usize("RALMSPEC_BENCH_DOCS", 60_000);
+    cfg.eval.requests = env_usize("RALMSPEC_BENCH_REQUESTS", 2);
+    cfg.eval.runs = env_usize("RALMSPEC_BENCH_RUNS", 1);
+    cfg.spec.max_new_tokens = env_usize("RALMSPEC_BENCH_MAXNEW", 24);
+    cfg.knnlm.n_entries = env_usize("RALMSPEC_BENCH_DS", 30_000);
+    let mock = std::env::var("RALMSPEC_BENCH_MOCK").is_ok()
+        || !cfg.paths.artifacts.join("index.json").exists();
+    let provider = if mock {
+        eprintln!("[bench {id}] artifacts missing or MOCK set — mock LM");
+        Provider::Mock { seed: cfg.eval.seed }
+    } else {
+        Provider::Pjrt(Engine::new(&cfg.paths.artifacts)?)
+    };
+    let t = std::time::Instant::now();
+    match id {
+        "fig4" => {
+            // bench scale: trim the grid (the CLI runs the full one)
+            fig4_with_models(&cfg, &provider, &["gpt2m"])?;
+        }
+        "table1" => table1(&cfg, &provider)?,
+        "table2" => table2(&cfg, &provider)?,
+        "fig5" => fig5(&cfg, &provider)?,
+        "table3" => table3(&cfg, &provider)?,
+        "table4" => table4(&cfg, &provider)?,
+        "table5" => table5(&cfg, &provider)?,
+        "fig6" => fig6(&cfg, &provider)?,
+        other => anyhow::bail!("unknown bench {other}"),
+    }
+    eprintln!("[bench {id}] done in {:.1}s", t.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn fig4_with_models(cfg: &Config, provider: &Provider, models: &[&str])
+                    -> anyhow::Result<()> {
+    // Same driver as fig4 but over a model subset (bench scale).
+    let bed = build_bed(cfg, provider)?;
+    let enc = provider.encoder()?;
+    let mut report = Report::new("fig4", "Latency grid (bench-scale subset)");
+    for model in models {
+        if !provider.has_model(model) {
+            continue;
+        }
+        provider.with_lm(cfg, model, &mut |lm| {
+            for kind in RetrieverKind::all() {
+                for ds in [Dataset::WikiQa, Dataset::Nq] {
+                    let mut base: Option<CellStats> = None;
+                    for method in [QaMethod::Baseline, QaMethod::plain_spec(),
+                                   QaMethod::spec(crate::config::PREFETCH,
+                                                  false, false),
+                                   QaMethod::spec(1, true, false),
+                                   QaMethod::psa(crate::config::PREFETCH)] {
+                        let c = qa_cell_runs(lm, enc.as_ref(), &bed, kind,
+                                             ds, method, cfg)?;
+                        let sp = base.as_ref().map(|b| speedup(b, &c));
+                        report.line(&format!(
+                            "{model}/{}/{} {}{}", kind.label(), ds.label(),
+                            fmt_cell(&c),
+                            sp.map(|s| format!("  ({s:.2}x)"))
+                                .unwrap_or_default()));
+                        if c.label == "Baseline" {
+                            base = Some(c);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })?;
+    }
+    report.write(&cfg.paths.reports)
+}

@@ -1,0 +1,11 @@
+//! Evaluation harness: regenerates every table and figure of the paper's
+//! evaluation section (DESIGN.md §5 maps each to its driver).
+
+pub mod drivers;
+pub mod report;
+pub mod runner;
+pub mod workload;
+
+pub use report::{cell_stats, speedup, CellStats, Report};
+pub use runner::{query_mode, questions_for, run_qa_cell, QaMethod};
+pub use workload::TestBed;

@@ -1,0 +1,179 @@
+//! Report emission: paper-style text tables + machine-readable JSON under
+//! `reports/`, consumed by EXPERIMENTS.md.
+
+use crate::metrics::ReqMetrics;
+use crate::util::json::Value;
+use crate::util::{summarize, Summary};
+use std::path::Path;
+
+/// Aggregate of one experiment cell (one method on one workload).
+#[derive(Debug, Clone)]
+pub struct CellStats {
+    pub label: String,
+    /// Mean per-request end-to-end latency (seconds) ± std over runs.
+    pub mean_s: f64,
+    pub std_s: f64,
+    /// Component means per request (seconds).
+    pub gen_s: f64,
+    pub retr_s: f64,
+    pub cache_s: f64,
+    /// Aggregate counters over all requests/runs.
+    pub rollbacks: u64,
+    pub spec_steps: u64,
+    pub spec_accuracy: f64,
+    pub kb_calls: u64,
+    pub kb_queries: u64,
+    pub tokens: u64,
+}
+
+impl CellStats {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("label", Value::str(self.label.clone())),
+            ("mean_s", Value::num(self.mean_s)),
+            ("std_s", Value::num(self.std_s)),
+            ("gen_s", Value::num(self.gen_s)),
+            ("retr_s", Value::num(self.retr_s)),
+            ("cache_s", Value::num(self.cache_s)),
+            ("rollbacks", Value::num(self.rollbacks as f64)),
+            ("spec_steps", Value::num(self.spec_steps as f64)),
+            ("spec_accuracy", Value::num(self.spec_accuracy)),
+            ("kb_calls", Value::num(self.kb_calls as f64)),
+            ("kb_queries", Value::num(self.kb_queries as f64)),
+            ("tokens", Value::num(self.tokens as f64)),
+        ])
+    }
+}
+
+/// Reduce per-run request metrics: `runs[r]` is the list of per-request
+/// metrics for run r; the per-run statistic is the mean request latency.
+pub fn cell_stats(label: &str, runs: &[Vec<ReqMetrics>]) -> CellStats {
+    let per_run_mean: Vec<f64> = runs
+        .iter()
+        .map(|r| {
+            r.iter().map(|m| m.total.as_secs_f64()).sum::<f64>()
+                / r.len().max(1) as f64
+        })
+        .collect();
+    let s: Summary = summarize(&per_run_mean);
+    let all: Vec<&ReqMetrics> = runs.iter().flatten().collect();
+    let n = all.len().max(1) as f64;
+    let sum_d = |f: &dyn Fn(&ReqMetrics) -> f64| -> f64 {
+        all.iter().map(|m| f(m)).sum::<f64>() / n
+    };
+    let steps: u64 = all.iter().map(|m| m.spec_steps as u64).sum();
+    let correct: u64 = all.iter().map(|m| m.spec_correct as u64).sum();
+    CellStats {
+        label: label.to_string(),
+        mean_s: s.mean,
+        std_s: s.std,
+        gen_s: sum_d(&|m| m.generate.as_secs_f64()),
+        retr_s: sum_d(&|m| m.retrieve.as_secs_f64()),
+        cache_s: sum_d(&|m| m.cache.as_secs_f64()),
+        rollbacks: all.iter().map(|m| m.rollbacks as u64).sum(),
+        spec_steps: steps,
+        spec_accuracy: if steps > 0 {
+            correct as f64 / steps as f64
+        } else {
+            0.0
+        },
+        kb_calls: all.iter().map(|m| m.kb_calls as u64).sum(),
+        kb_queries: all.iter().map(|m| m.kb_queries as u64).sum(),
+        tokens: all.iter().map(|m| m.tokens_out.len() as u64).sum(),
+    }
+}
+
+/// A full report: free-text table + structured JSON rows.
+#[derive(Debug)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub rows: Vec<Value>,
+    pub text: String,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Self {
+        let mut text = String::new();
+        text.push_str(&format!("# {id}: {title}\n\n"));
+        Self { id: id.into(), title: title.into(), rows: Vec::new(), text }
+    }
+
+    pub fn line(&mut self, s: &str) {
+        self.text.push_str(s);
+        self.text.push('\n');
+    }
+
+    pub fn row(&mut self, value: Value) {
+        self.rows.push(value);
+    }
+
+    /// Write `<reports>/<id>.txt` and `<id>.json`; echo to stdout.
+    pub fn write(&self, reports_dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(reports_dir)?;
+        std::fs::write(reports_dir.join(format!("{}.txt", self.id)),
+                       &self.text)?;
+        std::fs::write(reports_dir.join(format!("{}.json", self.id)),
+                       Value::Arr(self.rows.clone()).pretty())?;
+        println!("{}", self.text);
+        Ok(())
+    }
+}
+
+/// Speed-up of `base` over `x` (paper reports baseline_latency / method
+/// latency).
+pub fn speedup(base: &CellStats, x: &CellStats) -> f64 {
+    if x.mean_s <= 0.0 {
+        return 0.0;
+    }
+    base.mean_s / x.mean_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn mk(total_ms: u64) -> ReqMetrics {
+        ReqMetrics {
+            total: Duration::from_millis(total_ms),
+            generate: Duration::from_millis(total_ms / 2),
+            retrieve: Duration::from_millis(total_ms / 4),
+            spec_steps: 10,
+            spec_correct: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cell_stats_aggregates() {
+        let runs = vec![vec![mk(100), mk(200)], vec![mk(300), mk(100)]];
+        let s = cell_stats("x", &runs);
+        assert!((s.mean_s - 0.175).abs() < 1e-9); // (0.15 + 0.2)/2
+        assert!((s.spec_accuracy - 0.8).abs() < 1e-9);
+        assert_eq!(s.spec_steps, 40);
+        // JSON projection carries the label
+        assert_eq!(s.to_json().str_field("label").unwrap(), "x");
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let a = cell_stats("a", &[vec![mk(400)]]);
+        let b = cell_stats("b", &[vec![mk(100)]]);
+        assert!((speedup(&a, &b) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_writes_files() {
+        let dir = std::env::temp_dir().join("ralmspec_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut r = Report::new("t1", "test");
+        r.line("hello");
+        r.row(Value::obj(vec![("a", Value::num(1.0))]));
+        r.write(&dir).unwrap();
+        assert!(dir.join("t1.txt").exists());
+        let json = std::fs::read_to_string(dir.join("t1.json")).unwrap();
+        assert!(json.contains("\"a\""));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

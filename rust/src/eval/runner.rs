@@ -1,0 +1,173 @@
+//! Method definitions and the per-cell experiment runner shared by every
+//! table/figure driver.
+
+use crate::baseline::{BaselineOptions, RalmSeq};
+use crate::config::{Config, RetrieverKind};
+use crate::datagen::{Dataset, Encoder, Question};
+use crate::eval::workload::TestBed;
+use crate::lm::LanguageModel;
+use crate::metrics::ReqMetrics;
+use crate::spec::{Os3Config, QueryBuilder, QueryMode, SpecOptions,
+                  SpecPipeline, StridePolicy};
+
+/// One serving method of the paper's evaluation grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QaMethod {
+    /// RaLMSeq.
+    Baseline,
+    /// RaLMSpec with the +P(+size) / +S / +A toggles; `stride` is the
+    /// constant stride used when `os3` is false.
+    Spec { prefetch: usize, os3: bool, async_verify: bool, stride: usize },
+}
+
+impl QaMethod {
+    pub fn spec(prefetch: usize, os3: bool, async_verify: bool) -> Self {
+        QaMethod::Spec {
+            prefetch,
+            os3,
+            async_verify,
+            stride: crate::config::DEFAULT_STRIDE,
+        }
+    }
+
+    pub fn plain_spec() -> Self {
+        Self::spec(1, false, false)
+    }
+
+    pub fn psa(prefetch: usize) -> Self {
+        Self::spec(prefetch, true, true)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            QaMethod::Baseline => "Baseline".into(),
+            QaMethod::Spec { prefetch, os3, async_verify, stride } => {
+                let mut s = "RaLMSpec".to_string();
+                let mut plus = String::new();
+                if *prefetch > 1 {
+                    plus.push_str(&format!("P({prefetch})"));
+                }
+                if *os3 {
+                    plus.push('S');
+                }
+                if *async_verify {
+                    plus.push('A');
+                }
+                if !plus.is_empty() {
+                    s.push('+');
+                    s.push_str(&plus);
+                }
+                if !*os3 && *stride != crate::config::DEFAULT_STRIDE {
+                    s.push_str(&format!("[s={stride}]"));
+                }
+                s
+            }
+        }
+    }
+}
+
+/// Query view needed per retriever class (the dense encoder is a PJRT call;
+/// sparse pipelines skip it).
+pub fn query_mode(kind: RetrieverKind) -> QueryMode {
+    match kind {
+        RetrieverKind::Edr | RetrieverKind::Adr => QueryMode::Dense,
+        RetrieverKind::Sr => QueryMode::Sparse,
+    }
+}
+
+/// Run one (lm, retriever, dataset, method) cell over `questions`.
+pub fn run_qa_cell<L: LanguageModel>(
+    lm: &L, encoder: &dyn Encoder, bed: &TestBed, kind: RetrieverKind,
+    questions: &[Question], method: QaMethod, cfg: &Config)
+    -> anyhow::Result<Vec<ReqMetrics>> {
+    let kb = bed.retriever(kind);
+    let queries = QueryBuilder {
+        encoder,
+        mode: query_mode(kind),
+        dense_len: cfg.retriever.dense_query_len,
+        sparse_len: cfg.retriever.sparse_query_len,
+    };
+    let mut out = Vec::with_capacity(questions.len());
+    match method {
+        QaMethod::Baseline => {
+            let pipe = RalmSeq {
+                lm,
+                kb: kb.as_ref(),
+                corpus: &bed.corpus,
+                queries,
+                opts: BaselineOptions {
+                    gen_stride: cfg.spec.gen_stride,
+                    max_new: cfg.spec.max_new_tokens,
+                    max_doc_tokens: cfg.spec.max_doc_tokens,
+                },
+            };
+            for q in questions {
+                out.push(pipe.run(&q.tokens)?);
+            }
+        }
+        QaMethod::Spec { prefetch, os3, async_verify, stride } => {
+            let policy = if os3 {
+                StridePolicy::Os3(Os3Config {
+                    window: cfg.spec.os3_window,
+                    gamma_max: cfg.spec.gamma_max,
+                    max_stride: cfg.spec.max_stride,
+                    async_mode: async_verify,
+                })
+            } else {
+                StridePolicy::Fixed(stride)
+            };
+            let pipe = SpecPipeline {
+                lm,
+                kb: kb.as_ref(),
+                corpus: &bed.corpus,
+                queries,
+                opts: SpecOptions {
+                    gen_stride: cfg.spec.gen_stride,
+                    stride: policy,
+                    prefetch,
+                    async_verify,
+                    max_new: cfg.spec.max_new_tokens,
+                    max_doc_tokens: cfg.spec.max_doc_tokens,
+                    cache_cap: crate::cache::DEFAULT_CACHE_CAP,
+                },
+            };
+            for q in questions {
+                out.push(pipe.run(&q.tokens)?);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Questions for a (dataset, run) pair — each run re-seeds so mean ± std
+/// across runs is meaningful.
+pub fn questions_for(bed: &TestBed, dataset: Dataset, n: usize, run: usize,
+                     seed: u64) -> Vec<Question> {
+    crate::datagen::generate_questions(
+        dataset, &bed.corpus, n, seed ^ ((run as u64 + 1) << 20))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_paper_nomenclature() {
+        assert_eq!(QaMethod::Baseline.label(), "Baseline");
+        assert_eq!(QaMethod::plain_spec().label(), "RaLMSpec");
+        assert_eq!(QaMethod::spec(20, false, false).label(), "RaLMSpec+P(20)");
+        assert_eq!(QaMethod::spec(1, true, false).label(), "RaLMSpec+S");
+        assert_eq!(QaMethod::spec(1, false, true).label(), "RaLMSpec+A");
+        assert_eq!(QaMethod::psa(256).label(), "RaLMSpec+P(256)SA");
+        assert_eq!(
+            QaMethod::Spec { prefetch: 1, os3: false, async_verify: false,
+                             stride: 8 }.label(),
+            "RaLMSpec[s=8]");
+    }
+
+    #[test]
+    fn query_modes() {
+        assert_eq!(query_mode(RetrieverKind::Edr), QueryMode::Dense);
+        assert_eq!(query_mode(RetrieverKind::Sr), QueryMode::Sparse);
+    }
+}

@@ -1,0 +1,79 @@
+//! Shared experiment fixtures: corpus, embeddings, and the three
+//! retrievers, built once and shared across every cell of an experiment
+//! grid.
+//!
+//! Embeddings come from whichever [`Encoder`] the caller provides — the
+//! PJRT `encode_batch` artifact in real runs, the HashEncoder in
+//! artifact-free tests — so the whole harness works in both modes.
+
+use crate::config::{Config, RetrieverKind};
+use crate::datagen::{embed_corpus, Corpus, Encoder};
+use crate::retriever::dense::{DenseExact, EmbeddingMatrix};
+use crate::retriever::hnsw::Hnsw;
+use crate::retriever::sparse::Bm25;
+use crate::retriever::Retriever;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+pub struct TestBed {
+    pub corpus: Arc<Corpus>,
+    pub embeddings: Arc<EmbeddingMatrix>,
+    cfg: Config,
+    edr: RefCell<Option<Rc<DenseExact>>>,
+    adr: RefCell<Option<Rc<Hnsw>>>,
+    sr: RefCell<Option<Rc<Bm25>>>,
+}
+
+impl TestBed {
+    /// Generate the corpus and embed it with `encoder`.
+    pub fn build(cfg: &Config, encoder: &dyn Encoder) -> Self {
+        let corpus = Arc::new(Corpus::generate(&cfg.corpus));
+        let data = embed_corpus(encoder, &corpus.docs);
+        let embeddings =
+            Arc::new(EmbeddingMatrix::new(encoder.dim(), data));
+        Self {
+            corpus,
+            embeddings,
+            cfg: cfg.clone(),
+            edr: RefCell::new(None),
+            adr: RefCell::new(None),
+            sr: RefCell::new(None),
+        }
+    }
+
+    /// Lazily build (and cache) the retriever of a given kind.
+    pub fn retriever(&self, kind: RetrieverKind) -> Rc<dyn Retriever> {
+        match kind {
+            RetrieverKind::Edr => {
+                if self.edr.borrow().is_none() {
+                    *self.edr.borrow_mut() = Some(Rc::new(DenseExact::new(
+                        self.embeddings.clone())));
+                }
+                self.edr.borrow().as_ref().unwrap().clone()
+            }
+            RetrieverKind::Adr => {
+                if self.adr.borrow().is_none() {
+                    let r = &self.cfg.retriever;
+                    *self.adr.borrow_mut() = Some(Rc::new(Hnsw::build(
+                        self.embeddings.clone(), r.hnsw_m,
+                        r.hnsw_ef_construction, r.hnsw_ef_search,
+                        self.cfg.corpus.seed ^ 0x48)));
+                }
+                self.adr.borrow().as_ref().unwrap().clone()
+            }
+            RetrieverKind::Sr => {
+                if self.sr.borrow().is_none() {
+                    let r = &self.cfg.retriever;
+                    *self.sr.borrow_mut() = Some(Rc::new(Bm25::build(
+                        &self.corpus, r.bm25_k1, r.bm25_b)));
+                }
+                self.sr.borrow().as_ref().unwrap().clone()
+            }
+        }
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+}

@@ -1,0 +1,141 @@
+//! KNN-LM speculation cache (§5.3).
+//!
+//! Unlike the QA cache, re-inserting the *same* entry is useless (an entry
+//! retrieved for token t will rarely be the nearest neighbour again), so
+//! each verified retrieval inserts the entry **plus the next n consecutive
+//! datastore entries** — exploiting the stream's spatial locality.
+//! Lookups rank the cached entries exactly (inner product with the query).
+
+use crate::knnlm::datastore::Datastore;
+use crate::retriever::dense::dot_chunked;
+use crate::util::{Scored, TopK};
+use std::collections::HashSet;
+
+#[derive(Debug)]
+pub struct KnnCache {
+    order: std::collections::VecDeque<u32>,
+    present: HashSet<u32>,
+    cap: usize,
+    /// Consecutive entries inserted per verified id (paper: n = 10).
+    next_n: usize,
+}
+
+impl KnnCache {
+    pub fn new(cap: usize, next_n: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            order: std::collections::VecDeque::new(),
+            present: HashSet::new(),
+            cap,
+            next_n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    fn insert_one(&mut self, id: u32) {
+        if self.present.contains(&id) {
+            return;
+        }
+        if self.order.len() == self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.present.remove(&old);
+            }
+        }
+        self.order.push_back(id);
+        self.present.insert(id);
+    }
+
+    /// Insert verified ids plus their next-n successors.
+    pub fn insert_with_next(&mut self, ids: &[u32], ds: &Datastore) {
+        let n = ds.len() as u32;
+        for &id in ids {
+            for j in 0..=(self.next_n as u32) {
+                let x = id + j;
+                if x < n {
+                    self.insert_one(x);
+                }
+            }
+        }
+    }
+
+    /// Exact top-k among the cached entries.
+    pub fn topk(&self, q: &[f32], k: usize, ds: &Datastore) -> Vec<Scored> {
+        if self.order.is_empty() {
+            return Vec::new();
+        }
+        let mut tk = TopK::new(k.max(1));
+        for &id in &self.order {
+            tk.push(id, dot_chunked(q, ds.keys.row(id)));
+        }
+        tk.into_sorted()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+    use crate::datagen::generate_stream;
+
+    fn ds() -> Datastore {
+        let s = generate_stream(&CorpusConfig::default(), 2000, 1);
+        Datastore::build_mock(&s, 16, 7, 1500)
+    }
+
+    #[test]
+    fn insert_with_next_adds_consecutive() {
+        let d = ds();
+        let mut c = KnnCache::new(128, 10);
+        c.insert_with_next(&[100], &d);
+        assert_eq!(c.len(), 11);
+        assert!(c.present.contains(&100));
+        assert!(c.present.contains(&110));
+        assert!(!c.present.contains(&111));
+    }
+
+    #[test]
+    fn clamps_at_datastore_end() {
+        let d = ds();
+        let last = (d.len() - 1) as u32;
+        let mut c = KnnCache::new(128, 10);
+        c.insert_with_next(&[last - 2], &d);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn topk_matches_exhaustive_over_cached() {
+        let d = ds();
+        let mut c = KnnCache::new(512, 10);
+        c.insert_with_next(&[5, 200, 700], &d);
+        let q = d.keys.row(203).to_vec();
+        let top = c.topk(&q, 5, &d);
+        assert_eq!(top.len(), 5);
+        // row 203 is cached (200 + next 10), so best must be itself.
+        assert_eq!(top[0].id, 203);
+        for w in top.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn eviction_respects_cap() {
+        let d = ds();
+        let mut c = KnnCache::new(16, 10);
+        c.insert_with_next(&[0, 100, 200, 300], &d);
+        assert_eq!(c.len(), 16);
+    }
+
+    #[test]
+    fn empty_cache_returns_nothing() {
+        let d = ds();
+        let c = KnnCache::new(16, 10);
+        assert!(c.topk(&vec![0.0; 16], 4, &d).is_empty());
+    }
+}

@@ -1,0 +1,174 @@
+//! KNN-LM datastore (Khandelwal et al. 2019): one entry per training-token
+//! position — key = retrieval-space projection of the leftward-context
+//! hidden state, value = the next token.
+//!
+//! Entries are stored in stream order, which is what gives the *spatial
+//! locality* the KNN-LM speculation cache exploits (next-n consecutive
+//! entries, §5.3).
+//!
+//! Two builders: the PJRT path runs the `hidden_knnlm` artifact over the
+//! token stream in chunks; the mock path uses the same HashEncoder the
+//! MockLm's qproj uses, so mock queries and mock keys share one space.
+
+use crate::datagen::{Encoder, HashEncoder, TokenStream};
+use crate::retriever::dense::EmbeddingMatrix;
+use std::sync::Arc;
+
+pub struct Datastore {
+    pub keys: Arc<EmbeddingMatrix>,
+    /// values[i] = token following position i in the stream.
+    pub values: Vec<u32>,
+}
+
+impl Datastore {
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.keys.dim
+    }
+
+    /// Mock-mode builder: keys are sliding-window HashEncoder embeddings,
+    /// computed incrementally (O(dim) per position).
+    pub fn build_mock(stream: &TokenStream, dim: usize, seed: u64,
+                      max_entries: usize) -> Self {
+        let enc = HashEncoder::new(dim, seed);
+        let window = enc.window();
+        let n = (stream.len() - 1).min(max_entries);
+        let mut keys = Vec::with_capacity(n * dim);
+        let mut values = Vec::with_capacity(n);
+        // Incremental sliding-window sum of token vectors.
+        let mut sum = vec![0.0f32; dim];
+        let mut tokvecs: std::collections::HashMap<u32, Vec<f32>> =
+            std::collections::HashMap::new();
+        let mut vec_of = |t: u32| -> Vec<f32> {
+            tokvecs
+                .entry(t)
+                .or_insert_with(|| enc.encode(&[t]))
+                .clone()
+        };
+        for i in 0..n {
+            let v = vec_of(stream.tokens[i]);
+            for (s, x) in sum.iter_mut().zip(&v) {
+                *s += x;
+            }
+            if i >= window {
+                let out = vec_of(stream.tokens[i - window]);
+                for (s, x) in sum.iter_mut().zip(&out) {
+                    *s -= x;
+                }
+            }
+            let norm =
+                sum.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+            keys.extend(sum.iter().map(|x| x / norm));
+            values.push(stream.tokens[i + 1]);
+        }
+        Self { keys: Arc::new(EmbeddingMatrix::new(dim, keys)), values }
+    }
+
+    /// PJRT builder: run the `hidden_knnlm` artifact chunk by chunk.
+    pub fn build_pjrt(stream: &TokenStream,
+                      extractor: &crate::runtime::HiddenExtractor,
+                      max_entries: usize) -> anyhow::Result<Self> {
+        let dim = extractor.dim;
+        let chunk = extractor.chunk_len;
+        let n = (stream.len() - 1).min(max_entries);
+        let mut keys = Vec::with_capacity(n * dim);
+        let mut values = Vec::with_capacity(n);
+        let mut start = 0usize;
+        while values.len() < n {
+            let end = (start + chunk).min(stream.len());
+            let toks = &stream.tokens[start..end];
+            let hid = extractor.extract(toks)?;
+            for i in 0..toks.len() {
+                if values.len() >= n || start + i + 1 >= stream.len() {
+                    break;
+                }
+                keys.extend_from_slice(&hid[i * dim..(i + 1) * dim]);
+                values.push(stream.tokens[start + i + 1]);
+            }
+            start = end;
+        }
+        Ok(Self { keys: Arc::new(EmbeddingMatrix::new(dim, keys)), values })
+    }
+}
+
+/// Sanity check used by tests and the datastore-build CLI: keys must be
+/// unit norm.
+pub fn keys_normalized(ds: &Datastore) -> bool {
+    (0..ds.len().min(64)).all(|i| {
+        let r = ds.keys.row(i as u32);
+        let n: f32 = r.iter().map(|x| x * x).sum::<f32>().sqrt();
+        (n - 1.0).abs() < 1e-3
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+    use crate::datagen::generate_stream;
+
+    fn stream() -> TokenStream {
+        generate_stream(&CorpusConfig::default(), 3000, 1)
+    }
+
+    #[test]
+    fn mock_build_shapes_and_values() {
+        let s = stream();
+        let ds = Datastore::build_mock(&s, 32, 7, 1000);
+        assert_eq!(ds.len(), 1000);
+        assert_eq!(ds.keys.len(), 1000);
+        for i in 0..1000 {
+            assert_eq!(ds.values[i], s.tokens[i + 1]);
+        }
+        assert!(keys_normalized(&ds));
+    }
+
+    #[test]
+    fn incremental_keys_match_direct_encoding() {
+        let s = stream();
+        let dim = 16;
+        let ds = Datastore::build_mock(&s, dim, 9, 200);
+        let enc = HashEncoder::new(dim, 9);
+        for &i in &[0usize, 5, 40, 100, 199] {
+            let direct = enc.encode(&s.tokens[..=i]);
+            let row = ds.keys.row(i as u32);
+            for (a, b) in direct.iter().zip(row) {
+                assert!((a - b).abs() < 1e-3,
+                        "pos {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn consecutive_keys_are_similar() {
+        // Spatial locality in key space: neighbors in the stream are close.
+        let s = stream();
+        let ds = Datastore::build_mock(&s, 32, 3, 500);
+        let cos = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| x * y).sum()
+        };
+        let mut adjacent = 0.0;
+        let mut distant = 0.0;
+        let m = 100;
+        for i in 100..100 + m {
+            adjacent += cos(ds.keys.row(i), ds.keys.row(i + 1));
+            distant += cos(ds.keys.row(i), ds.keys.row(i + 300));
+        }
+        assert!(adjacent / m as f32 > distant / m as f32,
+                "adjacent keys should be more similar");
+    }
+
+    #[test]
+    fn build_respects_max_entries() {
+        let s = stream();
+        let ds = Datastore::build_mock(&s, 8, 1, 50);
+        assert_eq!(ds.len(), 50);
+    }
+}

@@ -1,0 +1,135 @@
+//! KNN-LM next-token distribution: interpolate the LM softmax with a
+//! distance-weighted distribution over the retrieved neighbours' values
+//! (Khandelwal et al. 2019):
+//!
+//! ```text
+//! p(t) = (1-λ)·softmax(logits)(t) + λ·Σ_{i: v_i = t} softmax(score/τ)(i)
+//! ```
+//!
+//! Scores here are inner products of unit vectors (monotone in -L2², so
+//! exp(score/τ) matches the paper's exp(-d²/τ) up to normalization).
+//! The argmax is deterministic (ties -> lowest token id), matching the
+//! greedy LM path so baseline and speculative serving agree token-exactly.
+
+use crate::util::Scored;
+
+/// Sparse KNN distribution over token ids: (token, probability) pairs.
+pub fn knn_distribution(neighbors: &[Scored], values: &[u32], tau: f64)
+                        -> Vec<(u32, f32)> {
+    if neighbors.is_empty() {
+        return Vec::new();
+    }
+    let max_s = neighbors
+        .iter()
+        .map(|n| n.score)
+        .fold(f32::NEG_INFINITY, f32::max);
+    let mut weights: Vec<f64> = neighbors
+        .iter()
+        .map(|n| (((n.score - max_s) as f64) / tau).exp())
+        .collect();
+    let z: f64 = weights.iter().sum();
+    for w in &mut weights {
+        *w /= z;
+    }
+    let mut acc: std::collections::BTreeMap<u32, f64> =
+        std::collections::BTreeMap::new();
+    for (n, w) in neighbors.iter().zip(&weights) {
+        *acc.entry(values[n.id as usize]).or_insert(0.0) += w;
+    }
+    acc.into_iter().map(|(t, p)| (t, p as f32)).collect()
+}
+
+/// Full softmax over the logits (f64 accumulation for stability).
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f64> =
+        logits.iter().map(|&x| ((x - max) as f64).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| (e / z) as f32).collect()
+}
+
+/// The KNN-LM next token: argmax of the interpolated distribution.
+pub fn interpolated_argmax(logits: &[f32], neighbors: &[Scored],
+                           values: &[u32], lambda: f64, tau: f64) -> u32 {
+    let mut p = softmax(logits);
+    let lam = lambda as f32;
+    for q in &mut p {
+        *q *= 1.0 - lam;
+    }
+    for (t, kp) in knn_distribution(neighbors, values, tau) {
+        p[t as usize] += lam * kp;
+    }
+    crate::util::argmax(&p).unwrap_or(0) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sc(id: u32, score: f32) -> Scored {
+        Scored { id, score }
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn knn_distribution_aggregates_same_value() {
+        // two neighbors with the same value token combine their mass
+        let values = vec![7u32, 7, 9];
+        let nb = vec![sc(0, 1.0), sc(1, 1.0), sc(2, 1.0)];
+        let d = knn_distribution(&nb, &values, 0.5);
+        assert_eq!(d.len(), 2);
+        let p7 = d.iter().find(|(t, _)| *t == 7).unwrap().1;
+        let p9 = d.iter().find(|(t, _)| *t == 9).unwrap().1;
+        assert!((p7 - 2.0 / 3.0).abs() < 1e-5);
+        assert!((p9 - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn tau_controls_sharpness() {
+        let values = vec![1u32, 2];
+        let nb = vec![sc(0, 1.0), sc(1, 0.5)];
+        let sharp = knn_distribution(&nb, &values, 0.05);
+        let soft = knn_distribution(&nb, &values, 5.0);
+        let p1_sharp = sharp.iter().find(|(t, _)| *t == 1).unwrap().1;
+        let p1_soft = soft.iter().find(|(t, _)| *t == 1).unwrap().1;
+        assert!(p1_sharp > 0.99);
+        assert!(p1_soft < 0.6);
+    }
+
+    #[test]
+    fn lambda_zero_is_pure_lm() {
+        let mut logits = vec![0.0f32; 16];
+        logits[3] = 5.0;
+        let values = vec![9u32];
+        let nb = vec![sc(0, 10.0)];
+        assert_eq!(interpolated_argmax(&logits, &nb, &values, 0.0, 0.1), 3);
+        assert_eq!(interpolated_argmax(&logits, &nb, &values, 1.0, 0.1), 9);
+    }
+
+    #[test]
+    fn empty_neighbors_falls_back_to_lm() {
+        let mut logits = vec![0.0f32; 8];
+        logits[5] = 2.0;
+        assert_eq!(interpolated_argmax(&logits, &[], &[], 0.5, 0.1), 5);
+    }
+
+    #[test]
+    fn interpolation_shifts_argmax() {
+        // LM slightly prefers token 2; strong KNN mass on token 4 wins at
+        // high lambda.
+        let mut logits = vec![0.0f32; 8];
+        logits[2] = 1.0;
+        logits[4] = 0.8;
+        let values = vec![4u32, 4];
+        let nb = vec![sc(0, 1.0), sc(1, 1.0)];
+        assert_eq!(interpolated_argmax(&logits, &nb, &values, 0.0, 0.1), 2);
+        assert_eq!(interpolated_argmax(&logits, &nb, &values, 0.6, 0.1), 4);
+    }
+}

@@ -1,0 +1,12 @@
+//! KNN-LM serving (paper §5.3): datastore construction, distance-weighted
+//! interpolation, and speculative serving with relaxed verification.
+
+pub mod cache;
+pub mod datastore;
+pub mod interpolate;
+pub mod serve;
+
+pub use cache::KnnCache;
+pub use datastore::Datastore;
+pub use interpolate::{interpolated_argmax, knn_distribution, softmax};
+pub use serve::{KnnLmBaseline, KnnLmSpec, KnnServeOptions};

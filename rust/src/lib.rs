@@ -1,0 +1,37 @@
+//! # RaLMSpec — speculative retrieval for iterative RaLM serving
+//!
+//! Rust + JAX + Pallas reproduction of *"Accelerating Retrieval-Augmented
+//! Language Model Serving with Speculation"* (Zhang et al., 2024).
+//!
+//! Layering (see DESIGN.md):
+//! * `runtime` — PJRT bridge: loads the AOT HLO-text artifacts produced by
+//!   `python/compile/aot.py` and executes them (weights + KV caches stay as
+//!   device buffers).
+//! * `lm` — generation state machine over the runtime (or a deterministic
+//!   mock for fast tests).
+//! * `retriever` / `cache` — the knowledge-base substrates (exact dense,
+//!   HNSW, BM25) and the per-request speculation cache.
+//! * `spec` — the paper's contribution: speculative retrieval, batched
+//!   verification + rollback, OS³ stride scheduling, async verification.
+//! * `baseline` — RaLMSeq (retrieve-every-k-tokens) reference serving.
+//! * `knnlm` — KNN-LM datastore serving with relaxed verification (§5.3).
+//! * `serving` — tokio request router / queue / workers (vLLM-router-like).
+//! * `eval` — regenerates every table and figure of the paper's evaluation.
+
+pub mod baseline;
+pub mod cli;
+pub mod cache;
+pub mod config;
+pub mod datagen;
+pub mod eval;
+pub mod knnlm;
+pub mod lm;
+pub mod metrics;
+pub mod retriever;
+pub mod runtime;
+pub mod serving;
+pub mod spec;
+pub mod util;
+
+pub use config::{Config, RetrieverKind};
+pub use retriever::{DocId, Retriever, SpecQuery};

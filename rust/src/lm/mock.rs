@@ -1,0 +1,232 @@
+//! Deterministic mock LM: a hash-chain "transformer" for artifact-free
+//! tests.
+//!
+//! Logits are a pure function of the full token context (FNV-1a hash ->
+//! xoshiro stream), so the mock honours the property the equivalence proofs
+//! rely on: *identical context => identical logits*, regardless of how the
+//! context was reached (prefill, decode, or rollback + replay). qproj is the
+//! HashEncoder embedding of the context tail, so mock KNN-LM datastores and
+//! queries live in one consistent space.
+//!
+//! Optional artificial per-call latencies let OS³ / async-verification
+//! tests shape the a-vs-b trade-off deterministically.
+
+use super::LanguageModel;
+use crate::datagen::{Encoder, HashEncoder};
+use crate::util::Rng;
+use std::rc::Rc;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct MockState {
+    tokens: Rc<Vec<u32>>,
+    logits: Rc<Vec<f32>>,
+    qproj: Rc<Vec<f32>>,
+}
+
+pub struct MockLm {
+    vocab: usize,
+    max_ctx: usize,
+    seed: u64,
+    encoder: HashEncoder,
+    /// Artificial latencies (zero by default).
+    pub decode_delay: Duration,
+    pub prefill_delay: Duration,
+    /// Bias strength toward repeating context tokens; higher values make
+    /// generation stay "on topic", raising retrieval locality (used to
+    /// shape speculation-accuracy scenarios in tests).
+    pub repeat_bias: f32,
+}
+
+impl MockLm {
+    pub fn new(vocab: usize, max_ctx: usize, seed: u64) -> Self {
+        Self {
+            vocab,
+            max_ctx,
+            seed,
+            encoder: HashEncoder::new(crate::runtime::RETRIEVAL_DIM, seed ^ 0xE)
+,
+            decode_delay: Duration::ZERO,
+            prefill_delay: Duration::ZERO,
+            repeat_bias: 2.0,
+        }
+    }
+
+    pub fn with_delays(mut self, prefill: Duration, decode: Duration) -> Self {
+        self.prefill_delay = prefill;
+        self.decode_delay = decode;
+        self
+    }
+
+    pub fn with_repeat_bias(mut self, bias: f32) -> Self {
+        self.repeat_bias = bias;
+        self
+    }
+
+    fn hash(&self, tokens: &[u32]) -> u64 {
+        let mut h = 0xcbf29ce484222325u64 ^ self.seed;
+        for &t in tokens {
+            h ^= t as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    fn state_for(&self, tokens: Vec<u32>) -> MockState {
+        let mut rng = Rng::new(self.hash(&tokens));
+        let mut logits: Vec<f32> =
+            (0..self.vocab).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        // Make EOS unlikely but possible; PAD never wins.
+        logits[super::PAD as usize] = -10.0;
+        logits[super::EOS as usize] -= 1.5;
+        // Bias toward recent context tokens => topical continuation =>
+        // temporal locality of retrieval, like a real LM.
+        let tail_start = tokens.len().saturating_sub(48);
+        for &t in &tokens[tail_start..] {
+            if t as usize > super::SEP as usize {
+                logits[t as usize] += self.repeat_bias * 0.25;
+            }
+        }
+        let qproj = self.encoder.encode(&tokens);
+        MockState {
+            tokens: Rc::new(tokens),
+            logits: Rc::new(logits),
+            qproj: Rc::new(qproj),
+        }
+    }
+}
+
+impl LanguageModel for MockLm {
+    type State = MockState;
+
+    fn max_ctx(&self) -> usize {
+        self.max_ctx
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn prefill(&self, tokens: &[u32]) -> anyhow::Result<MockState> {
+        if tokens.len() > self.max_ctx {
+            anyhow::bail!("context {} exceeds max_ctx {}", tokens.len(),
+                        self.max_ctx);
+        }
+        if !self.prefill_delay.is_zero() {
+            std::thread::sleep(self.prefill_delay);
+        }
+        Ok(self.state_for(tokens.to_vec()))
+    }
+
+    fn generate_greedy(&self, st: &MockState, k: usize)
+                       -> anyhow::Result<(Vec<u32>, MockState)> {
+        let mut cur = st.clone();
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            if cur.tokens.len() >= self.max_ctx {
+                break;
+            }
+            if !self.decode_delay.is_zero() {
+                std::thread::sleep(self.decode_delay);
+            }
+            let next = super::greedy(&cur.logits);
+            out.push(next);
+            cur = self.append_token(&cur, next)?;
+            if next == super::EOS {
+                break;
+            }
+        }
+        Ok((out, cur))
+    }
+
+    fn append_token(&self, st: &MockState, token: u32)
+                    -> anyhow::Result<MockState> {
+        if st.tokens.len() >= self.max_ctx {
+            anyhow::bail!("context full");
+        }
+        let mut tokens = (*st.tokens).clone();
+        tokens.push(token);
+        Ok(self.state_for(tokens))
+    }
+
+    fn logits<'a>(&self, st: &'a MockState) -> &'a [f32] {
+        &st.logits
+    }
+
+    fn qproj<'a>(&self, st: &'a MockState) -> &'a [f32] {
+        &st.qproj
+    }
+
+    fn pos(&self, st: &MockState) -> usize {
+        st.tokens.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lm() -> MockLm {
+        MockLm::new(256, 128, 42)
+    }
+
+    #[test]
+    fn same_context_same_logits() {
+        let m = lm();
+        let a = m.prefill(&[3, 4, 5]).unwrap();
+        let b = m.prefill(&[3, 4, 5]).unwrap();
+        assert_eq!(*a.logits, *b.logits);
+        assert_eq!(*a.qproj, *b.qproj);
+    }
+
+    #[test]
+    fn prefill_then_append_equals_longer_prefill() {
+        let m = lm();
+        let a = m.prefill(&[3, 4, 5]).unwrap();
+        let a2 = m.append_token(&a, 9).unwrap();
+        let b = m.prefill(&[3, 4, 5, 9]).unwrap();
+        assert_eq!(*a2.logits, *b.logits);
+        assert_eq!(m.pos(&a2), 4);
+    }
+
+    #[test]
+    fn greedy_generation_is_deterministic() {
+        let m = lm();
+        let st = m.prefill(&[10, 20, 30]).unwrap();
+        let (t1, _) = m.generate_greedy(&st, 8).unwrap();
+        let (t2, _) = m.generate_greedy(&st, 8).unwrap();
+        assert_eq!(t1, t2);
+        assert!(t1.len() <= 8);
+        assert!(t1.iter().all(|&t| (t as usize) < 256 && t != super::super::PAD));
+    }
+
+    #[test]
+    fn snapshot_rollback_via_clone() {
+        let m = lm();
+        let st = m.prefill(&[1, 2, 3]).unwrap();
+        let snap = st.clone();
+        let (_, advanced) = m.generate_greedy(&st, 4).unwrap();
+        assert!(m.pos(&advanced) > m.pos(&snap));
+        // replay from snapshot gives identical results
+        let (t1, _) = m.generate_greedy(&snap, 4).unwrap();
+        let (t2, _) = m.generate_greedy(&snap, 4).unwrap();
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn context_limit_enforced() {
+        let m = MockLm::new(64, 8, 1);
+        assert!(m.prefill(&[0; 9]).is_err());
+        let st = m.prefill(&[5; 8]).unwrap();
+        let (toks, _) = m.generate_greedy(&st, 4).unwrap();
+        assert!(toks.is_empty());
+    }
+
+    #[test]
+    fn qproj_is_unit_norm() {
+        let m = lm();
+        let st = m.prefill(&[7, 8, 9, 10]).unwrap();
+        let n: f32 = st.qproj.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-4);
+    }
+}

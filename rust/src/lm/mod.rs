@@ -1,0 +1,62 @@
+//! Language-model abstraction used by every pipeline.
+//!
+//! Two implementations share the [`LanguageModel`] trait:
+//!   * `runtime::PjrtLm` — the real AOT artifacts executed via PJRT;
+//!   * [`mock::MockLm`] — a deterministic hash-chain LM for fast unit,
+//!     integration, and property tests (no artifacts required).
+//!
+//! States are cheap-to-clone handles (`Rc` around the KV literal / token
+//! history); cloning a state is how the speculation pipeline snapshots for
+//! rollback — an old handle stays valid because decode always produces a
+//! *new* state.
+
+pub mod mock;
+pub mod state;
+
+pub use mock::MockLm;
+pub use state::GenState;
+
+/// Reserved token ids (must match datagen::corpus).
+pub const PAD: u32 = 0;
+pub const EOS: u32 = 1;
+pub const SEP: u32 = 2;
+
+pub trait LanguageModel {
+    /// Immutable per-position state handle. Clone = snapshot.
+    type State: Clone;
+
+    /// Maximum total context (prefill + decoded tokens).
+    fn max_ctx(&self) -> usize;
+
+    fn vocab(&self) -> usize;
+
+    /// Process a full context; the returned state is positioned after the
+    /// last token with next-token logits available.
+    fn prefill(&self, tokens: &[u32]) -> anyhow::Result<Self::State>;
+
+    /// Greedy-generate up to `k` tokens (stops early at EOS or context
+    /// limit). Returns the generated tokens and the advanced state.
+    fn generate_greedy(&self, st: &Self::State, k: usize)
+                       -> anyhow::Result<(Vec<u32>, Self::State)>;
+
+    /// Append one externally-chosen token (KNN-LM interpolation picks the
+    /// token outside the LM). Returns the advanced state.
+    fn append_token(&self, st: &Self::State, token: u32)
+                    -> anyhow::Result<Self::State>;
+
+    /// Next-token logits at this state (length = vocab).
+    fn logits<'a>(&self, st: &'a Self::State) -> &'a [f32];
+
+    /// Retrieval-space projection of the current hidden state (KNN-LM
+    /// query vector), unit-norm, length = retrieval dim.
+    fn qproj<'a>(&self, st: &'a Self::State) -> &'a [f32];
+
+    /// Number of tokens currently in context.
+    fn pos(&self, st: &Self::State) -> usize;
+}
+
+/// Deterministic greedy pick matching the in-graph `jnp.argmax` (ties ->
+/// lowest id).
+pub fn greedy(logits: &[f32]) -> u32 {
+    crate::util::argmax(logits).unwrap_or(0) as u32
+}

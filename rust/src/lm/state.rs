@@ -1,0 +1,273 @@
+//! Per-request generation state: document prefix + question + generated
+//! tokens, with snapshot/rollback — the mutable substrate the speculation
+//! pipeline drives.
+//!
+//! Context layout (naive iterative RaLM, Ram et al. 2023): the latest
+//! retrieved document chunk is *prepended* and replaces the previous one,
+//! so a document switch invalidates the KV cache and forces a re-prefill;
+//! generating within an unchanged document proceeds incrementally. This is
+//! exactly the G-cost structure the paper's baseline has.
+
+use super::{LanguageModel, EOS, SEP};
+use crate::retriever::DocId;
+
+#[derive(Debug, Clone)]
+pub struct GenState<S> {
+    /// Current document id (None until first retrieval).
+    pub doc_id: Option<DocId>,
+    doc_tokens: Vec<u32>,
+    question: Vec<u32>,
+    pub generated: Vec<u32>,
+    lm_state: S,
+    pub done: bool,
+    max_doc_tokens: usize,
+    max_new: usize,
+}
+
+/// Rollback snapshot: cheap (LM states are Rc handles).
+#[derive(Debug, Clone)]
+pub struct Snapshot<S> {
+    doc_id: Option<DocId>,
+    doc_tokens: Vec<u32>,
+    generated_len: usize,
+    lm_state: S,
+    done: bool,
+}
+
+impl<S: Clone> GenState<S> {
+    /// Prefill the initial context (doc may be empty before the first
+    /// retrieval).
+    pub fn new<L: LanguageModel<State = S>>(
+        lm: &L, doc_id: Option<DocId>, doc_tokens: &[u32], question: &[u32],
+        max_doc_tokens: usize, max_new: usize) -> anyhow::Result<Self> {
+        let doc_tokens: Vec<u32> =
+            doc_tokens.iter().copied().take(max_doc_tokens).collect();
+        let mut st = Self {
+            doc_id,
+            doc_tokens,
+            question: question.to_vec(),
+            generated: Vec::new(),
+            lm_state: lm.prefill(&[])?, // replaced below
+            done: false,
+            max_doc_tokens,
+            max_new,
+        };
+        st.lm_state = lm.prefill(&st.context())?;
+        Ok(st)
+    }
+
+    /// Full token context in prompt order.
+    pub fn context(&self) -> Vec<u32> {
+        let mut ctx = Vec::with_capacity(
+            self.doc_tokens.len() + self.question.len() + self.generated.len()
+                + 2,
+        );
+        ctx.extend_from_slice(&self.doc_tokens);
+        ctx.push(SEP);
+        ctx.extend_from_slice(&self.question);
+        ctx.push(SEP);
+        ctx.extend_from_slice(&self.generated);
+        ctx
+    }
+
+    /// Tokens available as retrieval-query context (question + generated;
+    /// the query should describe the information need, not the stale doc).
+    pub fn query_window(&self, n: usize) -> Vec<u32> {
+        let mut w: Vec<u32> = Vec::with_capacity(
+            self.question.len() + self.generated.len());
+        w.extend_from_slice(&self.question);
+        w.extend_from_slice(&self.generated);
+        let start = w.len().saturating_sub(n);
+        w.split_off(start)
+    }
+
+    /// Switch to a new document. Returns true (and re-prefills) on change.
+    pub fn set_doc<L: LanguageModel<State = S>>(
+        &mut self, lm: &L, doc_id: DocId, doc_tokens: &[u32])
+        -> anyhow::Result<bool> {
+        if self.doc_id == Some(doc_id) {
+            return Ok(false);
+        }
+        self.doc_id = Some(doc_id);
+        self.doc_tokens =
+            doc_tokens.iter().copied().take(self.max_doc_tokens).collect();
+        self.lm_state = lm.prefill(&self.context())?;
+        Ok(true)
+    }
+
+    /// Greedy-generate up to k tokens (caps at max_new; sets `done` on EOS
+    /// or budget exhaustion). Returns how many tokens were added.
+    pub fn generate<L: LanguageModel<State = S>>(&mut self, lm: &L, k: usize)
+                                                 -> anyhow::Result<usize> {
+        if self.done {
+            return Ok(0);
+        }
+        let budget = self.max_new.saturating_sub(self.generated.len());
+        let room = lm.max_ctx().saturating_sub(lm.pos(&self.lm_state));
+        let k = k.min(budget).min(room);
+        if k == 0 {
+            self.done = true;
+            return Ok(0);
+        }
+        let (tokens, new_state) = lm.generate_greedy(&self.lm_state, k)?;
+        self.lm_state = new_state;
+        let n = tokens.len();
+        for t in tokens {
+            self.generated.push(t);
+            if t == EOS {
+                self.done = true;
+            }
+        }
+        if self.generated.len() >= self.max_new
+            || lm.pos(&self.lm_state) >= lm.max_ctx()
+        {
+            self.done = true;
+        }
+        Ok(n)
+    }
+
+    pub fn lm_state(&self) -> &S {
+        &self.lm_state
+    }
+
+    /// Replace the LM state (KNN-LM appends tokens it chose itself).
+    pub fn push_token<L: LanguageModel<State = S>>(
+        &mut self, lm: &L, token: u32) -> anyhow::Result<()> {
+        if self.done {
+            return Ok(());
+        }
+        if lm.pos(&self.lm_state) >= lm.max_ctx() {
+            self.done = true;
+            return Ok(());
+        }
+        self.lm_state = lm.append_token(&self.lm_state, token)?;
+        self.generated.push(token);
+        if token == EOS || self.generated.len() >= self.max_new
+            || lm.pos(&self.lm_state) >= lm.max_ctx()
+        {
+            self.done = true;
+        }
+        Ok(())
+    }
+
+    pub fn snapshot(&self) -> Snapshot<S> {
+        Snapshot {
+            doc_id: self.doc_id,
+            doc_tokens: self.doc_tokens.clone(),
+            generated_len: self.generated.len(),
+            lm_state: self.lm_state.clone(),
+            done: self.done,
+        }
+    }
+
+    /// Restore to a snapshot (mis-speculation rollback). Generated tokens
+    /// after the snapshot are discarded; returns how many were discarded.
+    pub fn rollback(&mut self, snap: &Snapshot<S>) -> usize {
+        let wasted = self.generated.len().saturating_sub(snap.generated_len);
+        self.doc_id = snap.doc_id;
+        self.doc_tokens = snap.doc_tokens.clone();
+        self.generated.truncate(snap.generated_len);
+        self.lm_state = snap.lm_state.clone();
+        self.done = snap.done;
+        wasted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lm::MockLm;
+
+    fn lm() -> MockLm {
+        MockLm::new(256, 200, 7)
+    }
+
+    fn state(lm: &MockLm) -> GenState<crate::lm::mock::MockState> {
+        GenState::new(lm, Some(0), &[50, 51, 52], &[60, 61], 16, 24).unwrap()
+    }
+
+    #[test]
+    fn context_layout() {
+        let m = lm();
+        let st = state(&m);
+        let ctx = st.context();
+        assert_eq!(&ctx[..3], &[50, 51, 52]);
+        assert_eq!(ctx[3], SEP);
+        assert_eq!(&ctx[4..6], &[60, 61]);
+        assert_eq!(ctx[6], SEP);
+    }
+
+    #[test]
+    fn doc_truncated_to_max() {
+        let m = lm();
+        let long: Vec<u32> = (100..180).collect();
+        let st = GenState::new(&m, Some(1), &long, &[5], 16, 8).unwrap();
+        assert_eq!(st.context().iter().take_while(|&&t| t != SEP).count(), 16);
+    }
+
+    #[test]
+    fn set_doc_same_id_is_noop() {
+        let m = lm();
+        let mut st = state(&m);
+        assert!(!st.set_doc(&m, 0, &[99, 98]).unwrap());
+        assert!(st.set_doc(&m, 3, &[99, 98]).unwrap());
+        assert_eq!(st.doc_id, Some(3));
+        let ctx = st.context();
+        assert_eq!(&ctx[..2], &[99, 98]);
+    }
+
+    #[test]
+    fn generate_respects_budget_and_done() {
+        let m = lm();
+        let mut st = state(&m);
+        let mut total = 0;
+        while !st.done {
+            total += st.generate(&m, 4).unwrap();
+        }
+        assert!(total <= 24);
+        assert_eq!(total, st.generated.len());
+    }
+
+    #[test]
+    fn rollback_restores_everything() {
+        let m = lm();
+        let mut st = state(&m);
+        st.generate(&m, 4).unwrap();
+        let snap = st.snapshot();
+        let before = (st.generated.clone(), st.doc_id, st.context());
+        st.set_doc(&m, 9, &[70, 71]).unwrap();
+        st.generate(&m, 4).unwrap();
+        let wasted = st.rollback(&snap);
+        assert_eq!(wasted, st.generated.len() + wasted - before.0.len());
+        assert_eq!(st.generated, before.0);
+        assert_eq!(st.doc_id, before.1);
+        assert_eq!(st.context(), before.2);
+    }
+
+    #[test]
+    fn rollback_then_replay_is_deterministic() {
+        let m = lm();
+        let mut st = state(&m);
+        let snap = st.snapshot();
+        st.generate(&m, 8).unwrap();
+        let first = st.generated.clone();
+        st.rollback(&snap);
+        st.generate(&m, 8).unwrap();
+        assert_eq!(st.generated, first);
+    }
+
+    #[test]
+    fn query_window_takes_tail() {
+        let m = lm();
+        let mut st = state(&m);
+        st.generate(&m, 8).unwrap();
+        let w = st.query_window(4);
+        assert_eq!(w.len(), 4);
+        let gen_tail: Vec<u32> =
+            st.generated[st.generated.len() - 4..].to_vec();
+        assert_eq!(w, gen_tail);
+        // window larger than available = question + generated
+        let w2 = st.query_window(1000);
+        assert_eq!(w2.len(), 2 + st.generated.len());
+    }
+}

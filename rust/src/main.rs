@@ -1,0 +1,15 @@
+//! RaLMSpec CLI — leader entrypoint.
+//!
+//! Hand-rolled argument parsing (no clap on this offline image). The heavy
+//! lifting lives in the library: `ralmspec::eval` (experiment drivers),
+//! `ralmspec::serving` (router).
+
+use ralmspec::cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = cli::run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

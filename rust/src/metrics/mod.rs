@@ -1,0 +1,173 @@
+//! Latency decomposition and counters.
+//!
+//! The paper reports end-to-end latency split into language-model
+//! generation (G) and retrieval (R) — Fig 4's stacked bars. We track those
+//! plus the speculation-specific components: cache-lookup time (C),
+//! verification wait (V), rollback counts, speculation accuracy, and the
+//! stride trajectory chosen by OS³.
+
+use std::time::{Duration, Instant};
+
+/// One timeline event for Fig-1(c)/Fig-3-style traces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Prefill,
+    SpecStep,
+    Verify,
+    Rollback,
+    Correct,
+}
+
+impl EventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Prefill => "prefill",
+            EventKind::SpecStep => "spec_step",
+            EventKind::Verify => "verify",
+            EventKind::Rollback => "rollback",
+            EventKind::Correct => "correct",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    /// Offset from request start.
+    pub start: Duration,
+    pub dur: Duration,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ReqMetrics {
+    /// Wall-clock total for the request.
+    pub total: Duration,
+    /// LM generation time (prefill + decode via PJRT / mock) — "G".
+    pub generate: Duration,
+    /// Knowledge-base retrieval time (incl. batched verification) — "R".
+    pub retrieve: Duration,
+    /// Local speculation-cache lookup time — part of the speculation step.
+    pub cache: Duration,
+    /// Time spent blocked on an in-flight async verification.
+    pub verify_wait: Duration,
+
+    pub prefills: u32,
+    pub decode_tokens: u32,
+    /// KB calls (a batched verification of stride s counts once) and total
+    /// queries inside them (counts s).
+    pub kb_calls: u32,
+    pub kb_queries: u32,
+    pub rollbacks: u32,
+    /// Speculation steps taken / verified correct.
+    pub spec_steps: u32,
+    pub spec_correct: u32,
+    /// Tokens discarded by rollbacks (speculation overhead).
+    pub wasted_tokens: u32,
+    /// Stride used at each verification step (OS³ trajectory).
+    pub strides: Vec<u32>,
+    /// Generated output (for equivalence checks).
+    pub tokens_out: Vec<u32>,
+    /// Coarse per-phase timeline (Fig 1c / Fig 3 traces).
+    pub events: Vec<TraceEvent>,
+}
+
+impl ReqMetrics {
+    /// Record a timeline event given the request-start stopwatch.
+    pub fn event(&mut self, kind: EventKind, req_start: &Stopwatch,
+                 dur: Duration) {
+        let end = req_start.elapsed();
+        self.events.push(TraceEvent {
+            kind,
+            start: end.saturating_sub(dur),
+            dur,
+        });
+    }
+}
+
+impl ReqMetrics {
+    pub fn spec_accuracy(&self) -> f64 {
+        if self.spec_steps == 0 {
+            return 0.0;
+        }
+        self.spec_correct as f64 / self.spec_steps as f64
+    }
+
+    /// Merge (for aggregate reporting).
+    pub fn add(&mut self, other: &ReqMetrics) {
+        self.total += other.total;
+        self.generate += other.generate;
+        self.retrieve += other.retrieve;
+        self.cache += other.cache;
+        self.verify_wait += other.verify_wait;
+        self.prefills += other.prefills;
+        self.decode_tokens += other.decode_tokens;
+        self.kb_calls += other.kb_calls;
+        self.kb_queries += other.kb_queries;
+        self.rollbacks += other.rollbacks;
+        self.spec_steps += other.spec_steps;
+        self.spec_correct += other.spec_correct;
+        self.wasted_tokens += other.wasted_tokens;
+    }
+}
+
+/// Scoped timer: `let _t = Stopwatch::start(); ... t.elapsed()`.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+/// Time a closure, accumulating into `slot`.
+#[inline]
+pub fn timed<T>(slot: &mut Duration, f: impl FnOnce() -> T) -> T {
+    let t = Instant::now();
+    let out = f();
+    *slot += t.elapsed();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_accumulates() {
+        let mut slot = Duration::ZERO;
+        let x = timed(&mut slot, || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(x, 42);
+        assert!(slot >= Duration::from_millis(4));
+        timed(&mut slot, || ());
+        assert!(slot >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn spec_accuracy_edges() {
+        let mut m = ReqMetrics::default();
+        assert_eq!(m.spec_accuracy(), 0.0);
+        m.spec_steps = 4;
+        m.spec_correct = 3;
+        assert!((m.spec_accuracy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_merges_counters() {
+        let mut a = ReqMetrics { prefills: 1, decode_tokens: 10,
+                                 ..Default::default() };
+        let b = ReqMetrics { prefills: 2, decode_tokens: 5, rollbacks: 1,
+                             ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.prefills, 3);
+        assert_eq!(a.decode_tokens, 15);
+        assert_eq!(a.rollbacks, 1);
+    }
+}

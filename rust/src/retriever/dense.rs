@@ -1,0 +1,245 @@
+//! Exact dense retriever ("EDR"): brute-force inner-product top-k over the
+//! corpus embedding matrix — the FAISS `IndexFlatIP` role in the paper.
+//!
+//! The scan is doc-major so each corpus row is read exactly once per batch:
+//! batched retrieval (the verification step) amortizes the full memory pass
+//! over all queries, which is why total batched latency is near-constant in
+//! batch size (paper Fig 6a) — the effect RaLMSpec's saving rests on.
+
+use super::{DocId, Retriever, SpecQuery};
+use crate::util::{Scored, TopK};
+use std::sync::Arc;
+
+/// Row-major [n, dim] embedding matrix shared across retrievers/caches.
+#[derive(Debug)]
+pub struct EmbeddingMatrix {
+    pub dim: usize,
+    pub data: Vec<f32>,
+}
+
+impl EmbeddingMatrix {
+    pub fn new(dim: usize, data: Vec<f32>) -> Self {
+        assert!(dim > 0 && data.len() % dim == 0,
+                "embedding matrix shape mismatch");
+        Self { dim, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: DocId) -> &[f32] {
+        let d = self.dim;
+        &self.data[i as usize * d..(i as usize + 1) * d]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Unrolled dot product over the (fixed, small) retrieval dimension.
+/// Four accumulators let the compiler keep independent FMA chains in
+/// flight — this is the EDR hot loop (see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot_chunked(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+pub struct DenseExact {
+    emb: Arc<EmbeddingMatrix>,
+}
+
+impl DenseExact {
+    pub fn new(emb: Arc<EmbeddingMatrix>) -> Self {
+        Self { emb }
+    }
+
+    pub fn embeddings(&self) -> &Arc<EmbeddingMatrix> {
+        &self.emb
+    }
+}
+
+/// Multi-query blocked scan: scores every corpus row against up to `LANES`
+/// queries with the row loaded once. Queries are packed column-major
+/// (qt[j*LANES + b]) so the inner loop is a LANES-wide FMA that
+/// auto-vectorizes; per-row arithmetic intensity rises from 2 FLOP/byte
+/// (single query) to 2*B FLOP/byte — this is what makes batched
+/// verification near-free for EDR (paper Fig 6a / §A.1).
+const LANES: usize = 8;
+
+fn scan_multi(emb: &EmbeddingMatrix, queries: &[&[f32]], heaps: &mut [TopK]) {
+    debug_assert_eq!(queries.len(), heaps.len());
+    let d = emb.dim;
+    for (block_start, qblock) in (0..queries.len())
+        .step_by(LANES)
+        .zip(queries.chunks(LANES))
+    {
+        let b = qblock.len();
+        // Column-major packed query block, zero-padded to LANES.
+        let mut qt = vec![0.0f32; d * LANES];
+        for (bi, q) in qblock.iter().enumerate() {
+            for j in 0..d {
+                qt[j * LANES + bi] = q[j];
+            }
+        }
+        let mut scores = [0.0f32; LANES];
+        for (i, row) in emb.data.chunks_exact(d).enumerate() {
+            scores = [0.0; LANES];
+            for j in 0..d {
+                let x = row[j];
+                let qrow = &qt[j * LANES..(j + 1) * LANES];
+                for (s, &qv) in scores.iter_mut().zip(qrow) {
+                    *s += x * qv;
+                }
+            }
+            for bi in 0..b {
+                heaps[block_start + bi].push(i as DocId, scores[bi]);
+            }
+        }
+        let _ = scores;
+    }
+}
+
+impl Retriever for DenseExact {
+    fn retrieve_topk(&self, q: &SpecQuery, k: usize) -> Vec<Scored> {
+        // MUST share the numeric path (operation order) with
+        // retrieve_batch: output equivalence relies on the verification
+        // step's batched scores reproducing the baseline's single-query
+        // scores bit-for-bit. (Found the hard way — a 4-accumulator
+        // single-query kernel rounds differently from the lane kernel and
+        // occasionally flips a near-tied top-1.)
+        self.retrieve_batch(std::slice::from_ref(q), k)
+            .pop()
+            .unwrap_or_default()
+    }
+
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        // One pass over the corpus for the whole batch: read each row once,
+        // score it against every query (blocked multi-query kernel). This
+        // is the batched-verification primitive whose near-constant total
+        // cost drives RaLMSpec.
+        for q in qs {
+            assert_eq!(q.dense.len(), self.emb.dim, "query dim mismatch");
+        }
+        let mut heaps: Vec<TopK> =
+            qs.iter().map(|_| TopK::new(k.max(1))).collect();
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.dense.as_slice()).collect();
+        scan_multi(&self.emb, &qrefs, &mut heaps);
+        heaps.into_iter().map(|h| h.into_sorted()).collect()
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
+        dot_chunked(&q.dense, self.emb.row(doc))
+    }
+
+    fn len(&self) -> usize {
+        self.emb.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "EDR(flat)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_matrix(n: usize, d: usize, seed: u64) -> Arc<EmbeddingMatrix> {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            data.extend(rng.unit_vector(d));
+        }
+        Arc::new(EmbeddingMatrix::new(d, data))
+    }
+
+    #[test]
+    fn dot_chunked_matches_naive() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 7, 8, 17, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot_chunked(&a, &b) - naive).abs() < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn top1_is_true_argmax() {
+        let emb = random_matrix(500, 32, 2);
+        let r = DenseExact::new(emb.clone());
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let q = SpecQuery::dense_only(rng.unit_vector(32));
+            let got = r.retrieve(&q).unwrap();
+            let mut best = (0u32, f32::NEG_INFINITY);
+            for i in 0..emb.len() {
+                let s = dot_chunked(&q.dense, emb.row(i as u32));
+                if s > best.1 {
+                    best = (i as u32, s);
+                }
+            }
+            assert_eq!(got.id, best.0);
+        }
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let emb = random_matrix(300, 16, 4);
+        let r = DenseExact::new(emb);
+        let mut rng = Rng::new(5);
+        let qs: Vec<SpecQuery> =
+            (0..6).map(|_| SpecQuery::dense_only(rng.unit_vector(16))).collect();
+        let batch = r.retrieve_batch(&qs, 5);
+        for (q, b) in qs.iter().zip(&batch) {
+            let seq = r.retrieve_topk(q, 5);
+            assert_eq!(seq.iter().map(|s| s.id).collect::<Vec<_>>(),
+                       b.iter().map(|s| s.id).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn retrieving_own_embedding_returns_self() {
+        let emb = random_matrix(200, 24, 6);
+        let r = DenseExact::new(emb.clone());
+        for i in [0u32, 57, 199] {
+            let q = SpecQuery::dense_only(emb.row(i).to_vec());
+            assert_eq!(r.retrieve(&q).unwrap().id, i);
+        }
+    }
+
+    #[test]
+    fn score_doc_consistent_with_ranking() {
+        let emb = random_matrix(100, 8, 7);
+        let r = DenseExact::new(emb);
+        let mut rng = Rng::new(8);
+        let q = SpecQuery::dense_only(rng.unit_vector(8));
+        let top = r.retrieve_topk(&q, 10);
+        for w in top.windows(2) {
+            // score_doc uses the unrolled kernel; ranking must agree with
+            // the lane kernel up to FP noise.
+            assert!(r.score_doc(&q, w[0].id)
+                        >= r.score_doc(&q, w[1].id) - 1e-5);
+        }
+        assert!((top[0].score - r.score_doc(&q, top[0].id)).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,420 @@
+//! Approximate dense retriever ("ADR"): Hierarchical Navigable Small World
+//! graphs (Malkov & Yashunin), built from scratch over the same embedding
+//! matrix as the exact scan — the DPR-HNSW role in the paper.
+//!
+//! Similarity = inner product (vectors are unit-norm, so this is cosine).
+//! Search cost is per-query (a graph walk), so batched retrieval scales
+//! linearly in batch size with a fixed per-call intercept — exactly the
+//! ADR latency profile of paper Fig 6b.
+//!
+//! Determinism: node levels come from a per-id seeded RNG and neighbor
+//! lists are order-stable, so the index (and thus every experiment) is
+//! reproducible bit-for-bit.
+
+use super::dense::{dot_chunked, EmbeddingMatrix};
+use super::{DocId, Retriever, SpecQuery};
+use crate::util::{Rng, Scored, TopK};
+use std::cell::RefCell;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+#[derive(Debug, Clone, Copy)]
+struct Cand {
+    id: u32,
+    score: f32,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.score == other.score && self.id == other.id
+    }
+}
+impl Eq for Cand {}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // max-heap by score, ties toward lower id
+        self.score
+            .total_cmp(&other.score)
+            .then(other.id.cmp(&self.id))
+    }
+}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-wrapper so a BinaryHeap<MinCand> pops the *worst* kept result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct MinCand(Cand);
+impl Ord for MinCand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.0.cmp(&self.0)
+    }
+}
+impl PartialOrd for MinCand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+pub struct Hnsw {
+    emb: Arc<EmbeddingMatrix>,
+    m: usize,
+    m0: usize,
+    ef_search: usize,
+    entry: u32,
+    max_level: usize,
+    /// neighbors[node][level] -> neighbor ids.
+    neighbors: Vec<Vec<Vec<u32>>>,
+}
+
+thread_local! {
+    /// Generation-stamped visited set, reused across searches on a thread.
+    static VISITED: RefCell<(Vec<u32>, u32)> = const { RefCell::new((Vec::new(), 0)) };
+}
+
+impl Hnsw {
+    /// Build the graph by sequential insertion.
+    pub fn build(emb: Arc<EmbeddingMatrix>, m: usize, ef_construction: usize,
+                 ef_search: usize, seed: u64) -> Self {
+        assert!(m >= 2);
+        let n = emb.len();
+        let ml = 1.0 / (m as f64).ln();
+        let mut levels = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut rng = Rng::new(seed ^ ((i as u64 + 1) * 0x517C_C1B7));
+            let u = rng.next_f64().max(1e-12);
+            levels.push(((-u.ln() * ml) as usize).min(12));
+        }
+        let mut index = Self {
+            emb,
+            m,
+            m0: 2 * m,
+            ef_search,
+            entry: 0,
+            max_level: 0,
+            neighbors: Vec::with_capacity(n),
+        };
+        for i in 0..n {
+            index.insert(i as u32, levels[i], ef_construction);
+        }
+        index
+    }
+
+    #[inline]
+    fn sim(&self, q: &[f32], id: u32) -> f32 {
+        dot_chunked(q, self.emb.row(id))
+    }
+
+    /// Heuristic neighbor selection (Malkov & Yashunin Alg. 4): keep a
+    /// candidate only if it is closer to the query point than to every
+    /// already-selected neighbor. This preserves inter-cluster bridges —
+    /// plain top-M selection fragments clustered data (a from-scratch
+    /// implementation lesson; see EXPERIMENTS.md §Perf notes).
+    fn select_heuristic(&self, cands: &[Cand], m: usize) -> Vec<u32> {
+        let mut selected: Vec<Cand> = Vec::with_capacity(m);
+        let mut skipped: Vec<u32> = Vec::new();
+        for &c in cands {
+            if selected.len() >= m {
+                break;
+            }
+            let c_vec = self.emb.row(c.id);
+            let diverse = selected
+                .iter()
+                .all(|s| dot_chunked(c_vec, self.emb.row(s.id)) < c.score);
+            if diverse {
+                selected.push(c);
+            } else {
+                skipped.push(c.id);
+            }
+        }
+        let mut out: Vec<u32> = selected.iter().map(|c| c.id).collect();
+        // keepPrunedConnections: fill up with the best skipped candidates.
+        for id in skipped {
+            if out.len() >= m {
+                break;
+            }
+            out.push(id);
+        }
+        out
+    }
+
+    fn insert(&mut self, id: u32, level: usize, ef_c: usize) {
+        self.neighbors.push(vec![Vec::new(); level + 1]);
+        if id == 0 {
+            self.entry = 0;
+            self.max_level = level;
+            return;
+        }
+        let q = self.emb.row(id).to_vec();
+        let mut eps: Vec<u32> = vec![self.entry];
+        // Greedy descent through layers above the node's level.
+        let top = self.max_level;
+        for l in ((level + 1)..=top).rev() {
+            eps[0] = self.greedy_step(&q, eps[0], l);
+        }
+        // Insert at each layer <= level; the full candidate set of one
+        // layer seeds the search at the next (Malkov & Yashunin Alg. 1).
+        for l in (0..=level.min(top)).rev() {
+            let cands = self.search_layer(&q, &eps, ef_c, l);
+            let max_m = if l == 0 { self.m0 } else { self.m };
+            let selected = self.select_heuristic(&cands, self.m);
+            if !cands.is_empty() {
+                eps = cands.iter().map(|c| c.id).collect();
+            }
+            for &nb in &selected {
+                self.neighbors[id as usize][l].push(nb);
+                self.neighbors[nb as usize][l].push(id);
+                if self.neighbors[nb as usize][l].len() > max_m {
+                    // Re-select the neighbor's list with the same heuristic.
+                    let nb_vec = self.emb.row(nb).to_vec();
+                    let mut scored: Vec<Cand> = self.neighbors[nb as usize][l]
+                        .iter()
+                        .map(|&x| Cand { id: x, score: self.sim(&nb_vec, x) })
+                        .collect();
+                    scored.sort_by(|a, b| b.cmp(a));
+                    self.neighbors[nb as usize][l] =
+                        self.select_heuristic(&scored, max_m);
+                }
+            }
+        }
+        if level > self.max_level {
+            self.max_level = level;
+            self.entry = id;
+        }
+    }
+
+    /// One greedy hill-climb step chain at layer `l`.
+    fn greedy_step(&self, q: &[f32], mut ep: u32, l: usize) -> u32 {
+        let mut best = self.sim(q, ep);
+        loop {
+            let mut improved = false;
+            for &nb in &self.neighbors[ep as usize][l] {
+                let s = self.sim(q, nb);
+                if s > best {
+                    best = s;
+                    ep = nb;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return ep;
+            }
+        }
+    }
+
+    /// Beam search at one layer; returns candidates sorted best-first.
+    fn search_layer(&self, q: &[f32], eps: &[u32], ef: usize, l: usize)
+                    -> Vec<Cand> {
+        VISITED.with(|cell| {
+            let (ref mut stamps, ref mut gen) = *cell.borrow_mut();
+            if stamps.len() < self.neighbors.len() {
+                stamps.resize(self.neighbors.len(), 0);
+            }
+            *gen = gen.wrapping_add(1);
+            if *gen == 0 {
+                stamps.fill(0);
+                *gen = 1;
+            }
+            let gen = *gen;
+
+            let mut cand_heap: BinaryHeap<Cand> = BinaryHeap::new();
+            let mut result: BinaryHeap<MinCand> = BinaryHeap::new();
+            for &ep in eps {
+                if stamps[ep as usize] == gen {
+                    continue;
+                }
+                stamps[ep as usize] = gen;
+                let c = Cand { id: ep, score: self.sim(q, ep) };
+                cand_heap.push(c);
+                result.push(MinCand(c));
+            }
+            while let Some(c) = cand_heap.pop() {
+                let worst = result.peek().map(|m| m.0.score)
+                    .unwrap_or(f32::NEG_INFINITY);
+                if result.len() >= ef && c.score < worst {
+                    break;
+                }
+                // Clone the neighbor list id slice (short) to avoid borrow
+                // issues; lists are <= m0 long.
+                for idx in 0..self.neighbors[c.id as usize][l].len() {
+                    let nb = self.neighbors[c.id as usize][l][idx];
+                    if stamps[nb as usize] == gen {
+                        continue;
+                    }
+                    stamps[nb as usize] = gen;
+                    let s = self.sim(q, nb);
+                    let worst = result.peek().map(|m| m.0.score)
+                        .unwrap_or(f32::NEG_INFINITY);
+                    if result.len() < ef || s > worst {
+                        let cand = Cand { id: nb, score: s };
+                        cand_heap.push(cand);
+                        result.push(MinCand(cand));
+                        if result.len() > ef {
+                            result.pop();
+                        }
+                    }
+                }
+            }
+            let mut out: Vec<Cand> = result.into_iter().map(|m| m.0).collect();
+            out.sort_by(|a, b| b.cmp(a));
+            out
+        })
+    }
+
+    /// Full search: descend to layer 0, beam with ef, return top-k.
+    pub fn search(&self, q: &[f32], k: usize, ef: usize) -> Vec<Scored> {
+        if self.neighbors.is_empty() {
+            return Vec::new();
+        }
+        let mut ep = self.entry;
+        for l in (1..=self.max_level).rev() {
+            ep = self.greedy_step(q, ep, l);
+        }
+        let cands = self.search_layer(q, &[ep], ef.max(k), 0);
+        let mut tk = TopK::new(k.max(1));
+        for c in cands {
+            tk.push(c.id, c.score);
+        }
+        tk.into_sorted()
+    }
+}
+
+impl Retriever for Hnsw {
+    fn retrieve_topk(&self, q: &SpecQuery, k: usize) -> Vec<Scored> {
+        assert_eq!(q.dense.len(), self.emb.dim, "query dim mismatch");
+        self.search(&q.dense, k, self.ef_search)
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
+        // Exact metric: the cache scores candidates exactly even though the
+        // graph walk is approximate (same as scoring visited nodes in HNSW).
+        dot_chunked(&q.dense, self.emb.row(doc))
+    }
+
+    fn len(&self) -> usize {
+        self.emb.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "ADR(hnsw)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retriever::dense::DenseExact;
+    use crate::util::Rng;
+
+    fn clustered_matrix(n: usize, d: usize, clusters: usize, seed: u64)
+                        -> Arc<EmbeddingMatrix> {
+        let mut rng = Rng::new(seed);
+        let centroids: Vec<Vec<f32>> =
+            (0..clusters).map(|_| rng.unit_vector(d)).collect();
+        let mut data = Vec::with_capacity(n * d);
+        for i in 0..n {
+            let c = &centroids[i % clusters];
+            let noise = rng.unit_vector(d);
+            let mut v: Vec<f32> =
+                c.iter().zip(&noise).map(|(a, b)| a + 0.3 * b).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            v.iter_mut().for_each(|x| *x /= norm);
+            data.extend(v);
+        }
+        Arc::new(EmbeddingMatrix::new(d, data))
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let emb = clustered_matrix(400, 16, 8, 1);
+        let a = Hnsw::build(emb.clone(), 8, 40, 32, 7);
+        let b = Hnsw::build(emb, 8, 40, 32, 7);
+        assert_eq!(a.entry, b.entry);
+        assert_eq!(a.neighbors, b.neighbors);
+    }
+
+    #[test]
+    fn recall_at_10_vs_flat() {
+        let emb = clustered_matrix(2000, 32, 20, 2);
+        let hnsw = Hnsw::build(emb.clone(), 16, 100, 64, 3);
+        let flat = DenseExact::new(emb);
+        let mut rng = Rng::new(4);
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for _ in 0..30 {
+            let q = SpecQuery::dense_only(rng.unit_vector(32));
+            let truth: std::collections::HashSet<u32> =
+                flat.retrieve_topk(&q, 10).iter().map(|s| s.id).collect();
+            for s in hnsw.retrieve_topk(&q, 10) {
+                total += 1;
+                if truth.contains(&s.id) {
+                    hits += 1;
+                }
+            }
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall > 0.85, "recall@10 = {recall}");
+    }
+
+    #[test]
+    fn finds_own_embedding() {
+        let emb = clustered_matrix(800, 16, 8, 5);
+        let hnsw = Hnsw::build(emb.clone(), 12, 80, 48, 6);
+        let mut found = 0;
+        for i in [0u32, 123, 456, 799] {
+            let q = SpecQuery::dense_only(emb.row(i).to_vec());
+            if hnsw.retrieve(&q).map(|s| s.id) == Some(i) {
+                found += 1;
+            }
+        }
+        assert!(found >= 3, "self-retrieval found only {found}/4");
+    }
+
+    #[test]
+    fn topk_sorted_and_unique() {
+        let emb = clustered_matrix(500, 16, 4, 8);
+        let hnsw = Hnsw::build(emb, 8, 60, 40, 9);
+        let mut rng = Rng::new(10);
+        let q = SpecQuery::dense_only(rng.unit_vector(16));
+        let top = hnsw.retrieve_topk(&q, 10);
+        assert_eq!(top.len(), 10);
+        for w in top.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        let ids: std::collections::HashSet<u32> =
+            top.iter().map(|s| s.id).collect();
+        assert_eq!(ids.len(), top.len());
+    }
+
+    #[test]
+    fn single_node_graph() {
+        let emb = clustered_matrix(1, 8, 1, 11);
+        let hnsw = Hnsw::build(emb, 4, 10, 10, 12);
+        let q = SpecQuery::dense_only(vec![1.0; 8]);
+        let got = hnsw.retrieve(&q).unwrap();
+        assert_eq!(got.id, 0);
+    }
+}
+
+impl Hnsw {
+    /// BFS reachability at layer 0 from the entry point (debug/tests).
+    pub fn debug_reachable(&self) -> usize {
+        let mut seen = vec![false; self.neighbors.len()];
+        let mut stack = vec![self.entry];
+        seen[self.entry as usize] = true;
+        let mut count = 0;
+        while let Some(x) = stack.pop() {
+            count += 1;
+            for &nb in &self.neighbors[x as usize][0] {
+                if !seen[nb as usize] {
+                    seen[nb as usize] = true;
+                    stack.push(nb);
+                }
+            }
+        }
+        count
+    }
+}

@@ -1,0 +1,72 @@
+//! Retrieval substrates: the knowledge-base side of RaLMSpec.
+//!
+//! Three from-scratch retrievers mirror the paper's setups (§5.1):
+//!   * [`dense::DenseExact`] — exact inner-product flat scan
+//!     (FAISS IndexFlatIP / DPR stand-in, "EDR");
+//!   * [`hnsw::Hnsw`] — approximate dense retrieval over an HNSW graph
+//!     (DPR-HNSW stand-in, "ADR");
+//!   * [`sparse::Bm25`] — BM25 over an inverted index (Pyserini stand-in,
+//!     "SR").
+//!
+//! All three implement [`Retriever`]. The trait exposes the *same scoring
+//! metric* via [`Retriever::score_doc`], which is what the local speculation
+//! cache ranks with — the rank-preservation property of §3 (if the KB top-1
+//! is cached, the cache returns it) holds exactly because both sides share
+//! this function. Note for ADR: `score_doc` is the *exact* inner product
+//! while graph search is approximate, matching how a real HNSW index scores
+//! candidates it visits.
+
+pub mod dense;
+pub mod hnsw;
+pub mod sparse;
+
+use crate::util::Scored;
+
+pub type DocId = u32;
+
+/// A query carrying both retrieval views: the dense embedding (from the
+/// AOT query encoder or the HashEncoder) and the raw term window (for BM25).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecQuery {
+    pub dense: Vec<f32>,
+    pub terms: Vec<u32>,
+}
+
+impl SpecQuery {
+    pub fn dense_only(v: Vec<f32>) -> Self {
+        Self { dense: v, terms: Vec::new() }
+    }
+
+    pub fn sparse_only(terms: Vec<u32>) -> Self {
+        Self { dense: Vec::new(), terms }
+    }
+}
+
+pub trait Retriever: Send + Sync {
+    /// Top-k documents for one query, (score desc, id asc)-ordered.
+    fn retrieve_topk(&self, q: &SpecQuery, k: usize) -> Vec<Scored>;
+
+    /// Score one document under the retriever's metric (used by the local
+    /// speculation cache so cache ranking == KB ranking on cached docs).
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32;
+
+    /// Batched retrieval — the verification step's primitive. Default is
+    /// the sequential loop; EDR and SR override it with genuinely-amortized
+    /// implementations (Fig 6 / §A.1).
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        qs.iter().map(|q| self.retrieve_topk(q, k)).collect()
+    }
+
+    /// Top-1 convenience.
+    fn retrieve(&self, q: &SpecQuery) -> Option<Scored> {
+        self.retrieve_topk(q, 1).into_iter().next()
+    }
+
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,323 @@
+//! Sparse retriever ("SR"): BM25 over a from-scratch inverted index — the
+//! Pyserini/BM25 role in the paper (k1 = 0.9, b = 0.4, Pyserini defaults).
+//!
+//! Two properties the speculation machinery depends on:
+//!
+//! * **Local scorability** (§3): per-document term frequencies plus the
+//!   global stats (df table, avgdl, N) are stored so `score_doc` computes
+//!   the exact BM25 score of any (query, doc) pair without the index —
+//!   this is what the local cache ranks with, giving rank preservation.
+//! * **Amortized batched retrieval** (§A.1): `retrieve_batch` unions the
+//!   query terms and walks each posting list once for the whole batch, so
+//!   total verification cost grows sublinearly in batch size when queries
+//!   share vocabulary (they do: consecutive speculation queries overlap).
+//!
+//! IDF is floored at 0 (Robertson's guard): terms appearing in more than
+//! half the corpus contribute nothing and their postings are skipped
+//! consistently in both the index scan and `score_doc`.
+
+use super::{DocId, Retriever, SpecQuery};
+use crate::datagen::corpus::Corpus;
+use crate::util::{Scored, TopK};
+use std::cell::RefCell;
+
+thread_local! {
+    /// Reusable all-zero score accumulators (see retrieve_batch).
+    static ACC_POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+#[derive(Debug)]
+pub struct Bm25 {
+    k1: f32,
+    b: f32,
+    pub(crate) n_docs: usize,
+    avgdl: f32,
+    doc_len: Vec<u32>,
+    /// postings[term] -> (doc, tf) sorted by doc id.
+    pub(crate) postings: Vec<Vec<(DocId, u16)>>,
+    /// idf[term], floored at 0.
+    pub(crate) idf: Vec<f32>,
+    /// Per-doc (term, tf) sorted by term — the "local information" the
+    /// paper stores so cache scoring matches KB scoring.
+    doc_terms: Vec<Vec<(u32, u16)>>,
+}
+
+impl Bm25 {
+    pub fn build(corpus: &Corpus, k1: f32, b: f32) -> Self {
+        let vocab = corpus.vocab;
+        let n_docs = corpus.len();
+        let mut postings: Vec<Vec<(DocId, u16)>> = vec![Vec::new(); vocab];
+        let mut doc_len = Vec::with_capacity(n_docs);
+        let mut doc_terms = Vec::with_capacity(n_docs);
+        let mut tf_scratch: Vec<u16> = vec![0; vocab];
+
+        for doc in &corpus.docs {
+            doc_len.push(doc.tokens.len() as u32);
+            let mut seen: Vec<u32> = Vec::with_capacity(doc.tokens.len());
+            for &t in &doc.tokens {
+                if tf_scratch[t as usize] == 0 {
+                    seen.push(t);
+                }
+                tf_scratch[t as usize] = tf_scratch[t as usize].saturating_add(1);
+            }
+            seen.sort_unstable();
+            let terms: Vec<(u32, u16)> =
+                seen.iter().map(|&t| (t, tf_scratch[t as usize])).collect();
+            for &(t, tf) in &terms {
+                postings[t as usize].push((doc.id, tf));
+                tf_scratch[t as usize] = 0;
+            }
+            doc_terms.push(terms);
+        }
+
+        let avgdl = corpus.avg_doc_len() as f32;
+        let idf: Vec<f32> = postings
+            .iter()
+            .map(|p| {
+                let df = p.len() as f32;
+                let x = ((n_docs as f32 - df + 0.5) / (df + 0.5)).ln();
+                x.max(0.0)
+            })
+            .collect();
+
+        Self { k1, b, n_docs, avgdl, doc_len, postings, idf, doc_terms }
+    }
+
+    #[inline]
+    fn term_weight(&self, tf: f32, dl: f32) -> f32 {
+        // BM25 tf saturation with length normalization.
+        tf * (self.k1 + 1.0)
+            / (tf + self.k1 * (1.0 - self.b + self.b * dl / self.avgdl))
+    }
+
+    /// Query terms with multiplicity collapsed to (term, qtf), zero-idf
+    /// terms dropped (consistent everywhere).
+    fn query_terms(&self, terms: &[u32]) -> Vec<(u32, f32)> {
+        let mut sorted: Vec<u32> = terms.to_vec();
+        sorted.sort_unstable();
+        let mut out: Vec<(u32, f32)> = Vec::new();
+        for &t in &sorted {
+            if (t as usize) >= self.idf.len() || self.idf[t as usize] <= 0.0 {
+                continue;
+            }
+            match out.last_mut() {
+                Some((lt, c)) if *lt == t => *c += 1.0,
+                _ => out.push((t, 1.0)),
+            }
+        }
+        out
+    }
+
+    pub fn stats(&self) -> (usize, f32) {
+        (self.n_docs, self.avgdl)
+    }
+}
+
+impl Retriever for Bm25 {
+    fn retrieve_topk(&self, q: &SpecQuery, k: usize) -> Vec<Scored> {
+        self.retrieve_batch(std::slice::from_ref(q), k)
+            .pop()
+            .unwrap_or_default()
+    }
+
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        // Union the query terms; walk each posting list once and fan the
+        // contribution out to every query containing the term.
+        let per_query: Vec<Vec<(u32, f32)>> =
+            qs.iter().map(|q| self.query_terms(&q.terms)).collect();
+        let mut term_users: std::collections::HashMap<u32, Vec<(usize, f32)>> =
+            std::collections::HashMap::new();
+        for (qi, terms) in per_query.iter().enumerate() {
+            for &(t, qtf) in terms {
+                term_users.entry(t).or_default().push((qi, qtf));
+            }
+        }
+        // Dense accumulator per query from a thread-local pool: buffers are
+        // zeroed once at birth and *selectively* re-zeroed (touched entries
+        // only) on return, so per-call cost scales with postings traversed,
+        // not with B x n_docs. (§Perf: this flattened the SR batching curve
+        // — see EXPERIMENTS.md.)
+        let mut acc = ACC_POOL.with(|cell| {
+            let mut pool = cell.borrow_mut();
+            let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(qs.len());
+            for _ in 0..qs.len() {
+                let mut b = pool.pop().unwrap_or_default();
+                if b.len() < self.n_docs {
+                    b.resize(self.n_docs, 0.0);
+                }
+                bufs.push(b);
+            }
+            bufs
+        });
+        let mut touched: Vec<Vec<DocId>> = qs.iter().map(|_| Vec::new()).collect();
+        let mut terms: Vec<(&u32, &Vec<(usize, f32)>)> = term_users.iter().collect();
+        terms.sort_by_key(|(t, _)| **t); // deterministic traversal
+        for (&t, users) in terms {
+            let idf = self.idf[t as usize];
+            for &(doc, tf) in &self.postings[t as usize] {
+                let w = idf
+                    * self.term_weight(tf as f32,
+                                       self.doc_len[doc as usize] as f32);
+                for &(qi, qtf) in users {
+                    if acc[qi][doc as usize] == 0.0 {
+                        touched[qi].push(doc);
+                    }
+                    acc[qi][doc as usize] += qtf * w;
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(qs.len());
+        for qi in 0..qs.len() {
+            let mut tk = TopK::new(k.max(1));
+            for &doc in &touched[qi] {
+                tk.push(doc, acc[qi][doc as usize]);
+                acc[qi][doc as usize] = 0.0; // restore scratch invariant
+            }
+            out.push(tk.into_sorted());
+        }
+        ACC_POOL.with(|cell| {
+            let mut pool = cell.borrow_mut();
+            for b in acc.drain(..) {
+                pool.push(b);
+            }
+        });
+        out
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
+        // Exact BM25 from the stored per-doc term stats (cache-side metric).
+        let terms = self.query_terms(&q.terms);
+        let dt = &self.doc_terms[doc as usize];
+        let dl = self.doc_len[doc as usize] as f32;
+        let mut score = 0.0;
+        for (t, qtf) in terms {
+            if let Ok(i) = dt.binary_search_by_key(&t, |&(term, _)| term) {
+                score += qtf * self.idf[t as usize]
+                    * self.term_weight(dt[i].1 as f32, dl);
+            }
+        }
+        score
+    }
+
+    fn len(&self) -> usize {
+        self.n_docs
+    }
+
+    fn name(&self) -> &'static str {
+        "SR(bm25)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+    use crate::util::Rng;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(&CorpusConfig {
+            n_docs: 400, n_topics: 10, doc_len: (20, 80),
+            ..CorpusConfig::default()
+        })
+    }
+
+    #[test]
+    fn index_scan_matches_score_doc() {
+        let c = corpus();
+        let bm = Bm25::build(&c, 0.9, 0.4);
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            let q = SpecQuery::sparse_only(c.topic_tokens(
+                rng.gen_range(10) as u32, 8, &mut rng));
+            for s in bm.retrieve_topk(&q, 5) {
+                let direct = bm.score_doc(&q, s.id);
+                assert!((s.score - direct).abs() < 1e-4,
+                        "scan={} direct={}", s.score, direct);
+            }
+        }
+    }
+
+    #[test]
+    fn retrieves_topically_relevant_docs() {
+        let c = corpus();
+        let bm = Bm25::build(&c, 0.9, 0.4);
+        let mut rng = Rng::new(2);
+        let mut topic_hits = 0;
+        let n_trials = 20;
+        for i in 0..n_trials {
+            let topic = (i % 10) as u32;
+            let q = SpecQuery::sparse_only(c.topic_tokens(topic, 10, &mut rng));
+            if let Some(top) = bm.retrieve(&q) {
+                if c.doc(top.id).topic == topic {
+                    topic_hits += 1;
+                }
+            }
+        }
+        assert!(topic_hits >= n_trials * 6 / 10,
+                "only {topic_hits}/{n_trials} on-topic");
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let c = corpus();
+        let bm = Bm25::build(&c, 0.9, 0.4);
+        let mut rng = Rng::new(3);
+        let qs: Vec<SpecQuery> = (0..5)
+            .map(|i| SpecQuery::sparse_only(
+                c.topic_tokens(i % 10, 8, &mut rng)))
+            .collect();
+        let batch = bm.retrieve_batch(&qs, 7);
+        for (q, b) in qs.iter().zip(&batch) {
+            let seq = bm.retrieve_topk(q, 7);
+            assert_eq!(seq.iter().map(|s| s.id).collect::<Vec<_>>(),
+                       b.iter().map(|s| s.id).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn high_df_terms_are_skipped() {
+        let c = corpus();
+        let bm = Bm25::build(&c, 0.9, 0.4);
+        // Find the most common term (df > N/2 by construction of the
+        // common pool's Zipf head): its idf floors at 0, so a query made
+        // only of it scores nothing — consistently in both the index scan
+        // and the local (cache-side) scorer.
+        let top_term = (0..c.vocab as u32)
+            .max_by_key(|&t| bm.postings[t as usize].len())
+            .unwrap();
+        assert!(bm.postings[top_term as usize].len() > bm.n_docs / 2,
+                "fixture should have a stopword-like term");
+        assert_eq!(bm.idf[top_term as usize], 0.0);
+        let q = SpecQuery::sparse_only(vec![top_term]);
+        let top = bm.retrieve_topk(&q, 3);
+        assert!(top.is_empty() || top[0].score == 0.0);
+        assert_eq!(bm.score_doc(&q, 0), 0.0);
+    }
+
+    #[test]
+    fn duplicate_query_terms_double_weight() {
+        let c = corpus();
+        let bm = Bm25::build(&c, 0.9, 0.4);
+        let mut rng = Rng::new(4);
+        let base = c.topic_tokens(1, 4, &mut rng);
+        let doc = bm
+            .retrieve(&SpecQuery::sparse_only(base.clone()))
+            .map(|s| s.id);
+        if let Some(doc) = doc {
+            let mut doubled = base.clone();
+            doubled.extend_from_slice(&base);
+            let s1 = bm.score_doc(&SpecQuery::sparse_only(base), doc);
+            let s2 = bm.score_doc(&SpecQuery::sparse_only(doubled), doc);
+            assert!((s2 - 2.0 * s1).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_query_scores_zero() {
+        let c = corpus();
+        let bm = Bm25::build(&c, 0.9, 0.4);
+        let q = SpecQuery::sparse_only(vec![]);
+        assert!(bm.retrieve_topk(&q, 3).is_empty());
+        assert_eq!(bm.score_doc(&q, 0), 0.0);
+    }
+}

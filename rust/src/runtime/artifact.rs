@@ -1,0 +1,143 @@
+//! One compiled AOT artifact: HLO text -> PJRT executable + persistent
+//! weight buffers.
+//!
+//! Weights are uploaded to the device exactly once per weights blob and
+//! shared (Rc) across the artifacts of one model (prefill / decode /
+//! decode_chunk all reference `<model>.weights.bin`). Per-call arguments
+//! are uploaded fresh; the KV cache travels as a `Literal`
+//! (PJRT returns multi-output programs as a single tuple buffer, so state
+//! must round-trip through the host — see DESIGN.md §Perf).
+
+use super::manifest::Manifest;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Per-call argument (non-weight input), in manifest order.
+pub enum ArgValue<'a> {
+    I32(i32),
+    VecI32(&'a [i32], &'a [usize]),
+    VecF32(&'a [f32], &'a [usize]),
+    /// Pre-existing literal (the KV cache from a previous call).
+    Lit(&'a xla::Literal),
+}
+
+pub struct Artifact {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    weights: Rc<Vec<xla::PjRtBuffer>>,
+}
+
+fn exla<E: std::fmt::Debug>(ctx: &str, e: E) -> anyhow::Error {
+    anyhow::anyhow!("{ctx}: {e:?}")
+}
+
+/// Load a weights blob and upload one buffer per weight entry.
+pub fn upload_weights(client: &xla::PjRtClient, dir: &Path,
+                      manifest: &Manifest)
+                      -> anyhow::Result<Vec<xla::PjRtBuffer>> {
+    let Some(bin) = &manifest.weights_bin else {
+        return Ok(Vec::new());
+    };
+    let blob = std::fs::read(dir.join(bin))
+        .map_err(|e| anyhow::anyhow!("reading {bin}: {e}"))?;
+    let mut out = Vec::new();
+    for entry in manifest.inputs.iter().filter(|e| e.is_weight()) {
+        let off = entry.offset.unwrap();
+        let n = entry.nbytes.unwrap();
+        anyhow::ensure!(off + n <= blob.len(), "weights blob too small for {}",
+                      entry.name);
+        let floats: Vec<f32> = blob[off..off + n]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let buf = client
+            .buffer_from_host_buffer(&floats, &entry.shape, None)
+            .map_err(|e| exla(&format!("uploading weight {}", entry.name), e))?;
+        out.push(buf);
+    }
+    Ok(out)
+}
+
+impl Artifact {
+    /// Compile `<name>.hlo.txt` and bind the shared weight buffers.
+    pub fn load(client: &xla::PjRtClient, dir: &Path, name: &str,
+                weights: Rc<Vec<xla::PjRtBuffer>>) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(&dir.join(format!("{name}.manifest.json")))?;
+        anyhow::ensure!(manifest.n_weights() == weights.len(),
+                      "{name}: weight count mismatch ({} vs {})",
+                      manifest.n_weights(), weights.len());
+        let hlo_path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().unwrap())
+            .map_err(|e| exla(&format!("parsing {}", hlo_path.display()), e))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| exla(&format!("compiling {name}"), e))?;
+        Ok(Self { manifest, client: client.clone(), exe, weights })
+    }
+
+    /// Execute with per-call args in manifest (non-weight) order. Returns
+    /// the decomposed output tuple as host literals, in manifest order.
+    pub fn execute(&self, args: &[ArgValue]) -> anyhow::Result<Vec<xla::Literal>> {
+        let call_inputs: Vec<_> = self.manifest.call_inputs().collect();
+        anyhow::ensure!(args.len() == call_inputs.len(),
+                      "{}: expected {} args, got {}", self.manifest.artifact,
+                      call_inputs.len(), args.len());
+        let mut uploaded: Vec<xla::PjRtBuffer> =
+            Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&call_inputs) {
+            let buf = match arg {
+                ArgValue::I32(v) => self
+                    .client
+                    .buffer_from_host_buffer(&[*v], &[], None),
+                ArgValue::VecI32(v, dims) => {
+                    self.client.buffer_from_host_buffer(v, dims, None)
+                }
+                ArgValue::VecF32(v, dims) => {
+                    self.client.buffer_from_host_buffer(v, dims, None)
+                }
+                ArgValue::Lit(lit) => {
+                    self.client.buffer_from_host_literal(None, lit)
+                }
+            }
+            .map_err(|e| {
+                exla(&format!("{}: uploading arg {}", self.manifest.artifact,
+                              spec.name), e)
+            })?;
+            uploaded.push(buf);
+        }
+        let all: Vec<&xla::PjRtBuffer> =
+            self.weights.iter().chain(uploaded.iter()).collect();
+        let outs = self
+            .exe
+            .execute_b(&all)
+            .map_err(|e| exla(&format!("{}: execute", self.manifest.artifact), e))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| exla("fetching outputs", e))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| exla("decomposing output tuple", e))?;
+        anyhow::ensure!(parts.len() == self.manifest.outputs.len(),
+                      "{}: expected {} outputs, got {}",
+                      self.manifest.artifact, self.manifest.outputs.len(),
+                      parts.len());
+        Ok(parts)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.manifest.artifact
+    }
+}
+
+/// Convert an output literal to Vec<f32>.
+pub fn lit_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| exla("literal->f32", e))
+}
+
+/// Convert an output literal to Vec<i32>.
+pub fn lit_i32(lit: &xla::Literal) -> anyhow::Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| exla("literal->i32", e))
+}

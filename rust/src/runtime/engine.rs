@@ -1,0 +1,364 @@
+//! Engine: one PJRT CPU client + lazily-loaded artifacts, plus the
+//! [`PjrtLm`] / [`PjrtEncoder`] front-ends the pipelines consume.
+//!
+//! An Engine is thread-local by construction (PJRT handles are raw
+//! pointers); the serving layer gives each worker thread its own Engine.
+
+use super::artifact::{lit_f32, lit_i32, ArgValue, Artifact};
+use super::manifest::IndexJson;
+use crate::datagen::Encoder;
+use crate::lm::{greedy, LanguageModel, EOS, PAD};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub index: IndexJson,
+    artifacts: RefCell<HashMap<String, Rc<Artifact>>>,
+    weight_sets: RefCell<HashMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let index = IndexJson::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            index,
+            artifacts: RefCell::new(HashMap::new()),
+            weight_sets: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load (or fetch cached) artifact by name, sharing weight buffers
+    /// across artifacts of the same model.
+    pub fn artifact(&self, name: &str) -> anyhow::Result<Rc<Artifact>> {
+        let cached = self.artifacts.borrow().get(name).cloned();
+        if let Some(a) = cached {
+            return Ok(a);
+        }
+        let manifest = super::manifest::Manifest::load(
+            &self.dir.join(format!("{name}.manifest.json")))?;
+        let weights = match &manifest.weights_bin {
+            None => Rc::new(Vec::new()),
+            Some(bin) => {
+                let cached = self.weight_sets.borrow().get(bin).cloned();
+                match cached {
+                    Some(w) => w,
+                    None => {
+                        let w = Rc::new(super::artifact::upload_weights(
+                            &self.client, &self.dir, &manifest)?);
+                        self.weight_sets
+                            .borrow_mut()
+                            .insert(bin.clone(), w.clone());
+                        w
+                    }
+                }
+            }
+        };
+        let art = Rc::new(Artifact::load(&self.client, &self.dir, name,
+                                         weights)?);
+        self.artifacts
+            .borrow_mut()
+            .insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    pub fn lm(&self, model: &str) -> anyhow::Result<PjrtLm> {
+        PjrtLm::new(self, model)
+    }
+
+    pub fn encoder(&self) -> anyhow::Result<PjrtEncoder> {
+        PjrtEncoder::new(self)
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PjrtLm
+// ---------------------------------------------------------------------------
+
+/// LM state handle: KV cache literal + position + host copies of the small
+/// outputs. Clone = snapshot (Rc-shared; old handles stay valid because
+/// every step builds a new literal).
+#[derive(Clone)]
+pub struct PjrtState {
+    kv: Rc<xla::Literal>,
+    pos: usize,
+    logits: Rc<Vec<f32>>,
+    qproj: Rc<Vec<f32>>,
+}
+
+pub struct PjrtLm {
+    prefill: Rc<Artifact>,
+    decode: Rc<Artifact>,
+    decode_chunk: Rc<Artifact>,
+    max_ctx: usize,
+    prefill_len: usize,
+    vocab: usize,
+    gen_chunk: usize,
+}
+
+impl PjrtLm {
+    fn new(engine: &Engine, model: &str) -> anyhow::Result<Self> {
+        anyhow::ensure!(engine.index.has_model(model),
+                      "model {model} not in artifacts index (built: {:?})",
+                      engine.index.lm_configs.keys().collect::<Vec<_>>());
+        let prefill = engine.artifact(&format!("prefill_{model}"))?;
+        let decode = engine.artifact(&format!("decode_{model}"))?;
+        let decode_chunk = engine.artifact(&format!("decode_chunk_{model}"))?;
+        let max_ctx = prefill.manifest.cfg_usize("max_ctx")?;
+        let prefill_len = prefill.manifest.cfg_usize("prefill_len")?;
+        let vocab = prefill.manifest.cfg_usize("vocab")?;
+        let gen_chunk = decode_chunk.manifest.cfg_usize("gen_chunk")?;
+        Ok(Self { prefill, decode, decode_chunk, max_ctx, prefill_len, vocab,
+                  gen_chunk })
+    }
+
+    fn state_from_parts(&self, kv: xla::Literal, pos: usize,
+                        logits: Vec<f32>, qproj: Vec<f32>) -> PjrtState {
+        PjrtState {
+            kv: Rc::new(kv),
+            pos,
+            logits: Rc::new(logits),
+            qproj: Rc::new(qproj),
+        }
+    }
+}
+
+impl LanguageModel for PjrtLm {
+    type State = PjrtState;
+
+    fn max_ctx(&self) -> usize {
+        self.max_ctx
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn prefill(&self, tokens: &[u32]) -> anyhow::Result<PjrtState> {
+        anyhow::ensure!(tokens.len() <= self.prefill_len,
+                      "context {} exceeds prefill_len {}", tokens.len(),
+                      self.prefill_len);
+        let valid = tokens.len().max(1) as i32; // empty context = 1 PAD token
+        let mut padded = vec![PAD as i32; self.prefill_len];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let outs = self.prefill.execute(&[
+            ArgValue::VecI32(&padded, &[self.prefill_len]),
+            ArgValue::I32(valid),
+        ])?;
+        let mut it = outs.into_iter();
+        let kv = it.next().unwrap();
+        let logits = lit_f32(&it.next().unwrap())?;
+        let qproj = lit_f32(&it.next().unwrap())?;
+        Ok(self.state_from_parts(kv, valid as usize, logits, qproj))
+    }
+
+    fn generate_greedy(&self, st: &PjrtState, k: usize)
+                       -> anyhow::Result<(Vec<u32>, PjrtState)> {
+        let mut out = Vec::with_capacity(k);
+        let mut cur = st.clone();
+        let mut remaining = k;
+        while remaining > 0 && cur.pos < self.max_ctx {
+            if remaining >= self.gen_chunk
+                && cur.pos + self.gen_chunk <= self.max_ctx
+            {
+                // Hot path: one PJRT call (one KV round-trip) per chunk.
+                let first = greedy(&cur.logits) as i32;
+                let outs = self.decode_chunk.execute(&[
+                    ArgValue::I32(first),
+                    ArgValue::I32(cur.pos as i32),
+                    ArgValue::Lit(&cur.kv),
+                ])?;
+                let mut it = outs.into_iter();
+                let toks = lit_i32(&it.next().unwrap())?;
+                let logits = lit_f32(&it.next().unwrap())?;
+                let kv = it.next().unwrap();
+                let qproj = lit_f32(&it.next().unwrap())?;
+                cur = self.state_from_parts(kv, cur.pos + self.gen_chunk,
+                                            logits, qproj);
+                remaining -= self.gen_chunk;
+                let mut hit_eos = false;
+                for t in toks {
+                    out.push(t as u32);
+                    if t as u32 == EOS {
+                        hit_eos = true;
+                        break;
+                    }
+                }
+                if hit_eos {
+                    break;
+                }
+            } else {
+                let next = greedy(&cur.logits);
+                cur = self.append_token(&cur, next)?;
+                out.push(next);
+                remaining -= 1;
+                if next == EOS {
+                    break;
+                }
+            }
+        }
+        Ok((out, cur))
+    }
+
+    fn append_token(&self, st: &PjrtState, token: u32)
+                    -> anyhow::Result<PjrtState> {
+        anyhow::ensure!(st.pos < self.max_ctx, "context full");
+        let outs = self.decode.execute(&[
+            ArgValue::I32(token as i32),
+            ArgValue::I32(st.pos as i32),
+            ArgValue::Lit(&st.kv),
+        ])?;
+        let mut it = outs.into_iter();
+        let logits = lit_f32(&it.next().unwrap())?;
+        let kv = it.next().unwrap();
+        let qproj = lit_f32(&it.next().unwrap())?;
+        Ok(self.state_from_parts(kv, st.pos + 1, logits, qproj))
+    }
+
+    fn logits<'a>(&self, st: &'a PjrtState) -> &'a [f32] {
+        &st.logits
+    }
+
+    fn qproj<'a>(&self, st: &'a PjrtState) -> &'a [f32] {
+        &st.qproj
+    }
+
+    fn pos(&self, st: &PjrtState) -> usize {
+        st.pos
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PjrtEncoder
+// ---------------------------------------------------------------------------
+
+/// Query/passage encoder backed by the `encode_q` / `encode_batch`
+/// artifacts (the L2 JAX encoder).
+pub struct PjrtEncoder {
+    single: Rc<Artifact>,
+    batch: Rc<Artifact>,
+    dim: usize,
+    window: usize,
+    batch_size: usize,
+}
+
+impl PjrtEncoder {
+    fn new(engine: &Engine) -> anyhow::Result<Self> {
+        let single = engine.artifact("encode_q")?;
+        let batch = engine.artifact("encode_batch")?;
+        Ok(Self {
+            single,
+            batch,
+            dim: engine.index.retrieval_dim,
+            window: engine.index.encoder_len,
+            batch_size: engine.index.encoder_batch,
+        })
+    }
+
+    fn window_of<'a>(&self, tokens: &'a [u32]) -> &'a [u32] {
+        let start = tokens.len().saturating_sub(self.window);
+        &tokens[start..]
+    }
+}
+
+impl Encoder for PjrtEncoder {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+
+    fn encode(&self, tokens: &[u32]) -> Vec<f32> {
+        let w = self.window_of(tokens);
+        let mut padded = vec![PAD as i32; self.window];
+        for (i, &t) in w.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let outs = self
+            .single
+            .execute(&[
+                ArgValue::VecI32(&padded, &[self.window]),
+                ArgValue::I32(w.len().max(1) as i32),
+            ])
+            .expect("encode_q execution failed");
+        lit_f32(&outs[0]).expect("encode_q output")
+    }
+
+    fn encode_batch(&self, windows: &[&[u32]]) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(windows.len());
+        for chunk in windows.chunks(self.batch_size) {
+            let mut tokens = vec![PAD as i32; self.batch_size * self.window];
+            let mut lens = vec![1i32; self.batch_size];
+            for (r, win) in chunk.iter().enumerate() {
+                let w = self.window_of(win);
+                for (i, &t) in w.iter().enumerate() {
+                    tokens[r * self.window + i] = t as i32;
+                }
+                lens[r] = w.len().max(1) as i32;
+            }
+            let outs = self
+                .batch
+                .execute(&[
+                    ArgValue::VecI32(&tokens, &[self.batch_size, self.window]),
+                    ArgValue::VecI32(&lens, &[self.batch_size]),
+                ])
+                .expect("encode_batch execution failed");
+            let flat = lit_f32(&outs[0]).expect("encode_batch output");
+            for r in 0..chunk.len() {
+                out.push(flat[r * self.dim..(r + 1) * self.dim].to_vec());
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hidden-state extraction (KNN-LM datastore builder)
+// ---------------------------------------------------------------------------
+
+/// Run `hidden_<model>` over a token chunk; returns per-position projected
+/// hidden states (row-major [len, dim]).
+pub struct HiddenExtractor {
+    art: Rc<Artifact>,
+    pub chunk_len: usize,
+    pub dim: usize,
+}
+
+impl HiddenExtractor {
+    pub fn new(engine: &Engine, model: &str) -> anyhow::Result<Self> {
+        let art = engine.artifact(&format!("hidden_{model}"))?;
+        let chunk_len = art.manifest.cfg_usize("prefill_len")?;
+        let dim = art.manifest.cfg_usize("retrieval_dim")?;
+        Ok(Self { art, chunk_len, dim })
+    }
+
+    pub fn extract(&self, tokens: &[u32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() <= self.chunk_len, "chunk too long");
+        let valid = tokens.len() as i32;
+        let mut padded = vec![PAD as i32; self.chunk_len];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let outs = self.art.execute(&[
+            ArgValue::VecI32(&padded, &[self.chunk_len]),
+            ArgValue::I32(valid),
+        ])?;
+        let flat = lit_f32(&outs[0])?;
+        Ok(flat[..tokens.len() * self.dim].to_vec())
+    }
+}

@@ -1,0 +1,240 @@
+//! Artifact manifest / index parsing.
+//!
+//! `python/compile/aot.py` writes one `<name>.manifest.json` per artifact
+//! (ordered input/output specs; weight entries carry byte offsets into the
+//! shared `<model>.weights.bin`) plus a top-level `index.json`. The Rust
+//! side never hardcodes shapes: everything comes from here. Parsed with the
+//! in-tree `util::json` (no serde on this image).
+
+use crate::util::json::{self, Value};
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoEntry {
+    pub name: String,
+    /// "weight" (uploaded once at load), "arg" (per call), "state" (KV
+    /// cache threaded between calls), "out".
+    pub kind: String,
+    pub shape: Vec<usize>,
+    /// "f32" | "i32".
+    pub dtype: String,
+    /// Byte coordinates into the weights blob (weights only).
+    pub offset: Option<usize>,
+    pub nbytes: Option<usize>,
+}
+
+impl IoEntry {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(Self {
+            name: v.str_field("name")?,
+            kind: v.str_field("kind")?,
+            shape: v
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("bad shape element"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            dtype: v.str_field("dtype")?,
+            offset: v.get("offset").and_then(|x| x.as_usize()),
+            nbytes: v.get("nbytes").and_then(|x| x.as_usize()),
+        })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_weight(&self) -> bool {
+        self.kind == "weight"
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifact: String,
+    pub weights_bin: Option<String>,
+    pub inputs: Vec<IoEntry>,
+    pub outputs: Vec<IoEntry>,
+    pub config: Value,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text)?;
+        let entries = |key: &str| -> anyhow::Result<Vec<IoEntry>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
+                .iter()
+                .map(IoEntry::from_json)
+                .collect()
+        };
+        Ok(Self {
+            artifact: v.str_field("artifact")?,
+            weights_bin: v
+                .get("weights_bin")
+                .and_then(|x| x.as_str())
+                .map(|s| s.to_string()),
+            inputs: entries("inputs")?,
+            outputs: entries("outputs")?,
+            config: v.get("config").cloned().unwrap_or(Value::Obj(vec![])),
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+    }
+
+    pub fn n_weights(&self) -> usize {
+        self.inputs.iter().filter(|e| e.is_weight()).count()
+    }
+
+    pub fn call_inputs(&self) -> impl Iterator<Item = &IoEntry> {
+        self.inputs.iter().filter(|e| !e.is_weight())
+    }
+
+    /// Integer field from the echoed model config.
+    pub fn cfg_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.config
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("manifest {} missing config.{key}",
+                                           self.artifact))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IndexJson {
+    pub artifacts: Vec<String>,
+    pub lm_configs: HashMap<String, Value>,
+    pub retrieval_dim: usize,
+    pub encoder_len: usize,
+    pub encoder_batch: usize,
+    pub score_batch: usize,
+    pub score_tile: usize,
+    pub datastore_chunk: usize,
+    pub weight_seed: u64,
+}
+
+impl IndexJson {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text)?;
+        Ok(Self {
+            artifacts: v
+                .req("artifacts")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("artifacts not an array"))?
+                .iter()
+                .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                .collect(),
+            lm_configs: v
+                .req("lm_configs")?
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("lm_configs not an object"))?
+                .iter()
+                .map(|(k, val)| (k.clone(), val.clone()))
+                .collect(),
+            retrieval_dim: v.usize_field("retrieval_dim")?,
+            encoder_len: v.usize_field("encoder_len")?,
+            encoder_batch: v.usize_field("encoder_batch")?,
+            score_batch: v.usize_field("score_batch")?,
+            score_tile: v.usize_field("score_tile")?,
+            datastore_chunk: v
+                .get("datastore_chunk")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+            weight_seed: v
+                .get("weight_seed")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(0),
+        })
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("index.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "reading {} — did you run `make artifacts`? ({e})",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn has_model(&self, name: &str) -> bool {
+        self.lm_configs.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "artifact": "decode_tiny",
+        "weights_bin": "tiny.weights.bin",
+        "inputs": [
+            {"name": "tok_emb", "kind": "weight", "shape": [64, 32],
+             "dtype": "f32", "offset": 0, "nbytes": 8192},
+            {"name": "token", "kind": "arg", "shape": [], "dtype": "i32"},
+            {"name": "kv", "kind": "state", "shape": [1, 2, 2, 64, 16],
+             "dtype": "f32"}
+        ],
+        "outputs": [
+            {"name": "logits", "kind": "out", "shape": [64], "dtype": "f32"}
+        ],
+        "config": {"max_ctx": 64, "vocab": 64}
+    }"#;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifact, "decode_tiny");
+        assert_eq!(m.weights_bin.as_deref(), Some("tiny.weights.bin"));
+        assert_eq!(m.n_weights(), 1);
+        assert_eq!(m.call_inputs().count(), 2);
+        assert_eq!(m.inputs[0].elem_count(), 2048);
+        assert_eq!(m.inputs[0].offset, Some(0));
+        assert_eq!(m.cfg_usize("max_ctx").unwrap(), 64);
+        assert!(m.cfg_usize("missing").is_err());
+    }
+
+    #[test]
+    fn scalar_entry_has_one_element() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.inputs[1].elem_count(), 1);
+        assert!(!m.inputs[1].is_weight());
+    }
+
+    #[test]
+    fn null_weights_bin() {
+        let m = Manifest::parse(
+            r#"{"artifact": "x", "weights_bin": null, "inputs": [],
+                "outputs": [], "config": {}}"#).unwrap();
+        assert!(m.weights_bin.is_none());
+    }
+
+    #[test]
+    fn index_json_parses() {
+        let text = r#"{
+            "artifacts": ["encode_q", "prefill_gpt2m"],
+            "lm_configs": {"gpt2m": {"n_layers": 4}},
+            "retrieval_dim": 64, "encoder_len": 32, "encoder_batch": 64,
+            "score_batch": 16, "score_tile": 512,
+            "datastore_chunk": 256, "weight_seed": 20240131
+        }"#;
+        let idx = IndexJson::parse(text).unwrap();
+        assert!(idx.has_model("gpt2m"));
+        assert!(!idx.has_model("opt1b"));
+        assert_eq!(idx.retrieval_dim, 64);
+        assert_eq!(idx.artifacts.len(), 2);
+    }
+}

@@ -1,0 +1,21 @@
+//! Runtime bridge: load AOT HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and execute them on the PJRT CPU client via the
+//! `xla` crate.
+//!
+//! Flow: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute_b` with persistent weight buffers.
+//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids).
+
+pub mod artifact;
+pub mod engine;
+pub mod manifest;
+
+pub use artifact::{Artifact, ArgValue};
+pub use engine::{Engine, HiddenExtractor, PjrtEncoder, PjrtLm, PjrtState};
+pub use manifest::{IndexJson, IoEntry, Manifest};
+
+/// Retrieval embedding dimensionality — must match
+/// `python/compile/configs.py::RETRIEVAL_DIM`. The Engine asserts this
+/// against `index.json` at load; mocks and tests use the constant directly.
+pub const RETRIEVAL_DIM: usize = 64;

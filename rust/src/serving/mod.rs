@@ -1,0 +1,10 @@
+//! Serving front-end: a request router with a bounded queue
+//! and OS-thread pipeline workers (vLLM-router-like shape).
+//!
+//! PJRT handles are not Send, so each worker thread constructs its own
+//! backend (Engine + pipelines) via the factory closure; the queue side
+//! only moves plain data (token vectors, metrics).
+
+pub mod router;
+
+pub use router::{Request, Response, Router, ServeBackend};

@@ -1,0 +1,10 @@
+//! RaLMSpec core: speculative retrieval + batched verification (§3),
+//! optimal speculation stride scheduling (§4), asynchronous verification.
+
+pub mod os3;
+pub mod pipeline;
+pub mod query;
+
+pub use os3::{objective, Os3Config, Scheduler, StridePolicy};
+pub use pipeline::{SpecOptions, SpecPipeline};
+pub use query::{QueryBuilder, QueryMode};

@@ -1,0 +1,300 @@
+//! OS³ — Optimal Speculation Stride Scheduler (paper §4, App. A.2).
+//!
+//! Maximizes the expected number of correctly-verified documents per unit
+//! time. With speculation accuracy γ, speculation-step latency `a`, and
+//! batched-verification latency `b(s)`:
+//!
+//!   sync:   E(s) = (1 - γ^s) / [ (1-γ) · (s·a + b(s)) ]
+//!   async:  E(s) = (1 - γ^s) / [ (1-γ) · ( γ^s·((s-1)a + max(a, b(s)))
+//!                                        + (1-γ^s)·(s·a + b(s)) ) ]
+//!
+//! Estimation (A.2): `a` via EMA of measured speculation steps; `b(s)` via
+//! least-squares b0 + b1·s over the recent verification latencies (EDR/SR
+//! are near-constant in s, ADR is linear with an intercept — both shapes
+//! are captured); γ via windowed MLE
+//!     γ̂ = Σ_t M(t) / ( Σ_t M(t) + Σ_t 1[M(t) < s(t)] )
+//! over the last `w` verifications, clamped to γ_max to avoid
+//! division-by-zero / over-optimism as γ̂ → 1.
+
+use crate::util::{linear_fit, Ema};
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct Os3Config {
+    /// γ estimation window w (paper: 5).
+    pub window: usize,
+    /// γ clamp (paper: 0.6).
+    pub gamma_max: f64,
+    /// Largest stride the scheduler may pick.
+    pub max_stride: usize,
+    /// Use the asynchronous-verification objective.
+    pub async_mode: bool,
+}
+
+impl Default for Os3Config {
+    fn default() -> Self {
+        Self {
+            window: crate::config::OS3_WINDOW,
+            gamma_max: crate::config::GAMMA_MAX,
+            max_stride: 16,
+            async_mode: false,
+        }
+    }
+}
+
+/// Stride policy: hand-tuned constant or OS³.
+#[derive(Debug, Clone)]
+pub enum StridePolicy {
+    Fixed(usize),
+    Os3(Os3Config),
+}
+
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: StridePolicy,
+    current: usize,
+    /// (attempted s(t), matched M(t)) of recent verifications.
+    history: VecDeque<(usize, usize)>,
+    a_est: Ema,
+    /// (s, b) points for the linear b(s) model.
+    b_points: VecDeque<(f64, f64)>,
+}
+
+impl Scheduler {
+    pub fn new(policy: StridePolicy) -> Self {
+        let current = match &policy {
+            StridePolicy::Fixed(s) => (*s).max(1),
+            // Paper: OS³ initializes s=1 and adapts onwards (warm-up).
+            StridePolicy::Os3(_) => 1,
+        };
+        Self {
+            policy,
+            current,
+            history: VecDeque::new(),
+            a_est: Ema::new(0.25),
+            b_points: VecDeque::new(),
+        }
+    }
+
+    pub fn stride(&self) -> usize {
+        self.current
+    }
+
+    /// Record one verification round: `attempted` speculation steps of
+    /// which `matched` verified, with measured per-step latency `a_step`
+    /// (seconds) and verification latency `b_lat` (seconds).
+    pub fn observe(&mut self, attempted: usize, matched: usize, a_step: f64,
+                   b_lat: f64) {
+        let cfg = match &self.policy {
+            StridePolicy::Fixed(_) => return,
+            StridePolicy::Os3(cfg) => cfg.clone(),
+        };
+        if attempted == 0 {
+            return;
+        }
+        self.history.push_back((attempted, matched));
+        while self.history.len() > cfg.window {
+            self.history.pop_front();
+        }
+        if a_step.is_finite() && a_step > 0.0 {
+            self.a_est.update(a_step);
+        }
+        if b_lat.is_finite() && b_lat > 0.0 {
+            self.b_points.push_back((attempted as f64, b_lat));
+            while self.b_points.len() > 4 * cfg.window {
+                self.b_points.pop_front();
+            }
+        }
+        self.current = self.solve(&cfg);
+    }
+
+    /// Windowed-MLE speculation accuracy, clamped to γ_max.
+    pub fn gamma(&self) -> f64 {
+        let cfg = match &self.policy {
+            StridePolicy::Fixed(_) => return 0.0,
+            StridePolicy::Os3(cfg) => cfg,
+        };
+        let m_sum: usize = self.history.iter().map(|&(_, m)| m).sum();
+        let miss: usize = self
+            .history
+            .iter()
+            .filter(|&&(s, m)| m < s)
+            .count();
+        if m_sum + miss == 0 {
+            return cfg.gamma_max;
+        }
+        (m_sum as f64 / (m_sum + miss) as f64).min(cfg.gamma_max)
+    }
+
+    /// Linear b(s) = b0 + b1·s from the recent observations.
+    fn b_model(&self) -> (f64, f64) {
+        let xs: Vec<f64> = self.b_points.iter().map(|&(s, _)| s).collect();
+        let ys: Vec<f64> = self.b_points.iter().map(|&(_, b)| b).collect();
+        let (b0, b1) = linear_fit(&xs, &ys);
+        (b0.max(0.0), b1.max(0.0))
+    }
+
+    fn solve(&self, cfg: &Os3Config) -> usize {
+        let Some(a) = self.a_est.get() else { return 1 };
+        if self.b_points.is_empty() {
+            return 1;
+        }
+        let gamma = self.gamma();
+        let (b0, b1) = self.b_model();
+        let mut best = (1usize, f64::NEG_INFINITY);
+        for s in 1..=cfg.max_stride.max(1) {
+            let e = objective(gamma, a, b0 + b1 * s as f64, s, cfg.async_mode);
+            if e > best.1 {
+                best = (s, e);
+            }
+        }
+        best.0
+    }
+}
+
+/// The OS³ objective E(s): expected verified documents per unit time.
+pub fn objective(gamma: f64, a: f64, b: f64, s: usize, async_mode: bool)
+                 -> f64 {
+    let gamma = gamma.clamp(0.0, 0.999_999);
+    let s_f = s as f64;
+    let expected_verified = (1.0 - gamma.powi(s as i32)) / (1.0 - gamma);
+    let latency = if async_mode {
+        let g_s = gamma.powi(s as i32);
+        g_s * ((s_f - 1.0) * a + a.max(b)) + (1.0 - g_s) * (s_f * a + b)
+    } else {
+        s_f * a + b
+    };
+    if latency <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    expected_verified / latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn os3(async_mode: bool, max_stride: usize) -> Scheduler {
+        Scheduler::new(StridePolicy::Os3(Os3Config {
+            window: 5,
+            gamma_max: 0.6,
+            max_stride,
+            async_mode,
+        }))
+    }
+
+    #[test]
+    fn fixed_policy_never_moves() {
+        let mut s = Scheduler::new(StridePolicy::Fixed(3));
+        assert_eq!(s.stride(), 3);
+        s.observe(3, 0, 1.0, 10.0);
+        assert_eq!(s.stride(), 3);
+    }
+
+    #[test]
+    fn os3_warms_up_at_one() {
+        let s = os3(false, 16);
+        assert_eq!(s.stride(), 1, "paper initializes s=1 under OS³");
+    }
+
+    #[test]
+    fn expensive_verification_pushes_stride_up() {
+        // b >> a and high accuracy: amortize verification over many steps.
+        // With the paper's γ_max = 0.6 clamp the optimum lands mid-range;
+        // the warm-up s=1 must clearly grow.
+        let mut s = os3(false, 16);
+        for _ in 0..10 {
+            let cur = s.stride();
+            s.observe(cur, cur, 0.01, 0.5); // all match; b = 50x a
+        }
+        assert!(s.stride() >= 5, "stride={} should grow", s.stride());
+        // Without the clamp the same regime pushes near the max.
+        let mut s2 = Scheduler::new(StridePolicy::Os3(Os3Config {
+            window: 5, gamma_max: 0.98, max_stride: 16, async_mode: false,
+        }));
+        for _ in 0..10 {
+            let cur = s2.stride();
+            s2.observe(cur, cur, 0.01, 0.5);
+        }
+        assert!(s2.stride() >= 12, "unclamped stride={}", s2.stride());
+    }
+
+    #[test]
+    fn cheap_verification_keeps_stride_small() {
+        // b << a: speculating more only risks overhead.
+        let mut s = os3(false, 16);
+        for _ in 0..10 {
+            let cur = s.stride();
+            s.observe(cur, cur / 2, 0.05, 0.001); // frequent mismatches
+        }
+        assert!(s.stride() <= 2, "stride={} should stay small", s.stride());
+    }
+
+    #[test]
+    fn gamma_mle_matches_formula() {
+        let mut s = os3(false, 16);
+        // M = [3, 2] with strides [3, 3]: gamma = (3+2)/(5 + 1 miss) = 5/6
+        // -> clamped at 0.6.
+        s.observe(3, 3, 0.01, 0.01);
+        s.observe(3, 2, 0.01, 0.01);
+        assert!((s.gamma() - 0.6).abs() < 1e-9, "clamped at gamma_max");
+        // Now force many misses: gamma drops below the clamp.
+        for _ in 0..5 {
+            s.observe(3, 0, 0.01, 0.01);
+        }
+        // window=5 keeps only the miss rounds: gamma = 0/(0+5) = 0
+        assert!(s.gamma() < 1e-9);
+    }
+
+    #[test]
+    fn objective_matches_paper_formulas() {
+        // sync: (1 - g^s)/((1-g)(sa+b))
+        let (g, a, b, s) = (0.5, 0.1, 0.4, 3usize);
+        let expect = (1.0 - 0.125) / (0.5 * (0.3 + 0.4));
+        assert!((objective(g, a, b, s, false) - expect).abs() < 1e-12);
+        // async: latency = g^s((s-1)a + max(a,b)) + (1-g^s)(sa+b)
+        let lat = 0.125 * (0.2 + 0.4) + 0.875 * 0.7;
+        let expect = (1.0 - 0.125) / (0.5 * lat);
+        assert!((objective(g, a, b, s, true) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn async_objective_prefers_stride_one_when_b_below_a() {
+        // Paper §3: with async verification and b <= a, s = 1 is optimal.
+        let (g, a, b) = (0.6, 0.1, 0.05);
+        let e1 = objective(g, a, b, 1, true);
+        for s in 2..=16 {
+            assert!(e1 >= objective(g, a, b, s, true), "s={s} beat s=1");
+        }
+    }
+
+    #[test]
+    fn solver_matches_bruteforce_argmax() {
+        let mut sched = os3(false, 12);
+        for i in 0..8 {
+            sched.observe(sched.stride(), if i % 3 == 0 { sched.stride() - 1 }
+                          else { sched.stride() }.min(sched.stride()),
+                          0.02, 0.1 + 0.01 * sched.stride() as f64);
+        }
+        let gamma = sched.gamma();
+        let (b0, b1) = sched.b_model();
+        let a = sched.a_est.get().unwrap();
+        let brute = (1..=12)
+            .max_by(|&x, &y| {
+                objective(gamma, a, b0 + b1 * x as f64, x, false)
+                    .partial_cmp(&objective(gamma, a, b0 + b1 * y as f64, y,
+                                            false))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(sched.stride(), brute);
+    }
+
+    #[test]
+    fn observe_zero_attempted_is_ignored() {
+        let mut s = os3(false, 8);
+        s.observe(0, 0, 0.01, 0.01);
+        assert_eq!(s.stride(), 1);
+        assert!(s.history.is_empty());
+    }
+}

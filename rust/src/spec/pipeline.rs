@@ -1,0 +1,267 @@
+//! The RaLMSpec pipeline (paper Alg. 1): speculative retrieval from the
+//! per-request cache, batched verification against the knowledge base,
+//! rollback on mis-speculation, optional prefetching / OS³ / asynchronous
+//! verification.
+//!
+//! Correctness invariant (tested exhaustively in
+//! rust/tests/pipeline_equivalence.rs): for any stride policy, prefetch
+//! size, and async setting, the generated token sequence is **identical**
+//! to `baseline::ralmseq` on the same request — speculation only moves
+//! *when* retrievals happen, never *what* the model sees after
+//! verification.
+
+use crate::cache::LocalCache;
+use crate::datagen::Corpus;
+use crate::lm::{GenState, LanguageModel};
+use crate::metrics::{timed, EventKind, ReqMetrics, Stopwatch};
+use crate::retriever::{Retriever, SpecQuery};
+use crate::spec::os3::{Scheduler, StridePolicy};
+use crate::spec::query::QueryBuilder;
+use crate::util::Scored;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct SpecOptions {
+    /// Tokens generated per speculation step (paper: 4).
+    pub gen_stride: usize,
+    pub stride: StridePolicy,
+    /// Cache update size per verified query (1 = top-1, >1 = prefetching).
+    pub prefetch: usize,
+    pub async_verify: bool,
+    pub max_new: usize,
+    pub max_doc_tokens: usize,
+    pub cache_cap: usize,
+}
+
+impl Default for SpecOptions {
+    fn default() -> Self {
+        let c = crate::config::SpecConfig::default();
+        Self {
+            gen_stride: c.gen_stride,
+            stride: StridePolicy::Fixed(c.stride),
+            prefetch: 1,
+            async_verify: false,
+            max_new: c.max_new_tokens,
+            max_doc_tokens: c.max_doc_tokens,
+            cache_cap: crate::cache::DEFAULT_CACHE_CAP,
+        }
+    }
+}
+
+/// One in-flight speculation step awaiting verification.
+struct Pending<S> {
+    snapshot: crate::lm::state::Snapshot<S>,
+    query: SpecQuery,
+    spec_doc: u32,
+    /// Measured latency of this speculation step (for OS³'s `a`).
+    step_time: Duration,
+}
+
+pub struct SpecPipeline<'a, L: LanguageModel> {
+    pub lm: &'a L,
+    pub kb: &'a dyn Retriever,
+    pub corpus: &'a Corpus,
+    pub queries: QueryBuilder<'a>,
+    pub opts: SpecOptions,
+}
+
+impl<'a, L: LanguageModel> SpecPipeline<'a, L> {
+    /// Serve one request. Returns metrics (which include the tokens).
+    pub fn run(&self, question: &[u32]) -> anyhow::Result<ReqMetrics> {
+        let total = Stopwatch::start();
+        let mut m = ReqMetrics::default();
+        let mut cache = LocalCache::new(self.opts.cache_cap);
+        let mut scheduler = Scheduler::new(self.opts.stride.clone());
+
+        // Alg. 1 line 4: initial retrieval primes the cache (top-prefetch).
+        let q0 = timed(&mut m.retrieve,
+                       || self.queries.build_from_window(question));
+        let top0 = timed(&mut m.retrieve, || {
+            self.kb.retrieve_topk(&q0, self.opts.prefetch.max(1))
+        });
+        m.kb_calls += 1;
+        m.kb_queries += 1;
+        anyhow::ensure!(!top0.is_empty(), "knowledge base returned nothing");
+        cache.insert(&top0);
+        let doc0 = top0[0].id;
+
+        let prefill_t = Stopwatch::start();
+        let mut state = timed(&mut m.generate, || {
+            GenState::new(self.lm, Some(doc0),
+                          &self.corpus.doc(doc0).tokens, question,
+                          self.opts.max_doc_tokens, self.opts.max_new)
+        })?;
+        m.prefills += 1;
+        m.event(EventKind::Prefill, &total, prefill_t.elapsed());
+
+        if self.opts.async_verify {
+            std::thread::scope(|scope| {
+                let (job_tx, job_rx) =
+                    std::sync::mpsc::channel::<(Vec<SpecQuery>, usize)>();
+                let (res_tx, res_rx) =
+                    std::sync::mpsc::channel::<(Vec<Vec<Scored>>, Duration)>();
+                let kb = self.kb;
+                scope.spawn(move || {
+                    while let Ok((qs, k)) = job_rx.recv() {
+                        let t = Stopwatch::start();
+                        let res = kb.retrieve_batch(&qs, k);
+                        if res_tx.send((res, t.elapsed())).is_err() {
+                            break;
+                        }
+                    }
+                });
+                self.drive(&mut state, &mut cache, &mut scheduler, &mut m,
+                           &total, Some((&job_tx, &res_rx)))
+            })?;
+        } else {
+            self.drive(&mut state, &mut cache, &mut scheduler, &mut m,
+                       &total, None)?;
+        }
+
+        m.tokens_out = state.generated.clone();
+        m.decode_tokens = state.generated.len() as u32 + m.wasted_tokens;
+        m.total = total.elapsed();
+        Ok(m)
+    }
+
+    /// One speculation step: query → cache lookup → (maybe re-prefill) →
+    /// generate `gen_stride` tokens.
+    fn spec_step(&self, state: &mut GenState<L::State>,
+                 cache: &mut LocalCache, m: &mut ReqMetrics,
+                 req_start: &Stopwatch)
+                 -> anyhow::Result<Pending<L::State>> {
+        let step = Stopwatch::start();
+        let snapshot = state.snapshot();
+        let query = timed(&mut m.retrieve, || self.queries.build(state));
+        let hit = timed(&mut m.cache, || cache.retrieve(&query, self.kb));
+        // Cache miss (cannot happen after the initial prime, but be safe):
+        // keep the current document.
+        let spec_doc = hit.map(|s| s.id)
+            .or(state.doc_id)
+            .expect("no document available for speculation");
+        timed(&mut m.generate, || -> anyhow::Result<()> {
+            if state.set_doc(self.lm, spec_doc,
+                             &self.corpus.doc(spec_doc).tokens)? {
+                m.prefills += 1;
+            }
+            state.generate(self.lm, self.opts.gen_stride)?;
+            Ok(())
+        })?;
+        m.spec_steps += 1;
+        let step_time = step.elapsed();
+        m.event(EventKind::SpecStep, req_start, step_time);
+        Ok(Pending { snapshot, query, spec_doc, step_time })
+    }
+
+    /// Main loop, shared by sync and async modes. `verifier` is the async
+    /// channel pair when async verification is enabled.
+    #[allow(clippy::type_complexity)]
+    fn drive(&self, state: &mut GenState<L::State>, cache: &mut LocalCache,
+             scheduler: &mut Scheduler, m: &mut ReqMetrics,
+             req_start: &Stopwatch,
+             verifier: Option<(&std::sync::mpsc::Sender<(Vec<SpecQuery>, usize)>,
+                               &std::sync::mpsc::Receiver<(Vec<Vec<Scored>>, Duration)>)>)
+             -> anyhow::Result<()> {
+        // Steps speculated but not yet verified (carries the async "extra
+        // step" across rounds).
+        let mut pending: Vec<Pending<L::State>> = Vec::new();
+        loop {
+            let target = scheduler.stride().max(1);
+            while pending.len() < target && !state.done {
+                pending.push(self.spec_step(state, cache, m, req_start)?);
+            }
+            if pending.is_empty() {
+                break;
+            }
+            m.strides.push(pending.len() as u32);
+
+            // Batched verification of all pending queries.
+            let queries: Vec<SpecQuery> =
+                pending.iter().map(|p| p.query.clone()).collect();
+            let k = self.opts.prefetch.max(1);
+            m.kb_calls += 1;
+            m.kb_queries += queries.len() as u32;
+            let (truths, b_lat, extra) = match verifier {
+                None => {
+                    let t = Stopwatch::start();
+                    let truths = self.kb.retrieve_batch(&queries, k);
+                    let b = t.elapsed();
+                    m.retrieve += b;
+                    m.event(EventKind::Verify, req_start, b);
+                    (truths, b, None)
+                }
+                Some((tx, rx)) => {
+                    tx.send((queries, k)).expect("verifier thread died");
+                    // Overlap: one extra speculation step while the batch
+                    // retrieval runs on the verifier thread (Fig 3).
+                    let extra = if !state.done {
+                        Some(self.spec_step(state, cache, m, req_start)?)
+                    } else {
+                        None
+                    };
+                    let wait = Stopwatch::start();
+                    let (truths, b) = rx.recv().expect("verifier thread died");
+                    m.verify_wait += wait.elapsed();
+                    m.retrieve += b; // component time (overlapped)
+                    m.event(EventKind::Verify, req_start, b);
+                    (truths, b, extra)
+                }
+            };
+
+            // Cache update: top-1 or top-k (prefetching) per verified query.
+            for t in &truths {
+                cache.insert(t);
+            }
+
+            // First mismatch (Alg. 1 line 12).
+            let mismatch = pending
+                .iter()
+                .zip(&truths)
+                .position(|(p, t)| t.first().map(|s| s.id) != Some(p.spec_doc));
+            let matched = mismatch.unwrap_or(pending.len());
+            m.spec_correct += matched as u32;
+            let a_mean = pending
+                .iter()
+                .map(|p| p.step_time.as_secs_f64())
+                .sum::<f64>()
+                / pending.len() as f64;
+            scheduler.observe(pending.len(), matched, a_mean,
+                              b_lat.as_secs_f64());
+
+            match mismatch {
+                None => {
+                    // All verified; the async extra step (if any) rolls into
+                    // the next round's pending list.
+                    pending.clear();
+                    if let Some(e) = extra {
+                        pending.push(e);
+                    }
+                }
+                Some(i) => {
+                    // Roll back to the mis-speculated step and redo it with
+                    // the ground-truth document (Alg. 1 lines 13-16).
+                    m.rollbacks += 1;
+                    m.wasted_tokens +=
+                        state.rollback(&pending[i].snapshot) as u32;
+                    let truth_doc = truths[i].first()
+                        .expect("verification returned empty top-k");
+                    let correct_t = Stopwatch::start();
+                    timed(&mut m.generate, || -> anyhow::Result<()> {
+                        if state.set_doc(self.lm, truth_doc.id,
+                                         &self.corpus.doc(truth_doc.id).tokens)? {
+                            m.prefills += 1;
+                        }
+                        state.generate(self.lm, self.opts.gen_stride)?;
+                        Ok(())
+                    })?;
+                    m.event(EventKind::Correct, req_start, correct_t.elapsed());
+                    pending.clear();
+                }
+            }
+            if state.done && pending.is_empty() {
+                break;
+            }
+        }
+        Ok(())
+    }
+}

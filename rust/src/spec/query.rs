@@ -1,0 +1,87 @@
+//! Query construction shared by the baseline and speculative pipelines.
+//!
+//! Equivalence between RaLMSeq and RaLMSpec requires both to derive
+//! *exactly* the same query from the same generation state, so this is the
+//! single implementation both call.
+
+use crate::datagen::Encoder;
+use crate::lm::GenState;
+use crate::retriever::SpecQuery;
+
+/// Which views of the query the active retriever needs (the dense encoder
+/// is a PJRT call — skip it for sparse-only pipelines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryMode {
+    Dense,
+    Sparse,
+    Both,
+}
+
+pub struct QueryBuilder<'a> {
+    pub encoder: &'a dyn Encoder,
+    pub mode: QueryMode,
+    /// Context-tail window sizes (config.retriever.{dense,sparse}_query_len).
+    pub dense_len: usize,
+    pub sparse_len: usize,
+}
+
+impl<'a> QueryBuilder<'a> {
+    pub fn build<S: Clone>(&self, st: &GenState<S>) -> SpecQuery {
+        self.build_from_window(
+            &st.query_window(self.dense_len.max(self.sparse_len)))
+    }
+
+    /// Build from an explicit token window (used for the initial
+    /// question-only query).
+    pub fn build_from_window(&self, window: &[u32]) -> SpecQuery {
+        let dense = match self.mode {
+            QueryMode::Sparse => Vec::new(),
+            _ => {
+                let start = window.len().saturating_sub(self.dense_len);
+                self.encoder.encode(&window[start..])
+            }
+        };
+        let terms = match self.mode {
+            QueryMode::Dense => Vec::new(),
+            _ => {
+                let start = window.len().saturating_sub(self.sparse_len);
+                window[start..].to_vec()
+            }
+        };
+        SpecQuery { dense, terms }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::HashEncoder;
+
+    #[test]
+    fn modes_populate_expected_views() {
+        let enc = HashEncoder::new(16, 1);
+        let window: Vec<u32> = (10..40).collect();
+        let mk = |mode| QueryBuilder { encoder: &enc, mode, dense_len: 8,
+                                       sparse_len: 12 };
+        let d = mk(QueryMode::Dense).build_from_window(&window);
+        assert_eq!(d.dense.len(), 16);
+        assert!(d.terms.is_empty());
+        let s = mk(QueryMode::Sparse).build_from_window(&window);
+        assert!(s.dense.is_empty());
+        assert_eq!(s.terms.len(), 12);
+        assert_eq!(s.terms, window[window.len() - 12..].to_vec());
+        let b = mk(QueryMode::Both).build_from_window(&window);
+        assert!(!b.dense.is_empty() && !b.terms.is_empty());
+    }
+
+    #[test]
+    fn dense_uses_tail_window() {
+        let enc = HashEncoder::new(16, 1);
+        let qb = QueryBuilder { encoder: &enc, mode: QueryMode::Dense,
+                                dense_len: 4, sparse_len: 4 };
+        let long: Vec<u32> = (0..50).collect();
+        let tail: Vec<u32> = (46..50).collect();
+        assert_eq!(qb.build_from_window(&long).dense,
+                   qb.build_from_window(&tail).dense);
+    }
+}

@@ -1,0 +1,33 @@
+//! Shared primitives: deterministic RNG, top-k selection, statistics.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod topk;
+
+pub use rng::{Rng, Zipf};
+pub use stats::{linear_fit, summarize, Ema, Summary};
+pub use topk::{argmax, topk_from_scores, Scored, TopK};
+
+/// Dot product of two equal-length f32 slices (the retrieval hot loop
+/// delegates to `retriever::dense::dot_chunked`; this is the simple form
+/// used by caches and small vectors).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Statistics helpers for the evaluation harness and OS³: mean/std,
+//! 95% confidence intervals (Fig 6 bands), and least-squares linear fits
+//! (the b(s) = b0 + b1·s batched-verification latency model of §A.2).
+
+/// Summary of a sample: mean, sample standard deviation, and 95% CI
+/// half-width (normal approximation, as in the paper's error bars).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub ci95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    if n == 0 {
+        return Summary { n: 0, mean: 0.0, std: 0.0, ci95: 0.0, min: 0.0, max: 0.0 };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let std = var.sqrt();
+    let ci95 = 1.96 * std / (n as f64).sqrt();
+    let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in xs {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    Summary { n, mean, std, ci95, min, max }
+}
+
+/// Ordinary least squares y = a + b·x. Returns (intercept, slope).
+/// Degenerate inputs (n < 2 or zero x-variance) fall back to (mean(y), 0).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mx = xs.iter().sum::<f64>() / n as f64;
+    let my = ys.iter().sum::<f64>() / n as f64;
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    if n < 2 || sxx < 1e-12 {
+        return (my, 0.0);
+    }
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let slope = sxy / sxx;
+    (my - slope * mx, slope)
+}
+
+/// Exponential moving average with bias-corrected warm-up.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: f64,
+    weight: f64,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, value: 0.0, weight: 0.0 }
+    }
+
+    pub fn update(&mut self, x: f64) {
+        self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
+        self.weight = self.alpha + (1.0 - self.alpha) * self.weight;
+    }
+
+    /// Bias-corrected estimate; None before any update.
+    pub fn get(&self) -> Option<f64> {
+        if self.weight > 0.0 { Some(self.value / self.weight) } else { None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_known_values() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summarize_empty_and_single() {
+        assert_eq!(summarize(&[]).n, 0);
+        let s = summarize(&[7.0]);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0]; // y = 1 + 2x
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_fit_degenerate() {
+        let (a, b) = linear_fit(&[2.0, 2.0], &[5.0, 7.0]);
+        assert_eq!(b, 0.0);
+        assert!((a - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.3);
+        assert!(e.get().is_none());
+        for _ in 0..200 {
+            e.update(4.0);
+        }
+        assert!((e.get().unwrap() - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_bias_correction_early() {
+        let mut e = Ema::new(0.1);
+        e.update(10.0);
+        // without bias correction this would be 1.0
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,201 @@
+//! Top-k selection over score streams — the inner primitive of every
+//! retriever (flat scan, HNSW candidate lists, cache ranking, KNN-LM).
+//!
+//! Scores are f32; ties break toward the **lower id** so that retrieval is
+//! fully deterministic (required for the output-equivalence guarantee:
+//! baseline and speculative paths must rank identically).
+
+/// A (id, score) candidate ordered by (score desc, id asc).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scored {
+    pub id: u32,
+    pub score: f32,
+}
+
+impl Scored {
+    #[inline]
+    pub fn better_than(&self, other: &Scored) -> bool {
+        self.score > other.score
+            || (self.score == other.score && self.id < other.id)
+    }
+}
+
+/// Bounded top-k accumulator: O(n log k) worst case, O(1) fast-path reject.
+///
+/// Implemented as a binary min-heap on the `better_than` order (root = the
+/// current worst of the kept set) so streaming inserts reject non-members
+/// with a single comparison — the hot path in the flat scan.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    heap: Vec<Scored>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "top-k with k=0");
+        Self { k, heap: Vec::with_capacity(k) }
+    }
+
+    #[inline]
+    pub fn threshold(&self) -> Option<Scored> {
+        if self.heap.len() == self.k { Some(self.heap[0]) } else { None }
+    }
+
+    #[inline]
+    pub fn push(&mut self, id: u32, score: f32) {
+        let cand = Scored { id, score };
+        if self.heap.len() < self.k {
+            self.heap.push(cand);
+            self.sift_up(self.heap.len() - 1);
+        } else if cand.better_than(&self.heap[0]) {
+            self.heap[0] = cand;
+            self.sift_down(0);
+        }
+    }
+
+    /// Drain into (score desc, id asc) order.
+    pub fn into_sorted(mut self) -> Vec<Scored> {
+        self.heap.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        self.heap
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            // min-heap on better_than: parent must be the *worst*
+            if self.heap[parent].better_than(&self.heap[i]) {
+                self.heap.swap(parent, i);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut worst = i;
+            if l < self.heap.len() && self.heap[worst].better_than(&self.heap[l])
+            {
+                worst = l;
+            }
+            if r < self.heap.len() && self.heap[worst].better_than(&self.heap[r])
+            {
+                worst = r;
+            }
+            if worst == i {
+                break;
+            }
+            self.heap.swap(i, worst);
+            i = worst;
+        }
+    }
+}
+
+/// Convenience: top-k over a full score slice (ids = indices).
+pub fn topk_from_scores(scores: &[f32], k: usize) -> Vec<Scored> {
+    let mut tk = TopK::new(k.min(scores.len()).max(1));
+    for (i, &s) in scores.iter().enumerate() {
+        tk.push(i as u32, s);
+    }
+    tk.into_sorted()
+}
+
+/// Deterministic argmax (ties -> lowest index). Returns None on empty input.
+pub fn argmax(xs: &[f32]) -> Option<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        match best {
+            None => best = Some((i, x)),
+            Some((_, bx)) if x > bx => best = Some((i, x)),
+            _ => {}
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reference_topk(scores: &[f32], k: usize) -> Vec<Scored> {
+        let mut all: Vec<Scored> = scores
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| Scored { id: i as u32, score: s })
+            .collect();
+        all.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn matches_sort_reference() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for n in [1usize, 5, 50, 1000] {
+            for k in [1usize, 3, 10] {
+                let scores: Vec<f32> =
+                    (0..n).map(|_| rng.next_f32() * 10.0 - 5.0).collect();
+                let got = topk_from_scores(&scores, k);
+                let exp = reference_topk(&scores, k.min(n));
+                assert_eq!(got.len(), exp.len());
+                for (g, e) in got.iter().zip(&exp) {
+                    assert_eq!(g.id, e.id, "n={n} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tie_breaks_to_lower_id() {
+        let scores = vec![1.0, 2.0, 2.0, 2.0, 0.5];
+        let got = topk_from_scores(&scores, 2);
+        assert_eq!(got[0].id, 1);
+        assert_eq!(got[1].id, 2);
+    }
+
+    #[test]
+    fn argmax_basic_and_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), Some(1));
+        assert_eq!(argmax(&[2.0, 2.0]), Some(0));
+        assert_eq!(argmax(&[]), None);
+    }
+
+    #[test]
+    fn handles_k_larger_than_n() {
+        let got = topk_from_scores(&[3.0, 1.0], 10);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].id, 0);
+    }
+
+    #[test]
+    fn streaming_threshold_rejects() {
+        let mut tk = TopK::new(2);
+        tk.push(0, 5.0);
+        tk.push(1, 4.0);
+        assert_eq!(tk.threshold().unwrap().score, 4.0);
+        tk.push(2, 1.0); // rejected
+        let out = tk.into_sorted();
+        assert_eq!(out.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1]);
+    }
+}

@@ -1,0 +1,159 @@
+//! KNN-LM serving integration (§5.3): output equivalence under relaxed
+//! verification, datastore/cache interplay, and interpolation effects —
+//! all on the mock LM + mock datastore (shared HashEncoder space).
+
+use ralmspec::config::CorpusConfig;
+use ralmspec::datagen::generate_stream;
+use ralmspec::knnlm::{Datastore, KnnLmBaseline, KnnLmSpec, KnnServeOptions};
+use ralmspec::lm::MockLm;
+use ralmspec::retriever::dense::DenseExact;
+use ralmspec::retriever::hnsw::Hnsw;
+use ralmspec::spec::{Os3Config, StridePolicy};
+use ralmspec::util::Rng;
+
+const DIM: usize = ralmspec::runtime::RETRIEVAL_DIM;
+
+struct Fixture {
+    ds: Datastore,
+    lm: MockLm,
+    prompts: Vec<Vec<u32>>,
+}
+
+fn fixture(seed: u64, n_entries: usize) -> Fixture {
+    let cfg = CorpusConfig { seed, ..CorpusConfig::default() };
+    let stream = generate_stream(&cfg, n_entries + 400, seed);
+    // MockLm's qproj is HashEncoder(seed ^ 0xE over lm seed space); the
+    // datastore keys must live in the SAME space, so use the same seed.
+    let lm_seed = seed ^ 0x11;
+    let ds = Datastore::build_mock(&stream, DIM, lm_seed ^ 0xE, n_entries);
+    let lm = MockLm::new(cfg.vocab, 320, lm_seed);
+    let mut rng = Rng::new(seed ^ 0x77);
+    let prompts = (0..4)
+        .map(|_| {
+            let start = rng.gen_range(stream.len() - 40);
+            stream.tokens[start..start + 20].to_vec()
+        })
+        .collect();
+    Fixture { ds, lm, prompts }
+}
+
+fn opts(k: usize, stride: StridePolicy) -> KnnServeOptions {
+    KnnServeOptions {
+        k,
+        stride,
+        max_new: 24,
+        ..KnnServeOptions::default()
+    }
+}
+
+/// Relaxed verification preserves the baseline output token-for-token.
+#[test]
+fn knn_spec_matches_baseline_output() {
+    for seed in [1u64, 3] {
+        let f = fixture(seed, 6_000);
+        let kb = DenseExact::new(f.ds.keys.clone());
+        for k in [1usize, 8] {
+            for stride in [StridePolicy::Fixed(2),
+                           StridePolicy::Os3(Os3Config::default())] {
+                for p in &f.prompts {
+                    let base = KnnLmBaseline {
+                        lm: &f.lm, kb: &kb, ds: &f.ds,
+                        opts: opts(k, StridePolicy::Fixed(1)),
+                    }.run(p).unwrap();
+                    let spec = KnnLmSpec {
+                        lm: &f.lm, kb: &kb, ds: &f.ds,
+                        opts: opts(k, stride.clone()),
+                    }.run(p).unwrap();
+                    assert_eq!(spec.tokens_out, base.tokens_out,
+                               "seed={seed} k={k} stride={stride:?}");
+                }
+            }
+        }
+    }
+}
+
+/// With HNSW as the KB retriever the *approximate* results are the ground
+/// truth being preserved (paper: same guarantee relative to the retriever).
+#[test]
+fn knn_spec_matches_baseline_with_hnsw() {
+    let f = fixture(5, 6_000);
+    let kb = Hnsw::build(f.ds.keys.clone(), 12, 60, 48, 55);
+    for p in &f.prompts {
+        let base = KnnLmBaseline {
+            lm: &f.lm, kb: &kb, ds: &f.ds,
+            opts: opts(8, StridePolicy::Fixed(1)),
+        }.run(p).unwrap();
+        let spec = KnnLmSpec {
+            lm: &f.lm, kb: &kb, ds: &f.ds,
+            opts: opts(8, StridePolicy::Fixed(3)),
+        }.run(p).unwrap();
+        assert_eq!(spec.tokens_out, base.tokens_out);
+    }
+}
+
+/// Speculation must reduce KB calls whenever accuracy is non-trivial, and
+/// must never issue fewer verified queries than tokens generated.
+#[test]
+fn knn_spec_batches_kb_calls() {
+    let f = fixture(8, 6_000);
+    let kb = DenseExact::new(f.ds.keys.clone());
+    for p in &f.prompts {
+        let base = KnnLmBaseline {
+            lm: &f.lm, kb: &kb, ds: &f.ds,
+            opts: opts(16, StridePolicy::Fixed(1)),
+        }.run(p).unwrap();
+        let spec = KnnLmSpec {
+            lm: &f.lm, kb: &kb, ds: &f.ds,
+            opts: opts(16, StridePolicy::Fixed(4)),
+        }.run(p).unwrap();
+        assert!(spec.kb_calls < base.kb_calls,
+                "spec {} vs base {}", spec.kb_calls, base.kb_calls);
+        assert!(spec.kb_queries + 4 >= base.kb_queries);
+    }
+}
+
+/// The interpolated distribution must actually differ from the pure LM
+/// (lambda > 0 pulls toward datastore continuations) — guards against the
+/// KNN path silently degenerating to greedy LM decoding.
+#[test]
+fn interpolation_changes_some_outputs() {
+    let f = fixture(13, 6_000);
+    let kb = DenseExact::new(f.ds.keys.clone());
+    let mut diffs = 0;
+    for p in &f.prompts {
+        let with_knn = KnnLmBaseline {
+            lm: &f.lm, kb: &kb, ds: &f.ds,
+            opts: KnnServeOptions { k: 16, lambda: 0.6, max_new: 24,
+                                    ..KnnServeOptions::default() },
+        }.run(p).unwrap();
+        let pure_lm = KnnLmBaseline {
+            lm: &f.lm, kb: &kb, ds: &f.ds,
+            opts: KnnServeOptions { k: 16, lambda: 0.0, max_new: 24,
+                                    ..KnnServeOptions::default() },
+        }.run(p).unwrap();
+        if with_knn.tokens_out != pure_lm.tokens_out {
+            diffs += 1;
+        }
+    }
+    assert!(diffs > 0, "lambda=0.6 never changed any output");
+}
+
+/// Speculation accuracy should be clearly positive thanks to the next-n
+/// consecutive-entry cache rule (spatial locality of the stream).
+#[test]
+fn spatial_locality_gives_nonzero_accuracy() {
+    let f = fixture(21, 8_000);
+    let kb = DenseExact::new(f.ds.keys.clone());
+    let mut steps = 0u64;
+    let mut correct = 0u64;
+    for p in &f.prompts {
+        let m = KnnLmSpec {
+            lm: &f.lm, kb: &kb, ds: &f.ds,
+            opts: opts(8, StridePolicy::Fixed(3)),
+        }.run(p).unwrap();
+        steps += m.spec_steps as u64;
+        correct += m.spec_correct as u64;
+    }
+    let acc = correct as f64 / steps.max(1) as f64;
+    assert!(acc > 0.2, "speculation accuracy {acc} too low");
+}

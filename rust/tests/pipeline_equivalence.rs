@@ -1,0 +1,224 @@
+//! THE correctness property of the paper (§3): RaLMSpec provably preserves
+//! the baseline's output. For every retriever class, stride policy,
+//! prefetch size, and async setting — over many random corpora, questions,
+//! and mock-LM seeds — the speculative pipeline must emit token-for-token
+//! the RaLMSeq output.
+//!
+//! Runs on the deterministic MockLm (no artifacts needed), which honours
+//! the same contract as the PJRT LM: identical context -> identical logits.
+//! The PJRT version of this check lives in runtime_artifacts.rs.
+
+use ralmspec::baseline::{BaselineOptions, RalmSeq};
+use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+use ralmspec::datagen::{generate_questions, Dataset, HashEncoder};
+use ralmspec::eval::TestBed;
+use ralmspec::lm::MockLm;
+use ralmspec::spec::{Os3Config, QueryBuilder, SpecOptions, SpecPipeline,
+                     StridePolicy};
+use ralmspec::util::Rng;
+
+fn small_config(seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.corpus = CorpusConfig {
+        n_docs: 600,
+        n_topics: 12,
+        doc_len: (24, 80),
+        seed,
+        ..CorpusConfig::default()
+    };
+    cfg.retriever.hnsw_ef_construction = 40;
+    cfg.retriever.hnsw_ef_search = 32;
+    cfg.spec.max_new_tokens = 28;
+    cfg
+}
+
+fn run_equivalence(seed: u64, kind: RetrieverKind, stride: StridePolicy,
+                   prefetch: usize, async_verify: bool) {
+    let cfg = small_config(seed);
+    let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, seed ^ 0xEC);
+    let bed = TestBed::build(&cfg, &enc);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+    let kb = bed.retriever(kind);
+    let mode = ralmspec::eval::query_mode(kind);
+    let questions = generate_questions(Dataset::WikiQa, &bed.corpus, 4, seed);
+
+    for q in &questions {
+        let queries = QueryBuilder {
+            encoder: &enc,
+            mode,
+            dense_len: cfg.retriever.dense_query_len,
+            sparse_len: cfg.retriever.sparse_query_len,
+        };
+        let base = RalmSeq {
+            lm: &lm,
+            kb: kb.as_ref(),
+            corpus: &bed.corpus,
+            queries,
+            opts: BaselineOptions {
+                gen_stride: cfg.spec.gen_stride,
+                max_new: cfg.spec.max_new_tokens,
+                max_doc_tokens: cfg.spec.max_doc_tokens,
+            },
+        }
+        .run(&q.tokens)
+        .unwrap();
+
+        let queries = QueryBuilder {
+            encoder: &enc,
+            mode,
+            dense_len: cfg.retriever.dense_query_len,
+            sparse_len: cfg.retriever.sparse_query_len,
+        };
+        let spec = SpecPipeline {
+            lm: &lm,
+            kb: kb.as_ref(),
+            corpus: &bed.corpus,
+            queries,
+            opts: SpecOptions {
+                gen_stride: cfg.spec.gen_stride,
+                stride: stride.clone(),
+                prefetch,
+                async_verify,
+                max_new: cfg.spec.max_new_tokens,
+                max_doc_tokens: cfg.spec.max_doc_tokens,
+                cache_cap: 512,
+            },
+        }
+        .run(&q.tokens)
+        .unwrap();
+
+        assert_eq!(
+            spec.tokens_out, base.tokens_out,
+            "OUTPUT DIVERGED: seed={seed} kind={kind:?} stride={stride:?} \
+             prefetch={prefetch} async={async_verify} q={}", q.id);
+    }
+}
+
+#[test]
+fn equivalence_edr_basic() {
+    run_equivalence(1, RetrieverKind::Edr, StridePolicy::Fixed(3), 1, false);
+}
+
+#[test]
+fn equivalence_adr_basic() {
+    run_equivalence(2, RetrieverKind::Adr, StridePolicy::Fixed(3), 1, false);
+}
+
+#[test]
+fn equivalence_sr_basic() {
+    run_equivalence(3, RetrieverKind::Sr, StridePolicy::Fixed(3), 1, false);
+}
+
+#[test]
+fn equivalence_with_prefetch() {
+    for kind in RetrieverKind::all() {
+        run_equivalence(4, kind, StridePolicy::Fixed(3), 20, false);
+        run_equivalence(5, kind, StridePolicy::Fixed(2), 256, false);
+    }
+}
+
+#[test]
+fn equivalence_with_os3() {
+    for kind in RetrieverKind::all() {
+        run_equivalence(6, kind,
+                        StridePolicy::Os3(Os3Config::default()), 1, false);
+        run_equivalence(7, kind,
+                        StridePolicy::Os3(Os3Config::default()), 20, false);
+    }
+}
+
+#[test]
+fn equivalence_with_async_verification() {
+    for kind in RetrieverKind::all() {
+        run_equivalence(8, kind, StridePolicy::Fixed(3), 1, true);
+        run_equivalence(9, kind,
+                        StridePolicy::Os3(Os3Config {
+                            async_mode: true,
+                            ..Os3Config::default()
+                        }),
+                        20, true);
+    }
+}
+
+#[test]
+fn equivalence_extreme_strides() {
+    for s in [1usize, 8, 16] {
+        run_equivalence(10 + s as u64, RetrieverKind::Edr,
+                        StridePolicy::Fixed(s), 1, false);
+    }
+}
+
+/// Property-style sweep: random (seed, kind, stride, prefetch, async)
+/// combinations. This is the in-tree substitute for proptest (offline
+/// image): inputs are drawn from a seeded RNG, so failures reproduce.
+#[test]
+fn equivalence_randomized_sweep() {
+    let mut rng = Rng::new(0xE05EED);
+    for trial in 0..12 {
+        let seed = rng.next_u64() % 10_000;
+        let kind = RetrieverKind::all()[rng.gen_range(3)];
+        let stride = if rng.next_f64() < 0.4 {
+            StridePolicy::Os3(Os3Config {
+                async_mode: rng.next_f64() < 0.5,
+                ..Os3Config::default()
+            })
+        } else {
+            StridePolicy::Fixed(1 + rng.gen_range(8))
+        };
+        let prefetch = [1usize, 5, 20, 64][rng.gen_range(4)];
+        let async_verify = rng.next_f64() < 0.5;
+        eprintln!("trial {trial}: seed={seed} kind={kind:?} {stride:?} \
+                   p={prefetch} a={async_verify}");
+        run_equivalence(seed, kind, stride, prefetch, async_verify);
+    }
+}
+
+/// The speculative pipeline must never *lose* retrievals either: its
+/// verified KB queries per request match the baseline's count (same number
+/// of generation intervals), only batched differently.
+#[test]
+fn speculation_preserves_retrieval_schedule() {
+    let cfg = small_config(77);
+    let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, 77 ^ 0xEC);
+    let bed = TestBed::build(&cfg, &enc);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, 99);
+    let kb = bed.retriever(RetrieverKind::Edr);
+    let questions = generate_questions(Dataset::Nq, &bed.corpus, 3, 5);
+    for q in &questions {
+        let mk_queries = || QueryBuilder {
+            encoder: &enc,
+            mode: ralmspec::spec::QueryMode::Dense,
+            dense_len: 32,
+            sparse_len: 32,
+        };
+        let base = RalmSeq {
+            lm: &lm, kb: kb.as_ref(), corpus: &bed.corpus,
+            queries: mk_queries(),
+            opts: BaselineOptions {
+                gen_stride: 4, max_new: 28, max_doc_tokens: 192,
+            },
+        }.run(&q.tokens).unwrap();
+        let spec = SpecPipeline {
+            lm: &lm, kb: kb.as_ref(), corpus: &bed.corpus,
+            queries: mk_queries(),
+            opts: SpecOptions {
+                gen_stride: 4,
+                stride: StridePolicy::Fixed(3),
+                prefetch: 1,
+                async_verify: false,
+                max_new: 28,
+                max_doc_tokens: 192,
+                cache_cap: 512,
+            },
+        }.run(&q.tokens).unwrap();
+        // Every baseline query is re-issued inside some batched
+        // verification (equality can be off by the trailing partial round).
+        assert!(spec.kb_queries + 1 >= base.kb_queries,
+                "spec verified too few queries: {} vs {}", spec.kb_queries,
+                base.kb_queries);
+        // But it must batch them into fewer KB calls.
+        assert!(spec.kb_calls <= base.kb_calls,
+                "speculation didn't reduce KB calls: {} vs {}",
+                spec.kb_calls, base.kb_calls);
+    }
+}

@@ -1,0 +1,177 @@
+//! Cross-retriever integration: rank preservation through the local cache,
+//! batched-vs-sequential consistency, HNSW quality on the real synthetic
+//! corpus, and the Fig-6 batching profiles (shape, not absolute time).
+
+use ralmspec::cache::LocalCache;
+use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+use ralmspec::datagen::HashEncoder;
+use ralmspec::eval::TestBed;
+use ralmspec::retriever::{Retriever, SpecQuery};
+use ralmspec::util::Rng;
+
+fn bed(seed: u64, n_docs: usize) -> (Config, TestBed, HashEncoder) {
+    let mut cfg = Config::default();
+    cfg.corpus = CorpusConfig {
+        n_docs,
+        n_topics: 24,
+        seed,
+        ..CorpusConfig::default()
+    };
+    cfg.retriever.hnsw_ef_construction = 60;
+    cfg.retriever.hnsw_ef_search = 48;
+    let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, seed);
+    let b = TestBed::build(&cfg, &enc);
+    (cfg, b, enc)
+}
+
+fn queries(bed: &TestBed, enc: &HashEncoder, n: usize, seed: u64)
+           -> Vec<(SpecQuery, SpecQuery)> {
+    use ralmspec::datagen::Encoder;
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let topic = (i % bed.corpus.n_topics) as u32;
+            let toks = bed.corpus.topic_tokens(topic, 12, &mut rng);
+            (SpecQuery::dense_only(enc.encode(&toks)),
+             SpecQuery::sparse_only(toks))
+        })
+        .collect()
+}
+
+/// Rank preservation (§3): whenever the KB top-1 document is inside the
+/// cache, a cache lookup must return exactly that document — for all three
+/// retriever classes, including HNSW (whose `score_doc` is exact).
+#[test]
+fn rank_preservation_all_retrievers() {
+    let (_, bed, enc) = bed(1, 2_000);
+    let qs = queries(&bed, &enc, 24, 2);
+    let mut rng = Rng::new(3);
+    for kind in RetrieverKind::all() {
+        let kb = bed.retriever(kind);
+        for (dense_q, sparse_q) in &qs {
+            let q = match kind {
+                RetrieverKind::Sr => sparse_q,
+                _ => dense_q,
+            };
+            let truth = kb.retrieve_topk(q, 8);
+            if truth.is_empty() {
+                continue;
+            }
+            let mut cache = LocalCache::new(128);
+            cache.insert(&truth);
+            // plus random distractors
+            let distract: Vec<u32> =
+                (0..16).map(|_| rng.gen_range(bed.corpus.len()) as u32)
+                       .collect();
+            cache.insert_ids(&distract);
+            let got = cache.retrieve(q, kb.as_ref()).unwrap();
+            assert_eq!(got.id, truth[0].id, "kind={kind:?}");
+        }
+    }
+}
+
+/// Batched retrieval must return exactly the sequential results (the
+/// verification step depends on it for output equivalence).
+#[test]
+fn batch_equals_sequential_all_retrievers() {
+    let (_, bed, enc) = bed(4, 1_500);
+    let qs = queries(&bed, &enc, 8, 5);
+    for kind in RetrieverKind::all() {
+        let kb = bed.retriever(kind);
+        let batch: Vec<SpecQuery> = qs
+            .iter()
+            .map(|(d, s)| match kind {
+                RetrieverKind::Sr => s.clone(),
+                _ => d.clone(),
+            })
+            .collect();
+        let together = kb.retrieve_batch(&batch, 6);
+        for (q, t) in batch.iter().zip(&together) {
+            let alone = kb.retrieve_topk(q, 6);
+            assert_eq!(alone.iter().map(|s| s.id).collect::<Vec<_>>(),
+                       t.iter().map(|s| s.id).collect::<Vec<_>>(),
+                       "kind={kind:?}");
+        }
+    }
+}
+
+/// HNSW over the real synthetic corpus embeddings: recall@10 >= 0.8 vs the
+/// flat scan (the paper's ADR trades exactly this accuracy for speed).
+#[test]
+fn hnsw_recall_on_corpus() {
+    let (_, bed, enc) = bed(6, 4_000);
+    let flat = bed.retriever(RetrieverKind::Edr);
+    let hnsw = bed.retriever(RetrieverKind::Adr);
+    let qs = queries(&bed, &enc, 30, 7);
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for (dense_q, _) in &qs {
+        let truth: std::collections::HashSet<u32> =
+            flat.retrieve_topk(dense_q, 10).iter().map(|s| s.id).collect();
+        for s in hnsw.retrieve_topk(dense_q, 10) {
+            total += 1;
+            hits += truth.contains(&s.id) as usize;
+        }
+    }
+    let recall = hits as f64 / total as f64;
+    assert!(recall >= 0.8, "recall@10 = {recall}");
+}
+
+/// Dense retrieval should surface on-topic documents (the locality the
+/// speculation cache exploits).
+#[test]
+fn dense_retrieval_is_topical() {
+    let (_, bed, enc) = bed(8, 3_000);
+    let kb = bed.retriever(RetrieverKind::Edr);
+    let mut rng = Rng::new(9);
+    use ralmspec::datagen::Encoder;
+    let mut on_topic = 0;
+    let trials = 30;
+    for i in 0..trials {
+        let topic = (i % bed.corpus.n_topics) as u32;
+        let toks = bed.corpus.topic_tokens(topic, 12, &mut rng);
+        let q = SpecQuery::dense_only(enc.encode(&toks));
+        let top = kb.retrieve(&q).unwrap();
+        if bed.corpus.doc(top.id).topic == topic {
+            on_topic += 1;
+        }
+    }
+    assert!(on_topic * 2 >= trials,
+            "only {on_topic}/{trials} retrievals on-topic");
+}
+
+/// Fig 6 *shape*: EDR batched retrieval amortizes — per-query latency at
+/// batch 16 is measurably below the single-query latency. Only meaningful
+/// with optimizations on; debug builds skip (timing there reflects
+/// overhead, not the memory-vs-compute trade-off).
+#[test]
+fn fig6_batching_shapes() {
+    if cfg!(debug_assertions) {
+        eprintln!("skipped in debug build (timing-sensitive)");
+        return;
+    }
+    let (_, bed, enc) = bed(10, 20_000);
+    let qs = queries(&bed, &enc, 16, 11);
+    let dense: Vec<SpecQuery> = qs.iter().map(|(d, _)| d.clone()).collect();
+    let time_batch = |kb: &dyn Retriever, queries: &[SpecQuery]| -> f64 {
+        // median of 5 trials for stability
+        let mut ts: Vec<f64> = (0..5)
+            .map(|_| {
+                let t = std::time::Instant::now();
+                let r = kb.retrieve_batch(queries, 10);
+                assert_eq!(r.len(), queries.len());
+                t.elapsed().as_secs_f64()
+            })
+            .collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ts[2]
+    };
+    let edr = bed.retriever(RetrieverKind::Edr);
+    let t1 = time_batch(edr.as_ref(), &dense[..1]);
+    let t16 = time_batch(edr.as_ref(), &dense[..16]);
+    // EDR: one corpus pass for the whole batch — per-query cost must drop.
+    let per_query_16 = t16 / 16.0;
+    assert!(per_query_16 < t1 * 0.8,
+            "EDR batch16 per-query {per_query_16:.6}s vs single {t1:.6}s — \
+             no amortization");
+}

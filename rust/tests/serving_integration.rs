@@ -1,0 +1,169 @@
+//! Serving-layer integration: the router drives real QA pipelines (mock LM
+//! backend — no artifacts needed) across multiple worker threads, with
+//! per-request method selection and backpressure.
+
+use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+use ralmspec::datagen::{generate_questions, Dataset, HashEncoder};
+use ralmspec::eval::{run_qa_cell, QaMethod, TestBed};
+use ralmspec::lm::MockLm;
+use ralmspec::metrics::ReqMetrics;
+use ralmspec::serving::{Request, Response, Router, ServeBackend};
+use std::sync::Arc;
+
+/// A QA backend over shared (Sync) fixtures; each worker builds its own
+/// MockLm (stand-in for a per-worker PJRT engine).
+struct QaBackend {
+    cfg: Config,
+    bed: Arc<BedBundle>,
+    lm: MockLm,
+    enc: HashEncoder,
+}
+
+/// TestBed isn't Sync (lazy RefCell retrievers), so workers share the
+/// prebuilt pieces and each owns a TestBed-equivalent view.
+struct BedBundle {
+    cfg: Config,
+    corpus_seed: u64,
+}
+
+impl ServeBackend for QaBackend {
+    fn serve(&mut self, req: &Request) -> anyhow::Result<ReqMetrics> {
+        // Rebuild is cheap at test scale; in the PJRT deployment the
+        // worker keeps its TestBed across requests.
+        let bed = TestBed::build(&self.cfg, &self.enc);
+        let method = match req.method {
+            ralmspec::serving::router::Method::Baseline => QaMethod::Baseline,
+            ralmspec::serving::router::Method::Spec { prefetch, os3,
+                                                      async_verify } => {
+                QaMethod::Spec {
+                    prefetch: if prefetch { 20 } else { 1 },
+                    os3,
+                    async_verify,
+                    stride: 3,
+                }
+            }
+        };
+        let q = ralmspec::datagen::Question {
+            id: req.id,
+            dataset: Dataset::WikiQa,
+            topic: 0,
+            tokens: req.question.clone(),
+        };
+        let _ = &self.bed;
+        let mut ms = run_qa_cell(&self.lm, &self.enc, &bed,
+                                 RetrieverKind::Edr,
+                                 std::slice::from_ref(&q), method,
+                                 &self.cfg)?;
+        Ok(ms.pop().unwrap())
+    }
+}
+
+fn test_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.corpus = CorpusConfig {
+        n_docs: 400,
+        n_topics: 8,
+        doc_len: (24, 60),
+        seed: 404,
+        ..CorpusConfig::default()
+    };
+    cfg.spec.max_new_tokens = 16;
+    cfg
+}
+
+#[test]
+fn router_serves_qa_requests_end_to_end() {
+    let cfg = test_cfg();
+    let bundle = Arc::new(BedBundle { cfg: cfg.clone(), corpus_seed: 404 });
+    let cfg2 = cfg.clone();
+    let router = Router::spawn(32, 2, move || {
+        Ok(QaBackend {
+            cfg: cfg2.clone(),
+            bed: bundle.clone(),
+            lm: MockLm::new(cfg2.corpus.vocab, 320, 1),
+            enc: HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM,
+                                  404 ^ 0xEC),
+        })
+    });
+    // Build questions once outside.
+    let bed = TestBed::build(&cfg, &HashEncoder::new(
+        ralmspec::runtime::RETRIEVAL_DIM, 404 ^ 0xEC));
+    let questions = generate_questions(Dataset::WikiQa, &bed.corpus, 6, 9);
+    let mut responses: Vec<Response> = Vec::new();
+    let pending: Vec<_> = questions
+        .iter()
+        .enumerate()
+        .map(|(i, q)| {
+            router
+                .submit(Request {
+                    id: i as u64,
+                    question: q.tokens.clone(),
+                    method: if i % 2 == 0 {
+                        ralmspec::serving::router::Method::Baseline
+                    } else {
+                        ralmspec::serving::router::Method::Spec {
+                            prefetch: true,
+                            os3: true,
+                            async_verify: false,
+                        }
+                    },
+                })
+                .unwrap()
+        })
+        .collect();
+    for rx in pending {
+        responses.push(rx.recv().unwrap().unwrap());
+    }
+    assert_eq!(responses.len(), 6);
+    for r in &responses {
+        assert!(!r.tokens.is_empty(), "request {} produced no tokens", r.id);
+        assert!(r.metrics.total.as_nanos() > 0);
+    }
+    // Same question served as baseline (id 0) and spec (id 1 uses a
+    // different question) — check determinism instead: resubmit id 0.
+    let again = router
+        .submit_blocking(Request {
+            id: 100,
+            question: questions[0].tokens.clone(),
+            method: ralmspec::serving::router::Method::Baseline,
+        })
+        .unwrap();
+    assert_eq!(again.tokens, responses[0].tokens,
+               "same request must be deterministic");
+    router.shutdown();
+}
+
+#[test]
+fn spec_and_baseline_agree_through_router() {
+    let cfg = test_cfg();
+    let cfg2 = cfg.clone();
+    let router = Router::spawn(8, 1, move || {
+        Ok(QaBackend {
+            cfg: cfg2.clone(),
+            bed: Arc::new(BedBundle { cfg: cfg2.clone(), corpus_seed: 404 }),
+            lm: MockLm::new(cfg2.corpus.vocab, 320, 1),
+            enc: HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM,
+                                  404 ^ 0xEC),
+        })
+    });
+    let bed = TestBed::build(&cfg, &HashEncoder::new(
+        ralmspec::runtime::RETRIEVAL_DIM, 404 ^ 0xEC));
+    let questions = generate_questions(Dataset::WebQ, &bed.corpus, 3, 11);
+    for (i, q) in questions.iter().enumerate() {
+        let base = router.submit_blocking(Request {
+            id: i as u64 * 2,
+            question: q.tokens.clone(),
+            method: ralmspec::serving::router::Method::Baseline,
+        }).unwrap();
+        let spec = router.submit_blocking(Request {
+            id: i as u64 * 2 + 1,
+            question: q.tokens.clone(),
+            method: ralmspec::serving::router::Method::Spec {
+                prefetch: true, os3: false, async_verify: true,
+            },
+        }).unwrap();
+        assert_eq!(base.tokens, spec.tokens, "question {i}");
+        assert!(spec.metrics.kb_calls <= base.metrics.kb_calls);
+    }
+    router.shutdown();
+}
