@@ -6,6 +6,10 @@
 //! Structured identically to the speculative pipeline's *verified* path so
 //! output equivalence is provable step by step: same query construction,
 //! same top-1 selection, same document conditioning, same greedy decoding.
+//! `Retriever::retrieve` here derives from the batch-first primitive (a
+//! batch of one), so the baseline's scores share the speculative
+//! verification's numeric path bit-for-bit — the foundation of the
+//! equivalence proof.
 
 use crate::datagen::Corpus;
 use crate::lm::{GenState, LanguageModel};

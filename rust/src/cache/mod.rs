@@ -28,6 +28,8 @@ pub struct LocalCache {
     /// duplicated).
     present: HashMap<DocId, ()>,
     cap: usize,
+    /// Reusable id buffer for batched lookup scoring.
+    ids_buf: Vec<DocId>,
     /// Statistics for γ estimation and reports.
     pub lookups: u64,
     pub hits_nonempty: u64,
@@ -46,6 +48,7 @@ impl LocalCache {
             order: std::collections::VecDeque::new(),
             present: HashMap::new(),
             cap,
+            ids_buf: Vec::new(),
             lookups: 0,
             hits_nonempty: 0,
         }
@@ -65,6 +68,11 @@ impl LocalCache {
 
     /// Speculative retrieval: rank all cached docs with the KB's own metric.
     /// Returns None when empty (caller falls back to the current document).
+    ///
+    /// Goes through the batch-first [`Retriever::score_docs`] API — one
+    /// trait call per lookup instead of one per cached doc, and a sharded
+    /// KB forwards it to its inner backend so cache ranking stays exactly
+    /// the KB metric (rank preservation composes through sharding).
     pub fn retrieve(&mut self, q: &SpecQuery, kb: &dyn Retriever)
                     -> Option<Scored> {
         self.lookups += 1;
@@ -72,9 +80,12 @@ impl LocalCache {
             return None;
         }
         self.hits_nonempty += 1;
+        self.ids_buf.clear();
+        self.ids_buf.extend(self.order.iter().copied());
+        let scores = kb.score_docs(q, &self.ids_buf);
         let mut best: Option<Scored> = None;
-        for &doc in &self.order {
-            let s = Scored { id: doc, score: kb.score_doc(q, doc) };
+        for (&doc, &score) in self.ids_buf.iter().zip(&scores) {
+            let s = Scored { id: doc, score };
             if best.map_or(true, |b| s.better_than(&b)) {
                 best = Some(s);
             }

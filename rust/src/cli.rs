@@ -73,8 +73,10 @@ COMMANDS:
                                   table5 fig6
                              --fast shrinks the grid for smoke runs
                              --mock uses the hash-chain LM (no artifacts)
+                             --shards N shard-parallel knowledge base
     serve [--model gpt2m] [--requests N] [--dataset wikiqa]
           [--retriever edr|adr|sr] [--method baseline|spec|psa]
+          [--shards N]
                              batch-serve a QA workload through the router
     trace [--retriever edr] [--mock]
                              emit a Fig-1(c)-style per-request timeline

@@ -226,6 +226,10 @@ pub struct RetrieverConfig {
     pub bm25_b: f32,
     pub sparse_query_len: usize,
     pub dense_query_len: usize,
+    /// Knowledge-base shard count (1 = unsharded). >1 wraps the backend in
+    /// the scatter-gather `ShardedRetriever`; results are bit-identical,
+    /// batched retrieval parallelizes over the worker pool.
+    pub shards: usize,
 }
 
 impl Default for RetrieverConfig {
@@ -238,6 +242,7 @@ impl Default for RetrieverConfig {
             bm25_b: 0.4,
             sparse_query_len: 32,
             dense_query_len: 32,
+            shards: 1,
         }
     }
 }
@@ -252,6 +257,7 @@ impl RetrieverConfig {
             "bm25_b" => self.bm25_b => f32,
             "sparse_query_len" => self.sparse_query_len => usize,
             "dense_query_len" => self.dense_query_len => usize,
+            "shards" => self.shards => usize,
         });
     }
 
@@ -265,6 +271,7 @@ impl RetrieverConfig {
             ("bm25_b", Value::num(self.bm25_b as f64)),
             ("sparse_query_len", Value::num(self.sparse_query_len as f64)),
             ("dense_query_len", Value::num(self.dense_query_len as f64)),
+            ("shards", Value::num(self.shards as f64)),
         ])
     }
 }
@@ -509,6 +516,16 @@ mod tests {
         assert_eq!(c.spec.stride, 5);
         assert_eq!(c.spec.gen_stride, 4); // default preserved
         assert_eq!(c.corpus.n_docs, CorpusConfig::default().n_docs);
+    }
+
+    #[test]
+    fn shards_default_and_merge() {
+        assert_eq!(Config::default().retriever.shards, 1);
+        let v = json::parse(r#"{"retriever": {"shards": 4}}"#).unwrap();
+        let mut c = Config::default();
+        c.merge(&v);
+        assert_eq!(c.retriever.shards, 4);
+        assert_eq!(c.retriever.hnsw_m, 16); // untouched default
     }
 
     #[test]

@@ -178,6 +178,9 @@ fn apply_scale(cfg: &mut Config, flags: &Flags) -> anyhow::Result<()> {
     if let Some(n) = flags.get_usize("docs")? {
         cfg.corpus.n_docs = n;
     }
+    if let Some(n) = flags.get_usize("shards")? {
+        cfg.retriever.shards = n.max(1);
+    }
     Ok(())
 }
 
@@ -628,11 +631,16 @@ fn table5(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
 // Fig 6: batched retrieval latency per query vs batch size
 // ---------------------------------------------------------------------------
 
+/// Shard counts swept by the fig6 driver (the "shard-count sweep column").
+const FIG6_SHARDS: [usize; 3] = [1, 2, 4];
+
 fn fig6(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
     let bed = build_bed(cfg, provider)?;
     let enc = provider.encoder()?;
     let mut report = Report::new(
-        "fig6", "Batched retrieval: latency per query vs batch size — Fig 6 (A.1)");
+        "fig6",
+        "Batched retrieval: sequential vs batched vs sharded latency per \
+         query — Fig 6 (A.1)");
     let mut rng = Rng::new(cfg.eval.seed ^ 0xF16);
     // Realistic queries: encoded topic windows.
     let windows: Vec<Vec<u32>> = (0..32)
@@ -647,35 +655,94 @@ fn fig6(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
         .iter()
         .map(|w| SpecQuery::sparse_only(w.clone()))
         .collect();
-    let trials = 12usize;
+    const TRIALS: usize = 12;
+    // Timer for one invocation form, returning mean ms/query + CI.
+    fn time_ms_per_query(f: &mut dyn FnMut(&[SpecQuery]) -> usize,
+                         queries: &[SpecQuery], bs: usize)
+                         -> crate::util::Summary {
+        let mut per_query = Vec::with_capacity(TRIALS);
+        for t in 0..TRIALS {
+            let start = (t * bs) % (queries.len() - bs + 1);
+            let batch = &queries[start..start + bs];
+            let sw = crate::metrics::Stopwatch::start();
+            let n = f(batch);
+            let dt = sw.elapsed().as_secs_f64();
+            assert_eq!(n, bs);
+            per_query.push(dt / bs as f64 * 1e3); // ms/query
+        }
+        summarize(&per_query)
+    }
     for kind in RetrieverKind::all() {
-        let kb = bed.retriever(kind);
+        let kb = bed.unsharded(kind);
+        let sharded: Vec<(usize, std::sync::Arc<dyn Retriever>)> = FIG6_SHARDS
+            .iter()
+            .map(|&n| (n, bed.sharded(kind, n)))
+            .collect();
         let queries = match kind {
             RetrieverKind::Sr => &sparse,
             _ => &dense,
         };
+        // Correctness pin before timing anything: every shard count must
+        // reproduce the unsharded results bit-for-bit (ids AND scores).
+        let probe = &queries[..8];
+        let want: Vec<Vec<(u32, u32)>> = kb
+            .retrieve_batch(probe, 10)
+            .iter()
+            .map(|r| r.iter().map(|s| (s.id, s.score.to_bits())).collect())
+            .collect();
+        for (n, sh) in &sharded {
+            let got: Vec<Vec<(u32, u32)>> = sh
+                .retrieve_batch(probe, 10)
+                .iter()
+                .map(|r| r.iter().map(|s| (s.id, s.score.to_bits())).collect())
+                .collect();
+            assert_eq!(got, want,
+                       "{} shards={n}: merge is not bit-identical",
+                       kind.label());
+        }
         report.line(&format!("## retriever {}", kind.label()));
         for bs in [1usize, 2, 4, 8, 16] {
-            let mut per_query = Vec::with_capacity(trials);
-            for t in 0..trials {
-                let start = (t * bs) % (queries.len() - bs + 1);
-                let batch = &queries[start..start + bs];
-                let sw = crate::metrics::Stopwatch::start();
-                let res = kb.retrieve_batch(batch, 10);
-                let dt = sw.elapsed().as_secs_f64();
-                assert_eq!(res.len(), bs);
-                per_query.push(dt / bs as f64 * 1e3); // ms/query
-            }
-            let s = summarize(&per_query);
-            report.line(&format!(
-                "batch={:<3} {:>8.3} ms/query  (95% CI ±{:.3})",
-                bs, s.mean, s.ci95));
-            report.row(Value::obj(vec![
+            // Sequential reference: one single-query retrieval per query.
+            let seq = time_ms_per_query(
+                &mut |batch| {
+                    let mut n = 0;
+                    for q in batch {
+                        let _ = kb.retrieve_topk(q, 10);
+                        n += 1;
+                    }
+                    n
+                },
+                queries, bs);
+            // Batched: the trait's amortized primitive.
+            let bat = time_ms_per_query(
+                &mut |batch| kb.retrieve_batch(batch, 10).len(),
+                queries, bs);
+            let mut line = format!(
+                "batch={:<3} seq {:>8.3} ms/q | batched {:>8.3} ms/q \
+                 ({:>4.2}x)",
+                bs, seq.mean, bat.mean, seq.mean / bat.mean.max(1e-12));
+            let mut row = vec![
                 ("retriever", Value::str(kind.label())),
                 ("batch", Value::num(bs as f64)),
-                ("ms_per_query", Value::num(s.mean)),
-                ("ci95", Value::num(s.ci95)),
-            ]));
+                ("seq_ms_per_query", Value::num(seq.mean)),
+                ("ms_per_query", Value::num(bat.mean)),
+                ("ci95", Value::num(bat.ci95)),
+                ("batch_speedup", Value::num(seq.mean / bat.mean.max(1e-12))),
+            ];
+            // Shard-count sweep column: scatter-gather over the pool.
+            for (n, sh) in &sharded {
+                let s = time_ms_per_query(
+                    &mut |batch| sh.retrieve_batch(batch, 10).len(),
+                    queries, bs);
+                line.push_str(&format!(" | s{n} {:>8.3}", s.mean));
+                row.push((match n {
+                    1 => "shard1_ms_per_query",
+                    2 => "shard2_ms_per_query",
+                    _ => "shard4_ms_per_query",
+                }, Value::num(s.mean)));
+            }
+            report.line(&line);
+            report.row(Value::obj(row));
         }
     }
     report.write(&cfg.paths.reports)

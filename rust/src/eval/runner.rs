@@ -76,6 +76,11 @@ pub fn query_mode(kind: RetrieverKind) -> QueryMode {
 }
 
 /// Run one (lm, retriever, dataset, method) cell over `questions`.
+///
+/// The knowledge base comes from the testbed: unsharded by default, or a
+/// scatter-gather `ShardedRetriever` when `cfg.retriever.shards > 1`
+/// (`--shards N` on the CLI). Either way the pipelines see a plain
+/// `&dyn Retriever` and outputs are bit-identical.
 pub fn run_qa_cell<L: LanguageModel>(
     lm: &L, encoder: &dyn Encoder, bed: &TestBed, kind: RetrieverKind,
     questions: &[Question], method: QaMethod, cfg: &Config)

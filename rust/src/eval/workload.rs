@@ -5,24 +5,33 @@
 //! Embeddings come from whichever [`Encoder`] the caller provides — the
 //! PJRT `encode_batch` artifact in real runs, the HashEncoder in
 //! artifact-free tests — so the whole harness works in both modes.
+//!
+//! Backends are held as `Arc` so the same built index can also be wrapped
+//! by a [`ShardedRetriever`] without rebuilding: [`TestBed::sharded`]
+//! returns a scatter-gather view over the cached backend (shard views are
+//! cheap; see retriever/sharded.rs).
 
 use crate::config::{Config, RetrieverKind};
 use crate::datagen::{embed_corpus, Corpus, Encoder};
 use crate::retriever::dense::{DenseExact, EmbeddingMatrix};
 use crate::retriever::hnsw::Hnsw;
 use crate::retriever::sparse::Bm25;
-use crate::retriever::Retriever;
+use crate::retriever::{Retriever, ShardedRetriever};
 use std::cell::RefCell;
-use std::rc::Rc;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 pub struct TestBed {
     pub corpus: Arc<Corpus>,
     pub embeddings: Arc<EmbeddingMatrix>,
     cfg: Config,
-    edr: RefCell<Option<Rc<DenseExact>>>,
-    adr: RefCell<Option<Rc<Hnsw>>>,
-    sr: RefCell<Option<Rc<Bm25>>>,
+    edr: RefCell<Option<Arc<DenseExact>>>,
+    adr: RefCell<Option<Arc<Hnsw>>>,
+    sr: RefCell<Option<Arc<Bm25>>>,
+    /// Cached scatter-gather wrappers, keyed by (kind, shard count) — a
+    /// `ShardedRetriever` is cheap but not free to build (shard views +
+    /// a leaked name label), so hand the same one back on every call.
+    sharded: RefCell<HashMap<(RetrieverKind, usize), Arc<dyn Retriever>>>,
 }
 
 impl TestBed {
@@ -39,38 +48,84 @@ impl TestBed {
             edr: RefCell::new(None),
             adr: RefCell::new(None),
             sr: RefCell::new(None),
+            sharded: RefCell::new(HashMap::new()),
         }
     }
 
-    /// Lazily build (and cache) the retriever of a given kind.
-    pub fn retriever(&self, kind: RetrieverKind) -> Rc<dyn Retriever> {
+    fn edr(&self) -> Arc<DenseExact> {
+        if self.edr.borrow().is_none() {
+            *self.edr.borrow_mut() =
+                Some(Arc::new(DenseExact::new(self.embeddings.clone())));
+        }
+        self.edr.borrow().as_ref().unwrap().clone()
+    }
+
+    fn adr(&self) -> Arc<Hnsw> {
+        if self.adr.borrow().is_none() {
+            let r = &self.cfg.retriever;
+            *self.adr.borrow_mut() = Some(Arc::new(Hnsw::build(
+                self.embeddings.clone(), r.hnsw_m, r.hnsw_ef_construction,
+                r.hnsw_ef_search, self.cfg.corpus.seed ^ 0x48)));
+        }
+        self.adr.borrow().as_ref().unwrap().clone()
+    }
+
+    fn sr(&self) -> Arc<Bm25> {
+        if self.sr.borrow().is_none() {
+            let r = &self.cfg.retriever;
+            *self.sr.borrow_mut() = Some(Arc::new(Bm25::build(
+                &self.corpus, r.bm25_k1, r.bm25_b)));
+        }
+        self.sr.borrow().as_ref().unwrap().clone()
+    }
+
+    /// Lazily build (and cache) the retriever of a given kind. When the
+    /// config asks for more than one shard, the backend is wrapped in the
+    /// scatter-gather engine (results stay bit-identical either way).
+    pub fn retriever(&self, kind: RetrieverKind) -> Arc<dyn Retriever> {
+        if self.cfg.retriever.shards > 1 {
+            return self.sharded(kind, self.cfg.retriever.shards);
+        }
         match kind {
+            RetrieverKind::Edr => self.edr(),
+            RetrieverKind::Adr => self.adr(),
+            RetrieverKind::Sr => self.sr(),
+        }
+    }
+
+    /// The plain backend of `kind`, ignoring `cfg.retriever.shards`
+    /// (benchmark baselines need it explicitly unsharded).
+    pub fn unsharded(&self, kind: RetrieverKind) -> Arc<dyn Retriever> {
+        match kind {
+            RetrieverKind::Edr => self.edr(),
+            RetrieverKind::Adr => self.adr(),
+            RetrieverKind::Sr => self.sr(),
+        }
+    }
+
+    /// A shard-parallel view over the (cached) backend of `kind`, itself
+    /// cached per (kind, shard count): shard views share the already-built
+    /// index, and repeat calls return the same engine.
+    pub fn sharded(&self, kind: RetrieverKind, shards: usize)
+                   -> Arc<dyn Retriever> {
+        if let Some(r) = self.sharded.borrow().get(&(kind, shards)) {
+            return r.clone();
+        }
+        let built: Arc<dyn Retriever> = match kind {
             RetrieverKind::Edr => {
-                if self.edr.borrow().is_none() {
-                    *self.edr.borrow_mut() = Some(Rc::new(DenseExact::new(
-                        self.embeddings.clone())));
-                }
-                self.edr.borrow().as_ref().unwrap().clone()
+                Arc::new(ShardedRetriever::new(self.edr(), shards))
             }
             RetrieverKind::Adr => {
-                if self.adr.borrow().is_none() {
-                    let r = &self.cfg.retriever;
-                    *self.adr.borrow_mut() = Some(Rc::new(Hnsw::build(
-                        self.embeddings.clone(), r.hnsw_m,
-                        r.hnsw_ef_construction, r.hnsw_ef_search,
-                        self.cfg.corpus.seed ^ 0x48)));
-                }
-                self.adr.borrow().as_ref().unwrap().clone()
+                Arc::new(ShardedRetriever::new(self.adr(), shards))
             }
             RetrieverKind::Sr => {
-                if self.sr.borrow().is_none() {
-                    let r = &self.cfg.retriever;
-                    *self.sr.borrow_mut() = Some(Rc::new(Bm25::build(
-                        &self.corpus, r.bm25_k1, r.bm25_b)));
-                }
-                self.sr.borrow().as_ref().unwrap().clone()
+                Arc::new(ShardedRetriever::new(self.sr(), shards))
             }
-        }
+        };
+        self.sharded
+            .borrow_mut()
+            .insert((kind, shards), built.clone());
+        built
     }
 
     pub fn config(&self) -> &Config {

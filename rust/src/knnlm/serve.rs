@@ -6,6 +6,12 @@
 //! top-k — not iff all k neighbour sets match (matching 1024 entries is
 //! exponentially hard; matching the decoded token is what model equivalence
 //! actually requires).
+//!
+//! Both serving modes take the datastore KB as a batch-first
+//! `&dyn Retriever`: the per-token baseline issues derived batch-of-one
+//! lookups while the speculative path verifies whole strides through
+//! `retrieve_batch` — so a sharded datastore (`ShardedRetriever` over the
+//! key matrix) accelerates verification without touching this file.
 
 use crate::knnlm::cache::KnnCache;
 use crate::knnlm::datastore::Datastore;

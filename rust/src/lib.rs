@@ -34,4 +34,5 @@ pub mod spec;
 pub mod util;
 
 pub use config::{Config, RetrieverKind};
-pub use retriever::{DocId, Retriever, SpecQuery};
+pub use retriever::{DocId, Retriever, ShardedRetriever, SpecQuery,
+                    WorkerPool};

@@ -84,8 +84,15 @@ impl DenseExact {
 /// verification near-free for EDR (paper Fig 6a / §A.1).
 const LANES: usize = 8;
 
-fn scan_multi(emb: &EmbeddingMatrix, queries: &[&[f32]], heaps: &mut [TopK]) {
+/// Scan rows `[lo, hi)` of the matrix, pushing **global** doc ids into the
+/// per-query heaps. The full-corpus scan is the `(0, len)` range; shard
+/// views scan their slice. Per-row arithmetic is identical regardless of
+/// the range, so a k-way merge of shard results is bit-identical to the
+/// full scan (the property `ShardedRetriever` relies on).
+pub(crate) fn scan_multi_range(emb: &EmbeddingMatrix, lo: usize, hi: usize,
+                               queries: &[&[f32]], heaps: &mut [TopK]) {
     debug_assert_eq!(queries.len(), heaps.len());
+    debug_assert!(lo <= hi && hi <= emb.len());
     let d = emb.dim;
     for (block_start, qblock) in (0..queries.len())
         .step_by(LANES)
@@ -100,7 +107,7 @@ fn scan_multi(emb: &EmbeddingMatrix, queries: &[&[f32]], heaps: &mut [TopK]) {
             }
         }
         let mut scores = [0.0f32; LANES];
-        for (i, row) in emb.data.chunks_exact(d).enumerate() {
+        for (i, row) in emb.data[lo * d..hi * d].chunks_exact(d).enumerate() {
             scores = [0.0; LANES];
             for j in 0..d {
                 let x = row[j];
@@ -110,39 +117,38 @@ fn scan_multi(emb: &EmbeddingMatrix, queries: &[&[f32]], heaps: &mut [TopK]) {
                 }
             }
             for bi in 0..b {
-                heaps[block_start + bi].push(i as DocId, scores[bi]);
+                heaps[block_start + bi].push((lo + i) as DocId, scores[bi]);
             }
         }
         let _ = scores;
     }
 }
 
-impl Retriever for DenseExact {
-    fn retrieve_topk(&self, q: &SpecQuery, k: usize) -> Vec<Scored> {
-        // MUST share the numeric path (operation order) with
-        // retrieve_batch: output equivalence relies on the verification
-        // step's batched scores reproducing the baseline's single-query
-        // scores bit-for-bit. (Found the hard way — a 4-accumulator
-        // single-query kernel rounds differently from the lane kernel and
-        // occasionally flips a near-tied top-1.)
-        self.retrieve_batch(std::slice::from_ref(q), k)
-            .pop()
-            .unwrap_or_default()
+/// Range-restricted batched top-k (shared by [`DenseExact`] and
+/// [`DenseShard`]).
+fn batch_over_range(emb: &EmbeddingMatrix, lo: usize, hi: usize,
+                    qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+    for q in qs {
+        assert_eq!(q.dense.len(), emb.dim, "query dim mismatch");
     }
+    let mut heaps: Vec<TopK> = qs.iter().map(|_| TopK::new(k.max(1))).collect();
+    let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.dense.as_slice()).collect();
+    scan_multi_range(emb, lo, hi, &qrefs, &mut heaps);
+    heaps.into_iter().map(|h| h.into_sorted()).collect()
+}
 
+impl Retriever for DenseExact {
+    // NOTE: retrieve_topk is intentionally NOT overridden — it derives
+    // from the batch of one, so both paths share the lane kernel's
+    // operation order. (Found the hard way — a 4-accumulator single-query
+    // kernel rounds differently from the lane kernel and occasionally
+    // flips a near-tied top-1.)
     fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
         // One pass over the corpus for the whole batch: read each row once,
         // score it against every query (blocked multi-query kernel). This
         // is the batched-verification primitive whose near-constant total
         // cost drives RaLMSpec.
-        for q in qs {
-            assert_eq!(q.dense.len(), self.emb.dim, "query dim mismatch");
-        }
-        let mut heaps: Vec<TopK> =
-            qs.iter().map(|_| TopK::new(k.max(1))).collect();
-        let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.dense.as_slice()).collect();
-        scan_multi(&self.emb, &qrefs, &mut heaps);
-        heaps.into_iter().map(|h| h.into_sorted()).collect()
+        batch_over_range(&self.emb, 0, self.emb.len(), qs, k)
     }
 
     fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
@@ -155,6 +161,40 @@ impl Retriever for DenseExact {
 
     fn name(&self) -> &'static str {
         "EDR(flat)"
+    }
+}
+
+/// A contiguous-row shard view over a shared embedding matrix: scans only
+/// `[lo, hi)` but reports global doc ids, so merged shard results are
+/// bit-identical to the unsharded scan.
+pub struct DenseShard {
+    emb: Arc<EmbeddingMatrix>,
+    lo: usize,
+    hi: usize,
+}
+
+impl DenseShard {
+    pub fn new(emb: Arc<EmbeddingMatrix>, lo: usize, hi: usize) -> Self {
+        assert!(lo <= hi && hi <= emb.len(), "shard bounds out of range");
+        Self { emb, lo, hi }
+    }
+}
+
+impl Retriever for DenseShard {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        batch_over_range(&self.emb, self.lo, self.hi, qs, k)
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
+        dot_chunked(&q.dense, self.emb.row(doc))
+    }
+
+    fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    fn name(&self) -> &'static str {
+        "EDR(flat-shard)"
     }
 }
 

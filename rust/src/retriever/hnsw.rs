@@ -70,9 +70,29 @@ pub struct Hnsw {
     neighbors: Vec<Vec<Vec<u32>>>,
 }
 
+/// Reusable per-search working set: the generation-stamped visited pool
+/// plus the candidate/result heap allocations. A batched retrieval borrows
+/// one scratch for the whole batch ("shared visited-pool reuse"), so every
+/// query after the first runs against warm, correctly-sized buffers —
+/// the per-call intercept of the ADR profile (Fig 6b) is paid once per
+/// batch instead of once per query. The search *algorithm* is untouched:
+/// per-query results are bit-identical whatever the batch size (required
+/// by the output-equivalence property, see pipeline_equivalence.rs).
+#[derive(Default)]
+struct SearchScratch {
+    /// visited stamp per node; a node is visited iff stamps[n] == gen.
+    stamps: Vec<u32>,
+    gen: u32,
+    /// Retired heap allocations (kept empty between searches).
+    cand_buf: Vec<Cand>,
+    result_buf: Vec<MinCand>,
+}
+
 thread_local! {
-    /// Generation-stamped visited set, reused across searches on a thread.
-    static VISITED: RefCell<(Vec<u32>, u32)> = const { RefCell::new((Vec::new(), 0)) };
+    /// Scratch for single-shot searches (build-time inserts, derived
+    /// single-query retrievals). Batched retrieval borrows it once.
+    static SCRATCH: RefCell<SearchScratch> =
+        RefCell::new(SearchScratch::default());
 }
 
 impl Hnsw {
@@ -158,7 +178,9 @@ impl Hnsw {
         // Insert at each layer <= level; the full candidate set of one
         // layer seeds the search at the next (Malkov & Yashunin Alg. 1).
         for l in (0..=level.min(top)).rev() {
-            let cands = self.search_layer(&q, &eps, ef_c, l);
+            let cands = SCRATCH.with(|cell| {
+                self.search_layer(&q, &eps, ef_c, l, &mut cell.borrow_mut())
+            });
             let max_m = if l == 0 { self.m0 } else { self.m };
             let selected = self.select_heuristic(&cands, self.m);
             if !cands.is_empty() {
@@ -205,67 +227,80 @@ impl Hnsw {
         }
     }
 
-    /// Beam search at one layer; returns candidates sorted best-first.
-    fn search_layer(&self, q: &[f32], eps: &[u32], ef: usize, l: usize)
-                    -> Vec<Cand> {
-        VISITED.with(|cell| {
-            let (ref mut stamps, ref mut gen) = *cell.borrow_mut();
-            if stamps.len() < self.neighbors.len() {
-                stamps.resize(self.neighbors.len(), 0);
-            }
-            *gen = gen.wrapping_add(1);
-            if *gen == 0 {
-                stamps.fill(0);
-                *gen = 1;
-            }
-            let gen = *gen;
+    /// Beam search at one layer using the caller-provided scratch; returns
+    /// candidates sorted best-first. The two heap allocations are rented
+    /// from the scratch and handed back empty, so steady-state searches
+    /// allocate only the output vector.
+    fn search_layer(&self, q: &[f32], eps: &[u32], ef: usize, l: usize,
+                    scratch: &mut SearchScratch) -> Vec<Cand> {
+        if scratch.stamps.len() < self.neighbors.len() {
+            scratch.stamps.resize(self.neighbors.len(), 0);
+        }
+        scratch.gen = scratch.gen.wrapping_add(1);
+        if scratch.gen == 0 {
+            scratch.stamps.fill(0);
+            scratch.gen = 1;
+        }
+        let gen = scratch.gen;
+        let stamps = &mut scratch.stamps;
 
-            let mut cand_heap: BinaryHeap<Cand> = BinaryHeap::new();
-            let mut result: BinaryHeap<MinCand> = BinaryHeap::new();
-            for &ep in eps {
-                if stamps[ep as usize] == gen {
+        let mut cand_heap: BinaryHeap<Cand> =
+            BinaryHeap::from(std::mem::take(&mut scratch.cand_buf));
+        let mut result: BinaryHeap<MinCand> =
+            BinaryHeap::from(std::mem::take(&mut scratch.result_buf));
+        for &ep in eps {
+            if stamps[ep as usize] == gen {
+                continue;
+            }
+            stamps[ep as usize] = gen;
+            let c = Cand { id: ep, score: self.sim(q, ep) };
+            cand_heap.push(c);
+            result.push(MinCand(c));
+        }
+        while let Some(c) = cand_heap.pop() {
+            let worst = result.peek().map(|m| m.0.score)
+                .unwrap_or(f32::NEG_INFINITY);
+            if result.len() >= ef && c.score < worst {
+                break;
+            }
+            // Clone the neighbor list id slice (short) to avoid borrow
+            // issues; lists are <= m0 long.
+            for idx in 0..self.neighbors[c.id as usize][l].len() {
+                let nb = self.neighbors[c.id as usize][l][idx];
+                if stamps[nb as usize] == gen {
                     continue;
                 }
-                stamps[ep as usize] = gen;
-                let c = Cand { id: ep, score: self.sim(q, ep) };
-                cand_heap.push(c);
-                result.push(MinCand(c));
-            }
-            while let Some(c) = cand_heap.pop() {
+                stamps[nb as usize] = gen;
+                let s = self.sim(q, nb);
                 let worst = result.peek().map(|m| m.0.score)
                     .unwrap_or(f32::NEG_INFINITY);
-                if result.len() >= ef && c.score < worst {
-                    break;
-                }
-                // Clone the neighbor list id slice (short) to avoid borrow
-                // issues; lists are <= m0 long.
-                for idx in 0..self.neighbors[c.id as usize][l].len() {
-                    let nb = self.neighbors[c.id as usize][l][idx];
-                    if stamps[nb as usize] == gen {
-                        continue;
-                    }
-                    stamps[nb as usize] = gen;
-                    let s = self.sim(q, nb);
-                    let worst = result.peek().map(|m| m.0.score)
-                        .unwrap_or(f32::NEG_INFINITY);
-                    if result.len() < ef || s > worst {
-                        let cand = Cand { id: nb, score: s };
-                        cand_heap.push(cand);
-                        result.push(MinCand(cand));
-                        if result.len() > ef {
-                            result.pop();
-                        }
+                if result.len() < ef || s > worst {
+                    let cand = Cand { id: nb, score: s };
+                    cand_heap.push(cand);
+                    result.push(MinCand(cand));
+                    if result.len() > ef {
+                        result.pop();
                     }
                 }
             }
-            let mut out: Vec<Cand> = result.into_iter().map(|m| m.0).collect();
-            out.sort_by(|a, b| b.cmp(a));
-            out
-        })
+        }
+        let mut out: Vec<Cand> = result.iter().map(|m| m.0).collect();
+        out.sort_by(|a, b| b.cmp(a));
+        // Hand the (emptied) allocations back to the scratch.
+        let mut cb = cand_heap.into_vec();
+        cb.clear();
+        scratch.cand_buf = cb;
+        let mut rb = result.into_vec();
+        rb.clear();
+        scratch.result_buf = rb;
+        out
     }
 
-    /// Full search: descend to layer 0, beam with ef, return top-k.
-    pub fn search(&self, q: &[f32], k: usize, ef: usize) -> Vec<Scored> {
+    /// One full search against a caller-provided scratch: per-query greedy
+    /// descent seeds the layer-0 beam entry point, then beam search with
+    /// ef, then top-k selection.
+    fn search_with(&self, q: &[f32], k: usize, ef: usize,
+                   scratch: &mut SearchScratch) -> Vec<Scored> {
         if self.neighbors.is_empty() {
             return Vec::new();
         }
@@ -273,19 +308,39 @@ impl Hnsw {
         for l in (1..=self.max_level).rev() {
             ep = self.greedy_step(q, ep, l);
         }
-        let cands = self.search_layer(q, &[ep], ef.max(k), 0);
+        let cands = self.search_layer(q, &[ep], ef.max(k), 0, scratch);
         let mut tk = TopK::new(k.max(1));
         for c in cands {
             tk.push(c.id, c.score);
         }
         tk.into_sorted()
     }
+
+    /// Full search: descend to layer 0, beam with ef, return top-k.
+    pub fn search(&self, q: &[f32], k: usize, ef: usize) -> Vec<Scored> {
+        SCRATCH.with(|cell| self.search_with(q, k, ef, &mut cell.borrow_mut()))
+    }
 }
 
 impl Retriever for Hnsw {
-    fn retrieve_topk(&self, q: &SpecQuery, k: usize) -> Vec<Scored> {
-        assert_eq!(q.dense.len(), self.emb.dim, "query dim mismatch");
-        self.search(&q.dense, k, self.ef_search)
+    /// Batched graph search — the trait's required primitive. All queries
+    /// in the batch share one search scratch (visited pool + heap
+    /// allocations), so the per-call setup cost is paid once per batch;
+    /// each query's walk itself is identical to a standalone search, which
+    /// keeps batched and single-query results bit-identical (the
+    /// output-equivalence requirement).
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        SCRATCH.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let scratch = &mut *guard;
+            qs.iter()
+                .map(|q| {
+                    assert_eq!(q.dense.len(), self.emb.dim,
+                               "query dim mismatch");
+                    self.search_with(&q.dense, k, self.ef_search, scratch)
+                })
+                .collect()
+        })
     }
 
     fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {

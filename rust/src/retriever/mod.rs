@@ -8,17 +8,36 @@
 //!   * [`sparse::Bm25`] — BM25 over an inverted index (Pyserini stand-in,
 //!     "SR").
 //!
-//! All three implement [`Retriever`]. The trait exposes the *same scoring
-//! metric* via [`Retriever::score_doc`], which is what the local speculation
-//! cache ranks with — the rank-preservation property of §3 (if the KB top-1
-//! is cached, the cache returns it) holds exactly because both sides share
-//! this function. Note for ADR: `score_doc` is the *exact* inner product
-//! while graph search is approximate, matching how a real HNSW index scores
-//! candidates it visits.
+//! All three implement [`Retriever`]. The trait is **batch-first**
+//! (DESIGN.md "Batch-first retrieval"): `retrieve_batch` is the required
+//! primitive — it is what the verification step calls and what every
+//! backend must amortize (Fig 6 / §A.1) — while `retrieve_topk` and
+//! `retrieve` are derived as a batch of one. Deriving the single-query
+//! path from the batched path (rather than the reverse) guarantees the two
+//! share one numeric code path, which the output-equivalence property of
+//! §3 depends on: a batched verification must reproduce the baseline's
+//! single-query scores bit-for-bit.
+//!
+//! The trait also exposes the *same scoring metric* via
+//! [`Retriever::score_doc`] / [`Retriever::score_docs`], which is what the
+//! local speculation cache ranks with — the rank-preservation property of
+//! §3 (if the KB top-1 is cached, the cache returns it) holds exactly
+//! because both sides share this function. Note for ADR: `score_doc` is
+//! the *exact* inner product while graph search is approximate, matching
+//! how a real HNSW index scores candidates it visits.
+//!
+//! [`sharded::ShardedRetriever`] wraps any [`sharded::Shardable`] backend
+//! in a scatter-gather engine over a persistent [`pool::WorkerPool`],
+//! preserving bit-identical results (see DESIGN.md "Sharded retrieval").
 
 pub mod dense;
 pub mod hnsw;
+pub mod pool;
+pub mod sharded;
 pub mod sparse;
+
+pub use pool::WorkerPool;
+pub use sharded::{ShardStrategy, Shardable, ShardedRetriever};
 
 use crate::util::Scored;
 
@@ -43,21 +62,34 @@ impl SpecQuery {
 }
 
 pub trait Retriever: Send + Sync {
-    /// Top-k documents for one query, (score desc, id asc)-ordered.
-    fn retrieve_topk(&self, q: &SpecQuery, k: usize) -> Vec<Scored>;
+    /// REQUIRED: batched top-k, `(score desc, id asc)`-ordered per query —
+    /// the verification step's primitive (Fig 6 / §A.1) and the only entry
+    /// point a backend must implement. Backends amortize whatever their
+    /// index structure allows: one corpus pass for all queries (EDR), one
+    /// postings walk for the term union (SR), shared search scratch (ADR),
+    /// shard-parallel scatter-gather ([`sharded::ShardedRetriever`]).
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>>;
 
     /// Score one document under the retriever's metric (used by the local
     /// speculation cache so cache ranking == KB ranking on cached docs).
     fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32;
 
-    /// Batched retrieval — the verification step's primitive. Default is
-    /// the sequential loop; EDR and SR override it with genuinely-amortized
-    /// implementations (Fig 6 / §A.1).
-    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
-        qs.iter().map(|q| self.retrieve_topk(q, k)).collect()
+    /// Batched [`Retriever::score_doc`] — the cache-lookup primitive.
+    /// Default loops; backends may override with a fused scan.
+    fn score_docs(&self, q: &SpecQuery, docs: &[DocId]) -> Vec<f32> {
+        docs.iter().map(|&d| self.score_doc(q, d)).collect()
     }
 
-    /// Top-1 convenience.
+    /// Derived: top-k for one query == a batch of one. Do not override —
+    /// output equivalence relies on single-query and batched retrieval
+    /// sharing one numeric path.
+    fn retrieve_topk(&self, q: &SpecQuery, k: usize) -> Vec<Scored> {
+        self.retrieve_batch(std::slice::from_ref(q), k)
+            .pop()
+            .unwrap_or_default()
+    }
+
+    /// Derived: top-1 convenience.
     fn retrieve(&self, q: &SpecQuery) -> Option<Scored> {
         self.retrieve_topk(q, 1).into_iter().next()
     }

@@ -1,0 +1,216 @@
+//! Persistent worker pool for shard-parallel retrieval.
+//!
+//! Std-threads only (the offline image has no tokio/rayon): a
+//! Mutex+Condvar job queue feeding N long-lived workers. The pool is
+//! created once and shared (`Arc`) by every `ShardedRetriever`, so
+//! scatter-gather fan-out never pays thread spawn/teardown on the query
+//! path — the property the ROADMAP's "persistent worker pool" item asks
+//! for.
+//!
+//! Jobs are `'static` closures; callers share borrowed request data with
+//! workers via `Arc` (see `sharded.rs`). A panicking job is caught so a
+//! poisoned task cannot take a worker down with it; the scatter caller
+//! observes the missing result and panics with a diagnostic on its own
+//! thread instead.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `n` workers (at least one).
+    pub fn new(n: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { jobs: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..n.max(1))
+            .map(|wid| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("ralmspec-shard-{wid}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let mut st = shared.state.lock().unwrap();
+                            loop {
+                                if let Some(j) = st.jobs.pop_front() {
+                                    break Some(j);
+                                }
+                                if st.shutdown {
+                                    break None;
+                                }
+                                st = shared.cv.wait(st).unwrap();
+                            }
+                        };
+                        match job {
+                            Some(j) => {
+                                // Contain panics to the job: the worker
+                                // survives, the scatter caller notices the
+                                // dropped result channel.
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(j));
+                            }
+                            None => return,
+                        }
+                    })
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Pool sized to the machine (used by the process-wide default pool).
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(2);
+        Self::new(n)
+    }
+
+    /// The process-wide shared pool. Created lazily on first use; sized to
+    /// the machine's available parallelism. All `ShardedRetriever`s built
+    /// without an explicit pool share it, so total shard-worker threads
+    /// stay bounded no matter how many sharded backends exist.
+    pub fn global() -> &'static Arc<WorkerPool> {
+        static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(WorkerPool::with_default_size()))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue one fire-and-forget job.
+    pub fn execute(&self, job: Job) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.jobs.push_back(job);
+        drop(st);
+        self.shared.cv.notify_one();
+    }
+
+    /// Run every task on the pool and return their results **in task
+    /// order**, blocking until all complete. This is the scatter half of
+    /// the sharded scatter-gather path.
+    pub fn scatter<T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, T)>();
+        for (i, task) in tasks.into_iter().enumerate() {
+            let tx = tx.clone();
+            self.execute(Box::new(move || {
+                let _ = tx.send((i, task()));
+            }));
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut got = 0usize;
+        while let Ok((i, v)) = rx.recv() {
+            debug_assert!(out[i].is_none(), "duplicate scatter result");
+            out[i] = Some(v);
+            got += 1;
+            if got == n {
+                break;
+            }
+        }
+        assert_eq!(got, n, "worker pool lost {} task(s) (panicked job?)",
+                   n - got);
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scatter_returns_results_in_order() {
+        let pool = WorkerPool::new(3);
+        let tasks: Vec<_> = (0..17usize).map(|i| move || i * i).collect();
+        assert_eq!(pool.scatter(tasks),
+                   (0..17usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scatter_with_more_tasks_than_workers() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<_> = (0..64)
+            .map(|_| {
+                let c = counter.clone();
+                move || c.fetch_add(1, Ordering::SeqCst)
+            })
+            .collect();
+        let results = pool.scatter(tasks);
+        assert_eq!(results.len(), 64);
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn empty_scatter_is_noop() {
+        let pool = WorkerPool::new(1);
+        let out: Vec<usize> = pool.scatter(Vec::<fn() -> usize>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = WorkerPool::new(1);
+        pool.execute(Box::new(|| panic!("boom")));
+        // The single worker must still serve subsequent tasks.
+        let tasks: Vec<fn() -> usize> = vec![|| 41, || 1];
+        let out = pool.scatter(tasks);
+        assert_eq!(out.iter().sum::<usize>(), 42);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(4);
+        let tasks: Vec<fn() -> i32> = vec![|| 1, || 2];
+        let _ = pool.scatter(tasks);
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = WorkerPool::global();
+        let b = WorkerPool::global();
+        assert!(Arc::ptr_eq(a, b));
+        assert!(a.workers() >= 1);
+    }
+}

@@ -1,0 +1,343 @@
+//! Shard-parallel scatter-gather retrieval (DESIGN.md "Sharded
+//! retrieval").
+//!
+//! [`ShardedRetriever`] wraps any [`Shardable`] backend and fans
+//! `retrieve_batch` out over the persistent [`WorkerPool`], then k-way
+//! merges per-shard top-k with the repo-wide `(score desc, id asc)`
+//! tie-break. Results are **bit-identical** to the unsharded backend —
+//! the property the sharded-equivalence suite pins for every retriever
+//! class — because shards never recompute global statistics:
+//!
+//! * **EDR** (`DenseShard`): shards are contiguous row ranges of the one
+//!   shared embedding matrix; per-row arithmetic is range-independent, so
+//!   the union of shard top-k is exactly the global candidate set.
+//! * **SR** (`Bm25Shard`): shards are doc-id ranges over the one shared
+//!   index; idf/avgdl/doc-length stay global, each shard walks only its
+//!   slice of every posting list.
+//! * **ADR** (`Hnsw`): an approximate graph cannot be doc-partitioned
+//!   without changing the walk (and therefore the results), so ADR shards
+//!   are **replicas** of the one shared graph (`Arc` clones — no memory
+//!   copy) and the *query batch* is partitioned across them instead.
+//!   Per-query results are trivially identical; the win is parallelism
+//!   across the batch, which is exactly the axis batched verification
+//!   exposes.
+
+use super::dense::{DenseExact, DenseShard};
+use super::hnsw::Hnsw;
+use super::pool::WorkerPool;
+use super::sparse::{Bm25, Bm25Shard};
+use super::{DocId, Retriever, SpecQuery};
+use crate::util::{Scored, TopK};
+use std::sync::Arc;
+
+/// How a backend's shards relate to the corpus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Each shard owns a contiguous doc-id range; a batch is scattered to
+    /// every shard and per-query top-k are k-way merged.
+    DocRange,
+    /// Each shard is a full replica; the query batch is partitioned
+    /// across shards and results are concatenated in order (no merge).
+    Replicate,
+}
+
+/// Backends that can expose shard views of themselves. Shard construction
+/// must be cheap (views over shared state), so re-sharding an existing
+/// index never rebuilds it.
+pub trait Shardable: Retriever {
+    type Shard: Retriever + 'static;
+
+    fn strategy() -> ShardStrategy;
+
+    /// Build `n` shard views over `this` backend (n >= 1). An associated
+    /// function (not a method) because shard views hold an `Arc` of the
+    /// backend, which a `&self` receiver cannot produce.
+    fn make_shards(this: &Arc<Self>, n: usize) -> Vec<Arc<Self::Shard>>;
+}
+
+/// Contiguous `[lo, hi)` bounds splitting `len` docs into `n` near-equal
+/// shards (first `len % n` shards get one extra doc). Every doc belongs to
+/// exactly one shard.
+pub fn shard_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let n = n.max(1).min(len.max(1));
+    let base = len / n;
+    let extra = len % n;
+    let mut bounds = Vec::with_capacity(n);
+    let mut lo = 0usize;
+    for i in 0..n {
+        let hi = lo + base + usize::from(i < extra);
+        bounds.push((lo, hi));
+        lo = hi;
+    }
+    debug_assert_eq!(lo, len);
+    bounds
+}
+
+impl Shardable for DenseExact {
+    type Shard = DenseShard;
+
+    fn strategy() -> ShardStrategy {
+        ShardStrategy::DocRange
+    }
+
+    fn make_shards(this: &Arc<Self>, n: usize) -> Vec<Arc<DenseShard>> {
+        shard_bounds(this.len(), n)
+            .into_iter()
+            .map(|(lo, hi)| {
+                Arc::new(DenseShard::new(this.embeddings().clone(), lo, hi))
+            })
+            .collect()
+    }
+}
+
+impl Shardable for Bm25 {
+    type Shard = Bm25Shard;
+
+    fn strategy() -> ShardStrategy {
+        ShardStrategy::DocRange
+    }
+
+    fn make_shards(this: &Arc<Self>, n: usize) -> Vec<Arc<Bm25Shard>> {
+        shard_bounds(this.len(), n)
+            .into_iter()
+            .map(|(lo, hi)| {
+                Arc::new(Bm25Shard::new(this.clone(), lo as DocId,
+                                        hi as DocId))
+            })
+            .collect()
+    }
+}
+
+impl Shardable for Hnsw {
+    type Shard = Hnsw;
+
+    fn strategy() -> ShardStrategy {
+        ShardStrategy::Replicate
+    }
+
+    fn make_shards(this: &Arc<Self>, n: usize) -> Vec<Arc<Hnsw>> {
+        (0..n.max(1)).map(|_| this.clone()).collect()
+    }
+}
+
+/// Scatter-gather engine over any [`Shardable`] backend. Object-safe as a
+/// `dyn Retriever`, so every consumer (pipelines, cache, router backends,
+/// eval drivers) takes sharded and unsharded knowledge bases through the
+/// same trait.
+pub struct ShardedRetriever<R: Shardable> {
+    inner: Arc<R>,
+    shards: Vec<Arc<R::Shard>>,
+    strategy: ShardStrategy,
+    pool: Arc<WorkerPool>,
+    label: &'static str,
+}
+
+impl<R: Shardable> ShardedRetriever<R> {
+    /// Shard `inner` n ways over an explicit pool.
+    pub fn with_pool(inner: Arc<R>, n_shards: usize, pool: Arc<WorkerPool>)
+                     -> Self {
+        let shards = R::make_shards(&inner, n_shards);
+        // One leaked label per constructed engine: retrievers are few and
+        // long-lived, and the trait's `name()` returns &'static str.
+        let label: &'static str = Box::leak(
+            format!("sharded{}x:{}", shards.len(), inner.name())
+                .into_boxed_str());
+        Self { inner, shards, strategy: R::strategy(), pool, label }
+    }
+
+    /// Shard `inner` n ways over the process-wide shared pool.
+    pub fn new(inner: Arc<R>, n_shards: usize) -> Self {
+        Self::with_pool(inner, n_shards, WorkerPool::global().clone())
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn strategy(&self) -> ShardStrategy {
+        self.strategy
+    }
+
+    /// The wrapped unsharded backend.
+    pub fn inner(&self) -> &Arc<R> {
+        &self.inner
+    }
+}
+
+impl<R: Shardable> Retriever for ShardedRetriever<R> {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        if self.shards.len() <= 1 {
+            // Single shard covers the whole corpus (DocRange) or is the
+            // full replica (Replicate) — no scatter needed.
+            return match self.shards.first() {
+                Some(s) => s.retrieve_batch(qs, k),
+                None => self.inner.retrieve_batch(qs, k),
+            };
+        }
+        match self.strategy {
+            ShardStrategy::DocRange => {
+                // Workers need 'static tasks; share the batch, don't copy
+                // it per shard.
+                let qs_shared: Arc<Vec<SpecQuery>> = Arc::new(qs.to_vec());
+                // Scatter: every shard answers the whole batch over its
+                // doc range, in parallel on the persistent pool.
+                let tasks: Vec<_> = self
+                    .shards
+                    .iter()
+                    .map(|shard| {
+                        let shard = shard.clone();
+                        let qs = qs_shared.clone();
+                        move || shard.retrieve_batch(&qs, k)
+                    })
+                    .collect();
+                let per_shard = self.pool.scatter(tasks);
+                // Gather: k-way merge per query. `TopK` implements the
+                // repo-wide (score desc, id asc) order, and the union of
+                // shard top-k contains the global top-k (each shard
+                // returned its best k over a disjoint doc range), so the
+                // merged list is bit-identical to the unsharded backend.
+                (0..qs.len())
+                    .map(|qi| {
+                        let mut tk = TopK::new(k.max(1));
+                        for shard_res in &per_shard {
+                            for s in &shard_res[qi] {
+                                tk.push(s.id, s.score);
+                            }
+                        }
+                        tk.into_sorted()
+                    })
+                    .collect()
+            }
+            ShardStrategy::Replicate => {
+                // Partition the batch into contiguous chunks, one per
+                // replica; concatenate in order. Identical per-query
+                // results, parallel across the batch.
+                let chunks = shard_bounds(qs.len(), self.shards.len());
+                if chunks.len() <= 1 {
+                    // Batch of one (or one chunk): a pool round-trip buys
+                    // no parallelism — answer inline on the caller. This
+                    // is the hot single-query path of the derived
+                    // retrieve()/retrieve_topk().
+                    return self.shards[0].retrieve_batch(qs, k);
+                }
+                let qs_shared: Arc<Vec<SpecQuery>> = Arc::new(qs.to_vec());
+                let tasks: Vec<_> = chunks
+                    .into_iter()
+                    .zip(&self.shards)
+                    .map(|((lo, hi), shard)| {
+                        let shard = shard.clone();
+                        let qs = qs_shared.clone();
+                        move || shard.retrieve_batch(&qs[lo..hi], k)
+                    })
+                    .collect();
+                let mut out = Vec::with_capacity(qs.len());
+                for part in self.pool.scatter(tasks) {
+                    out.extend(part);
+                }
+                out
+            }
+        }
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
+        // The cache-side metric must be the inner backend's exact metric —
+        // rank preservation (§3) composes through sharding unchanged.
+        self.inner.score_doc(q, doc)
+    }
+
+    fn score_docs(&self, q: &SpecQuery, docs: &[DocId]) -> Vec<f32> {
+        self.inner.score_docs(q, docs)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn name(&self) -> &'static str {
+        self.label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retriever::dense::EmbeddingMatrix;
+    use crate::util::Rng;
+
+    fn matrix(n: usize, d: usize, seed: u64) -> Arc<EmbeddingMatrix> {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            data.extend(rng.unit_vector(d));
+        }
+        Arc::new(EmbeddingMatrix::new(d, data))
+    }
+
+    #[test]
+    fn shard_bounds_partition_exactly() {
+        for (len, n) in [(10usize, 3usize), (7, 7), (5, 8), (100, 4),
+                         (1, 1), (0, 3)] {
+            let b = shard_bounds(len, n);
+            assert!(!b.is_empty());
+            assert_eq!(b.first().unwrap().0, 0);
+            assert_eq!(b.last().unwrap().1, len);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_sharded_matches_unsharded_bitwise() {
+        let emb = matrix(500, 16, 1);
+        let inner = Arc::new(DenseExact::new(emb));
+        let mut rng = Rng::new(2);
+        let qs: Vec<SpecQuery> =
+            (0..9).map(|_| SpecQuery::dense_only(rng.unit_vector(16))).collect();
+        let truth = inner.retrieve_batch(&qs, 7);
+        for n in [1usize, 2, 3, 7] {
+            let sharded = ShardedRetriever::new(inner.clone(), n);
+            let got = sharded.retrieve_batch(&qs, 7);
+            assert_eq!(got.len(), truth.len());
+            for (g, t) in got.iter().zip(&truth) {
+                assert_eq!(g.len(), t.len(), "n={n}");
+                for (a, b) in g.iter().zip(t) {
+                    assert_eq!(a.id, b.id, "n={n}");
+                    assert_eq!(a.score.to_bits(), b.score.to_bits(), "n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_docs_clamps() {
+        let emb = matrix(3, 8, 3);
+        let inner = Arc::new(DenseExact::new(emb));
+        let sharded = ShardedRetriever::new(inner.clone(), 16);
+        assert!(sharded.n_shards() <= 3);
+        let q = SpecQuery::dense_only(vec![0.5; 8]);
+        let got = sharded.retrieve_topk(&q, 2);
+        let want = inner.retrieve_topk(&q, 2);
+        assert_eq!(got.iter().map(|s| s.id).collect::<Vec<_>>(),
+                   want.iter().map(|s| s.id).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_batch_returns_empty() {
+        let emb = matrix(10, 8, 4);
+        let sharded =
+            ShardedRetriever::new(Arc::new(DenseExact::new(emb)), 2);
+        assert!(sharded.retrieve_batch(&[], 5).is_empty());
+    }
+
+    #[test]
+    fn label_reports_shard_count() {
+        let emb = matrix(10, 8, 5);
+        let sharded =
+            ShardedRetriever::new(Arc::new(DenseExact::new(emb)), 2);
+        assert_eq!(sharded.name(), "sharded2x:EDR(flat)");
+    }
+}

@@ -113,14 +113,17 @@ impl Bm25 {
     }
 }
 
-impl Retriever for Bm25 {
-    fn retrieve_topk(&self, q: &SpecQuery, k: usize) -> Vec<Scored> {
-        self.retrieve_batch(std::slice::from_ref(q), k)
-            .pop()
-            .unwrap_or_default()
-    }
-
-    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+impl Bm25 {
+    /// Batched top-k restricted to the doc-id range `[lo, hi)`, reporting
+    /// global doc ids and scores computed from the **global** statistics
+    /// (idf, avgdl, doc lengths). The full-corpus call is the
+    /// `(0, n_docs)` range; shard views walk only their slice of each
+    /// posting list. Per-doc accumulation order (sorted term order) is
+    /// identical regardless of the range, so a k-way merge of shard
+    /// results is bit-identical to the unsharded scan.
+    pub(crate) fn retrieve_batch_range(&self, qs: &[SpecQuery], k: usize,
+                                       lo: DocId, hi: DocId)
+                                       -> Vec<Vec<Scored>> {
         // Union the query terms; walk each posting list once and fan the
         // contribution out to every query containing the term.
         let per_query: Vec<Vec<(u32, f32)>> =
@@ -154,7 +157,14 @@ impl Retriever for Bm25 {
         terms.sort_by_key(|(t, _)| **t); // deterministic traversal
         for (&t, users) in terms {
             let idf = self.idf[t as usize];
-            for &(doc, tf) in &self.postings[t as usize] {
+            let plist = &self.postings[t as usize];
+            // Postings are doc-id-sorted: binary-search the range start,
+            // walk until the range end.
+            let start = plist.partition_point(|&(d, _)| d < lo);
+            for &(doc, tf) in &plist[start..] {
+                if doc >= hi {
+                    break;
+                }
                 let w = idf
                     * self.term_weight(tf as f32,
                                        self.doc_len[doc as usize] as f32);
@@ -183,6 +193,12 @@ impl Retriever for Bm25 {
         });
         out
     }
+}
+
+impl Retriever for Bm25 {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        self.retrieve_batch_range(qs, k, 0, self.n_docs as DocId)
+    }
 
     fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
         // Exact BM25 from the stored per-doc term stats (cache-side metric).
@@ -205,6 +221,42 @@ impl Retriever for Bm25 {
 
     fn name(&self) -> &'static str {
         "SR(bm25)"
+    }
+}
+
+/// A doc-id-range shard view over a shared BM25 index. The index (and its
+/// global statistics) is built once; each shard walks only its slice of
+/// the posting lists, so scores — and therefore the merged top-k — are
+/// bit-identical to the unsharded index.
+pub struct Bm25Shard {
+    index: std::sync::Arc<Bm25>,
+    lo: DocId,
+    hi: DocId,
+}
+
+impl Bm25Shard {
+    pub fn new(index: std::sync::Arc<Bm25>, lo: DocId, hi: DocId) -> Self {
+        assert!(lo <= hi && hi as usize <= index.n_docs,
+                "shard bounds out of range");
+        Self { index, lo, hi }
+    }
+}
+
+impl Retriever for Bm25Shard {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        self.index.retrieve_batch_range(qs, k, self.lo, self.hi)
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
+        self.index.score_doc(q, doc)
+    }
+
+    fn len(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    fn name(&self) -> &'static str {
+        "SR(bm25-shard)"
     }
 }
 

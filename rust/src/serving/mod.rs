@@ -3,7 +3,11 @@
 //!
 //! PJRT handles are not Send, so each worker thread constructs its own
 //! backend (Engine + pipelines) via the factory closure; the queue side
-//! only moves plain data (token vectors, metrics).
+//! only moves plain data (token vectors, metrics). Knowledge bases *are*
+//! Send + Sync (`Arc<dyn Retriever>`), so a factory may share one
+//! (possibly sharded) retriever across all workers — the per-worker part
+//! is only the LM. Both submission paths report backpressure the same
+//! way: a full queue is an immediate error, never an unbounded block.
 
 pub mod router;
 

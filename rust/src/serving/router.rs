@@ -114,12 +114,13 @@ impl Router {
         Ok(rx)
     }
 
-    /// Blocking submit (submit + wait).
+    /// Blocking submit (submit + wait). Shares `submit`'s admission path,
+    /// so it honours the same backpressure contract: a full queue is an
+    /// immediate error, not an unbounded wait. (It previously used a
+    /// blocking `send`, which could park the caller forever while `submit`
+    /// callers were being told the router was overloaded.)
     pub fn submit_blocking(&self, req: Request) -> anyhow::Result<Response> {
-        let (tx, rx) = smpsc::sync_channel(1);
-        self.tx
-            .send(Job { req, resp: tx })
-            .map_err(|_| anyhow::anyhow!("router shut down"))?;
+        let rx = self.submit(req)?;
         rx.recv()
             .map_err(|_| anyhow::anyhow!("worker dropped request"))?
     }
@@ -210,6 +211,64 @@ mod tests {
             }
         }
         assert!(saw_backpressure, "queue of 1 must overflow");
+        for rx in rxs { let _ = rx.recv(); }
+        router.shutdown();
+    }
+
+    #[test]
+    fn submit_blocking_reports_backpressure_instead_of_hanging() {
+        // A worker provably parked inside serve() plus a full queue: the
+        // blocking path must error out exactly like `submit`, not wait.
+        // Gated backend makes the schedule deterministic: it signals when
+        // a serve starts and blocks until released.
+        struct Gate {
+            started: smpsc::Sender<()>,
+            release: smpsc::Receiver<()>,
+        }
+        impl ServeBackend for Gate {
+            fn serve(&mut self, req: &Request) -> anyhow::Result<ReqMetrics> {
+                let _ = self.started.send(());
+                let _ = self.release.recv();
+                let mut m = ReqMetrics::default();
+                m.tokens_out = req.question.clone();
+                Ok(m)
+            }
+        }
+        let (started_tx, started_rx) = smpsc::channel::<()>();
+        let (release_tx, release_rx) = smpsc::channel::<()>();
+        let slot = Arc::new(Mutex::new(Some((started_tx, release_rx))));
+        let router = Router::spawn(1, 1, move || {
+            let (started, release) =
+                slot.lock().unwrap().take().expect("single worker");
+            Ok(Gate { started, release })
+        });
+        // Occupy the worker and WAIT until it is inside serve() — from
+        // here it cannot pop another job until released.
+        let mut rxs = vec![router
+            .submit(Request { id: 0, question: vec![1],
+                              method: Method::Baseline })
+            .unwrap()];
+        started_rx.recv().expect("worker picked up the first job");
+        // Fill the 1-slot queue; the next submit must hit backpressure.
+        let mut full = false;
+        for i in 1..4u64 {
+            match router.submit(Request { id: i, question: vec![1],
+                                          method: Method::Baseline }) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => { full = true; break; }
+            }
+        }
+        assert!(full, "queue should fill");
+        // Queue is full and the worker is parked: submit_blocking must
+        // fail immediately rather than blocking for a slot.
+        let res = router.submit_blocking(Request {
+            id: 99, question: vec![2], method: Method::Baseline,
+        });
+        assert!(res.is_err(), "must report backpressure");
+        // Drain: one release per pending serve call.
+        for _ in 0..rxs.len() {
+            let _ = release_tx.send(());
+        }
         for rx in rxs { let _ = rx.recv(); }
         router.shutdown();
     }

@@ -9,6 +9,13 @@
 //! to `baseline::ralmseq` on the same request — speculation only moves
 //! *when* retrievals happen, never *what* the model sees after
 //! verification.
+//!
+//! The pipeline talks to the knowledge base only through the batch-first
+//! [`Retriever`] trait: verification calls the required `retrieve_batch`
+//! primitive, the initial prime uses the derived batch-of-one, and cache
+//! lookups rank via `score_docs`. A shard-parallel KB
+//! (`retriever::ShardedRetriever`) therefore drops in with bit-identical
+//! outputs — the equivalence suite runs unchanged against it.
 
 use crate::cache::LocalCache;
 use crate::datagen::Corpus;

@@ -1,0 +1,166 @@
+//! THE correctness property of the sharded retrieval engine: for every
+//! retriever class (EDR / ADR / SR) and any shard count, the
+//! scatter-gather `ShardedRetriever` must return **bit-identical** top-k —
+//! ids AND scores, tie-break included — to the unsharded backend, over
+//! random corpora, batch sizes, and k.
+//!
+//! Property-style: inputs are drawn from a seeded RNG (the in-tree
+//! substitute for proptest on the offline image), so failures reproduce.
+
+use ralmspec::cache::LocalCache;
+use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+use ralmspec::datagen::{Encoder, HashEncoder};
+use ralmspec::eval::TestBed;
+use ralmspec::retriever::{Retriever, SpecQuery};
+use ralmspec::util::Rng;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+fn bed(seed: u64, n_docs: usize) -> (TestBed, HashEncoder) {
+    let mut cfg = Config::default();
+    cfg.corpus = CorpusConfig {
+        n_docs,
+        n_topics: 16,
+        doc_len: (20, 72),
+        seed,
+        ..CorpusConfig::default()
+    };
+    cfg.retriever.hnsw_ef_construction = 48;
+    cfg.retriever.hnsw_ef_search = 40;
+    let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, seed ^ 0xEC);
+    let b = TestBed::build(&cfg, &enc);
+    (b, enc)
+}
+
+fn queries(bed: &TestBed, enc: &HashEncoder, n: usize, seed: u64)
+           -> Vec<(SpecQuery, SpecQuery)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let topic = (i % bed.corpus.n_topics) as u32;
+            let toks = bed.corpus.topic_tokens(topic, 12, &mut rng);
+            (SpecQuery::dense_only(enc.encode(&toks)),
+             SpecQuery::sparse_only(toks))
+        })
+        .collect()
+}
+
+/// (id, score-bits) projection: equality here is bit-identity.
+fn bits(rows: &[Vec<ralmspec::util::Scored>]) -> Vec<Vec<(u32, u32)>> {
+    rows.iter()
+        .map(|r| r.iter().map(|s| (s.id, s.score.to_bits())).collect())
+        .collect()
+}
+
+fn check_kind(bed: &TestBed, enc: &HashEncoder, kind: RetrieverKind,
+              seed: u64) {
+    let unsharded = bed.unsharded(kind);
+    let qs = queries(bed, enc, 11, seed);
+    let batch: Vec<SpecQuery> = qs
+        .iter()
+        .map(|(d, s)| match kind {
+            RetrieverKind::Sr => s.clone(),
+            _ => d.clone(),
+        })
+        .collect();
+    for k in [1usize, 5, 16] {
+        let want = bits(&unsharded.retrieve_batch(&batch, k));
+        for &n in &SHARD_COUNTS {
+            let sharded = bed.sharded(kind, n);
+            // Full batch through the scatter-gather path.
+            let got = bits(&sharded.retrieve_batch(&batch, k));
+            assert_eq!(got, want,
+                       "kind={kind:?} shards={n} k={k} batch: diverged");
+            // Derived single-query path must agree too.
+            let alone =
+                bits(&[sharded.retrieve_topk(&batch[seed as usize % 11], k)]);
+            assert_eq!(alone[0], want[seed as usize % 11],
+                       "kind={kind:?} shards={n} k={k} single: diverged");
+        }
+    }
+}
+
+#[test]
+fn sharded_equivalence_edr() {
+    let (bed, enc) = bed(1, 900);
+    check_kind(&bed, &enc, RetrieverKind::Edr, 2);
+}
+
+#[test]
+fn sharded_equivalence_adr() {
+    let (bed, enc) = bed(3, 900);
+    check_kind(&bed, &enc, RetrieverKind::Adr, 4);
+}
+
+#[test]
+fn sharded_equivalence_sr() {
+    let (bed, enc) = bed(5, 900);
+    check_kind(&bed, &enc, RetrieverKind::Sr, 6);
+}
+
+/// Property sweep: random (corpus seed, kind, query seed) combinations, all
+/// shard counts, ids and score bits compared on every one.
+#[test]
+fn sharded_equivalence_randomized_sweep() {
+    let mut rng = Rng::new(0x5AA5_D0D0);
+    for trial in 0..6 {
+        let seed = 100 + rng.next_u64() % 10_000;
+        let kind = RetrieverKind::all()[rng.gen_range(3)];
+        let n_docs = 300 + rng.gen_range(900);
+        eprintln!("trial {trial}: seed={seed} kind={kind:?} docs={n_docs}");
+        let (bed, enc) = bed(seed, n_docs);
+        check_kind(&bed, &enc, kind, seed ^ 0x77);
+    }
+}
+
+/// Rank preservation (§3) composes through sharding: a cache ranking with
+/// a sharded KB's `score_docs` returns exactly the KB top-1 whenever it is
+/// cached — for all three retriever classes.
+#[test]
+fn rank_preservation_through_sharded_kb() {
+    let (bed, enc) = bed(9, 700);
+    let qs = queries(&bed, &enc, 12, 10);
+    let mut rng = Rng::new(11);
+    for kind in RetrieverKind::all() {
+        let kb = bed.sharded(kind, 3);
+        for (dense_q, sparse_q) in &qs {
+            let q = match kind {
+                RetrieverKind::Sr => sparse_q,
+                _ => dense_q,
+            };
+            let truth = kb.retrieve_topk(q, 6);
+            if truth.is_empty() {
+                continue;
+            }
+            let mut cache = LocalCache::new(128);
+            cache.insert(&truth);
+            let distract: Vec<u32> =
+                (0..12).map(|_| rng.gen_range(bed.corpus.len()) as u32)
+                       .collect();
+            cache.insert_ids(&distract);
+            let got = cache.retrieve(q, kb.as_ref()).unwrap();
+            assert_eq!(got.id, truth[0].id, "kind={kind:?}");
+        }
+    }
+}
+
+/// Shard counts beyond the corpus size must clamp, not crash, and still be
+/// bit-identical.
+#[test]
+fn degenerate_shard_counts() {
+    let (bed, enc) = bed(13, 5);
+    let qs = queries(&bed, &enc, 3, 14);
+    for kind in [RetrieverKind::Edr, RetrieverKind::Sr] {
+        let unsharded = bed.unsharded(kind);
+        let sharded = bed.sharded(kind, 64);
+        for (dense_q, sparse_q) in &qs {
+            let q = match kind {
+                RetrieverKind::Sr => sparse_q,
+                _ => dense_q,
+            };
+            let want = bits(&[unsharded.retrieve_topk(q, 10)]);
+            let got = bits(&[sharded.retrieve_topk(q, 10)]);
+            assert_eq!(got, want, "kind={kind:?}");
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Offline stand-in for the `anyhow` crate: the API subset this workspace
+//! uses (`Result`, `Error`, `anyhow!`, `bail!`, `ensure!`), implemented on
+//! std only so the build needs no registry access.
+//!
+//! Semantics mirror anyhow 1.x where it matters here:
+//!   * `Error` is a cheap opaque box with a `Display` message;
+//!   * any `std::error::Error + Send + Sync + 'static` converts via `?`
+//!     (the blanket `From` below — which is also why `Error` itself must
+//!     not implement `std::error::Error`);
+//!   * `{:#}` (alternate) formatting appends the source chain.
+
+use std::fmt;
+
+/// `Result` with a defaulted error type, as in anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+pub struct Error(Box<ErrorImpl>);
+
+struct ErrorImpl {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(Box::new(ErrorImpl { msg: message.to_string(), source: None }))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)?;
+        if f.alternate() {
+            // The stored root's own message already IS `msg`; append only
+            // the transitive sources.
+            if let Some(root) = self.0.source.as_deref() {
+                let mut src = root.source();
+                while let Some(s) = src {
+                    write!(f, ": {s}")?;
+                    src = s.source();
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)?;
+        if let Some(root) = self.0.source.as_deref() {
+            let mut src = root.source();
+            if src.is_some() {
+                write!(f, "\n\nCaused by:")?;
+            }
+            while let Some(s) = src {
+                write!(f, "\n    {s}")?;
+                src = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(Box::new(ErrorImpl { msg: e.to_string(), source: Some(Box::new(e)) }))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable expr).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "Condition failed: `", stringify!($cond), "`")));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path/ever")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn inner(x: usize) -> Result<usize> {
+            ensure!(x > 1, "x too small: {x}");
+            if x > 10 {
+                bail!("x too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(5).unwrap(), 5);
+        assert!(inner(0).unwrap_err().to_string().contains("too small"));
+        assert!(inner(11).unwrap_err().to_string().contains("too big"));
+        let e = anyhow!("plain {} message", 7);
+        assert_eq!(e.to_string(), "plain 7 message");
+    }
+
+    #[test]
+    fn alternate_formatting_includes_sources() {
+        let e = io_fail().unwrap_err();
+        // No panic; the plain and alternate forms both render.
+        let _ = format!("{e} / {e:#} / {e:?}");
+    }
+}
