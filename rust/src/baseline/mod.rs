@@ -48,8 +48,9 @@ impl<'a, L: LanguageModel> RalmSeq<'a, L> {
         let total = Stopwatch::start();
         let mut m = ReqMetrics::default();
 
-        // Initial retrieval from the question alone.
-        let q0 = timed(&mut m.retrieve,
+        // Initial retrieval from the question alone. Query construction
+        // (the dense-encoder call) is "E", not "R" — see metrics docs.
+        let q0 = timed(&mut m.encode,
                        || self.queries.build_from_window(question));
         let top0 = timed(&mut m.retrieve, || self.kb.retrieve(&q0));
         m.kb_calls += 1;
@@ -68,7 +69,7 @@ impl<'a, L: LanguageModel> RalmSeq<'a, L> {
         while !state.done {
             // Retrieve with the latest context, swap the document prefix...
             let r_t = Stopwatch::start();
-            let q = timed(&mut m.retrieve, || self.queries.build(&state));
+            let q = timed(&mut m.encode, || self.queries.build(&state));
             let d = timed(&mut m.retrieve, || self.kb.retrieve(&q))
                 .ok_or_else(|| anyhow::anyhow!("empty knowledge base"))?;
             m.kb_calls += 1;

@@ -78,6 +78,13 @@ COMMANDS:
           [--retriever edr|adr|sr] [--method baseline|spec|psa]
           [--shards N]
                              batch-serve a QA workload through the router
+          [--throughput] [--concurrency N]
+          [--max-batch Q] [--flush-us U]
+                             engine scenario: serve concurrently with
+                             cross-request verification coalescing,
+                             sweeping concurrency 1/8/32 (--throughput)
+                             or one level (--concurrency N); reports
+                             requests/s and p50/p99 latency
     trace [--retriever edr] [--mock]
                              emit a Fig-1(c)-style per-request timeline
     help                     this text

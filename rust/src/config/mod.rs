@@ -71,6 +71,7 @@ pub struct Config {
     pub knnlm: KnnLmConfig,
     pub eval: EvalConfig,
     pub serving: ServingConfig,
+    pub engine: EngineConfig,
 }
 
 impl Config {
@@ -114,6 +115,9 @@ impl Config {
         if let Some(x) = v.get("serving") {
             self.serving.merge(x);
         }
+        if let Some(x) = v.get("engine") {
+            self.engine.merge(x);
+        }
     }
 
     pub fn to_json(&self) -> Value {
@@ -125,6 +129,7 @@ impl Config {
             ("knnlm", self.knnlm.to_json()),
             ("eval", self.eval.to_json()),
             ("serving", self.serving.to_json()),
+            ("engine", self.engine.to_json()),
         ])
     }
 }
@@ -443,6 +448,38 @@ impl ServingConfig {
     }
 }
 
+/// Serving-engine coalescing policy (`serving::ServeEngine`): pending
+/// verification queries from concurrent requests are flushed into one
+/// shared `retrieve_batch` call when `max_batch` queries have accumulated
+/// or the oldest has waited `flush_us` microseconds, whichever first.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub max_batch: usize,
+    pub flush_us: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { max_batch: 32, flush_us: 200 }
+    }
+}
+
+impl EngineConfig {
+    fn merge(&mut self, v: &Value) {
+        merge_fields!(self, v, {
+            "max_batch" => self.max_batch => usize,
+            "flush_us" => self.flush_us => u64,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("max_batch", Value::num(self.max_batch as f64)),
+            ("flush_us", Value::num(self.flush_us as f64)),
+        ])
+    }
+}
+
 /// The three retriever classes evaluated in the paper.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RetrieverKind {
@@ -526,6 +563,20 @@ mod tests {
         c.merge(&v);
         assert_eq!(c.retriever.shards, 4);
         assert_eq!(c.retriever.hnsw_m, 16); // untouched default
+    }
+
+    #[test]
+    fn engine_defaults_and_merge() {
+        let c = Config::default();
+        assert_eq!(c.engine.max_batch, 32);
+        assert_eq!(c.engine.flush_us, 200);
+        let v = json::parse(
+            r#"{"engine": {"max_batch": 8, "flush_us": 1000}}"#).unwrap();
+        let mut c = Config::default();
+        c.merge(&v);
+        assert_eq!(c.engine.max_batch, 8);
+        assert_eq!(c.engine.flush_us, 1000);
+        assert_eq!(c.serving.queue_cap, 256); // untouched default
     }
 
     #[test]

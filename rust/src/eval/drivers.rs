@@ -10,7 +10,8 @@ use crate::cli::Flags;
 use crate::config::{Config, RetrieverKind};
 use crate::datagen::{Dataset, Encoder, HashEncoder};
 use crate::eval::report::{cell_stats, speedup, CellStats, Report};
-use crate::eval::runner::{questions_for, run_qa_cell, QaMethod};
+use crate::eval::runner::{questions_for, run_qa_cell, QaMethod,
+                          ServeSummary};
 use crate::eval::workload::TestBed;
 use crate::knnlm::{Datastore, KnnLmBaseline, KnnLmSpec, KnnServeOptions};
 use crate::lm::{LanguageModel, MockLm};
@@ -99,6 +100,15 @@ pub trait ErasedLm {
                opts: &KnnServeOptions, prompts: &[Vec<u32>], baseline: bool)
                -> anyhow::Result<Vec<ReqMetrics>>;
 
+    /// The `serve` throughput scenario (engine-coalesced serving at a
+    /// fixed concurrency) — see `eval::runner::serve_throughput`.
+    #[allow(clippy::too_many_arguments)]
+    fn serve_throughput(&self, encoder: &dyn Encoder, bed: &TestBed,
+                        kind: RetrieverKind,
+                        questions: &[crate::datagen::Question],
+                        method: QaMethod, cfg: &Config, concurrency: usize)
+                        -> anyhow::Result<ServeSummary>;
+
     fn qproj_of_prompt(&self, prompt: &[u32]) -> anyhow::Result<Vec<f32>>;
 }
 
@@ -138,6 +148,18 @@ macro_rules! impl_holder {
                        opts: &KnnServeOptions, prompts: &[Vec<u32>],
                        baseline: bool) -> anyhow::Result<Vec<ReqMetrics>> {
                 knn_run(&self.0, kb, ds, opts, prompts, baseline)
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            fn serve_throughput(&self, encoder: &dyn Encoder, bed: &TestBed,
+                                kind: RetrieverKind,
+                                questions: &[crate::datagen::Question],
+                                method: QaMethod, cfg: &Config,
+                                concurrency: usize)
+                                -> anyhow::Result<ServeSummary> {
+                crate::eval::runner::serve_throughput(
+                    &self.0, encoder, bed, kind, questions, method, cfg,
+                    concurrency)
             }
 
             fn qproj_of_prompt(&self, prompt: &[u32])
@@ -197,9 +219,10 @@ fn qa_cell_runs(lm: &dyn ErasedLm, encoder: &dyn Encoder, bed: &TestBed,
 }
 
 fn fmt_cell(c: &CellStats) -> String {
-    format!("{:<22} {:>8.3}±{:<6.3} G={:>7.3} R={:>7.3} acc={:>5.2} rb={}",
-            c.label, c.mean_s, c.std_s, c.gen_s, c.retr_s, c.spec_accuracy,
-            c.rollbacks)
+    format!("{:<22} {:>8.3}±{:<6.3} G={:>7.3} R={:>7.3} E={:>7.3} \
+             acc={:>5.2} rb={}",
+            c.label, c.mean_s, c.std_s, c.gen_s, c.retr_s, c.encode_s,
+            c.spec_accuracy, c.rollbacks)
 }
 
 // ---------------------------------------------------------------------------
@@ -755,6 +778,12 @@ fn fig6(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
 pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     let mut cfg = cfg.clone();
     apply_scale(&mut cfg, flags)?;
+    if let Some(n) = flags.get_usize("max-batch")? {
+        cfg.engine.max_batch = n.max(1);
+    }
+    if let Some(n) = flags.get_usize("flush-us")? {
+        cfg.engine.flush_us = n as u64;
+    }
     let model = flags.get("model").unwrap_or("gpt2m").to_string();
     let dataset: Dataset = flags.get("dataset").unwrap_or("wikiqa").parse()?;
     let kind: RetrieverKind = flags.get("retriever").unwrap_or("edr").parse()?;
@@ -764,12 +793,27 @@ pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         "psa" => QaMethod::psa(cfg.spec.prefetch),
         other => anyhow::bail!("unknown method {other}"),
     };
+    let engine_scenario =
+        flags.has("throughput") || flags.get("concurrency").is_some();
     let provider = Provider::from_flags(&cfg, flags)?;
     anyhow::ensure!(provider.has_model(&model), "model {model} not built");
     let bed = build_bed(&cfg, &provider)?;
     let enc = provider.encoder()?;
-    let questions = questions_for(&bed, dataset, cfg.eval.requests, 0,
+    // The throughput sweep needs enough requests that its largest
+    // concurrency level (32) actually keeps 32 in flight for a while;
+    // honour an explicit --requests either way.
+    let n_requests = if engine_scenario && flags.get("requests").is_none() {
+        cfg.eval.requests.max(64)
+    } else {
+        cfg.eval.requests
+    };
+    let questions = questions_for(&bed, dataset, n_requests, 0,
                                   cfg.eval.seed);
+    if engine_scenario {
+        return serve_engine_scenario(&cfg, &provider, &model, &bed,
+                                     enc.as_ref(), kind, dataset,
+                                     &questions, method, flags);
+    }
     eprintln!("[serve] {} requests via {} on {}/{} ({})",
               questions.len(), method.label(), model, kind.label(),
               dataset.label());
@@ -789,6 +833,63 @@ pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
                  s.max);
         Ok(())
     })
+}
+
+/// The `serve --throughput` scenario: engine-coalesced serving swept over
+/// concurrency 1/8/32 (or a single `--concurrency N`), reporting
+/// requests/s, p50/p99 latency, and the coalescing counters.
+#[allow(clippy::too_many_arguments)]
+fn serve_engine_scenario(cfg: &Config, provider: &Provider, model: &str,
+                         bed: &TestBed, enc: &dyn Encoder,
+                         kind: RetrieverKind, dataset: Dataset,
+                         questions: &[crate::datagen::Question],
+                         method: QaMethod, flags: &Flags)
+                         -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !matches!(method, QaMethod::Baseline),
+        "the throughput scenario serves through the speculation engine; \
+         use --method spec or psa");
+    let concurrencies: Vec<usize> = match flags.get_usize("concurrency")? {
+        Some(c) => vec![c.max(1)],
+        None => vec![1, 8, 32],
+    };
+    eprintln!("[serve] engine scenario: {} requests via {} on {}/{} ({}), \
+               max_batch={} flush_us={}",
+              questions.len(), method.label(), model, kind.label(),
+              dataset.label(), cfg.engine.max_batch, cfg.engine.flush_us);
+    let mut report = Report::new(
+        "serve",
+        "Engine serving: requests/s + latency percentiles vs concurrency \
+         (cross-request verification coalescing)");
+    provider.with_lm(cfg, model, &mut |lm| {
+        for &c in &concurrencies {
+            let s = lm.serve_throughput(enc, bed, kind, questions, method,
+                                        cfg, c)?;
+            report.line(&format!(
+                "conc={:<3} {:>7.2} req/s  p50={:.3}s p99={:.3}s \
+                 wall={:.2}s  coalesce mean={:.1} max={} \
+                 queue_wait={:.4}s",
+                s.concurrency, s.rps, s.p50_s, s.p99_s, s.wall_s,
+                s.mean_coalesced, s.max_coalesced, s.mean_queue_wait_s));
+            report.row(Value::obj(vec![
+                ("model", Value::str(model)),
+                ("retriever", Value::str(kind.label())),
+                ("dataset", Value::str(dataset.label())),
+                ("method", Value::str(method.label())),
+                ("concurrency", Value::num(s.concurrency as f64)),
+                ("requests", Value::num(s.requests as f64)),
+                ("rps", Value::num(s.rps)),
+                ("p50_s", Value::num(s.p50_s)),
+                ("p99_s", Value::num(s.p99_s)),
+                ("wall_s", Value::num(s.wall_s)),
+                ("mean_coalesced", Value::num(s.mean_coalesced)),
+                ("max_coalesced", Value::num(s.max_coalesced as f64)),
+                ("queue_wait_s", Value::num(s.mean_queue_wait_s)),
+            ]));
+        }
+        Ok(())
+    })?;
+    report.write(&cfg.paths.reports)
 }
 
 pub fn run_trace(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {

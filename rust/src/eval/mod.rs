@@ -7,5 +7,7 @@ pub mod runner;
 pub mod workload;
 
 pub use report::{cell_stats, speedup, CellStats, Report};
-pub use runner::{query_mode, questions_for, run_qa_cell, QaMethod};
+pub use runner::{build_spec_options, query_mode, questions_for,
+                 run_engine_cell, run_qa_cell, serve_throughput, QaMethod,
+                 ServeSummary};
 pub use workload::TestBed;

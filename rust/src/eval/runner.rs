@@ -6,9 +6,9 @@ use crate::config::{Config, RetrieverKind};
 use crate::datagen::{Dataset, Encoder, Question};
 use crate::eval::workload::TestBed;
 use crate::lm::LanguageModel;
-use crate::metrics::ReqMetrics;
-use crate::spec::{Os3Config, QueryBuilder, QueryMode, SpecOptions,
-                  SpecPipeline, StridePolicy};
+use crate::metrics::{ReqMetrics, Stopwatch};
+use crate::serving::{EngineOptions, EngineStats, ServeEngine};
+use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecPipeline};
 
 /// One serving method of the paper's evaluation grid.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -111,30 +111,13 @@ pub fn run_qa_cell<L: LanguageModel>(
             }
         }
         QaMethod::Spec { prefetch, os3, async_verify, stride } => {
-            let policy = if os3 {
-                StridePolicy::Os3(Os3Config {
-                    window: cfg.spec.os3_window,
-                    gamma_max: cfg.spec.gamma_max,
-                    max_stride: cfg.spec.max_stride,
-                    async_mode: async_verify,
-                })
-            } else {
-                StridePolicy::Fixed(stride)
-            };
             let pipe = SpecPipeline {
                 lm,
                 kb: kb.as_ref(),
                 corpus: &bed.corpus,
                 queries,
-                opts: SpecOptions {
-                    gen_stride: cfg.spec.gen_stride,
-                    stride: policy,
-                    prefetch,
-                    async_verify,
-                    max_new: cfg.spec.max_new_tokens,
-                    max_doc_tokens: cfg.spec.max_doc_tokens,
-                    cache_cap: crate::cache::DEFAULT_CACHE_CAP,
-                },
+                opts: build_spec_options(cfg, prefetch, os3, async_verify,
+                                         stride),
             };
             for q in questions {
                 out.push(pipe.run(&q.tokens)?);
@@ -142,6 +125,109 @@ pub fn run_qa_cell<L: LanguageModel>(
         }
     }
     Ok(out)
+}
+
+/// Per-request [`SpecOptions`] for a speculative [`QaMethod`] — thin
+/// alias over the shared [`SpecOptions::for_method`] constructor.
+pub fn build_spec_options(cfg: &Config, prefetch: usize, os3: bool,
+                          async_verify: bool, stride: usize) -> SpecOptions {
+    SpecOptions::for_method(cfg, prefetch, os3, async_verify, stride)
+}
+
+/// Serve `questions` through the coalescing [`ServeEngine`]:
+/// `methods[i]` applies to `questions[i]` (all must be speculative — the
+/// engine has no baseline path). Returns per-request metrics in question
+/// order plus the engine's coalescing stats.
+#[allow(clippy::too_many_arguments)]
+pub fn run_engine_cell<L: LanguageModel>(
+    lm: &L, encoder: &dyn Encoder, bed: &TestBed, kind: RetrieverKind,
+    questions: &[Question], methods: &[QaMethod], cfg: &Config,
+    engine_opts: EngineOptions)
+    -> anyhow::Result<(Vec<ReqMetrics>, EngineStats)> {
+    anyhow::ensure!(questions.len() == methods.len(),
+                    "{} questions but {} methods",
+                    questions.len(), methods.len());
+    let kb = bed.retriever(kind);
+    let queries = QueryBuilder {
+        encoder,
+        mode: query_mode(kind),
+        dense_len: cfg.retriever.dense_query_len,
+        sparse_len: cfg.retriever.sparse_query_len,
+    };
+    let mut engine = ServeEngine::new(lm, kb.as_ref(), &bed.corpus, queries,
+                                      engine_opts);
+    for (i, (q, method)) in questions.iter().zip(methods).enumerate() {
+        let QaMethod::Spec { prefetch, os3, async_verify, stride } = *method
+        else {
+            anyhow::bail!("engine serving requires speculative methods");
+        };
+        engine.submit(i as u64, &q.tokens,
+                      build_spec_options(cfg, prefetch, os3, async_verify,
+                                         stride));
+    }
+    let done = engine.run()?;
+    let stats = engine.stats().clone();
+    Ok((done.into_iter().map(|(_, m)| m).collect(), stats))
+}
+
+/// One `serve` scenario measurement at a fixed concurrency.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub concurrency: usize,
+    pub requests: usize,
+    pub wall_s: f64,
+    /// Requests per second (requests / wall).
+    pub rps: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// Mean / max queries per coalesced KB call.
+    pub mean_coalesced: f64,
+    pub max_coalesced: u64,
+    /// Mean per-request time spent in the coalescing buffer.
+    pub mean_queue_wait_s: f64,
+}
+
+/// The `serve` throughput scenario: one uniform speculative method, all
+/// requests admitted up to `concurrency` in flight, coalescing per
+/// `cfg.engine`. Shared by the CLI driver and the equivalence/throughput
+/// tests so both measure the same code path.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_throughput<L: LanguageModel>(
+    lm: &L, encoder: &dyn Encoder, bed: &TestBed, kind: RetrieverKind,
+    questions: &[Question], method: QaMethod, cfg: &Config,
+    concurrency: usize) -> anyhow::Result<ServeSummary> {
+    let methods: Vec<QaMethod> = vec![method; questions.len()];
+    let opts = EngineOptions::from_config(cfg, concurrency.max(1));
+    let sw = Stopwatch::start();
+    let (ms, stats) = run_engine_cell(lm, encoder, bed, kind, questions,
+                                      &methods, cfg, opts)?;
+    let wall = sw.elapsed().as_secs_f64().max(1e-9);
+    let mut lat: Vec<f64> =
+        ms.iter().map(|m| m.total.as_secs_f64()).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let pct = |p: f64| -> f64 {
+        if lat.is_empty() {
+            0.0
+        } else {
+            lat[(((lat.len() - 1) as f64) * p).round() as usize]
+        }
+    };
+    let queue = ms
+        .iter()
+        .map(|m| m.queue_wait.as_secs_f64())
+        .sum::<f64>()
+        / ms.len().max(1) as f64;
+    Ok(ServeSummary {
+        concurrency,
+        requests: ms.len(),
+        wall_s: wall,
+        rps: ms.len() as f64 / wall,
+        p50_s: pct(0.50),
+        p99_s: pct(0.99),
+        mean_coalesced: stats.mean_coalesced(),
+        max_coalesced: stats.max_coalesced,
+        mean_queue_wait_s: queue,
+    })
 }
 
 /// Questions for a (dataset, run) pair — each run re-seeds so mean ± std

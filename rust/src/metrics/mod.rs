@@ -46,10 +46,19 @@ pub struct ReqMetrics {
     pub generate: Duration,
     /// Knowledge-base retrieval time (incl. batched verification) — "R".
     pub retrieve: Duration,
+    /// Query-construction time (dense-encoder / term-window work) — "E".
+    /// Kept separate from `retrieve`: the encoder runs on the LM side,
+    /// and folding it into R inflated the Fig-4 R bar for the
+    /// speculative path (which builds one query per speculation step).
+    pub encode: Duration,
     /// Local speculation-cache lookup time — part of the speculation step.
     pub cache: Duration,
     /// Time spent blocked on an in-flight async verification.
     pub verify_wait: Duration,
+    /// Time this request's verification queries sat in the serving
+    /// engine's coalescing buffer before their KB call started (zero
+    /// outside the engine).
+    pub queue_wait: Duration,
 
     pub prefills: u32,
     pub decode_tokens: u32,
@@ -92,13 +101,21 @@ impl ReqMetrics {
         self.spec_correct as f64 / self.spec_steps as f64
     }
 
-    /// Merge (for aggregate reporting).
+    /// Merge (for aggregate reporting). Counters and component times sum;
+    /// `strides` concatenates, so an aggregated stride trajectory covers
+    /// every merged request instead of silently dropping all but the
+    /// first operand's. `events` (offsets are relative to each request's
+    /// own start) and `tokens_out` (per-request output, compared
+    /// request-by-request in the equivalence suites) are intentionally
+    /// per-request and are left untouched by `add`.
     pub fn add(&mut self, other: &ReqMetrics) {
         self.total += other.total;
         self.generate += other.generate;
         self.retrieve += other.retrieve;
+        self.encode += other.encode;
         self.cache += other.cache;
         self.verify_wait += other.verify_wait;
+        self.queue_wait += other.queue_wait;
         self.prefills += other.prefills;
         self.decode_tokens += other.decode_tokens;
         self.kb_calls += other.kb_calls;
@@ -107,6 +124,7 @@ impl ReqMetrics {
         self.spec_steps += other.spec_steps;
         self.spec_correct += other.spec_correct;
         self.wasted_tokens += other.wasted_tokens;
+        self.strides.extend_from_slice(&other.strides);
     }
 }
 
@@ -169,5 +187,31 @@ mod tests {
         assert_eq!(a.prefills, 3);
         assert_eq!(a.decode_tokens, 15);
         assert_eq!(a.rollbacks, 1);
+    }
+
+    #[test]
+    fn add_appends_strides_and_sums_new_components() {
+        let mut a = ReqMetrics {
+            strides: vec![1, 2],
+            encode: Duration::from_millis(3),
+            queue_wait: Duration::from_millis(5),
+            tokens_out: vec![10, 11],
+            ..Default::default()
+        };
+        let b = ReqMetrics {
+            strides: vec![3, 4, 5],
+            encode: Duration::from_millis(4),
+            queue_wait: Duration::from_millis(1),
+            tokens_out: vec![99],
+            ..Default::default()
+        };
+        a.add(&b);
+        // The stride trajectory must cover every merged request (table5's
+        // summaries previously only reflected the last request).
+        assert_eq!(a.strides, vec![1, 2, 3, 4, 5]);
+        assert_eq!(a.encode, Duration::from_millis(7));
+        assert_eq!(a.queue_wait, Duration::from_millis(6));
+        // tokens_out stays per-request (see `add` docs).
+        assert_eq!(a.tokens_out, vec![10, 11]);
     }
 }

@@ -1,0 +1,433 @@
+//! Concurrent serving engine: multiplex N in-flight [`SpecTask`]s and
+//! coalesce their pending verification queries into shared
+//! `kb.retrieve_batch` calls (DESIGN.md ADR-003).
+//!
+//! The paper's batched verification amortizes retrieval *within* one
+//! request's speculation stride; at serving scale the same batch-first
+//! retrieval primitive amortizes *across* concurrent requests. The engine
+//! drives each task one speculation step at a time (fair interleaving),
+//! parks tasks that emit `NeedsVerify`, and flushes the accumulated
+//! queries under a **size-or-deadline** policy (`engine.max_batch`
+//! queries, or the oldest query aging past `engine.flush_us`, or nothing
+//! else can make progress). Queries are grouped by their top-k so tasks
+//! with different prefetch sizes never share a call.
+//!
+//! **Why per-request outputs survive coalescing bit-for-bit**: every
+//! retriever scores a query independently of its batchmates (the
+//! bit-identity pinned by the fig6 driver and
+//! tests/sharded_equivalence.rs), so the sub-slice of a coalesced call
+//! routed back to a task is exactly what the task's own
+//! `retrieve_batch` would have returned. The equivalence suite
+//! (tests/engine_equivalence.rs) checks engine output against sequential
+//! `SpecPipeline::run` per request at concurrency 1/8/32.
+
+use crate::baseline::{BaselineOptions, RalmSeq};
+use crate::config::Config;
+use crate::datagen::{Corpus, Encoder};
+use crate::lm::LanguageModel;
+use crate::metrics::{ReqMetrics, Stopwatch};
+use crate::retriever::{Retriever, SpecQuery};
+use crate::serving::router::{Method, Request, ServeBackend};
+use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecTask,
+                  TaskStep};
+use std::collections::VecDeque;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Flush the coalescing buffer when this many queries are pending.
+    pub max_batch: usize,
+    /// ... or when the oldest pending query has waited this long (µs).
+    pub flush_us: u64,
+    /// In-flight request cap (admission control); 0 = unlimited.
+    pub max_inflight: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        let c = crate::config::EngineConfig::default();
+        Self { max_batch: c.max_batch, flush_us: c.flush_us, max_inflight: 0 }
+    }
+}
+
+impl EngineOptions {
+    pub fn from_config(cfg: &Config, max_inflight: usize) -> Self {
+        Self {
+            max_batch: cfg.engine.max_batch.max(1),
+            flush_us: cfg.engine.flush_us,
+            max_inflight,
+        }
+    }
+}
+
+/// Engine-level counters (per-request metrics live in each task's
+/// [`ReqMetrics`]; `queue_wait` there is attributed by the engine).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Coalesced KB calls actually issued.
+    pub kb_calls: u64,
+    /// Queries answered across those calls.
+    pub coalesced_queries: u64,
+    /// Largest coalesced batch seen.
+    pub max_coalesced: u64,
+    pub size_flushes: u64,
+    pub deadline_flushes: u64,
+    /// Flushes forced because no task could progress without results.
+    pub drain_flushes: u64,
+    /// Total wall time inside coalesced KB calls.
+    pub kb_time: Duration,
+}
+
+impl EngineStats {
+    /// Mean queries per coalesced KB call — the cross-request batching
+    /// factor (1.0 means coalescing never helped).
+    pub fn mean_coalesced(&self) -> f64 {
+        if self.kb_calls == 0 {
+            return 0.0;
+        }
+        self.coalesced_queries as f64 / self.kb_calls as f64
+    }
+}
+
+/// A task slot. Slots are recycled (never removed) so the coalescing
+/// buffer can hold stable slot indices across admissions.
+struct Slot<'a, L: LanguageModel> {
+    id: u64,
+    task: Option<SpecTask<'a, L>>,
+    /// True while the task's `NeedsVerify` sits in the coalescing buffer.
+    awaiting: bool,
+}
+
+/// One parked verification batch awaiting flush.
+struct PendingVerify {
+    slot: usize,
+    queries: Vec<SpecQuery>,
+    k: usize,
+    enqueued: Stopwatch,
+}
+
+pub struct ServeEngine<'a, L: LanguageModel> {
+    lm: &'a L,
+    kb: &'a dyn Retriever,
+    corpus: &'a Corpus,
+    queries: QueryBuilder<'a>,
+    opts: EngineOptions,
+    /// Admission queue; tasks are constructed at submission so each
+    /// request's latency clock covers its admission-queue wait too.
+    waiting: VecDeque<(u64, SpecTask<'a, L>)>,
+    slots: Vec<Slot<'a, L>>,
+    pending: Vec<PendingVerify>,
+    stats: EngineStats,
+    finished: Vec<(u64, ReqMetrics)>,
+}
+
+impl<'a, L: LanguageModel> ServeEngine<'a, L> {
+    pub fn new(lm: &'a L, kb: &'a dyn Retriever, corpus: &'a Corpus,
+               queries: QueryBuilder<'a>, opts: EngineOptions) -> Self {
+        Self {
+            lm,
+            kb,
+            corpus,
+            queries,
+            opts,
+            waiting: VecDeque::new(),
+            slots: Vec::new(),
+            pending: Vec::new(),
+            stats: EngineStats::default(),
+            finished: Vec::new(),
+        }
+    }
+
+    /// Enqueue one request. Admission happens inside [`run`](Self::run),
+    /// honouring `max_inflight`; the request's latency clock starts here,
+    /// so reported p50/p99 include admission-queue wait (what a client
+    /// would observe), not just in-flight service time.
+    pub fn submit(&mut self, id: u64, question: &[u32], opts: SpecOptions) {
+        let task = SpecTask::new(self.lm, self.kb, self.corpus,
+                                 self.queries, opts, question);
+        self.waiting.push_back((id, task));
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Drain the results collected so far. [`run`](Self::run) returns them
+    /// on success; after a `run` error this lets the caller salvage the
+    /// requests that completed before the failing one, instead of
+    /// reporting the whole coalesced batch as failed.
+    pub fn take_finished(&mut self) -> Vec<(u64, ReqMetrics)> {
+        self.finished.sort_by_key(|(id, _)| *id);
+        std::mem::take(&mut self.finished)
+    }
+
+    fn inflight(&self) -> usize {
+        self.slots.iter().filter(|s| s.task.is_some()).count()
+    }
+
+    fn admit(&mut self) {
+        let cap = if self.opts.max_inflight == 0 {
+            usize::MAX
+        } else {
+            self.opts.max_inflight
+        };
+        while self.inflight() < cap {
+            let Some((id, task)) = self.waiting.pop_front() else {
+                break;
+            };
+            // Recycle a free slot (its pending entries, if any existed,
+            // were consumed before the slot was freed) to keep the slot
+            // indices stored in `pending` stable.
+            match self.slots.iter().position(|s| s.task.is_none()) {
+                Some(i) => {
+                    self.slots[i] =
+                        Slot { id, task: Some(task), awaiting: false };
+                }
+                None => {
+                    self.slots.push(
+                        Slot { id, task: Some(task), awaiting: false });
+                }
+            }
+        }
+    }
+
+    /// Drive every submitted request to completion, coalescing
+    /// verification batches across them. Returns `(id, metrics)` sorted by
+    /// request id; per-request `tokens_out` is bit-identical to a
+    /// sequential `SpecPipeline::run` of the same request.
+    #[allow(clippy::needless_range_loop)] // indices outlive `slots` borrows
+    pub fn run(&mut self) -> anyhow::Result<Vec<(u64, ReqMetrics)>> {
+        loop {
+            self.admit();
+            if self.waiting.is_empty()
+                && self.slots.iter().all(|s| s.task.is_none())
+            {
+                break;
+            }
+
+            // One speculation step (or one parked batch) per runnable
+            // task: round-robin keeps N tasks' steps interleaved so their
+            // verification points line up inside the coalescing window.
+            let mut runnable = 0usize;
+            for i in 0..self.slots.len() {
+                if self.slots[i].awaiting {
+                    continue;
+                }
+                let step = {
+                    let Some(task) = self.slots[i].task.as_mut() else {
+                        continue;
+                    };
+                    let step = task.advance()?;
+                    if matches!(step, TaskStep::NeedsVerify { .. }) {
+                        // Start the async overlap step (if the task's
+                        // options ask for one) before parking the batch.
+                        task.overlap_step()?;
+                    }
+                    step
+                };
+                match step {
+                    TaskStep::Continue => runnable += 1,
+                    TaskStep::Done => {
+                        let task = self.slots[i].task.take()
+                            .expect("task was just advanced");
+                        self.finished
+                            .push((self.slots[i].id, task.into_metrics()));
+                    }
+                    TaskStep::NeedsVerify { queries, k } => {
+                        self.slots[i].awaiting = true;
+                        self.pending.push(PendingVerify {
+                            slot: i,
+                            queries,
+                            k,
+                            enqueued: Stopwatch::start(),
+                        });
+                    }
+                }
+            }
+
+            // Size-or-deadline flush policy (drain when nothing else can
+            // move: every in-flight task is parked and no admission is
+            // possible, so waiting any longer cannot grow the batch).
+            if !self.pending.is_empty() {
+                let pending_q: usize =
+                    self.pending.iter().map(|p| p.queries.len()).sum();
+                let admissible = !self.waiting.is_empty()
+                    && (self.opts.max_inflight == 0
+                        || self.inflight() < self.opts.max_inflight);
+                if pending_q >= self.opts.max_batch {
+                    self.stats.size_flushes += 1;
+                    self.flush()?;
+                } else if runnable == 0 && !admissible {
+                    self.stats.drain_flushes += 1;
+                    self.flush()?;
+                } else if self.pending[0].enqueued.elapsed()
+                    >= Duration::from_micros(self.opts.flush_us)
+                {
+                    self.stats.deadline_flushes += 1;
+                    self.flush()?;
+                }
+            }
+        }
+        Ok(self.take_finished())
+    }
+
+    /// Issue the coalesced KB call(s) for everything in the buffer and
+    /// route each sub-slice of results back to its owning task.
+    fn flush(&mut self) -> anyhow::Result<()> {
+        let batch = std::mem::take(&mut self.pending);
+        if batch.is_empty() {
+            return Ok(());
+        }
+        // Group by top-k: tasks with different prefetch sizes cannot share
+        // one retrieve_batch call. Within a group, submission order is
+        // preserved; per-query results are independent of batchmates, so
+        // sub-slice routing is bit-identical to per-task retrieval.
+        let mut ks: Vec<usize> = batch.iter().map(|p| p.k).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        for k in ks {
+            let idxs: Vec<usize> =
+                (0..batch.len()).filter(|&i| batch[i].k == k).collect();
+            let coalesced: Vec<SpecQuery> = idxs
+                .iter()
+                .flat_map(|&i| batch[i].queries.iter().cloned())
+                .collect();
+            // Coalescing delay, snapshotted immediately before *this*
+            // group's KB call: with mixed top-k in one flush, a later
+            // group's wait includes the earlier groups' KB time (its
+            // queries really were still unanswered while those ran).
+            let group_waits: Vec<Duration> =
+                idxs.iter().map(|&i| batch[i].enqueued.elapsed()).collect();
+            let sw = Stopwatch::start();
+            let mut results = self.kb.retrieve_batch(&coalesced, k);
+            let kb_time = sw.elapsed();
+            anyhow::ensure!(results.len() == coalesced.len(),
+                            "retriever returned {} rows for {} queries",
+                            results.len(), coalesced.len());
+            self.stats.kb_calls += 1;
+            self.stats.coalesced_queries += coalesced.len() as u64;
+            self.stats.max_coalesced =
+                self.stats.max_coalesced.max(coalesced.len() as u64);
+            self.stats.kb_time += kb_time;
+            for (gi, &i) in idxs.iter().enumerate() {
+                let p = &batch[i];
+                let rest = results.split_off(p.queries.len());
+                let rows = std::mem::replace(&mut results, rest);
+                let slot = &mut self.slots[p.slot];
+                let task = slot.task.as_mut()
+                    .expect("awaiting slot holds its task");
+                task.metrics_mut().queue_wait += group_waits[gi];
+                task.provide(rows, kb_time)?;
+                slot.awaiting = false;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-request [`SpecOptions`] for a router [`Method::Spec`] request —
+/// delegates to the shared [`SpecOptions::for_method`] constructor so
+/// router-served requests stay bit-identical to eval-served ones.
+pub fn spec_options_for(cfg: &Config, prefetch: bool, os3: bool,
+                        async_verify: bool) -> SpecOptions {
+    SpecOptions::for_method(
+        cfg, if prefetch { cfg.spec.prefetch } else { 1 }, os3,
+        async_verify, cfg.spec.stride)
+}
+
+/// Router backend that multiplexes [`Method::Spec`] requests through a
+/// [`ServeEngine`]: the router worker drains up to `preferred_batch()`
+/// queued jobs and hands them over as one `serve_batch` call, so
+/// cross-request coalescing happens *inside* a worker. `Method::Baseline`
+/// requests in the same drain are served inline via [`RalmSeq`].
+pub struct EngineBackend<L: LanguageModel> {
+    pub lm: L,
+    pub kb: std::sync::Arc<dyn Retriever>,
+    pub corpus: std::sync::Arc<Corpus>,
+    pub encoder: Box<dyn Encoder>,
+    pub mode: QueryMode,
+    pub cfg: Config,
+    pub engine_opts: EngineOptions,
+}
+
+impl<L: LanguageModel> EngineBackend<L> {
+    fn query_builder(&self) -> QueryBuilder<'_> {
+        QueryBuilder {
+            encoder: self.encoder.as_ref(),
+            mode: self.mode,
+            dense_len: self.cfg.retriever.dense_query_len,
+            sparse_len: self.cfg.retriever.sparse_query_len,
+        }
+    }
+}
+
+impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
+    fn serve(&mut self, req: &Request) -> anyhow::Result<ReqMetrics> {
+        let mut out = self.serve_batch(std::slice::from_ref(req));
+        out.pop().expect("serve_batch returns one result per request")
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.engine_opts.max_batch.max(1)
+    }
+
+    fn serve_batch(&mut self, reqs: &[Request])
+                   -> Vec<anyhow::Result<ReqMetrics>> {
+        let queries = self.query_builder();
+        let mut engine = ServeEngine::new(
+            &self.lm, self.kb.as_ref(), self.corpus.as_ref(), queries,
+            self.engine_opts.clone());
+        let mut results: Vec<Option<anyhow::Result<ReqMetrics>>> =
+            reqs.iter().map(|_| None).collect();
+        for (i, req) in reqs.iter().enumerate() {
+            match req.method {
+                Method::Baseline => {
+                    let pipe = RalmSeq {
+                        lm: &self.lm,
+                        kb: self.kb.as_ref(),
+                        corpus: self.corpus.as_ref(),
+                        queries,
+                        opts: BaselineOptions {
+                            gen_stride: self.cfg.spec.gen_stride,
+                            max_new: self.cfg.spec.max_new_tokens,
+                            max_doc_tokens: self.cfg.spec.max_doc_tokens,
+                        },
+                    };
+                    results[i] = Some(pipe.run(&req.question));
+                }
+                Method::Spec { prefetch, os3, async_verify } => {
+                    engine.submit(
+                        i as u64, &req.question,
+                        spec_options_for(&self.cfg, prefetch, os3,
+                                         async_verify));
+                }
+            }
+        }
+        match engine.run() {
+            Ok(done) => {
+                for (i, m) in done {
+                    results[i as usize] = Some(Ok(m));
+                }
+            }
+            Err(e) => {
+                // Salvage requests that completed before the failure; only
+                // the genuinely unresolved ones get the error (anyhow::
+                // Error is not Clone, so format once).
+                for (i, m) in engine.take_finished() {
+                    results[i as usize] = Some(Ok(m));
+                }
+                let msg = format!("{e:#}");
+                for r in results.iter_mut() {
+                    if r.is_none() {
+                        *r = Some(Err(anyhow::anyhow!(
+                            "engine run failed: {msg}")));
+                    }
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every request resolved"))
+            .collect()
+    }
+}

@@ -1,5 +1,6 @@
 //! Serving front-end: a request router with a bounded queue
-//! and OS-thread pipeline workers (vLLM-router-like shape).
+//! and OS-thread pipeline workers (vLLM-router-like shape), plus the
+//! cross-request coalescing engine (DESIGN.md ADR-003).
 //!
 //! PJRT handles are not Send, so each worker thread constructs its own
 //! backend (Engine + pipelines) via the factory closure; the queue side
@@ -8,7 +9,17 @@
 //! (possibly sharded) retriever across all workers — the per-worker part
 //! is only the LM. Both submission paths report backpressure the same
 //! way: a full queue is an immediate error, never an unbounded block.
+//! Worker threads survive backend panics: the failing request gets an
+//! error `Response` and the worker keeps draining the queue.
+//!
+//! `Method::Spec` requests flow through [`engine::ServeEngine`] when the
+//! worker backend is an [`engine::EngineBackend`]: the worker drains up to
+//! `engine.max_batch` queued jobs at once and the engine coalesces their
+//! verification queries into shared `retrieve_batch` calls.
 
+pub mod engine;
 pub mod router;
 
-pub use router::{Request, Response, Router, ServeBackend};
+pub use engine::{spec_options_for, EngineBackend, EngineOptions,
+                 EngineStats, ServeEngine};
+pub use router::{Method, Request, Response, Router, ServeBackend};

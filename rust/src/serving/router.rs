@@ -35,6 +35,33 @@ pub struct Response {
 /// be Send).
 pub trait ServeBackend {
     fn serve(&mut self, req: &Request) -> anyhow::Result<ReqMetrics>;
+
+    /// How many queued jobs a worker should drain into one `serve_batch`
+    /// call. 1 (the default) preserves job-at-a-time serving; an
+    /// engine-backed backend (`serving::EngineBackend`) raises it so
+    /// cross-request verification coalescing sees a whole batch.
+    fn preferred_batch(&self) -> usize {
+        1
+    }
+
+    /// Serve a drained batch, one result per request **in order**. The
+    /// default loops `serve`; batching backends override to multiplex the
+    /// requests through a shared engine.
+    fn serve_batch(&mut self, reqs: &[Request])
+                   -> Vec<anyhow::Result<ReqMetrics>> {
+        reqs.iter().map(|r| self.serve(r)).collect()
+    }
+}
+
+/// Best-effort panic payload text for the error `Response`.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 struct Job {
@@ -73,20 +100,89 @@ impl Router {
                             }
                         };
                         loop {
-                            // Pop one job (shared MPMC via mutexed receiver).
+                            // Pop one job (shared MPMC via mutexed
+                            // receiver), then greedily drain already-queued
+                            // jobs up to the backend's preferred batch so
+                            // an engine backend can coalesce across them.
                             let job = {
                                 let guard = rx.lock().unwrap();
                                 guard.recv()
                             };
                             let Ok(job) = job else { break };
-                            let result = backend.serve(&job.req).map(|m| {
-                                Response {
-                                    id: job.req.id,
-                                    tokens: m.tokens_out.clone(),
-                                    metrics: m,
+                            let mut jobs = vec![job];
+                            let cap = backend.preferred_batch().max(1);
+                            if cap > 1 {
+                                let guard = rx.lock().unwrap();
+                                while jobs.len() < cap {
+                                    match guard.try_recv() {
+                                        Ok(j) => jobs.push(j),
+                                        Err(_) => break,
+                                    }
                                 }
-                            });
-                            let _ = job.resp.send(result);
+                            }
+                            // Split each job into its request (handed to
+                            // the backend by reference — no clone on the
+                            // hot path) and its reply channel.
+                            let mut reqs = Vec::with_capacity(jobs.len());
+                            let mut replies =
+                                Vec::with_capacity(jobs.len());
+                            for job in jobs {
+                                let id = job.req.id;
+                                reqs.push(job.req);
+                                replies.push((id, job.resp));
+                            }
+                            // A panicking backend must not kill the worker:
+                            // before this guard, each panic silently ate a
+                            // thread and capacity decayed to zero. Catch
+                            // it, answer every drained job with an error,
+                            // keep serving.
+                            let outcome = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(
+                                    || backend.serve_batch(&reqs)));
+                            match outcome {
+                                Ok(results)
+                                    if results.len() == replies.len() =>
+                                {
+                                    for ((id, resp), result) in
+                                        replies.into_iter().zip(results)
+                                    {
+                                        let r = result.map(|m| Response {
+                                            id,
+                                            tokens: m.tokens_out.clone(),
+                                            metrics: m,
+                                        });
+                                        let _ = resp.send(r);
+                                    }
+                                }
+                                Ok(results) => {
+                                    // Contract violation: surface it as a
+                                    // real error instead of silently
+                                    // dropping the unmatched jobs.
+                                    let msg = format!(
+                                        "backend returned {} results for \
+                                         {} requests",
+                                        results.len(), replies.len());
+                                    eprintln!("worker {wid}: {msg}");
+                                    for (id, resp) in replies {
+                                        let _ = resp.send(Err(
+                                            anyhow::anyhow!(
+                                                "request {id}: {msg}")));
+                                    }
+                                }
+                                Err(payload) => {
+                                    let msg =
+                                        panic_message(payload.as_ref());
+                                    eprintln!("worker {wid}: backend \
+                                               panicked: {msg}");
+                                    for (id, resp) in replies {
+                                        let _ = resp.send(Err(
+                                            anyhow::anyhow!(
+                                                "backend panicked while \
+                                                 serving request {id}: \
+                                                 {msg}")));
+                                    }
+                                }
+                            }
                         }
                     })
                     .expect("spawning worker")
@@ -212,6 +308,107 @@ mod tests {
         }
         assert!(saw_backpressure, "queue of 1 must overflow");
         for rx in rxs { let _ = rx.recv(); }
+        router.shutdown();
+    }
+
+    #[test]
+    fn worker_survives_backend_panic() {
+        // Regression: a panic in ServeBackend::serve used to kill the
+        // worker thread permanently, so capacity silently decayed to zero
+        // under repeated panics. The panicking request must get an error
+        // Response and the same worker must keep serving.
+        struct PanicOnSeven;
+        impl ServeBackend for PanicOnSeven {
+            fn serve(&mut self, req: &Request) -> anyhow::Result<ReqMetrics> {
+                if req.id == 7 {
+                    panic!("injected failure on request 7");
+                }
+                let mut m = ReqMetrics::default();
+                m.tokens_out = vec![req.id as u32];
+                Ok(m)
+            }
+        }
+        let router = Router::spawn(8, 1, || Ok(PanicOnSeven));
+        for round in 0..3 {
+            let err = router.submit_blocking(Request {
+                id: 7,
+                question: vec![round],
+                method: Method::Baseline,
+            });
+            let err = err.expect_err("panicking request must error");
+            assert!(err.to_string().contains("panicked"),
+                    "error should say the backend panicked: {err:#}");
+            // The single worker survived and still answers.
+            let ok = router.submit_blocking(Request {
+                id: round as u64,
+                question: vec![1],
+                method: Method::Baseline,
+            }).expect("worker must stay alive after a panic");
+            assert_eq!(ok.tokens, vec![round as u32]);
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn worker_drains_batches_for_batching_backends() {
+        // A backend with preferred_batch > 1 sees already-queued jobs as
+        // one serve_batch call. Gate the first call so the rest of the
+        // jobs are provably enqueued before the second drain.
+        struct Batchy {
+            started: smpsc::Sender<()>,
+            release: smpsc::Receiver<()>,
+            sizes: Arc<Mutex<Vec<usize>>>,
+        }
+        impl ServeBackend for Batchy {
+            fn serve(&mut self, req: &Request) -> anyhow::Result<ReqMetrics> {
+                let mut m = ReqMetrics::default();
+                m.tokens_out = vec![req.id as u32];
+                Ok(m)
+            }
+
+            fn preferred_batch(&self) -> usize {
+                8
+            }
+
+            fn serve_batch(&mut self, reqs: &[Request])
+                           -> Vec<anyhow::Result<ReqMetrics>> {
+                self.sizes.lock().unwrap().push(reqs.len());
+                let _ = self.started.send(());
+                let _ = self.release.recv();
+                reqs.iter().map(|r| self.serve(r)).collect()
+            }
+        }
+        let (started_tx, started_rx) = smpsc::channel::<()>();
+        let (release_tx, release_rx) = smpsc::channel::<()>();
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let slot = Arc::new(Mutex::new(Some((started_tx, release_rx))));
+        let sizes2 = sizes.clone();
+        let router = Router::spawn(16, 1, move || {
+            let (started, release) =
+                slot.lock().unwrap().take().expect("single worker");
+            Ok(Batchy { started, release, sizes: sizes2.clone() })
+        });
+        let mut rxs = vec![router
+            .submit(Request { id: 0, question: vec![0],
+                              method: Method::Baseline })
+            .unwrap()];
+        started_rx.recv().expect("worker entered the first batch");
+        // These five enqueue while the worker is parked in batch one...
+        for i in 1..6u64 {
+            rxs.push(router
+                .submit(Request { id: i, question: vec![i as u32],
+                                  method: Method::Baseline })
+                .unwrap());
+        }
+        release_tx.send(()).unwrap(); // finish batch one
+        started_rx.recv().expect("worker entered the second batch");
+        release_tx.send(()).unwrap(); // finish batch two
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.tokens, vec![i as u32]);
+        }
+        // ...so the second drain must have coalesced all five.
+        assert_eq!(*sizes.lock().unwrap(), vec![1, 5]);
         router.shutdown();
     }
 

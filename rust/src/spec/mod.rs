@@ -6,5 +6,5 @@ pub mod pipeline;
 pub mod query;
 
 pub use os3::{objective, Os3Config, Scheduler, StridePolicy};
-pub use pipeline::{SpecOptions, SpecPipeline};
+pub use pipeline::{SpecOptions, SpecPipeline, SpecTask, TaskStep};
 pub use query::{QueryBuilder, QueryMode};

@@ -10,19 +10,33 @@
 //! *when* retrievals happen, never *what* the model sees after
 //! verification.
 //!
+//! Since the resumable-task refactor (DESIGN.md ADR-003) the pipeline is a
+//! thin driver over [`SpecTask`], a step-driven state machine that owns all
+//! per-request state (generation state, speculation cache, OS³ scheduler,
+//! metrics) and *never touches the knowledge base for verification
+//! itself*: [`SpecTask::advance`] runs until it either finishes or emits a
+//! [`TaskStep::NeedsVerify`] batch of queries, and whoever drives the task
+//! answers them — `SpecPipeline::run` with a direct `retrieve_batch` call
+//! (or a verifier thread in async mode), `serving::ServeEngine` with a
+//! KB call shared across many concurrent requests. Because every retriever
+//! scores a query independently of its batchmates (the bit-identity pinned
+//! by fig6 and tests/sharded_equivalence.rs), the task cannot tell who
+//! answered or what else was coalesced into the call — which is exactly
+//! why cross-request coalescing preserves per-request output equivalence.
+//!
 //! The pipeline talks to the knowledge base only through the batch-first
-//! [`Retriever`] trait: verification calls the required `retrieve_batch`
-//! primitive, the initial prime uses the derived batch-of-one, and cache
-//! lookups rank via `score_docs`. A shard-parallel KB
-//! (`retriever::ShardedRetriever`) therefore drops in with bit-identical
-//! outputs — the equivalence suite runs unchanged against it.
+//! [`Retriever`] trait: verification uses the required `retrieve_batch`
+//! primitive (the prime is a batch of one), and cache lookups rank via
+//! `score_docs`. A shard-parallel KB (`retriever::ShardedRetriever`)
+//! therefore drops in with bit-identical outputs — the equivalence suite
+//! runs unchanged against it.
 
 use crate::cache::LocalCache;
 use crate::datagen::Corpus;
 use crate::lm::{GenState, LanguageModel};
 use crate::metrics::{timed, EventKind, ReqMetrics, Stopwatch};
 use crate::retriever::{Retriever, SpecQuery};
-use crate::spec::os3::{Scheduler, StridePolicy};
+use crate::spec::os3::{Os3Config, Scheduler, StridePolicy};
 use crate::spec::query::QueryBuilder;
 use crate::util::Scored;
 use std::time::Duration;
@@ -55,6 +69,35 @@ impl Default for SpecOptions {
     }
 }
 
+impl SpecOptions {
+    /// Per-request options resolved against the config; `stride` is the
+    /// fixed stride used when `os3` is false. The single constructor
+    /// shared by the eval runner and the serving router, so both serve
+    /// bit-identical requests from the same toggles.
+    pub fn for_method(cfg: &crate::config::Config, prefetch: usize,
+                      os3: bool, async_verify: bool, stride: usize) -> Self {
+        let policy = if os3 {
+            StridePolicy::Os3(Os3Config {
+                window: cfg.spec.os3_window,
+                gamma_max: cfg.spec.gamma_max,
+                max_stride: cfg.spec.max_stride,
+                async_mode: async_verify,
+            })
+        } else {
+            StridePolicy::Fixed(stride)
+        };
+        Self {
+            gen_stride: cfg.spec.gen_stride,
+            stride: policy,
+            prefetch,
+            async_verify,
+            max_new: cfg.spec.max_new_tokens,
+            max_doc_tokens: cfg.spec.max_doc_tokens,
+            cache_cap: crate::cache::DEFAULT_CACHE_CAP,
+        }
+    }
+}
+
 /// One in-flight speculation step awaiting verification.
 struct Pending<S> {
     snapshot: crate::lm::state::Snapshot<S>,
@@ -62,6 +105,354 @@ struct Pending<S> {
     spec_doc: u32,
     /// Measured latency of this speculation step (for OS³'s `a`).
     step_time: Duration,
+}
+
+/// What a [`SpecTask`] needs next, returned by [`SpecTask::advance`].
+#[derive(Debug)]
+pub enum TaskStep {
+    /// The task is blocked on retrieval: answer with
+    /// `kb.retrieve_batch(&queries, k)` (or any bit-identical equivalent —
+    /// e.g. a sub-slice of a larger coalesced call) and hand the per-query
+    /// result rows back via [`SpecTask::provide`].
+    NeedsVerify { queries: Vec<SpecQuery>, k: usize },
+    /// Made progress (one speculation step); call `advance` again.
+    Continue,
+    /// The request is complete; collect with [`SpecTask::into_metrics`].
+    Done,
+}
+
+/// Task lifecycle. `Prime`/`AwaitPrime` cover Alg. 1 line 4 (the initial
+/// cache-priming retrieval, itself expressed as a `NeedsVerify` so a
+/// serving engine can coalesce it); `Running`/`AwaitVerify` alternate for
+/// the speculate→verify rounds; `Finished` is terminal.
+enum Phase {
+    Prime,
+    AwaitPrime,
+    Running,
+    AwaitVerify,
+    Finished,
+}
+
+/// Resumable per-request speculation task (paper Alg. 1 as a state
+/// machine). Drive it with [`advance`](SpecTask::advance) until `Done`,
+/// answering every `NeedsVerify` with [`provide`](SpecTask::provide).
+/// In async-verification mode, call
+/// [`overlap_step`](SpecTask::overlap_step) while the batch is in flight
+/// to take the one extra speculation step that hides verification latency
+/// (Fig 3); the step is optional and never changes the output, only the
+/// schedule.
+pub struct SpecTask<'a, L: LanguageModel> {
+    lm: &'a L,
+    /// Used for cache-lookup scoring only (`score_docs`); verification
+    /// queries are answered by whoever drives the task.
+    kb: &'a dyn Retriever,
+    corpus: &'a Corpus,
+    queries: QueryBuilder<'a>,
+    opts: SpecOptions,
+    question: Vec<u32>,
+    phase: Phase,
+    total: Stopwatch,
+    m: ReqMetrics,
+    cache: LocalCache,
+    scheduler: Scheduler,
+    state: Option<GenState<L::State>>,
+    /// Steps speculated but not yet verified.
+    pending: Vec<Pending<L::State>>,
+    /// The async "extra step" overlapped with an in-flight verification;
+    /// rolls into the next round's pending list when the round verifies.
+    extra: Option<Pending<L::State>>,
+}
+
+/// One speculation step: query → cache lookup → (maybe re-prefill) →
+/// generate `gen_stride` tokens. Free function so callers can borrow
+/// disjoint `SpecTask` fields.
+#[allow(clippy::too_many_arguments)]
+fn spec_step<L: LanguageModel>(
+    lm: &L, kb: &dyn Retriever, corpus: &Corpus, queries: &QueryBuilder,
+    opts: &SpecOptions, state: &mut GenState<L::State>,
+    cache: &mut LocalCache, m: &mut ReqMetrics, req_start: &Stopwatch)
+    -> anyhow::Result<Pending<L::State>> {
+    let step = Stopwatch::start();
+    let snapshot = state.snapshot();
+    // Query construction (dense-encoder work) is "E", not "R": it runs on
+    // the LM side of the system, not in the knowledge base.
+    let query = timed(&mut m.encode, || queries.build(state));
+    let hit = timed(&mut m.cache, || cache.retrieve(&query, kb));
+    // Cache miss (cannot happen after the initial prime, but be safe):
+    // keep the current document.
+    let spec_doc = hit.map(|s| s.id)
+        .or(state.doc_id)
+        .expect("no document available for speculation");
+    timed(&mut m.generate, || -> anyhow::Result<()> {
+        if state.set_doc(lm, spec_doc, &corpus.doc(spec_doc).tokens)? {
+            m.prefills += 1;
+        }
+        state.generate(lm, opts.gen_stride)?;
+        Ok(())
+    })?;
+    m.spec_steps += 1;
+    let step_time = step.elapsed();
+    m.event(EventKind::SpecStep, req_start, step_time);
+    Ok(Pending { snapshot, query, spec_doc, step_time })
+}
+
+impl<'a, L: LanguageModel> SpecTask<'a, L> {
+    pub fn new(lm: &'a L, kb: &'a dyn Retriever, corpus: &'a Corpus,
+               queries: QueryBuilder<'a>, opts: SpecOptions,
+               question: &[u32]) -> Self {
+        let scheduler = Scheduler::new(opts.stride.clone());
+        let cache = LocalCache::new(opts.cache_cap);
+        Self {
+            lm,
+            kb,
+            corpus,
+            queries,
+            opts,
+            question: question.to_vec(),
+            phase: Phase::Prime,
+            total: Stopwatch::start(),
+            m: ReqMetrics::default(),
+            cache,
+            scheduler,
+            state: None,
+            pending: Vec::new(),
+            extra: None,
+        }
+    }
+
+    /// Run until the task finishes (`Done`), needs retrieval results
+    /// (`NeedsVerify`), or has taken one speculation step (`Continue` —
+    /// the single-step granularity is what lets a serving engine
+    /// interleave many tasks fairly). Must not be called while a
+    /// `NeedsVerify` is outstanding.
+    pub fn advance(&mut self) -> anyhow::Result<TaskStep> {
+        match self.phase {
+            Phase::Prime => {
+                // Alg. 1 line 4: the initial retrieval primes the cache
+                // (top-prefetch). Expressed as a NeedsVerify batch of one
+                // so engines can coalesce it with other requests' queries.
+                let queries = &self.queries;
+                let question = &self.question;
+                let q0 = timed(&mut self.m.encode,
+                               || queries.build_from_window(question));
+                self.m.kb_calls += 1;
+                self.m.kb_queries += 1;
+                self.phase = Phase::AwaitPrime;
+                Ok(TaskStep::NeedsVerify {
+                    queries: vec![q0],
+                    k: self.opts.prefetch.max(1),
+                })
+            }
+            Phase::AwaitPrime | Phase::AwaitVerify => anyhow::bail!(
+                "SpecTask::advance while a verification is outstanding"),
+            Phase::Finished => Ok(TaskStep::Done),
+            Phase::Running => {
+                let target = self.scheduler.stride().max(1);
+                let done =
+                    self.state.as_ref().map(|s| s.done).unwrap_or(true);
+                if self.pending.is_empty() && done {
+                    self.finish();
+                    return Ok(TaskStep::Done);
+                }
+                if self.pending.len() < target && !done {
+                    let state = self.state.as_mut()
+                        .expect("generation state exists after prime");
+                    let p = spec_step(self.lm, self.kb, self.corpus,
+                                      &self.queries, &self.opts, state,
+                                      &mut self.cache, &mut self.m,
+                                      &self.total)?;
+                    self.pending.push(p);
+                    return Ok(TaskStep::Continue);
+                }
+                // Batched verification of all pending queries.
+                self.m.strides.push(self.pending.len() as u32);
+                let queries: Vec<SpecQuery> =
+                    self.pending.iter().map(|p| p.query.clone()).collect();
+                self.m.kb_calls += 1;
+                self.m.kb_queries += queries.len() as u32;
+                self.phase = Phase::AwaitVerify;
+                Ok(TaskStep::NeedsVerify {
+                    queries,
+                    k: self.opts.prefetch.max(1),
+                })
+            }
+        }
+    }
+
+    /// In async-verification mode, take the one extra speculation step
+    /// that overlaps the in-flight verification (Fig 3). Call between
+    /// receiving `NeedsVerify` and calling [`provide`](Self::provide);
+    /// a no-op (returns false) in sync mode, during the prime, when the
+    /// request is done, or when the step was already taken this round.
+    pub fn overlap_step(&mut self) -> anyhow::Result<bool> {
+        if !self.opts.async_verify
+            || !matches!(self.phase, Phase::AwaitVerify)
+            || self.extra.is_some()
+        {
+            return Ok(false);
+        }
+        let Some(state) = self.state.as_mut() else { return Ok(false) };
+        if state.done {
+            return Ok(false);
+        }
+        let p = spec_step(self.lm, self.kb, self.corpus, &self.queries,
+                          &self.opts, state, &mut self.cache, &mut self.m,
+                          &self.total)?;
+        self.extra = Some(p);
+        Ok(true)
+    }
+
+    /// Answer the outstanding `NeedsVerify`: `truths[i]` is the top-k for
+    /// `queries[i]`, `kb_time` the latency of the KB call that produced
+    /// them (attributed to this request's R component; a coalesced call's
+    /// latency is shared by every participating request because each one
+    /// really did wait for it).
+    pub fn provide(&mut self, truths: Vec<Vec<Scored>>, kb_time: Duration)
+                   -> anyhow::Result<()> {
+        match self.phase {
+            Phase::Prime | Phase::Running | Phase::Finished => anyhow::bail!(
+                "SpecTask::provide without an outstanding verification"),
+            Phase::AwaitPrime => {
+                anyhow::ensure!(truths.len() == 1,
+                                "prime expects 1 result row, got {}",
+                                truths.len());
+                let top0 = &truths[0];
+                anyhow::ensure!(!top0.is_empty(),
+                                "knowledge base returned nothing");
+                self.m.retrieve += kb_time;
+                self.cache.insert(top0);
+                let doc0 = top0[0].id;
+
+                let prefill_t = Stopwatch::start();
+                let lm = self.lm;
+                let corpus = self.corpus;
+                let question = &self.question;
+                let opts = &self.opts;
+                let state = timed(&mut self.m.generate, || {
+                    GenState::new(lm, Some(doc0), &corpus.doc(doc0).tokens,
+                                  question, opts.max_doc_tokens,
+                                  opts.max_new)
+                })?;
+                self.m.prefills += 1;
+                self.m.event(EventKind::Prefill, &self.total,
+                             prefill_t.elapsed());
+                self.state = Some(state);
+                self.phase = Phase::Running;
+                Ok(())
+            }
+            Phase::AwaitVerify => {
+                anyhow::ensure!(truths.len() == self.pending.len(),
+                                "verification returned {} rows for {} \
+                                 queries",
+                                truths.len(), self.pending.len());
+                self.m.retrieve += kb_time;
+                self.m.event(EventKind::Verify, &self.total, kb_time);
+
+                // Cache update: top-1 or top-k (prefetching) per verified
+                // query.
+                for t in &truths {
+                    self.cache.insert(t);
+                }
+
+                // First mismatch (Alg. 1 line 12).
+                let mismatch = self
+                    .pending
+                    .iter()
+                    .zip(&truths)
+                    .position(|(p, t)| {
+                        t.first().map(|s| s.id) != Some(p.spec_doc)
+                    });
+                let matched = mismatch.unwrap_or(self.pending.len());
+                self.m.spec_correct += matched as u32;
+                let a_mean = self
+                    .pending
+                    .iter()
+                    .map(|p| p.step_time.as_secs_f64())
+                    .sum::<f64>()
+                    / self.pending.len() as f64;
+                self.scheduler.observe(self.pending.len(), matched, a_mean,
+                                       kb_time.as_secs_f64());
+
+                match mismatch {
+                    None => {
+                        // All verified; the async extra step (if any) rolls
+                        // into the next round's pending list.
+                        self.pending.clear();
+                        if let Some(e) = self.extra.take() {
+                            self.pending.push(e);
+                        }
+                    }
+                    Some(i) => {
+                        // Roll back to the mis-speculated step and redo it
+                        // with the ground-truth document (Alg. 1 l. 13-16).
+                        // Tokens from the async extra step (speculated
+                        // after the snapshot) are discarded with the rest.
+                        self.extra = None;
+                        self.m.rollbacks += 1;
+                        let state = self.state.as_mut()
+                            .expect("generation state exists after prime");
+                        self.m.wasted_tokens +=
+                            state.rollback(&self.pending[i].snapshot) as u32;
+                        let truth_doc = truths[i].first()
+                            .expect("verification returned empty top-k");
+                        let correct_t = Stopwatch::start();
+                        let lm = self.lm;
+                        let corpus = self.corpus;
+                        let gen_stride = self.opts.gen_stride;
+                        let mut prefilled = false;
+                        timed(&mut self.m.generate,
+                              || -> anyhow::Result<()> {
+                            if state.set_doc(
+                                lm, truth_doc.id,
+                                &corpus.doc(truth_doc.id).tokens)? {
+                                prefilled = true;
+                            }
+                            state.generate(lm, gen_stride)?;
+                            Ok(())
+                        })?;
+                        if prefilled {
+                            self.m.prefills += 1;
+                        }
+                        self.m.event(EventKind::Correct, &self.total,
+                                     correct_t.elapsed());
+                        self.pending.clear();
+                    }
+                }
+                self.phase = Phase::Running;
+                Ok(())
+            }
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.phase, Phase::Finished)
+    }
+
+    pub fn metrics(&self) -> &ReqMetrics {
+        &self.m
+    }
+
+    /// Mutable access for drivers that attribute wait time themselves
+    /// (`verify_wait` in the async driver, `queue_wait` in the engine).
+    pub fn metrics_mut(&mut self) -> &mut ReqMetrics {
+        &mut self.m
+    }
+
+    /// Final metrics (tokens, latency decomposition). Complete only once
+    /// `advance` has returned `Done`.
+    pub fn into_metrics(self) -> ReqMetrics {
+        self.m
+    }
+
+    fn finish(&mut self) {
+        if let Some(state) = self.state.as_ref() {
+            self.m.tokens_out = state.generated.clone();
+            self.m.decode_tokens =
+                state.generated.len() as u32 + self.m.wasted_tokens;
+        }
+        self.m.total = self.total.elapsed();
+        self.phase = Phase::Finished;
+    }
 }
 
 pub struct SpecPipeline<'a, L: LanguageModel> {
@@ -73,34 +464,18 @@ pub struct SpecPipeline<'a, L: LanguageModel> {
 }
 
 impl<'a, L: LanguageModel> SpecPipeline<'a, L> {
-    /// Serve one request. Returns metrics (which include the tokens).
+    /// Create the resumable task for one request (the engine entry point).
+    pub fn task(&self, question: &[u32]) -> SpecTask<'a, L> {
+        SpecTask::new(self.lm, self.kb, self.corpus, self.queries,
+                      self.opts.clone(), question)
+    }
+
+    /// Serve one request to completion. Returns metrics (which include
+    /// the tokens). Sync mode answers each `NeedsVerify` inline; async
+    /// mode answers on a verifier thread and overlaps one extra
+    /// speculation step with the in-flight batch (Fig 3).
     pub fn run(&self, question: &[u32]) -> anyhow::Result<ReqMetrics> {
-        let total = Stopwatch::start();
-        let mut m = ReqMetrics::default();
-        let mut cache = LocalCache::new(self.opts.cache_cap);
-        let mut scheduler = Scheduler::new(self.opts.stride.clone());
-
-        // Alg. 1 line 4: initial retrieval primes the cache (top-prefetch).
-        let q0 = timed(&mut m.retrieve,
-                       || self.queries.build_from_window(question));
-        let top0 = timed(&mut m.retrieve, || {
-            self.kb.retrieve_topk(&q0, self.opts.prefetch.max(1))
-        });
-        m.kb_calls += 1;
-        m.kb_queries += 1;
-        anyhow::ensure!(!top0.is_empty(), "knowledge base returned nothing");
-        cache.insert(&top0);
-        let doc0 = top0[0].id;
-
-        let prefill_t = Stopwatch::start();
-        let mut state = timed(&mut m.generate, || {
-            GenState::new(self.lm, Some(doc0),
-                          &self.corpus.doc(doc0).tokens, question,
-                          self.opts.max_doc_tokens, self.opts.max_new)
-        })?;
-        m.prefills += 1;
-        m.event(EventKind::Prefill, &total, prefill_t.elapsed());
-
+        let mut task = self.task(question);
         if self.opts.async_verify {
             std::thread::scope(|scope| {
                 let (job_tx, job_rx) =
@@ -117,158 +492,49 @@ impl<'a, L: LanguageModel> SpecPipeline<'a, L> {
                         }
                     }
                 });
-                self.drive(&mut state, &mut cache, &mut scheduler, &mut m,
-                           &total, Some((&job_tx, &res_rx)))
-            })?;
-        } else {
-            self.drive(&mut state, &mut cache, &mut scheduler, &mut m,
-                       &total, None)?;
-        }
-
-        m.tokens_out = state.generated.clone();
-        m.decode_tokens = state.generated.len() as u32 + m.wasted_tokens;
-        m.total = total.elapsed();
-        Ok(m)
-    }
-
-    /// One speculation step: query → cache lookup → (maybe re-prefill) →
-    /// generate `gen_stride` tokens.
-    fn spec_step(&self, state: &mut GenState<L::State>,
-                 cache: &mut LocalCache, m: &mut ReqMetrics,
-                 req_start: &Stopwatch)
-                 -> anyhow::Result<Pending<L::State>> {
-        let step = Stopwatch::start();
-        let snapshot = state.snapshot();
-        let query = timed(&mut m.retrieve, || self.queries.build(state));
-        let hit = timed(&mut m.cache, || cache.retrieve(&query, self.kb));
-        // Cache miss (cannot happen after the initial prime, but be safe):
-        // keep the current document.
-        let spec_doc = hit.map(|s| s.id)
-            .or(state.doc_id)
-            .expect("no document available for speculation");
-        timed(&mut m.generate, || -> anyhow::Result<()> {
-            if state.set_doc(self.lm, spec_doc,
-                             &self.corpus.doc(spec_doc).tokens)? {
-                m.prefills += 1;
-            }
-            state.generate(self.lm, self.opts.gen_stride)?;
-            Ok(())
-        })?;
-        m.spec_steps += 1;
-        let step_time = step.elapsed();
-        m.event(EventKind::SpecStep, req_start, step_time);
-        Ok(Pending { snapshot, query, spec_doc, step_time })
-    }
-
-    /// Main loop, shared by sync and async modes. `verifier` is the async
-    /// channel pair when async verification is enabled.
-    #[allow(clippy::type_complexity)]
-    fn drive(&self, state: &mut GenState<L::State>, cache: &mut LocalCache,
-             scheduler: &mut Scheduler, m: &mut ReqMetrics,
-             req_start: &Stopwatch,
-             verifier: Option<(&std::sync::mpsc::Sender<(Vec<SpecQuery>, usize)>,
-                               &std::sync::mpsc::Receiver<(Vec<Vec<Scored>>, Duration)>)>)
-             -> anyhow::Result<()> {
-        // Steps speculated but not yet verified (carries the async "extra
-        // step" across rounds).
-        let mut pending: Vec<Pending<L::State>> = Vec::new();
-        loop {
-            let target = scheduler.stride().max(1);
-            while pending.len() < target && !state.done {
-                pending.push(self.spec_step(state, cache, m, req_start)?);
-            }
-            if pending.is_empty() {
-                break;
-            }
-            m.strides.push(pending.len() as u32);
-
-            // Batched verification of all pending queries.
-            let queries: Vec<SpecQuery> =
-                pending.iter().map(|p| p.query.clone()).collect();
-            let k = self.opts.prefetch.max(1);
-            m.kb_calls += 1;
-            m.kb_queries += queries.len() as u32;
-            let (truths, b_lat, extra) = match verifier {
-                None => {
-                    let t = Stopwatch::start();
-                    let truths = self.kb.retrieve_batch(&queries, k);
-                    let b = t.elapsed();
-                    m.retrieve += b;
-                    m.event(EventKind::Verify, req_start, b);
-                    (truths, b, None)
-                }
-                Some((tx, rx)) => {
-                    tx.send((queries, k)).expect("verifier thread died");
-                    // Overlap: one extra speculation step while the batch
-                    // retrieval runs on the verifier thread (Fig 3).
-                    let extra = if !state.done {
-                        Some(self.spec_step(state, cache, m, req_start)?)
-                    } else {
-                        None
-                    };
-                    let wait = Stopwatch::start();
-                    let (truths, b) = rx.recv().expect("verifier thread died");
-                    m.verify_wait += wait.elapsed();
-                    m.retrieve += b; // component time (overlapped)
-                    m.event(EventKind::Verify, req_start, b);
-                    (truths, b, extra)
-                }
-            };
-
-            // Cache update: top-1 or top-k (prefetching) per verified query.
-            for t in &truths {
-                cache.insert(t);
-            }
-
-            // First mismatch (Alg. 1 line 12).
-            let mismatch = pending
-                .iter()
-                .zip(&truths)
-                .position(|(p, t)| t.first().map(|s| s.id) != Some(p.spec_doc));
-            let matched = mismatch.unwrap_or(pending.len());
-            m.spec_correct += matched as u32;
-            let a_mean = pending
-                .iter()
-                .map(|p| p.step_time.as_secs_f64())
-                .sum::<f64>()
-                / pending.len() as f64;
-            scheduler.observe(pending.len(), matched, a_mean,
-                              b_lat.as_secs_f64());
-
-            match mismatch {
-                None => {
-                    // All verified; the async extra step (if any) rolls into
-                    // the next round's pending list.
-                    pending.clear();
-                    if let Some(e) = extra {
-                        pending.push(e);
+                loop {
+                    match task.advance()? {
+                        TaskStep::Continue => {}
+                        TaskStep::Done => break,
+                        TaskStep::NeedsVerify { queries, k } => {
+                            // The prime is not a verification round:
+                            // waiting for it never counted into
+                            // verify_wait before the task refactor and
+                            // must not start now.
+                            let priming =
+                                matches!(task.phase, Phase::AwaitPrime);
+                            job_tx.send((queries, k))
+                                .expect("verifier thread died");
+                            // Overlap: one extra speculation step while
+                            // the batch retrieval runs on the verifier
+                            // thread (no-op during the prime / sync mode).
+                            task.overlap_step()?;
+                            let wait = Stopwatch::start();
+                            let (truths, b) = res_rx.recv()
+                                .expect("verifier thread died");
+                            if !priming {
+                                task.metrics_mut().verify_wait +=
+                                    wait.elapsed();
+                            }
+                            task.provide(truths, b)?;
+                        }
                     }
                 }
-                Some(i) => {
-                    // Roll back to the mis-speculated step and redo it with
-                    // the ground-truth document (Alg. 1 lines 13-16).
-                    m.rollbacks += 1;
-                    m.wasted_tokens +=
-                        state.rollback(&pending[i].snapshot) as u32;
-                    let truth_doc = truths[i].first()
-                        .expect("verification returned empty top-k");
-                    let correct_t = Stopwatch::start();
-                    timed(&mut m.generate, || -> anyhow::Result<()> {
-                        if state.set_doc(self.lm, truth_doc.id,
-                                         &self.corpus.doc(truth_doc.id).tokens)? {
-                            m.prefills += 1;
-                        }
-                        state.generate(self.lm, self.opts.gen_stride)?;
-                        Ok(())
-                    })?;
-                    m.event(EventKind::Correct, req_start, correct_t.elapsed());
-                    pending.clear();
+                Ok::<(), anyhow::Error>(())
+            })?;
+        } else {
+            loop {
+                match task.advance()? {
+                    TaskStep::Continue => {}
+                    TaskStep::Done => break,
+                    TaskStep::NeedsVerify { queries, k } => {
+                        let t = Stopwatch::start();
+                        let truths = self.kb.retrieve_batch(&queries, k);
+                        task.provide(truths, t.elapsed())?;
+                    }
                 }
             }
-            if state.done && pending.is_empty() {
-                break;
-            }
         }
-        Ok(())
+        Ok(task.into_metrics())
     }
 }

@@ -17,6 +17,7 @@ pub enum QueryMode {
     Both,
 }
 
+#[derive(Clone, Copy)]
 pub struct QueryBuilder<'a> {
     pub encoder: &'a dyn Encoder,
     pub mode: QueryMode,

@@ -1,0 +1,206 @@
+//! THE serving-layer correctness property (DESIGN.md ADR-003): the
+//! concurrent engine may interleave N requests' speculation steps and
+//! coalesce their verification queries into shared `retrieve_batch`
+//! calls, but every request's token output must stay **bit-identical** to
+//! a sequential `SpecPipeline::run` of that request alone — across mixed
+//! stride policies / prefetch sizes / OS³ / async verification, sharded
+//! and unsharded knowledge bases, and concurrency 1 / 8 / 32.
+//!
+//! Also pins the throughput direction: coalescing must not be a
+//! regression — the `serve` scenario must report more requests/s at
+//! concurrency 8 than at concurrency 1 on the mock LM.
+
+use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+use ralmspec::datagen::{generate_questions, Dataset, HashEncoder};
+use ralmspec::eval::{run_engine_cell, run_qa_cell, serve_throughput,
+                     QaMethod, TestBed};
+use ralmspec::lm::MockLm;
+use ralmspec::serving::EngineOptions;
+
+fn small_config(seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.corpus = CorpusConfig {
+        n_docs: 600,
+        n_topics: 12,
+        doc_len: (24, 80),
+        seed,
+        ..CorpusConfig::default()
+    };
+    cfg.retriever.hnsw_ef_construction = 40;
+    cfg.retriever.hnsw_ef_search = 32;
+    cfg.spec.max_new_tokens = 28;
+    cfg
+}
+
+/// A deliberately heterogeneous request mix: plain spec, prefetching,
+/// OS³, async verification, and a long fixed stride — so one coalesced
+/// flush carries queries from requests with different strides and
+/// different top-k (prefetch) requirements.
+fn mixed_methods(n: usize) -> Vec<QaMethod> {
+    (0..n)
+        .map(|i| match i % 5 {
+            0 => QaMethod::plain_spec(),
+            1 => QaMethod::spec(20, false, false),
+            2 => QaMethod::spec(1, true, false),
+            3 => QaMethod::spec(1, false, true),
+            _ => QaMethod::Spec {
+                prefetch: 1,
+                os3: false,
+                async_verify: false,
+                stride: 8,
+            },
+        })
+        .collect()
+}
+
+fn check_equivalence(seed: u64, kind: RetrieverKind, shards: usize,
+                     concurrency: usize, n: usize) {
+    let mut cfg = small_config(seed);
+    cfg.retriever.shards = shards;
+    let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, seed ^ 0xEC);
+    let bed = TestBed::build(&cfg, &enc);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+    let questions = generate_questions(Dataset::WikiQa, &bed.corpus, n, seed);
+    let methods = mixed_methods(n);
+
+    // Sequential reference: each request alone through SpecPipeline::run
+    // (itself equivalence-pinned against the baseline).
+    let mut expected: Vec<Vec<u32>> = Vec::with_capacity(n);
+    for (q, method) in questions.iter().zip(&methods) {
+        let ms = run_qa_cell(&lm, &enc, &bed, kind,
+                             std::slice::from_ref(q), *method, &cfg)
+            .unwrap();
+        expected.push(ms.into_iter().next().unwrap().tokens_out);
+    }
+
+    let opts = EngineOptions {
+        max_batch: 64,
+        flush_us: 200,
+        max_inflight: concurrency,
+    };
+    let (got, stats) =
+        run_engine_cell(&lm, &enc, &bed, kind, &questions, &methods, &cfg,
+                        opts)
+        .unwrap();
+    assert_eq!(got.len(), n);
+    for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+        assert_eq!(
+            g.tokens_out, *e,
+            "ENGINE OUTPUT DIVERGED: seed={seed} kind={kind:?} \
+             shards={shards} conc={concurrency} req={i} \
+             method={:?}", methods[i]);
+    }
+    if concurrency >= 8 && n >= 8 {
+        assert!(stats.mean_coalesced() > 1.0,
+                "concurrency {concurrency} never coalesced \
+                 (mean batch {:.2})", stats.mean_coalesced());
+    }
+}
+
+#[test]
+fn engine_matches_sequential_edr_conc_1() {
+    check_equivalence(1, RetrieverKind::Edr, 1, 1, 10);
+}
+
+#[test]
+fn engine_matches_sequential_edr_conc_8() {
+    check_equivalence(2, RetrieverKind::Edr, 1, 8, 12);
+}
+
+#[test]
+fn engine_matches_sequential_edr_conc_32() {
+    check_equivalence(3, RetrieverKind::Edr, 1, 32, 32);
+}
+
+#[test]
+fn engine_matches_sequential_sr() {
+    check_equivalence(4, RetrieverKind::Sr, 1, 8, 10);
+}
+
+#[test]
+fn engine_matches_sequential_adr() {
+    check_equivalence(5, RetrieverKind::Adr, 1, 8, 10);
+}
+
+#[test]
+fn engine_matches_sequential_sharded() {
+    // Coalescing composes with the scatter-gather sharded KB: each
+    // coalesced batch fans out over shard views and k-way-merges back,
+    // still bit-identical per request.
+    for kind in [RetrieverKind::Edr, RetrieverKind::Adr, RetrieverKind::Sr] {
+        check_equivalence(6, kind, 2, 8, 8);
+    }
+}
+
+#[test]
+fn engine_smoke_32_concurrent() {
+    // CI throughput smoke: 32 concurrent mock requests through the
+    // scheduler/flush path must all complete (no hang, no starvation).
+    let cfg = small_config(0x5E42);
+    let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, 0x5E42);
+    let bed = TestBed::build(&cfg, &enc);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, 0x5E43);
+    let n = 32;
+    let questions = generate_questions(Dataset::Nq, &bed.corpus, n, 9);
+    let methods = mixed_methods(n);
+    let opts = EngineOptions { max_batch: 64, flush_us: 200,
+                               max_inflight: 32 };
+    let (ms, stats) = run_engine_cell(&lm, &enc, &bed, RetrieverKind::Edr,
+                                      &questions, &methods, &cfg, opts)
+        .unwrap();
+    assert_eq!(ms.len(), n);
+    for (i, m) in ms.iter().enumerate() {
+        assert!(!m.tokens_out.is_empty(),
+                "request {i} produced no tokens");
+        assert!(m.total.as_nanos() > 0);
+    }
+    assert!(stats.kb_calls > 0);
+    assert!(stats.mean_coalesced() > 1.0,
+            "32 concurrent requests should coalesce (mean {:.2})",
+            stats.mean_coalesced());
+}
+
+#[test]
+fn serve_scenario_concurrency_8_beats_1() {
+    // Acceptance: coalescing must not be a throughput regression — the
+    // serve scenario reports more requests/s at concurrency 8 than 1.
+    // Retrieval-heavy setup (EDR flat scan over a larger corpus) so the
+    // coalesced KB calls are what the measurement sees; best-of-3 per
+    // level damps scheduler noise (the structural gap — ~8x fewer KB
+    // calls at concurrency 8 — is far larger than run-to-run jitter).
+    let mut cfg = small_config(0xBEEF);
+    cfg.corpus.n_docs = 4000;
+    cfg.corpus.n_topics = 32;
+    cfg.spec.max_new_tokens = 24;
+    // A roomy coalescing window so the deadline never splits a wave of 8
+    // concurrent strides (the size/drain conditions do the flushing).
+    cfg.engine.flush_us = 5_000;
+    let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, 0xBEEF);
+    let bed = TestBed::build(&cfg, &enc);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, 0xBEF0);
+    let questions = generate_questions(Dataset::WikiQa, &bed.corpus, 16, 3);
+    let method = QaMethod::plain_spec();
+    let best = |concurrency: usize| {
+        let mut best_rps = 0.0f64;
+        let mut coalesced = 0.0f64;
+        for _ in 0..3 {
+            let s = serve_throughput(&lm, &enc, &bed, RetrieverKind::Edr,
+                                     &questions, method, &cfg, concurrency)
+                .unwrap();
+            assert_eq!(s.requests, questions.len());
+            if s.rps > best_rps {
+                best_rps = s.rps;
+                coalesced = s.mean_coalesced;
+            }
+        }
+        (best_rps, coalesced)
+    };
+    let (rps_1, _) = best(1);
+    let (rps_8, coalesced_8) = best(8);
+    assert!(coalesced_8 > 1.5,
+            "concurrency 8 should coalesce verification batches \
+             (mean {coalesced_8:.2})");
+    assert!(rps_8 > rps_1,
+            "coalescing must not be a throughput regression: \
+             conc8={rps_8:.2} req/s vs conc1={rps_1:.2} req/s");
+}

@@ -7,7 +7,8 @@ use ralmspec::datagen::{generate_questions, Dataset, HashEncoder};
 use ralmspec::eval::{run_qa_cell, QaMethod, TestBed};
 use ralmspec::lm::MockLm;
 use ralmspec::metrics::ReqMetrics;
-use ralmspec::serving::{Request, Response, Router, ServeBackend};
+use ralmspec::serving::{EngineBackend, EngineOptions, Method, Request,
+                        Response, Router, ServeBackend};
 use std::sync::Arc;
 
 /// A QA backend over shared (Sync) fixtures; each worker builds its own
@@ -130,6 +131,74 @@ fn router_serves_qa_requests_end_to_end() {
         .unwrap();
     assert_eq!(again.tokens, responses[0].tokens,
                "same request must be deterministic");
+    router.shutdown();
+}
+
+#[test]
+fn engine_backend_serves_spec_requests_through_router() {
+    // Method::Spec requests flow through the coalescing ServeEngine inside
+    // a router worker (EngineBackend); Method::Baseline runs inline. Both
+    // must produce the same tokens for the same question, and a pipelined
+    // burst must come back complete (the worker drains it as one batch).
+    let cfg = test_cfg();
+    let bed = TestBed::build(&cfg, &HashEncoder::new(
+        ralmspec::runtime::RETRIEVAL_DIM, 404 ^ 0xEC));
+    let kb = bed.retriever(RetrieverKind::Edr);
+    let corpus = bed.corpus.clone();
+    let cfg2 = cfg.clone();
+    let router = Router::spawn(64, 1, move || {
+        Ok(EngineBackend {
+            lm: MockLm::new(cfg2.corpus.vocab, 320, 1),
+            kb: kb.clone(),
+            corpus: corpus.clone(),
+            encoder: Box::new(HashEncoder::new(
+                ralmspec::runtime::RETRIEVAL_DIM, 404 ^ 0xEC)),
+            mode: ralmspec::spec::QueryMode::Dense,
+            cfg: cfg2.clone(),
+            engine_opts: EngineOptions {
+                max_batch: 16,
+                flush_us: 500,
+                max_inflight: 0,
+            },
+        })
+    });
+    let questions = generate_questions(Dataset::WikiQa, &bed.corpus, 4, 9);
+    for (i, q) in questions.iter().enumerate() {
+        let base = router.submit_blocking(Request {
+            id: i as u64 * 2,
+            question: q.tokens.clone(),
+            method: Method::Baseline,
+        }).unwrap();
+        let spec = router.submit_blocking(Request {
+            id: i as u64 * 2 + 1,
+            question: q.tokens.clone(),
+            method: Method::Spec {
+                prefetch: true, os3: false, async_verify: false,
+            },
+        }).unwrap();
+        assert_eq!(base.tokens, spec.tokens,
+                   "engine-served spec diverged on question {i}");
+    }
+    // Pipelined burst: all submitted before any response is collected, so
+    // the single worker drains them into one engine batch.
+    let pending: Vec<_> = questions
+        .iter()
+        .enumerate()
+        .map(|(i, q)| {
+            router.submit(Request {
+                id: 100 + i as u64,
+                question: q.tokens.clone(),
+                method: Method::Spec {
+                    prefetch: false, os3: true, async_verify: true,
+                },
+            }).unwrap()
+        })
+        .collect();
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 100 + i as u64);
+        assert!(!resp.tokens.is_empty(), "burst request {i} returned empty");
+    }
     router.shutdown();
 }
 
