@@ -85,6 +85,14 @@ COMMANDS:
                              sweeping concurrency 1/8/32 (--throughput)
                              or one level (--concurrency N); reports
                              requests/s and p50/p99 latency
+          --model knnlm      serve the KNN-LM workload (one retrieval per
+                             token) through the coalescing engine;
+                             --retriever edr|adr picks the datastore index
+    bench-gate [--mock] [--out BENCH_PR3.json]
+                             CI perf-regression gate: quick fig4+fig5
+                             speed-up ratios per retriever class, written
+                             as JSON; exits non-zero if any ratio < 1.0
+                             (scale via RALMSPEC_BENCH_{DOCS,DS,...})
     trace [--retriever edr] [--mock]
                              emit a Fig-1(c)-style per-request timeline
     help                     this text
@@ -101,6 +109,7 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         "bench" => crate::eval::drivers::run_bench(&cfg, &flags),
+        "bench-gate" => crate::eval::gate::run_gate(&cfg, &flags),
         "serve" => crate::eval::drivers::run_serve(&cfg, &flags),
         "trace" => crate::eval::drivers::run_trace(&cfg, &flags),
         "help" | "--help" | "-h" => {

@@ -346,6 +346,10 @@ pub struct KnnLmConfig {
     pub tau: f64,
     pub next_n: usize,
     pub cache_cap: usize,
+    /// Fixed speculation stride used when serving KNN-LM requests
+    /// (`serve --model knnlm`); the fig5 driver sweeps strides and OS³
+    /// explicitly.
+    pub stride: usize,
     pub seed: u64,
 }
 
@@ -358,6 +362,7 @@ impl Default for KnnLmConfig {
             tau: 0.1,
             next_n: 10,
             cache_cap: 4096,
+            stride: DEFAULT_STRIDE,
             seed: 0xDA7A,
         }
     }
@@ -372,6 +377,7 @@ impl KnnLmConfig {
             "tau" => self.tau => f64,
             "next_n" => self.next_n => usize,
             "cache_cap" => self.cache_cap => usize,
+            "stride" => self.stride => usize,
             "seed" => self.seed => u64,
         });
     }
@@ -384,6 +390,7 @@ impl KnnLmConfig {
             ("tau", Value::num(self.tau)),
             ("next_n", Value::num(self.next_n as f64)),
             ("cache_cap", Value::num(self.cache_cap as f64)),
+            ("stride", Value::num(self.stride as f64)),
             ("seed", Value::num(self.seed as f64)),
         ])
     }
@@ -530,6 +537,16 @@ mod tests {
         assert!((c.spec.gamma_max - 0.6).abs() < 1e-12);
         assert_eq!(c.spec.prefetch, 20);
         assert_eq!(c.knnlm.next_n, 10);
+        assert_eq!(c.knnlm.stride, DEFAULT_STRIDE);
+    }
+
+    #[test]
+    fn knnlm_stride_merges() {
+        let v = json::parse(r#"{"knnlm": {"stride": 6}}"#).unwrap();
+        let mut c = Config::default();
+        c.merge(&v);
+        assert_eq!(c.knnlm.stride, 6);
+        assert_eq!(c.knnlm.k, 16); // untouched default
     }
 
     #[test]

@@ -109,6 +109,15 @@ pub trait ErasedLm {
                         method: QaMethod, cfg: &Config, concurrency: usize)
                         -> anyhow::Result<ServeSummary>;
 
+    /// The `serve --model knnlm` throughput scenario (KNN-LM tasks
+    /// engine-coalesced at a fixed concurrency) — see
+    /// `eval::runner::serve_knn_throughput`.
+    #[allow(clippy::too_many_arguments)]
+    fn serve_knn_throughput(&self, kb: &dyn Retriever, ds: &Datastore,
+                            opts: &KnnServeOptions, prompts: &[Vec<u32>],
+                            cfg: &Config, concurrency: usize)
+                            -> anyhow::Result<ServeSummary>;
+
     fn qproj_of_prompt(&self, prompt: &[u32]) -> anyhow::Result<Vec<f32>>;
 }
 
@@ -160,6 +169,17 @@ macro_rules! impl_holder {
                 crate::eval::runner::serve_throughput(
                     &self.0, encoder, bed, kind, questions, method, cfg,
                     concurrency)
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            fn serve_knn_throughput(&self, kb: &dyn Retriever,
+                                    ds: &Datastore,
+                                    opts: &KnnServeOptions,
+                                    prompts: &[Vec<u32>], cfg: &Config,
+                                    concurrency: usize)
+                                    -> anyhow::Result<ServeSummary> {
+                crate::eval::runner::serve_knn_throughput(
+                    &self.0, kb, ds, opts, prompts, cfg, concurrency)
             }
 
             fn qproj_of_prompt(&self, prompt: &[u32])
@@ -437,8 +457,9 @@ fn table2(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
 // Fig 5: KNN-LM speedups vs k
 // ---------------------------------------------------------------------------
 
-fn knn_fixture(cfg: &Config, provider: &Provider, lm: &dyn ErasedLm)
-               -> anyhow::Result<(Datastore, Vec<Vec<u32>>)> {
+pub(crate) fn knn_fixture(cfg: &Config, provider: &Provider,
+                          lm: &dyn ErasedLm)
+                          -> anyhow::Result<(Datastore, Vec<Vec<u32>>)> {
     let stream = crate::datagen::generate_stream(
         &cfg.corpus, cfg.knnlm.n_entries + 600, cfg.knnlm.seed);
     let ds = match provider {
@@ -470,13 +491,13 @@ fn fig5(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
         "fig5", "KNN-LM speed-up vs k (EDR + ADR) — Fig 5");
     provider.with_lm(cfg, KNN_MODEL, &mut |lm| {
         let (ds, prompts) = knn_fixture(cfg, provider, lm)?;
-        let edr = DenseExact::new(ds.keys.clone());
-        let adr = Hnsw::build(ds.keys.clone(), cfg.retriever.hnsw_m,
-                              cfg.retriever.hnsw_ef_construction,
-                              cfg.retriever.hnsw_ef_search,
-                              cfg.knnlm.seed ^ 0x42);
+        // Shared constructor with `serve --model knnlm` and the bench
+        // gate — one place to keep index parameters in sync, and
+        // `--shards N` wraps the datastore index here too.
+        let edr = knn_retriever(cfg, &ds, RetrieverKind::Edr);
+        let adr = knn_retriever(cfg, &ds, RetrieverKind::Adr);
         let retrievers: [(&str, &dyn Retriever); 2] =
-            [("EDR", &edr), ("ADR", &adr)];
+            [("EDR", edr.as_ref()), ("ADR", adr.as_ref())];
         let ks = [1usize, 16, 256, 1024];
         for (rname, kb) in retrievers {
             report.line(&format!("## retriever {rname}"));
@@ -520,8 +541,42 @@ fn fig5(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
                         ("spec_s", Value::num(c.mean_s)),
                         ("speedup", Value::num(sp)),
                         ("accuracy", Value::num(c.spec_accuracy)),
+                        ("cache_hit_rate",
+                         Value::num(c.cache_hit_rate())),
                     ]));
                 }
+            }
+        }
+        // Engine-served concurrency sweep: the serving-scale view of the
+        // same workload — concurrent KNN-LM requests coalescing their
+        // per-token verification through the ServeEngine (EDR, config k).
+        if !prompts.is_empty() {
+            report.line("## engine serving sweep (EDR, config k)");
+            let opts = KnnServeOptions::from_config(cfg);
+            let n = cfg.eval.requests.max(16);
+            let eng_prompts: Vec<Vec<u32>> = (0..n)
+                .map(|i| prompts[i % prompts.len()].clone())
+                .collect();
+            for &conc in &[1usize, 8, 32] {
+                let s = lm.serve_knn_throughput(edr.as_ref(), &ds, &opts,
+                                                &eng_prompts, cfg, conc)?;
+                report.line(&format!(
+                    "conc={:<3} {:>7.2} req/s  p50={:.3}s p99={:.3}s \
+                     coalesce mean={:.1} max={}",
+                    s.concurrency, s.rps, s.p50_s, s.p99_s,
+                    s.mean_coalesced, s.max_coalesced));
+                report.row(Value::obj(vec![
+                    ("retriever", Value::str("EDR")),
+                    ("engine_concurrency",
+                     Value::num(s.concurrency as f64)),
+                    ("requests", Value::num(s.requests as f64)),
+                    ("rps", Value::num(s.rps)),
+                    ("p50_s", Value::num(s.p50_s)),
+                    ("p99_s", Value::num(s.p99_s)),
+                    ("mean_coalesced", Value::num(s.mean_coalesced)),
+                    ("max_coalesced",
+                     Value::num(s.max_coalesced as f64)),
+                ]));
             }
         }
         Ok(())
@@ -785,6 +840,11 @@ pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         cfg.engine.flush_us = n as u64;
     }
     let model = flags.get("model").unwrap_or("gpt2m").to_string();
+    if model == KNN_MODEL {
+        // KNN-LM serving has its own fixture (datastore, not the QA
+        // corpus) and always goes through the coalescing engine.
+        return serve_knn_scenario(&cfg, flags);
+    }
     let dataset: Dataset = flags.get("dataset").unwrap_or("wikiqa").parse()?;
     let kind: RetrieverKind = flags.get("retriever").unwrap_or("edr").parse()?;
     let method = match flags.get("method").unwrap_or("psa") {
@@ -890,6 +950,132 @@ fn serve_engine_scenario(cfg: &Config, provider: &Provider, model: &str,
         Ok(())
     })?;
     report.write(&cfg.paths.reports)
+}
+
+/// `serve --model knnlm`: the retrieval-per-token workload through the
+/// coalescing engine (paper §5.3 — its largest claimed speed-up). Sweeps
+/// concurrency 1/8/32 (`--throughput`) or one level (`--concurrency N`);
+/// without either flag serves the requests sequentially for reference.
+/// `--retriever edr|adr` picks the datastore index; `--shards N` wraps it
+/// in the scatter-gather `ShardedRetriever` (bit-identical results).
+fn serve_knn_scenario(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
+    let kind: RetrieverKind =
+        flags.get("retriever").unwrap_or("edr").parse()?;
+    anyhow::ensure!(
+        !matches!(kind, RetrieverKind::Sr),
+        "KNN-LM retrieves over dense datastore keys; use --retriever \
+         edr|adr");
+    let provider = Provider::from_flags(cfg, flags)?;
+    anyhow::ensure!(provider.has_model(KNN_MODEL),
+                    "model {KNN_MODEL} not built");
+    let engine_scenario =
+        flags.has("throughput") || flags.get("concurrency").is_some();
+    let concurrencies: Vec<usize> = match flags.get_usize("concurrency")? {
+        Some(c) => vec![c.max(1)],
+        None => vec![1, 8, 32],
+    };
+    let opts = crate::knnlm::KnnServeOptions::from_config(cfg);
+    let mut report = Report::new(
+        "serve_knnlm",
+        "Engine-served KNN-LM: requests/s + latency percentiles vs \
+         concurrency (coalesced per-token verification)");
+    provider.with_lm(cfg, KNN_MODEL, &mut |lm| {
+        let (ds, base_prompts) = knn_fixture(cfg, &provider, lm)?;
+        anyhow::ensure!(!base_prompts.is_empty(),
+                        "no prompts (eval.requests = 0)");
+        let kb = knn_retriever(cfg, &ds, kind);
+        // Engine runs keep the largest concurrency level busy long
+        // enough to coalesce; the sequential reference (and an explicit
+        // --requests) use the configured count as-is.
+        let n_requests = if engine_scenario && flags.get("requests").is_none()
+        {
+            cfg.eval.requests
+                .max(2 * concurrencies.iter().copied().max().unwrap_or(1))
+        } else {
+            cfg.eval.requests
+        };
+        let prompts: Vec<Vec<u32>> = (0..n_requests)
+            .map(|i| base_prompts[i % base_prompts.len()].clone())
+            .collect();
+        eprintln!("[serve] knnlm: {} requests on {} (k={} stride={:?}), \
+                   max_batch={} flush_us={}",
+                  prompts.len(), kb.name(), opts.k, opts.stride,
+                  cfg.engine.max_batch, cfg.engine.flush_us);
+        if !engine_scenario {
+            // Sequential reference (one request at a time, no engine).
+            let sw = crate::metrics::Stopwatch::start();
+            let ms = lm.run_knn(kb.as_ref(), &ds, &opts, &prompts, false)?;
+            let wall = sw.elapsed().as_secs_f64().max(1e-9);
+            let agg = cell_stats("knnlm-seq", &[ms]);
+            println!("requests={} wall={:.2}s throughput={:.2} req/s \
+                      mean={:.3}s acc={:.2} cache_hit_rate={:.2}",
+                     prompts.len(), wall, prompts.len() as f64 / wall,
+                     agg.mean_s, agg.spec_accuracy, agg.cache_hit_rate());
+            return Ok(());
+        }
+        for &c in &concurrencies {
+            let s = lm.serve_knn_throughput(kb.as_ref(), &ds, &opts,
+                                            &prompts, cfg, c)?;
+            report.line(&format!(
+                "conc={:<3} {:>7.2} req/s  p50={:.3}s p99={:.3}s \
+                 wall={:.2}s  coalesce mean={:.1} max={} \
+                 queue_wait={:.4}s",
+                s.concurrency, s.rps, s.p50_s, s.p99_s, s.wall_s,
+                s.mean_coalesced, s.max_coalesced, s.mean_queue_wait_s));
+            report.row(Value::obj(vec![
+                ("model", Value::str(KNN_MODEL)),
+                ("retriever", Value::str(kind.label())),
+                ("k", Value::num(opts.k as f64)),
+                ("concurrency", Value::num(s.concurrency as f64)),
+                ("requests", Value::num(s.requests as f64)),
+                ("rps", Value::num(s.rps)),
+                ("p50_s", Value::num(s.p50_s)),
+                ("p99_s", Value::num(s.p99_s)),
+                ("wall_s", Value::num(s.wall_s)),
+                ("mean_coalesced", Value::num(s.mean_coalesced)),
+                ("max_coalesced", Value::num(s.max_coalesced as f64)),
+                ("queue_wait_s", Value::num(s.mean_queue_wait_s)),
+            ]));
+        }
+        Ok(())
+    })?;
+    if engine_scenario {
+        report.write(&cfg.paths.reports)?;
+    }
+    Ok(())
+}
+
+/// Datastore-key retriever for KNN-LM serving: EDR (flat) or ADR (HNSW),
+/// optionally wrapped in the scatter-gather `ShardedRetriever`
+/// (`cfg.retriever.shards > 1`) — results stay bit-identical either way.
+pub(crate) fn knn_retriever(cfg: &Config, ds: &Datastore,
+                            kind: RetrieverKind)
+                            -> std::sync::Arc<dyn Retriever> {
+    use crate::retriever::ShardedRetriever;
+    use std::sync::Arc;
+    let shards = cfg.retriever.shards.max(1);
+    match kind {
+        RetrieverKind::Adr => {
+            let h = Arc::new(Hnsw::build(ds.keys.clone(),
+                                         cfg.retriever.hnsw_m,
+                                         cfg.retriever.hnsw_ef_construction,
+                                         cfg.retriever.hnsw_ef_search,
+                                         cfg.knnlm.seed ^ 0x42));
+            if shards > 1 {
+                Arc::new(ShardedRetriever::new(h, shards))
+            } else {
+                h
+            }
+        }
+        _ => {
+            let e = Arc::new(DenseExact::new(ds.keys.clone()));
+            if shards > 1 {
+                Arc::new(ShardedRetriever::new(e, shards))
+            } else {
+                e
+            }
+        }
+    }
 }
 
 pub fn run_trace(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {

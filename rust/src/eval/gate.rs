@@ -1,0 +1,221 @@
+//! `bench-gate`: the CI perf-regression gate (the `bench-regression`
+//! workflow job). Runs the fig4 and fig5 benchmark trajectories in quick
+//! mode — RaLMSpec vs RaLMSeq per QA retriever class, speculative KNN-LM
+//! vs the per-token baseline per datastore index — and writes the
+//! speed-up ratios to a machine-readable JSON (`BENCH_PR<N>.json`,
+//! uploaded as a CI artifact). The command **exits non-zero if any
+//! spec/baseline ratio falls below 1.0**: speculation must never be a
+//! regression, on any retriever class, on any PR.
+//!
+//! Scale knobs are the same env vars the `cargo bench` entries honour
+//! (`RALMSPEC_BENCH_{DOCS,REQUESTS,RUNS,MAXNEW,DS}`), so CI pins one set
+//! of knobs for both. Stability choices, deliberate:
+//! * each cell is measured as the **min** mean-latency over `runs`
+//!   repetitions (min is far less noise-sensitive than mean-of-means on
+//!   shared CI runners);
+//! * the ADR gate raises `hnsw_ef_search` so approximate retrieval costs
+//!   what it does at paper scale — at toy scale an HNSW probe is so cheap
+//!   that the G/R balance (and thus the ratio) would measure the mock LM,
+//!   not the retriever class.
+
+use crate::cli::Flags;
+use crate::config::{Config, RetrieverKind};
+use crate::datagen::Dataset;
+use crate::eval::drivers::{knn_fixture, knn_retriever, ErasedLm, Provider,
+                           KNN_MODEL};
+use crate::eval::runner::{questions_for, QaMethod};
+use crate::eval::workload::TestBed;
+use crate::knnlm::KnnServeOptions;
+use crate::spec::StridePolicy;
+use crate::util::json::Value;
+
+/// Minimum acceptable spec/baseline speed-up ratio.
+const MIN_RATIO: f64 = 1.0;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+/// Quick-mode scale shared with `bench_entry`, sized so retrieval (the
+/// thing speculation amortizes) is the dominant cost in every cell.
+fn gate_config(cfg: &Config) -> Config {
+    let mut cfg = cfg.clone();
+    cfg.corpus.n_docs = env_usize("RALMSPEC_BENCH_DOCS", 10_000);
+    cfg.corpus.n_topics = cfg.corpus.n_topics.min(64);
+    cfg.eval.requests = env_usize("RALMSPEC_BENCH_REQUESTS", 3);
+    cfg.eval.runs = env_usize("RALMSPEC_BENCH_RUNS", 3);
+    cfg.spec.max_new_tokens = env_usize("RALMSPEC_BENCH_MAXNEW", 24);
+    cfg.knnlm.n_entries = env_usize("RALMSPEC_BENCH_DS", 20_000);
+    cfg.retriever.hnsw_ef_search = cfg.retriever.hnsw_ef_search.max(96);
+    cfg
+}
+
+/// One gated measurement: `speedup = baseline_s / spec_s`.
+struct Ratio {
+    bench: &'static str,
+    retriever: &'static str,
+    method: String,
+    baseline_s: f64,
+    spec_s: f64,
+}
+
+impl Ratio {
+    fn speedup(&self) -> f64 {
+        if self.spec_s <= 0.0 {
+            return 0.0;
+        }
+        self.baseline_s / self.spec_s
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("bench", Value::str(self.bench)),
+            ("retriever", Value::str(self.retriever)),
+            ("method", Value::str(self.method.clone())),
+            ("baseline_s", Value::num(self.baseline_s)),
+            ("spec_s", Value::num(self.spec_s)),
+            ("speedup", Value::num(self.speedup())),
+        ])
+    }
+}
+
+/// Min mean-request-latency over `runs` repetitions of one QA cell.
+fn qa_best(lm: &dyn ErasedLm, enc: &dyn crate::datagen::Encoder,
+           bed: &TestBed, kind: RetrieverKind, method: QaMethod,
+           cfg: &Config) -> anyhow::Result<f64> {
+    let mut best = f64::INFINITY;
+    for r in 0..cfg.eval.runs.max(1) {
+        let qs = questions_for(bed, Dataset::WikiQa, cfg.eval.requests, r,
+                               cfg.eval.seed);
+        let ms = lm.run_qa(enc, bed, kind, &qs, method, cfg)?;
+        let mean = ms.iter().map(|m| m.total.as_secs_f64()).sum::<f64>()
+            / ms.len().max(1) as f64;
+        best = best.min(mean);
+    }
+    Ok(best)
+}
+
+/// Min mean-request-latency over `runs` repetitions of one KNN-LM cell.
+fn knn_best(lm: &dyn ErasedLm, kb: &dyn crate::retriever::Retriever,
+            ds: &crate::knnlm::Datastore, opts: &KnnServeOptions,
+            prompts: &[Vec<u32>], runs: usize, baseline: bool)
+            -> anyhow::Result<f64> {
+    let mut best = f64::INFINITY;
+    for _ in 0..runs.max(1) {
+        let ms = lm.run_knn(kb, ds, opts, prompts, baseline)?;
+        let mean = ms.iter().map(|m| m.total.as_secs_f64()).sum::<f64>()
+            / ms.len().max(1) as f64;
+        best = best.min(mean);
+    }
+    Ok(best)
+}
+
+pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
+    let cfg = gate_config(cfg);
+    let out = flags.get("out").unwrap_or("BENCH_PR3.json").to_string();
+    let provider = Provider::from_flags(&cfg, flags)?;
+    let mut ratios: Vec<Ratio> = Vec::new();
+
+    // --- fig4 trajectory: RaLMSpec+P vs RaLMSeq per QA retriever class.
+    // +P (sync, fixed stride) is the most schedule-deterministic variant,
+    // which is what a hard gate wants; fig4 proper still sweeps the rest.
+    let qa_model = "gpt2m";
+    if provider.has_model(qa_model) {
+        let enc = provider.encoder()?;
+        eprintln!("[gate] building QA bed ({} docs)...", cfg.corpus.n_docs);
+        let bed = TestBed::build(&cfg, enc.as_ref());
+        let method = QaMethod::spec(crate::config::PREFETCH, false, false);
+        provider.with_lm(&cfg, qa_model, &mut |lm| {
+            for kind in RetrieverKind::all() {
+                let base = qa_best(lm, enc.as_ref(), &bed, kind,
+                                   QaMethod::Baseline, &cfg)?;
+                let spec = qa_best(lm, enc.as_ref(), &bed, kind, method,
+                                   &cfg)?;
+                ratios.push(Ratio {
+                    bench: "fig4",
+                    retriever: kind.label(),
+                    method: method.label(),
+                    baseline_s: base,
+                    spec_s: spec,
+                });
+            }
+            Ok(())
+        })?;
+    } else {
+        eprintln!("[gate] {qa_model} artifacts missing, fig4 cells skipped");
+    }
+
+    // --- fig5 trajectory: speculative KNN-LM (s=4) vs the per-token
+    // baseline, EDR and ADR over the datastore keys.
+    if provider.has_model(KNN_MODEL) {
+        provider.with_lm(&cfg, KNN_MODEL, &mut |lm| {
+            eprintln!("[gate] building KNN datastore ({} entries)...",
+                      cfg.knnlm.n_entries);
+            let (ds, prompts) = knn_fixture(&cfg, &provider, lm)?;
+            for kind in [RetrieverKind::Edr, RetrieverKind::Adr] {
+                let kb = knn_retriever(&cfg, &ds, kind);
+                let mk = |stride: StridePolicy| KnnServeOptions {
+                    stride,
+                    max_new: cfg.spec.max_new_tokens,
+                    ..KnnServeOptions::from_config(&cfg)
+                };
+                let base = knn_best(lm, kb.as_ref(), &ds,
+                                    &mk(StridePolicy::Fixed(1)), &prompts,
+                                    cfg.eval.runs, true)?;
+                let spec = knn_best(lm, kb.as_ref(), &ds,
+                                    &mk(StridePolicy::Fixed(4)), &prompts,
+                                    cfg.eval.runs, false)?;
+                ratios.push(Ratio {
+                    bench: "fig5",
+                    retriever: kind.label(),
+                    method: "knnlm s=4".to_string(),
+                    baseline_s: base,
+                    spec_s: spec,
+                });
+            }
+            Ok(())
+        })?;
+    } else {
+        eprintln!("[gate] {KNN_MODEL} artifacts missing, fig5 cells skipped");
+    }
+
+    anyhow::ensure!(!ratios.is_empty(),
+                    "bench-gate measured nothing (no models available)");
+
+    // --- Report + artifact + verdict.
+    let mut failures = Vec::new();
+    for r in &ratios {
+        let verdict = if r.speedup() >= MIN_RATIO { "ok" } else { "FAIL" };
+        println!("[gate] {:<5} {:<4} {:<22} base={:.4}s spec={:.4}s \
+                  speedup={:.2}x  {}",
+                 r.bench, r.retriever, r.method, r.baseline_s, r.spec_s,
+                 r.speedup(), verdict);
+        if r.speedup() < MIN_RATIO {
+            failures.push(format!("{}/{} {:.2}x", r.bench, r.retriever,
+                                  r.speedup()));
+        }
+    }
+    let doc = Value::obj(vec![
+        ("gate", Value::str("bench-regression")),
+        ("min_required", Value::num(MIN_RATIO)),
+        ("docs", Value::num(cfg.corpus.n_docs as f64)),
+        ("knn_entries", Value::num(cfg.knnlm.n_entries as f64)),
+        ("requests", Value::num(cfg.eval.requests as f64)),
+        ("runs", Value::num(cfg.eval.runs as f64)),
+        ("pass", Value::Bool(failures.is_empty())),
+        ("ratios",
+         Value::Arr(ratios.iter().map(|r| r.to_json()).collect())),
+    ]);
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, doc.pretty())?;
+    println!("[gate] wrote {out}");
+    anyhow::ensure!(
+        failures.is_empty(),
+        "speculation regressed below {MIN_RATIO:.1}x on: {}",
+        failures.join(", "));
+    Ok(())
+}

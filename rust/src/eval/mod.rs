@@ -2,12 +2,14 @@
 //! evaluation section (DESIGN.md §5 maps each to its driver).
 
 pub mod drivers;
+pub mod gate;
 pub mod report;
 pub mod runner;
 pub mod workload;
 
 pub use report::{cell_stats, speedup, CellStats, Report};
 pub use runner::{build_spec_options, query_mode, questions_for,
-                 run_engine_cell, run_qa_cell, serve_throughput, QaMethod,
+                 run_engine_cell, run_knn_engine_cell, run_qa_cell,
+                 serve_knn_throughput, serve_throughput, QaMethod,
                  ServeSummary};
 pub use workload::TestBed;

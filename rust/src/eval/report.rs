@@ -26,6 +26,10 @@ pub struct CellStats {
     pub spec_accuracy: f64,
     pub kb_calls: u64,
     pub kb_queries: u64,
+    /// Speculation-cache lookups / true-top-1 hits (KNN-LM serving; zero
+    /// for workloads that don't count them).
+    pub cache_lookups: u64,
+    pub cache_hits: u64,
     pub tokens: u64,
 }
 
@@ -44,8 +48,20 @@ impl CellStats {
             ("spec_accuracy", Value::num(self.spec_accuracy)),
             ("kb_calls", Value::num(self.kb_calls as f64)),
             ("kb_queries", Value::num(self.kb_queries as f64)),
+            ("cache_lookups", Value::num(self.cache_lookups as f64)),
+            ("cache_hits", Value::num(self.cache_hits as f64)),
+            ("cache_hit_rate", Value::num(self.cache_hit_rate())),
             ("tokens", Value::num(self.tokens as f64)),
         ])
+    }
+
+    /// Aggregate cache hit rate over all merged requests (see
+    /// `ReqMetrics::cache_hit_rate`).
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.cache_lookups == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / self.cache_lookups as f64
     }
 }
 
@@ -84,6 +100,8 @@ pub fn cell_stats(label: &str, runs: &[Vec<ReqMetrics>]) -> CellStats {
         },
         kb_calls: all.iter().map(|m| m.kb_calls as u64).sum(),
         kb_queries: all.iter().map(|m| m.kb_queries as u64).sum(),
+        cache_lookups: all.iter().map(|m| m.cache_lookups as u64).sum(),
+        cache_hits: all.iter().map(|m| m.cache_hits as u64).sum(),
         tokens: all.iter().map(|m| m.tokens_out.len() as u64).sum(),
     }
 }

@@ -7,8 +7,11 @@ use crate::datagen::{Dataset, Encoder, Question};
 use crate::eval::workload::TestBed;
 use crate::lm::LanguageModel;
 use crate::metrics::{ReqMetrics, Stopwatch};
+use crate::knnlm::{Datastore, KnnServeOptions, KnnTask};
+use crate::retriever::Retriever;
 use crate::serving::{EngineOptions, EngineStats, ServeEngine};
-use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecPipeline};
+use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecPipeline,
+                  SpecTask};
 
 /// One serving method of the paper's evaluation grid.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -154,16 +157,19 @@ pub fn run_engine_cell<L: LanguageModel>(
         dense_len: cfg.retriever.dense_query_len,
         sparse_len: cfg.retriever.sparse_query_len,
     };
-    let mut engine = ServeEngine::new(lm, kb.as_ref(), &bed.corpus, queries,
-                                      engine_opts);
+    let mut engine: ServeEngine<SpecTask<L>> =
+        ServeEngine::new(kb.as_ref(), engine_opts);
     for (i, (q, method)) in questions.iter().zip(methods).enumerate() {
         let QaMethod::Spec { prefetch, os3, async_verify, stride } = *method
         else {
             anyhow::bail!("engine serving requires speculative methods");
         };
-        engine.submit(i as u64, &q.tokens,
-                      build_spec_options(cfg, prefetch, os3, async_verify,
-                                         stride));
+        engine.submit(
+            i as u64,
+            SpecTask::new(lm, kb.as_ref(), &bed.corpus, queries,
+                          build_spec_options(cfg, prefetch, os3,
+                                             async_verify, stride),
+                          &q.tokens));
     }
     let done = engine.run()?;
     let stats = engine.stats().clone();
@@ -187,21 +193,11 @@ pub struct ServeSummary {
     pub mean_queue_wait_s: f64,
 }
 
-/// The `serve` throughput scenario: one uniform speculative method, all
-/// requests admitted up to `concurrency` in flight, coalescing per
-/// `cfg.engine`. Shared by the CLI driver and the equivalence/throughput
-/// tests so both measure the same code path.
-#[allow(clippy::too_many_arguments)]
-pub fn serve_throughput<L: LanguageModel>(
-    lm: &L, encoder: &dyn Encoder, bed: &TestBed, kind: RetrieverKind,
-    questions: &[Question], method: QaMethod, cfg: &Config,
-    concurrency: usize) -> anyhow::Result<ServeSummary> {
-    let methods: Vec<QaMethod> = vec![method; questions.len()];
-    let opts = EngineOptions::from_config(cfg, concurrency.max(1));
-    let sw = Stopwatch::start();
-    let (ms, stats) = run_engine_cell(lm, encoder, bed, kind, questions,
-                                      &methods, cfg, opts)?;
-    let wall = sw.elapsed().as_secs_f64().max(1e-9);
+/// Reduce one engine run to the `serve` scenario's summary (requests/s,
+/// latency percentiles, coalescing counters) — shared by the QA and
+/// KNN-LM throughput paths so both report identically.
+fn summarize_serve(concurrency: usize, ms: &[ReqMetrics],
+                   stats: &EngineStats, wall_s: f64) -> ServeSummary {
     let mut lat: Vec<f64> =
         ms.iter().map(|m| m.total.as_secs_f64()).collect();
     lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
@@ -217,17 +213,70 @@ pub fn serve_throughput<L: LanguageModel>(
         .map(|m| m.queue_wait.as_secs_f64())
         .sum::<f64>()
         / ms.len().max(1) as f64;
-    Ok(ServeSummary {
+    ServeSummary {
         concurrency,
         requests: ms.len(),
-        wall_s: wall,
-        rps: ms.len() as f64 / wall,
+        wall_s,
+        rps: ms.len() as f64 / wall_s,
         p50_s: pct(0.50),
         p99_s: pct(0.99),
         mean_coalesced: stats.mean_coalesced(),
         max_coalesced: stats.max_coalesced,
         mean_queue_wait_s: queue,
-    })
+    }
+}
+
+/// The `serve` throughput scenario: one uniform speculative method, all
+/// requests admitted up to `concurrency` in flight, coalescing per
+/// `cfg.engine`. Shared by the CLI driver and the equivalence/throughput
+/// tests so both measure the same code path.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_throughput<L: LanguageModel>(
+    lm: &L, encoder: &dyn Encoder, bed: &TestBed, kind: RetrieverKind,
+    questions: &[Question], method: QaMethod, cfg: &Config,
+    concurrency: usize) -> anyhow::Result<ServeSummary> {
+    let methods: Vec<QaMethod> = vec![method; questions.len()];
+    let opts = EngineOptions::from_config(cfg, concurrency.max(1));
+    let sw = Stopwatch::start();
+    let (ms, stats) = run_engine_cell(lm, encoder, bed, kind, questions,
+                                      &methods, cfg, opts)?;
+    let wall = sw.elapsed().as_secs_f64().max(1e-9);
+    Ok(summarize_serve(concurrency, &ms, &stats, wall))
+}
+
+/// Serve KNN-LM prompts through the coalescing [`ServeEngine`]: one
+/// [`KnnTask`] per prompt, verification strides and cache primes
+/// coalesced across the in-flight set. Returns per-request metrics in
+/// prompt order plus the engine's coalescing stats. Per-request
+/// `tokens_out` is bit-identical to a sequential `KnnLmSpec::run` of the
+/// same prompt (tests/knnlm_engine_equivalence.rs).
+pub fn run_knn_engine_cell<L: LanguageModel>(
+    lm: &L, kb: &dyn Retriever, ds: &Datastore, opts: &KnnServeOptions,
+    prompts: &[Vec<u32>], engine_opts: EngineOptions)
+    -> anyhow::Result<(Vec<ReqMetrics>, EngineStats)> {
+    let mut engine: ServeEngine<KnnTask<L>> =
+        ServeEngine::new(kb, engine_opts);
+    for (i, p) in prompts.iter().enumerate() {
+        engine.submit(i as u64, KnnTask::new(lm, ds, opts.clone(), p));
+    }
+    let done = engine.run()?;
+    let stats = engine.stats().clone();
+    Ok((done.into_iter().map(|(_, m)| m).collect(), stats))
+}
+
+/// The `serve --model knnlm` throughput scenario at a fixed concurrency —
+/// the KNN-LM analogue of [`serve_throughput`], shared by the CLI driver,
+/// the fig5 engine sweep, and the engine-equivalence tests.
+pub fn serve_knn_throughput<L: LanguageModel>(
+    lm: &L, kb: &dyn Retriever, ds: &Datastore, opts: &KnnServeOptions,
+    prompts: &[Vec<u32>], cfg: &Config, concurrency: usize)
+    -> anyhow::Result<ServeSummary> {
+    let engine_opts = EngineOptions::from_config(cfg, concurrency.max(1));
+    let sw = Stopwatch::start();
+    let (ms, stats) =
+        run_knn_engine_cell(lm, kb, ds, opts, prompts, engine_opts)?;
+    let wall = sw.elapsed().as_secs_f64().max(1e-9);
+    Ok(summarize_serve(concurrency, &ms, &stats, wall))
 }
 
 /// Questions for a (dataset, run) pair — each run re-seeds so mean ± std

@@ -5,16 +5,30 @@
 //! each verified retrieval inserts the entry **plus the next n consecutive
 //! datastore entries** — exploiting the stream's spatial locality.
 //! Lookups rank the cached entries exactly (inner product with the query).
+//!
+//! Eviction is least-recently-*inserted* with **MRU promotion**: a
+//! re-inserted id moves to the recent end instead of keeping its original
+//! queue position. (The old behaviour early-returned on already-present
+//! ids, so a just-re-verified hot entry kept its stale FIFO slot and was
+//! the *first* to be evicted — exactly backwards.) Promotion is O(1)
+//! amortized: the queue stores `(seq, id)` stamps, the id map holds each
+//! id's *current* stamp, and stale queue entries are skipped lazily at
+//! eviction time and swept by occasional compaction.
 
 use crate::knnlm::datastore::Datastore;
 use crate::retriever::dense::dot_chunked;
 use crate::util::{Scored, TopK};
-use std::collections::HashSet;
+use std::collections::{HashMap, VecDeque};
 
 #[derive(Debug)]
 pub struct KnnCache {
-    order: std::collections::VecDeque<u32>,
-    present: HashSet<u32>,
+    /// Insertion/promotion order as `(stamp, id)` pairs. A pair is live
+    /// iff `stamps[id]` equals its stamp; promotions append a fresh pair
+    /// and orphan the old one.
+    order: VecDeque<(u64, u32)>,
+    /// id -> stamp of its most recent insertion. Membership = key present.
+    stamps: HashMap<u32, u64>,
+    next_stamp: u64,
     cap: usize,
     /// Consecutive entries inserted per verified id (paper: n = 10).
     next_n: usize,
@@ -24,35 +38,64 @@ impl KnnCache {
     pub fn new(cap: usize, next_n: usize) -> Self {
         assert!(cap > 0);
         Self {
-            order: std::collections::VecDeque::new(),
-            present: HashSet::new(),
+            order: VecDeque::new(),
+            stamps: HashMap::new(),
+            next_stamp: 0,
             cap,
             next_n,
         }
     }
 
     pub fn len(&self) -> usize {
-        self.order.len()
+        self.stamps.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.order.is_empty()
+        self.stamps.is_empty()
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.stamps.contains_key(&id)
     }
 
     fn insert_one(&mut self, id: u32) {
-        if self.present.contains(&id) {
-            return;
-        }
-        if self.order.len() == self.cap {
-            if let Some(old) = self.order.pop_front() {
-                self.present.remove(&old);
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        if let Some(s) = self.stamps.get_mut(&id) {
+            // Already present: promote to the MRU end (fresh stamp; the
+            // pair carrying the old stamp becomes stale and is skipped).
+            *s = stamp;
+        } else {
+            if self.stamps.len() == self.cap {
+                self.evict_oldest();
             }
+            self.stamps.insert(id, stamp);
         }
-        self.order.push_back(id);
-        self.present.insert(id);
+        self.order.push_back((stamp, id));
+        if self.order.len() > 2 * self.cap {
+            self.compact();
+        }
     }
 
-    /// Insert verified ids plus their next-n successors.
+    /// Pop queue entries until one is live, then evict that id.
+    fn evict_oldest(&mut self) {
+        while let Some((stamp, id)) = self.order.pop_front() {
+            if self.stamps.get(&id) == Some(&stamp) {
+                self.stamps.remove(&id);
+                return;
+            }
+        }
+    }
+
+    /// Drop stale `(stamp, id)` pairs so the queue stays O(cap).
+    fn compact(&mut self) {
+        let stamps = &self.stamps;
+        self.order
+            .retain(|&(stamp, id)| stamps.get(&id) == Some(&stamp));
+    }
+
+    /// Insert verified ids plus their next-n successors; ids already
+    /// cached are promoted to the MRU end.
     pub fn insert_with_next(&mut self, ids: &[u32], ds: &Datastore) {
         let n = ds.len() as u32;
         for &id in ids {
@@ -65,14 +108,19 @@ impl KnnCache {
         }
     }
 
-    /// Exact top-k among the cached entries.
+    /// Exact top-k among the cached entries. Iterates the order queue
+    /// (skipping stale pairs) so ranking input is deterministic; the
+    /// result is the true top-k under the repo-wide (score desc, id asc)
+    /// order either way.
     pub fn topk(&self, q: &[f32], k: usize, ds: &Datastore) -> Vec<Scored> {
-        if self.order.is_empty() {
+        if self.stamps.is_empty() {
             return Vec::new();
         }
         let mut tk = TopK::new(k.max(1));
-        for &id in &self.order {
-            tk.push(id, dot_chunked(q, ds.keys.row(id)));
+        for &(stamp, id) in &self.order {
+            if self.stamps.get(&id) == Some(&stamp) {
+                tk.push(id, dot_chunked(q, ds.keys.row(id)));
+            }
         }
         tk.into_sorted()
     }
@@ -95,9 +143,9 @@ mod tests {
         let mut c = KnnCache::new(128, 10);
         c.insert_with_next(&[100], &d);
         assert_eq!(c.len(), 11);
-        assert!(c.present.contains(&100));
-        assert!(c.present.contains(&110));
-        assert!(!c.present.contains(&111));
+        assert!(c.contains(100));
+        assert!(c.contains(110));
+        assert!(!c.contains(111));
     }
 
     #[test]
@@ -137,5 +185,67 @@ mod tests {
         let d = ds();
         let c = KnnCache::new(16, 10);
         assert!(c.topk(&vec![0.0; 16], 4, &d).is_empty());
+    }
+
+    #[test]
+    fn reinsert_promotes_to_mru() {
+        // Regression (the insert_one early-return bug): a re-verified hot
+        // entry must move to the MRU end, not keep its stale FIFO slot
+        // and get evicted first.
+        let d = ds();
+        let mut c = KnnCache::new(4, 0); // next_n = 0: ids insert alone
+        c.insert_with_next(&[1, 2, 3, 4], &d); // order: 1 2 3 4
+        c.insert_with_next(&[1], &d); // promote 1 -> order: 2 3 4 1
+        c.insert_with_next(&[5], &d); // evicts 2 (now the oldest), not 1
+        assert!(c.contains(1), "promoted entry must survive");
+        assert!(!c.contains(2), "next-oldest entry must be evicted");
+        assert_eq!(c.len(), 4);
+        c.insert_with_next(&[6], &d); // evicts 3
+        assert!(!c.contains(3));
+        assert!(c.contains(1));
+        assert!(c.contains(4));
+    }
+
+    #[test]
+    fn eviction_order_pins_full_sequence() {
+        // Pin the exact eviction sequence under interleaved promotions.
+        let d = ds();
+        let mut c = KnnCache::new(3, 0);
+        c.insert_with_next(&[10, 20, 30], &d); // order: 10 20 30
+        c.insert_with_next(&[10], &d); // order: 20 30 10
+        c.insert_with_next(&[20], &d); // order: 30 10 20
+        c.insert_with_next(&[40], &d); // evicts 30
+        assert!(!c.contains(30));
+        c.insert_with_next(&[50], &d); // evicts 10
+        assert!(!c.contains(10));
+        c.insert_with_next(&[60], &d); // evicts 20
+        assert!(!c.contains(20));
+        let mut left: Vec<u32> = [40u32, 50, 60]
+            .iter()
+            .copied()
+            .filter(|&i| c.contains(i))
+            .collect();
+        left.sort_unstable();
+        assert_eq!(left, vec![40, 50, 60]);
+    }
+
+    #[test]
+    fn promotions_stay_bounded_and_rankable() {
+        // Heavy promotion churn must not grow the order queue unboundedly
+        // (lazy stamps + compaction) and topk must keep ranking exactly.
+        let d = ds();
+        let mut c = KnnCache::new(8, 0);
+        c.insert_with_next(&[0, 1, 2, 3, 4, 5, 6, 7], &d);
+        for round in 0..200u32 {
+            c.insert_with_next(&[round % 8], &d);
+        }
+        assert_eq!(c.len(), 8);
+        assert!(c.order.len() <= 2 * 8,
+                "order queue grew to {} despite compaction",
+                c.order.len());
+        let q = d.keys.row(3).to_vec();
+        let top = c.topk(&q, 3, &d);
+        assert_eq!(top[0].id, 3);
+        assert_eq!(top.len(), 3);
     }
 }

@@ -1,12 +1,16 @@
 //! KNN-LM serving (paper §5.3): datastore construction, distance-weighted
-//! interpolation, and speculative serving with relaxed verification.
+//! interpolation, and speculative serving with relaxed verification —
+//! resumable as a [`task::KnnTask`] so concurrent requests coalesce their
+//! datastore calls through `serving::ServeEngine` (DESIGN.md ADR-004).
 
 pub mod cache;
 pub mod datastore;
 pub mod interpolate;
 pub mod serve;
+pub mod task;
 
 pub use cache::KnnCache;
 pub use datastore::Datastore;
 pub use interpolate::{interpolated_argmax, knn_distribution, softmax};
 pub use serve::{KnnLmBaseline, KnnLmSpec, KnnServeOptions};
+pub use task::KnnTask;

@@ -12,14 +12,22 @@
 //! lookups while the speculative path verifies whole strides through
 //! `retrieve_batch` — so a sharded datastore (`ShardedRetriever` over the
 //! key matrix) accelerates verification without touching this file.
+//!
+//! Since the resumable-task refactor (DESIGN.md ADR-004) the speculative
+//! path is a thin driver over [`KnnTask`](crate::knnlm::KnnTask): the
+//! state machine owns all per-request state and surfaces its retrievals
+//! as `NeedsVerify` batches, so `KnnLmSpec::run` here and the concurrent
+//! `serving::ServeEngine` drive the *same* code and stay bit-identical
+//! per request (tests/knnlm_engine_equivalence.rs).
 
-use crate::knnlm::cache::KnnCache;
 use crate::knnlm::datastore::Datastore;
 use crate::knnlm::interpolate::interpolated_argmax;
+use crate::knnlm::task::KnnTask;
 use crate::lm::{LanguageModel, EOS};
 use crate::metrics::{timed, ReqMetrics, Stopwatch};
 use crate::retriever::{Retriever, SpecQuery};
-use crate::spec::os3::{Scheduler, StridePolicy};
+use crate::serving::TaskStep;
+use crate::spec::os3::StridePolicy;
 
 #[derive(Debug, Clone)]
 pub struct KnnServeOptions {
@@ -43,8 +51,26 @@ impl Default for KnnServeOptions {
             tau: c.tau,
             next_n: c.next_n,
             cache_cap: c.cache_cap,
-            stride: StridePolicy::Fixed(crate::config::DEFAULT_STRIDE),
+            stride: StridePolicy::Fixed(c.stride),
             max_new: 48,
+        }
+    }
+}
+
+impl KnnServeOptions {
+    /// Serving options resolved against the config — the single
+    /// constructor shared by the `serve --model knnlm` CLI path, the fig5
+    /// engine sweep, and the bench gate, so all of them serve
+    /// bit-identical requests from the same toggles.
+    pub fn from_config(cfg: &crate::config::Config) -> Self {
+        Self {
+            k: cfg.knnlm.k,
+            lambda: cfg.knnlm.lambda,
+            tau: cfg.knnlm.tau,
+            next_n: cfg.knnlm.next_n,
+            cache_cap: cfg.knnlm.cache_cap.max(4 * cfg.knnlm.k),
+            stride: StridePolicy::Fixed(cfg.knnlm.stride),
+            max_new: cfg.spec.max_new_tokens,
         }
     }
 }
@@ -90,18 +116,9 @@ impl<'a, L: LanguageModel> KnnLmBaseline<'a, L> {
     }
 }
 
-/// One in-flight KNN-LM speculation step.
-struct KnnPending<S> {
-    /// LM state *before* the token was appended (logits for re-derivation).
-    pre_state: S,
-    tokens_len: usize,
-    query: Vec<f32>,
-    spec_token: u32,
-    step_time: std::time::Duration,
-}
-
 /// RaLMSpec for KNN-LM: speculative retrieval from the consecutive-entry
 /// cache, relaxed batched verification, rollback on token mismatch.
+/// A thin driver over the resumable [`KnnTask`] (DESIGN.md ADR-004).
 pub struct KnnLmSpec<'a, L: LanguageModel> {
     pub lm: &'a L,
     pub kb: &'a dyn Retriever,
@@ -110,119 +127,30 @@ pub struct KnnLmSpec<'a, L: LanguageModel> {
 }
 
 impl<'a, L: LanguageModel> KnnLmSpec<'a, L> {
-    fn choose(&self, logits: &[f32], nb: &[crate::util::Scored]) -> u32 {
-        interpolated_argmax(logits, nb, &self.ds.values, self.opts.lambda,
-                            self.opts.tau)
+    /// Create the resumable task for one request (the engine entry
+    /// point). The task never touches `self.kb` — whoever drives it
+    /// answers its `NeedsVerify` batches.
+    pub fn task(&self, prompt: &[u32]) -> KnnTask<'a, L> {
+        KnnTask::new(self.lm, self.ds, self.opts.clone(), prompt)
     }
 
+    /// Serve one request to completion, answering each `NeedsVerify`
+    /// inline with one `retrieve_batch` call (the prime is a batch of
+    /// one). The engine-served path drives the identical state machine,
+    /// so outputs match this driver bit-for-bit.
     pub fn run(&self, prompt: &[u32]) -> anyhow::Result<ReqMetrics> {
-        let total = Stopwatch::start();
-        let mut m = ReqMetrics::default();
-        let mut cache = KnnCache::new(self.opts.cache_cap, self.opts.next_n);
-        let mut scheduler = Scheduler::new(self.opts.stride.clone());
-
-        let mut state = timed(&mut m.generate, || self.lm.prefill(prompt))?;
-        m.prefills += 1;
-        let mut out: Vec<u32> = Vec::new();
-
-        // Prime the cache with the true neighbours of the prompt state.
-        let q0 = SpecQuery::dense_only(self.lm.qproj(&state).to_vec());
-        let top0 = timed(&mut m.retrieve,
-                         || self.kb.retrieve_topk(&q0, self.opts.k));
-        m.kb_calls += 1;
-        m.kb_queries += 1;
-        let ids: Vec<u32> = top0.iter().map(|s| s.id).collect();
-        cache.insert_with_next(&ids, self.ds);
-
-        let done = |out: &Vec<u32>, state: &L::State, lm: &L| {
-            out.len() >= self.opts.max_new
-                || lm.pos(state) >= lm.max_ctx()
-                || out.last() == Some(&EOS)
-        };
-
+        let mut task = self.task(prompt);
         loop {
-            let target = scheduler.stride().max(1);
-            let mut pending: Vec<KnnPending<L::State>> = Vec::new();
-            while pending.len() < target && !done(&out, &state, self.lm) {
-                let step = Stopwatch::start();
-                let query = self.lm.qproj(&state).to_vec();
-                let nb = timed(&mut m.cache,
-                               || cache.topk(&query, self.opts.k, self.ds));
-                let tok = self.choose(self.lm.logits(&state), &nb);
-                let pre_state = state.clone();
-                state = timed(&mut m.generate,
-                              || self.lm.append_token(&state, tok))?;
-                out.push(tok);
-                m.spec_steps += 1;
-                pending.push(KnnPending {
-                    pre_state,
-                    tokens_len: out.len() - 1,
-                    query,
-                    spec_token: tok,
-                    step_time: step.elapsed(),
-                });
-            }
-            if pending.is_empty() {
-                break;
-            }
-            m.strides.push(pending.len() as u32);
-
-            // Batched verification: true top-k for every pending query.
-            let queries: Vec<SpecQuery> = pending
-                .iter()
-                .map(|p| SpecQuery::dense_only(p.query.clone()))
-                .collect();
-            let t = Stopwatch::start();
-            let truths = self.kb.retrieve_batch(&queries, self.opts.k);
-            let b_lat = t.elapsed();
-            m.retrieve += b_lat;
-            m.kb_calls += 1;
-            m.kb_queries += queries.len() as u32;
-            for tr in &truths {
-                let ids: Vec<u32> = tr.iter().map(|s| s.id).collect();
-                cache.insert_with_next(&ids, self.ds);
-            }
-
-            // Relaxed match: compare decoded tokens, not neighbour sets.
-            let mut mismatch = None;
-            let mut true_token_at = 0u32;
-            for (i, (p, tr)) in pending.iter().zip(&truths).enumerate() {
-                let true_tok = self.choose(self.lm.logits(&p.pre_state), tr);
-                if true_tok != p.spec_token {
-                    mismatch = Some(i);
-                    true_token_at = true_tok;
-                    break;
+            match task.advance()? {
+                TaskStep::Continue => {}
+                TaskStep::Done => break,
+                TaskStep::NeedsVerify { queries, k } => {
+                    let t = Stopwatch::start();
+                    let truths = self.kb.retrieve_batch(&queries, k);
+                    task.provide(truths, t.elapsed())?;
                 }
             }
-            let matched = mismatch.unwrap_or(pending.len());
-            m.spec_correct += matched as u32;
-            let a_mean = pending
-                .iter()
-                .map(|p| p.step_time.as_secs_f64())
-                .sum::<f64>()
-                / pending.len() as f64;
-            scheduler.observe(pending.len(), matched, a_mean,
-                              b_lat.as_secs_f64());
-
-            if let Some(i) = mismatch {
-                // Roll back to the mis-speculated position and append the
-                // ground-truth token instead.
-                m.rollbacks += 1;
-                m.wasted_tokens += (out.len() - pending[i].tokens_len) as u32;
-                out.truncate(pending[i].tokens_len);
-                state = pending[i].pre_state.clone();
-                state = timed(&mut m.generate,
-                              || self.lm.append_token(&state, true_token_at))?;
-                out.push(true_token_at);
-            }
-            if done(&out, &state, self.lm) {
-                break;
-            }
         }
-
-        m.decode_tokens = out.len() as u32 + m.wasted_tokens;
-        m.tokens_out = out;
-        m.total = total.elapsed();
-        Ok(m)
+        Ok(task.into_metrics())
     }
 }

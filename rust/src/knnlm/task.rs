@@ -1,0 +1,330 @@
+//! Resumable KNN-LM serving task (DESIGN.md ADR-004): the speculative
+//! KNN-LM loop of `KnnLmSpec::run` — cache lookup, relaxed batched
+//! verification, rollback on token mismatch — expressed as the
+//! step-driven [`ServeTask`] state machine, so concurrent KNN-LM requests
+//! are engine citizens: `serving::ServeEngine` interleaves their
+//! speculation steps and coalesces their verification strides (and cache
+//! primes) into shared datastore `retrieve_batch` calls.
+//!
+//! This is the workload the paper's largest win (up to 7.59x, §5.3) comes
+//! from — the baseline issues one retrieval *per generated token*, so at
+//! serving concurrency the per-token verification pressure is exactly
+//! what cross-request coalescing amortizes.
+//!
+//! Correctness: relaxed verification compares *decoded tokens*, not
+//! neighbour sets, and the true token at a position is a pure function of
+//! the request's own state prefix and the true top-k — both independent
+//! of batchmates (every retriever scores queries independently; ADR-003).
+//! Per-request outputs therefore stay bit-identical to a sequential
+//! [`KnnLmSpec::run`](crate::knnlm::KnnLmSpec::run) of the same request,
+//! which `tests/knnlm_engine_equivalence.rs` pins across k, stride
+//! policies, shard counts, and concurrency levels.
+
+use crate::knnlm::cache::KnnCache;
+use crate::knnlm::datastore::Datastore;
+use crate::knnlm::interpolate::interpolated_argmax;
+use crate::knnlm::serve::KnnServeOptions;
+use crate::lm::{LanguageModel, EOS};
+use crate::metrics::{timed, ReqMetrics, Stopwatch};
+use crate::retriever::SpecQuery;
+use crate::serving::{ServeTask, TaskStep};
+use crate::spec::Scheduler;
+use crate::util::Scored;
+use std::time::Duration;
+
+/// One in-flight KNN-LM speculation step.
+struct KnnPending<S> {
+    /// LM state *before* the token was appended (logits for re-derivation).
+    pre_state: S,
+    tokens_len: usize,
+    query: Vec<f32>,
+    spec_token: u32,
+    step_time: Duration,
+}
+
+/// Task lifecycle — mirrors `spec::SpecTask`: `Prime`/`AwaitPrime` cover
+/// the initial true-neighbour cache priming (itself a `NeedsVerify` batch
+/// of one so engines coalesce it), `Running`/`AwaitVerify` alternate for
+/// the speculate→verify rounds, `Finished` is terminal.
+enum Phase {
+    Prime,
+    AwaitPrime,
+    Running,
+    AwaitVerify,
+    Finished,
+}
+
+/// Resumable per-request KNN-LM task. Drive with
+/// [`advance`](Self::advance) until `Done`, answering every `NeedsVerify`
+/// with [`provide`](Self::provide) — `KnnLmSpec::run` does so with one
+/// direct `retrieve_batch` call per step, the serving engine with a
+/// coalesced call shared across requests.
+pub struct KnnTask<'a, L: LanguageModel> {
+    lm: &'a L,
+    ds: &'a Datastore,
+    opts: KnnServeOptions,
+    prompt: Vec<u32>,
+    phase: Phase,
+    total: Stopwatch,
+    m: ReqMetrics,
+    cache: KnnCache,
+    scheduler: Scheduler,
+    state: Option<L::State>,
+    out: Vec<u32>,
+    /// Steps speculated but not yet verified.
+    pending: Vec<KnnPending<L::State>>,
+}
+
+impl<'a, L: LanguageModel> KnnTask<'a, L> {
+    pub fn new(lm: &'a L, ds: &'a Datastore, opts: KnnServeOptions,
+               prompt: &[u32]) -> Self {
+        let scheduler = Scheduler::new(opts.stride.clone());
+        let cache = KnnCache::new(opts.cache_cap, opts.next_n);
+        Self {
+            lm,
+            ds,
+            opts,
+            prompt: prompt.to_vec(),
+            phase: Phase::Prime,
+            total: Stopwatch::start(),
+            m: ReqMetrics::default(),
+            cache,
+            scheduler,
+            state: None,
+            out: Vec::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    fn choose(&self, logits: &[f32], nb: &[Scored]) -> u32 {
+        interpolated_argmax(logits, nb, &self.ds.values, self.opts.lambda,
+                            self.opts.tau)
+    }
+
+    fn is_done(&self) -> bool {
+        let Some(state) = self.state.as_ref() else { return false };
+        self.out.len() >= self.opts.max_new
+            || self.lm.pos(state) >= self.lm.max_ctx()
+            || self.out.last() == Some(&EOS)
+    }
+
+    /// Run until the task finishes (`Done`), needs the true top-k for its
+    /// pending stride (`NeedsVerify`), or has taken one speculation step
+    /// (`Continue`). Must not be called while a `NeedsVerify` is
+    /// outstanding.
+    pub fn advance(&mut self) -> anyhow::Result<TaskStep> {
+        match self.phase {
+            Phase::Prime => {
+                // Prime the cache with the true neighbours of the prompt
+                // state; expressed as a NeedsVerify batch of one so a
+                // serving engine coalesces primes across requests.
+                let lm = self.lm;
+                let prompt = &self.prompt;
+                let state =
+                    timed(&mut self.m.generate, || lm.prefill(prompt))?;
+                self.m.prefills += 1;
+                let q0 = lm.qproj(&state).to_vec();
+                self.state = Some(state);
+                self.m.kb_calls += 1;
+                self.m.kb_queries += 1;
+                self.phase = Phase::AwaitPrime;
+                Ok(TaskStep::NeedsVerify {
+                    queries: vec![SpecQuery::dense_only(q0)],
+                    k: self.opts.k,
+                })
+            }
+            Phase::AwaitPrime | Phase::AwaitVerify => anyhow::bail!(
+                "KnnTask::advance while a verification is outstanding"),
+            Phase::Finished => Ok(TaskStep::Done),
+            Phase::Running => {
+                let target = self.scheduler.stride().max(1);
+                let done = self.is_done();
+                if self.pending.is_empty() && done {
+                    self.finish();
+                    return Ok(TaskStep::Done);
+                }
+                if self.pending.len() < target && !done {
+                    // One speculation step: speculative neighbours from
+                    // the consecutive-entry cache, token via interpolation.
+                    let step = Stopwatch::start();
+                    let state = self.state.as_ref()
+                        .expect("generation state exists after prime");
+                    let query = self.lm.qproj(state).to_vec();
+                    let k = self.opts.k;
+                    let nb = timed(&mut self.m.cache,
+                                   || self.cache.topk(&query, k, self.ds));
+                    self.m.cache_lookups += 1;
+                    let tok = self.choose(self.lm.logits(state), &nb);
+                    let pre_state = state.clone();
+                    let lm = self.lm;
+                    let next = timed(&mut self.m.generate,
+                                     || lm.append_token(state, tok))?;
+                    self.state = Some(next);
+                    self.out.push(tok);
+                    self.m.spec_steps += 1;
+                    self.pending.push(KnnPending {
+                        pre_state,
+                        tokens_len: self.out.len() - 1,
+                        query,
+                        spec_token: tok,
+                        step_time: step.elapsed(),
+                    });
+                    return Ok(TaskStep::Continue);
+                }
+                // Batched verification of the pending stride.
+                self.m.strides.push(self.pending.len() as u32);
+                let queries: Vec<SpecQuery> = self
+                    .pending
+                    .iter()
+                    .map(|p| SpecQuery::dense_only(p.query.clone()))
+                    .collect();
+                self.m.kb_calls += 1;
+                self.m.kb_queries += queries.len() as u32;
+                self.phase = Phase::AwaitVerify;
+                Ok(TaskStep::NeedsVerify { queries, k: self.opts.k })
+            }
+        }
+    }
+
+    /// Answer the outstanding `NeedsVerify` (see
+    /// [`ServeTask::provide`] for the `truths`/`kb_time` contract).
+    pub fn provide(&mut self, truths: Vec<Vec<Scored>>, kb_time: Duration)
+                   -> anyhow::Result<()> {
+        match self.phase {
+            Phase::Prime | Phase::Running | Phase::Finished => anyhow::bail!(
+                "KnnTask::provide without an outstanding verification"),
+            Phase::AwaitPrime => {
+                anyhow::ensure!(truths.len() == 1,
+                                "prime expects 1 result row, got {}",
+                                truths.len());
+                self.m.retrieve += kb_time;
+                let ids: Vec<u32> =
+                    truths[0].iter().map(|s| s.id).collect();
+                self.cache.insert_with_next(&ids, self.ds);
+                self.phase = Phase::Running;
+                Ok(())
+            }
+            Phase::AwaitVerify => {
+                anyhow::ensure!(truths.len() == self.pending.len(),
+                                "verification returned {} rows for {} \
+                                 queries",
+                                truths.len(), self.pending.len());
+                self.m.retrieve += kb_time;
+                // Hit accounting over the whole round BEFORE any of this
+                // round's insertions: a "hit" is a verified query whose
+                // true nearest neighbour was already cached when the
+                // stride speculated (the cache only mutates here, so
+                // pre-insert state == lookup-time state). Interleaving
+                // the check with the inserts would let query i-1's
+                // next-n insertions count as query i's hit and overstate
+                // the rate.
+                for tr in &truths {
+                    if tr.first().is_some_and(|s| self.cache.contains(s.id))
+                    {
+                        self.m.cache_hits += 1;
+                    }
+                }
+                for tr in &truths {
+                    let ids: Vec<u32> =
+                        tr.iter().map(|s| s.id).collect();
+                    self.cache.insert_with_next(&ids, self.ds);
+                }
+
+                // Relaxed match: compare decoded tokens, not neighbour
+                // sets (matching k neighbour ids is exponentially hard;
+                // the decoded token is what model equivalence requires).
+                let mut mismatch = None;
+                let mut true_token_at = 0u32;
+                for (i, (p, tr)) in
+                    self.pending.iter().zip(&truths).enumerate()
+                {
+                    let true_tok =
+                        self.choose(self.lm.logits(&p.pre_state), tr);
+                    if true_tok != p.spec_token {
+                        mismatch = Some(i);
+                        true_token_at = true_tok;
+                        break;
+                    }
+                }
+                let matched = mismatch.unwrap_or(self.pending.len());
+                self.m.spec_correct += matched as u32;
+                let a_mean = self
+                    .pending
+                    .iter()
+                    .map(|p| p.step_time.as_secs_f64())
+                    .sum::<f64>()
+                    / self.pending.len() as f64;
+                self.scheduler.observe(self.pending.len(), matched, a_mean,
+                                       kb_time.as_secs_f64());
+
+                if let Some(i) = mismatch {
+                    // Roll back to the mis-speculated position and append
+                    // the ground-truth token instead.
+                    self.m.rollbacks += 1;
+                    self.m.wasted_tokens +=
+                        (self.out.len() - self.pending[i].tokens_len)
+                            as u32;
+                    self.out.truncate(self.pending[i].tokens_len);
+                    let pre = self.pending[i].pre_state.clone();
+                    let lm = self.lm;
+                    let next =
+                        timed(&mut self.m.generate,
+                              || lm.append_token(&pre, true_token_at))?;
+                    self.state = Some(next);
+                    self.out.push(true_token_at);
+                }
+                self.pending.clear();
+                self.phase = Phase::Running;
+                Ok(())
+            }
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.phase, Phase::Finished)
+    }
+
+    pub fn metrics(&self) -> &ReqMetrics {
+        &self.m
+    }
+
+    pub fn metrics_mut(&mut self) -> &mut ReqMetrics {
+        &mut self.m
+    }
+
+    /// Final metrics (tokens, latency decomposition). Complete only once
+    /// `advance` has returned `Done`.
+    pub fn into_metrics(self) -> ReqMetrics {
+        self.m
+    }
+
+    fn finish(&mut self) {
+        self.m.decode_tokens =
+            self.out.len() as u32 + self.m.wasted_tokens;
+        self.m.tokens_out = std::mem::take(&mut self.out);
+        self.m.total = self.total.elapsed();
+        self.phase = Phase::Finished;
+    }
+}
+
+impl<'a, L: LanguageModel> ServeTask for KnnTask<'a, L> {
+    fn advance(&mut self) -> anyhow::Result<TaskStep> {
+        KnnTask::advance(self)
+    }
+
+    // overlap_step keeps the default no-op: KNN-LM has no async
+    // verification mode (the paper evaluates it with P+S only).
+
+    fn provide(&mut self, truths: Vec<Vec<Scored>>, kb_time: Duration)
+               -> anyhow::Result<()> {
+        KnnTask::provide(self, truths, kb_time)
+    }
+
+    fn metrics_mut(&mut self) -> &mut ReqMetrics {
+        KnnTask::metrics_mut(self)
+    }
+
+    fn into_metrics(self) -> ReqMetrics {
+        KnnTask::into_metrics(self)
+    }
+}

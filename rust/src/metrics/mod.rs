@@ -66,6 +66,14 @@ pub struct ReqMetrics {
     /// queries inside them (counts s).
     pub kb_calls: u32,
     pub kb_queries: u32,
+    /// Speculation-cache lookups performed (KNN-LM: one per speculated
+    /// token) and how many of them the cache could have answered truly —
+    /// the verified query's true top-1 was already cached at verification
+    /// time. Hit rate is the cache-quality signal *behind* speculation
+    /// accuracy (a step can decode the right token from imperfect
+    /// neighbours and vice versa).
+    pub cache_lookups: u32,
+    pub cache_hits: u32,
     pub rollbacks: u32,
     /// Speculation steps taken / verified correct.
     pub spec_steps: u32,
@@ -101,6 +109,15 @@ impl ReqMetrics {
         self.spec_correct as f64 / self.spec_steps as f64
     }
 
+    /// Fraction of cache lookups whose true nearest neighbour was already
+    /// cached (see [`Self::cache_hits`]); 0.0 when no lookups happened.
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.cache_lookups == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / self.cache_lookups as f64
+    }
+
     /// Merge (for aggregate reporting). Counters and component times sum;
     /// `strides` concatenates, so an aggregated stride trajectory covers
     /// every merged request instead of silently dropping all but the
@@ -120,6 +137,8 @@ impl ReqMetrics {
         self.decode_tokens += other.decode_tokens;
         self.kb_calls += other.kb_calls;
         self.kb_queries += other.kb_queries;
+        self.cache_lookups += other.cache_lookups;
+        self.cache_hits += other.cache_hits;
         self.rollbacks += other.rollbacks;
         self.spec_steps += other.spec_steps;
         self.spec_correct += other.spec_correct;
@@ -175,6 +194,20 @@ mod tests {
         m.spec_steps = 4;
         m.spec_correct = 3;
         assert!((m.spec_accuracy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_hit_rate_edges_and_merge() {
+        let mut m = ReqMetrics::default();
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        m.cache_lookups = 8;
+        m.cache_hits = 6;
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
+        let other = ReqMetrics { cache_lookups: 2, cache_hits: 0,
+                                 ..Default::default() };
+        m.add(&other);
+        assert_eq!(m.cache_lookups, 10);
+        assert!((m.cache_hit_rate() - 0.6).abs() < 1e-12);
     }
 
     #[test]

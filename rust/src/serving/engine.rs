@@ -1,6 +1,6 @@
-//! Concurrent serving engine: multiplex N in-flight [`SpecTask`]s and
+//! Concurrent serving engine: multiplex N in-flight [`ServeTask`]s and
 //! coalesce their pending verification queries into shared
-//! `kb.retrieve_batch` calls (DESIGN.md ADR-003).
+//! `kb.retrieve_batch` calls (DESIGN.md ADR-003 / ADR-004).
 //!
 //! The paper's batched verification amortizes retrieval *within* one
 //! request's speculation stride; at serving scale the same batch-first
@@ -12,24 +12,32 @@
 //! else can make progress). Queries are grouped by their top-k so tasks
 //! with different prefetch sizes never share a call.
 //!
+//! The engine is generic over the task kind ([`ServeTask`], ADR-004): QA
+//! speculation ([`SpecTask`]) and KNN-LM per-token serving
+//! ([`crate::knnlm::KnnTask`] — the paper's highest-leverage workload, one
+//! retrieval per generated token) coalesce through the same scheduler and
+//! flush policy.
+//!
 //! **Why per-request outputs survive coalescing bit-for-bit**: every
 //! retriever scores a query independently of its batchmates (the
 //! bit-identity pinned by the fig6 driver and
 //! tests/sharded_equivalence.rs), so the sub-slice of a coalesced call
 //! routed back to a task is exactly what the task's own
-//! `retrieve_batch` would have returned. The equivalence suite
-//! (tests/engine_equivalence.rs) checks engine output against sequential
-//! `SpecPipeline::run` per request at concurrency 1/8/32.
+//! `retrieve_batch` would have returned. The equivalence suites
+//! (tests/engine_equivalence.rs, tests/knnlm_engine_equivalence.rs) check
+//! engine output against sequential `SpecPipeline::run` /
+//! `KnnLmSpec::run` per request at concurrency 1/8/32.
 
 use crate::baseline::{BaselineOptions, RalmSeq};
 use crate::config::Config;
 use crate::datagen::{Corpus, Encoder};
+use crate::knnlm::{Datastore, KnnLmBaseline, KnnServeOptions, KnnTask};
 use crate::lm::LanguageModel;
 use crate::metrics::{ReqMetrics, Stopwatch};
 use crate::retriever::{Retriever, SpecQuery};
 use crate::serving::router::{Method, Request, ServeBackend};
-use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecTask,
-                  TaskStep};
+use crate::serving::task::{ServeTask, TaskStep};
+use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecTask};
 use std::collections::VecDeque;
 use std::time::Duration;
 
@@ -91,9 +99,9 @@ impl EngineStats {
 
 /// A task slot. Slots are recycled (never removed) so the coalescing
 /// buffer can hold stable slot indices across admissions.
-struct Slot<'a, L: LanguageModel> {
+struct Slot<T> {
     id: u64,
-    task: Option<SpecTask<'a, L>>,
+    task: Option<T>,
     /// True while the task's `NeedsVerify` sits in the coalescing buffer.
     awaiting: bool,
 }
@@ -106,29 +114,22 @@ struct PendingVerify {
     enqueued: Stopwatch,
 }
 
-pub struct ServeEngine<'a, L: LanguageModel> {
-    lm: &'a L,
+pub struct ServeEngine<'a, T: ServeTask> {
     kb: &'a dyn Retriever,
-    corpus: &'a Corpus,
-    queries: QueryBuilder<'a>,
     opts: EngineOptions,
     /// Admission queue; tasks are constructed at submission so each
     /// request's latency clock covers its admission-queue wait too.
-    waiting: VecDeque<(u64, SpecTask<'a, L>)>,
-    slots: Vec<Slot<'a, L>>,
+    waiting: VecDeque<(u64, T)>,
+    slots: Vec<Slot<T>>,
     pending: Vec<PendingVerify>,
     stats: EngineStats,
     finished: Vec<(u64, ReqMetrics)>,
 }
 
-impl<'a, L: LanguageModel> ServeEngine<'a, L> {
-    pub fn new(lm: &'a L, kb: &'a dyn Retriever, corpus: &'a Corpus,
-               queries: QueryBuilder<'a>, opts: EngineOptions) -> Self {
+impl<'a, T: ServeTask> ServeEngine<'a, T> {
+    pub fn new(kb: &'a dyn Retriever, opts: EngineOptions) -> Self {
         Self {
-            lm,
             kb,
-            corpus,
-            queries,
             opts,
             waiting: VecDeque::new(),
             slots: Vec::new(),
@@ -138,13 +139,12 @@ impl<'a, L: LanguageModel> ServeEngine<'a, L> {
         }
     }
 
-    /// Enqueue one request. Admission happens inside [`run`](Self::run),
-    /// honouring `max_inflight`; the request's latency clock starts here,
-    /// so reported p50/p99 include admission-queue wait (what a client
-    /// would observe), not just in-flight service time.
-    pub fn submit(&mut self, id: u64, question: &[u32], opts: SpecOptions) {
-        let task = SpecTask::new(self.lm, self.kb, self.corpus,
-                                 self.queries, opts, question);
+    /// Enqueue one request's task (construct it at submission so the
+    /// request's latency clock covers its admission-queue wait too —
+    /// reported p50/p99 then include what a client would observe, not
+    /// just in-flight service time). Admission happens inside
+    /// [`run`](Self::run), honouring `max_inflight`.
+    pub fn submit(&mut self, id: u64, task: T) {
         self.waiting.push_back((id, task));
     }
 
@@ -193,8 +193,8 @@ impl<'a, L: LanguageModel> ServeEngine<'a, L> {
 
     /// Drive every submitted request to completion, coalescing
     /// verification batches across them. Returns `(id, metrics)` sorted by
-    /// request id; per-request `tokens_out` is bit-identical to a
-    /// sequential `SpecPipeline::run` of the same request.
+    /// request id; per-request `tokens_out` is bit-identical to driving
+    /// the same task alone (`SpecPipeline::run` / `KnnLmSpec::run`).
     #[allow(clippy::needless_range_loop)] // indices outlive `slots` borrows
     pub fn run(&mut self) -> anyhow::Result<Vec<(u64, ReqMetrics)>> {
         loop {
@@ -374,9 +374,8 @@ impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
     fn serve_batch(&mut self, reqs: &[Request])
                    -> Vec<anyhow::Result<ReqMetrics>> {
         let queries = self.query_builder();
-        let mut engine = ServeEngine::new(
-            &self.lm, self.kb.as_ref(), self.corpus.as_ref(), queries,
-            self.engine_opts.clone());
+        let mut engine: ServeEngine<SpecTask<L>> =
+            ServeEngine::new(self.kb.as_ref(), self.engine_opts.clone());
         let mut results: Vec<Option<anyhow::Result<ReqMetrics>>> =
             reqs.iter().map(|_| None).collect();
         for (i, req) in reqs.iter().enumerate() {
@@ -397,34 +396,116 @@ impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
                 }
                 Method::Spec { prefetch, os3, async_verify } => {
                     engine.submit(
-                        i as u64, &req.question,
-                        spec_options_for(&self.cfg, prefetch, os3,
-                                         async_verify));
+                        i as u64,
+                        SpecTask::new(
+                            &self.lm, self.kb.as_ref(),
+                            self.corpus.as_ref(), queries,
+                            spec_options_for(&self.cfg, prefetch, os3,
+                                             async_verify),
+                            &req.question));
+                }
+                Method::Knn => {
+                    results[i] = Some(Err(anyhow::anyhow!(
+                        "request {}: Method::Knn needs a KnnEngineBackend \
+                         (this worker serves the QA corpus)", req.id)));
                 }
             }
         }
-        match engine.run() {
-            Ok(done) => {
-                for (i, m) in done {
-                    results[i as usize] = Some(Ok(m));
-                }
+        resolve_engine_run(&mut engine, &mut results);
+        results
+            .into_iter()
+            .map(|r| r.expect("every request resolved"))
+            .collect()
+    }
+}
+
+/// Run a filled engine and slot its per-request outcomes into `results`.
+/// On failure, requests that completed before the failing one are
+/// salvaged; only the genuinely unresolved ones get the error
+/// (anyhow::Error is not Clone, so it is formatted once).
+fn resolve_engine_run<T: ServeTask>(
+    engine: &mut ServeEngine<T>,
+    results: &mut [Option<anyhow::Result<ReqMetrics>>]) {
+    match engine.run() {
+        Ok(done) => {
+            for (i, m) in done {
+                results[i as usize] = Some(Ok(m));
             }
-            Err(e) => {
-                // Salvage requests that completed before the failure; only
-                // the genuinely unresolved ones get the error (anyhow::
-                // Error is not Clone, so format once).
-                for (i, m) in engine.take_finished() {
-                    results[i as usize] = Some(Ok(m));
-                }
-                let msg = format!("{e:#}");
-                for r in results.iter_mut() {
-                    if r.is_none() {
-                        *r = Some(Err(anyhow::anyhow!(
-                            "engine run failed: {msg}")));
-                    }
+        }
+        Err(e) => {
+            for (i, m) in engine.take_finished() {
+                results[i as usize] = Some(Ok(m));
+            }
+            let msg = format!("{e:#}");
+            for r in results.iter_mut() {
+                if r.is_none() {
+                    *r = Some(Err(anyhow::anyhow!(
+                        "engine run failed: {msg}")));
                 }
             }
         }
+    }
+}
+
+/// Router backend for the KNN-LM workload (paper §5.3 — one retrieval per
+/// generated token, the highest-leverage coalescing target):
+/// [`Method::Knn`] requests become [`KnnTask`]s multiplexed through a
+/// [`ServeEngine`] over the datastore retriever, so concurrent requests
+/// share `retrieve_batch` calls for both their cache primes and their
+/// relaxed-verification strides. [`Method::Baseline`] requests in the same
+/// drain are served inline via [`KnnLmBaseline`] (per-token retrieval).
+pub struct KnnEngineBackend<L: LanguageModel> {
+    pub lm: L,
+    /// Retriever over the datastore keys (exact or HNSW, possibly
+    /// sharded).
+    pub kb: std::sync::Arc<dyn Retriever>,
+    pub ds: std::sync::Arc<Datastore>,
+    pub opts: KnnServeOptions,
+    pub engine_opts: EngineOptions,
+}
+
+impl<L: LanguageModel> ServeBackend for KnnEngineBackend<L> {
+    fn serve(&mut self, req: &Request) -> anyhow::Result<ReqMetrics> {
+        let mut out = self.serve_batch(std::slice::from_ref(req));
+        out.pop().expect("serve_batch returns one result per request")
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.engine_opts.max_batch.max(1)
+    }
+
+    fn serve_batch(&mut self, reqs: &[Request])
+                   -> Vec<anyhow::Result<ReqMetrics>> {
+        let mut engine: ServeEngine<KnnTask<L>> =
+            ServeEngine::new(self.kb.as_ref(), self.engine_opts.clone());
+        let mut results: Vec<Option<anyhow::Result<ReqMetrics>>> =
+            reqs.iter().map(|_| None).collect();
+        for (i, req) in reqs.iter().enumerate() {
+            match req.method {
+                Method::Knn => {
+                    engine.submit(
+                        i as u64,
+                        KnnTask::new(&self.lm, self.ds.as_ref(),
+                                     self.opts.clone(), &req.question));
+                }
+                Method::Baseline => {
+                    let pipe = KnnLmBaseline {
+                        lm: &self.lm,
+                        kb: self.kb.as_ref(),
+                        ds: self.ds.as_ref(),
+                        opts: self.opts.clone(),
+                    };
+                    results[i] = Some(pipe.run(&req.question));
+                }
+                Method::Spec { .. } => {
+                    results[i] = Some(Err(anyhow::anyhow!(
+                        "request {}: Method::Spec needs a QA EngineBackend \
+                         (this worker serves the KNN-LM datastore)",
+                        req.id)));
+                }
+            }
+        }
+        resolve_engine_run(&mut engine, &mut results);
         results
             .into_iter()
             .map(|r| r.expect("every request resolved"))

@@ -13,13 +13,20 @@
 //! error `Response` and the worker keeps draining the queue.
 //!
 //! `Method::Spec` requests flow through [`engine::ServeEngine`] when the
-//! worker backend is an [`engine::EngineBackend`]: the worker drains up to
+//! worker backend is an [`engine::EngineBackend`], and [`Method::Knn`]
+//! requests through the same engine when it is an
+//! [`engine::KnnEngineBackend`]: the worker drains up to
 //! `engine.max_batch` queued jobs at once and the engine coalesces their
-//! verification queries into shared `retrieve_batch` calls.
+//! verification queries into shared `retrieve_batch` calls. The engine is
+//! generic over the [`task::ServeTask`] contract (DESIGN.md ADR-004), so
+//! any new workload expressed as a resumable task is engine-servable
+//! without touching this layer.
 
 pub mod engine;
 pub mod router;
+pub mod task;
 
 pub use engine::{spec_options_for, EngineBackend, EngineOptions,
-                 EngineStats, ServeEngine};
+                 EngineStats, KnnEngineBackend, ServeEngine};
 pub use router::{Method, Request, Response, Router, ServeBackend};
+pub use task::{ServeTask, TaskStep};

@@ -15,6 +15,11 @@ pub enum Method {
     Baseline,
     /// RaLMSpec; fields mirror the +P/+S/+A toggles.
     Spec { prefetch: bool, os3: bool, async_verify: bool },
+    /// Speculative KNN-LM serving (§5.3): the request's `question` is the
+    /// generation prompt; options come from the worker's
+    /// `KnnServeOptions`. Served through the coalescing engine by
+    /// [`crate::serving::KnnEngineBackend`].
+    Knn,
 }
 
 #[derive(Debug, Clone)]

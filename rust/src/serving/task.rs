@@ -1,0 +1,84 @@
+//! The engine/task contract (DESIGN.md ADR-004): any workload whose
+//! serving loop alternates *local speculation* with *batched knowledge-base
+//! verification* can be expressed as a [`ServeTask`] — a resumable
+//! state machine that never touches the knowledge base itself. The task
+//! surfaces its retrieval needs as [`TaskStep::NeedsVerify`] batches and
+//! has results injected with [`ServeTask::provide`]; whoever drives it
+//! decides *how* those batches are answered — a thin sequential driver
+//! with one `retrieve_batch` call per step (`SpecPipeline::run`,
+//! `KnnLmSpec::run`), or [`super::ServeEngine`], which coalesces the
+//! batches of many concurrent tasks into shared KB calls.
+//!
+//! The contract was extracted from `spec::SpecTask` (ADR-003) so the QA
+//! speculation pipeline and the KNN-LM per-token workload (and any future
+//! task kind) are engine citizens through one interface: implementing
+//! this trait is all a new workload needs to inherit cross-request
+//! coalescing, admission control, and the serve scenario's throughput
+//! reporting for free.
+
+use crate::metrics::ReqMetrics;
+use crate::retriever::SpecQuery;
+use crate::util::Scored;
+use std::time::Duration;
+
+/// What a [`ServeTask`] needs next, returned by [`ServeTask::advance`].
+#[derive(Debug)]
+pub enum TaskStep {
+    /// The task is blocked on retrieval: answer with
+    /// `kb.retrieve_batch(&queries, k)` (or any bit-identical equivalent —
+    /// e.g. a sub-slice of a larger coalesced call) and hand the per-query
+    /// result rows back via [`ServeTask::provide`].
+    NeedsVerify { queries: Vec<SpecQuery>, k: usize },
+    /// Made progress (one speculation step); call `advance` again.
+    Continue,
+    /// The request is complete; collect with [`ServeTask::into_metrics`].
+    Done,
+}
+
+/// A resumable per-request serving task. Drive it with
+/// [`advance`](Self::advance) until `Done`, answering every `NeedsVerify`
+/// with [`provide`](Self::provide). `advance` must not be called while a
+/// `NeedsVerify` is outstanding (implementations bail).
+///
+/// **Equivalence obligation**: a task's output must be a pure function of
+/// its own query/result sequence. Because every retriever scores a query
+/// independently of its batchmates (pinned by the fig6 driver and
+/// `tests/sharded_equivalence.rs`), that makes the task's output invariant
+/// to *who* answers a `NeedsVerify` and *what else* was coalesced into
+/// the call — the property every engine-vs-sequential equivalence suite
+/// (`tests/engine_equivalence.rs`, `tests/knnlm_engine_equivalence.rs`)
+/// asserts bit-for-bit.
+pub trait ServeTask {
+    /// Run until the task finishes (`Done`), needs retrieval results
+    /// (`NeedsVerify`), or has taken one speculation step (`Continue` —
+    /// the single-step granularity is what lets a serving engine
+    /// interleave many tasks fairly).
+    fn advance(&mut self) -> anyhow::Result<TaskStep>;
+
+    /// Optional work overlapped with an in-flight verification (the
+    /// async "+A" extra speculation step). Called by drivers between
+    /// receiving `NeedsVerify` and `provide`; returns whether a step was
+    /// taken. Default: no overlap capability.
+    fn overlap_step(&mut self) -> anyhow::Result<bool> {
+        Ok(false)
+    }
+
+    /// Answer the outstanding `NeedsVerify`: `truths[i]` is the top-k for
+    /// `queries[i]`, `kb_time` the latency of the KB call that produced
+    /// them (attributed to this request's R component; a coalesced call's
+    /// latency is shared by every participating request because each one
+    /// really did wait for it).
+    fn provide(&mut self, truths: Vec<Vec<Scored>>, kb_time: Duration)
+               -> anyhow::Result<()>;
+
+    /// Mutable metrics access for drivers that attribute wait time
+    /// themselves (`queue_wait` in the engine, `verify_wait` in the async
+    /// pipeline driver).
+    fn metrics_mut(&mut self) -> &mut ReqMetrics;
+
+    /// Final metrics (tokens, latency decomposition). Complete only once
+    /// [`advance`](Self::advance) has returned `Done`.
+    fn into_metrics(self) -> ReqMetrics
+    where
+        Self: Sized;
+}

@@ -41,6 +41,11 @@ use crate::spec::query::QueryBuilder;
 use crate::util::Scored;
 use std::time::Duration;
 
+// The step contract lives with the engine that drives it (DESIGN.md
+// ADR-004); re-exported here because SpecTask is its original
+// implementation and existing consumers import it from `spec`.
+pub use crate::serving::task::{ServeTask, TaskStep};
+
 #[derive(Debug, Clone)]
 pub struct SpecOptions {
     /// Tokens generated per speculation step (paper: 4).
@@ -105,20 +110,6 @@ struct Pending<S> {
     spec_doc: u32,
     /// Measured latency of this speculation step (for OS³'s `a`).
     step_time: Duration,
-}
-
-/// What a [`SpecTask`] needs next, returned by [`SpecTask::advance`].
-#[derive(Debug)]
-pub enum TaskStep {
-    /// The task is blocked on retrieval: answer with
-    /// `kb.retrieve_batch(&queries, k)` (or any bit-identical equivalent —
-    /// e.g. a sub-slice of a larger coalesced call) and hand the per-query
-    /// result rows back via [`SpecTask::provide`].
-    NeedsVerify { queries: Vec<SpecQuery>, k: usize },
-    /// Made progress (one speculation step); call `advance` again.
-    Continue,
-    /// The request is complete; collect with [`SpecTask::into_metrics`].
-    Done,
 }
 
 /// Task lifecycle. `Prime`/`AwaitPrime` cover Alg. 1 line 4 (the initial
@@ -452,6 +443,31 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
         }
         self.m.total = self.total.elapsed();
         self.phase = Phase::Finished;
+    }
+}
+
+/// [`SpecTask`] is the original [`ServeTask`]: the trait was extracted
+/// from its inherent contract (ADR-004), so the impl is pure delegation.
+impl<'a, L: LanguageModel> ServeTask for SpecTask<'a, L> {
+    fn advance(&mut self) -> anyhow::Result<TaskStep> {
+        SpecTask::advance(self)
+    }
+
+    fn overlap_step(&mut self) -> anyhow::Result<bool> {
+        SpecTask::overlap_step(self)
+    }
+
+    fn provide(&mut self, truths: Vec<Vec<Scored>>, kb_time: Duration)
+               -> anyhow::Result<()> {
+        SpecTask::provide(self, truths, kb_time)
+    }
+
+    fn metrics_mut(&mut self) -> &mut ReqMetrics {
+        SpecTask::metrics_mut(self)
+    }
+
+    fn into_metrics(self) -> ReqMetrics {
+        SpecTask::into_metrics(self)
     }
 }
 

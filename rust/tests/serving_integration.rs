@@ -43,6 +43,9 @@ impl ServeBackend for QaBackend {
                     stride: 3,
                 }
             }
+            ralmspec::serving::router::Method::Knn => {
+                anyhow::bail!("QA test backend does not serve KNN-LM")
+            }
         };
         let q = ralmspec::datagen::Question {
             id: req.id,
