@@ -79,20 +79,30 @@ COMMANDS:
           [--shards N]
                              batch-serve a QA workload through the router
           [--throughput] [--concurrency N]
-          [--max-batch Q] [--flush-us U]
+          [--max-batch Q] [--flush-us U] [--kb-parallel P]
                              engine scenario: serve concurrently with
                              cross-request verification coalescing,
                              sweeping concurrency 1/8/32 (--throughput)
                              or one level (--concurrency N); reports
-                             requests/s and p50/p99 latency
+                             requests/s, p50/p99 latency, KB in-flight
+                             depth and overlap utilization.
+                             --kb-parallel P runs up to P coalesced KB
+                             calls on background workers (asynchronous
+                             retrieval execution; 0 = synchronous inline
+                             flush) — outputs are bit-identical either way
           --model knnlm      serve the KNN-LM workload (one retrieval per
                              token) through the coalescing engine;
                              --retriever edr|adr picks the datastore index
     bench-gate [--mock] [--out BENCH_PR3.json]
+               [--engine-out BENCH_PR4.json]
                              CI perf-regression gate: quick fig4+fig5
                              speed-up ratios per retriever class, written
                              as JSON; exits non-zero if any ratio < 1.0
-                             (scale via RALMSPEC_BENCH_{DOCS,DS,...})
+                             (scale via RALMSPEC_BENCH_{DOCS,DS,...}).
+                             Also runs the sync-vs-async engine sweep
+                             under injected KB latency (--engine-out;
+                             fails if async/sync requests/s < 1.0 at
+                             concurrency 8)
     trace [--retriever edr] [--mock]
                              emit a Fig-1(c)-style per-request timeline
     help                     this text

@@ -459,15 +459,23 @@ impl ServingConfig {
 /// verification queries from concurrent requests are flushed into one
 /// shared `retrieve_batch` call when `max_batch` queries have accumulated
 /// or the oldest has waited `flush_us` microseconds, whichever first.
+/// `kb_parallel` governs how flushed calls execute (DESIGN.md ADR-005):
+/// `>= 1` runs up to that many coalesced calls concurrently on background
+/// workers while the engine keeps scheduling; `0` blocks the engine
+/// thread inside each call (the pre-ADR-005 *execution model* — note the
+/// ADR-005 multi-step overlap drive applies in every mode, so schedule
+/// metrics like spec_steps/strides differ from pre-ADR-005 engines even
+/// at 0). Token outputs are bit-identical across every setting.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub max_batch: usize,
     pub flush_us: u64,
+    pub kb_parallel: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { max_batch: 32, flush_us: 200 }
+        Self { max_batch: 32, flush_us: 200, kb_parallel: 4 }
     }
 }
 
@@ -476,6 +484,7 @@ impl EngineConfig {
         merge_fields!(self, v, {
             "max_batch" => self.max_batch => usize,
             "flush_us" => self.flush_us => u64,
+            "kb_parallel" => self.kb_parallel => usize,
         });
     }
 
@@ -483,6 +492,7 @@ impl EngineConfig {
         Value::obj(vec![
             ("max_batch", Value::num(self.max_batch as f64)),
             ("flush_us", Value::num(self.flush_us as f64)),
+            ("kb_parallel", Value::num(self.kb_parallel as f64)),
         ])
     }
 }
@@ -587,12 +597,15 @@ mod tests {
         let c = Config::default();
         assert_eq!(c.engine.max_batch, 32);
         assert_eq!(c.engine.flush_us, 200);
+        assert_eq!(c.engine.kb_parallel, 4);
         let v = json::parse(
-            r#"{"engine": {"max_batch": 8, "flush_us": 1000}}"#).unwrap();
+            r#"{"engine": {"max_batch": 8, "flush_us": 1000,
+                           "kb_parallel": 0}}"#).unwrap();
         let mut c = Config::default();
         c.merge(&v);
         assert_eq!(c.engine.max_batch, 8);
         assert_eq!(c.engine.flush_us, 1000);
+        assert_eq!(c.engine.kb_parallel, 0); // synchronous inline mode
         assert_eq!(c.serving.queue_cap, 256); // untouched default
     }
 

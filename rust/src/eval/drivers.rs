@@ -109,14 +109,38 @@ pub trait ErasedLm {
                         method: QaMethod, cfg: &Config, concurrency: usize)
                         -> anyhow::Result<ServeSummary>;
 
+    /// [`Self::serve_throughput`] with an explicit knowledge base and
+    /// per-request methods — used by the bench-gate's sync-vs-async
+    /// sweep to inject KB latency under a stride-heterogeneous mix.
+    #[allow(clippy::too_many_arguments)]
+    fn serve_throughput_kb(&self, encoder: &dyn Encoder, bed: &TestBed,
+                           kind: RetrieverKind,
+                           kb: &std::sync::Arc<dyn Retriever>,
+                           questions: &[crate::datagen::Question],
+                           methods: &[QaMethod], cfg: &Config,
+                           concurrency: usize)
+                           -> anyhow::Result<ServeSummary>;
+
     /// The `serve --model knnlm` throughput scenario (KNN-LM tasks
     /// engine-coalesced at a fixed concurrency) — see
     /// `eval::runner::serve_knn_throughput`.
     #[allow(clippy::too_many_arguments)]
-    fn serve_knn_throughput(&self, kb: &dyn Retriever, ds: &Datastore,
-                            opts: &KnnServeOptions, prompts: &[Vec<u32>],
-                            cfg: &Config, concurrency: usize)
+    fn serve_knn_throughput(&self, kb: &std::sync::Arc<dyn Retriever>,
+                            ds: &Datastore, opts: &KnnServeOptions,
+                            prompts: &[Vec<u32>], cfg: &Config,
+                            concurrency: usize)
                             -> anyhow::Result<ServeSummary>;
+
+    /// [`Self::serve_knn_throughput`] with per-request options
+    /// (heterogeneous k) — the bench-gate's KNN sync-vs-async sweep.
+    #[allow(clippy::too_many_arguments)]
+    fn serve_knn_throughput_mixed(&self,
+                                  kb: &std::sync::Arc<dyn Retriever>,
+                                  ds: &Datastore,
+                                  opts_per: &[KnnServeOptions],
+                                  prompts: &[Vec<u32>], cfg: &Config,
+                                  concurrency: usize)
+                                  -> anyhow::Result<ServeSummary>;
 
     fn qproj_of_prompt(&self, prompt: &[u32]) -> anyhow::Result<Vec<f32>>;
 }
@@ -172,7 +196,21 @@ macro_rules! impl_holder {
             }
 
             #[allow(clippy::too_many_arguments)]
-            fn serve_knn_throughput(&self, kb: &dyn Retriever,
+            fn serve_throughput_kb(&self, encoder: &dyn Encoder,
+                                   bed: &TestBed, kind: RetrieverKind,
+                                   kb: &std::sync::Arc<dyn Retriever>,
+                                   questions: &[crate::datagen::Question],
+                                   methods: &[QaMethod], cfg: &Config,
+                                   concurrency: usize)
+                                   -> anyhow::Result<ServeSummary> {
+                crate::eval::runner::serve_throughput_kb(
+                    &self.0, encoder, bed, kind, kb, questions, methods,
+                    cfg, concurrency)
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            fn serve_knn_throughput(&self,
+                                    kb: &std::sync::Arc<dyn Retriever>,
                                     ds: &Datastore,
                                     opts: &KnnServeOptions,
                                     prompts: &[Vec<u32>], cfg: &Config,
@@ -180,6 +218,16 @@ macro_rules! impl_holder {
                                     -> anyhow::Result<ServeSummary> {
                 crate::eval::runner::serve_knn_throughput(
                     &self.0, kb, ds, opts, prompts, cfg, concurrency)
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            fn serve_knn_throughput_mixed(
+                &self, kb: &std::sync::Arc<dyn Retriever>,
+                ds: &Datastore, opts_per: &[KnnServeOptions],
+                prompts: &[Vec<u32>], cfg: &Config, concurrency: usize)
+                -> anyhow::Result<ServeSummary> {
+                crate::eval::runner::serve_knn_throughput_mixed(
+                    &self.0, kb, ds, opts_per, prompts, cfg, concurrency)
             }
 
             fn qproj_of_prompt(&self, prompt: &[u32])
@@ -558,7 +606,7 @@ fn fig5(cfg: &Config, provider: &Provider) -> anyhow::Result<()> {
                 .map(|i| prompts[i % prompts.len()].clone())
                 .collect();
             for &conc in &[1usize, 8, 32] {
-                let s = lm.serve_knn_throughput(edr.as_ref(), &ds, &opts,
+                let s = lm.serve_knn_throughput(&edr, &ds, &opts,
                                                 &eng_prompts, cfg, conc)?;
                 report.line(&format!(
                     "conc={:<3} {:>7.2} req/s  p50={:.3}s p99={:.3}s \
@@ -839,6 +887,10 @@ pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     if let Some(n) = flags.get_usize("flush-us")? {
         cfg.engine.flush_us = n as u64;
     }
+    if let Some(n) = flags.get_usize("kb-parallel")? {
+        // 0 = synchronous inline flush; >= 1 = async executor cap.
+        cfg.engine.kb_parallel = n;
+    }
     let model = flags.get("model").unwrap_or("gpt2m").to_string();
     if model == KNN_MODEL {
         // KNN-LM serving has its own fixture (datastore, not the QA
@@ -914,9 +966,10 @@ fn serve_engine_scenario(cfg: &Config, provider: &Provider, model: &str,
         None => vec![1, 8, 32],
     };
     eprintln!("[serve] engine scenario: {} requests via {} on {}/{} ({}), \
-               max_batch={} flush_us={}",
+               max_batch={} flush_us={} kb_parallel={}",
               questions.len(), method.label(), model, kind.label(),
-              dataset.label(), cfg.engine.max_batch, cfg.engine.flush_us);
+              dataset.label(), cfg.engine.max_batch, cfg.engine.flush_us,
+              cfg.engine.kb_parallel);
     let mut report = Report::new(
         "serve",
         "Engine serving: requests/s + latency percentiles vs concurrency \
@@ -928,9 +981,12 @@ fn serve_engine_scenario(cfg: &Config, provider: &Provider, model: &str,
             report.line(&format!(
                 "conc={:<3} {:>7.2} req/s  p50={:.3}s p99={:.3}s \
                  wall={:.2}s  coalesce mean={:.1} max={} \
-                 queue_wait={:.4}s",
+                 queue_wait={:.4}s  kb_depth mean={:.1} max={} \
+                 overlap/round={:.1}",
                 s.concurrency, s.rps, s.p50_s, s.p99_s, s.wall_s,
-                s.mean_coalesced, s.max_coalesced, s.mean_queue_wait_s));
+                s.mean_coalesced, s.max_coalesced, s.mean_queue_wait_s,
+                s.mean_inflight_depth, s.max_inflight_depth,
+                s.overlap_per_round));
             report.row(Value::obj(vec![
                 ("model", Value::str(model)),
                 ("retriever", Value::str(kind.label())),
@@ -945,6 +1001,13 @@ fn serve_engine_scenario(cfg: &Config, provider: &Provider, model: &str,
                 ("mean_coalesced", Value::num(s.mean_coalesced)),
                 ("max_coalesced", Value::num(s.max_coalesced as f64)),
                 ("queue_wait_s", Value::num(s.mean_queue_wait_s)),
+                ("kb_parallel", Value::num(cfg.engine.kb_parallel as f64)),
+                ("mean_inflight_depth",
+                 Value::num(s.mean_inflight_depth)),
+                ("max_inflight_depth",
+                 Value::num(s.max_inflight_depth as f64)),
+                ("overlap_steps", Value::num(s.overlap_steps as f64)),
+                ("overlap_per_round", Value::num(s.overlap_per_round)),
             ]));
         }
         Ok(())
@@ -998,9 +1061,10 @@ fn serve_knn_scenario(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
             .map(|i| base_prompts[i % base_prompts.len()].clone())
             .collect();
         eprintln!("[serve] knnlm: {} requests on {} (k={} stride={:?}), \
-                   max_batch={} flush_us={}",
+                   max_batch={} flush_us={} kb_parallel={}",
                   prompts.len(), kb.name(), opts.k, opts.stride,
-                  cfg.engine.max_batch, cfg.engine.flush_us);
+                  cfg.engine.max_batch, cfg.engine.flush_us,
+                  cfg.engine.kb_parallel);
         if !engine_scenario {
             // Sequential reference (one request at a time, no engine).
             let sw = crate::metrics::Stopwatch::start();
@@ -1014,14 +1078,17 @@ fn serve_knn_scenario(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
             return Ok(());
         }
         for &c in &concurrencies {
-            let s = lm.serve_knn_throughput(kb.as_ref(), &ds, &opts,
+            let s = lm.serve_knn_throughput(&kb, &ds, &opts,
                                             &prompts, cfg, c)?;
             report.line(&format!(
                 "conc={:<3} {:>7.2} req/s  p50={:.3}s p99={:.3}s \
                  wall={:.2}s  coalesce mean={:.1} max={} \
-                 queue_wait={:.4}s",
+                 queue_wait={:.4}s  kb_depth mean={:.1} max={} \
+                 overlap/round={:.1}",
                 s.concurrency, s.rps, s.p50_s, s.p99_s, s.wall_s,
-                s.mean_coalesced, s.max_coalesced, s.mean_queue_wait_s));
+                s.mean_coalesced, s.max_coalesced, s.mean_queue_wait_s,
+                s.mean_inflight_depth, s.max_inflight_depth,
+                s.overlap_per_round));
             report.row(Value::obj(vec![
                 ("model", Value::str(KNN_MODEL)),
                 ("retriever", Value::str(kind.label())),
@@ -1035,6 +1102,13 @@ fn serve_knn_scenario(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
                 ("mean_coalesced", Value::num(s.mean_coalesced)),
                 ("max_coalesced", Value::num(s.max_coalesced as f64)),
                 ("queue_wait_s", Value::num(s.mean_queue_wait_s)),
+                ("kb_parallel", Value::num(cfg.engine.kb_parallel as f64)),
+                ("mean_inflight_depth",
+                 Value::num(s.mean_inflight_depth)),
+                ("max_inflight_depth",
+                 Value::num(s.max_inflight_depth as f64)),
+                ("overlap_steps", Value::num(s.overlap_steps as f64)),
+                ("overlap_per_round", Value::num(s.overlap_per_round)),
             ]));
         }
         Ok(())

@@ -17,6 +17,17 @@
 //!   what it does at paper scale — at toy scale an HNSW probe is so cheap
 //!   that the G/R balance (and thus the ratio) would measure the mock LM,
 //!   not the retriever class.
+//!
+//! The gate also runs the **sync-vs-async engine sweep** (DESIGN.md
+//! ADR-005): each task kind (QA speculation, KNN-LM) is engine-served at
+//! concurrency 8 with the knowledge base wrapped in a deterministic
+//! [`InjectedLatency`] (simulated remote-KB RTT, so the measurement sees
+//! scheduling rather than toy-scale retrieval arithmetic), once with
+//! `kb_parallel = 0` (synchronous inline flush) and once asynchronously.
+//! The async/sync requests-per-second ratios land in a second artifact
+//! (`--engine-out`, default `BENCH_PR4.json`), and any ratio below 1.0
+//! fails the gate: asynchronous retrieval execution must never be a
+//! regression.
 
 use crate::cli::Flags;
 use crate::config::{Config, RetrieverKind};
@@ -26,11 +37,24 @@ use crate::eval::drivers::{knn_fixture, knn_retriever, ErasedLm, Provider,
 use crate::eval::runner::{questions_for, QaMethod};
 use crate::eval::workload::TestBed;
 use crate::knnlm::KnnServeOptions;
+use crate::retriever::{InjectedLatency, Retriever};
 use crate::spec::StridePolicy;
 use crate::util::json::Value;
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Minimum acceptable spec/baseline speed-up ratio.
 const MIN_RATIO: f64 = 1.0;
+
+/// Minimum acceptable async/sync engine throughput ratio (at the sweep's
+/// concurrency of 8 — the acceptance criterion's threshold).
+const MIN_ASYNC_RATIO: f64 = 1.0;
+
+/// Concurrency the engine sweep gates at.
+const ENGINE_CONC: usize = 8;
+
+/// Async in-flight KB-call cap used for the async half of the sweep.
+const ENGINE_KB_PARALLEL: usize = 4;
 
 fn env_usize(k: &str, d: usize) -> usize {
     std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
@@ -110,15 +134,163 @@ fn knn_best(lm: &dyn ErasedLm, kb: &dyn crate::retriever::Retriever,
     Ok(best)
 }
 
+/// One sync-vs-async engine measurement (requests/s at [`ENGINE_CONC`]
+/// under injected KB latency): `ratio = async_rps / sync_rps`.
+struct EngineRatio {
+    task: &'static str,
+    sync_rps: f64,
+    async_rps: f64,
+}
+
+impl EngineRatio {
+    fn ratio(&self) -> f64 {
+        if self.sync_rps <= 0.0 {
+            return 0.0;
+        }
+        self.async_rps / self.sync_rps
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("task", Value::str(self.task)),
+            ("concurrency", Value::num(ENGINE_CONC as f64)),
+            ("kb_parallel", Value::num(ENGINE_KB_PARALLEL as f64)),
+            ("sync_rps", Value::num(self.sync_rps)),
+            ("async_rps", Value::num(self.async_rps)),
+            ("ratio", Value::num(self.ratio())),
+        ])
+    }
+}
+
+/// Injected per-call KB latency for the engine sweep (simulated remote-KB
+/// RTT; overridable for slower/faster CI runners).
+fn kb_latency() -> Duration {
+    Duration::from_micros(env_usize("RALMSPEC_BENCH_KBLAT_US", 2_000) as u64)
+}
+
+/// Sync-vs-async engine sweep for the QA speculation task kind: the same
+/// requests, engine, and latency-wrapped KB, with only `kb_parallel`
+/// toggled (0 = inline blocking flush vs [`ENGINE_KB_PARALLEL`]).
+/// Best-of-runs requests/s on each side.
+fn qa_engine_sweep(lm: &dyn ErasedLm, enc: &dyn crate::datagen::Encoder,
+                   bed: &TestBed, cfg: &Config)
+                   -> anyhow::Result<EngineRatio> {
+    let latency = kb_latency();
+    eprintln!("[gate] engine sweep (qa-spec): conc={ENGINE_CONC}, \
+               injected KB latency {}us...", latency.as_micros());
+    let kb: Arc<dyn Retriever> = Arc::new(InjectedLatency::new(
+        bed.unsharded(RetrieverKind::Edr), latency));
+    let n = (2 * ENGINE_CONC).max(cfg.eval.requests);
+    let questions = questions_for(bed, Dataset::WikiQa, n, 0,
+                                  cfg.eval.seed);
+    // A k-heterogeneous mix (prefetch 1 / 4 / 20 / 64, +A so the overlap
+    // drive has speculation work): requests with different top-k cannot
+    // share a coalesced call (per-k grouping is a correctness
+    // requirement), so every verification era carries several distinct
+    // per-k groups. The synchronous engine runs those groups back to
+    // back on its own thread — paying the injected RTT once per group —
+    // while the async executor holds them in flight together. That makes
+    // the async advantage structural (≈ number of distinct k's, capped
+    // by kb_parallel), not a scheduling coincidence. Outputs stay
+    // bit-identical either way.
+    let methods: Vec<QaMethod> = (0..n)
+        .map(|i| match i % 4 {
+            0 => QaMethod::spec(1, false, true),
+            1 => QaMethod::spec(4, false, true),
+            2 => QaMethod::spec(20, false, true),
+            _ => QaMethod::spec(64, false, true),
+        })
+        .collect();
+    let best = |run_cfg: &Config| -> anyhow::Result<f64> {
+        let mut best = 0.0f64;
+        for _ in 0..cfg.eval.runs.max(1) {
+            let s = lm.serve_throughput_kb(enc, bed, RetrieverKind::Edr,
+                                           &kb, &questions, &methods,
+                                           run_cfg, ENGINE_CONC)?;
+            best = best.max(s.rps);
+        }
+        Ok(best)
+    };
+    let mut sync_cfg = cfg.clone();
+    sync_cfg.engine.kb_parallel = 0;
+    let mut async_cfg = cfg.clone();
+    async_cfg.engine.kb_parallel = ENGINE_KB_PARALLEL;
+    Ok(EngineRatio {
+        task: "qa-spec",
+        sync_rps: best(&sync_cfg)?,
+        async_rps: best(&async_cfg)?,
+    })
+}
+
+/// Sync-vs-async engine sweep for the KNN-LM task kind (per-token
+/// verification pressure — the workload where KB latency dominates
+/// hardest).
+fn knn_engine_sweep(lm: &dyn ErasedLm, ds: &crate::knnlm::Datastore,
+                    prompts: &[Vec<u32>], cfg: &Config)
+                    -> anyhow::Result<EngineRatio> {
+    let latency = kb_latency();
+    eprintln!("[gate] engine sweep (knnlm): conc={ENGINE_CONC}, \
+               injected KB latency {}us...", latency.as_micros());
+    let kb: Arc<dyn Retriever> = Arc::new(InjectedLatency::new(
+        knn_retriever(cfg, ds, RetrieverKind::Edr), latency));
+    let n = (2 * ENGINE_CONC).max(prompts.len());
+    let eng_prompts: Vec<Vec<u32>> = (0..n)
+        .map(|i| prompts[i % prompts.len()].clone())
+        .collect();
+    // k-heterogeneous traffic (the paper sweeps k over 1..1024; real
+    // clients differ): per-k groups cannot share a coalesced call, so
+    // the sync engine pays the injected RTT once per distinct k per era
+    // while the async executor overlaps the groups — the structural
+    // async win (see the QA sweep note above).
+    let base = KnnServeOptions {
+        max_new: cfg.spec.max_new_tokens,
+        ..KnnServeOptions::from_config(cfg)
+    };
+    let opts_per: Vec<KnnServeOptions> = (0..n)
+        .map(|i| {
+            let k = [4usize, 16, 64, 256][i % 4];
+            KnnServeOptions {
+                k,
+                cache_cap: base.cache_cap.max(4 * k),
+                ..base.clone()
+            }
+        })
+        .collect();
+    let best = |run_cfg: &Config| -> anyhow::Result<f64> {
+        let mut best = 0.0f64;
+        for _ in 0..cfg.eval.runs.max(1) {
+            let s = lm.serve_knn_throughput_mixed(&kb, ds, &opts_per,
+                                                  &eng_prompts, run_cfg,
+                                                  ENGINE_CONC)?;
+            best = best.max(s.rps);
+        }
+        Ok(best)
+    };
+    let mut sync_cfg = cfg.clone();
+    sync_cfg.engine.kb_parallel = 0;
+    let mut async_cfg = cfg.clone();
+    async_cfg.engine.kb_parallel = ENGINE_KB_PARALLEL;
+    Ok(EngineRatio {
+        task: "knnlm",
+        sync_rps: best(&sync_cfg)?,
+        async_rps: best(&async_cfg)?,
+    })
+}
+
 pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     let cfg = gate_config(cfg);
     let out = flags.get("out").unwrap_or("BENCH_PR3.json").to_string();
+    let engine_out =
+        flags.get("engine-out").unwrap_or("BENCH_PR4.json").to_string();
     let provider = Provider::from_flags(&cfg, flags)?;
     let mut ratios: Vec<Ratio> = Vec::new();
+    let mut engine_ratios: Vec<EngineRatio> = Vec::new();
 
     // --- fig4 trajectory: RaLMSpec+P vs RaLMSeq per QA retriever class.
     // +P (sync, fixed stride) is the most schedule-deterministic variant,
     // which is what a hard gate wants; fig4 proper still sweeps the rest.
+    // The same bed then feeds the QA half of the sync-vs-async engine
+    // sweep.
     let qa_model = "gpt2m";
     if provider.has_model(qa_model) {
         let enc = provider.encoder()?;
@@ -139,14 +311,18 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
                     spec_s: spec,
                 });
             }
+            engine_ratios.push(qa_engine_sweep(lm, enc.as_ref(), &bed,
+                                               &cfg)?);
             Ok(())
         })?;
     } else {
-        eprintln!("[gate] {qa_model} artifacts missing, fig4 cells skipped");
+        eprintln!("[gate] {qa_model} artifacts missing, fig4 + QA engine \
+                   cells skipped");
     }
 
     // --- fig5 trajectory: speculative KNN-LM (s=4) vs the per-token
-    // baseline, EDR and ADR over the datastore keys.
+    // baseline, EDR and ADR over the datastore keys; then the KNN half of
+    // the engine sweep over the same datastore.
     if provider.has_model(KNN_MODEL) {
         provider.with_lm(&cfg, KNN_MODEL, &mut |lm| {
             eprintln!("[gate] building KNN datastore ({} entries)...",
@@ -173,6 +349,7 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
                     spec_s: spec,
                 });
             }
+            engine_ratios.push(knn_engine_sweep(lm, &ds, &prompts, &cfg)?);
             Ok(())
         })?;
     } else {
@@ -182,7 +359,7 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     anyhow::ensure!(!ratios.is_empty(),
                     "bench-gate measured nothing (no models available)");
 
-    // --- Report + artifact + verdict.
+    // --- Report + artifacts + verdict.
     let mut failures = Vec::new();
     for r in &ratios {
         let verdict = if r.speedup() >= MIN_RATIO { "ok" } else { "FAIL" };
@@ -193,6 +370,17 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         if r.speedup() < MIN_RATIO {
             failures.push(format!("{}/{} {:.2}x", r.bench, r.retriever,
                                   r.speedup()));
+        }
+    }
+    for r in &engine_ratios {
+        let verdict =
+            if r.ratio() >= MIN_ASYNC_RATIO { "ok" } else { "FAIL" };
+        println!("[gate] async {:<8} conc={} sync={:.2} req/s \
+                  async={:.2} req/s ratio={:.2}x  {}",
+                 r.task, ENGINE_CONC, r.sync_rps, r.async_rps, r.ratio(),
+                 verdict);
+        if r.ratio() < MIN_ASYNC_RATIO {
+            failures.push(format!("async/{} {:.2}x", r.task, r.ratio()));
         }
     }
     let doc = Value::obj(vec![
@@ -213,9 +401,37 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     }
     std::fs::write(&out, doc.pretty())?;
     println!("[gate] wrote {out}");
+    if !engine_ratios.is_empty() {
+        let engine_doc = Value::obj(vec![
+            ("gate", Value::str("engine-async")),
+            ("min_required", Value::num(MIN_ASYNC_RATIO)),
+            ("concurrency", Value::num(ENGINE_CONC as f64)),
+            ("kb_parallel", Value::num(ENGINE_KB_PARALLEL as f64)),
+            ("kb_latency_us",
+             Value::num(kb_latency().as_micros() as f64)),
+            ("runs", Value::num(cfg.eval.runs as f64)),
+            ("pass", Value::Bool(
+                engine_ratios.iter()
+                    .all(|r| r.ratio() >= MIN_ASYNC_RATIO))),
+            ("ratios",
+             Value::Arr(engine_ratios.iter()
+                            .map(|r| r.to_json()).collect())),
+        ]);
+        if let Some(dir) = std::path::Path::new(&engine_out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&engine_out, engine_doc.pretty())?;
+        println!("[gate] wrote {engine_out}");
+    }
+    // Entries are labeled by origin: "fig4/EDR ..." / "fig5/..." are
+    // spec-vs-baseline speedups (the speculation pipeline), "async/..."
+    // are the ADR-005 async/sync engine throughput ratios (the
+    // executor) — so a red CI job points at the right subsystem.
     anyhow::ensure!(
         failures.is_empty(),
-        "speculation regressed below {MIN_RATIO:.1}x on: {}",
+        "bench gate ratios below {MIN_RATIO:.1}x on: {}",
         failures.join(", "));
     Ok(())
 }

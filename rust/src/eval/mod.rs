@@ -9,7 +9,9 @@ pub mod workload;
 
 pub use report::{cell_stats, speedup, CellStats, Report};
 pub use runner::{build_spec_options, query_mode, questions_for,
-                 run_engine_cell, run_knn_engine_cell, run_qa_cell,
-                 serve_knn_throughput, serve_throughput, QaMethod,
+                 run_engine_cell, run_engine_cell_kb, run_knn_engine_cell,
+                 run_knn_engine_cell_mixed, run_qa_cell,
+                 serve_knn_throughput, serve_knn_throughput_mixed,
+                 serve_throughput, serve_throughput_kb, QaMethod,
                  ServeSummary};
 pub use workload::TestBed;

@@ -24,6 +24,9 @@ pub struct CellStats {
     pub rollbacks: u64,
     pub spec_steps: u64,
     pub spec_accuracy: f64,
+    /// Speculation steps overlapped with in-flight verifications (async
+    /// "+A" work; zero for sync methods).
+    pub overlap_steps: u64,
     pub kb_calls: u64,
     pub kb_queries: u64,
     /// Speculation-cache lookups / true-top-1 hits (KNN-LM serving; zero
@@ -46,6 +49,7 @@ impl CellStats {
             ("rollbacks", Value::num(self.rollbacks as f64)),
             ("spec_steps", Value::num(self.spec_steps as f64)),
             ("spec_accuracy", Value::num(self.spec_accuracy)),
+            ("overlap_steps", Value::num(self.overlap_steps as f64)),
             ("kb_calls", Value::num(self.kb_calls as f64)),
             ("kb_queries", Value::num(self.kb_queries as f64)),
             ("cache_lookups", Value::num(self.cache_lookups as f64)),
@@ -98,6 +102,7 @@ pub fn cell_stats(label: &str, runs: &[Vec<ReqMetrics>]) -> CellStats {
         } else {
             0.0
         },
+        overlap_steps: all.iter().map(|m| m.overlap_steps as u64).sum(),
         kb_calls: all.iter().map(|m| m.kb_calls as u64).sum(),
         kb_queries: all.iter().map(|m| m.kb_queries as u64).sum(),
         cache_lookups: all.iter().map(|m| m.cache_lookups as u64).sum(),

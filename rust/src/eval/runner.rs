@@ -12,6 +12,7 @@ use crate::retriever::Retriever;
 use crate::serving::{EngineOptions, EngineStats, ServeEngine};
 use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecPipeline,
                   SpecTask};
+use std::sync::Arc;
 
 /// One serving method of the paper's evaluation grid.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -147,10 +148,26 @@ pub fn run_engine_cell<L: LanguageModel>(
     questions: &[Question], methods: &[QaMethod], cfg: &Config,
     engine_opts: EngineOptions)
     -> anyhow::Result<(Vec<ReqMetrics>, EngineStats)> {
+    let kb = bed.retriever(kind);
+    run_engine_cell_kb(lm, encoder, bed, kind, &kb, questions, methods,
+                       cfg, engine_opts)
+}
+
+/// [`run_engine_cell`] with an explicit knowledge base (e.g. an
+/// [`crate::retriever::InjectedLatency`] wrapper for the sync-vs-async
+/// sweeps) instead of the testbed's cached retriever. Requests lost to a
+/// failing KB call are an error here — the batch-oriented eval callers
+/// have no per-request error channel (the router path does, via
+/// `ServeEngine::take_failed`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_engine_cell_kb<L: LanguageModel>(
+    lm: &L, encoder: &dyn Encoder, bed: &TestBed, kind: RetrieverKind,
+    kb: &Arc<dyn Retriever>, questions: &[Question], methods: &[QaMethod],
+    cfg: &Config, engine_opts: EngineOptions)
+    -> anyhow::Result<(Vec<ReqMetrics>, EngineStats)> {
     anyhow::ensure!(questions.len() == methods.len(),
                     "{} questions but {} methods",
                     questions.len(), methods.len());
-    let kb = bed.retriever(kind);
     let queries = QueryBuilder {
         encoder,
         mode: query_mode(kind),
@@ -158,7 +175,7 @@ pub fn run_engine_cell<L: LanguageModel>(
         sparse_len: cfg.retriever.sparse_query_len,
     };
     let mut engine: ServeEngine<SpecTask<L>> =
-        ServeEngine::new(kb.as_ref(), engine_opts);
+        ServeEngine::new(kb.clone(), engine_opts);
     for (i, (q, method)) in questions.iter().zip(methods).enumerate() {
         let QaMethod::Spec { prefetch, os3, async_verify, stride } = *method
         else {
@@ -172,8 +189,26 @@ pub fn run_engine_cell<L: LanguageModel>(
                           &q.tokens));
     }
     let done = engine.run()?;
+    ensure_no_failures(&mut engine)?;
     let stats = engine.stats().clone();
     Ok((done.into_iter().map(|(_, m)| m).collect(), stats))
+}
+
+/// Batch eval paths have no per-request error channel: a KB-call failure
+/// (worker panic) becomes the cell's error, listing the lost requests.
+fn ensure_no_failures<T: crate::serving::ServeTask>(
+    engine: &mut ServeEngine<T>) -> anyhow::Result<()> {
+    let failed = engine.take_failed();
+    anyhow::ensure!(
+        failed.is_empty(),
+        "{} request(s) lost to failing KB calls: {}",
+        failed.len(),
+        failed
+            .iter()
+            .map(|(id, e)| format!("#{id}: {e}"))
+            .collect::<Vec<_>>()
+            .join("; "));
+    Ok(())
 }
 
 /// One `serve` scenario measurement at a fixed concurrency.
@@ -191,6 +226,14 @@ pub struct ServeSummary {
     pub max_coalesced: u64,
     /// Mean per-request time spent in the coalescing buffer.
     pub mean_queue_wait_s: f64,
+    /// Mean / peak concurrently in-flight KB calls (ADR-005 async
+    /// execution; 1.0 mean = fully serialized calls).
+    pub mean_inflight_depth: f64,
+    pub max_inflight_depth: u64,
+    /// Overlap speculation steps driven while verifications were in
+    /// flight, and their mean per parked verification round.
+    pub overlap_steps: u64,
+    pub overlap_per_round: f64,
 }
 
 /// Reduce one engine run to the `serve` scenario's summary (requests/s,
@@ -223,6 +266,10 @@ fn summarize_serve(concurrency: usize, ms: &[ReqMetrics],
         mean_coalesced: stats.mean_coalesced(),
         max_coalesced: stats.max_coalesced,
         mean_queue_wait_s: queue,
+        mean_inflight_depth: stats.mean_inflight_depth(),
+        max_inflight_depth: stats.inflight_depth_max,
+        overlap_steps: stats.overlap_steps,
+        overlap_per_round: stats.overlap_per_round(),
     }
 }
 
@@ -235,11 +282,27 @@ pub fn serve_throughput<L: LanguageModel>(
     lm: &L, encoder: &dyn Encoder, bed: &TestBed, kind: RetrieverKind,
     questions: &[Question], method: QaMethod, cfg: &Config,
     concurrency: usize) -> anyhow::Result<ServeSummary> {
+    let kb = bed.retriever(kind);
     let methods: Vec<QaMethod> = vec![method; questions.len()];
+    serve_throughput_kb(lm, encoder, bed, kind, &kb, questions, &methods,
+                        cfg, concurrency)
+}
+
+/// [`serve_throughput`] with an explicit knowledge base and per-request
+/// methods — the entry the bench-gate's sync-vs-async sweep and the
+/// latency-injection tests use to wrap the retriever in
+/// [`crate::retriever::InjectedLatency`] and serve a deliberately
+/// stride-heterogeneous mix (desynchronized verification waves are what
+/// exercise concurrent KB calls).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_throughput_kb<L: LanguageModel>(
+    lm: &L, encoder: &dyn Encoder, bed: &TestBed, kind: RetrieverKind,
+    kb: &Arc<dyn Retriever>, questions: &[Question], methods: &[QaMethod],
+    cfg: &Config, concurrency: usize) -> anyhow::Result<ServeSummary> {
     let opts = EngineOptions::from_config(cfg, concurrency.max(1));
     let sw = Stopwatch::start();
-    let (ms, stats) = run_engine_cell(lm, encoder, bed, kind, questions,
-                                      &methods, cfg, opts)?;
+    let (ms, stats) = run_engine_cell_kb(lm, encoder, bed, kind, kb,
+                                         questions, methods, cfg, opts)?;
     let wall = sw.elapsed().as_secs_f64().max(1e-9);
     Ok(summarize_serve(concurrency, &ms, &stats, wall))
 }
@@ -251,15 +314,36 @@ pub fn serve_throughput<L: LanguageModel>(
 /// `tokens_out` is bit-identical to a sequential `KnnLmSpec::run` of the
 /// same prompt (tests/knnlm_engine_equivalence.rs).
 pub fn run_knn_engine_cell<L: LanguageModel>(
-    lm: &L, kb: &dyn Retriever, ds: &Datastore, opts: &KnnServeOptions,
-    prompts: &[Vec<u32>], engine_opts: EngineOptions)
+    lm: &L, kb: &Arc<dyn Retriever>, ds: &Datastore,
+    opts: &KnnServeOptions, prompts: &[Vec<u32>],
+    engine_opts: EngineOptions)
     -> anyhow::Result<(Vec<ReqMetrics>, EngineStats)> {
+    let opts_per: Vec<KnnServeOptions> =
+        vec![opts.clone(); prompts.len()];
+    run_knn_engine_cell_mixed(lm, kb, ds, &opts_per, prompts, engine_opts)
+}
+
+/// [`run_knn_engine_cell`] with per-request options — serving traffic is
+/// not homogeneous (the paper sweeps k over 1..1024; different clients
+/// ask for different k), and requests with different k form different
+/// coalescing groups, which is exactly what the sync-vs-async sweeps
+/// exercise: distinct per-k groups serialize on the engine thread in
+/// synchronous mode but run concurrently under `kb_parallel`.
+pub fn run_knn_engine_cell_mixed<L: LanguageModel>(
+    lm: &L, kb: &Arc<dyn Retriever>, ds: &Datastore,
+    opts_per: &[KnnServeOptions], prompts: &[Vec<u32>],
+    engine_opts: EngineOptions)
+    -> anyhow::Result<(Vec<ReqMetrics>, EngineStats)> {
+    anyhow::ensure!(opts_per.len() == prompts.len(),
+                    "{} option sets but {} prompts",
+                    opts_per.len(), prompts.len());
     let mut engine: ServeEngine<KnnTask<L>> =
-        ServeEngine::new(kb, engine_opts);
-    for (i, p) in prompts.iter().enumerate() {
-        engine.submit(i as u64, KnnTask::new(lm, ds, opts.clone(), p));
+        ServeEngine::new(kb.clone(), engine_opts);
+    for (i, (p, o)) in prompts.iter().zip(opts_per).enumerate() {
+        engine.submit(i as u64, KnnTask::new(lm, ds, o.clone(), p));
     }
     let done = engine.run()?;
+    ensure_no_failures(&mut engine)?;
     let stats = engine.stats().clone();
     Ok((done.into_iter().map(|(_, m)| m).collect(), stats))
 }
@@ -268,13 +352,27 @@ pub fn run_knn_engine_cell<L: LanguageModel>(
 /// the KNN-LM analogue of [`serve_throughput`], shared by the CLI driver,
 /// the fig5 engine sweep, and the engine-equivalence tests.
 pub fn serve_knn_throughput<L: LanguageModel>(
-    lm: &L, kb: &dyn Retriever, ds: &Datastore, opts: &KnnServeOptions,
-    prompts: &[Vec<u32>], cfg: &Config, concurrency: usize)
-    -> anyhow::Result<ServeSummary> {
+    lm: &L, kb: &Arc<dyn Retriever>, ds: &Datastore,
+    opts: &KnnServeOptions, prompts: &[Vec<u32>], cfg: &Config,
+    concurrency: usize) -> anyhow::Result<ServeSummary> {
+    let opts_per: Vec<KnnServeOptions> =
+        vec![opts.clone(); prompts.len()];
+    serve_knn_throughput_mixed(lm, kb, ds, &opts_per, prompts, cfg,
+                               concurrency)
+}
+
+/// [`serve_knn_throughput`] with per-request options (heterogeneous k —
+/// see [`run_knn_engine_cell_mixed`]); the bench-gate's KNN sync-vs-async
+/// sweep runs through here.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_knn_throughput_mixed<L: LanguageModel>(
+    lm: &L, kb: &Arc<dyn Retriever>, ds: &Datastore,
+    opts_per: &[KnnServeOptions], prompts: &[Vec<u32>], cfg: &Config,
+    concurrency: usize) -> anyhow::Result<ServeSummary> {
     let engine_opts = EngineOptions::from_config(cfg, concurrency.max(1));
     let sw = Stopwatch::start();
-    let (ms, stats) =
-        run_knn_engine_cell(lm, kb, ds, opts, prompts, engine_opts)?;
+    let (ms, stats) = run_knn_engine_cell_mixed(lm, kb, ds, opts_per,
+                                                prompts, engine_opts)?;
     let wall = sw.elapsed().as_secs_f64().max(1e-9);
     Ok(summarize_serve(concurrency, &ms, &stats, wall))
 }

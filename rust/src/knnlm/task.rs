@@ -73,6 +73,12 @@ pub struct KnnTask<'a, L: LanguageModel> {
     out: Vec<u32>,
     /// Steps speculated but not yet verified.
     pending: Vec<KnnPending<L::State>>,
+    /// Steps speculated *while a verification round is in flight*
+    /// ([`overlap_step`](Self::overlap_step)) — up to one full next-round
+    /// stride per round (a deterministic, state-based budget). They roll
+    /// into the next round's pending list when the round verifies clean,
+    /// and are discarded with the rollback otherwise.
+    overlap: Vec<KnnPending<L::State>>,
 }
 
 impl<'a, L: LanguageModel> KnnTask<'a, L> {
@@ -93,6 +99,7 @@ impl<'a, L: LanguageModel> KnnTask<'a, L> {
             state: None,
             out: Vec::new(),
             pending: Vec::new(),
+            overlap: Vec::new(),
         }
     }
 
@@ -106,6 +113,35 @@ impl<'a, L: LanguageModel> KnnTask<'a, L> {
         self.out.len() >= self.opts.max_new
             || self.lm.pos(state) >= self.lm.max_ctx()
             || self.out.last() == Some(&EOS)
+    }
+
+    /// One speculation step: speculative neighbours from the
+    /// consecutive-entry cache, token via interpolation, state append.
+    /// Shared by the `Running` phase and [`overlap_step`](Self::overlap_step).
+    fn speculate_one(&mut self) -> anyhow::Result<KnnPending<L::State>> {
+        let step = Stopwatch::start();
+        let state = self.state.as_ref()
+            .expect("generation state exists after prime");
+        let query = self.lm.qproj(state).to_vec();
+        let k = self.opts.k;
+        let nb = timed(&mut self.m.cache,
+                       || self.cache.topk(&query, k, self.ds));
+        self.m.cache_lookups += 1;
+        let tok = self.choose(self.lm.logits(state), &nb);
+        let pre_state = state.clone();
+        let lm = self.lm;
+        let next = timed(&mut self.m.generate,
+                         || lm.append_token(state, tok))?;
+        self.state = Some(next);
+        self.out.push(tok);
+        self.m.spec_steps += 1;
+        Ok(KnnPending {
+            pre_state,
+            tokens_len: self.out.len() - 1,
+            query,
+            spec_token: tok,
+            step_time: step.elapsed(),
+        })
     }
 
     /// Run until the task finishes (`Done`), needs the true top-k for its
@@ -144,31 +180,8 @@ impl<'a, L: LanguageModel> KnnTask<'a, L> {
                     return Ok(TaskStep::Done);
                 }
                 if self.pending.len() < target && !done {
-                    // One speculation step: speculative neighbours from
-                    // the consecutive-entry cache, token via interpolation.
-                    let step = Stopwatch::start();
-                    let state = self.state.as_ref()
-                        .expect("generation state exists after prime");
-                    let query = self.lm.qproj(state).to_vec();
-                    let k = self.opts.k;
-                    let nb = timed(&mut self.m.cache,
-                                   || self.cache.topk(&query, k, self.ds));
-                    self.m.cache_lookups += 1;
-                    let tok = self.choose(self.lm.logits(state), &nb);
-                    let pre_state = state.clone();
-                    let lm = self.lm;
-                    let next = timed(&mut self.m.generate,
-                                     || lm.append_token(state, tok))?;
-                    self.state = Some(next);
-                    self.out.push(tok);
-                    self.m.spec_steps += 1;
-                    self.pending.push(KnnPending {
-                        pre_state,
-                        tokens_len: self.out.len() - 1,
-                        query,
-                        spec_token: tok,
-                        step_time: step.elapsed(),
-                    });
+                    let p = self.speculate_one()?;
+                    self.pending.push(p);
                     return Ok(TaskStep::Continue);
                 }
                 // Batched verification of the pending stride.
@@ -184,6 +197,32 @@ impl<'a, L: LanguageModel> KnnTask<'a, L> {
                 Ok(TaskStep::NeedsVerify { queries, k: self.opts.k })
             }
         }
+    }
+
+    /// Speculate ahead while a verification round is in flight (DESIGN.md
+    /// ADR-005): drivers call this repeatedly between receiving
+    /// `NeedsVerify` and calling [`provide`](Self::provide) — the serving
+    /// engine once per scheduling round across the whole KB latency. The
+    /// task accepts up to one full next-round stride of overlap steps per
+    /// round; the budget depends on task state only (the scheduler's
+    /// current stride — stable during `AwaitVerify`, since `observe` runs
+    /// in `provide`), never on elapsed time, so schedules stay
+    /// reproducible. Tokens are unaffected either way: overlap steps are
+    /// verified in the next round exactly like ordinary pending steps
+    /// (and discarded by a rollback), which is why the sequential
+    /// `KnnLmSpec::run` — which answers inline and has no overlap window —
+    /// stays bit-identical to the engine-served path.
+    pub fn overlap_step(&mut self) -> anyhow::Result<bool> {
+        if !matches!(self.phase, Phase::AwaitVerify)
+            || self.overlap.len() >= self.scheduler.stride().max(1)
+            || self.is_done()
+        {
+            return Ok(false);
+        }
+        let p = self.speculate_one()?;
+        self.m.overlap_steps += 1;
+        self.overlap.push(p);
+        Ok(true)
     }
 
     /// Answer the outstanding `NeedsVerify` (see
@@ -213,11 +252,14 @@ impl<'a, L: LanguageModel> KnnTask<'a, L> {
                 // Hit accounting over the whole round BEFORE any of this
                 // round's insertions: a "hit" is a verified query whose
                 // true nearest neighbour was already cached when the
-                // stride speculated (the cache only mutates here, so
-                // pre-insert state == lookup-time state). Interleaving
-                // the check with the inserts would let query i-1's
-                // next-n insertions count as query i's hit and overstate
-                // the rate.
+                // stride speculated (the cache only mutates here, so for
+                // ordinary pending steps pre-insert state == lookup-time
+                // state; steps speculated by `overlap_step` looked up one
+                // insertion round earlier, so for them the check is a
+                // one-round-stale approximation). Interleaving the check
+                // with the inserts would let query i-1's next-n
+                // insertions count as query i's hit and overstate the
+                // rate.
                 for tr in &truths {
                     if tr.first().is_some_and(|s| self.cache.contains(s.id))
                     {
@@ -259,7 +301,10 @@ impl<'a, L: LanguageModel> KnnTask<'a, L> {
 
                 if let Some(i) = mismatch {
                     // Roll back to the mis-speculated position and append
-                    // the ground-truth token instead.
+                    // the ground-truth token instead. Overlap steps were
+                    // speculated past the truncation point, so their
+                    // tokens are discarded with the rest (they are inside
+                    // the `wasted_tokens` delta below).
                     self.m.rollbacks += 1;
                     self.m.wasted_tokens +=
                         (self.out.len() - self.pending[i].tokens_len)
@@ -272,8 +317,16 @@ impl<'a, L: LanguageModel> KnnTask<'a, L> {
                               || lm.append_token(&pre, true_token_at))?;
                     self.state = Some(next);
                     self.out.push(true_token_at);
+                    self.pending.clear();
+                    self.overlap.clear();
+                } else {
+                    // Clean round: overlap steps become the next round's
+                    // pending list (they are ordinary speculated steps,
+                    // just taken while the KB call was in flight) and get
+                    // verified exactly like any other stride.
+                    self.pending.clear();
+                    self.pending.append(&mut self.overlap);
                 }
-                self.pending.clear();
                 self.phase = Phase::Running;
                 Ok(())
             }
@@ -312,8 +365,9 @@ impl<'a, L: LanguageModel> ServeTask for KnnTask<'a, L> {
         KnnTask::advance(self)
     }
 
-    // overlap_step keeps the default no-op: KNN-LM has no async
-    // verification mode (the paper evaluates it with P+S only).
+    fn overlap_step(&mut self) -> anyhow::Result<bool> {
+        KnnTask::overlap_step(self)
+    }
 
     fn provide(&mut self, truths: Vec<Vec<Scored>>, kb_time: Duration)
                -> anyhow::Result<()> {

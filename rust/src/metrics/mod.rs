@@ -78,6 +78,10 @@ pub struct ReqMetrics {
     /// Speculation steps taken / verified correct.
     pub spec_steps: u32,
     pub spec_correct: u32,
+    /// Subset of `spec_steps` taken while a verification was in flight
+    /// (the async overlap drive) — the per-request overlap-utilization
+    /// counter: these are the steps whose latency the KB call hid.
+    pub overlap_steps: u32,
     /// Tokens discarded by rollbacks (speculation overhead).
     pub wasted_tokens: u32,
     /// Stride used at each verification step (OS³ trajectory).
@@ -142,6 +146,7 @@ impl ReqMetrics {
         self.rollbacks += other.rollbacks;
         self.spec_steps += other.spec_steps;
         self.spec_correct += other.spec_correct;
+        self.overlap_steps += other.overlap_steps;
         self.wasted_tokens += other.wasted_tokens;
         self.strides.extend_from_slice(&other.strides);
     }
@@ -236,9 +241,11 @@ mod tests {
             encode: Duration::from_millis(4),
             queue_wait: Duration::from_millis(1),
             tokens_out: vec![99],
+            overlap_steps: 2,
             ..Default::default()
         };
         a.add(&b);
+        assert_eq!(a.overlap_steps, 2);
         // The stride trajectory must cover every merged request (table5's
         // summaries previously only reflected the last request).
         assert_eq!(a.strides, vec![1, 2, 3, 4, 5]);

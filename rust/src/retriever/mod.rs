@@ -36,10 +36,12 @@ pub mod pool;
 pub mod sharded;
 pub mod sparse;
 
-pub use pool::WorkerPool;
+pub use pool::{JobHandle, WorkerPool};
 pub use sharded::{ShardStrategy, Shardable, ShardedRetriever};
 
 use crate::util::Scored;
+use std::sync::Arc;
+use std::time::Duration;
 
 pub type DocId = u32;
 
@@ -101,4 +103,50 @@ pub trait Retriever: Send + Sync {
     }
 
     fn name(&self) -> &'static str;
+}
+
+/// Deterministic latency-injecting wrapper: adds a fixed sleep to every
+/// `retrieve_batch` call before delegating, simulating a remote
+/// knowledge base whose round-trip dominates (the regime the paper's
+/// serving claims target). Results are byte-for-byte the inner
+/// retriever's, so every bit-identity pin holds through the wrapper —
+/// which is exactly what lets the sync-vs-async engine sweeps (bench-gate
+/// and tests) measure scheduling, not retrieval arithmetic, without
+/// wall-clock flakiness.
+///
+/// Cache-side scoring (`score_doc`/`score_docs`) is *not* delayed: the
+/// speculation cache is local to the serving process, only KB calls cross
+/// the simulated network.
+pub struct InjectedLatency {
+    inner: Arc<dyn Retriever>,
+    per_call: Duration,
+}
+
+impl InjectedLatency {
+    pub fn new(inner: Arc<dyn Retriever>, per_call: Duration) -> Self {
+        Self { inner, per_call }
+    }
+}
+
+impl Retriever for InjectedLatency {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        std::thread::sleep(self.per_call);
+        self.inner.retrieve_batch(qs, k)
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
+        self.inner.score_doc(q, doc)
+    }
+
+    fn score_docs(&self, q: &SpecQuery, docs: &[DocId]) -> Vec<f32> {
+        self.inner.score_docs(q, docs)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "injected-latency"
+    }
 }

@@ -12,11 +12,82 @@
 //! poisoned task cannot take a worker down with it; the scatter caller
 //! observes the missing result and panics with a diagnostic on its own
 //! thread instead.
+//!
+//! Two submission shapes:
+//!   * [`WorkerPool::scatter`] — fan a task vector out, block for all
+//!     results in order (the sharded retrieval path);
+//!   * [`WorkerPool::submit`] — hand one job off and get a [`JobHandle`]
+//!     back immediately, with worker-side panics converted to `Err`
+//!     instead of a lost result. This is the general-purpose
+//!     single-job surface; the serving engine's `RetrievalExecutor`
+//!     shares its panic-to-error core ([`run_caught`]) but feeds one
+//!     multi-group completion queue of its own rather than per-handle
+//!     channels (it needs completions as they arrive across many calls,
+//!     not a blocking wait per call).
 
 use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Best-effort human-readable message from a panic payload (the payload
+/// of `catch_unwind`): `panic!("...")` yields `&str` or `String`; anything
+/// else gets a generic marker.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run a closure with panics converted to `Err` (the panic-to-error
+/// conversion shared by [`JobHandle`] and the serving engine's
+/// `RetrievalExecutor`): the caller gets a diagnosable failure instead of
+/// an unwinding thread or a silently dropped result channel.
+pub fn run_caught<T>(f: impl FnOnce() -> T) -> anyhow::Result<T> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).map_err(|p| {
+        anyhow::anyhow!("job panicked: {}", panic_message(p.as_ref()))
+    })
+}
+
+/// Handle to one job submitted with [`WorkerPool::submit`]. Await the
+/// result with [`wait`](Self::wait); a job that panicked on its worker
+/// comes back as `Err` (panic-to-error conversion), so callers can treat
+/// a poisoned job like any other failure instead of losing the result.
+pub struct JobHandle<T> {
+    rx: Receiver<anyhow::Result<T>>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job finishes. `Err` if the job panicked or the
+    /// pool shut down before running it.
+    pub fn wait(self) -> anyhow::Result<T> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!(
+                "worker pool shut down before the job completed")),
+        }
+    }
+
+    /// Non-consuming timed wait: `None` while the job is still running.
+    /// A handle delivers exactly one result — after a `Some` has been
+    /// returned the handle is spent, and any further call reports the
+    /// pool-shutdown error (the sender side is gone).
+    pub fn wait_timeout(&self, d: Duration)
+                        -> Option<anyhow::Result<T>> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(Err(anyhow::anyhow!(
+                "worker pool shut down before the job completed"))),
+        }
+    }
+}
 
 struct PoolState {
     jobs: VecDeque<Job>,
@@ -92,8 +163,40 @@ impl WorkerPool {
         GLOBAL.get_or_init(|| Arc::new(WorkerPool::with_default_size()))
     }
 
+    /// The process-wide pool for **whole knowledge-base calls** (the
+    /// serving engine's asynchronous `RetrievalExecutor`). Deliberately
+    /// separate from [`global`](Self::global): a KB call may itself be a
+    /// `ShardedRetriever` scatter that *blocks its worker* until the
+    /// shard jobs (queued on the shard pool) complete. If both job kinds
+    /// shared one pool, enough concurrent KB calls would occupy every
+    /// worker and the shard jobs they are waiting on could never
+    /// schedule — a circular wait. Two pools make the dependency
+    /// one-directional (KB workers wait on shard workers, never the
+    /// reverse), so the deadlock cannot form.
+    pub fn kb_global() -> &'static Arc<WorkerPool> {
+        static KB_GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+        KB_GLOBAL.get_or_init(|| Arc::new(WorkerPool::with_default_size()))
+    }
+
     pub fn workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Enqueue one job and return a [`JobHandle`] for its result. A
+    /// panicking job surfaces as `Err` through the handle (the worker
+    /// itself always survives). Complements [`scatter`](Self::scatter)
+    /// for callers that want completions as they happen rather than a
+    /// blocking all-or-nothing gather.
+    pub fn submit<T, F>(&self, job: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.execute(Box::new(move || {
+            let _ = tx.send(run_caught(job));
+        }));
+        JobHandle { rx }
     }
 
     /// Enqueue one fire-and-forget job.
@@ -204,6 +307,52 @@ mod tests {
         let tasks: Vec<fn() -> i32> = vec![|| 1, || 2];
         let _ = pool.scatter(tasks);
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn submit_returns_result_through_handle() {
+        let pool = WorkerPool::new(2);
+        let h = pool.submit(|| 6 * 7);
+        assert_eq!(h.wait().unwrap(), 42);
+    }
+
+    #[test]
+    fn submit_converts_panic_to_error() {
+        let pool = WorkerPool::new(1);
+        let h: JobHandle<u32> = pool.submit(|| panic!("kb exploded"));
+        let err = h.wait().unwrap_err();
+        assert!(format!("{err}").contains("kb exploded"),
+                "panic payload lost: {err}");
+        // The worker survives the panic and serves the next job.
+        assert_eq!(pool.submit(|| 1u32).wait().unwrap(), 1);
+    }
+
+    #[test]
+    fn wait_timeout_reports_pending_then_done() {
+        let pool = WorkerPool::new(1);
+        let h = pool.submit(|| {
+            std::thread::sleep(Duration::from_millis(30));
+            7u32
+        });
+        // Either still pending (None) or already done; after a generous
+        // wait it must be done. Each handle result is delivered once.
+        let first = h.wait_timeout(Duration::from_millis(1));
+        match first {
+            Some(r) => assert_eq!(r.unwrap(), 7),
+            None => assert_eq!(
+                h.wait_timeout(Duration::from_secs(5)).unwrap().unwrap(), 7),
+        }
+    }
+
+    #[test]
+    fn panic_message_extracts_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("plain")).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "plain");
+        let p = std::panic::catch_unwind(|| panic!("id {}", 3)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "id 3");
+        let p = std::panic::catch_unwind(
+            || std::panic::panic_any(17u64)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Concurrent serving engine: multiplex N in-flight [`ServeTask`]s and
 //! coalesce their pending verification queries into shared
-//! `kb.retrieve_batch` calls (DESIGN.md ADR-003 / ADR-004).
+//! `kb.retrieve_batch` calls (DESIGN.md ADR-003 / ADR-004 / ADR-005).
 //!
 //! The paper's batched verification amortizes retrieval *within* one
 //! request's speculation stride; at serving scale the same batch-first
@@ -12,21 +12,36 @@
 //! else can make progress). Queries are grouped by their top-k so tasks
 //! with different prefetch sizes never share a call.
 //!
+//! **Asynchronous retrieval execution (ADR-005)**: with
+//! `kb_parallel >= 1`, flushed per-k groups run on background workers
+//! through a [`RetrievalExecutor`] (up to `kb_parallel` calls in flight;
+//! excess groups queue FIFO). The engine thread keeps advancing runnable
+//! tasks, draining [`ServeTask::overlap_step`]s for parked tasks across
+//! the whole KB latency, and admitting new requests; completions are
+//! routed back as they arrive through a completion queue the engine parks
+//! on (deadline-aware `recv_timeout`, never a busy-spin) when it has no
+//! other work. `kb_parallel == 0` keeps the synchronous inline flush on
+//! the engine thread. A panicking KB job is converted to an error and
+//! surfaces as a failure on exactly the requests whose queries were in
+//! the poisoned call ([`ServeEngine::take_failed`]); their slots free and
+//! the engine keeps serving everyone else.
+//!
 //! The engine is generic over the task kind ([`ServeTask`], ADR-004): QA
 //! speculation ([`SpecTask`]) and KNN-LM per-token serving
 //! ([`crate::knnlm::KnnTask`] — the paper's highest-leverage workload, one
 //! retrieval per generated token) coalesce through the same scheduler and
 //! flush policy.
 //!
-//! **Why per-request outputs survive coalescing bit-for-bit**: every
-//! retriever scores a query independently of its batchmates (the
-//! bit-identity pinned by the fig6 driver and
+//! **Why per-request outputs survive coalescing and out-of-order
+//! completion bit-for-bit**: every retriever scores a query independently
+//! of its batchmates (the bit-identity pinned by the fig6 driver and
 //! tests/sharded_equivalence.rs), so the sub-slice of a coalesced call
-//! routed back to a task is exactly what the task's own
-//! `retrieve_batch` would have returned. The equivalence suites
+//! routed back to a task is exactly what the task's own `retrieve_batch`
+//! would have returned — no matter which worker ran the call or in what
+//! order completions land. The equivalence suites
 //! (tests/engine_equivalence.rs, tests/knnlm_engine_equivalence.rs) check
 //! engine output against sequential `SpecPipeline::run` /
-//! `KnnLmSpec::run` per request at concurrency 1/8/32.
+//! `KnnLmSpec::run` per request across `kb_parallel` {0, 1, 2, 4}.
 
 use crate::baseline::{BaselineOptions, RalmSeq};
 use crate::config::Config;
@@ -34,11 +49,15 @@ use crate::datagen::{Corpus, Encoder};
 use crate::knnlm::{Datastore, KnnLmBaseline, KnnServeOptions, KnnTask};
 use crate::lm::LanguageModel;
 use crate::metrics::{ReqMetrics, Stopwatch};
+use crate::retriever::pool::run_caught;
 use crate::retriever::{Retriever, SpecQuery};
+use crate::serving::executor::{CallOutcome, PreparedCall,
+                               RetrievalExecutor};
 use crate::serving::router::{Method, Request, ServeBackend};
 use crate::serving::task::{ServeTask, TaskStep};
 use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecTask};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 use std::time::Duration;
 
 #[derive(Debug, Clone)]
@@ -49,12 +68,23 @@ pub struct EngineOptions {
     pub flush_us: u64,
     /// In-flight request cap (admission control); 0 = unlimited.
     pub max_inflight: usize,
+    /// Max concurrently in-flight coalesced KB calls (ADR-005):
+    /// `>= 1` dispatches flushed groups to background workers and keeps
+    /// the engine thread free across the KB latency; `0` keeps the
+    /// synchronous inline flush on the engine thread. Per-request output
+    /// is bit-identical across every setting.
+    pub kb_parallel: usize,
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
         let c = crate::config::EngineConfig::default();
-        Self { max_batch: c.max_batch, flush_us: c.flush_us, max_inflight: 0 }
+        Self {
+            max_batch: c.max_batch,
+            flush_us: c.flush_us,
+            max_inflight: 0,
+            kb_parallel: c.kb_parallel,
+        }
     }
 }
 
@@ -64,6 +94,7 @@ impl EngineOptions {
             max_batch: cfg.engine.max_batch.max(1),
             flush_us: cfg.engine.flush_us,
             max_inflight,
+            kb_parallel: cfg.engine.kb_parallel,
         }
     }
 }
@@ -72,7 +103,7 @@ impl EngineOptions {
 /// [`ReqMetrics`]; `queue_wait` there is attributed by the engine).
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
-    /// Coalesced KB calls actually issued.
+    /// Coalesced KB calls actually completed.
     pub kb_calls: u64,
     /// Queries answered across those calls.
     pub coalesced_queries: u64,
@@ -84,6 +115,25 @@ pub struct EngineStats {
     pub drain_flushes: u64,
     /// Total wall time inside coalesced KB calls.
     pub kb_time: Duration,
+    /// KB calls that failed (worker panic or row-count mismatch); their
+    /// member requests surface through [`ServeEngine::take_failed`].
+    pub kb_failures: u64,
+    /// Coalesced calls handed to the executor / run inline.
+    pub kb_dispatches: u64,
+    /// Sum over dispatches of the in-flight depth *after* dispatch (1 for
+    /// every synchronous inline call) — mean via
+    /// [`mean_inflight_depth`](Self::mean_inflight_depth).
+    pub inflight_depth_sum: u64,
+    /// Peak concurrently in-flight KB calls.
+    pub inflight_depth_max: u64,
+    /// Verification batches parked in the coalescing buffer.
+    pub parked_rounds: u64,
+    /// Overlap speculation steps driven while verifications were pending
+    /// or in flight (the async "+A" work that hides KB latency).
+    pub overlap_steps: u64,
+    /// Times the engine parked on the completion queue (deadline-aware
+    /// wait instead of a busy-spin).
+    pub parks: u64,
 }
 
 impl EngineStats {
@@ -95,14 +145,36 @@ impl EngineStats {
         }
         self.coalesced_queries as f64 / self.kb_calls as f64
     }
+
+    /// Mean in-flight KB-call depth at dispatch time (1.0 = fully
+    /// serialized; approaches `kb_parallel` when the executor stays
+    /// saturated).
+    pub fn mean_inflight_depth(&self) -> f64 {
+        if self.kb_dispatches == 0 {
+            return 0.0;
+        }
+        self.inflight_depth_sum as f64 / self.kb_dispatches as f64
+    }
+
+    /// Overlap utilization: mean overlap speculation steps taken per
+    /// parked verification round (0.0 = verification latency never
+    /// hidden behind task work).
+    pub fn overlap_per_round(&self) -> f64 {
+        if self.parked_rounds == 0 {
+            return 0.0;
+        }
+        self.overlap_steps as f64 / self.parked_rounds as f64
+    }
 }
 
-/// A task slot. Slots are recycled (never removed) so the coalescing
-/// buffer can hold stable slot indices across admissions.
+/// A task slot. Slots are recycled (never removed) so the slot indices
+/// held by the coalescing buffer and by in-flight groups stay stable
+/// across admissions.
 struct Slot<T> {
     id: u64,
     task: Option<T>,
-    /// True while the task's `NeedsVerify` sits in the coalescing buffer.
+    /// True while the task's `NeedsVerify` sits in the coalescing buffer
+    /// or rides an in-flight KB call.
     awaiting: bool,
 }
 
@@ -114,28 +186,50 @@ struct PendingVerify {
     enqueued: Stopwatch,
 }
 
-pub struct ServeEngine<'a, T: ServeTask> {
-    kb: &'a dyn Retriever,
+/// One member batch of a dispatched (or inline-running) coalesced call.
+struct GroupMember {
+    slot: usize,
+    n_queries: usize,
+}
+
+pub struct ServeEngine<T: ServeTask> {
+    kb: Arc<dyn Retriever>,
     opts: EngineOptions,
     /// Admission queue; tasks are constructed at submission so each
     /// request's latency clock covers its admission-queue wait too.
     waiting: VecDeque<(u64, T)>,
     slots: Vec<Slot<T>>,
     pending: Vec<PendingVerify>,
+    /// Asynchronous call executor (`kb_parallel >= 1`); `None` keeps the
+    /// synchronous inline flush.
+    exec: Option<RetrievalExecutor>,
+    /// In-flight (or inline-running) groups keyed by correlation id.
+    dispatched: HashMap<u64, Vec<GroupMember>>,
+    next_group: u64,
     stats: EngineStats,
     finished: Vec<(u64, ReqMetrics)>,
+    failed: Vec<(u64, String)>,
 }
 
-impl<'a, T: ServeTask> ServeEngine<'a, T> {
-    pub fn new(kb: &'a dyn Retriever, opts: EngineOptions) -> Self {
+impl<T: ServeTask> ServeEngine<T> {
+    pub fn new(kb: Arc<dyn Retriever>, opts: EngineOptions) -> Self {
+        let exec = if opts.kb_parallel >= 1 {
+            Some(RetrievalExecutor::new(kb.clone(), opts.kb_parallel))
+        } else {
+            None
+        };
         Self {
             kb,
             opts,
             waiting: VecDeque::new(),
             slots: Vec::new(),
             pending: Vec::new(),
+            exec,
+            dispatched: HashMap::new(),
+            next_group: 0,
             stats: EngineStats::default(),
             finished: Vec::new(),
+            failed: Vec::new(),
         }
     }
 
@@ -161,6 +255,15 @@ impl<'a, T: ServeTask> ServeEngine<'a, T> {
         std::mem::take(&mut self.finished)
     }
 
+    /// Drain the requests whose coalesced KB call failed (worker panic or
+    /// malformed result). Their slots were freed and the engine kept
+    /// serving everyone else; callers turn these into per-request error
+    /// responses.
+    pub fn take_failed(&mut self) -> Vec<(u64, String)> {
+        self.failed.sort_by_key(|(id, _)| *id);
+        std::mem::take(&mut self.failed)
+    }
+
     fn inflight(&self) -> usize {
         self.slots.iter().filter(|s| s.task.is_some()).count()
     }
@@ -177,7 +280,7 @@ impl<'a, T: ServeTask> ServeEngine<'a, T> {
             };
             // Recycle a free slot (its pending entries, if any existed,
             // were consumed before the slot was freed) to keep the slot
-            // indices stored in `pending` stable.
+            // indices stored in `pending`/`dispatched` stable.
             match self.slots.iter().position(|s| s.task.is_none()) {
                 Some(i) => {
                     self.slots[i] =
@@ -192,22 +295,29 @@ impl<'a, T: ServeTask> ServeEngine<'a, T> {
     }
 
     /// Drive every submitted request to completion, coalescing
-    /// verification batches across them. Returns `(id, metrics)` sorted by
-    /// request id; per-request `tokens_out` is bit-identical to driving
-    /// the same task alone (`SpecPipeline::run` / `KnnLmSpec::run`).
+    /// verification batches across them and (with `kb_parallel >= 1`)
+    /// overlapping task work with in-flight KB calls. Returns
+    /// `(id, metrics)` sorted by request id; per-request `tokens_out` is
+    /// bit-identical to driving the same task alone (`SpecPipeline::run` /
+    /// `KnnLmSpec::run`) regardless of `kb_parallel` or completion order.
+    /// Requests lost to a failing KB call are reported through
+    /// [`take_failed`](Self::take_failed), not as a `run` error.
     #[allow(clippy::needless_range_loop)] // indices outlive `slots` borrows
     pub fn run(&mut self) -> anyhow::Result<Vec<(u64, ReqMetrics)>> {
         loop {
             self.admit();
+            // Route completions that have already landed so their tasks
+            // advance this very iteration.
+            let mut progressed = self.route_ready()?;
             if self.waiting.is_empty()
                 && self.slots.iter().all(|s| s.task.is_none())
             {
                 break;
             }
 
-            // One speculation step (or one parked batch) per runnable
-            // task: round-robin keeps N tasks' steps interleaved so their
-            // verification points line up inside the coalescing window.
+            // One speculation step per runnable task: round-robin keeps N
+            // tasks' steps interleaved so their verification points line
+            // up inside the coalescing window.
             let mut runnable = 0usize;
             for i in 0..self.slots.len() {
                 if self.slots[i].awaiting {
@@ -217,14 +327,9 @@ impl<'a, T: ServeTask> ServeEngine<'a, T> {
                     let Some(task) = self.slots[i].task.as_mut() else {
                         continue;
                     };
-                    let step = task.advance()?;
-                    if matches!(step, TaskStep::NeedsVerify { .. }) {
-                        // Start the async overlap step (if the task's
-                        // options ask for one) before parking the batch.
-                        task.overlap_step()?;
-                    }
-                    step
+                    task.advance()?
                 };
+                progressed = true;
                 match step {
                     TaskStep::Continue => runnable += 1,
                     TaskStep::Done => {
@@ -235,6 +340,7 @@ impl<'a, T: ServeTask> ServeEngine<'a, T> {
                     }
                     TaskStep::NeedsVerify { queries, k } => {
                         self.slots[i].awaiting = true;
+                        self.stats.parked_rounds += 1;
                         self.pending.push(PendingVerify {
                             slot: i,
                             queries,
@@ -245,83 +351,255 @@ impl<'a, T: ServeTask> ServeEngine<'a, T> {
                 }
             }
 
-            // Size-or-deadline flush policy (drain when nothing else can
-            // move: every in-flight task is parked and no admission is
-            // possible, so waiting any longer cannot grow the batch).
+            // Overlap drive: offer every parked task one overlap step per
+            // engine iteration, for as long as its verification is pending
+            // or in flight — the multi-step generalization of "one extra
+            // step before parking". Each task bounds its own step count
+            // deterministically (state-based, never time-based), so
+            // schedules stay reproducible.
+            let mut overlapped = false;
+            for i in 0..self.slots.len() {
+                if !self.slots[i].awaiting {
+                    continue;
+                }
+                if let Some(task) = self.slots[i].task.as_mut() {
+                    if task.overlap_step()? {
+                        self.stats.overlap_steps += 1;
+                        overlapped = true;
+                        progressed = true;
+                    }
+                }
+            }
+
+            // Size-or-deadline flush policy, plus a drain flush when the
+            // runnable set is exhausted. The drain condition differs by
+            // execution mode. Async: dispatch is free for the engine
+            // thread (the call runs on a worker while overlap steps and
+            // other calls continue), so flush as soon as no task is
+            // runnable — but only while a `kb_parallel` slot is free; a
+            // saturated executor would just freeze the batch's
+            // composition in its backlog, so the buffer is held instead
+            // (parking below, bounded by the flush deadline) where
+            // in-flight completions can still unpark tasks that grow it.
+            // Sync: the flush blocks the engine thread, so parked tasks
+            // get to finish their overlap budgets first (that work could
+            // never run during the call).
             if !self.pending.is_empty() {
                 let pending_q: usize =
                     self.pending.iter().map(|p| p.queries.len()).sum();
-                let admissible = !self.waiting.is_empty()
-                    && (self.opts.max_inflight == 0
-                        || self.inflight() < self.opts.max_inflight);
+                let drain = match &self.exec {
+                    Some(exec) => runnable == 0 && exec.has_free_slot(),
+                    None => runnable == 0 && !overlapped,
+                };
                 if pending_q >= self.opts.max_batch {
                     self.stats.size_flushes += 1;
                     self.flush()?;
-                } else if runnable == 0 && !admissible {
-                    self.stats.drain_flushes += 1;
-                    self.flush()?;
+                    progressed = true;
                 } else if self.pending[0].enqueued.elapsed()
                     >= Duration::from_micros(self.opts.flush_us)
                 {
                     self.stats.deadline_flushes += 1;
                     self.flush()?;
+                    progressed = true;
+                } else if drain {
+                    self.stats.drain_flushes += 1;
+                    self.flush()?;
+                    progressed = true;
                 }
             }
+
+            if !progressed {
+                // Nothing runnable, no overlap work left, nothing flushed
+                // or routed: the only possible events are KB completions.
+                // Park on the completion queue (no busy-spin), bounded by
+                // the flush deadline when a batch is still coalescing so
+                // the deadline flush fires on time.
+                let outstanding = self
+                    .exec
+                    .as_ref()
+                    .map(|e| e.outstanding())
+                    .unwrap_or(0);
+                anyhow::ensure!(outstanding > 0,
+                                "engine stalled: tasks parked with no \
+                                 in-flight KB call and nothing pending");
+                let timeout = match self.pending.first() {
+                    Some(p) => Duration::from_micros(self.opts.flush_us)
+                        .saturating_sub(p.enqueued.elapsed())
+                        .max(Duration::from_micros(1)),
+                    None => Duration::from_millis(200),
+                };
+                self.stats.parks += 1;
+                let done = self
+                    .exec
+                    .as_mut()
+                    .and_then(|e| e.wait_complete(timeout));
+                if let Some(done) = done {
+                    self.route(done)?;
+                }
+                // On timeout the next iteration's deadline check flushes.
+            }
+        }
+        if let Some(exec) = &self.exec {
+            self.stats.kb_dispatches = exec.dispatches;
+            self.stats.inflight_depth_sum = exec.depth_sum;
+            self.stats.inflight_depth_max = exec.depth_max;
         }
         Ok(self.take_finished())
     }
 
-    /// Issue the coalesced KB call(s) for everything in the buffer and
-    /// route each sub-slice of results back to its owning task.
+    /// Drain completions without blocking.
+    fn route_ready(&mut self) -> anyhow::Result<bool> {
+        let mut any = false;
+        loop {
+            let done = match self.exec.as_mut() {
+                Some(e) => e.try_complete(),
+                None => None,
+            };
+            let Some(done) = done else { break };
+            self.route(done)?;
+            any = true;
+        }
+        Ok(any)
+    }
+
+    /// Issue the coalesced KB call(s) for everything in the buffer:
+    /// grouped by top-k (tasks with different prefetch sizes cannot share
+    /// one retrieve_batch call), dispatched to the executor
+    /// (`kb_parallel >= 1`) or run inline. Within a group, submission
+    /// order is preserved; per-query results are independent of
+    /// batchmates, so sub-slice routing is bit-identical to per-task
+    /// retrieval.
     fn flush(&mut self) -> anyhow::Result<()> {
         let batch = std::mem::take(&mut self.pending);
         if batch.is_empty() {
             return Ok(());
         }
-        // Group by top-k: tasks with different prefetch sizes cannot share
-        // one retrieve_batch call. Within a group, submission order is
-        // preserved; per-query results are independent of batchmates, so
-        // sub-slice routing is bit-identical to per-task retrieval.
         let mut ks: Vec<usize> = batch.iter().map(|p| p.k).collect();
         ks.sort_unstable();
         ks.dedup();
         for k in ks {
             let idxs: Vec<usize> =
                 (0..batch.len()).filter(|&i| batch[i].k == k).collect();
-            let coalesced: Vec<SpecQuery> = idxs
+            let queries: Vec<SpecQuery> = idxs
                 .iter()
                 .flat_map(|&i| batch[i].queries.iter().cloned())
                 .collect();
-            // Coalescing delay, snapshotted immediately before *this*
-            // group's KB call: with mixed top-k in one flush, a later
-            // group's wait includes the earlier groups' KB time (its
-            // queries really were still unanswered while those ran).
-            let group_waits: Vec<Duration> =
-                idxs.iter().map(|&i| batch[i].enqueued.elapsed()).collect();
-            let sw = Stopwatch::start();
-            let mut results = self.kb.retrieve_batch(&coalesced, k);
-            let kb_time = sw.elapsed();
-            anyhow::ensure!(results.len() == coalesced.len(),
-                            "retriever returned {} rows for {} queries",
-                            results.len(), coalesced.len());
-            self.stats.kb_calls += 1;
-            self.stats.coalesced_queries += coalesced.len() as u64;
-            self.stats.max_coalesced =
-                self.stats.max_coalesced.max(coalesced.len() as u64);
-            self.stats.kb_time += kb_time;
-            for (gi, &i) in idxs.iter().enumerate() {
-                let p = &batch[i];
-                let rest = results.split_off(p.queries.len());
-                let rows = std::mem::replace(&mut results, rest);
-                let slot = &mut self.slots[p.slot];
-                let task = slot.task.as_mut()
-                    .expect("awaiting slot holds its task");
-                task.metrics_mut().queue_wait += group_waits[gi];
-                task.provide(rows, kb_time)?;
-                slot.awaiting = false;
+            let members: Vec<GroupMember> = idxs
+                .iter()
+                .map(|&i| GroupMember {
+                    slot: batch[i].slot,
+                    n_queries: batch[i].queries.len(),
+                })
+                .collect();
+            // Per-member coalescing delay is snapshotted immediately
+            // before the group's KB call starts — on the worker for
+            // dispatched groups (so executor-backlog time counts too),
+            // right here for inline ones.
+            let enqueued: Vec<Stopwatch> =
+                idxs.iter().map(|&i| batch[i].enqueued).collect();
+            let group = self.next_group;
+            self.next_group += 1;
+            self.dispatched.insert(group, members);
+            match self.exec.as_mut() {
+                Some(exec) => {
+                    exec.submit(PreparedCall { group, queries, k, enqueued });
+                }
+                None => {
+                    // Synchronous inline flush (kb_parallel == 0): the
+                    // engine thread blocks for the call, as before
+                    // ADR-005. Panics still convert to a per-group error.
+                    self.stats.kb_dispatches += 1;
+                    self.stats.inflight_depth_sum += 1;
+                    self.stats.inflight_depth_max =
+                        self.stats.inflight_depth_max.max(1);
+                    let member_waits: Vec<Duration> =
+                        enqueued.iter().map(|s| s.elapsed()).collect();
+                    let kb = &self.kb;
+                    let sw = Stopwatch::start();
+                    let result =
+                        run_caught(|| kb.retrieve_batch(&queries, k));
+                    let outcome = CallOutcome {
+                        group,
+                        result,
+                        kb_time: sw.elapsed(),
+                        member_waits,
+                    };
+                    self.route(outcome)?;
+                }
             }
         }
         Ok(())
+    }
+
+    /// Route one completed coalesced call: hand each member task exactly
+    /// its own sub-slice of rows (bit-identical to a per-task call), or —
+    /// on a failed call — convert every member request into a reported
+    /// failure and free its slot so the engine keeps serving the rest.
+    fn route(&mut self, done: CallOutcome) -> anyhow::Result<()> {
+        let members = self
+            .dispatched
+            .remove(&done.group)
+            .expect("completion for unknown group");
+        let total: usize = members.iter().map(|m| m.n_queries).sum();
+        let mut results = match done.result {
+            Ok(results) => {
+                if results.len() != total {
+                    self.fail_group(
+                        &members,
+                        &format!("retriever returned {} rows for {} \
+                                  queries", results.len(), total));
+                    return Ok(());
+                }
+                results
+            }
+            Err(e) => {
+                self.fail_group(&members, &format!("{e:#}"));
+                return Ok(());
+            }
+        };
+        self.stats.kb_calls += 1;
+        self.stats.coalesced_queries += total as u64;
+        self.stats.max_coalesced =
+            self.stats.max_coalesced.max(total as u64);
+        self.stats.kb_time += done.kb_time;
+        for (gi, gm) in members.iter().enumerate() {
+            let rest = results.split_off(gm.n_queries);
+            let rows = std::mem::replace(&mut results, rest);
+            let slot = &mut self.slots[gm.slot];
+            let task = slot.task.as_mut()
+                .expect("awaiting slot holds its task");
+            // Finish the task's overlap budget before handing it results.
+            // The budget is state-based; draining it here makes the
+            // number of overlap steps per verification round independent
+            // of KB completion timing — a fast completion must not cut
+            // the schedule short, or per-request schedule metrics
+            // (spec_steps / strides) would become wall-clock noise. This
+            // mirrors the sequential async driver, which drains to
+            // exhaustion before blocking on the verifier thread.
+            while task.overlap_step()? {
+                self.stats.overlap_steps += 1;
+            }
+            task.metrics_mut().queue_wait += done.member_waits[gi];
+            task.provide(rows, done.kb_time)?;
+            slot.awaiting = false;
+        }
+        Ok(())
+    }
+
+    /// A KB call failed (worker panic or malformed result): every member
+    /// request becomes a reported failure, its slot frees for the next
+    /// admission, and the engine keeps going.
+    fn fail_group(&mut self, members: &[GroupMember], msg: &str) {
+        self.stats.kb_failures += 1;
+        for gm in members {
+            let slot = &mut self.slots[gm.slot];
+            slot.task = None;
+            slot.awaiting = false;
+            self.failed.push((
+                slot.id,
+                format!("knowledge-base call failed: {msg}"),
+            ));
+        }
     }
 }
 
@@ -375,7 +653,7 @@ impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
                    -> Vec<anyhow::Result<ReqMetrics>> {
         let queries = self.query_builder();
         let mut engine: ServeEngine<SpecTask<L>> =
-            ServeEngine::new(self.kb.as_ref(), self.engine_opts.clone());
+            ServeEngine::new(self.kb.clone(), self.engine_opts.clone());
         let mut results: Vec<Option<anyhow::Result<ReqMetrics>>> =
             reqs.iter().map(|_| None).collect();
         for (i, req) in reqs.iter().enumerate() {
@@ -419,14 +697,17 @@ impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
     }
 }
 
-/// Run a filled engine and slot its per-request outcomes into `results`.
-/// On failure, requests that completed before the failing one are
-/// salvaged; only the genuinely unresolved ones get the error
-/// (anyhow::Error is not Clone, so it is formatted once).
+/// Run a filled engine and slot its per-request outcomes into `results`:
+/// completions as `Ok`, KB-call failures ([`ServeEngine::take_failed`])
+/// as per-request errors. On a run-level failure, requests that completed
+/// before the failing one are salvaged; only the genuinely unresolved
+/// ones get the run error (anyhow::Error is not Clone, so it is formatted
+/// once).
 fn resolve_engine_run<T: ServeTask>(
     engine: &mut ServeEngine<T>,
     results: &mut [Option<anyhow::Result<ReqMetrics>>]) {
-    match engine.run() {
+    let run = engine.run();
+    match run {
         Ok(done) => {
             for (i, m) in done {
                 results[i as usize] = Some(Ok(m));
@@ -436,6 +717,9 @@ fn resolve_engine_run<T: ServeTask>(
             for (i, m) in engine.take_finished() {
                 results[i as usize] = Some(Ok(m));
             }
+            for (i, msg) in engine.take_failed() {
+                results[i as usize] = Some(Err(anyhow::anyhow!("{msg}")));
+            }
             let msg = format!("{e:#}");
             for r in results.iter_mut() {
                 if r.is_none() {
@@ -443,7 +727,11 @@ fn resolve_engine_run<T: ServeTask>(
                         "engine run failed: {msg}")));
                 }
             }
+            return;
         }
+    }
+    for (i, msg) in engine.take_failed() {
+        results[i as usize] = Some(Err(anyhow::anyhow!("{msg}")));
     }
 }
 
@@ -477,7 +765,7 @@ impl<L: LanguageModel> ServeBackend for KnnEngineBackend<L> {
     fn serve_batch(&mut self, reqs: &[Request])
                    -> Vec<anyhow::Result<ReqMetrics>> {
         let mut engine: ServeEngine<KnnTask<L>> =
-            ServeEngine::new(self.kb.as_ref(), self.engine_opts.clone());
+            ServeEngine::new(self.kb.clone(), self.engine_opts.clone());
         let mut results: Vec<Option<anyhow::Result<ReqMetrics>>> =
             reqs.iter().map(|_| None).collect();
         for (i, req) in reqs.iter().enumerate() {

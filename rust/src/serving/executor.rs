@@ -1,0 +1,182 @@
+//! Asynchronous execution of coalesced knowledge-base calls (DESIGN.md
+//! ADR-005): the serving engine hands each flushed per-k query group to a
+//! [`RetrievalExecutor`], which runs it on a background
+//! [`WorkerPool`](crate::retriever::WorkerPool) worker and delivers a
+//! [`CallOutcome`] through a completion queue — so the engine thread keeps
+//! advancing runnable tasks, draining overlap steps, and admitting new
+//! requests across the *whole* KB latency instead of stalling inside
+//! `retrieve_batch`.
+//!
+//! The executor enforces a configurable in-flight cap (`kb_parallel`):
+//! groups beyond the cap wait in a FIFO backlog and dispatch as
+//! completions free slots, bounding both worker-pool pressure and the
+//! memory pinned by in-flight query batches. Worker panics are converted
+//! to `Err` outcomes ([`crate::retriever::pool::run_caught`]) so a
+//! poisoned KB call surfaces as an error on the owning requests instead
+//! of wedging the engine.
+//!
+//! Completion order is whatever the workers produce — the engine routes
+//! results back per group, and per-request outputs are invariant to that
+//! order because every retriever scores queries independently of
+//! batchmates (the bit-identity the equivalence suites pin).
+
+use crate::metrics::Stopwatch;
+use crate::retriever::pool::run_caught;
+use crate::retriever::{Retriever, SpecQuery, WorkerPool};
+use crate::util::Scored;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One coalesced per-k call prepared by the engine's flush.
+pub(crate) struct PreparedCall {
+    /// Engine-side correlation id (maps back to the group's member slots).
+    pub group: u64,
+    pub queries: Vec<SpecQuery>,
+    pub k: usize,
+    /// One enqueue stopwatch per member batch, in member order — snapshotted
+    /// immediately before the KB call starts (on the worker), so each
+    /// member's `queue_wait` covers its full coalescing-buffer + backlog
+    /// time, exactly as the synchronous path measured it.
+    pub enqueued: Vec<Stopwatch>,
+}
+
+/// Completion of one coalesced call, delivered via the completion queue.
+pub(crate) struct CallOutcome {
+    pub group: u64,
+    /// The per-query result rows, or the converted panic/failure of the
+    /// KB job.
+    pub result: anyhow::Result<Vec<Vec<Scored>>>,
+    /// Wall time of the KB call itself (attributed to every member's R
+    /// component — each really did wait for it).
+    pub kb_time: Duration,
+    /// Per-member coalescing wait, snapshotted at call start.
+    pub member_waits: Vec<Duration>,
+}
+
+/// Runs prepared calls on background workers under an in-flight cap and
+/// feeds a single completion queue the engine can park on.
+pub(crate) struct RetrievalExecutor {
+    kb: Arc<dyn Retriever>,
+    pool: Arc<WorkerPool>,
+    /// Max concurrently in-flight KB calls (>= 1; the engine handles the
+    /// synchronous `kb_parallel == 0` mode itself and never constructs an
+    /// executor for it).
+    cap: usize,
+    inflight: usize,
+    backlog: VecDeque<PreparedCall>,
+    tx: Sender<CallOutcome>,
+    rx: Receiver<CallOutcome>,
+    // --- depth telemetry (reported through EngineStats) ---
+    pub dispatches: u64,
+    pub depth_sum: u64,
+    pub depth_max: u64,
+}
+
+impl RetrievalExecutor {
+    pub fn new(kb: Arc<dyn Retriever>, cap: usize) -> Self {
+        let (tx, rx) = channel();
+        Self {
+            kb,
+            // The dedicated KB-call pool, NOT the shard pool: a sharded
+            // retriever's retrieve_batch blocks its worker on scatter
+            // jobs queued to the shard pool, so sharing one pool would
+            // let concurrent KB calls starve the very jobs they wait on
+            // (see WorkerPool::kb_global).
+            pool: WorkerPool::kb_global().clone(),
+            cap: cap.max(1),
+            inflight: 0,
+            backlog: VecDeque::new(),
+            tx,
+            rx,
+            dispatches: 0,
+            depth_sum: 0,
+            depth_max: 0,
+        }
+    }
+
+    /// Calls not yet completed (in flight on workers + waiting in the
+    /// backlog). The engine may park awaiting completions iff this is
+    /// non-zero.
+    pub fn outstanding(&self) -> usize {
+        self.inflight + self.backlog.len()
+    }
+
+    /// Whether a submitted call would start immediately (an in-flight
+    /// slot is free). `pump` keeps the backlog empty while below the
+    /// cap, so a non-empty backlog implies saturation. The engine uses
+    /// this to hold its coalescing buffer instead of freezing a batch's
+    /// composition in the backlog of a saturated executor.
+    pub fn has_free_slot(&self) -> bool {
+        self.inflight < self.cap
+    }
+
+    /// Accept one prepared call: dispatch immediately if a slot is free,
+    /// otherwise queue it (FIFO) until a completion frees one.
+    pub fn submit(&mut self, call: PreparedCall) {
+        self.backlog.push_back(call);
+        self.pump();
+    }
+
+    fn pump(&mut self) {
+        while self.inflight < self.cap {
+            let Some(call) = self.backlog.pop_front() else { break };
+            self.dispatch(call);
+        }
+    }
+
+    fn dispatch(&mut self, call: PreparedCall) {
+        self.inflight += 1;
+        self.dispatches += 1;
+        self.depth_sum += self.inflight as u64;
+        self.depth_max = self.depth_max.max(self.inflight as u64);
+        let kb = self.kb.clone();
+        let tx = self.tx.clone();
+        self.pool.execute(Box::new(move || {
+            let member_waits =
+                call.enqueued.iter().map(|s| s.elapsed()).collect();
+            let sw = Stopwatch::start();
+            let result = run_caught(|| kb.retrieve_batch(&call.queries,
+                                                         call.k));
+            // The engine owns the other end; if it dropped (run aborted)
+            // the completion is moot.
+            let _ = tx.send(CallOutcome {
+                group: call.group,
+                result,
+                kb_time: sw.elapsed(),
+                member_waits,
+            });
+        }));
+    }
+
+    /// Non-blocking completion poll.
+    pub fn try_complete(&mut self) -> Option<CallOutcome> {
+        match self.rx.try_recv() {
+            Ok(done) => {
+                self.inflight -= 1;
+                self.pump();
+                Some(done)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Deadline-aware parking: block for the next completion up to
+    /// `timeout` (the engine bounds this by its flush deadline so a parked
+    /// engine still honours `flush_us`). `None` on timeout.
+    pub fn wait_complete(&mut self, timeout: Duration)
+                         -> Option<CallOutcome> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(done) => {
+                self.inflight -= 1;
+                self.pump();
+                Some(done)
+            }
+            Err(RecvTimeoutError::Timeout) => None,
+            // All senders live in self (tx) and dispatched jobs; tx is
+            // never dropped while self exists, so this arm is unreachable.
+            Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+}

@@ -17,12 +17,16 @@
 //! requests through the same engine when it is an
 //! [`engine::KnnEngineBackend`]: the worker drains up to
 //! `engine.max_batch` queued jobs at once and the engine coalesces their
-//! verification queries into shared `retrieve_batch` calls. The engine is
-//! generic over the [`task::ServeTask`] contract (DESIGN.md ADR-004), so
-//! any new workload expressed as a resumable task is engine-servable
-//! without touching this layer.
+//! verification queries into shared `retrieve_batch` calls. With
+//! `engine.kb_parallel >= 1` those calls execute asynchronously on
+//! background workers ([`executor`], DESIGN.md ADR-005) while the engine
+//! thread keeps scheduling; results are bit-identical either way. The
+//! engine is generic over the [`task::ServeTask`] contract (DESIGN.md
+//! ADR-004), so any new workload expressed as a resumable task is
+//! engine-servable without touching this layer.
 
 pub mod engine;
+pub(crate) mod executor;
 pub mod router;
 pub mod task;
 

@@ -56,9 +56,20 @@ pub trait ServeTask {
     fn advance(&mut self) -> anyhow::Result<TaskStep>;
 
     /// Optional work overlapped with an in-flight verification (the
-    /// async "+A" extra speculation step). Called by drivers between
-    /// receiving `NeedsVerify` and `provide`; returns whether a step was
-    /// taken. Default: no overlap capability.
+    /// async "+A" speculation that hides KB latency). Drivers may call
+    /// this **repeatedly** between receiving `NeedsVerify` and calling
+    /// `provide` — once per scheduling round for as long as the
+    /// verification is outstanding; each call takes at most one step and
+    /// returns whether one was taken (`false` = drained for this round).
+    ///
+    /// **Determinism obligation**: how many steps a task accepts per
+    /// round must be a function of its own state only (e.g. "up to one
+    /// full next stride"), never of elapsed time or of how often the
+    /// driver happened to call — so a driver that drains to exhaustion
+    /// reproduces the same schedule whether the KB call took a
+    /// microsecond or a second. Combined with the equivalence obligation
+    /// above, that keeps outputs bit-identical across drivers and KB
+    /// latencies. Default: no overlap capability.
     fn overlap_step(&mut self) -> anyhow::Result<bool> {
         Ok(false)
     }

@@ -128,10 +128,10 @@ enum Phase {
 /// machine). Drive it with [`advance`](SpecTask::advance) until `Done`,
 /// answering every `NeedsVerify` with [`provide`](SpecTask::provide).
 /// In async-verification mode, call
-/// [`overlap_step`](SpecTask::overlap_step) while the batch is in flight
-/// to take the one extra speculation step that hides verification latency
-/// (Fig 3); the step is optional and never changes the output, only the
-/// schedule.
+/// [`overlap_step`](SpecTask::overlap_step) repeatedly while the batch is
+/// in flight to take the extra speculation steps (up to one full next
+/// stride) that hide verification latency (Fig 3); the steps are
+/// optional and never change the output, only the schedule.
 pub struct SpecTask<'a, L: LanguageModel> {
     lm: &'a L,
     /// Used for cache-lookup scoring only (`score_docs`); verification
@@ -149,9 +149,12 @@ pub struct SpecTask<'a, L: LanguageModel> {
     state: Option<GenState<L::State>>,
     /// Steps speculated but not yet verified.
     pending: Vec<Pending<L::State>>,
-    /// The async "extra step" overlapped with an in-flight verification;
-    /// rolls into the next round's pending list when the round verifies.
-    extra: Option<Pending<L::State>>,
+    /// Async "extra steps" overlapped with an in-flight verification —
+    /// up to one full next-round stride per round (a deterministic,
+    /// state-based budget; see [`overlap_step`](Self::overlap_step)).
+    /// They roll into the next round's pending list when the round
+    /// verifies clean, and are discarded with the rollback otherwise.
+    extra: Vec<Pending<L::State>>,
 }
 
 /// One speculation step: query → cache lookup → (maybe re-prefill) →
@@ -207,7 +210,7 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
             scheduler,
             state: None,
             pending: Vec::new(),
-            extra: None,
+            extra: Vec::new(),
         }
     }
 
@@ -270,15 +273,23 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
         }
     }
 
-    /// In async-verification mode, take the one extra speculation step
-    /// that overlaps the in-flight verification (Fig 3). Call between
-    /// receiving `NeedsVerify` and calling [`provide`](Self::provide);
-    /// a no-op (returns false) in sync mode, during the prime, when the
-    /// request is done, or when the step was already taken this round.
+    /// In async-verification mode, take one extra speculation step that
+    /// overlaps the in-flight verification (Fig 3). Drivers call this
+    /// repeatedly between receiving `NeedsVerify` and calling
+    /// [`provide`](Self::provide) — the engine once per scheduling round
+    /// across the whole KB latency, the sequential async driver in a
+    /// drain loop — and the task accepts up to one full next-round stride
+    /// of extra steps per round. The budget is a function of task state
+    /// only (the scheduler's current stride — stable during
+    /// `AwaitVerify`, since `observe` runs in `provide`), never of
+    /// elapsed time, so the schedule is reproducible no matter how slow
+    /// the verification was. A no-op (returns false) in sync mode, during
+    /// the prime, when the request is done, or when the budget for this
+    /// round is spent.
     pub fn overlap_step(&mut self) -> anyhow::Result<bool> {
         if !self.opts.async_verify
             || !matches!(self.phase, Phase::AwaitVerify)
-            || self.extra.is_some()
+            || self.extra.len() >= self.scheduler.stride().max(1)
         {
             return Ok(false);
         }
@@ -289,7 +300,8 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
         let p = spec_step(self.lm, self.kb, self.corpus, &self.queries,
                           &self.opts, state, &mut self.cache, &mut self.m,
                           &self.total)?;
-        self.extra = Some(p);
+        self.m.overlap_steps += 1;
+        self.extra.push(p);
         Ok(true)
     }
 
@@ -366,19 +378,17 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
 
                 match mismatch {
                     None => {
-                        // All verified; the async extra step (if any) rolls
-                        // into the next round's pending list.
+                        // All verified; the async extra steps (if any)
+                        // roll into the next round's pending list.
                         self.pending.clear();
-                        if let Some(e) = self.extra.take() {
-                            self.pending.push(e);
-                        }
+                        self.pending.append(&mut self.extra);
                     }
                     Some(i) => {
                         // Roll back to the mis-speculated step and redo it
                         // with the ground-truth document (Alg. 1 l. 13-16).
-                        // Tokens from the async extra step (speculated
+                        // Tokens from the async extra steps (speculated
                         // after the snapshot) are discarded with the rest.
-                        self.extra = None;
+                        self.extra.clear();
                         self.m.rollbacks += 1;
                         let state = self.state.as_mut()
                             .expect("generation state exists after prime");
@@ -488,8 +498,9 @@ impl<'a, L: LanguageModel> SpecPipeline<'a, L> {
 
     /// Serve one request to completion. Returns metrics (which include
     /// the tokens). Sync mode answers each `NeedsVerify` inline; async
-    /// mode answers on a verifier thread and overlaps one extra
-    /// speculation step with the in-flight batch (Fig 3).
+    /// mode answers on a verifier thread and overlaps extra speculation
+    /// steps (up to one full next stride) with the in-flight batch
+    /// (Fig 3).
     pub fn run(&self, question: &[u32]) -> anyhow::Result<ReqMetrics> {
         let mut task = self.task(question);
         if self.opts.async_verify {
@@ -521,10 +532,14 @@ impl<'a, L: LanguageModel> SpecPipeline<'a, L> {
                                 matches!(task.phase, Phase::AwaitPrime);
                             job_tx.send((queries, k))
                                 .expect("verifier thread died");
-                            // Overlap: one extra speculation step while
-                            // the batch retrieval runs on the verifier
-                            // thread (no-op during the prime / sync mode).
-                            task.overlap_step()?;
+                            // Overlap: drain the task's extra-step budget
+                            // (up to one full next stride) while the batch
+                            // retrieval runs on the verifier thread (no-op
+                            // during the prime / sync mode). Draining to
+                            // exhaustion — not "until the result arrives"
+                            // — keeps the schedule deterministic and
+                            // identical to the engine's multi-step drive.
+                            while task.overlap_step()? {}
                             let wait = Stopwatch::start();
                             let (truths, b) = res_rx.recv()
                                 .expect("verifier thread died");

@@ -1,21 +1,32 @@
-//! THE serving-layer correctness property (DESIGN.md ADR-003): the
-//! concurrent engine may interleave N requests' speculation steps and
+//! THE serving-layer correctness property (DESIGN.md ADR-003/ADR-005):
+//! the concurrent engine may interleave N requests' speculation steps,
 //! coalesce their verification queries into shared `retrieve_batch`
-//! calls, but every request's token output must stay **bit-identical** to
-//! a sequential `SpecPipeline::run` of that request alone — across mixed
-//! stride policies / prefetch sizes / OS³ / async verification, sharded
-//! and unsharded knowledge bases, and concurrency 1 / 8 / 32.
+//! calls, and — with `kb_parallel >= 1` — run those calls asynchronously
+//! on background workers with out-of-order completion, but every
+//! request's token output must stay **bit-identical** to a sequential
+//! `SpecPipeline::run` of that request alone — across mixed stride
+//! policies / prefetch sizes / OS³ / async verification, sharded and
+//! unsharded knowledge bases, concurrency 1 / 8 / 32, and
+//! `kb_parallel` {0 (sync inline), 1, 2, 4}.
 //!
-//! Also pins the throughput direction: coalescing must not be a
-//! regression — the `serve` scenario must report more requests/s at
-//! concurrency 8 than at concurrency 1 on the mock LM.
+//! Also pins the throughput directions: coalescing must not be a
+//! regression (more requests/s at concurrency 8 than 1), and under
+//! injected KB latency the asynchronous executor must beat the
+//! synchronous inline flush at concurrency 8. And the failure contract:
+//! a panicking KB call must surface as an error on exactly the requests
+//! whose queries rode the poisoned call, never wedge the engine.
 
 use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
 use ralmspec::datagen::{generate_questions, Dataset, HashEncoder};
 use ralmspec::eval::{run_engine_cell, run_qa_cell, serve_throughput,
-                     QaMethod, TestBed};
+                     serve_throughput_kb, QaMethod, TestBed};
 use ralmspec::lm::MockLm;
+use ralmspec::retriever::{InjectedLatency, Retriever, SpecQuery};
 use ralmspec::serving::EngineOptions;
+use ralmspec::util::Scored;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 fn small_config(seed: u64) -> Config {
     let mut cfg = Config::default();
@@ -53,8 +64,14 @@ fn mixed_methods(n: usize) -> Vec<QaMethod> {
         .collect()
 }
 
+/// Engine output vs per-request sequential `SpecPipeline::run`, swept
+/// over `kb_parallel` settings (0 = synchronous inline flush; >= 1 =
+/// async background execution with that in-flight cap). The sequential
+/// reference is computed once — the whole point is that no engine
+/// execution mode may perturb any request's tokens.
 fn check_equivalence(seed: u64, kind: RetrieverKind, shards: usize,
-                     concurrency: usize, n: usize) {
+                     concurrency: usize, n: usize,
+                     kb_parallels: &[usize]) {
     let mut cfg = small_config(seed);
     cfg.retriever.shards = shards;
     let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, seed ^ 0xEC);
@@ -73,69 +90,78 @@ fn check_equivalence(seed: u64, kind: RetrieverKind, shards: usize,
         expected.push(ms.into_iter().next().unwrap().tokens_out);
     }
 
-    let opts = EngineOptions {
-        max_batch: 64,
-        flush_us: 200,
-        max_inflight: concurrency,
-    };
-    let (got, stats) =
-        run_engine_cell(&lm, &enc, &bed, kind, &questions, &methods, &cfg,
-                        opts)
-        .unwrap();
-    assert_eq!(got.len(), n);
-    for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
-        assert_eq!(
-            g.tokens_out, *e,
-            "ENGINE OUTPUT DIVERGED: seed={seed} kind={kind:?} \
-             shards={shards} conc={concurrency} req={i} \
-             method={:?}", methods[i]);
-    }
-    if concurrency >= 8 && n >= 8 {
-        assert!(stats.mean_coalesced() > 1.0,
-                "concurrency {concurrency} never coalesced \
-                 (mean batch {:.2})", stats.mean_coalesced());
+    for &kb_parallel in kb_parallels {
+        let opts = EngineOptions {
+            max_batch: 64,
+            flush_us: 200,
+            max_inflight: concurrency,
+            kb_parallel,
+        };
+        let (got, stats) =
+            run_engine_cell(&lm, &enc, &bed, kind, &questions, &methods,
+                            &cfg, opts)
+            .unwrap();
+        assert_eq!(got.len(), n);
+        for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+            assert_eq!(
+                g.tokens_out, *e,
+                "ENGINE OUTPUT DIVERGED: seed={seed} kind={kind:?} \
+                 shards={shards} conc={concurrency} \
+                 kb_parallel={kb_parallel} req={i} \
+                 method={:?}", methods[i]);
+        }
+        if concurrency >= 8 && n >= 8 {
+            assert!(stats.mean_coalesced() > 1.0,
+                    "concurrency {concurrency} kb_parallel {kb_parallel} \
+                     never coalesced (mean batch {:.2})",
+                    stats.mean_coalesced());
+        }
     }
 }
 
 #[test]
 fn engine_matches_sequential_edr_conc_1() {
-    check_equivalence(1, RetrieverKind::Edr, 1, 1, 10);
+    check_equivalence(1, RetrieverKind::Edr, 1, 1, 10, &[0, 2]);
 }
 
 #[test]
 fn engine_matches_sequential_edr_conc_8() {
-    check_equivalence(2, RetrieverKind::Edr, 1, 8, 12);
+    // The full ADR-005 sweep: synchronous inline plus async in-flight
+    // caps 1, 2, 4 — bit-identical across all of them.
+    check_equivalence(2, RetrieverKind::Edr, 1, 8, 12, &[0, 1, 2, 4]);
 }
 
 #[test]
 fn engine_matches_sequential_edr_conc_32() {
-    check_equivalence(3, RetrieverKind::Edr, 1, 32, 32);
+    check_equivalence(3, RetrieverKind::Edr, 1, 32, 32, &[0, 4]);
 }
 
 #[test]
 fn engine_matches_sequential_sr() {
-    check_equivalence(4, RetrieverKind::Sr, 1, 8, 10);
+    check_equivalence(4, RetrieverKind::Sr, 1, 8, 10, &[0, 2]);
 }
 
 #[test]
 fn engine_matches_sequential_adr() {
-    check_equivalence(5, RetrieverKind::Adr, 1, 8, 10);
+    check_equivalence(5, RetrieverKind::Adr, 1, 8, 10, &[0, 2]);
 }
 
 #[test]
 fn engine_matches_sequential_sharded() {
     // Coalescing composes with the scatter-gather sharded KB: each
-    // coalesced batch fans out over shard views and k-way-merges back,
+    // coalesced batch fans out over shard views and k-way-merges back —
+    // and with kb_parallel >= 1 the scatter itself runs on a worker —
     // still bit-identical per request.
     for kind in [RetrieverKind::Edr, RetrieverKind::Adr, RetrieverKind::Sr] {
-        check_equivalence(6, kind, 2, 8, 8);
+        check_equivalence(6, kind, 2, 8, 8, &[0, 2]);
     }
 }
 
 #[test]
 fn engine_smoke_32_concurrent() {
     // CI throughput smoke: 32 concurrent mock requests through the
-    // scheduler/flush path must all complete (no hang, no starvation).
+    // scheduler/flush/async-completion path must all complete (no hang,
+    // no starvation).
     let cfg = small_config(0x5E42);
     let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, 0x5E42);
     let bed = TestBed::build(&cfg, &enc);
@@ -144,7 +170,7 @@ fn engine_smoke_32_concurrent() {
     let questions = generate_questions(Dataset::Nq, &bed.corpus, n, 9);
     let methods = mixed_methods(n);
     let opts = EngineOptions { max_batch: 64, flush_us: 200,
-                               max_inflight: 32 };
+                               max_inflight: 32, kb_parallel: 4 };
     let (ms, stats) = run_engine_cell(&lm, &enc, &bed, RetrieverKind::Edr,
                                       &questions, &methods, &cfg, opts)
         .unwrap();
@@ -158,6 +184,8 @@ fn engine_smoke_32_concurrent() {
     assert!(stats.mean_coalesced() > 1.0,
             "32 concurrent requests should coalesce (mean {:.2})",
             stats.mean_coalesced());
+    assert!(stats.kb_dispatches >= stats.kb_calls,
+            "async mode must account every dispatched call");
 }
 
 #[test]
@@ -203,4 +231,158 @@ fn serve_scenario_concurrency_8_beats_1() {
     assert!(rps_8 > rps_1,
             "coalescing must not be a throughput regression: \
              conc8={rps_8:.2} req/s vs conc1={rps_1:.2} req/s");
+}
+
+#[test]
+fn async_execution_beats_sync_under_injected_kb_latency() {
+    // The ADR-005 acceptance direction, deterministically: wrap the KB in
+    // a fixed 2 ms per-call latency injection (dwarfing both the toy
+    // corpus' real retrieval cost and any scheduler jitter) and serve the
+    // heterogeneous mix at concurrency 8. The mix carries two distinct
+    // top-k's (prefetch 1 and 20), and per-k groups cannot share a
+    // coalesced call — so every verification era has (at least) two KB
+    // calls that the synchronous inline engine pays the injected RTT for
+    // back to back while the async executor holds them in flight
+    // together. The advantage is structural (≈ the number of distinct
+    // k's), not a wall-clock coincidence.
+    let mut cfg = small_config(0xA51C);
+    cfg.spec.max_new_tokens = 24;
+    let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, 0xA51C);
+    let bed = TestBed::build(&cfg, &enc);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, 0xA51D);
+    let n = 16;
+    let questions = generate_questions(Dataset::WikiQa, &bed.corpus, n, 5);
+    let methods = mixed_methods(n);
+    let kb: Arc<dyn Retriever> = Arc::new(InjectedLatency::new(
+        bed.unsharded(RetrieverKind::Edr), Duration::from_millis(2)));
+    let best = |kb_parallel: usize| {
+        let mut run_cfg = cfg.clone();
+        run_cfg.engine.kb_parallel = kb_parallel;
+        let mut best_rps = 0.0f64;
+        let mut depth = 0.0f64;
+        for _ in 0..2 {
+            let s = serve_throughput_kb(&lm, &enc, &bed,
+                                        RetrieverKind::Edr, &kb,
+                                        &questions, &methods, &run_cfg, 8)
+                .unwrap();
+            assert_eq!(s.requests, n);
+            if s.rps > best_rps {
+                best_rps = s.rps;
+                depth = s.mean_inflight_depth;
+            }
+        }
+        (best_rps, depth)
+    };
+    let (sync_rps, sync_depth) = best(0);
+    let (async_rps, _) = best(4);
+    assert!(sync_depth <= 1.0 + 1e-9,
+            "sync mode must serialize KB calls (depth {sync_depth:.2})");
+    assert!(async_rps > sync_rps,
+            "async retrieval execution must beat the blocking flush under \
+             KB latency: async={async_rps:.2} req/s vs \
+             sync={sync_rps:.2} req/s");
+}
+
+/// A KB wrapper whose first `retrieve_batch` call panics; later calls
+/// delegate. Coalescing makes the first flush carry the first admitted
+/// wave, so exactly those requests must fail while the engine survives
+/// and serves the rest.
+struct PanicOnce {
+    inner: Arc<dyn Retriever>,
+    fired: AtomicBool,
+}
+
+impl Retriever for PanicOnce {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        if !self.fired.swap(true, Ordering::SeqCst) {
+            panic!("poisoned knowledge-base call");
+        }
+        self.inner.retrieve_batch(qs, k)
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: u32) -> f32 {
+        self.inner.score_doc(q, doc)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "panic-once"
+    }
+}
+
+#[test]
+fn panicking_kb_call_fails_only_owning_requests() {
+    // Regression (ADR-005 satellite): a panicking KB job must surface as
+    // an error on the requests whose queries rode the poisoned call and
+    // free their slots — not wedge the engine or take down the healthy
+    // requests. max_inflight 2 over 8 requests: the first coalesced flush
+    // (the first admitted pair's primes) panics; the remaining 6 must
+    // complete bit-identically to their sequential runs.
+    use ralmspec::serving::ServeEngine;
+    use ralmspec::spec::{QueryBuilder, QueryMode, SpecTask};
+
+    let cfg = small_config(0xDEAD);
+    let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, 0xDEAD);
+    let bed = TestBed::build(&cfg, &enc);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, 0xDEA1);
+    let n = 8;
+    let questions = generate_questions(Dataset::WikiQa, &bed.corpus, n, 7);
+    let method = QaMethod::plain_spec();
+    let expected: Vec<Vec<u32>> = questions
+        .iter()
+        .map(|q| {
+            run_qa_cell(&lm, &enc, &bed, RetrieverKind::Edr,
+                        std::slice::from_ref(q), method, &cfg)
+                .unwrap()
+                .pop()
+                .unwrap()
+                .tokens_out
+        })
+        .collect();
+
+    for kb_parallel in [0usize, 2] {
+        let kb: Arc<dyn Retriever> = Arc::new(PanicOnce {
+            inner: bed.unsharded(RetrieverKind::Edr),
+            fired: AtomicBool::new(false),
+        });
+        let queries = QueryBuilder {
+            encoder: &enc,
+            mode: QueryMode::Dense,
+            dense_len: cfg.retriever.dense_query_len,
+            sparse_len: cfg.retriever.sparse_query_len,
+        };
+        let mut engine: ServeEngine<SpecTask<MockLm>> = ServeEngine::new(
+            kb.clone(),
+            EngineOptions { max_batch: 64, flush_us: 200, max_inflight: 2,
+                            kb_parallel });
+        let opts = ralmspec::eval::build_spec_options(&cfg, 1, false,
+                                                      false, 3);
+        for (i, q) in questions.iter().enumerate() {
+            engine.submit(i as u64,
+                          SpecTask::new(&lm, kb.as_ref(), &bed.corpus,
+                                        queries, opts.clone(), &q.tokens));
+        }
+        let done = engine.run().unwrap();
+        let failed = engine.take_failed();
+        assert!(!failed.is_empty(),
+                "kb_parallel={kb_parallel}: the poisoned call must fail \
+                 its requests");
+        assert_eq!(done.len() + failed.len(), n,
+                   "kb_parallel={kb_parallel}: every request resolves \
+                    exactly once");
+        for (id, msg) in &failed {
+            assert!(msg.contains("poisoned knowledge-base call"),
+                    "kb_parallel={kb_parallel}: failure #{id} must carry \
+                     the panic payload, got: {msg}");
+        }
+        for (id, m) in &done {
+            assert_eq!(m.tokens_out, expected[*id as usize],
+                       "kb_parallel={kb_parallel}: surviving request \
+                        {id} diverged after the poisoned call");
+        }
+        assert_eq!(engine.stats().kb_failures, 1);
+    }
 }

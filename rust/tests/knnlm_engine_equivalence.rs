@@ -1,15 +1,20 @@
-//! THE KNN-LM serving-layer correctness property (DESIGN.md ADR-004): the
-//! concurrent engine may interleave N KNN-LM requests' speculation steps
-//! and coalesce their cache primes and relaxed-verification strides into
-//! shared datastore `retrieve_batch` calls, but every request's token
-//! output must stay **bit-identical** to a sequential `KnnLmSpec::run` of
-//! that request alone — across k ∈ {4, 32}, Fixed and OS³ stride
-//! policies, sharded {1, 2} and unsharded datastore retrievers, and
-//! concurrency {1, 8, 32}.
+//! THE KNN-LM serving-layer correctness property (DESIGN.md ADR-004 /
+//! ADR-005): the concurrent engine may interleave N KNN-LM requests'
+//! speculation steps, coalesce their cache primes and
+//! relaxed-verification strides into shared datastore `retrieve_batch`
+//! calls, and — with `kb_parallel >= 1` — run those calls asynchronously
+//! with out-of-order completion and overlap-drive speculation, but every
+//! request's token output must stay **bit-identical** to a sequential
+//! `KnnLmSpec::run` of that request alone — across k ∈ {4, 32}, Fixed
+//! and OS³ stride policies, sharded {1, 2} and unsharded datastore
+//! retrievers, concurrency {1, 8, 32}, and `kb_parallel`
+//! {0 (sync inline), 1, 2, 4}.
 //!
 //! Also the CI hang detector for the per-token workload
-//! (`knn_engine_smoke_32_concurrent`) and the router-level round-trip for
-//! `Method::Knn` through `KnnEngineBackend`.
+//! (`knn_engine_smoke_32_concurrent`), the router-level round-trip for
+//! `Method::Knn` through `KnnEngineBackend`, and the router-level
+//! failure contract: a panicking datastore call becomes error
+//! `Response`s on exactly the owning requests while the worker survives.
 
 use ralmspec::config::CorpusConfig;
 use ralmspec::datagen::generate_stream;
@@ -17,11 +22,12 @@ use ralmspec::eval::run_knn_engine_cell;
 use ralmspec::knnlm::{Datastore, KnnLmSpec, KnnServeOptions};
 use ralmspec::lm::MockLm;
 use ralmspec::retriever::dense::DenseExact;
-use ralmspec::retriever::{Retriever, ShardedRetriever};
+use ralmspec::retriever::{Retriever, ShardedRetriever, SpecQuery};
 use ralmspec::serving::{EngineOptions, KnnEngineBackend, Method, Request,
                         Router};
 use ralmspec::spec::{Os3Config, StridePolicy};
-use ralmspec::util::Rng;
+use ralmspec::util::{Rng, Scored};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 const DIM: usize = ralmspec::runtime::RETRIEVAL_DIM;
@@ -67,10 +73,10 @@ fn stride_policies() -> Vec<StridePolicy> {
 }
 
 /// Engine-served outputs must equal per-request sequential
-/// `KnnLmSpec::run` bit-for-bit, and high concurrency must actually
-/// coalesce.
+/// `KnnLmSpec::run` bit-for-bit across every `kb_parallel` setting, and
+/// high concurrency must actually coalesce.
 fn check_equivalence(seed: u64, shards: usize, concurrency: usize,
-                     n: usize) {
+                     n: usize, kb_parallels: &[usize]) {
     let f = fixture(seed, 6_000, n);
     let inner = Arc::new(DenseExact::new(f.ds.keys.clone()));
     let kb: Arc<dyn Retriever> = if shards > 1 {
@@ -95,28 +101,33 @@ fn check_equivalence(seed: u64, shards: usize, concurrency: usize,
                         .tokens_out
                 })
                 .collect();
-            let engine_opts = EngineOptions {
-                max_batch: 64,
-                flush_us: 200,
-                max_inflight: concurrency,
-            };
-            let (got, stats) = run_knn_engine_cell(
-                &f.lm, kb.as_ref(), &f.ds, &o, &f.prompts, engine_opts)
-                .unwrap();
-            assert_eq!(got.len(), n);
-            for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
-                assert_eq!(
-                    g.tokens_out, *e,
-                    "KNN ENGINE OUTPUT DIVERGED: seed={seed} k={k} \
-                     stride={stride:?} shards={shards} \
-                     conc={concurrency} req={i}");
-                assert!(!g.tokens_out.is_empty(),
-                        "request {i} produced no tokens");
-            }
-            if concurrency >= 8 && n >= 8 {
-                assert!(stats.mean_coalesced() > 1.0,
-                        "concurrency {concurrency} never coalesced \
-                         (mean batch {:.2})", stats.mean_coalesced());
+            for &kb_parallel in kb_parallels {
+                let engine_opts = EngineOptions {
+                    max_batch: 64,
+                    flush_us: 200,
+                    max_inflight: concurrency,
+                    kb_parallel,
+                };
+                let (got, stats) = run_knn_engine_cell(
+                    &f.lm, &kb, &f.ds, &o, &f.prompts, engine_opts)
+                    .unwrap();
+                assert_eq!(got.len(), n);
+                for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+                    assert_eq!(
+                        g.tokens_out, *e,
+                        "KNN ENGINE OUTPUT DIVERGED: seed={seed} k={k} \
+                         stride={stride:?} shards={shards} \
+                         conc={concurrency} kb_parallel={kb_parallel} \
+                         req={i}");
+                    assert!(!g.tokens_out.is_empty(),
+                            "request {i} produced no tokens");
+                }
+                if concurrency >= 8 && n >= 8 {
+                    assert!(stats.mean_coalesced() > 1.0,
+                            "concurrency {concurrency} kb_parallel \
+                             {kb_parallel} never coalesced \
+                             (mean batch {:.2})", stats.mean_coalesced());
+                }
             }
         }
     }
@@ -124,17 +135,21 @@ fn check_equivalence(seed: u64, shards: usize, concurrency: usize,
 
 #[test]
 fn knn_engine_matches_sequential_conc_1() {
-    check_equivalence(1, 1, 1, 6);
+    check_equivalence(1, 1, 1, 6, &[0, 2]);
 }
 
 #[test]
 fn knn_engine_matches_sequential_conc_8() {
-    check_equivalence(2, 1, 8, 10);
+    // The full ADR-005 sweep: synchronous inline plus async in-flight
+    // caps 1, 2, 4 — bit-identical across all of them (overlap-drive
+    // steps are verified like any other stride, so the async schedule
+    // cannot leak into the tokens).
+    check_equivalence(2, 1, 8, 10, &[0, 1, 2, 4]);
 }
 
 #[test]
 fn knn_engine_matches_sequential_conc_32() {
-    check_equivalence(3, 1, 32, 32);
+    check_equivalence(3, 1, 32, 32, &[0, 4]);
 }
 
 #[test]
@@ -142,20 +157,22 @@ fn knn_engine_matches_sequential_sharded() {
     // Coalescing composes with the scatter-gather sharded datastore
     // retriever: each coalesced batch fans out over key-range shards and
     // k-way-merges back, still bit-identical per request.
-    check_equivalence(4, 2, 8, 8);
+    check_equivalence(4, 2, 8, 8, &[0, 2]);
 }
 
 #[test]
 fn knn_engine_smoke_32_concurrent() {
     // CI hang detector: 32 concurrent KNN-LM requests through the
-    // scheduler/flush path must all complete, and their per-token
-    // verification pressure must actually coalesce across requests
-    // (EngineStats cross-request batches > 0 — the acceptance criterion).
+    // scheduler/flush/async-completion path must all complete, and their
+    // per-token verification pressure must actually coalesce across
+    // requests (EngineStats cross-request batches > 0 — the acceptance
+    // criterion).
     let f = fixture(0x5E42, 8_000, 32);
-    let kb = DenseExact::new(f.ds.keys.clone());
+    let kb: Arc<dyn Retriever> =
+        Arc::new(DenseExact::new(f.ds.keys.clone()));
     let o = opts(8, StridePolicy::Fixed(3));
     let engine_opts = EngineOptions { max_batch: 64, flush_us: 200,
-                                      max_inflight: 32 };
+                                      max_inflight: 32, kb_parallel: 4 };
     let (ms, stats) = run_knn_engine_cell(&f.lm, &kb, &f.ds, &o,
                                           &f.prompts, engine_opts)
         .unwrap();
@@ -179,7 +196,8 @@ fn knn_engine_smoke_32_concurrent() {
 fn router_round_trips_knn_requests() {
     // Method::Knn through a KnnEngineBackend inside a router worker:
     // responses must match the sequential reference and arrive for every
-    // request (worker drains + engine coalesces inside serve_batch).
+    // request (worker drains + engine coalesces inside serve_batch, with
+    // async KB execution enabled).
     let f = fixture(9, 6_000, 12);
     let kb: Arc<dyn Retriever> =
         Arc::new(DenseExact::new(f.ds.keys.clone()));
@@ -209,7 +227,7 @@ fn router_round_trips_knn_requests() {
             ds: ds.clone(),
             opts: o2.clone(),
             engine_opts: EngineOptions { max_batch: 64, flush_us: 200,
-                                         max_inflight: 0 },
+                                         max_inflight: 0, kb_parallel: 2 },
         })
     });
     let rxs: Vec<_> = f
@@ -229,5 +247,107 @@ fn router_round_trips_knn_requests() {
         assert_eq!(resp.tokens, expected[i],
                    "router-served KNN request {i} diverged");
     }
+    router.shutdown();
+}
+
+/// A datastore retriever whose first `retrieve_batch` call panics; later
+/// calls delegate (see the engine-level twin in
+/// tests/engine_equivalence.rs).
+struct PanicOnce {
+    inner: Arc<dyn Retriever>,
+    fired: AtomicBool,
+}
+
+impl Retriever for PanicOnce {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        if !self.fired.swap(true, Ordering::SeqCst) {
+            panic!("poisoned datastore call");
+        }
+        self.inner.retrieve_batch(qs, k)
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: u32) -> f32 {
+        self.inner.score_doc(q, doc)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "panic-once"
+    }
+}
+
+#[test]
+fn router_surfaces_panicking_kb_as_error_responses() {
+    // Regression (ADR-005 satellite): a panicking KB job inside the
+    // engine must come back as error `Response`s on exactly the owning
+    // requests — the worker stays alive, the other requests of the same
+    // drain complete, and a second wave over the now-healthy KB succeeds.
+    let f = fixture(0xFA11, 6_000, 8);
+    let inner: Arc<dyn Retriever> =
+        Arc::new(DenseExact::new(f.ds.keys.clone()));
+    let kb: Arc<dyn Retriever> = Arc::new(PanicOnce {
+        inner,
+        fired: AtomicBool::new(false),
+    });
+    let o = opts(8, StridePolicy::Fixed(3));
+    let ds = f.ds.clone();
+    let kb2 = kb.clone();
+    let o2 = o.clone();
+    let vocab = CorpusConfig::default().vocab;
+    let router = Router::spawn(32, 1, move || {
+        Ok(KnnEngineBackend {
+            lm: MockLm::new(vocab, 320, 0xFA11 ^ 0x11),
+            kb: kb2.clone(),
+            ds: ds.clone(),
+            opts: o2.clone(),
+            // max_inflight 2: only the first admitted pair rides the
+            // poisoned first flush; the rest must survive.
+            engine_opts: EngineOptions { max_batch: 64, flush_us: 200,
+                                         max_inflight: 2, kb_parallel: 2 },
+        })
+    });
+    let rxs: Vec<_> = f
+        .prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            router
+                .submit(Request { id: i as u64, question: p.clone(),
+                                  method: Method::Knn })
+                .unwrap()
+        })
+        .collect();
+    let mut errors = 0;
+    let mut oks = 0;
+    for rx in rxs {
+        match rx.recv().unwrap() {
+            Ok(resp) => {
+                assert!(!resp.tokens.is_empty());
+                oks += 1;
+            }
+            Err(e) => {
+                assert!(format!("{e}").contains("poisoned datastore call"),
+                        "error must carry the panic payload: {e}");
+                errors += 1;
+            }
+        }
+    }
+    assert!(errors > 0, "the poisoned call must fail its requests");
+    assert!(oks > 0,
+            "the engine must keep serving requests that were not in the \
+             poisoned call");
+    assert_eq!(errors + oks, 8);
+
+    // The worker survived: a fresh request now succeeds end to end.
+    let rx = router
+        .submit(Request { id: 99, question: f.prompts[0].clone(),
+                          method: Method::Knn })
+        .unwrap();
+    let resp = rx.recv().unwrap().unwrap();
+    assert_eq!(resp.id, 99);
+    assert!(!resp.tokens.is_empty());
     router.shutdown();
 }

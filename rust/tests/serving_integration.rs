@@ -162,6 +162,7 @@ fn engine_backend_serves_spec_requests_through_router() {
                 max_batch: 16,
                 flush_us: 500,
                 max_inflight: 0,
+                kb_parallel: 2,
             },
         })
     });
