@@ -10,6 +10,17 @@
 //! Verification steps populate the cache with either the top-1 document per
 //! query or the top-k ("prefetching", Fig 2), controlled by the configured
 //! prefetch size.
+//!
+//! **Live knowledge bases (DESIGN.md ADR-006)**: the cache stores only
+//! document *ids* and re-scores every entry at lookup time with the
+//! retriever the caller passes in — it never trusts a score that crossed
+//! an epoch boundary. The epoch stamp ([`LocalCache::retrieve_at`] /
+//! [`LocalCache::insert_at`]) makes that contract explicit: a lookup at
+//! epoch E ranks *all* entries (including ones inserted under E−1)
+//! under E's exact metric, so one retrieval can never mix scores from
+//! two epochs — which matters concretely for BM25, whose idf/avgdl shift
+//! with every publish. Ids stay valid across epochs because the
+//! knowledge base is append-only.
 
 use crate::retriever::{DocId, Retriever, SpecQuery};
 use crate::util::Scored;
@@ -30,6 +41,16 @@ pub struct LocalCache {
     cap: usize,
     /// Reusable id buffer for batched lookup scoring.
     ids_buf: Vec<DocId>,
+    /// Knowledge-base epoch of the most recent insert/lookup (`None`
+    /// until the first stamped call; frozen-KB callers stay at epoch 0).
+    /// Entries inserted under an older epoch stay *members* (ids are
+    /// append-only-stable) but are re-scored under the current epoch's
+    /// metric on every lookup — see the module docs.
+    epoch: Option<u64>,
+    /// Epoch transitions observed between two *stamped* operations (the
+    /// initial stamp is not a flip): how often this cache's contents
+    /// crossed a publish boundary.
+    pub epoch_flips: u64,
     /// Statistics for γ estimation and reports.
     pub lookups: u64,
     pub hits_nonempty: u64,
@@ -49,8 +70,21 @@ impl LocalCache {
             present: HashMap::new(),
             cap,
             ids_buf: Vec::new(),
+            epoch: None,
+            epoch_flips: 0,
             lookups: 0,
             hits_nonempty: 0,
+        }
+    }
+
+    fn note_epoch(&mut self, epoch: u64) {
+        match self.epoch {
+            Some(e) if e != epoch => {
+                self.epoch_flips += 1;
+                self.epoch = Some(epoch);
+            }
+            None => self.epoch = Some(epoch),
+            _ => {}
         }
     }
 
@@ -75,6 +109,22 @@ impl LocalCache {
     /// the KB metric (rank preservation composes through sharding).
     pub fn retrieve(&mut self, q: &SpecQuery, kb: &dyn Retriever)
                     -> Option<Scored> {
+        let epoch = self.epoch.unwrap_or(0);
+        self.retrieve_at(q, kb, epoch)
+    }
+
+    /// Epoch-stamped [`retrieve`](Self::retrieve): `kb` must be the
+    /// snapshot of `epoch`, and every score in this lookup comes from
+    /// exactly that snapshot — entries inserted under older epochs are
+    /// re-scored, never returned with their insertion-time rank. This is
+    /// the regression surface for live knowledge bases: before the stamp
+    /// existed nothing *pinned* the "ids only, always re-score" contract,
+    /// and a cache that started trusting inserted scores would silently
+    /// mix epochs the moment a publish landed between speculation and
+    /// verification (tested in `epoch_flip_never_mixes_scores`).
+    pub fn retrieve_at(&mut self, q: &SpecQuery, kb: &dyn Retriever,
+                       epoch: u64) -> Option<Scored> {
+        self.note_epoch(epoch);
         self.lookups += 1;
         if self.order.is_empty() {
             return None;
@@ -94,7 +144,19 @@ impl LocalCache {
     }
 
     /// Insert verification results (top-1 or top-k per the prefetch size).
+    /// Only the ids are retained — scores are recomputed at every lookup
+    /// against the lookup's epoch snapshot (see the module docs).
     pub fn insert(&mut self, entries: &[Scored]) {
+        let epoch = self.epoch.unwrap_or(0);
+        self.insert_at(entries, epoch);
+    }
+
+    /// Epoch-stamped [`insert`](Self::insert): `entries` were scored by
+    /// `epoch`'s snapshot. The scores are deliberately dropped here —
+    /// keeping them would be exactly the cross-epoch staleness bug the
+    /// stamp exists to prevent.
+    pub fn insert_at(&mut self, entries: &[Scored], epoch: u64) {
+        self.note_epoch(epoch);
         for e in entries {
             if self.present.contains_key(&e.id) {
                 continue;
@@ -180,6 +242,64 @@ mod tests {
         cache.insert_ids(&[5, 5, 5, 6]);
         assert_eq!(cache.len(), 2);
         let _ = &kb;
+    }
+
+    #[test]
+    fn epoch_flip_never_mixes_scores() {
+        // Regression (live knowledge bases, ADR-006): entries cached at
+        // epoch E must be ranked entirely under epoch E+1's metric when
+        // the lookup happens after a publish — never with their
+        // insertion-time scores. BM25 is the sharp case: appending docs
+        // shifts idf/avgdl, so the SAME (query, doc) pair scores
+        // differently in the two epochs.
+        use crate::config::CorpusConfig;
+        use crate::datagen::corpus::Corpus;
+        use crate::retriever::sparse::Bm25;
+        use crate::util::Rng;
+
+        let big = Corpus::generate(&CorpusConfig {
+            n_docs: 300, n_topics: 8, doc_len: (20, 60),
+            ..CorpusConfig::default()
+        });
+        let mut small = big.clone();
+        small.docs.truncate(200);
+        let epoch0 = Bm25::build(&small, 0.9, 0.4);
+        let epoch1 = Bm25::build(&big, 0.9, 0.4);
+
+        let mut rng = Rng::new(3);
+        let q = SpecQuery::sparse_only(big.topic_tokens(1, 10, &mut rng));
+        // Speculation at epoch 0: verification results (epoch-0 scores)
+        // populate the cache.
+        let truth0 = epoch0.retrieve_topk(&q, 5);
+        assert!(!truth0.is_empty());
+        let mut cache = LocalCache::new(64);
+        cache.insert_at(&truth0, 0);
+        // The epoch flips between speculation and verification.
+        let got = cache.retrieve_at(&q, &epoch1, 1).unwrap();
+        assert_eq!(cache.epoch_flips, 1);
+        // Every candidate must have been re-scored under epoch 1: the
+        // returned score is bit-identical to epoch 1's own metric, and
+        // the winner is exactly what a pure epoch-1 ranking of the
+        // cached ids yields.
+        assert_eq!(got.score.to_bits(),
+                   epoch1.score_doc(&q, got.id).to_bits(),
+                   "returned score must come from the flipped epoch");
+        let best1 = truth0
+            .iter()
+            .map(|e| Scored { id: e.id, score: epoch1.score_doc(&q, e.id) })
+            .fold(None::<Scored>, |best, s| match best {
+                Some(b) if !s.better_than(&b) => Some(b),
+                _ => Some(s),
+            })
+            .unwrap();
+        assert_eq!(got.id, best1.id);
+        assert_eq!(got.score.to_bits(), best1.score.to_bits());
+        // And at least one cached doc really does score differently
+        // across the epochs (otherwise this test pins nothing).
+        assert!(truth0.iter().any(|e| {
+            epoch0.score_doc(&q, e.id).to_bits()
+                != epoch1.score_doc(&q, e.id).to_bits()
+        }), "fixture must make epochs score differently");
     }
 
     #[test]

@@ -55,6 +55,15 @@ impl Flags {
             .transpose()
     }
 
+    pub fn get_f64(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("--{key}: {e}"))
+            })
+            .transpose()
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
     }
@@ -93,8 +102,16 @@ COMMANDS:
           --model knnlm      serve the KNN-LM workload (one retrieval per
                              token) through the coalescing engine;
                              --retriever edr|adr picks the datastore index
+          [--ingest-rate R] [--ingest-batch B]
+                             live knowledge base (epoch snapshots): a
+                             writer ingests R synthetic docs/s during the
+                             engine scenario, publishing a new epoch every
+                             B docs; each request pins the epoch it was
+                             admitted under (outputs stay bit-identical to
+                             a sequential run against that snapshot).
+                             Config keys: ingest.rate / ingest.batch
     bench-gate [--mock] [--out BENCH_PR3.json]
-               [--engine-out BENCH_PR4.json]
+               [--engine-out BENCH_PR4.json] [--live-out BENCH_PR5.json]
                              CI perf-regression gate: quick fig4+fig5
                              speed-up ratios per retriever class, written
                              as JSON; exits non-zero if any ratio < 1.0
@@ -102,7 +119,9 @@ COMMANDS:
                              Also runs the sync-vs-async engine sweep
                              under injected KB latency (--engine-out;
                              fails if async/sync requests/s < 1.0 at
-                             concurrency 8)
+                             concurrency 8) and the mixed ingest+query
+                             cell (--live-out: query p50/p99 with
+                             ingestion on vs off, epochs published)
     trace [--retriever edr] [--mock]
                              emit a Fig-1(c)-style per-request timeline
     help                     this text

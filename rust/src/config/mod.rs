@@ -72,6 +72,7 @@ pub struct Config {
     pub eval: EvalConfig,
     pub serving: ServingConfig,
     pub engine: EngineConfig,
+    pub ingest: IngestConfig,
 }
 
 impl Config {
@@ -118,6 +119,9 @@ impl Config {
         if let Some(x) = v.get("engine") {
             self.engine.merge(x);
         }
+        if let Some(x) = v.get("ingest") {
+            self.ingest.merge(x);
+        }
     }
 
     pub fn to_json(&self) -> Value {
@@ -130,6 +134,7 @@ impl Config {
             ("eval", self.eval.to_json()),
             ("serving", self.serving.to_json()),
             ("engine", self.engine.to_json()),
+            ("ingest", self.ingest.to_json()),
         ])
     }
 }
@@ -497,6 +502,40 @@ impl EngineConfig {
     }
 }
 
+/// Live knowledge-base ingestion (`retriever::epoch`, DESIGN.md ADR-006):
+/// `rate` drives the serve scenario's background writer (documents per
+/// second; 0 disables ingestion — the default, preserving the frozen-KB
+/// behaviour of earlier PRs), `batch` is the number of pending documents
+/// the writer accumulates before publishing a new epoch (larger batches
+/// amortize snapshot construction; smaller ones tighten freshness).
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    pub rate: f64,
+    pub batch: usize,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        Self { rate: 0.0, batch: 8 }
+    }
+}
+
+impl IngestConfig {
+    fn merge(&mut self, v: &Value) {
+        merge_fields!(self, v, {
+            "rate" => self.rate => f64,
+            "batch" => self.batch => usize,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("rate", Value::num(self.rate)),
+            ("batch", Value::num(self.batch as f64)),
+        ])
+    }
+}
+
 /// The three retriever classes evaluated in the paper.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RetrieverKind {
@@ -607,6 +646,20 @@ mod tests {
         assert_eq!(c.engine.flush_us, 1000);
         assert_eq!(c.engine.kb_parallel, 0); // synchronous inline mode
         assert_eq!(c.serving.queue_cap, 256); // untouched default
+    }
+
+    #[test]
+    fn ingest_defaults_and_merge() {
+        let c = Config::default();
+        assert_eq!(c.ingest.rate, 0.0); // live updates off by default
+        assert_eq!(c.ingest.batch, 8);
+        let v = json::parse(
+            r#"{"ingest": {"rate": 12.5, "batch": 3}}"#).unwrap();
+        let mut c = Config::default();
+        c.merge(&v);
+        assert!((c.ingest.rate - 12.5).abs() < 1e-12);
+        assert_eq!(c.ingest.batch, 3);
+        assert_eq!(c.engine.max_batch, 32); // untouched default
     }
 
     #[test]

@@ -22,7 +22,12 @@ pub struct Document {
     pub tokens: Vec<u32>,
 }
 
-#[derive(Debug)]
+/// `Clone` so a live-update writer can own a mutable master copy and
+/// publish immutable `Arc<Corpus>` snapshots per epoch (see
+/// `retriever::epoch`): documents are append-only and never mutate, so a
+/// snapshot taken at epoch E stays byte-identical for every id < len(E)
+/// no matter how far the master has grown since.
+#[derive(Debug, Clone)]
 pub struct Corpus {
     pub docs: Vec<Document>,
     pub vocab: usize,
@@ -43,6 +48,25 @@ struct TopicPool {
 const COMMON_FRAC: f64 = 0.25;
 const COMMON_POOL: usize = 64;
 const TOPIC_POOL: usize = 192;
+
+/// Sample one passage's tokens: `COMMON_FRAC` of draws from the global
+/// common pool, the rest from the topic's pool. The single sampler
+/// behind both the build-time generator and the live-ingest stream
+/// ([`Corpus::synth_docs`]), so ingested documents come from the same
+/// distribution as build-time ones by construction.
+fn sample_tokens(pool: &TopicPool, common_pool: &[u32],
+                 common_zipf: &Zipf, len: usize, rng: &mut Rng)
+                 -> Vec<u32> {
+    (0..len)
+        .map(|_| {
+            if rng.next_f64() < COMMON_FRAC {
+                common_pool[common_zipf.sample(rng)]
+            } else {
+                pool.tokens[pool.zipf.sample(rng)]
+            }
+        })
+        .collect()
+}
 
 impl Corpus {
     pub fn generate(cfg: &CorpusConfig) -> Self {
@@ -75,15 +99,8 @@ impl Corpus {
             let topic = drng.gen_range(cfg.n_topics) as u32;
             let len = drng.length(cfg.doc_len.0, cfg.doc_len.1);
             let pool = &topic_pools[topic as usize];
-            let tokens: Vec<u32> = (0..len)
-                .map(|_| {
-                    if drng.next_f64() < COMMON_FRAC {
-                        common_pool[common_zipf.sample(&mut drng)]
-                    } else {
-                        pool.tokens[pool.zipf.sample(&mut drng)]
-                    }
-                })
-                .collect();
+            let tokens = sample_tokens(pool, &common_pool, &common_zipf,
+                                       len, &mut drng);
             docs.push(Document { id: id as u32, topic, tokens });
         }
 
@@ -118,6 +135,43 @@ impl Corpus {
                 } else {
                     pool.tokens[pool.zipf.sample(rng)]
                 }
+            })
+            .collect()
+    }
+
+    /// Append freshly ingested documents (live knowledge-base updates).
+    /// Ids must continue the corpus' contiguous id space — the retrieval
+    /// layer's doc-id ↔ row-index correspondence depends on it.
+    pub fn append(&mut self, docs: Vec<Document>) {
+        for d in docs {
+            assert_eq!(d.id as usize, self.docs.len(),
+                       "ingested doc ids must be contiguous");
+            assert!(d.tokens.iter().all(|&t| (t as usize) < self.vocab),
+                    "ingested doc uses tokens outside the corpus vocab");
+            self.docs.push(d);
+        }
+    }
+
+    /// Synthesize `count` fresh documents for the ingest stream, ids
+    /// starting at `start_id`, drawn from the same topic/common pools as
+    /// the build-time generator. Deterministic in (`seed`, id) — two
+    /// writers replaying the same stream produce byte-identical docs —
+    /// but an independent RNG stream from `generate`'s, so ingested docs
+    /// are new material, not replays of build-time ones.
+    pub fn synth_docs(&self, seed: u64, start_id: u32, count: usize,
+                      doc_len: (usize, usize)) -> Vec<Document> {
+        let common_zipf = Zipf::new(COMMON_POOL, 1.2);
+        (0..count)
+            .map(|i| {
+                let id = start_id + i as u32;
+                let mut drng =
+                    Rng::new(seed ^ ((id as u64 + 1) * 0x9E37_79B9_7F4A_7C15));
+                let topic = drng.gen_range(self.n_topics) as u32;
+                let len = drng.length(doc_len.0, doc_len.1);
+                let pool = &self.topic_pools[topic as usize];
+                let tokens = sample_tokens(pool, &self.common_pool,
+                                           &common_zipf, len, &mut drng);
+                Document { id, topic, tokens }
             })
             .collect()
     }
@@ -205,6 +259,51 @@ mod tests {
         let a = c.topic_tokens(3, 10, &mut Rng::new(5));
         let b = c.topic_tokens(3, 10, &mut Rng::new(5));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn synth_docs_deterministic_contiguous_and_in_vocab() {
+        let cfg = small_cfg();
+        let c = Corpus::generate(&cfg);
+        let a = c.synth_docs(42, c.len() as u32, 10, (20, 60));
+        let b = c.synth_docs(42, c.len() as u32, 10, (20, 60));
+        assert_eq!(a.len(), 10);
+        for (da, db) in a.iter().zip(&b) {
+            assert_eq!(da.id, db.id);
+            assert_eq!(da.tokens, db.tokens);
+        }
+        for (i, d) in a.iter().enumerate() {
+            assert_eq!(d.id as usize, c.len() + i);
+            assert!(d.tokens.len() >= 20 && d.tokens.len() <= 60);
+            for &t in &d.tokens {
+                assert!(t >= cfg.reserved as u32
+                        && (t as usize) < cfg.vocab);
+            }
+        }
+    }
+
+    #[test]
+    fn append_grows_and_preserves_existing_docs() {
+        let cfg = small_cfg();
+        let mut c = Corpus::generate(&cfg);
+        let before = c.doc(3).tokens.clone();
+        let n = c.len();
+        let fresh = c.synth_docs(7, n as u32, 5, (20, 60));
+        let expect_first = fresh[0].tokens.clone();
+        c.append(fresh);
+        assert_eq!(c.len(), n + 5);
+        assert_eq!(c.doc(3).tokens, before, "existing docs never mutate");
+        assert_eq!(c.doc(n as u32).tokens, expect_first);
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous")]
+    fn append_rejects_id_gaps() {
+        let cfg = small_cfg();
+        let mut c = Corpus::generate(&cfg);
+        let bad = Document { id: c.len() as u32 + 1, topic: 0,
+                             tokens: vec![100] };
+        c.append(vec![bad]);
     }
 
     #[test]

@@ -86,6 +86,16 @@ impl Encoder for HashEncoder {
     }
 }
 
+/// Embed one document exactly as [`embed_corpus`] embeds a row (first
+/// `window` tokens, like a passage encoder) — the ingest path
+/// (`retriever::epoch::KbWriter`) uses this so a live-appended embedding
+/// row is byte-identical to what a from-scratch `embed_corpus` over the
+/// extended corpus would produce.
+pub fn embed_doc(enc: &dyn Encoder,
+                 doc: &crate::datagen::corpus::Document) -> Vec<f32> {
+    enc.encode(&doc.tokens[..doc.tokens.len().min(enc.window())])
+}
+
 /// Embed every corpus document (first `window` tokens, like a passage
 /// encoder). Returns a row-major [n_docs, dim] matrix.
 pub fn embed_corpus(enc: &dyn Encoder,

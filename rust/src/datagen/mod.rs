@@ -8,6 +8,6 @@ pub mod qa;
 pub mod wikitext;
 
 pub use corpus::{Corpus, Document, EOS, PAD, SEP};
-pub use embedding::{embed_corpus, Encoder, HashEncoder};
+pub use embedding::{embed_corpus, embed_doc, Encoder, HashEncoder};
 pub use qa::{generate_questions, Dataset, Question};
 pub use wikitext::{generate_stream, TokenStream};

@@ -121,6 +121,18 @@ pub trait ErasedLm {
                            concurrency: usize)
                            -> anyhow::Result<ServeSummary>;
 
+    /// The mixed ingest+query scenario (`serve --ingest-rate R`) — see
+    /// `eval::runner::serve_live_throughput`.
+    #[allow(clippy::too_many_arguments)]
+    fn serve_live_throughput(&self, encoder: &dyn Encoder,
+                             kind: RetrieverKind,
+                             live: &std::sync::Arc<crate::retriever::LiveKb>,
+                             questions: &[crate::datagen::Question],
+                             method: QaMethod, cfg: &Config,
+                             concurrency: usize)
+                             -> anyhow::Result<
+                                 crate::eval::runner::LiveServeReport>;
+
     /// The `serve --model knnlm` throughput scenario (KNN-LM tasks
     /// engine-coalesced at a fixed concurrency) — see
     /// `eval::runner::serve_knn_throughput`.
@@ -206,6 +218,18 @@ macro_rules! impl_holder {
                 crate::eval::runner::serve_throughput_kb(
                     &self.0, encoder, bed, kind, kb, questions, methods,
                     cfg, concurrency)
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            fn serve_live_throughput(
+                &self, encoder: &dyn Encoder, kind: RetrieverKind,
+                live: &std::sync::Arc<crate::retriever::LiveKb>,
+                questions: &[crate::datagen::Question], method: QaMethod,
+                cfg: &Config, concurrency: usize)
+                -> anyhow::Result<crate::eval::runner::LiveServeReport> {
+                crate::eval::runner::serve_live_throughput(
+                    &self.0, encoder, kind, live, questions, method, cfg,
+                    concurrency)
             }
 
             #[allow(clippy::too_many_arguments)]
@@ -891,10 +915,23 @@ pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         // 0 = synchronous inline flush; >= 1 = async executor cap.
         cfg.engine.kb_parallel = n;
     }
+    if let Some(r) = flags.get_f64("ingest-rate")? {
+        anyhow::ensure!(r >= 0.0, "--ingest-rate must be >= 0");
+        cfg.ingest.rate = r;
+    }
+    if let Some(b) = flags.get_usize("ingest-batch")? {
+        cfg.ingest.batch = b.max(1);
+    }
     let model = flags.get("model").unwrap_or("gpt2m").to_string();
     if model == KNN_MODEL {
         // KNN-LM serving has its own fixture (datastore, not the QA
-        // corpus) and always goes through the coalescing engine.
+        // corpus) and always goes through the coalescing engine. Live
+        // ingestion targets the QA knowledge base only — fail loudly
+        // rather than silently serving a frozen datastore.
+        anyhow::ensure!(cfg.ingest.rate <= 0.0,
+                        "--ingest-rate applies to the QA knowledge base; \
+                         the KNN-LM datastore is frozen (drop the flag \
+                         or serve a QA model)");
         return serve_knn_scenario(&cfg, flags);
     }
     let dataset: Dataset = flags.get("dataset").unwrap_or("wikiqa").parse()?;
@@ -907,6 +944,12 @@ pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     };
     let engine_scenario =
         flags.has("throughput") || flags.get("concurrency").is_some();
+    // Live ingestion runs inside the engine scenario (wave admission +
+    // background writer); accepting the flag and then serving frozen
+    // would hand back numbers that measure the wrong system.
+    anyhow::ensure!(cfg.ingest.rate <= 0.0 || engine_scenario,
+                    "--ingest-rate needs the engine scenario: add \
+                     --throughput or --concurrency N");
     let provider = Provider::from_flags(&cfg, flags)?;
     anyhow::ensure!(provider.has_model(&model), "model {model} not built");
     let bed = build_bed(&cfg, &provider)?;
@@ -965,6 +1008,11 @@ fn serve_engine_scenario(cfg: &Config, provider: &Provider, model: &str,
         Some(c) => vec![c.max(1)],
         None => vec![1, 8, 32],
     };
+    if cfg.ingest.rate > 0.0 {
+        return serve_live_scenario(cfg, provider, model, bed,
+                                   enc, kind, dataset, questions, method,
+                                   &concurrencies);
+    }
     eprintln!("[serve] engine scenario: {} requests via {} on {}/{} ({}), \
                max_batch={} flush_us={} kb_parallel={}",
               questions.len(), method.label(), model, kind.label(),
@@ -1008,6 +1056,78 @@ fn serve_engine_scenario(cfg: &Config, provider: &Provider, model: &str,
                  Value::num(s.max_inflight_depth as f64)),
                 ("overlap_steps", Value::num(s.overlap_steps as f64)),
                 ("overlap_per_round", Value::num(s.overlap_per_round)),
+                ("epochs_served", Value::num(s.epochs_served as f64)),
+                ("epoch_splits", Value::num(s.epoch_splits as f64)),
+            ]));
+        }
+        Ok(())
+    })?;
+    report.write(&cfg.paths.reports)
+}
+
+/// The mixed ingest+query scenario (`serve --ingest-rate R`): each
+/// concurrency level serves the questions through the engine against a
+/// **fresh live knowledge base** (so levels stay comparable) while a
+/// writer ingests synthetic documents — epoch publishes between
+/// admission waves plus a background ingest thread at `R` docs/s during
+/// the run. Reports the query-side throughput/latency next to the ingest
+/// trajectory (docs ingested, epochs published, KB growth).
+#[allow(clippy::too_many_arguments)]
+fn serve_live_scenario(cfg: &Config, provider: &Provider, model: &str,
+                       bed: &TestBed, enc: &dyn Encoder,
+                       kind: RetrieverKind, dataset: Dataset,
+                       questions: &[crate::datagen::Question],
+                       method: QaMethod, concurrencies: &[usize])
+                       -> anyhow::Result<()> {
+    use crate::retriever::LiveKb;
+    eprintln!("[serve] live scenario: {} requests via {} on {}/{} ({}), \
+               ingest rate={}/s batch={} shards={}",
+              questions.len(), method.label(), model, kind.label(),
+              dataset.label(), cfg.ingest.rate, cfg.ingest.batch,
+              cfg.retriever.shards);
+    let mut report = Report::new(
+        "serve_live",
+        "Live serving: requests/s + latency percentiles vs concurrency \
+         under concurrent ingestion (epoch snapshots, ADR-006)");
+    provider.with_lm(cfg, model, &mut |lm| {
+        for &c in concurrencies {
+            let live = LiveKb::build(cfg, kind, (*bed.corpus).clone(),
+                                     bed.embeddings.data.clone(),
+                                     bed.embeddings.dim);
+            let r = lm.serve_live_throughput(enc, kind, &live, questions,
+                                             method, cfg, c)?;
+            let s = &r.summary;
+            report.line(&format!(
+                "conc={:<3} {:>7.2} req/s  p50={:.3}s p99={:.3}s \
+                 wall={:.2}s  coalesce mean={:.1}  epochs {}..{} \
+                 (+{} published, {} docs, kb {}->{}) splits={}",
+                s.concurrency, s.rps, s.p50_s, s.p99_s, s.wall_s,
+                s.mean_coalesced, r.start_epoch, r.end_epoch,
+                r.epochs_published, r.docs_ingested, r.kb_len_start,
+                r.kb_len_end, s.epoch_splits));
+            report.row(Value::obj(vec![
+                ("model", Value::str(model)),
+                ("retriever", Value::str(kind.label())),
+                ("dataset", Value::str(dataset.label())),
+                ("method", Value::str(method.label())),
+                ("concurrency", Value::num(s.concurrency as f64)),
+                ("requests", Value::num(s.requests as f64)),
+                ("rps", Value::num(s.rps)),
+                ("p50_s", Value::num(s.p50_s)),
+                ("p99_s", Value::num(s.p99_s)),
+                ("wall_s", Value::num(s.wall_s)),
+                ("mean_coalesced", Value::num(s.mean_coalesced)),
+                ("ingest_rate", Value::num(cfg.ingest.rate)),
+                ("ingest_batch", Value::num(cfg.ingest.batch as f64)),
+                ("docs_ingested", Value::num(r.docs_ingested as f64)),
+                ("epochs_published",
+                 Value::num(r.epochs_published as f64)),
+                ("start_epoch", Value::num(r.start_epoch as f64)),
+                ("end_epoch", Value::num(r.end_epoch as f64)),
+                ("epochs_served", Value::num(s.epochs_served as f64)),
+                ("epoch_splits", Value::num(s.epoch_splits as f64)),
+                ("kb_len_start", Value::num(r.kb_len_start as f64)),
+                ("kb_len_end", Value::num(r.kb_len_end as f64)),
             ]));
         }
         Ok(())

@@ -28,16 +28,23 @@
 //! (`--engine-out`, default `BENCH_PR4.json`), and any ratio below 1.0
 //! fails the gate: asynchronous retrieval execution must never be a
 //! regression.
+//!
+//! A third artifact (`--live-out`, default `BENCH_PR5.json`) records the
+//! **mixed ingest+query cell** (DESIGN.md ADR-006): query p50/p99 and
+//! requests/s at the same concurrency with live ingestion off vs on —
+//! a freshness-cost trajectory, recorded but not ratio-gated (the
+//! correctness side is gated by tests/live_update_equivalence.rs).
 
 use crate::cli::Flags;
 use crate::config::{Config, RetrieverKind};
 use crate::datagen::Dataset;
 use crate::eval::drivers::{knn_fixture, knn_retriever, ErasedLm, Provider,
                            KNN_MODEL};
-use crate::eval::runner::{questions_for, QaMethod};
+use crate::eval::runner::{questions_for, LiveServeReport, QaMethod,
+                          ServeSummary};
 use crate::eval::workload::TestBed;
 use crate::knnlm::KnnServeOptions;
-use crate::retriever::{InjectedLatency, Retriever};
+use crate::retriever::{InjectedLatency, LiveKb, Retriever};
 use crate::spec::StridePolicy;
 use crate::util::json::Value;
 use std::sync::Arc;
@@ -277,14 +284,107 @@ fn knn_engine_sweep(lm: &dyn ErasedLm, ds: &crate::knnlm::Datastore,
     })
 }
 
+/// The mixed ingest+query cell (PR 5): query-side p50/p99 and requests/s
+/// at [`ENGINE_CONC`] with live ingestion **off** (the frozen engine
+/// path) vs **on** (a fresh [`LiveKb`] per run, epoch publishes between
+/// admission waves plus a background writer at
+/// `RALMSPEC_BENCH_INGEST_RATE` docs/s). Recorded to `BENCH_PR5.json` as
+/// a trajectory artifact — the cell is a *measurement*, not a gated
+/// ratio: a live KB may legitimately pay some query latency for
+/// freshness, and the correctness side (bit-identity under ingestion) is
+/// gated by tests/live_update_equivalence.rs instead. The cell still
+/// fails the command if serving itself errors under ingestion.
+struct LiveCell {
+    retriever: &'static str,
+    off: ServeSummary,
+    on: ServeSummary,
+    docs_ingested: u64,
+    epochs_published: u64,
+}
+
+impl LiveCell {
+    fn to_json(&self, rate: f64) -> Value {
+        Value::obj(vec![
+            ("retriever", Value::str(self.retriever)),
+            ("concurrency", Value::num(ENGINE_CONC as f64)),
+            ("ingest_rate", Value::num(rate)),
+            ("off_rps", Value::num(self.off.rps)),
+            ("off_p50_s", Value::num(self.off.p50_s)),
+            ("off_p99_s", Value::num(self.off.p99_s)),
+            ("on_rps", Value::num(self.on.rps)),
+            ("on_p50_s", Value::num(self.on.p50_s)),
+            ("on_p99_s", Value::num(self.on.p99_s)),
+            ("docs_ingested", Value::num(self.docs_ingested as f64)),
+            ("epochs_published",
+             Value::num(self.epochs_published as f64)),
+            ("epochs_served", Value::num(self.on.epochs_served as f64)),
+            ("epoch_splits", Value::num(self.on.epoch_splits as f64)),
+        ])
+    }
+}
+
+/// Ingest rate (docs/s) for the live cell's background writer.
+fn ingest_rate() -> f64 {
+    env_usize("RALMSPEC_BENCH_INGEST_RATE", 200) as f64
+}
+
+fn live_ingest_sweep(lm: &dyn ErasedLm, enc: &dyn crate::datagen::Encoder,
+                     bed: &TestBed, cfg: &Config)
+                     -> anyhow::Result<LiveCell> {
+    eprintln!("[gate] live ingest cell: conc={ENGINE_CONC}, \
+               rate={}/s batch={}...", ingest_rate(), cfg.ingest.batch);
+    let n = (2 * ENGINE_CONC).max(cfg.eval.requests);
+    let questions = questions_for(bed, Dataset::WikiQa, n, 0,
+                                  cfg.eval.seed);
+    let method = QaMethod::spec(crate::config::PREFETCH, false, false);
+    let runs = cfg.eval.runs.max(1);
+    // Ingest off: the frozen engine path over the same bed + questions.
+    let mut off: Option<ServeSummary> = None;
+    for _ in 0..runs {
+        let s = lm.serve_throughput(enc, bed, RetrieverKind::Edr,
+                                    &questions, method, cfg,
+                                    ENGINE_CONC)?;
+        if off.as_ref().map_or(true, |b| s.rps > b.rps) {
+            off = Some(s);
+        }
+    }
+    // Ingest on: a fresh live KB per run so runs stay comparable.
+    let mut live_cfg = cfg.clone();
+    live_cfg.ingest.rate = ingest_rate();
+    let mut on: Option<LiveServeReport> = None;
+    for _ in 0..runs {
+        let live = LiveKb::build(&live_cfg, RetrieverKind::Edr,
+                                 (*bed.corpus).clone(),
+                                 bed.embeddings.data.clone(),
+                                 bed.embeddings.dim);
+        let r = lm.serve_live_throughput(enc, RetrieverKind::Edr, &live,
+                                         &questions, method, &live_cfg,
+                                         ENGINE_CONC)?;
+        if on.as_ref().map_or(true, |b| r.summary.rps > b.summary.rps) {
+            on = Some(r);
+        }
+    }
+    let on = on.expect("runs >= 1");
+    Ok(LiveCell {
+        retriever: RetrieverKind::Edr.label(),
+        off: off.expect("runs >= 1"),
+        docs_ingested: on.docs_ingested,
+        epochs_published: on.epochs_published,
+        on: on.summary,
+    })
+}
+
 pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     let cfg = gate_config(cfg);
     let out = flags.get("out").unwrap_or("BENCH_PR3.json").to_string();
     let engine_out =
         flags.get("engine-out").unwrap_or("BENCH_PR4.json").to_string();
+    let live_out =
+        flags.get("live-out").unwrap_or("BENCH_PR5.json").to_string();
     let provider = Provider::from_flags(&cfg, flags)?;
     let mut ratios: Vec<Ratio> = Vec::new();
     let mut engine_ratios: Vec<EngineRatio> = Vec::new();
+    let mut live_cells: Vec<LiveCell> = Vec::new();
 
     // --- fig4 trajectory: RaLMSpec+P vs RaLMSeq per QA retriever class.
     // +P (sync, fixed stride) is the most schedule-deterministic variant,
@@ -313,6 +413,8 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
             }
             engine_ratios.push(qa_engine_sweep(lm, enc.as_ref(), &bed,
                                                &cfg)?);
+            live_cells.push(live_ingest_sweep(lm, enc.as_ref(), &bed,
+                                              &cfg)?);
             Ok(())
         })?;
     } else {
@@ -424,6 +526,38 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         }
         std::fs::write(&engine_out, engine_doc.pretty())?;
         println!("[gate] wrote {engine_out}");
+    }
+    if !live_cells.is_empty() {
+        for c in &live_cells {
+            println!("[gate] live  {:<4} conc={} off: {:.2} req/s \
+                      p50={:.4}s p99={:.4}s | on: {:.2} req/s \
+                      p50={:.4}s p99={:.4}s  (+{} docs, {} epochs)",
+                     c.retriever, ENGINE_CONC, c.off.rps, c.off.p50_s,
+                     c.off.p99_s, c.on.rps, c.on.p50_s, c.on.p99_s,
+                     c.docs_ingested, c.epochs_published);
+        }
+        let live_doc = Value::obj(vec![
+            ("gate", Value::str("live-ingest")),
+            ("concurrency", Value::num(ENGINE_CONC as f64)),
+            ("ingest_rate", Value::num(ingest_rate())),
+            ("ingest_batch", Value::num(cfg.ingest.batch as f64)),
+            ("runs", Value::num(cfg.eval.runs as f64)),
+            // Measurement cell, not a gated ratio (see live_ingest_sweep
+            // docs): pass reflects that serving under ingestion
+            // completed, the bit-identity side lives in
+            // tests/live_update_equivalence.rs.
+            ("pass", Value::Bool(true)),
+            ("cells",
+             Value::Arr(live_cells.iter()
+                            .map(|c| c.to_json(ingest_rate())).collect())),
+        ]);
+        if let Some(dir) = std::path::Path::new(&live_out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&live_out, live_doc.pretty())?;
+        println!("[gate] wrote {live_out}");
     }
     // Entries are labeled by origin: "fig4/EDR ..." / "fig5/..." are
     // spec-vs-baseline speedups (the speculation pipeline), "async/..."

@@ -8,10 +8,12 @@ pub mod runner;
 pub mod workload;
 
 pub use report::{cell_stats, speedup, CellStats, Report};
-pub use runner::{build_spec_options, query_mode, questions_for,
-                 run_engine_cell, run_engine_cell_kb, run_knn_engine_cell,
+pub use runner::{build_spec_options, ingest_synthetic, query_mode,
+                 questions_for, run_engine_cell, run_engine_cell_kb,
+                 run_engine_cell_live, run_knn_engine_cell,
                  run_knn_engine_cell_mixed, run_qa_cell,
                  serve_knn_throughput, serve_knn_throughput_mixed,
-                 serve_throughput, serve_throughput_kb, QaMethod,
-                 ServeSummary};
+                 serve_live_throughput, serve_throughput,
+                 serve_throughput_kb, LiveCellOutcome, LiveServeReport,
+                 QaMethod, ServeSummary};
 pub use workload::TestBed;

@@ -3,15 +3,17 @@
 
 use crate::baseline::{BaselineOptions, RalmSeq};
 use crate::config::{Config, RetrieverKind};
-use crate::datagen::{Dataset, Encoder, Question};
+use crate::datagen::{embed_doc, Dataset, Encoder, Question};
 use crate::eval::workload::TestBed;
 use crate::lm::LanguageModel;
 use crate::metrics::{ReqMetrics, Stopwatch};
 use crate::knnlm::{Datastore, KnnServeOptions, KnnTask};
+use crate::retriever::epoch::{EpochSnapshot, IngestStats, LiveKb};
 use crate::retriever::Retriever;
 use crate::serving::{EngineOptions, EngineStats, ServeEngine};
 use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecPipeline,
                   SpecTask};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// One serving method of the paper's evaluation grid.
@@ -211,6 +213,167 @@ fn ensure_no_failures<T: crate::serving::ServeTask>(
     Ok(())
 }
 
+/// Per-request outcome of one live-KB engine cell
+/// ([`run_engine_cell_live`]): metrics, engine stats, and — the part the
+/// equivalence suite needs — the [`EpochSnapshot`] each request was
+/// pinned to, so a sequential rerun against exactly that snapshot can be
+/// compared bit-for-bit.
+pub struct LiveCellOutcome {
+    /// Per-request metrics, in question order.
+    pub metrics: Vec<ReqMetrics>,
+    pub stats: EngineStats,
+    /// `pins[i]` is the snapshot request `i` was admitted under.
+    pub pins: Vec<Arc<EpochSnapshot>>,
+    /// Writer counters at the end of the run.
+    pub ingest: IngestStats,
+}
+
+/// Ingest `n` synthetic documents through the live writer (embedding on
+/// the caller's thread — the encoder is not `Send`) and publish whatever
+/// is pending. Returns the published epoch, if any.
+pub fn ingest_synthetic(live: &LiveKb, encoder: &dyn Encoder, n: usize,
+                        seed: u64, doc_len: (usize, usize))
+                        -> anyhow::Result<Option<u64>> {
+    let mut writer = live.writer.lock().unwrap();
+    let docs = writer.corpus().synth_docs(seed, writer.next_id(), n,
+                                          doc_len);
+    for d in docs {
+        let emb = embed_doc(encoder, &d);
+        writer.ingest(d.tokens, d.topic, emb)?;
+    }
+    writer.flush()
+}
+
+/// Serve `questions` through the engine against a **live** knowledge
+/// base (DESIGN.md ADR-006): submissions arrive in `waves` admission
+/// waves with `cfg.ingest.batch` documents ingested (and an epoch
+/// published) between consecutive waves, so the in-flight set spans
+/// several pinned epochs; with `bg_rate > 0` a background writer thread
+/// keeps ingesting pre-embedded documents *during* the run, exercising
+/// concurrent publish-vs-read. Each request is pinned to the snapshot
+/// current at its submission; its output is bit-identical to a
+/// sequential `SpecPipeline::run` against that snapshot
+/// (tests/live_update_equivalence.rs).
+#[allow(clippy::too_many_arguments)]
+pub fn run_engine_cell_live<L: LanguageModel>(
+    lm: &L, encoder: &dyn Encoder, kind: RetrieverKind,
+    live: &Arc<LiveKb>, questions: &[Question], methods: &[QaMethod],
+    cfg: &Config, engine_opts: EngineOptions, waves: usize, bg_rate: f64)
+    -> anyhow::Result<LiveCellOutcome> {
+    anyhow::ensure!(questions.len() == methods.len(),
+                    "{} questions but {} methods",
+                    questions.len(), methods.len());
+    anyhow::ensure!(!questions.is_empty(),
+                    "live engine cell needs at least one request");
+    let queries = QueryBuilder {
+        encoder,
+        mode: query_mode(kind),
+        dense_len: cfg.retriever.dense_query_len,
+        sparse_len: cfg.retriever.sparse_query_len,
+    };
+    // Admission plan: resolve every request's pinned snapshot first,
+    // ingesting + publishing between waves — the borrow of each pin must
+    // outlive the engine below, and ingestion must not move under a
+    // constructed task.
+    let waves = waves.max(1).min(questions.len().max(1));
+    let bounds = crate::retriever::sharded::shard_bounds(questions.len(),
+                                                         waves);
+    let mut pins: Vec<Arc<EpochSnapshot>> =
+        Vec::with_capacity(questions.len());
+    for (w, &(lo, hi)) in bounds.iter().enumerate() {
+        if w > 0 {
+            ingest_synthetic(live, encoder, cfg.ingest.batch,
+                             cfg.corpus.seed ^ (0xA11C_E000 + w as u64),
+                             cfg.corpus.doc_len)?;
+        }
+        let snap = live.epochs.snapshot();
+        for _ in lo..hi {
+            pins.push(snap.clone());
+        }
+    }
+    // Pre-embedded payload for the during-run writer thread (the encoder
+    // cannot cross threads; token synthesis + embedding happen here).
+    let bg_payload: Vec<(Vec<u32>, u32, Vec<f32>)> = if bg_rate > 0.0 {
+        let writer = live.writer.lock().unwrap();
+        writer
+            .corpus()
+            .synth_docs(cfg.corpus.seed ^ 0xBACD_0C5, writer.next_id(),
+                        4 * cfg.ingest.batch.max(1), cfg.corpus.doc_len)
+            .into_iter()
+            .map(|d| {
+                let e = embed_doc(encoder, &d);
+                (d.tokens, d.topic, e)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
+    let mut engine: ServeEngine<SpecTask<L>> =
+        ServeEngine::new(pins[0].kb.clone(), engine_opts);
+    for pin in &pins {
+        engine.register_epoch(pin.epoch, pin.kb.clone());
+    }
+    for (i, (q, method)) in questions.iter().zip(methods).enumerate() {
+        let QaMethod::Spec { prefetch, os3, async_verify, stride } = *method
+        else {
+            anyhow::bail!("engine serving requires speculative methods");
+        };
+        let pin = &pins[i];
+        engine.submit(
+            i as u64,
+            SpecTask::new(lm, pin.kb.as_ref(), &pin.corpus, queries,
+                          build_spec_options(cfg, prefetch, os3,
+                                             async_verify, stride),
+                          &q.tokens)
+                .pin_epoch(pin.epoch));
+    }
+
+    // Concurrent writer: publishes new epochs while the engine reads its
+    // pinned snapshots. Later epochs are simply never used by these
+    // requests — the point is that publishing is safe under load.
+    let stop = Arc::new(AtomicBool::new(false));
+    let bg = if !bg_payload.is_empty() {
+        let live = live.clone();
+        let stop = stop.clone();
+        let interval =
+            std::time::Duration::from_secs_f64(1.0 / bg_rate.max(1e-9));
+        Some(std::thread::spawn(move || {
+            for (tokens, topic, emb) in bg_payload {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                {
+                    let mut w = live.writer.lock().unwrap();
+                    let _ = w.ingest(tokens, topic, emb);
+                }
+                std::thread::sleep(interval);
+            }
+            let mut w = live.writer.lock().unwrap();
+            let _ = w.flush();
+        }))
+    } else {
+        None
+    };
+
+    let run = engine.run();
+    stop.store(true, Ordering::Relaxed);
+    if let Some(bg) = bg {
+        let _ = bg.join();
+    }
+    let done = run?;
+    ensure_no_failures(&mut engine)?;
+    let stats = engine.stats().clone();
+    drop(engine);
+    let ingest = live.writer.lock().unwrap().stats();
+    Ok(LiveCellOutcome {
+        metrics: done.into_iter().map(|(_, m)| m).collect(),
+        stats,
+        pins,
+        ingest,
+    })
+}
+
 /// One `serve` scenario measurement at a fixed concurrency.
 #[derive(Debug, Clone)]
 pub struct ServeSummary {
@@ -234,6 +397,11 @@ pub struct ServeSummary {
     /// flight, and their mean per parked verification round.
     pub overlap_steps: u64,
     pub overlap_per_round: f64,
+    /// Distinct knowledge-base epochs the requests were pinned to (1 for
+    /// a frozen KB) and the extra coalesced calls epoch boundaries forced
+    /// (ADR-006).
+    pub epochs_served: u64,
+    pub epoch_splits: u64,
 }
 
 /// Reduce one engine run to the `serve` scenario's summary (requests/s,
@@ -270,7 +438,59 @@ fn summarize_serve(concurrency: usize, ms: &[ReqMetrics],
         max_inflight_depth: stats.inflight_depth_max,
         overlap_steps: stats.overlap_steps,
         overlap_per_round: stats.overlap_per_round(),
+        epochs_served: stats.epochs_served,
+        epoch_splits: stats.epoch_splits,
     }
+}
+
+/// One live (ingest + query) `serve` scenario measurement: the query-side
+/// [`ServeSummary`] plus the ingest trajectory behind it.
+#[derive(Debug, Clone)]
+pub struct LiveServeReport {
+    pub summary: ServeSummary,
+    /// Epoch range the run covered (`start` at the first admission,
+    /// `end` after the final publish).
+    pub start_epoch: u64,
+    pub end_epoch: u64,
+    pub docs_ingested: u64,
+    pub epochs_published: u64,
+    /// Knowledge-base size before/after (documents).
+    pub kb_len_start: usize,
+    pub kb_len_end: usize,
+}
+
+/// The mixed ingest+query throughput scenario (`serve --ingest-rate R`):
+/// engine-coalesced serving at a fixed concurrency against a live
+/// knowledge base, with `cfg.ingest.batch`-sized epoch publishes between
+/// admission waves and a background writer ingesting at
+/// `cfg.ingest.rate` docs/s during the run. Shared by the CLI driver,
+/// the bench-gate ingest cell, and the live-update tests.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_live_throughput<L: LanguageModel>(
+    lm: &L, encoder: &dyn Encoder, kind: RetrieverKind,
+    live: &Arc<LiveKb>, questions: &[Question], method: QaMethod,
+    cfg: &Config, concurrency: usize) -> anyhow::Result<LiveServeReport> {
+    let methods: Vec<QaMethod> = vec![method; questions.len()];
+    let opts = EngineOptions::from_config(cfg, concurrency.max(1));
+    let start_epoch = live.epochs.epoch();
+    let kb_len_start = live.epochs.snapshot().kb.len();
+    let sw = Stopwatch::start();
+    let out = run_engine_cell_live(lm, encoder, kind, live, questions,
+                                   &methods, cfg, opts, 4,
+                                   cfg.ingest.rate)?;
+    let wall = sw.elapsed().as_secs_f64().max(1e-9);
+    let summary = summarize_serve(concurrency, &out.metrics, &out.stats,
+                                  wall);
+    let ingest = out.ingest;
+    Ok(LiveServeReport {
+        summary,
+        start_epoch,
+        end_epoch: live.epochs.epoch(),
+        docs_ingested: ingest.docs_ingested,
+        epochs_published: ingest.epochs_published,
+        kb_len_start,
+        kb_len_end: live.epochs.snapshot().kb.len(),
+    })
 }
 
 /// The `serve` throughput scenario: one uniform speculative method, all

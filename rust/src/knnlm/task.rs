@@ -79,6 +79,9 @@ pub struct KnnTask<'a, L: LanguageModel> {
     /// into the next round's pending list when the round verifies clean,
     /// and are discarded with the rollback otherwise.
     overlap: Vec<KnnPending<L::State>>,
+    /// Datastore-index epoch this task is pinned to (0 for a frozen
+    /// datastore) — same grouping contract as `SpecTask` (ADR-006).
+    epoch: u64,
 }
 
 impl<'a, L: LanguageModel> KnnTask<'a, L> {
@@ -100,7 +103,18 @@ impl<'a, L: LanguageModel> KnnTask<'a, L> {
             out: Vec::new(),
             pending: Vec::new(),
             overlap: Vec::new(),
+            epoch: 0,
         }
+    }
+
+    /// Pin this task to a live datastore index epoch (DESIGN.md
+    /// ADR-006): the engine answers its `NeedsVerify` batches with that
+    /// epoch's snapshot and never coalesces it with other epochs' tasks.
+    /// The pinned epoch is stamped into the request's metrics.
+    pub fn pin_epoch(mut self, epoch: u64) -> Self {
+        self.epoch = epoch;
+        self.m.epoch = epoch;
+        self
     }
 
     fn choose(&self, logits: &[f32], nb: &[Scored]) -> u32 {
@@ -363,6 +377,10 @@ impl<'a, L: LanguageModel> KnnTask<'a, L> {
 impl<'a, L: LanguageModel> ServeTask for KnnTask<'a, L> {
     fn advance(&mut self) -> anyhow::Result<TaskStep> {
         KnnTask::advance(self)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     fn overlap_step(&mut self) -> anyhow::Result<bool> {

@@ -10,13 +10,21 @@
 //! * `lm` — generation state machine over the runtime (or a deterministic
 //!   mock for fast tests).
 //! * `retriever` / `cache` — the knowledge-base substrates (exact dense,
-//!   HNSW, BM25) and the per-request speculation cache.
+//!   HNSW, BM25; batch-first, shard-parallel) and the per-request
+//!   speculation cache. `retriever::epoch` adds live updates: mutable
+//!   writer-side indices publishing immutable epoch snapshots (ADR-006).
 //! * `spec` — the paper's contribution: speculative retrieval, batched
 //!   verification + rollback, OS³ stride scheduling, async verification.
 //! * `baseline` — RaLMSeq (retrieve-every-k-tokens) reference serving.
 //! * `knnlm` — KNN-LM datastore serving with relaxed verification (§5.3).
-//! * `serving` — tokio request router / queue / workers (vLLM-router-like).
-//! * `eval` — regenerates every table and figure of the paper's evaluation.
+//! * `serving` — std-thread request router / queue / workers
+//!   (vLLM-router-like) plus the cross-request coalescing `ServeEngine`
+//!   with asynchronous KB-call execution.
+//! * `eval` — regenerates every table and figure of the paper's
+//!   evaluation, plus the serve/bench-gate drivers.
+//!
+//! A quickstart, CLI flag reference, and config-key table live in the
+//! top-level README.md; design rationale is in DESIGN.md (ADRs 001–006).
 
 pub mod baseline;
 pub mod cli;
@@ -34,5 +42,6 @@ pub mod spec;
 pub mod util;
 
 pub use config::{Config, RetrieverKind};
-pub use retriever::{DocId, Retriever, ShardedRetriever, SpecQuery,
-                    WorkerPool};
+pub use retriever::{DocId, EpochKb, EpochSnapshot, KbWriter, LiveKb,
+                    MutableRetriever, Retriever, ShardedRetriever,
+                    SpecQuery, WorkerPool};

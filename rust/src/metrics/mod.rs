@@ -84,6 +84,11 @@ pub struct ReqMetrics {
     pub overlap_steps: u32,
     /// Tokens discarded by rollbacks (speculation overhead).
     pub wasted_tokens: u32,
+    /// Knowledge-base epoch this request was pinned to at admission
+    /// (0 for a frozen KB — see DESIGN.md ADR-006). Aggregation keeps
+    /// the newest epoch seen (`add` takes the max), so a cell summary
+    /// reports how far the live KB had advanced.
+    pub epoch: u64,
     /// Stride used at each verification step (OS³ trajectory).
     pub strides: Vec<u32>,
     /// Generated output (for equivalence checks).
@@ -148,6 +153,7 @@ impl ReqMetrics {
         self.spec_correct += other.spec_correct;
         self.overlap_steps += other.overlap_steps;
         self.wasted_tokens += other.wasted_tokens;
+        self.epoch = self.epoch.max(other.epoch);
         self.strides.extend_from_slice(&other.strides);
     }
 }

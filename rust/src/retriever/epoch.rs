@@ -1,0 +1,711 @@
+//! Live knowledge-base updates with epoch snapshots (DESIGN.md ADR-006).
+//!
+//! Everything below PR 5 served a frozen corpus: indices were built once
+//! and only ever read. This module adds the ingestion path — the
+//! "low-cost adaptation to the latest data" the paper claims for
+//! iterative RaLM — without giving up a single bit of the repo's
+//! output-equivalence guarantees:
+//!
+//! * [`MutableRetriever`] is the writer-side contract: a mutable index
+//!   ([`MutableDense`] brute-force append, [`MutableHnsw`] incremental
+//!   graph insertion, [`MutableBm25`] posting-list append) that can emit
+//!   an immutable [`Retriever`] snapshot at any point. Every
+//!   implementation guarantees **append ≡ rebuild**: the snapshot after
+//!   appending docs is bit-identical to an index built from scratch over
+//!   the extended corpus (pinned by `append_matches_fresh_build` tests in
+//!   each backend).
+//! * [`EpochKb`] is the reader-side snapshot layer: an atomically
+//!   published `Arc<EpochSnapshot>` per epoch. Readers grab a snapshot
+//!   once (one short `RwLock` read) and then run entirely lock-free
+//!   against immutable data; the writer batches pending documents and
+//!   publishes a complete new epoch — retriever *and* corpus together, so
+//!   a reader can never observe a torn (index from epoch E, corpus from
+//!   E′) view.
+//! * [`KbWriter`] owns the mutable master state and drives the
+//!   ingest→publish cycle; [`LiveKb`] bundles writer + snapshot layer for
+//!   the serving stack.
+//!
+//! **Why stale speculation stays safe**: a serving task pins the snapshot
+//! it was admitted under and does *all* its work — cache scoring,
+//! batched verification, document reads — against that one epoch. The
+//! speculation cache may hold documents retrieved rounds ago, but
+//! verification re-scores against the pinned epoch's exact metric, so a
+//! stale cached doc is at worst a mis-speculation (rolled back like any
+//! other), never a correctness leak. See ADR-006 for the full argument,
+//! including why BM25's N-dependent idf makes per-epoch pinning mandatory
+//! rather than merely hygienic.
+
+use super::dense::{DenseExact, EmbeddingMatrix};
+use super::hnsw::Hnsw;
+use super::sparse::Bm25;
+use super::{Retriever, ShardedRetriever};
+use crate::config::{Config, RetrieverKind};
+use crate::datagen::corpus::{Corpus, Document};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Writer-side contract for a live-updatable index: append freshly
+/// embedded documents, then emit an immutable snapshot that is
+/// **bit-identical to a from-scratch build** over the same documents.
+///
+/// Implementations never mutate published state — [`snapshot`]
+/// materializes an independent `Arc` the readers own outright, which is
+/// what lets a writer keep appending while arbitrarily many readers serve
+/// from earlier epochs.
+///
+/// ```
+/// use ralmspec::retriever::epoch::{MutableDense, MutableRetriever};
+/// use ralmspec::retriever::{Retriever, SpecQuery};
+/// use ralmspec::datagen::Document;
+///
+/// // A 2-doc, 4-dim knowledge base...
+/// let mut kb = MutableDense::new(4, vec![1.0, 0.0, 0.0, 0.0,
+///                                        0.0, 1.0, 0.0, 0.0]);
+/// let epoch0 = kb.snapshot(1);
+/// assert_eq!(epoch0.len(), 2);
+///
+/// // ...grows by one appended doc; the old snapshot is untouched.
+/// let doc = Document { id: 2, topic: 0, tokens: vec![7, 8] };
+/// kb.append(&[doc], &[vec![0.0, 0.0, 1.0, 0.0]]).unwrap();
+/// let epoch1 = kb.snapshot(1);
+/// assert_eq!(epoch0.len(), 2);
+/// assert_eq!(epoch1.len(), 3);
+///
+/// // The new doc is retrievable in the new epoch only.
+/// let q = SpecQuery::dense_only(vec![0.0, 0.0, 1.0, 0.0]);
+/// assert_eq!(epoch1.retrieve(&q).unwrap().id, 2);
+/// assert_ne!(epoch0.retrieve(&q).unwrap().id, 2);
+/// ```
+///
+/// [`snapshot`]: MutableRetriever::snapshot
+pub trait MutableRetriever: Send {
+    /// Append documents (contiguous ids continuing the current length)
+    /// with their precomputed embedding rows. Sparse backends ignore the
+    /// embeddings; dense backends ignore the token payload.
+    fn append(&mut self, docs: &[Document], embeddings: &[Vec<f32>])
+              -> anyhow::Result<()>;
+
+    /// An immutable snapshot of the current state, optionally wrapped in
+    /// a scatter-gather [`ShardedRetriever`] (`shards > 1`). The snapshot
+    /// shares no mutable state with the writer.
+    fn snapshot(&self, shards: usize) -> Arc<dyn Retriever>;
+
+    /// Documents currently indexed (pending-but-unpublished docs are not
+    /// counted — they live in the [`KbWriter`] until the next publish).
+    fn len(&self) -> usize;
+}
+
+/// Live exact-dense index ("EDR"): appending is a row append onto the
+/// embedding matrix; a snapshot clones the matrix into a fresh
+/// [`DenseExact`]. Append ≡ rebuild holds trivially (same rows, same
+/// scan).
+pub struct MutableDense {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl MutableDense {
+    pub fn new(dim: usize, data: Vec<f32>) -> Self {
+        assert!(dim > 0 && data.len() % dim == 0,
+                "embedding data shape mismatch");
+        Self { dim, data }
+    }
+}
+
+/// Validate a whole append batch (row shapes + id contiguity) before any
+/// mutation, so `MutableRetriever::append` is all-or-nothing: a rejected
+/// batch leaves the index byte-identical, which is what keeps the writer
+/// (whose corpus and backend must stay aligned) usable after an error.
+fn validate_batch(docs: &[Document], embeddings: &[Vec<f32>], dim: usize,
+                  len: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(docs.len() == embeddings.len(),
+                    "{} docs but {} embedding rows",
+                    docs.len(), embeddings.len());
+    for (i, (d, e)) in docs.iter().zip(embeddings).enumerate() {
+        anyhow::ensure!(e.len() == dim,
+                        "doc {}: embedding dim {} != {}",
+                        d.id, e.len(), dim);
+        anyhow::ensure!(d.id as usize == len + i,
+                        "doc {}: ids must be contiguous", d.id);
+    }
+    Ok(())
+}
+
+impl MutableRetriever for MutableDense {
+    fn append(&mut self, docs: &[Document], embeddings: &[Vec<f32>])
+              -> anyhow::Result<()> {
+        validate_batch(docs, embeddings, self.dim,
+                       self.data.len() / self.dim)?;
+        for e in embeddings {
+            self.data.extend_from_slice(e);
+        }
+        Ok(())
+    }
+
+    fn snapshot(&self, shards: usize) -> Arc<dyn Retriever> {
+        let emb = Arc::new(EmbeddingMatrix::new(self.dim,
+                                                self.data.clone()));
+        let base = Arc::new(DenseExact::new(emb));
+        if shards > 1 {
+            Arc::new(ShardedRetriever::new(base, shards))
+        } else {
+            base
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+}
+
+/// Live HNSW index ("ADR"): appending swaps in the extended embedding
+/// matrix and inserts the new nodes incrementally ([`Hnsw::append`],
+/// reusing the shared `SearchScratch`); a snapshot clones the graph.
+/// Append ≡ rebuild because node levels are per-id seeded and the
+/// from-scratch build is itself sequential insertion.
+pub struct MutableHnsw {
+    dim: usize,
+    data: Vec<f32>,
+    index: Hnsw,
+}
+
+impl MutableHnsw {
+    pub fn new(dim: usize, data: Vec<f32>, m: usize, ef_construction: usize,
+               ef_search: usize, seed: u64) -> Self {
+        let emb = Arc::new(EmbeddingMatrix::new(dim, data.clone()));
+        let index = Hnsw::build(emb, m, ef_construction, ef_search, seed);
+        Self { dim, data, index }
+    }
+}
+
+impl MutableRetriever for MutableHnsw {
+    fn append(&mut self, docs: &[Document], embeddings: &[Vec<f32>])
+              -> anyhow::Result<()> {
+        validate_batch(docs, embeddings, self.dim,
+                       self.data.len() / self.dim)?;
+        for e in embeddings {
+            self.data.extend_from_slice(e);
+        }
+        let emb = Arc::new(EmbeddingMatrix::new(self.dim,
+                                                self.data.clone()));
+        self.index.append(emb);
+        Ok(())
+    }
+
+    fn snapshot(&self, shards: usize) -> Arc<dyn Retriever> {
+        let base = Arc::new(self.index.clone());
+        if shards > 1 {
+            Arc::new(ShardedRetriever::new(base, shards))
+        } else {
+            base
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+}
+
+/// Live BM25 index ("SR"): appending extends the posting lists and
+/// recomputes the global statistics ([`Bm25::append_docs`]); a snapshot
+/// clones the index. Note SR is the backend where epoch pinning is
+/// *mandatory* for bit-identity: idf and avgdl shift with every publish,
+/// so even old documents score differently across epochs.
+pub struct MutableBm25 {
+    index: Bm25,
+}
+
+impl MutableBm25 {
+    pub fn new(index: Bm25) -> Self {
+        Self { index }
+    }
+}
+
+impl MutableRetriever for MutableBm25 {
+    fn append(&mut self, docs: &[Document], _embeddings: &[Vec<f32>])
+              -> anyhow::Result<()> {
+        // Validate the whole batch before mutating (same all-or-nothing
+        // contract as the dense backends): `Bm25::append_docs` asserts
+        // these invariants per doc mid-loop, and a panic there would
+        // leave the index partially extended — and poison the writer
+        // mutex of any `LiveKb` above us.
+        let vocab = self.index.postings.len();
+        let len = Retriever::len(&self.index);
+        for (i, d) in docs.iter().enumerate() {
+            anyhow::ensure!(d.id as usize == len + i,
+                            "doc {}: ids must be contiguous", d.id);
+            anyhow::ensure!(
+                d.tokens.iter().all(|&t| (t as usize) < vocab),
+                "doc {}: token ids outside the index vocab ({vocab})",
+                d.id);
+        }
+        self.index.append_docs(docs);
+        Ok(())
+    }
+
+    fn snapshot(&self, shards: usize) -> Arc<dyn Retriever> {
+        let base = Arc::new(self.index.clone());
+        if shards > 1 {
+            Arc::new(ShardedRetriever::new(base, shards))
+        } else {
+            base
+        }
+    }
+
+    fn len(&self) -> usize {
+        Retriever::len(&self.index)
+    }
+}
+
+/// One published epoch: a consistent (retriever, corpus) pair. Readers
+/// hold the `Arc` for as long as they need the view; the writer never
+/// touches a published snapshot again.
+pub struct EpochSnapshot {
+    /// Monotonic epoch id (0 = the initial build).
+    pub epoch: u64,
+    /// The epoch's immutable index view (possibly shard-wrapped).
+    pub kb: Arc<dyn Retriever>,
+    /// The epoch's corpus view — documents `0..kb.len()`. Published
+    /// together with `kb` so no reader can pair an index from one epoch
+    /// with document text from another.
+    pub corpus: Arc<Corpus>,
+}
+
+/// The atomically swappable current-epoch cell. `snapshot()` is the only
+/// thing on a reader's hot path and costs one `RwLock` read + `Arc`
+/// clone; all retrieval then runs against immutable data. Publishing
+/// takes the write lock for the duration of a pointer swap.
+///
+/// Memory ordering: the writer fully constructs the new snapshot (index
+/// append, corpus clone, `Arc` allocation) *before* taking the write
+/// lock; the lock's release/acquire pair gives every subsequent
+/// `snapshot()` caller a happens-before edge covering all of that
+/// construction. There is no seqlock-style tearing to defend against —
+/// readers clone the `Arc` and never re-read the cell.
+pub struct EpochKb {
+    current: RwLock<Arc<EpochSnapshot>>,
+}
+
+impl EpochKb {
+    pub fn new(initial: EpochSnapshot) -> Self {
+        Self { current: RwLock::new(Arc::new(initial)) }
+    }
+
+    /// The current epoch's snapshot. Callers pin by holding the `Arc`.
+    pub fn snapshot(&self) -> Arc<EpochSnapshot> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// Current epoch id (shorthand for `snapshot().epoch`).
+    pub fn epoch(&self) -> u64 {
+        self.current.read().unwrap().epoch
+    }
+
+    /// Atomically publish the next epoch. Panics if `next` does not
+    /// continue the epoch sequence — a torn or reordered publish is a
+    /// writer bug, never something readers should be able to observe.
+    fn publish(&self, next: EpochSnapshot) {
+        let mut cur = self.current.write().unwrap();
+        assert_eq!(next.epoch, cur.epoch + 1,
+                   "epochs must be published in order");
+        assert!(next.kb.len() >= cur.kb.len(),
+                "the knowledge base is append-only");
+        *cur = Arc::new(next);
+    }
+}
+
+/// Ingest counters (reported by the serve drivers and bench-gate cell).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IngestStats {
+    /// Documents accepted by [`KbWriter::ingest`].
+    pub docs_ingested: u64,
+    /// Epochs published (batched: one per `batch` docs, plus flushes).
+    pub epochs_published: u64,
+}
+
+/// The single writer of a live knowledge base: owns the mutable master
+/// index and corpus, batches pending documents, and publishes complete
+/// epochs through the shared [`EpochKb`].
+///
+/// Callers embed documents themselves (`datagen::embed_doc`) — the
+/// encoder stays on the caller's thread, so the non-`Send` PJRT encoder
+/// constraint never leaks into the writer, and a pre-embedded ingest
+/// stream can be replayed from any thread.
+pub struct KbWriter {
+    epochs: Arc<EpochKb>,
+    backend: Box<dyn MutableRetriever>,
+    corpus: Corpus,
+    shards: usize,
+    batch: usize,
+    pending: Vec<(Document, Vec<f32>)>,
+    stats: IngestStats,
+}
+
+impl KbWriter {
+    /// Publish policy: a new epoch whenever `batch` documents are
+    /// pending (plus explicit [`flush`](Self::flush) calls).
+    pub fn new(epochs: Arc<EpochKb>, backend: Box<dyn MutableRetriever>,
+               corpus: Corpus, shards: usize, batch: usize) -> Self {
+        Self {
+            epochs,
+            backend,
+            corpus,
+            shards: shards.max(1),
+            batch: batch.max(1),
+            pending: Vec::new(),
+            stats: IngestStats::default(),
+        }
+    }
+
+    /// The id the next ingested document will receive.
+    pub fn next_id(&self) -> u32 {
+        (self.corpus.len() + self.pending.len()) as u32
+    }
+
+    /// Accept one document (tokens + topic + precomputed embedding row).
+    /// Returns the new epoch id when this ingest triggered a batched
+    /// publish, `None` while the document is merely pending.
+    pub fn ingest(&mut self, tokens: Vec<u32>, topic: u32,
+                  embedding: Vec<f32>) -> anyhow::Result<Option<u64>> {
+        // Validate here (an error Response for the client) rather than
+        // letting the index-side assertions panic under the writer
+        // mutex, which would poison it for every later ingest.
+        anyhow::ensure!(
+            tokens.iter().all(|&t| (t as usize) < self.corpus.vocab),
+            "ingested document uses token ids outside the corpus vocab \
+             ({})", self.corpus.vocab);
+        let doc = Document { id: self.next_id(), topic, tokens };
+        self.pending.push((doc, embedding));
+        self.stats.docs_ingested += 1;
+        if self.pending.len() >= self.batch {
+            return Ok(Some(self.publish_pending()?));
+        }
+        Ok(None)
+    }
+
+    /// Publish whatever is pending (no-op when nothing is). Returns the
+    /// new epoch id if one was published.
+    pub fn flush(&mut self) -> anyhow::Result<Option<u64>> {
+        if self.pending.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(self.publish_pending()?))
+    }
+
+    fn publish_pending(&mut self) -> anyhow::Result<u64> {
+        let (docs, embs): (Vec<Document>, Vec<Vec<f32>>) =
+            self.pending.drain(..).unzip();
+        // `append` is all-or-nothing (validated before any mutation), so
+        // a rejected batch leaves backend and corpus aligned: the batch
+        // is dropped wholesale, the error surfaces to the ingest caller,
+        // and the writer keeps publishing later batches normally.
+        self.backend.append(&docs, &embs)?;
+        self.corpus.append(docs);
+        let epoch = self.epochs.epoch() + 1;
+        self.epochs.publish(EpochSnapshot {
+            epoch,
+            kb: self.backend.snapshot(self.shards),
+            corpus: Arc::new(self.corpus.clone()),
+        });
+        self.stats.epochs_published += 1;
+        Ok(epoch)
+    }
+
+    pub fn stats(&self) -> IngestStats {
+        self.stats
+    }
+
+    pub fn epochs(&self) -> &Arc<EpochKb> {
+        &self.epochs
+    }
+
+    /// The writer-side corpus (includes published docs, not pending
+    /// ones) — the ingest drivers synthesize new documents from its
+    /// topic pools.
+    pub fn corpus(&self) -> &Corpus {
+        &self.corpus
+    }
+}
+
+/// A live knowledge base as the serving stack consumes it: the shared
+/// snapshot layer plus the mutex-guarded writer (ingest requests arrive
+/// on router workers; the lock serializes them into the single-writer
+/// model the epoch layer assumes).
+pub struct LiveKb {
+    pub epochs: Arc<EpochKb>,
+    pub writer: Mutex<KbWriter>,
+}
+
+impl LiveKb {
+    /// Build the live knowledge base of `kind` over an already-generated
+    /// corpus and its embedding matrix (row-major, `dim`-wide — exactly
+    /// what `datagen::embed_corpus` returns). Epoch 0 is the initial
+    /// build; `cfg.retriever.shards` and `cfg.ingest.batch` govern
+    /// snapshot sharding and the publish cadence.
+    pub fn build(cfg: &Config, kind: RetrieverKind, corpus: Corpus,
+                 embeddings: Vec<f32>, dim: usize) -> Arc<LiveKb> {
+        let r = &cfg.retriever;
+        let backend: Box<dyn MutableRetriever> = match kind {
+            RetrieverKind::Edr => {
+                Box::new(MutableDense::new(dim, embeddings))
+            }
+            RetrieverKind::Adr => {
+                Box::new(MutableHnsw::new(dim, embeddings, r.hnsw_m,
+                                          r.hnsw_ef_construction,
+                                          r.hnsw_ef_search,
+                                          cfg.corpus.seed ^ 0x48))
+            }
+            RetrieverKind::Sr => {
+                Box::new(MutableBm25::new(Bm25::build(&corpus, r.bm25_k1,
+                                                      r.bm25_b)))
+            }
+        };
+        let shards = r.shards.max(1);
+        let epochs = Arc::new(EpochKb::new(EpochSnapshot {
+            epoch: 0,
+            kb: backend.snapshot(shards),
+            corpus: Arc::new(corpus.clone()),
+        }));
+        let writer = Mutex::new(KbWriter::new(epochs.clone(), backend,
+                                              corpus, shards,
+                                              cfg.ingest.batch));
+        Arc::new(LiveKb { epochs, writer })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, CorpusConfig};
+    use crate::datagen::{embed_corpus, embed_doc, HashEncoder};
+    use crate::retriever::SpecQuery;
+    use crate::util::Rng;
+
+    const DIM: usize = 24;
+
+    fn fixture(n_docs: usize) -> (Config, Corpus, Vec<f32>, HashEncoder) {
+        let mut cfg = Config::default();
+        cfg.corpus = CorpusConfig {
+            n_docs,
+            n_topics: 8,
+            doc_len: (16, 48),
+            seed: 0xE60C,
+            ..CorpusConfig::default()
+        };
+        cfg.retriever.hnsw_ef_construction = 40;
+        cfg.retriever.hnsw_ef_search = 32;
+        cfg.ingest.batch = 4;
+        let corpus = Corpus::generate(&cfg.corpus);
+        let enc = HashEncoder::new(DIM, 0xE6);
+        let data = embed_corpus(&enc, &corpus.docs);
+        (cfg, corpus, data, enc)
+    }
+
+    fn ingest_n(live: &LiveKb, enc: &HashEncoder, n: usize, seed: u64) {
+        let mut w = live.writer.lock().unwrap();
+        let docs = w.corpus().synth_docs(seed, w.next_id(), n, (16, 48));
+        for d in docs {
+            let e = embed_doc(enc, &d);
+            w.ingest(d.tokens, d.topic, e).unwrap();
+        }
+        w.flush().unwrap();
+    }
+
+    fn bits(rows: &[Vec<crate::util::Scored>]) -> Vec<Vec<(u32, u32)>> {
+        rows.iter()
+            .map(|r| r.iter().map(|s| (s.id, s.score.to_bits())).collect())
+            .collect()
+    }
+
+    fn probe_queries(corpus: &Corpus, enc: &HashEncoder, kind: RetrieverKind)
+                     -> Vec<SpecQuery> {
+        let mut rng = Rng::new(7);
+        (0..6)
+            .map(|i| {
+                let w = corpus.topic_tokens(i % 8, 12, &mut rng);
+                match kind {
+                    RetrieverKind::Sr => SpecQuery::sparse_only(w),
+                    _ => SpecQuery::dense_only(enc.encode(&w)),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn old_snapshots_survive_publishes_unchanged() {
+        for kind in RetrieverKind::all() {
+            let (cfg, corpus, data, enc) = fixture(200);
+            let live = LiveKb::build(&cfg, kind, corpus.clone(), data, DIM);
+            let qs = probe_queries(&corpus, &enc, kind);
+            let epoch0 = live.epochs.snapshot();
+            let before = bits(&epoch0.kb.retrieve_batch(&qs, 5));
+            ingest_n(&live, &enc, 10, 0x111);
+            ingest_n(&live, &enc, 10, 0x222);
+            assert!(live.epochs.epoch() >= 2, "{kind:?}");
+            // The pinned epoch-0 view is byte-stable across publishes.
+            let after = bits(&epoch0.kb.retrieve_batch(&qs, 5));
+            assert_eq!(before, after, "{kind:?}");
+            assert_eq!(epoch0.kb.len(), 200, "{kind:?}");
+            assert_eq!(live.epochs.snapshot().kb.len(), 220, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn published_snapshot_matches_fresh_build() {
+        // Append ≡ rebuild, end to end through the writer: the snapshot
+        // after ingesting is bit-identical to a LiveKb built directly
+        // over the extended corpus.
+        for kind in RetrieverKind::all() {
+            let (cfg, corpus, data, enc) = fixture(150);
+            let live = LiveKb::build(&cfg, kind, corpus.clone(), data, DIM);
+            ingest_n(&live, &enc, 12, 0x333);
+            let grown = live.epochs.snapshot();
+
+            let big = {
+                let mut c = corpus.clone();
+                let fresh = c.synth_docs(0x333, c.len() as u32, 12, (16, 48));
+                c.append(fresh);
+                c
+            };
+            let big_data = embed_corpus(&enc, &big.docs);
+            let rebuilt =
+                LiveKb::build(&cfg, kind, big.clone(), big_data, DIM);
+            let reference = rebuilt.epochs.snapshot();
+
+            let qs = probe_queries(&big, &enc, kind);
+            assert_eq!(bits(&grown.kb.retrieve_batch(&qs, 7)),
+                       bits(&reference.kb.retrieve_batch(&qs, 7)),
+                       "{kind:?}: append != rebuild");
+            assert_eq!(grown.corpus.len(), reference.corpus.len());
+        }
+    }
+
+    #[test]
+    fn sharded_republish_is_coherent() {
+        // shards > 1: every published epoch's scatter-gather view is
+        // bit-identical to the unsharded snapshot of the same epoch — no
+        // torn shard sets.
+        for kind in RetrieverKind::all() {
+            let (mut cfg, corpus, data, enc) = fixture(120);
+            cfg.retriever.shards = 2;
+            let live =
+                LiveKb::build(&cfg, kind, corpus.clone(), data.clone(), DIM);
+            let mut plain_cfg = cfg.clone();
+            plain_cfg.retriever.shards = 1;
+            let plain = LiveKb::build(&plain_cfg, kind, corpus.clone(),
+                                      data, DIM);
+            ingest_n(&live, &enc, 8, 0x444);
+            ingest_n(&plain, &enc, 8, 0x444);
+            let a = live.epochs.snapshot();
+            let b = plain.epochs.snapshot();
+            assert_eq!(a.epoch, b.epoch);
+            let qs = probe_queries(&corpus, &enc, kind);
+            assert_eq!(bits(&a.kb.retrieve_batch(&qs, 6)),
+                       bits(&b.kb.retrieve_batch(&qs, 6)),
+                       "{kind:?}: sharded republish diverged");
+        }
+    }
+
+    #[test]
+    fn ingested_docs_become_retrievable() {
+        let (cfg, corpus, data, enc) = fixture(100);
+        let live = LiveKb::build(&cfg, RetrieverKind::Edr, corpus, data,
+                                 DIM);
+        let doc = {
+            let w = live.writer.lock().unwrap();
+            w.corpus().synth_docs(0x555, w.next_id(), 1, (16, 48))
+                .pop()
+                .unwrap()
+        };
+        let emb = embed_doc(&enc, &doc);
+        {
+            let mut w = live.writer.lock().unwrap();
+            w.ingest(doc.tokens.clone(), doc.topic, emb.clone()).unwrap();
+            w.flush().unwrap();
+        }
+        let snap = live.epochs.snapshot();
+        // Retrieving the doc's own embedding finds the doc; its text is
+        // readable from the published corpus.
+        let got = snap.kb.retrieve(&SpecQuery::dense_only(emb)).unwrap();
+        assert_eq!(got.id, 100);
+        assert_eq!(snap.corpus.doc(100).tokens, doc.tokens);
+    }
+
+    #[test]
+    fn concurrent_readers_see_monotonic_complete_epochs() {
+        let (cfg, corpus, data, enc) = fixture(100);
+        let live = LiveKb::build(&cfg, RetrieverKind::Edr, corpus, data,
+                                 DIM);
+        let reader = {
+            let live = live.clone();
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                for _ in 0..2000 {
+                    let s = live.epochs.snapshot();
+                    assert!(s.epoch >= last, "epoch went backwards");
+                    // Complete epoch: corpus and index always agree.
+                    assert_eq!(s.corpus.len(), s.kb.len(),
+                               "torn snapshot at epoch {}", s.epoch);
+                    last = s.epoch;
+                }
+                last
+            })
+        };
+        for round in 0..12 {
+            ingest_n(&live, &enc, 4, 0x600 + round);
+        }
+        let last_seen = reader.join().unwrap();
+        assert!(live.epochs.epoch() >= 12);
+        let _ = last_seen;
+    }
+
+    #[test]
+    fn bad_batch_is_rejected_without_wedging_the_writer() {
+        // Regression: `append` is all-or-nothing, so a publish that
+        // fails (here: a wrong-dimension embedding row) drops the batch
+        // wholesale but leaves backend and corpus aligned — later
+        // ingests keep publishing normally instead of failing the
+        // contiguity check forever.
+        let (cfg, corpus, data, enc) = fixture(60);
+        let live = LiveKb::build(&cfg, RetrieverKind::Edr, corpus, data,
+                                 DIM);
+        {
+            let mut w = live.writer.lock().unwrap();
+            let docs =
+                w.corpus().synth_docs(0x888, w.next_id(), 1, (16, 48));
+            let d = docs.into_iter().next().unwrap();
+            w.ingest(d.tokens, d.topic, vec![0.0; DIM + 1]).unwrap();
+            assert!(w.flush().is_err(), "bad embedding dim must error");
+            assert_eq!(w.epochs().epoch(), 0, "nothing published");
+        }
+        ingest_n(&live, &enc, 4, 0x999);
+        assert!(live.epochs.epoch() >= 1,
+                "writer must recover after a rejected batch");
+        assert_eq!(live.epochs.snapshot().kb.len(), 64);
+        assert_eq!(live.epochs.snapshot().corpus.len(), 64);
+    }
+
+    #[test]
+    fn writer_batches_publishes() {
+        let (cfg, corpus, data, enc) = fixture(80);
+        // cfg.ingest.batch == 4.
+        let live = LiveKb::build(&cfg, RetrieverKind::Sr, corpus, data,
+                                 DIM);
+        let mut w = live.writer.lock().unwrap();
+        let docs = w.corpus().synth_docs(0x777, w.next_id(), 6, (16, 48));
+        let mut published = Vec::new();
+        for d in docs {
+            let e = embed_doc(&enc, &d);
+            if let Some(ep) = w.ingest(d.tokens, d.topic, e).unwrap() {
+                published.push(ep);
+            }
+        }
+        // 6 docs at batch 4: one batched publish, two still pending.
+        assert_eq!(published, vec![1]);
+        assert_eq!(w.epochs().epoch(), 1);
+        assert_eq!(w.flush().unwrap(), Some(2));
+        assert_eq!(w.flush().unwrap(), None);
+        let s = w.stats();
+        assert_eq!(s.docs_ingested, 6);
+        assert_eq!(s.epochs_published, 2);
+    }
+}

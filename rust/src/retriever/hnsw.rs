@@ -59,11 +59,21 @@ impl PartialOrd for MinCand {
     }
 }
 
+/// `Clone` so a live-update writer (`retriever::epoch::MutableHnsw`) can
+/// keep a mutable master graph and publish immutable per-epoch snapshots;
+/// the clone shares the embedding matrix (`Arc`) and copies only the
+/// adjacency lists.
+#[derive(Clone)]
 pub struct Hnsw {
     emb: Arc<EmbeddingMatrix>,
     m: usize,
     m0: usize,
     ef_search: usize,
+    /// Build-time parameters, retained so incremental inserts
+    /// ([`Hnsw::append`]) extend the graph exactly as a from-scratch
+    /// build over the larger matrix would.
+    ef_construction: usize,
+    seed: u64,
     entry: u32,
     max_level: usize,
     /// neighbors[node][level] -> neighbor ids.
@@ -95,6 +105,15 @@ thread_local! {
         RefCell::new(SearchScratch::default());
 }
 
+/// Node level for id `i`: per-id seeded, so the level assignment is a pure
+/// function of (seed, id) — the property that makes incremental insertion
+/// ([`Hnsw::append`]) reproduce the from-scratch build bit-for-bit.
+fn level_for(seed: u64, i: usize, ml: f64) -> usize {
+    let mut rng = Rng::new(seed ^ ((i as u64 + 1) * 0x517C_C1B7));
+    let u = rng.next_f64().max(1e-12);
+    ((-u.ln() * ml) as usize).min(12)
+}
+
 impl Hnsw {
     /// Build the graph by sequential insertion.
     pub fn build(emb: Arc<EmbeddingMatrix>, m: usize, ef_construction: usize,
@@ -102,25 +121,46 @@ impl Hnsw {
         assert!(m >= 2);
         let n = emb.len();
         let ml = 1.0 / (m as f64).ln();
-        let mut levels = Vec::with_capacity(n);
-        for i in 0..n {
-            let mut rng = Rng::new(seed ^ ((i as u64 + 1) * 0x517C_C1B7));
-            let u = rng.next_f64().max(1e-12);
-            levels.push(((-u.ln() * ml) as usize).min(12));
-        }
         let mut index = Self {
             emb,
             m,
             m0: 2 * m,
             ef_search,
+            ef_construction,
+            seed,
             entry: 0,
             max_level: 0,
             neighbors: Vec::with_capacity(n),
         };
         for i in 0..n {
-            index.insert(i as u32, levels[i], ef_construction);
+            index.insert(i as u32, level_for(seed, i, ml), ef_construction);
         }
         index
+    }
+
+    /// Incremental insertion (live knowledge-base updates): swap in an
+    /// extended embedding matrix whose rows `[len, emb.len())` are new
+    /// documents and insert them one by one, reusing the same
+    /// `SearchScratch` the batched search path shares.
+    ///
+    /// Because node levels are a pure function of (seed, id) and `build`
+    /// is itself sequential insertion in id order, the grown graph is
+    /// **bit-identical** to `Hnsw::build` over the extended matrix with
+    /// the same parameters — pinned by the `append_matches_fresh_build`
+    /// test. That is what lets per-epoch ADR snapshots stay reproducible.
+    pub fn append(&mut self, emb: Arc<EmbeddingMatrix>) {
+        assert_eq!(emb.dim, self.emb.dim, "appended matrix dim mismatch");
+        let old = self.neighbors.len();
+        assert!(emb.len() >= old, "appended matrix must extend the old one");
+        debug_assert_eq!(&emb.data[..old * emb.dim],
+                         &self.emb.data[..old * emb.dim],
+                         "existing rows must be unchanged");
+        let ml = 1.0 / (self.m as f64).ln();
+        self.emb = emb;
+        for i in old..self.emb.len() {
+            self.insert(i as u32, level_for(self.seed, i, ml),
+                        self.ef_construction);
+        }
     }
 
     #[inline]
@@ -442,6 +482,23 @@ mod tests {
         let ids: std::collections::HashSet<u32> =
             top.iter().map(|s| s.id).collect();
         assert_eq!(ids.len(), top.len());
+    }
+
+    #[test]
+    fn append_matches_fresh_build() {
+        // The live-update invariant: growing a graph by incremental
+        // insertion is bit-identical to building from scratch over the
+        // extended matrix (levels are per-id seeded; build is sequential
+        // insertion) — so per-epoch ADR snapshots are reproducible.
+        let full = clustered_matrix(600, 16, 8, 13);
+        let prefix = Arc::new(EmbeddingMatrix::new(
+            16, full.data[..400 * 16].to_vec()));
+        let mut grown = Hnsw::build(prefix, 8, 40, 32, 21);
+        grown.append(full.clone());
+        let fresh = Hnsw::build(full, 8, 40, 32, 21);
+        assert_eq!(grown.entry, fresh.entry);
+        assert_eq!(grown.max_level, fresh.max_level);
+        assert_eq!(grown.neighbors, fresh.neighbors);
     }
 
     #[test]

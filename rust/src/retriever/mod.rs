@@ -29,13 +29,23 @@
 //! [`sharded::ShardedRetriever`] wraps any [`sharded::Shardable`] backend
 //! in a scatter-gather engine over a persistent [`pool::WorkerPool`],
 //! preserving bit-identical results (see DESIGN.md "Sharded retrieval").
+//!
+//! [`epoch`] adds the live-update path (DESIGN.md ADR-006): every backend
+//! also has a writer-side [`epoch::MutableRetriever`] form (dense append,
+//! HNSW incremental insert, posting-list append) whose immutable
+//! snapshots are published atomically per epoch through
+//! [`epoch::EpochKb`] — serving reads stay lock-free against pinned
+//! snapshots while a [`epoch::KbWriter`] ingests new documents.
 
 pub mod dense;
+pub mod epoch;
 pub mod hnsw;
 pub mod pool;
 pub mod sharded;
 pub mod sparse;
 
+pub use epoch::{EpochKb, EpochSnapshot, KbWriter, LiveKb,
+                MutableRetriever};
 pub use pool::{JobHandle, WorkerPool};
 pub use sharded::{ShardStrategy, Shardable, ShardedRetriever};
 
@@ -63,6 +73,30 @@ impl SpecQuery {
     }
 }
 
+/// The knowledge-base read contract shared by every backend (exact dense,
+/// HNSW, BM25, shard-wrapped, epoch snapshots): batch-first top-k plus
+/// the cache-side scoring metric.
+///
+/// ```
+/// use ralmspec::retriever::dense::{DenseExact, EmbeddingMatrix};
+/// use ralmspec::retriever::{Retriever, SpecQuery};
+/// use std::sync::Arc;
+///
+/// // Three unit vectors along the axes of a 3-dim space.
+/// let emb = Arc::new(EmbeddingMatrix::new(3, vec![1.0, 0.0, 0.0,
+///                                                 0.0, 1.0, 0.0,
+///                                                 0.0, 0.0, 1.0]));
+/// let kb = DenseExact::new(emb);
+///
+/// // The derived single-query path is a batch of one.
+/// let q = SpecQuery::dense_only(vec![0.0, 0.9, 0.1]);
+/// let top = kb.retrieve_topk(&q, 2);
+/// assert_eq!(top[0].id, 1);
+/// assert_eq!(kb.retrieve(&q).unwrap().id, 1);
+///
+/// // The cache ranks with the same metric the index scans with.
+/// assert_eq!(kb.score_doc(&q, 1), top[0].score);
+/// ```
 pub trait Retriever: Send + Sync {
     /// REQUIRED: batched top-k, `(score desc, id asc)`-ordered per query —
     /// the verification step's primitive (Fig 6 / §A.1) and the only entry

@@ -132,16 +132,36 @@ pub struct ShardedRetriever<R: Shardable> {
     label: &'static str,
 }
 
+/// Intern a label string, leaking each **distinct** label at most once.
+/// The trait's `name()` returns `&'static str`, so sharded engines must
+/// leak their formatted label — but live knowledge-base updates
+/// (retriever::epoch) construct a fresh `ShardedRetriever` per published
+/// epoch, and a leak-per-construction would grow without bound under a
+/// long-running ingest stream. Labels repeat (same shard count, same
+/// backend name), so interning caps the leak at the handful of distinct
+/// configurations a process ever serves.
+fn interned_label(label: String) -> &'static str {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    static INTERN: OnceLock<Mutex<HashMap<String, &'static str>>> =
+        OnceLock::new();
+    let map = INTERN.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = map.lock().unwrap();
+    if let Some(&l) = guard.get(&label) {
+        return l;
+    }
+    let leaked: &'static str = Box::leak(label.clone().into_boxed_str());
+    guard.insert(label, leaked);
+    leaked
+}
+
 impl<R: Shardable> ShardedRetriever<R> {
     /// Shard `inner` n ways over an explicit pool.
     pub fn with_pool(inner: Arc<R>, n_shards: usize, pool: Arc<WorkerPool>)
                      -> Self {
         let shards = R::make_shards(&inner, n_shards);
-        // One leaked label per constructed engine: retrievers are few and
-        // long-lived, and the trait's `name()` returns &'static str.
-        let label: &'static str = Box::leak(
-            format!("sharded{}x:{}", shards.len(), inner.name())
-                .into_boxed_str());
+        let label = interned_label(
+            format!("sharded{}x:{}", shards.len(), inner.name()));
         Self { inner, shards, strategy: R::strategy(), pool, label }
     }
 

@@ -26,7 +26,9 @@ thread_local! {
     static ACC_POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
 }
 
-#[derive(Debug)]
+/// `Clone` so a live-update writer (`retriever::epoch::MutableBm25`) can
+/// keep a mutable master index and publish immutable per-epoch snapshots.
+#[derive(Debug, Clone)]
 pub struct Bm25 {
     k1: f32,
     b: f32,
@@ -110,6 +112,66 @@ impl Bm25 {
 
     pub fn stats(&self) -> (usize, f32) {
         (self.n_docs, self.avgdl)
+    }
+
+    /// Append freshly ingested documents (live knowledge-base updates):
+    /// extend the posting lists, per-doc term stats, and doc lengths, then
+    /// recompute the global statistics (idf, avgdl) over the grown corpus.
+    ///
+    /// The per-doc bookkeeping mirrors [`Bm25::build`] exactly (same
+    /// sorted-unique term walk, same `u16` tf saturation) and postings are
+    /// appended in doc-id order, so the grown index is **bit-identical**
+    /// to a from-scratch build over the extended corpus — pinned by the
+    /// `append_matches_fresh_build` test. Note idf and avgdl *do* change
+    /// with N: scores of old documents legitimately differ between
+    /// epochs, which is exactly why epoch snapshots (retriever::epoch)
+    /// must never mix scores across a publish.
+    pub fn append_docs(&mut self, docs: &[crate::datagen::corpus::Document]) {
+        let vocab = self.postings.len();
+        let mut tf_scratch: Vec<u16> = vec![0; vocab];
+        for doc in docs {
+            assert_eq!(doc.id as usize, self.n_docs,
+                       "ingested doc ids must be contiguous");
+            assert!(doc.tokens.iter().all(|&t| (t as usize) < vocab),
+                    "ingested doc uses tokens outside the index vocab");
+            self.doc_len.push(doc.tokens.len() as u32);
+            let mut seen: Vec<u32> = Vec::with_capacity(doc.tokens.len());
+            for &t in &doc.tokens {
+                if tf_scratch[t as usize] == 0 {
+                    seen.push(t);
+                }
+                tf_scratch[t as usize] =
+                    tf_scratch[t as usize].saturating_add(1);
+            }
+            seen.sort_unstable();
+            let terms: Vec<(u32, u16)> =
+                seen.iter().map(|&t| (t, tf_scratch[t as usize])).collect();
+            for &(t, tf) in &terms {
+                self.postings[t as usize].push((doc.id, tf));
+                tf_scratch[t as usize] = 0;
+            }
+            self.doc_terms.push(terms);
+            self.n_docs += 1;
+        }
+        // Global statistics over the grown corpus, with the same
+        // arithmetic as `build` (integer length sum -> f64 divide -> f32).
+        let total: usize =
+            self.doc_len.iter().map(|&l| l as usize).sum();
+        self.avgdl = if self.n_docs == 0 {
+            0.0
+        } else {
+            (total as f64 / self.n_docs as f64) as f32
+        };
+        let n_docs = self.n_docs;
+        self.idf = self
+            .postings
+            .iter()
+            .map(|p| {
+                let df = p.len() as f32;
+                let x = ((n_docs as f32 - df + 0.5) / (df + 0.5)).ln();
+                x.max(0.0)
+            })
+            .collect();
     }
 }
 
@@ -361,6 +423,40 @@ mod tests {
             let s1 = bm.score_doc(&SpecQuery::sparse_only(base), doc);
             let s2 = bm.score_doc(&SpecQuery::sparse_only(doubled), doc);
             assert!((s2 - 2.0 * s1).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn append_matches_fresh_build() {
+        // The live-update invariant: appending docs to a built index is
+        // bit-identical to rebuilding from scratch over the extended
+        // corpus — including the recomputed global statistics (idf,
+        // avgdl) that shift with N.
+        let big = Corpus::generate(&CorpusConfig {
+            n_docs: 500, n_topics: 10, doc_len: (20, 80),
+            ..CorpusConfig::default()
+        });
+        let mut small = big.clone();
+        small.docs.truncate(350);
+        let mut grown = Bm25::build(&small, 0.9, 0.4);
+        grown.append_docs(&big.docs[350..]);
+        let fresh = Bm25::build(&big, 0.9, 0.4);
+        assert_eq!(grown.n_docs, fresh.n_docs);
+        assert_eq!(grown.doc_len, fresh.doc_len);
+        assert_eq!(grown.postings, fresh.postings);
+        assert_eq!(grown.avgdl.to_bits(), fresh.avgdl.to_bits());
+        for (a, b) in grown.idf.iter().zip(&fresh.idf) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // And the scan agrees bit-for-bit.
+        let mut rng = Rng::new(9);
+        let q = SpecQuery::sparse_only(big.topic_tokens(2, 8, &mut rng));
+        let ga = grown.retrieve_topk(&q, 7);
+        let gb = fresh.retrieve_topk(&q, 7);
+        assert_eq!(ga.len(), gb.len());
+        for (x, y) in ga.iter().zip(&gb) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
         }
     }
 

@@ -132,12 +132,12 @@ impl Artifact {
     }
 }
 
-/// Convert an output literal to Vec<f32>.
+/// Convert an output literal to `Vec<f32>`.
 pub fn lit_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
     lit.to_vec::<f32>().map_err(|e| exla("literal->f32", e))
 }
 
-/// Convert an output literal to Vec<i32>.
+/// Convert an output literal to `Vec<i32>`.
 pub fn lit_i32(lit: &xla::Literal) -> anyhow::Result<Vec<i32>> {
     lit.to_vec::<i32>().map_err(|e| exla("literal->i32", e))
 }

@@ -14,7 +14,7 @@
 //!
 //! **Asynchronous retrieval execution (ADR-005)**: with
 //! `kb_parallel >= 1`, flushed per-k groups run on background workers
-//! through a [`RetrievalExecutor`] (up to `kb_parallel` calls in flight;
+//! through a `RetrievalExecutor` (up to `kb_parallel` calls in flight;
 //! excess groups queue FIFO). The engine thread keeps advancing runnable
 //! tasks, draining [`ServeTask::overlap_step`]s for parked tasks across
 //! the whole KB latency, and admitting new requests; completions are
@@ -31,6 +31,15 @@
 //! ([`crate::knnlm::KnnTask`] — the paper's highest-leverage workload, one
 //! retrieval per generated token) coalesce through the same scheduler and
 //! flush policy.
+//!
+//! **Live knowledge bases (ADR-006)**: every task reports the epoch it is
+//! pinned to ([`ServeTask::epoch`]); the flush groups pending batches by
+//! *(top-k, epoch)* and issues each group against that epoch's registered
+//! snapshot ([`ServeEngine::register_epoch`]). Queries of differently
+//! pinned tasks never share a KB call — epochs change global scoring
+//! statistics, so sharing would silently hand a member rows scored under
+//! the wrong snapshot. A frozen KB is the degenerate case: all tasks at
+//! epoch 0, one group per k, identical to the pre-ADR-006 engine.
 //!
 //! **Why per-request outputs survive coalescing and out-of-order
 //! completion bit-for-bit**: every retriever scores a query independently
@@ -49,6 +58,7 @@ use crate::datagen::{Corpus, Encoder};
 use crate::knnlm::{Datastore, KnnLmBaseline, KnnServeOptions, KnnTask};
 use crate::lm::LanguageModel;
 use crate::metrics::{ReqMetrics, Stopwatch};
+use crate::retriever::epoch::{EpochSnapshot, LiveKb};
 use crate::retriever::pool::run_caught;
 use crate::retriever::{Retriever, SpecQuery};
 use crate::serving::executor::{CallOutcome, PreparedCall,
@@ -128,6 +138,13 @@ pub struct EngineStats {
     pub inflight_depth_max: u64,
     /// Verification batches parked in the coalescing buffer.
     pub parked_rounds: u64,
+    /// Distinct knowledge-base epochs the submitted tasks were pinned to
+    /// (1 for a frozen KB — every task reports epoch 0).
+    pub epochs_served: u64,
+    /// Extra coalesced calls forced by epoch boundaries: same-k queries
+    /// that could have shared one call had their tasks not been pinned to
+    /// different epochs (ADR-006 — the price of live consistency).
+    pub epoch_splits: u64,
     /// Overlap speculation steps driven while verifications were pending
     /// or in flight (the async "+A" work that hides KB latency).
     pub overlap_steps: u64,
@@ -183,6 +200,9 @@ struct PendingVerify {
     slot: usize,
     queries: Vec<SpecQuery>,
     k: usize,
+    /// The owning task's pinned epoch: flush groups by (k, epoch) so a
+    /// coalesced call never mixes epochs (ADR-006).
+    epoch: u64,
     enqueued: Stopwatch,
 }
 
@@ -193,8 +213,17 @@ struct GroupMember {
 }
 
 pub struct ServeEngine<T: ServeTask> {
+    /// The default knowledge base — every epoch-0 (frozen-KB) task's
+    /// calls go here; pinned epochs resolve through `epoch_kbs`.
     kb: Arc<dyn Retriever>,
     opts: EngineOptions,
+    /// Pinned-epoch snapshots registered by the caller
+    /// ([`register_epoch`](Self::register_epoch)): a task reporting
+    /// `epoch() == e` has its coalesced calls issued against
+    /// `epoch_kbs[e]` (ADR-006).
+    epoch_kbs: HashMap<u64, Arc<dyn Retriever>>,
+    /// Distinct epochs across submitted tasks (stats).
+    seen_epochs: std::collections::HashSet<u64>,
     /// Admission queue; tasks are constructed at submission so each
     /// request's latency clock covers its admission-queue wait too.
     waiting: VecDeque<(u64, T)>,
@@ -214,13 +243,15 @@ pub struct ServeEngine<T: ServeTask> {
 impl<T: ServeTask> ServeEngine<T> {
     pub fn new(kb: Arc<dyn Retriever>, opts: EngineOptions) -> Self {
         let exec = if opts.kb_parallel >= 1 {
-            Some(RetrievalExecutor::new(kb.clone(), opts.kb_parallel))
+            Some(RetrievalExecutor::new(opts.kb_parallel))
         } else {
             None
         };
         Self {
             kb,
             opts,
+            epoch_kbs: HashMap::new(),
+            seen_epochs: std::collections::HashSet::new(),
             waiting: VecDeque::new(),
             slots: Vec::new(),
             pending: Vec::new(),
@@ -233,12 +264,23 @@ impl<T: ServeTask> ServeEngine<T> {
         }
     }
 
+    /// Register the snapshot a pinned epoch's calls must run against
+    /// (live knowledge bases, ADR-006). Callers register each snapshot
+    /// before (or at) submitting tasks pinned to it; unregistered epochs
+    /// fall back to the engine's default `kb`, which keeps frozen-KB
+    /// callers (every task at epoch 0) working unchanged.
+    pub fn register_epoch(&mut self, epoch: u64, kb: Arc<dyn Retriever>) {
+        self.epoch_kbs.insert(epoch, kb);
+    }
+
     /// Enqueue one request's task (construct it at submission so the
     /// request's latency clock covers its admission-queue wait too —
     /// reported p50/p99 then include what a client would observe, not
     /// just in-flight service time). Admission happens inside
     /// [`run`](Self::run), honouring `max_inflight`.
     pub fn submit(&mut self, id: u64, task: T) {
+        self.seen_epochs.insert(task.epoch());
+        self.stats.epochs_served = self.seen_epochs.len() as u64;
         self.waiting.push_back((id, task));
     }
 
@@ -339,12 +381,18 @@ impl<T: ServeTask> ServeEngine<T> {
                             .push((self.slots[i].id, task.into_metrics()));
                     }
                     TaskStep::NeedsVerify { queries, k } => {
+                        let epoch = self.slots[i]
+                            .task
+                            .as_ref()
+                            .map(|t| t.epoch())
+                            .unwrap_or(0);
                         self.slots[i].awaiting = true;
                         self.stats.parked_rounds += 1;
                         self.pending.push(PendingVerify {
                             slot: i,
                             queries,
                             k,
+                            epoch,
                             enqueued: Stopwatch::start(),
                         });
                     }
@@ -463,23 +511,33 @@ impl<T: ServeTask> ServeEngine<T> {
     }
 
     /// Issue the coalesced KB call(s) for everything in the buffer:
-    /// grouped by top-k (tasks with different prefetch sizes cannot share
-    /// one retrieve_batch call), dispatched to the executor
-    /// (`kb_parallel >= 1`) or run inline. Within a group, submission
-    /// order is preserved; per-query results are independent of
-    /// batchmates, so sub-slice routing is bit-identical to per-task
+    /// grouped by (top-k, pinned epoch) — tasks with different prefetch
+    /// sizes cannot share one retrieve_batch call, and tasks pinned to
+    /// different epochs must not (their snapshots score differently,
+    /// ADR-006) — then dispatched to the executor (`kb_parallel >= 1`)
+    /// or run inline against the group's epoch snapshot. Within a group,
+    /// submission order is preserved; per-query results are independent
+    /// of batchmates, so sub-slice routing is bit-identical to per-task
     /// retrieval.
     fn flush(&mut self) -> anyhow::Result<()> {
         let batch = std::mem::take(&mut self.pending);
         if batch.is_empty() {
             return Ok(());
         }
-        let mut ks: Vec<usize> = batch.iter().map(|p| p.k).collect();
-        ks.sort_unstable();
-        ks.dedup();
-        for k in ks {
-            let idxs: Vec<usize> =
-                (0..batch.len()).filter(|&i| batch[i].k == k).collect();
+        let mut groups: Vec<(usize, u64)> =
+            batch.iter().map(|p| (p.k, p.epoch)).collect();
+        groups.sort_unstable();
+        groups.dedup();
+        let distinct_k = {
+            let mut ks: Vec<usize> = groups.iter().map(|g| g.0).collect();
+            ks.dedup(); // `groups` is sorted by k first
+            ks.len()
+        };
+        self.stats.epoch_splits += (groups.len() - distinct_k) as u64;
+        for (k, epoch) in groups {
+            let idxs: Vec<usize> = (0..batch.len())
+                .filter(|&i| batch[i].k == k && batch[i].epoch == epoch)
+                .collect();
             let queries: Vec<SpecQuery> = idxs
                 .iter()
                 .flat_map(|&i| batch[i].queries.iter().cloned())
@@ -497,12 +555,31 @@ impl<T: ServeTask> ServeEngine<T> {
             // right here for inline ones.
             let enqueued: Vec<Stopwatch> =
                 idxs.iter().map(|&i| batch[i].enqueued).collect();
+            // Resolve the group's snapshot. Epoch 0 falls back to the
+            // engine's default KB (the frozen-KB path); a *nonzero*
+            // pinned epoch with no registered snapshot must not be
+            // silently scored by the wrong KB — that is exactly the bug
+            // class ADR-006 exists to prevent — so the group fails loudly
+            // while the engine keeps serving everyone else.
+            let kb = match self.epoch_kbs.get(&epoch) {
+                Some(kb) => kb.clone(),
+                None if epoch == 0 => self.kb.clone(),
+                None => {
+                    self.fail_group(
+                        &members,
+                        &format!("task pinned to epoch {epoch} but no \
+                                  snapshot was registered for it \
+                                  (ServeEngine::register_epoch)"));
+                    continue;
+                }
+            };
             let group = self.next_group;
             self.next_group += 1;
             self.dispatched.insert(group, members);
             match self.exec.as_mut() {
                 Some(exec) => {
-                    exec.submit(PreparedCall { group, queries, k, enqueued });
+                    exec.submit(PreparedCall { group, queries, k, kb,
+                                               enqueued });
                 }
                 None => {
                     // Synchronous inline flush (kb_parallel == 0): the
@@ -514,7 +591,6 @@ impl<T: ServeTask> ServeEngine<T> {
                         self.stats.inflight_depth_max.max(1);
                     let member_waits: Vec<Duration> =
                         enqueued.iter().map(|s| s.elapsed()).collect();
-                    let kb = &self.kb;
                     let sw = Stopwatch::start();
                     let result =
                         run_caught(|| kb.retrieve_batch(&queries, k));
@@ -618,6 +694,15 @@ pub fn spec_options_for(cfg: &Config, prefetch: bool, os3: bool,
 /// queued jobs and hands them over as one `serve_batch` call, so
 /// cross-request coalescing happens *inside* a worker. `Method::Baseline`
 /// requests in the same drain are served inline via [`RalmSeq`].
+///
+/// With `live` set, the worker serves a **live** knowledge base
+/// (ADR-006): every query request pins the [`EpochSnapshot`] current at
+/// its admission (cache scoring, verification, and document reads all go
+/// to that one epoch — bit-identical to a sequential run against it),
+/// and [`Method::Ingest`] requests feed the shared
+/// [`KbWriter`](crate::retriever::KbWriter), publishing new epochs as
+/// batches fill. Without `live`, behaviour is exactly the frozen-KB
+/// engine of PRs 2–4.
 pub struct EngineBackend<L: LanguageModel> {
     pub lm: L,
     pub kb: std::sync::Arc<dyn Retriever>,
@@ -626,6 +711,9 @@ pub struct EngineBackend<L: LanguageModel> {
     pub mode: QueryMode,
     pub cfg: Config,
     pub engine_opts: EngineOptions,
+    /// Live knowledge base (epoch snapshots + writer); `None` serves the
+    /// frozen `kb`/`corpus` pair above.
+    pub live: Option<std::sync::Arc<LiveKb>>,
 }
 
 impl<L: LanguageModel> EngineBackend<L> {
@@ -636,6 +724,27 @@ impl<L: LanguageModel> EngineBackend<L> {
             dense_len: self.cfg.retriever.dense_query_len,
             sparse_len: self.cfg.retriever.sparse_query_len,
         }
+    }
+
+    /// Serve one [`Method::Ingest`] request: embed the document on this
+    /// worker's encoder (the encoder is not `Send`, so embedding cannot
+    /// happen inside the writer), hand it to the shared writer, and
+    /// report the epoch it landed in (or the current epoch while the
+    /// batch is still filling).
+    fn serve_ingest(&self, live: &LiveKb, req: &Request)
+                    -> anyhow::Result<ReqMetrics> {
+        let sw = Stopwatch::start();
+        let window =
+            &req.question[..req.question.len().min(self.encoder.window())];
+        let embedding = self.encoder.encode(window);
+        let mut writer = live.writer.lock().unwrap();
+        let published =
+            writer.ingest(req.question.clone(), 0, embedding)?;
+        Ok(ReqMetrics {
+            epoch: published.unwrap_or_else(|| writer.epochs().epoch()),
+            total: sw.elapsed(),
+            ..ReqMetrics::default()
+        })
     }
 }
 
@@ -652,17 +761,53 @@ impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
     fn serve_batch(&mut self, reqs: &[Request])
                    -> Vec<anyhow::Result<ReqMetrics>> {
         let queries = self.query_builder();
-        let mut engine: ServeEngine<SpecTask<L>> =
-            ServeEngine::new(self.kb.clone(), self.engine_opts.clone());
+        let live = self.live.clone();
         let mut results: Vec<Option<anyhow::Result<ReqMetrics>>> =
             reqs.iter().map(|_| None).collect();
+        // Admission pass: ingest requests go to the writer immediately
+        // (so a drain's later query requests already see their epochs),
+        // and every query request pins the snapshot current at its own
+        // admission. `pins` is declared before the engine so the tasks
+        // below may borrow from the pinned snapshots.
+        let mut pins: Vec<Option<std::sync::Arc<EpochSnapshot>>> =
+            Vec::with_capacity(reqs.len());
         for (i, req) in reqs.iter().enumerate() {
+            match (&live, req.method) {
+                (Some(l), Method::Ingest) => {
+                    results[i] = Some(self.serve_ingest(l, req));
+                    pins.push(None);
+                }
+                (None, Method::Ingest) => {
+                    results[i] = Some(Err(anyhow::anyhow!(
+                        "request {}: Method::Ingest needs a live \
+                         knowledge base (this worker serves a frozen \
+                         corpus)", req.id)));
+                    pins.push(None);
+                }
+                (Some(l), _) => pins.push(Some(l.epochs.snapshot())),
+                (None, _) => pins.push(None),
+            }
+        }
+        let mut engine: ServeEngine<SpecTask<L>> =
+            ServeEngine::new(self.kb.clone(), self.engine_opts.clone());
+        for pin in pins.iter().flatten() {
+            engine.register_epoch(pin.epoch, pin.kb.clone());
+        }
+        for (i, req) in reqs.iter().enumerate() {
+            if results[i].is_some() {
+                continue; // ingest (or error) already resolved
+            }
+            let (kb, corpus, epoch): (&dyn Retriever, &Corpus, u64) =
+                match pins[i].as_ref() {
+                    Some(p) => (p.kb.as_ref(), &*p.corpus, p.epoch),
+                    None => (self.kb.as_ref(), self.corpus.as_ref(), 0),
+                };
             match req.method {
                 Method::Baseline => {
                     let pipe = RalmSeq {
                         lm: &self.lm,
-                        kb: self.kb.as_ref(),
-                        corpus: self.corpus.as_ref(),
+                        kb,
+                        corpus,
                         queries,
                         opts: BaselineOptions {
                             gen_stride: self.cfg.spec.gen_stride,
@@ -670,23 +815,31 @@ impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
                             max_doc_tokens: self.cfg.spec.max_doc_tokens,
                         },
                     };
-                    results[i] = Some(pipe.run(&req.question));
+                    // Baseline requests pin the same snapshot as spec
+                    // ones; stamp the epoch so their metrics attribute
+                    // it correctly too.
+                    results[i] = Some(pipe.run(&req.question).map(
+                        |mut m| {
+                            m.epoch = epoch;
+                            m
+                        }));
                 }
                 Method::Spec { prefetch, os3, async_verify } => {
                     engine.submit(
                         i as u64,
                         SpecTask::new(
-                            &self.lm, self.kb.as_ref(),
-                            self.corpus.as_ref(), queries,
+                            &self.lm, kb, corpus, queries,
                             spec_options_for(&self.cfg, prefetch, os3,
                                              async_verify),
-                            &req.question));
+                            &req.question)
+                            .pin_epoch(epoch));
                 }
                 Method::Knn => {
                     results[i] = Some(Err(anyhow::anyhow!(
                         "request {}: Method::Knn needs a KnnEngineBackend \
                          (this worker serves the QA corpus)", req.id)));
                 }
+                Method::Ingest => unreachable!("resolved in admission pass"),
             }
         }
         resolve_engine_run(&mut engine, &mut results);
@@ -790,6 +943,14 @@ impl<L: LanguageModel> ServeBackend for KnnEngineBackend<L> {
                         "request {}: Method::Spec needs a QA EngineBackend \
                          (this worker serves the KNN-LM datastore)",
                         req.id)));
+                }
+                Method::Ingest => {
+                    results[i] = Some(Err(anyhow::anyhow!(
+                        "request {}: Method::Ingest targets the QA \
+                         knowledge base (this worker serves the KNN-LM \
+                         datastore; live datastore growth is driven \
+                         through the epoch layer directly, not the \
+                         router)", req.id)));
                 }
             }
         }

@@ -29,12 +29,16 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// One coalesced per-k call prepared by the engine's flush.
+/// One coalesced per-(k, epoch) call prepared by the engine's flush.
 pub(crate) struct PreparedCall {
     /// Engine-side correlation id (maps back to the group's member slots).
     pub group: u64,
     pub queries: Vec<SpecQuery>,
     pub k: usize,
+    /// The knowledge-base snapshot this group's members are pinned to
+    /// (ADR-006): a live KB serves concurrent groups against different
+    /// epochs, so the retriever is per-call state, not executor state.
+    pub kb: Arc<dyn Retriever>,
     /// One enqueue stopwatch per member batch, in member order — snapshotted
     /// immediately before the KB call starts (on the worker), so each
     /// member's `queue_wait` covers its full coalescing-buffer + backlog
@@ -58,7 +62,6 @@ pub(crate) struct CallOutcome {
 /// Runs prepared calls on background workers under an in-flight cap and
 /// feeds a single completion queue the engine can park on.
 pub(crate) struct RetrievalExecutor {
-    kb: Arc<dyn Retriever>,
     pool: Arc<WorkerPool>,
     /// Max concurrently in-flight KB calls (>= 1; the engine handles the
     /// synchronous `kb_parallel == 0` mode itself and never constructs an
@@ -75,10 +78,9 @@ pub(crate) struct RetrievalExecutor {
 }
 
 impl RetrievalExecutor {
-    pub fn new(kb: Arc<dyn Retriever>, cap: usize) -> Self {
+    pub fn new(cap: usize) -> Self {
         let (tx, rx) = channel();
         Self {
-            kb,
             // The dedicated KB-call pool, NOT the shard pool: a sharded
             // retriever's retrieve_batch blocks its worker on scatter
             // jobs queued to the shard pool, so sharing one pool would
@@ -131,14 +133,13 @@ impl RetrievalExecutor {
         self.dispatches += 1;
         self.depth_sum += self.inflight as u64;
         self.depth_max = self.depth_max.max(self.inflight as u64);
-        let kb = self.kb.clone();
         let tx = self.tx.clone();
         self.pool.execute(Box::new(move || {
             let member_waits =
                 call.enqueued.iter().map(|s| s.elapsed()).collect();
             let sw = Stopwatch::start();
-            let result = run_caught(|| kb.retrieve_batch(&call.queries,
-                                                         call.k));
+            let result = run_caught(|| call.kb.retrieve_batch(&call.queries,
+                                                              call.k));
             // The engine owns the other end; if it dropped (run aborted)
             // the completion is moot.
             let _ = tx.send(CallOutcome {

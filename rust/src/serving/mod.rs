@@ -19,7 +19,7 @@
 //! `engine.max_batch` queued jobs at once and the engine coalesces their
 //! verification queries into shared `retrieve_batch` calls. With
 //! `engine.kb_parallel >= 1` those calls execute asynchronously on
-//! background workers ([`executor`], DESIGN.md ADR-005) while the engine
+//! background workers (the `executor` module, DESIGN.md ADR-005) while the engine
 //! thread keeps scheduling; results are bit-identical either way. The
 //! engine is generic over the [`task::ServeTask`] contract (DESIGN.md
 //! ADR-004), so any new workload expressed as a resumable task is

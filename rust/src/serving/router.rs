@@ -20,6 +20,14 @@ pub enum Method {
     /// `KnnServeOptions`. Served through the coalescing engine by
     /// [`crate::serving::KnnEngineBackend`].
     Knn,
+    /// Live knowledge-base ingestion (DESIGN.md ADR-006): the request's
+    /// `question` is the new document's tokens; the serving backend's
+    /// [`crate::retriever::KbWriter`] embeds it, batches it, and
+    /// publishes a new epoch when the batch fills. The response carries
+    /// no tokens; `metrics.epoch` reports the epoch the document landed
+    /// in (or the current epoch while it is still pending). Requires a
+    /// live-KB backend — frozen-KB workers answer with an error.
+    Ingest,
 }
 
 #[derive(Debug, Clone)]

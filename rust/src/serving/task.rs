@@ -40,6 +40,53 @@ pub enum TaskStep {
 /// with [`provide`](Self::provide). `advance` must not be called while a
 /// `NeedsVerify` is outstanding (implementations bail).
 ///
+/// Driving a task by hand — exactly what the sequential drivers
+/// (`SpecPipeline::run`, `KnnLmSpec::run`) and the coalescing
+/// [`super::ServeEngine`] do:
+///
+/// ```
+/// use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+/// use ralmspec::datagen::{generate_questions, Dataset, HashEncoder};
+/// use ralmspec::eval::TestBed;
+/// use ralmspec::lm::MockLm;
+/// use ralmspec::retriever::Retriever;
+/// use ralmspec::serving::TaskStep;
+/// use ralmspec::spec::{QueryBuilder, QueryMode, SpecOptions, SpecTask};
+///
+/// let mut cfg = Config::default();
+/// cfg.corpus = CorpusConfig { n_docs: 200, n_topics: 8,
+///                             doc_len: (16, 48),
+///                             ..CorpusConfig::default() };
+/// let enc = HashEncoder::new(ralmspec::runtime::RETRIEVAL_DIM, 1);
+/// let bed = TestBed::build(&cfg, &enc);
+/// let lm = MockLm::new(cfg.corpus.vocab, 320, 2);
+/// let kb = bed.retriever(RetrieverKind::Edr);
+/// let queries = QueryBuilder {
+///     encoder: &enc,
+///     mode: QueryMode::Dense,
+///     dense_len: cfg.retriever.dense_query_len,
+///     sparse_len: cfg.retriever.sparse_query_len,
+/// };
+/// let q = generate_questions(Dataset::WikiQa, &bed.corpus, 1, 3)
+///     .remove(0);
+/// let opts = SpecOptions { max_new: 8, ..SpecOptions::default() };
+/// let mut task = SpecTask::new(&lm, kb.as_ref(), &bed.corpus, queries,
+///                              opts, &q.tokens);
+/// let metrics = loop {
+///     match task.advance().unwrap() {
+///         TaskStep::Continue => {}
+///         TaskStep::Done => break task.into_metrics(),
+///         TaskStep::NeedsVerify { queries, k } => {
+///             // Answer with any bit-identical equivalent of
+///             // kb.retrieve_batch — here, the direct call itself.
+///             let rows = kb.retrieve_batch(&queries, k);
+///             task.provide(rows, std::time::Duration::ZERO).unwrap();
+///         }
+///     }
+/// };
+/// assert!(!metrics.tokens_out.is_empty());
+/// ```
+///
 /// **Equivalence obligation**: a task's output must be a pure function of
 /// its own query/result sequence. Because every retriever scores a query
 /// independently of its batchmates (pinned by the fig6 driver and
@@ -54,6 +101,18 @@ pub trait ServeTask {
     /// the single-step granularity is what lets a serving engine
     /// interleave many tasks fairly).
     fn advance(&mut self) -> anyhow::Result<TaskStep>;
+
+    /// The knowledge-base epoch this task is pinned to (DESIGN.md
+    /// ADR-006): *every* `NeedsVerify` the task emits must be answered by
+    /// that epoch's snapshot, and the engine must never coalesce queries
+    /// from differently pinned tasks into one KB call — epochs change
+    /// global scoring statistics (BM25 idf/avgdl shift with every
+    /// publish), so a shared call would hand some member a row scored
+    /// under the wrong epoch. Tasks of a frozen (non-live) knowledge
+    /// base report the default epoch 0 and coalesce as before.
+    fn epoch(&self) -> u64 {
+        0
+    }
 
     /// Optional work overlapped with an in-flight verification (the
     /// async "+A" speculation that hides KB latency). Drivers may call

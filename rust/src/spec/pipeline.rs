@@ -155,6 +155,10 @@ pub struct SpecTask<'a, L: LanguageModel> {
     /// They roll into the next round's pending list when the round
     /// verifies clean, and are discarded with the rollback otherwise.
     extra: Vec<Pending<L::State>>,
+    /// Knowledge-base epoch this task is pinned to (0 for a frozen KB):
+    /// `kb`/`corpus` must be that epoch's snapshot, and the engine groups
+    /// coalesced calls by it (DESIGN.md ADR-006).
+    epoch: u64,
 }
 
 /// One speculation step: query → cache lookup → (maybe re-prefill) →
@@ -164,14 +168,15 @@ pub struct SpecTask<'a, L: LanguageModel> {
 fn spec_step<L: LanguageModel>(
     lm: &L, kb: &dyn Retriever, corpus: &Corpus, queries: &QueryBuilder,
     opts: &SpecOptions, state: &mut GenState<L::State>,
-    cache: &mut LocalCache, m: &mut ReqMetrics, req_start: &Stopwatch)
+    cache: &mut LocalCache, m: &mut ReqMetrics, req_start: &Stopwatch,
+    epoch: u64)
     -> anyhow::Result<Pending<L::State>> {
     let step = Stopwatch::start();
     let snapshot = state.snapshot();
     // Query construction (dense-encoder work) is "E", not "R": it runs on
     // the LM side of the system, not in the knowledge base.
     let query = timed(&mut m.encode, || queries.build(state));
-    let hit = timed(&mut m.cache, || cache.retrieve(&query, kb));
+    let hit = timed(&mut m.cache, || cache.retrieve_at(&query, kb, epoch));
     // Cache miss (cannot happen after the initial prime, but be safe):
     // keep the current document.
     let spec_doc = hit.map(|s| s.id)
@@ -211,7 +216,20 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
             state: None,
             pending: Vec::new(),
             extra: Vec::new(),
+            epoch: 0,
         }
+    }
+
+    /// Pin this task to a live knowledge base's epoch (DESIGN.md
+    /// ADR-006). The caller passes the epoch whose snapshot it handed to
+    /// [`new`](Self::new) as `kb`/`corpus`; the engine then (a) answers
+    /// every `NeedsVerify` with that very snapshot and (b) never
+    /// coalesces this task's queries with tasks pinned to other epochs.
+    /// The pinned epoch is stamped into the request's metrics.
+    pub fn pin_epoch(mut self, epoch: u64) -> Self {
+        self.epoch = epoch;
+        self.m.epoch = epoch;
+        self
     }
 
     /// Run until the task finishes (`Done`), needs retrieval results
@@ -254,7 +272,7 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
                     let p = spec_step(self.lm, self.kb, self.corpus,
                                       &self.queries, &self.opts, state,
                                       &mut self.cache, &mut self.m,
-                                      &self.total)?;
+                                      &self.total, self.epoch)?;
                     self.pending.push(p);
                     return Ok(TaskStep::Continue);
                 }
@@ -299,7 +317,7 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
         }
         let p = spec_step(self.lm, self.kb, self.corpus, &self.queries,
                           &self.opts, state, &mut self.cache, &mut self.m,
-                          &self.total)?;
+                          &self.total, self.epoch)?;
         self.m.overlap_steps += 1;
         self.extra.push(p);
         Ok(true)
@@ -323,7 +341,7 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
                 anyhow::ensure!(!top0.is_empty(),
                                 "knowledge base returned nothing");
                 self.m.retrieve += kb_time;
-                self.cache.insert(top0);
+                self.cache.insert_at(top0, self.epoch);
                 let doc0 = top0[0].id;
 
                 let prefill_t = Stopwatch::start();
@@ -352,9 +370,9 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
                 self.m.event(EventKind::Verify, &self.total, kb_time);
 
                 // Cache update: top-1 or top-k (prefetching) per verified
-                // query.
+                // query — stamped with the pinned epoch that scored them.
                 for t in &truths {
-                    self.cache.insert(t);
+                    self.cache.insert_at(t, self.epoch);
                 }
 
                 // First mismatch (Alg. 1 line 12).
@@ -461,6 +479,10 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
 impl<'a, L: LanguageModel> ServeTask for SpecTask<'a, L> {
     fn advance(&mut self) -> anyhow::Result<TaskStep> {
         SpecTask::advance(self)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     fn overlap_step(&mut self) -> anyhow::Result<bool> {

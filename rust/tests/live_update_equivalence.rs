@@ -1,0 +1,426 @@
+//! THE live knowledge-base correctness property (DESIGN.md ADR-006):
+//! serving under **concurrent ingestion** must stay bit-identical per
+//! request. Requests are admitted in waves while a writer ingests fresh
+//! documents and publishes new epochs — between waves *and*, on a
+//! background thread, during the engine run itself — and every request
+//! pins the epoch snapshot it was admitted under. The property: each
+//! request's token output equals a sequential `SpecPipeline::run`
+//! (QA speculation) / `KnnLmSpec::run` (KNN-LM) of that request alone
+//! against its pinned snapshot, bit for bit — swept over
+//! EDR / HNSW / SR × shards {1, 2} × kb_parallel {0, 4} ×
+//! concurrency {1, 8}.
+//!
+//! Also: the router-level ingest-while-serving smoke (`Method::Ingest`
+//! through an `EngineBackend` with a live KB — the CI engine-smoke
+//! job's live cell), and the frozen-worker rejection contract.
+
+use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+use ralmspec::datagen::{embed_corpus, generate_questions, generate_stream,
+                        Corpus, Dataset, Document, HashEncoder};
+use ralmspec::eval::{build_spec_options, run_engine_cell_live, QaMethod};
+use ralmspec::knnlm::{Datastore, KnnLmSpec, KnnServeOptions, KnnTask};
+use ralmspec::lm::MockLm;
+use ralmspec::retriever::epoch::MutableDense;
+use ralmspec::retriever::{LiveKb, MutableRetriever, Retriever};
+use ralmspec::serving::{EngineBackend, EngineOptions, Method, Request,
+                        Router, ServeEngine};
+use ralmspec::spec::{QueryBuilder, QueryMode, SpecPipeline, StridePolicy};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+const DIM: usize = ralmspec::runtime::RETRIEVAL_DIM;
+
+fn small_config(seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.corpus = CorpusConfig {
+        n_docs: 400,
+        n_topics: 12,
+        doc_len: (24, 64),
+        seed,
+        ..CorpusConfig::default()
+    };
+    cfg.retriever.hnsw_ef_construction = 40;
+    cfg.retriever.hnsw_ef_search = 32;
+    cfg.spec.max_new_tokens = 20;
+    // Small publish batches so a handful of ingested docs flips epochs.
+    cfg.ingest.batch = 5;
+    cfg
+}
+
+/// Heterogeneous speculative mix (prefetch sizes, OS³, async, a long
+/// stride) so coalesced flushes carry several distinct (k, epoch)
+/// groups.
+fn mixed_methods(n: usize) -> Vec<QaMethod> {
+    (0..n)
+        .map(|i| match i % 5 {
+            0 => QaMethod::plain_spec(),
+            1 => QaMethod::spec(20, false, false),
+            2 => QaMethod::spec(1, true, false),
+            3 => QaMethod::spec(1, false, true),
+            _ => QaMethod::Spec {
+                prefetch: 1,
+                os3: false,
+                async_verify: false,
+                stride: 8,
+            },
+        })
+        .collect()
+}
+
+/// One live cell: engine-served under concurrent ingestion, then every
+/// request re-run sequentially against its pinned snapshot and compared
+/// bit-for-bit. The SAME live KB is reused across the sweep's cells —
+/// the knowledge base just keeps growing, which is the point.
+fn check_live_cell(cfg: &Config, enc: &HashEncoder, lm: &MockLm,
+                   kind: RetrieverKind, live: &Arc<LiveKb>,
+                   concurrency: usize, kb_parallel: usize, n: usize,
+                   seed: u64) {
+    let corpus = live.epochs.snapshot().corpus.clone();
+    let questions = generate_questions(Dataset::WikiQa, &corpus, n, seed);
+    let methods = mixed_methods(n);
+    let opts = EngineOptions {
+        max_batch: 64,
+        flush_us: 200,
+        max_inflight: concurrency,
+        kb_parallel,
+    };
+    let out = run_engine_cell_live(lm, enc, kind, live, &questions,
+                                   &methods, cfg, opts, 3, 200.0)
+        .unwrap();
+    assert_eq!(out.metrics.len(), n);
+    assert!(out.ingest.epochs_published >= 2,
+            "{kind:?}: the cell must actually publish epochs");
+
+    // Wave admission with publishes in between must pin several epochs.
+    let distinct: HashSet<u64> = out.pins.iter().map(|p| p.epoch).collect();
+    assert!(distinct.len() >= 2,
+            "{kind:?} conc={concurrency} kb_parallel={kb_parallel}: \
+             expected multiple pinned epochs, got {distinct:?}");
+    assert_eq!(out.stats.epochs_served, distinct.len() as u64);
+
+    // THE property: per request, engine-under-ingestion output ==
+    // sequential run against the pinned snapshot.
+    for i in 0..n {
+        let pin = &out.pins[i];
+        assert_eq!(out.metrics[i].epoch, pin.epoch,
+                   "request {i} metrics must report its pinned epoch");
+        let QaMethod::Spec { prefetch, os3, async_verify, stride } =
+            methods[i]
+        else {
+            unreachable!()
+        };
+        let pipe = SpecPipeline {
+            lm,
+            kb: pin.kb.as_ref(),
+            corpus: &*pin.corpus,
+            queries: QueryBuilder {
+                encoder: enc,
+                mode: match kind {
+                    RetrieverKind::Sr => QueryMode::Sparse,
+                    _ => QueryMode::Dense,
+                },
+                dense_len: cfg.retriever.dense_query_len,
+                sparse_len: cfg.retriever.sparse_query_len,
+            },
+            opts: build_spec_options(cfg, prefetch, os3, async_verify,
+                                     stride),
+        };
+        let reference = pipe.run(&questions[i].tokens).unwrap();
+        assert_eq!(
+            out.metrics[i].tokens_out, reference.tokens_out,
+            "LIVE SERVING DIVERGED FROM PINNED EPOCH: {kind:?} \
+             shards={} conc={concurrency} kb_parallel={kb_parallel} \
+             req={i} epoch={} method={:?}",
+            cfg.retriever.shards, pin.epoch, methods[i]);
+    }
+}
+
+/// The acceptance sweep for one retriever class:
+/// shards {1, 2} × kb_parallel {0, 4} × concurrency {1, 8}.
+fn sweep_kind(kind: RetrieverKind, seed: u64) {
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    for shards in [1usize, 2] {
+        let mut cfg = small_config(seed);
+        cfg.retriever.shards = shards;
+        let corpus = Corpus::generate(&cfg.corpus);
+        let emb = embed_corpus(&enc, &corpus.docs);
+        let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+        let live = LiveKb::build(&cfg, kind, corpus, emb, DIM);
+        for (cell, &(concurrency, kb_parallel)) in
+            [(1usize, 0usize), (1, 4), (8, 0), (8, 4)].iter().enumerate()
+        {
+            check_live_cell(&cfg, &enc, &lm, kind, &live, concurrency,
+                            kb_parallel, 6,
+                            seed ^ ((shards as u64) << 8)
+                                ^ ((cell as u64) << 16));
+        }
+    }
+}
+
+#[test]
+fn live_serving_matches_pinned_epoch_edr() {
+    sweep_kind(RetrieverKind::Edr, 0x11FE);
+}
+
+#[test]
+fn live_serving_matches_pinned_epoch_adr() {
+    sweep_kind(RetrieverKind::Adr, 0x22FE);
+}
+
+#[test]
+fn live_serving_matches_pinned_epoch_sr() {
+    sweep_kind(RetrieverKind::Sr, 0x33FE);
+}
+
+#[test]
+fn knn_tasks_pin_epochs_and_stay_bit_identical() {
+    // KNN-LM side of task pinning: epoch snapshots are growing prefixes
+    // of the datastore key matrix (a live dense index over an
+    // append-only datastore). Tasks pinned to different epochs — with
+    // mixed k so flushes carry several (k, epoch) groups — must each
+    // stay bit-identical to a sequential KnnLmSpec::run against their
+    // pinned snapshot.
+    let seed = 0x44FE;
+    let cfg = CorpusConfig { seed, ..CorpusConfig::default() };
+    let n_entries = 2400usize;
+    let stream = generate_stream(&cfg, n_entries + 400, seed);
+    let lm_seed = seed ^ 0x11;
+    let ds = Arc::new(Datastore::build_mock(&stream, DIM, lm_seed ^ 0xE,
+                                            n_entries));
+    let lm = MockLm::new(cfg.vocab, 320, lm_seed);
+    let mut rng = ralmspec::util::Rng::new(seed ^ 0x77);
+    let prompts: Vec<Vec<u32>> = (0..8)
+        .map(|_| {
+            let start = rng.gen_range(stream.len() - 40);
+            stream.tokens[start..start + 20].to_vec()
+        })
+        .collect();
+
+    // Three epochs: 60%, 80%, 100% of the key matrix.
+    let cuts = [n_entries * 6 / 10, n_entries * 8 / 10, n_entries];
+    let mut index =
+        MutableDense::new(DIM, ds.keys.data[..cuts[0] * DIM].to_vec());
+    let mut snaps: Vec<Arc<dyn Retriever>> = vec![index.snapshot(1)];
+    for w in 1..cuts.len() {
+        let docs: Vec<Document> = (cuts[w - 1]..cuts[w])
+            .map(|i| Document { id: i as u32, topic: 0, tokens: vec![] })
+            .collect();
+        let embs: Vec<Vec<f32>> = (cuts[w - 1]..cuts[w])
+            .map(|i| ds.keys.row(i as u32).to_vec())
+            .collect();
+        index.append(&docs, &embs).unwrap();
+        snaps.push(index.snapshot(1));
+    }
+
+    let mk_opts = |k: usize| KnnServeOptions {
+        k,
+        stride: StridePolicy::Fixed(4),
+        max_new: 16,
+        ..KnnServeOptions::default()
+    };
+    let mut engine: ServeEngine<KnnTask<MockLm>> = ServeEngine::new(
+        snaps[0].clone(),
+        EngineOptions { max_batch: 64, flush_us: 200, max_inflight: 8,
+                        kb_parallel: 2 });
+    for (e, snap) in snaps.iter().enumerate() {
+        engine.register_epoch(e as u64, snap.clone());
+    }
+    let pins: Vec<usize> = (0..prompts.len()).map(|i| i % 3).collect();
+    let ks: Vec<usize> = (0..prompts.len())
+        .map(|i| [4usize, 16][i % 2])
+        .collect();
+    for (i, p) in prompts.iter().enumerate() {
+        engine.submit(
+            i as u64,
+            KnnTask::new(&lm, ds.as_ref(), mk_opts(ks[i]), p)
+                .pin_epoch(pins[i] as u64));
+    }
+    let done = engine.run().unwrap();
+    assert_eq!(done.len(), prompts.len());
+    assert_eq!(engine.stats().epochs_served, 3);
+
+    for (id, m) in &done {
+        let i = *id as usize;
+        assert_eq!(m.epoch, pins[i] as u64);
+        let reference = KnnLmSpec {
+            lm: &lm,
+            kb: snaps[pins[i]].as_ref(),
+            ds: ds.as_ref(),
+            opts: mk_opts(ks[i]),
+        }
+        .run(&prompts[i])
+        .unwrap();
+        assert_eq!(m.tokens_out, reference.tokens_out,
+                   "KNN LIVE PINNING DIVERGED: req={i} epoch={} k={}",
+                   pins[i], ks[i]);
+    }
+}
+
+#[test]
+fn router_ingest_while_serving_smoke() {
+    // End-to-end Method::Ingest: a router worker with a live-KB
+    // EngineBackend accepts interleaved ingest and query traffic. The CI
+    // engine-smoke job runs this as the live cell: every request must
+    // resolve (no hang), ingests must advance the epoch, and queries
+    // must keep producing tokens throughout.
+    let seed = 0x55FE;
+    let cfg = small_config(seed);
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let corpus = Corpus::generate(&cfg.corpus);
+    let emb = embed_corpus(&enc, &corpus.docs);
+    let live = LiveKb::build(&cfg, RetrieverKind::Edr, corpus.clone(),
+                             emb, DIM);
+    let base_snapshot = live.epochs.snapshot();
+    let questions = generate_questions(Dataset::WikiQa, &corpus, 6, 9);
+    // Synthetic ingest payloads (tokens only; the worker embeds).
+    let ingest_docs =
+        corpus.synth_docs(seed ^ 0xD0C, corpus.len() as u32, 12, (24, 64));
+
+    let cfg2 = cfg.clone();
+    let live2 = live.clone();
+    let router = Router::spawn(64, 1, move || {
+        Ok(EngineBackend {
+            lm: MockLm::new(cfg2.corpus.vocab, 320, seed ^ 0x11),
+            kb: base_snapshot.kb.clone(),
+            corpus: base_snapshot.corpus.clone(),
+            encoder: Box::new(HashEncoder::new(DIM, seed ^ 0xEC)),
+            mode: QueryMode::Dense,
+            cfg: cfg2.clone(),
+            engine_opts: EngineOptions {
+                max_batch: 16,
+                flush_us: 500,
+                max_inflight: 0,
+                kb_parallel: 2,
+            },
+            live: Some(live2.clone()),
+        })
+    });
+
+    let mut id = 0u64;
+    let mut spec_outputs = 0usize;
+    let mut published_epochs = Vec::new();
+    for round in 0..6 {
+        // Two ingests...
+        for j in 0..2 {
+            let d = &ingest_docs[round * 2 + j];
+            let resp = router
+                .submit_blocking(Request {
+                    id,
+                    question: d.tokens.clone(),
+                    method: Method::Ingest,
+                })
+                .unwrap();
+            assert!(resp.tokens.is_empty(),
+                    "ingest responses carry no tokens");
+            published_epochs.push(resp.metrics.epoch);
+            id += 1;
+        }
+        // ...then a query, which must still serve fine.
+        let q = &questions[round % questions.len()];
+        let resp = router
+            .submit_blocking(Request {
+                id,
+                question: q.tokens.clone(),
+                method: Method::Spec {
+                    prefetch: true,
+                    os3: false,
+                    async_verify: false,
+                },
+            })
+            .unwrap();
+        assert!(!resp.tokens.is_empty(),
+                "query under ingestion produced no tokens");
+        spec_outputs += 1;
+        id += 1;
+    }
+    // 12 docs at ingest.batch=5 => at least 2 published epochs.
+    assert!(live.epochs.epoch() >= 2,
+            "ingestion must advance the epoch (at {})",
+            live.epochs.epoch());
+    assert!(live.epochs.snapshot().kb.len() > corpus.len(),
+            "published snapshots must contain the ingested docs");
+    assert_eq!(spec_outputs, 6);
+    assert!(published_epochs.iter().any(|&e| e > 0),
+            "some ingest response must report a published epoch");
+    router.shutdown();
+}
+
+#[test]
+fn unregistered_pinned_epoch_fails_loudly() {
+    // A task pinned to an epoch nobody registered must NOT be silently
+    // served by the default knowledge base (wrong-snapshot scoring is
+    // the bug class ADR-006 exists to prevent): its request fails with
+    // a pointed error while epoch-0 tasks keep serving.
+    let seed = 0x77FE;
+    let cfg = small_config(seed);
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let bed = ralmspec::eval::TestBed::build(&cfg, &enc);
+    let kb = bed.retriever(RetrieverKind::Edr);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+    let questions = generate_questions(Dataset::WikiQa, &bed.corpus, 2, 5);
+    let queries = QueryBuilder {
+        encoder: &enc,
+        mode: QueryMode::Dense,
+        dense_len: cfg.retriever.dense_query_len,
+        sparse_len: cfg.retriever.sparse_query_len,
+    };
+    let opts = build_spec_options(&cfg, 1, false, false, 3);
+    let mut engine: ServeEngine<ralmspec::spec::SpecTask<MockLm>> =
+        ServeEngine::new(
+            kb.clone(),
+            EngineOptions { max_batch: 16, flush_us: 200,
+                            max_inflight: 0, kb_parallel: 0 });
+    engine.submit(0, ralmspec::spec::SpecTask::new(
+        &lm, kb.as_ref(), &bed.corpus, queries, opts.clone(),
+        &questions[0].tokens));
+    engine.submit(1, ralmspec::spec::SpecTask::new(
+        &lm, kb.as_ref(), &bed.corpus, queries, opts,
+        &questions[1].tokens)
+        .pin_epoch(7));
+    let done = engine.run().unwrap();
+    let failed = engine.take_failed();
+    assert_eq!(done.len(), 1, "the epoch-0 task must complete");
+    assert_eq!(done[0].0, 0);
+    assert_eq!(failed.len(), 1, "the unregistered pin must fail");
+    assert_eq!(failed[0].0, 1);
+    assert!(failed[0].1.contains("epoch 7"),
+            "error must name the unregistered epoch: {}", failed[0].1);
+}
+
+#[test]
+fn frozen_worker_rejects_ingest() {
+    let seed = 0x66FE;
+    let cfg = small_config(seed);
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let bed = ralmspec::eval::TestBed::build(&cfg, &enc);
+    let kb = bed.retriever(RetrieverKind::Edr);
+    let corpus = bed.corpus.clone();
+    let cfg2 = cfg.clone();
+    let router = Router::spawn(8, 1, move || {
+        Ok(EngineBackend {
+            lm: MockLm::new(cfg2.corpus.vocab, 320, seed ^ 0x11),
+            kb: kb.clone(),
+            corpus: corpus.clone(),
+            encoder: Box::new(HashEncoder::new(DIM, seed ^ 0xEC)),
+            mode: QueryMode::Dense,
+            cfg: cfg2.clone(),
+            engine_opts: EngineOptions {
+                max_batch: 8,
+                flush_us: 200,
+                max_inflight: 0,
+                kb_parallel: 0,
+            },
+            live: None,
+        })
+    });
+    let err = router
+        .submit_blocking(Request {
+            id: 1,
+            question: vec![100, 101, 102],
+            method: Method::Ingest,
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("live"),
+            "frozen workers must name the problem: {err:#}");
+    router.shutdown();
+}

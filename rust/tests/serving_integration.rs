@@ -46,6 +46,9 @@ impl ServeBackend for QaBackend {
             ralmspec::serving::router::Method::Knn => {
                 anyhow::bail!("QA test backend does not serve KNN-LM")
             }
+            ralmspec::serving::router::Method::Ingest => {
+                anyhow::bail!("QA test backend serves a frozen corpus")
+            }
         };
         let q = ralmspec::datagen::Question {
             id: req.id,
@@ -164,6 +167,7 @@ fn engine_backend_serves_spec_requests_through_router() {
                 max_inflight: 0,
                 kb_parallel: 2,
             },
+            live: None,
         })
     });
     let questions = generate_questions(Dataset::WikiQa, &bed.corpus, 4, 9);
