@@ -1,12 +1,17 @@
 //! Micro-benchmarks of the L3 hot paths (in-tree harness — no criterion on
 //! this image): dense scan, HNSW walk, BM25 postings, cache lookup, top-k.
 //! Run via `cargo bench micro` or directly.
+//!
+//! The per-kernel cells up front are the *same* measurement
+//! `ralmspec bench-gate --kernel-out` gates in CI
+//! (`ralmspec::eval::kernel_bench`): one implementation, two surfaces —
+//! tune here, gate there.
 
 use ralmspec::cache::LocalCache;
 use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
 use ralmspec::datagen::{Encoder, HashEncoder};
 use ralmspec::eval::TestBed;
-use ralmspec::retriever::{Retriever, SpecQuery};
+use ralmspec::retriever::{kernels, Retriever, SpecQuery};
 use ralmspec::util::{topk_from_scores, Rng};
 use std::time::Instant;
 
@@ -29,6 +34,12 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
 }
 
 fn main() {
+    // Shared per-kernel cells (the bench-gate BENCH_PR6.json trajectory).
+    println!("kernel cells (simd_active={}):", kernels::simd_active());
+    ralmspec::eval::kernel_bench::print_cells(
+        &ralmspec::eval::kernel_bench::run_kernel_cells());
+    println!();
+
     let mut cfg = Config::default();
     cfg.corpus = CorpusConfig { n_docs: 60_000, n_topics: 256,
                                 ..CorpusConfig::default() };

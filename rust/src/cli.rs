@@ -112,6 +112,7 @@ COMMANDS:
                              Config keys: ingest.rate / ingest.batch
     bench-gate [--mock] [--out BENCH_PR3.json]
                [--engine-out BENCH_PR4.json] [--live-out BENCH_PR5.json]
+               [--kernel-out BENCH_PR6.json]
                              CI perf-regression gate: quick fig4+fig5
                              speed-up ratios per retriever class, written
                              as JSON; exits non-zero if any ratio < 1.0
@@ -119,9 +120,13 @@ COMMANDS:
                              Also runs the sync-vs-async engine sweep
                              under injected KB latency (--engine-out;
                              fails if async/sync requests/s < 1.0 at
-                             concurrency 8) and the mixed ingest+query
+                             concurrency 8), the mixed ingest+query
                              cell (--live-out: query p50/p99 with
-                             ingestion on vs off, epochs published)
+                             ingestion on vs off, epochs published),
+                             and the per-kernel latency cells
+                             (--kernel-out: ns/op per scoring kernel;
+                             fails if scalar/SIMD speedup < 1.0 on
+                             SIMD-active hosts)
     trace [--retriever edr] [--mock]
                              emit a Fig-1(c)-style per-request timeline
     help                     this text

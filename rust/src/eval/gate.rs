@@ -34,12 +34,24 @@
 //! requests/s at the same concurrency with live ingestion off vs on —
 //! a freshness-cost trajectory, recorded but not ratio-gated (the
 //! correctness side is gated by tests/live_update_equivalence.rs).
+//!
+//! A fourth artifact (`--kernel-out`, default `BENCH_PR6.json`) records
+//! the **per-kernel latency cells** ([`crate::eval::kernel_bench`],
+//! DESIGN.md ADR-007): ns/op for the dense dot kernel, the LANES-wide
+//! multi-query scan, the HNSW walk, the BM25 postings walk, and top-k
+//! selection. The two pure-kernel cells time their scalar twin too and
+//! — when the SIMD forms are active on the host — **gate** on the
+//! scalar/SIMD speedup staying ≥ 1.0: vectorization must actually pay,
+//! on every PR. These cells need no model artifacts, so they run (and
+//! can fail the command) even when fig4/fig5 are skipped.
 
 use crate::cli::Flags;
 use crate::config::{Config, RetrieverKind};
 use crate::datagen::Dataset;
 use crate::eval::drivers::{knn_fixture, knn_retriever, ErasedLm, Provider,
                            KNN_MODEL};
+use crate::eval::kernel_bench::{self, MIN_KERNEL_SPEEDUP};
+use crate::retriever::kernels;
 use crate::eval::runner::{questions_for, LiveServeReport, QaMethod,
                           ServeSummary};
 use crate::eval::workload::TestBed;
@@ -381,10 +393,18 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         flags.get("engine-out").unwrap_or("BENCH_PR4.json").to_string();
     let live_out =
         flags.get("live-out").unwrap_or("BENCH_PR5.json").to_string();
+    let kernel_out =
+        flags.get("kernel-out").unwrap_or("BENCH_PR6.json").to_string();
     let provider = Provider::from_flags(&cfg, flags)?;
     let mut ratios: Vec<Ratio> = Vec::new();
     let mut engine_ratios: Vec<EngineRatio> = Vec::new();
     let mut live_cells: Vec<LiveCell> = Vec::new();
+
+    // --- Kernel latency cells first: model-free, cheap, and the most
+    // direct readout of this PR family's hot-path work (ADR-007).
+    eprintln!("[gate] kernel cells (simd_active={})...",
+              kernels::simd_active());
+    let kernel_cells = kernel_bench::run_kernel_cells();
 
     // --- fig4 trajectory: RaLMSpec+P vs RaLMSeq per QA retriever class.
     // +P (sync, fixed stride) is the most schedule-deterministic variant,
@@ -458,11 +478,41 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         eprintln!("[gate] {KNN_MODEL} artifacts missing, fig5 cells skipped");
     }
 
+    // --- Kernel report + artifact. Model-free, so it is printed and
+    // written *before* the models-available check: the kernel trajectory
+    // lands even on hosts with no model artifacts.
+    let mut failures = Vec::new();
+    kernel_bench::print_cells(&kernel_cells);
+    for c in &kernel_cells {
+        if c.gated && c.speedup().is_some_and(|s| s < MIN_KERNEL_SPEEDUP) {
+            failures.push(format!("kernel/{} {:.2}x", c.kernel,
+                                  c.speedup().unwrap_or(0.0)));
+        }
+    }
+    let kernel_doc = Value::obj(vec![
+        ("gate", Value::str("kernel-latency")),
+        ("min_required_speedup", Value::num(MIN_KERNEL_SPEEDUP)),
+        ("simd_active", Value::Bool(kernels::simd_active())),
+        ("arch", Value::str(std::env::consts::ARCH)),
+        ("runs", Value::num(cfg.eval.runs as f64)),
+        ("pass", Value::Bool(!kernel_cells.iter().any(|c| {
+            c.gated && c.speedup().is_some_and(|s| s < MIN_KERNEL_SPEEDUP)
+        }))),
+        ("cells",
+         Value::Arr(kernel_cells.iter().map(|c| c.to_json()).collect())),
+    ]);
+    if let Some(dir) = std::path::Path::new(&kernel_out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&kernel_out, kernel_doc.pretty())?;
+    println!("[gate] wrote {kernel_out}");
+
     anyhow::ensure!(!ratios.is_empty(),
                     "bench-gate measured nothing (no models available)");
 
     // --- Report + artifacts + verdict.
-    let mut failures = Vec::new();
     for r in &ratios {
         let verdict = if r.speedup() >= MIN_RATIO { "ok" } else { "FAIL" };
         println!("[gate] {:<5} {:<4} {:<22} base={:.4}s spec={:.4}s \
@@ -562,7 +612,9 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     // Entries are labeled by origin: "fig4/EDR ..." / "fig5/..." are
     // spec-vs-baseline speedups (the speculation pipeline), "async/..."
     // are the ADR-005 async/sync engine throughput ratios (the
-    // executor) — so a red CI job points at the right subsystem.
+    // executor), "kernel/..." are the ADR-007 scalar-vs-SIMD speedups
+    // (the scoring kernels) — so a red CI job points at the right
+    // subsystem.
     anyhow::ensure!(
         failures.is_empty(),
         "bench gate ratios below {MIN_RATIO:.1}x on: {}",

@@ -1,0 +1,267 @@
+//! Per-kernel latency cells (`ralmspec bench-gate --kernel-out`, the
+//! `BENCH_PR6.json` trajectory): ns/op for each scoring hot path — the
+//! dense dot kernel, the LANES-wide multi-query scan, the HNSW greedy
+//! walk, the BM25 postings walk, and top-k selection — measured as the
+//! **min over runs** (same stability choice as the other gate cells).
+//!
+//! The two pure-kernel cells (dense dot, multi-query scan) also time
+//! their scalar twin and report the scalar/SIMD speedup; when the SIMD
+//! forms are active ([`crate::retriever::kernels::simd_active`]) those
+//! cells are *gated*: a speedup below [`MIN_KERNEL_SPEEDUP`] fails the
+//! bench-gate command, pinning "vectorization actually pays" as a CI
+//! invariant. The index-structure cells (HNSW walk, BM25 postings,
+//! top-k) are recorded as an ungated trajectory — their cost mixes
+//! kernel time with memory layout and heap maintenance, so they track
+//! regressions across PRs rather than gating a ratio.
+//!
+//! Scale knobs: `RALMSPEC_BENCH_RUNS` (repetitions, shared with the rest
+//! of the gate) and `RALMSPEC_BENCH_KERNEL_{ROWS,HNSW,SRDOCS,SCORES}`
+//! (fixture sizes), so CI pins one set of knobs for the whole gate.
+
+use crate::config::CorpusConfig;
+use crate::datagen::corpus::Corpus;
+use crate::retriever::dense::EmbeddingMatrix;
+use crate::retriever::hnsw::Hnsw;
+use crate::retriever::kernels::{self, LANES};
+use crate::retriever::sparse::Bm25;
+use crate::retriever::{Retriever, SpecQuery};
+use crate::util::json::Value;
+use crate::util::{topk_from_scores, Rng, TopK};
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Minimum acceptable scalar/SIMD speedup for the gated kernel cells
+/// (only enforced when the SIMD forms are actually active on the host).
+pub const MIN_KERNEL_SPEEDUP: f64 = 1.0;
+
+/// The serving retrieval dimension the kernel fixtures use.
+const DIM: usize = 64;
+
+/// One measured kernel cell.
+pub struct KernelCell {
+    /// Cell name (`dense-dot`, `multi-scan`, `hnsw-walk`,
+    /// `bm25-postings`, `topk-select`).
+    pub kernel: &'static str,
+    /// What one "op" is for this cell (row dot, row scan, query, ...).
+    pub unit: &'static str,
+    /// Dispatched-kernel ns per op, min over runs.
+    pub ns: f64,
+    /// Scalar-twin ns per op for the pure-kernel cells (None for the
+    /// index-structure trajectory cells).
+    pub scalar_ns: Option<f64>,
+    /// Whether this cell's speedup is enforced by the gate.
+    pub gated: bool,
+}
+
+impl KernelCell {
+    /// scalar / dispatched ns ratio (> 1.0 means the SIMD form is
+    /// faster); None for cells without a scalar twin.
+    pub fn speedup(&self) -> Option<f64> {
+        self.scalar_ns.map(|s| if self.ns > 0.0 { s / self.ns } else { 0.0 })
+    }
+
+    /// JSON row for the `BENCH_PR6.json` artifact (scalar/speedup keys
+    /// only present on cells that have a scalar twin).
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![
+            ("kernel", Value::str(self.kernel)),
+            ("unit", Value::str(self.unit)),
+            ("ns_per_op", Value::num(self.ns)),
+            ("gated", Value::Bool(self.gated)),
+        ];
+        if let Some(s) = self.scalar_ns {
+            pairs.push(("scalar_ns_per_op", Value::num(s)));
+        }
+        if let Some(sp) = self.speedup() {
+            pairs.push(("speedup", Value::num(sp)));
+        }
+        Value::obj(pairs)
+    }
+}
+
+/// Print one line per cell (shared by `bench-gate` and the
+/// `micro_hotpaths` bench so both surfaces report identically).
+pub fn print_cells(cells: &[KernelCell]) {
+    for c in cells {
+        match (c.scalar_ns, c.speedup()) {
+            (Some(s), Some(sp)) => {
+                println!("[kernel] {:<13} {:>9.1} ns/{:<12} scalar \
+                          {:>9.1} ns  speedup {:>5.2}x{}",
+                         c.kernel, c.ns, c.unit, s, sp,
+                         if c.gated { "  (gated)" } else { "" });
+            }
+            _ => {
+                println!("[kernel] {:<13} {:>9.1} ns/{:<12}",
+                         c.kernel, c.ns, c.unit);
+            }
+        }
+    }
+}
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+/// Min ns/op over `runs` timed repetitions of `f` (which returns the
+/// number of ops it performed), after one untimed warmup pass.
+fn best_ns<F: FnMut() -> usize>(runs: usize, mut f: F) -> f64 {
+    black_box(f());
+    let mut best = f64::INFINITY;
+    for _ in 0..runs.max(1) {
+        let t = Instant::now();
+        let ops = black_box(f());
+        let ns = t.elapsed().as_nanos() as f64;
+        best = best.min(ns / ops.max(1) as f64);
+    }
+    best
+}
+
+fn random_rows(n: usize, d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        data.extend(rng.unit_vector(d));
+    }
+    data
+}
+
+/// Measure every kernel cell. Deterministic fixtures, so the numbers are
+/// comparable across PRs on the same host/knobs.
+pub fn run_kernel_cells() -> Vec<KernelCell> {
+    let runs = env_usize("RALMSPEC_BENCH_RUNS", 3);
+    let n_rows = env_usize("RALMSPEC_BENCH_KERNEL_ROWS", 4096);
+    let simd = kernels::simd_active();
+    let mut cells = Vec::new();
+
+    // --- dense dot: one query against every corpus row (the EDR/ADR/
+    // cache similarity metric), dispatched vs scalar.
+    let data = random_rows(n_rows, DIM, 0xD07);
+    let q = Rng::new(0xD08).unit_vector(DIM);
+    let dot_ns = best_ns(runs, || {
+        let mut acc = 0.0f32;
+        for row in data.chunks_exact(DIM) {
+            acc += kernels::dot(black_box(&q), row);
+        }
+        black_box(acc);
+        n_rows
+    });
+    let dot_scalar_ns = best_ns(runs, || {
+        let mut acc = 0.0f32;
+        for row in data.chunks_exact(DIM) {
+            acc += kernels::dot_scalar(black_box(&q), row);
+        }
+        black_box(acc);
+        n_rows
+    });
+    cells.push(KernelCell {
+        kernel: "dense-dot",
+        unit: "row-dot",
+        ns: dot_ns,
+        scalar_ns: Some(dot_scalar_ns),
+        gated: simd,
+    });
+
+    // --- multi-query scan: every row scored LANES-wide against a packed
+    // query block (the batched-verification primitive), dispatched vs
+    // scalar. Fresh heaps per pass on both sides so heap pushes cost the
+    // same in numerator and denominator.
+    let mut rng = Rng::new(0x5CA7);
+    let mut qt = vec![0.0f32; DIM * LANES];
+    for bi in 0..LANES {
+        for (j, v) in rng.unit_vector(DIM).into_iter().enumerate() {
+            qt[j * LANES + bi] = v;
+        }
+    }
+    let scan_ns = best_ns(runs, || {
+        let mut heaps: Vec<TopK> = (0..LANES).map(|_| TopK::new(20)).collect();
+        kernels::scan_block(black_box(&data), DIM, 0, black_box(&qt),
+                            &mut heaps);
+        black_box(heaps.len());
+        n_rows
+    });
+    let scan_scalar_ns = best_ns(runs, || {
+        let mut heaps: Vec<TopK> = (0..LANES).map(|_| TopK::new(20)).collect();
+        kernels::scan_block_scalar(black_box(&data), DIM, 0,
+                                   black_box(&qt), &mut heaps);
+        black_box(heaps.len());
+        n_rows
+    });
+    cells.push(KernelCell {
+        kernel: "multi-scan",
+        unit: "row-scan",
+        ns: scan_ns,
+        scalar_ns: Some(scan_scalar_ns),
+        gated: simd,
+    });
+
+    // --- HNSW walk: per-query greedy descent + layer-0 beam over the
+    // sealed CSR graph (trajectory cell: layout + prefetch + kernel).
+    let hnsw_n = env_usize("RALMSPEC_BENCH_KERNEL_HNSW", 4000);
+    let graph = Hnsw::build(
+        Arc::new(EmbeddingMatrix::new(DIM, random_rows(hnsw_n, DIM, 0xAD2))),
+        8, 40, 64, 0xAD3);
+    let mut rng = Rng::new(0xAD4);
+    let walk_qs: Vec<Vec<f32>> =
+        (0..32).map(|_| rng.unit_vector(DIM)).collect();
+    let walk_ns = best_ns(runs, || {
+        for wq in &walk_qs {
+            black_box(graph.search(black_box(wq), 20, 64).len());
+        }
+        walk_qs.len()
+    });
+    cells.push(KernelCell {
+        kernel: "hnsw-walk",
+        unit: "query",
+        ns: walk_ns,
+        scalar_ns: None,
+        gated: false,
+    });
+
+    // --- BM25 postings walk: one coalesced batch of 8 queries through
+    // the shared-postings scan (trajectory cell: scratch + postings).
+    let sr_docs = env_usize("RALMSPEC_BENCH_KERNEL_SRDOCS", 4000);
+    let corpus = Corpus::generate(&CorpusConfig {
+        n_docs: sr_docs,
+        n_topics: 32,
+        doc_len: (20, 80),
+        ..CorpusConfig::default()
+    });
+    let bm25 = Bm25::build(&corpus, 0.9, 0.4);
+    let mut rng = Rng::new(0x5B2);
+    let sr_qs: Vec<SpecQuery> = (0..8)
+        .map(|i| SpecQuery::sparse_only(
+            corpus.topic_tokens(i % 32, 8, &mut rng)))
+        .collect();
+    let sr_ns = best_ns(runs, || {
+        black_box(bm25.retrieve_batch(black_box(&sr_qs), 20).len());
+        sr_qs.len()
+    });
+    cells.push(KernelCell {
+        kernel: "bm25-postings",
+        unit: "query",
+        ns: sr_ns,
+        scalar_ns: None,
+        gated: false,
+    });
+
+    // --- top-k selection over a dense score vector (the per-query
+    // selection every scan ends with).
+    let n_scores = env_usize("RALMSPEC_BENCH_KERNEL_SCORES", 60_000);
+    let mut rng = Rng::new(0x70C);
+    let scores: Vec<f32> =
+        (0..n_scores).map(|_| rng.next_f32()).collect();
+    let topk_ns = best_ns(runs, || {
+        black_box(topk_from_scores(black_box(&scores), 20).len());
+        1
+    });
+    cells.push(KernelCell {
+        kernel: "topk-select",
+        unit: "select",
+        ns: topk_ns,
+        scalar_ns: None,
+        gated: false,
+    });
+
+    cells
+}

@@ -3,6 +3,7 @@
 
 pub mod drivers;
 pub mod gate;
+pub mod kernel_bench;
 pub mod report;
 pub mod runner;
 pub mod workload;

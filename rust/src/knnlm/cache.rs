@@ -16,7 +16,7 @@
 //! eviction time and swept by occasional compaction.
 
 use crate::knnlm::datastore::Datastore;
-use crate::retriever::dense::dot_chunked;
+use crate::retriever::kernels;
 use crate::util::{Scored, TopK};
 use std::collections::{HashMap, VecDeque};
 
@@ -119,7 +119,7 @@ impl KnnCache {
         let mut tk = TopK::new(k.max(1));
         for &(stamp, id) in &self.order {
             if self.stamps.get(&id) == Some(&stamp) {
-                tk.push(id, dot_chunked(q, ds.keys.row(id)));
+                tk.push(id, kernels::dot(q, ds.keys.row(id)));
             }
         }
         tk.into_sorted()

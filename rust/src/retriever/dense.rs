@@ -6,8 +6,10 @@
 //! over all queries, which is why total batched latency is near-constant in
 //! batch size (paper Fig 6a) — the effect RaLMSpec's saving rests on.
 
+use super::kernels::{self, LANES};
 use super::{DocId, Retriever, SpecQuery};
 use crate::util::{Scored, TopK};
+use std::cell::RefCell;
 use std::sync::Arc;
 
 /// Row-major [n, dim] embedding matrix shared across retrievers/caches.
@@ -39,27 +41,15 @@ impl EmbeddingMatrix {
     }
 }
 
-/// Unrolled dot product over the (fixed, small) retrieval dimension.
-/// Four accumulators let the compiler keep independent FMA chains in
-/// flight — this is the EDR hot loop (see EXPERIMENTS.md §Perf).
+/// Inner product over the (fixed, small) retrieval dimension — the EDR
+/// hot loop. Delegates to the shared scoring kernel
+/// ([`kernels::dot`], DESIGN.md ADR-007) so every caller (flat-scan
+/// `score_doc`, the HNSW walk, the KNN-LM cache) shares one reduction
+/// order with the SIMD forms; kept under its historical name because
+/// call sites predate the kernels module.
 #[inline]
 pub fn dot_chunked(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 8;
-        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
-        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
-        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
-        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 8..n {
-        tail += a[i] * b[i];
-    }
-    s0 + s1 + s2 + s3 + tail
+    kernels::dot(a, b)
 }
 
 pub struct DenseExact {
@@ -76,21 +66,39 @@ impl DenseExact {
     }
 }
 
-/// Multi-query blocked scan: scores every corpus row against up to `LANES`
-/// queries with the row loaded once. Queries are packed column-major
-/// (qt[j*LANES + b]) so the inner loop is a LANES-wide FMA that
-/// auto-vectorizes; per-row arithmetic intensity rises from 2 FLOP/byte
-/// (single query) to 2*B FLOP/byte — this is what makes batched
-/// verification near-free for EDR (paper Fig 6a / §A.1).
-const LANES: usize = 8;
+thread_local! {
+    /// Reusable column-major query-pack buffer for [`scan_multi_range`]:
+    /// the per-block `vec![0.0; d * LANES]` allocation hoisted out of the
+    /// scan and reused across blocks, batches, and engine flushes on the
+    /// same thread (KB calls run on the persistent worker pool, so the
+    /// buffer stays warm for the life of the process).
+    static QT_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Scan rows `[lo, hi)` of the matrix, pushing **global** doc ids into the
 /// per-query heaps. The full-corpus scan is the `(0, len)` range; shard
 /// views scan their slice. Per-row arithmetic is identical regardless of
 /// the range, so a k-way merge of shard results is bit-identical to the
 /// full scan (the property `ShardedRetriever` relies on).
+///
+/// Queries are processed in blocks of up to [`LANES`], packed column-major
+/// (`qt[j*LANES + lane]`) so each corpus row is loaded once and scored
+/// LANES-wide by [`kernels::scan_block`]; per-row arithmetic intensity
+/// rises from 2 FLOP/byte (single query) to 2·B FLOP/byte — this is what
+/// makes batched verification near-free for EDR (paper Fig 6a / §A.1).
 pub(crate) fn scan_multi_range(emb: &EmbeddingMatrix, lo: usize, hi: usize,
                                queries: &[&[f32]], heaps: &mut [TopK]) {
+    QT_SCRATCH.with(|cell| {
+        scan_multi_range_with(emb, lo, hi, queries, heaps,
+                              &mut cell.borrow_mut());
+    });
+}
+
+/// [`scan_multi_range`] with a caller-provided query-pack scratch buffer
+/// (grown on demand, cleared and re-packed per block, never shrunk).
+pub(crate) fn scan_multi_range_with(emb: &EmbeddingMatrix, lo: usize,
+                                    hi: usize, queries: &[&[f32]],
+                                    heaps: &mut [TopK], qt: &mut Vec<f32>) {
     debug_assert_eq!(queries.len(), heaps.len());
     debug_assert!(lo <= hi && hi <= emb.len());
     let d = emb.dim;
@@ -100,27 +108,15 @@ pub(crate) fn scan_multi_range(emb: &EmbeddingMatrix, lo: usize, hi: usize,
     {
         let b = qblock.len();
         // Column-major packed query block, zero-padded to LANES.
-        let mut qt = vec![0.0f32; d * LANES];
+        qt.clear();
+        qt.resize(d * LANES, 0.0);
         for (bi, q) in qblock.iter().enumerate() {
-            for j in 0..d {
-                qt[j * LANES + bi] = q[j];
+            for (j, &v) in q.iter().enumerate() {
+                qt[j * LANES + bi] = v;
             }
         }
-        let mut scores = [0.0f32; LANES];
-        for (i, row) in emb.data[lo * d..hi * d].chunks_exact(d).enumerate() {
-            scores = [0.0; LANES];
-            for j in 0..d {
-                let x = row[j];
-                let qrow = &qt[j * LANES..(j + 1) * LANES];
-                for (s, &qv) in scores.iter_mut().zip(qrow) {
-                    *s += x * qv;
-                }
-            }
-            for bi in 0..b {
-                heaps[block_start + bi].push((lo + i) as DocId, scores[bi]);
-            }
-        }
-        let _ = scores;
+        kernels::scan_block(&emb.data[lo * d..hi * d], d, lo as DocId, qt,
+                            &mut heaps[block_start..block_start + b]);
     }
 }
 

@@ -159,7 +159,9 @@ impl MutableRetriever for MutableDense {
 
 /// Live HNSW index ("ADR"): appending swaps in the extended embedding
 /// matrix and inserts the new nodes incrementally ([`Hnsw::append`],
-/// reusing the shared `SearchScratch`); a snapshot clones the graph.
+/// reusing the shared `SearchScratch`); a snapshot clones the graph and
+/// seals the clone into the flat CSR layout (DESIGN.md ADR-007) — the
+/// master stays in the nested mutable-tail form between publishes.
 /// Append ≡ rebuild because node levels are per-id seeded and the
 /// from-scratch build is itself sequential insertion.
 pub struct MutableHnsw {
@@ -172,7 +174,11 @@ impl MutableHnsw {
     pub fn new(dim: usize, data: Vec<f32>, m: usize, ef_construction: usize,
                ef_search: usize, seed: u64) -> Self {
         let emb = Arc::new(EmbeddingMatrix::new(dim, data.clone()));
-        let index = Hnsw::build(emb, m, ef_construction, ef_search, seed);
+        let mut index = Hnsw::build(emb, m, ef_construction, ef_search, seed);
+        // The writer-side master stays in the nested (mutable-tail) form so
+        // every append pays only the incremental insertion cost; snapshots
+        // compact to CSR on publish (see `snapshot`).
+        index.thaw();
         Self { dim, data, index }
     }
 }
@@ -192,7 +198,14 @@ impl MutableRetriever for MutableHnsw {
     }
 
     fn snapshot(&self, shards: usize) -> Arc<dyn Retriever> {
-        let base = Arc::new(self.index.clone());
+        // Publish-time compaction: the clone is sealed into the CSR form,
+        // so serving always walks the flat layout while the master keeps
+        // its mutable nested lists. Sealing only re-lays-out the neighbor
+        // lists — snapshot searches stay bit-identical to the master's
+        // (pinned by hnsw::tests::csr_matches_nested_search).
+        let mut graph = self.index.clone();
+        graph.seal();
+        let base = Arc::new(graph);
         if shards > 1 {
             Arc::new(ShardedRetriever::new(base, shards))
         } else {

@@ -2,18 +2,32 @@
 //! graphs (Malkov & Yashunin), built from scratch over the same embedding
 //! matrix as the exact scan — the DPR-HNSW role in the paper.
 //!
-//! Similarity = inner product (vectors are unit-norm, so this is cosine).
+//! Similarity = inner product (vectors are unit-norm, so this is cosine),
+//! computed through the shared scoring kernel ([`super::kernels::dot`]) so
+//! the walk scores with the same reduction order as every other path.
 //! Search cost is per-query (a graph walk), so batched retrieval scales
 //! linearly in batch size with a fixed per-call intercept — exactly the
 //! ADR latency profile of paper Fig 6b.
+//!
+//! Adjacency lives in one of two forms (DESIGN.md ADR-007): a **nested**
+//! `Vec<Vec<Vec<u32>>>` while the graph is under construction (cheap
+//! push/rewire during insertion) and a per-level **flat CSR** layout
+//! (offsets + packed neighbor array) once sealed — one cache line fetch
+//! per neighbor list instead of two pointer hops, plus software prefetch
+//! of neighbor embedding rows during the walk. [`Hnsw::build`] returns a
+//! sealed graph; [`Hnsw::append`] thaws back to the nested form (the
+//! mutable tail) and [`Hnsw::seal`] recompacts — the epoch layer seals
+//! each published snapshot, so serving always reads CSR. The two forms
+//! store byte-identical neighbor lists, so searches are bit-identical in
+//! either (pinned by `csr_matches_nested_search`).
 //!
 //! Determinism: node levels come from a per-id seeded RNG and neighbor
 //! lists are order-stable, so the index (and thus every experiment) is
 //! reproducible bit-for-bit.
 
-use super::dense::{dot_chunked, EmbeddingMatrix};
+use super::kernels;
 use super::{DocId, Retriever, SpecQuery};
-use crate::util::{Rng, Scored, TopK};
+use crate::util::{Rng, Scored};
 use std::cell::RefCell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -59,10 +73,96 @@ impl PartialOrd for MinCand {
     }
 }
 
+/// One level of the sealed graph in CSR form: node `v`'s neighbors are
+/// `packed[offsets[v] .. offsets[v+1]]`. Nodes that don't reach this
+/// level get an empty range, so `offsets` is always `n + 1` long and a
+/// lookup is two loads into contiguous memory.
+#[derive(Clone)]
+struct CsrLevel {
+    offsets: Vec<u32>,
+    packed: Vec<u32>,
+}
+
+/// The sealed adjacency: one [`CsrLevel`] per graph layer plus the
+/// per-node level count, retained so [`CsrGraph::to_nested`] can rebuild
+/// the exact nested form (including empty lists at a node's top levels)
+/// when the graph is thawed for appends.
+#[derive(Clone)]
+struct CsrGraph {
+    /// node_levels[v] = number of layers node v participates in
+    /// (its insertion level + 1).
+    node_levels: Vec<u32>,
+    levels: Vec<CsrLevel>,
+}
+
+impl CsrGraph {
+    fn from_nested(nested: &[Vec<Vec<u32>>]) -> Self {
+        let n = nested.len();
+        let node_levels: Vec<u32> =
+            nested.iter().map(|ls| ls.len() as u32).collect();
+        let n_levels = nested.iter().map(|ls| ls.len()).max().unwrap_or(0);
+        let mut levels = Vec::with_capacity(n_levels);
+        for l in 0..n_levels {
+            let mut offsets = Vec::with_capacity(n + 1);
+            offsets.push(0u32);
+            let mut total = 0u32;
+            for ls in nested {
+                if let Some(nb) = ls.get(l) {
+                    total += nb.len() as u32;
+                }
+                offsets.push(total);
+            }
+            let mut packed = Vec::with_capacity(total as usize);
+            for ls in nested {
+                if let Some(nb) = ls.get(l) {
+                    packed.extend_from_slice(nb);
+                }
+            }
+            levels.push(CsrLevel { offsets, packed });
+        }
+        Self { node_levels, levels }
+    }
+
+    #[inline]
+    fn neighbors(&self, v: u32, l: usize) -> &[u32] {
+        match self.levels.get(l) {
+            Some(lev) => {
+                let lo = lev.offsets[v as usize] as usize;
+                let hi = lev.offsets[v as usize + 1] as usize;
+                &lev.packed[lo..hi]
+            }
+            None => &[],
+        }
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.node_levels.len()
+    }
+
+    fn to_nested(&self) -> Vec<Vec<Vec<u32>>> {
+        (0..self.n_nodes())
+            .map(|v| {
+                (0..self.node_levels[v] as usize)
+                    .map(|l| self.neighbors(v as u32, l).to_vec())
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Adjacency storage: `Nested` while mutable (construction / the
+/// append tail), `Csr` once sealed for serving.
+#[derive(Clone)]
+enum Adjacency {
+    /// neighbors[node][level] -> neighbor ids.
+    Nested(Vec<Vec<Vec<u32>>>),
+    Csr(CsrGraph),
+}
+
 /// `Clone` so a live-update writer (`retriever::epoch::MutableHnsw`) can
 /// keep a mutable master graph and publish immutable per-epoch snapshots;
 /// the clone shares the embedding matrix (`Arc`) and copies only the
-/// adjacency lists.
+/// adjacency storage.
 #[derive(Clone)]
 pub struct Hnsw {
     emb: Arc<EmbeddingMatrix>,
@@ -76,18 +176,22 @@ pub struct Hnsw {
     seed: u64,
     entry: u32,
     max_level: usize,
-    /// neighbors[node][level] -> neighbor ids.
-    neighbors: Vec<Vec<Vec<u32>>>,
+    adj: Adjacency,
 }
 
+use super::dense::EmbeddingMatrix;
+
 /// Reusable per-search working set: the generation-stamped visited pool
-/// plus the candidate/result heap allocations. A batched retrieval borrows
-/// one scratch for the whole batch ("shared visited-pool reuse"), so every
-/// query after the first runs against warm, correctly-sized buffers —
-/// the per-call intercept of the ADR profile (Fig 6b) is paid once per
-/// batch instead of once per query. The search *algorithm* is untouched:
-/// per-query results are bit-identical whatever the batch size (required
-/// by the output-equivalence property, see pipeline_equivalence.rs).
+/// plus the candidate/result heap allocations and the sorted layer
+/// output. A batched retrieval borrows one scratch for the whole batch
+/// ("shared visited-pool reuse"), so every query after the first runs
+/// against warm, correctly-sized buffers — the per-call intercept of the
+/// ADR profile (Fig 6b) is paid once per batch instead of once per
+/// query. And because KB calls run on the persistent worker pool, the
+/// thread-local scratch survives across coalesced engine flushes too.
+/// The search *algorithm* is untouched: per-query results are
+/// bit-identical whatever the batch size (required by the
+/// output-equivalence property, see pipeline_equivalence.rs).
 #[derive(Default)]
 struct SearchScratch {
     /// visited stamp per node; a node is visited iff stamps[n] == gen.
@@ -96,6 +200,9 @@ struct SearchScratch {
     /// Retired heap allocations (kept empty between searches).
     cand_buf: Vec<Cand>,
     result_buf: Vec<MinCand>,
+    /// Layer-search output, best-first — overwritten by every
+    /// `search_layer` call, consumed before the next.
+    out: Vec<Cand>,
 }
 
 thread_local! {
@@ -115,7 +222,8 @@ fn level_for(seed: u64, i: usize, ml: f64) -> usize {
 }
 
 impl Hnsw {
-    /// Build the graph by sequential insertion.
+    /// Build the graph by sequential insertion; the returned graph is
+    /// sealed (CSR adjacency — see the module docs).
     pub fn build(emb: Arc<EmbeddingMatrix>, m: usize, ef_construction: usize,
                  ef_search: usize, seed: u64) -> Self {
         assert!(m >= 2);
@@ -130,18 +238,24 @@ impl Hnsw {
             seed,
             entry: 0,
             max_level: 0,
-            neighbors: Vec::with_capacity(n),
+            adj: Adjacency::Nested(Vec::with_capacity(n)),
         };
         for i in 0..n {
             index.insert(i as u32, level_for(seed, i, ml), ef_construction);
         }
+        index.seal();
         index
     }
 
     /// Incremental insertion (live knowledge-base updates): swap in an
     /// extended embedding matrix whose rows `[len, emb.len())` are new
     /// documents and insert them one by one, reusing the same
-    /// `SearchScratch` the batched search path shares.
+    /// `SearchScratch` the batched search path shares. A sealed graph is
+    /// thawed back to the nested (mutable-tail) form first and **stays**
+    /// nested so consecutive appends pay the thaw once; call
+    /// [`Hnsw::seal`] to recompact (the epoch layer does this for every
+    /// published snapshot). Searches are valid — and bit-identical —
+    /// in either form.
     ///
     /// Because node levels are a pure function of (seed, id) and `build`
     /// is itself sequential insertion in id order, the grown graph is
@@ -150,11 +264,12 @@ impl Hnsw {
     /// test. That is what lets per-epoch ADR snapshots stay reproducible.
     pub fn append(&mut self, emb: Arc<EmbeddingMatrix>) {
         assert_eq!(emb.dim, self.emb.dim, "appended matrix dim mismatch");
-        let old = self.neighbors.len();
+        let old = self.n_nodes();
         assert!(emb.len() >= old, "appended matrix must extend the old one");
         debug_assert_eq!(&emb.data[..old * emb.dim],
                          &self.emb.data[..old * emb.dim],
                          "existing rows must be unchanged");
+        self.thaw();
         let ml = 1.0 / (self.m as f64).ln();
         self.emb = emb;
         for i in old..self.emb.len() {
@@ -163,9 +278,76 @@ impl Hnsw {
         }
     }
 
+    /// Compact the adjacency into the per-level flat CSR form (no-op if
+    /// already sealed). Sealing never changes any neighbor list — only
+    /// the layout — so sealed and unsealed searches are bit-identical.
+    pub fn seal(&mut self) {
+        let adj = std::mem::replace(&mut self.adj,
+                                    Adjacency::Nested(Vec::new()));
+        self.adj = match adj {
+            Adjacency::Nested(nested) => {
+                Adjacency::Csr(CsrGraph::from_nested(&nested))
+            }
+            sealed => sealed,
+        };
+    }
+
+    /// Expand back to the nested mutable form (no-op if already nested).
+    pub(crate) fn thaw(&mut self) {
+        let adj = std::mem::replace(&mut self.adj,
+                                    Adjacency::Nested(Vec::new()));
+        self.adj = match adj {
+            Adjacency::Csr(csr) => Adjacency::Nested(csr.to_nested()),
+            nested => nested,
+        };
+    }
+
+    /// Whether the adjacency is in the compact CSR form.
+    pub(crate) fn is_sealed(&self) -> bool {
+        matches!(self.adj, Adjacency::Csr(_))
+    }
+
+    /// Adjacency as the nested form (copied) — test/debug comparisons
+    /// that must be layout-independent.
+    pub(crate) fn debug_nested(&self) -> Vec<Vec<Vec<u32>>> {
+        match &self.adj {
+            Adjacency::Nested(n) => n.clone(),
+            Adjacency::Csr(c) => c.to_nested(),
+        }
+    }
+
+    #[inline]
+    fn n_nodes(&self) -> usize {
+        match &self.adj {
+            Adjacency::Nested(n) => n.len(),
+            Adjacency::Csr(c) => c.n_nodes(),
+        }
+    }
+
+    /// Node `v`'s neighbor list at layer `l`, whichever form the
+    /// adjacency is in.
+    #[inline]
+    fn neighbor_slice(&self, v: u32, l: usize) -> &[u32] {
+        match &self.adj {
+            Adjacency::Nested(n) => &n[v as usize][l],
+            Adjacency::Csr(c) => c.neighbors(v, l),
+        }
+    }
+
+    /// Mutable nested adjacency — insertion only runs on the thawed form.
+    #[inline]
+    fn nested_mut(&mut self) -> &mut Vec<Vec<Vec<u32>>> {
+        match &mut self.adj {
+            Adjacency::Nested(n) => n,
+            Adjacency::Csr(_) => {
+                unreachable!("insertion on a sealed graph (thaw first)")
+            }
+        }
+    }
+
     #[inline]
     fn sim(&self, q: &[f32], id: u32) -> f32 {
-        dot_chunked(q, self.emb.row(id))
+        kernels::dot(q, self.emb.row(id))
     }
 
     /// Heuristic neighbor selection (Malkov & Yashunin Alg. 4): keep a
@@ -183,7 +365,7 @@ impl Hnsw {
             let c_vec = self.emb.row(c.id);
             let diverse = selected
                 .iter()
-                .all(|s| dot_chunked(c_vec, self.emb.row(s.id)) < c.score);
+                .all(|s| kernels::dot(c_vec, self.emb.row(s.id)) < c.score);
             if diverse {
                 selected.push(c);
             } else {
@@ -202,43 +384,53 @@ impl Hnsw {
     }
 
     fn insert(&mut self, id: u32, level: usize, ef_c: usize) {
-        self.neighbors.push(vec![Vec::new(); level + 1]);
+        SCRATCH.with(|cell| {
+            self.insert_with(id, level, ef_c, &mut cell.borrow_mut());
+        });
+    }
+
+    fn insert_with(&mut self, id: u32, level: usize, ef_c: usize,
+                   scratch: &mut SearchScratch) {
+        self.nested_mut().push(vec![Vec::new(); level + 1]);
         if id == 0 {
             self.entry = 0;
             self.max_level = level;
             return;
         }
-        let q = self.emb.row(id).to_vec();
+        // Borrow the query row from a local Arc clone so the embedding
+        // slice stays valid across the adjacency mutations below.
+        let emb = Arc::clone(&self.emb);
+        let q = emb.row(id);
         let mut eps: Vec<u32> = vec![self.entry];
         // Greedy descent through layers above the node's level.
         let top = self.max_level;
         for l in ((level + 1)..=top).rev() {
-            eps[0] = self.greedy_step(&q, eps[0], l);
+            eps[0] = self.greedy_step(q, eps[0], l);
         }
         // Insert at each layer <= level; the full candidate set of one
         // layer seeds the search at the next (Malkov & Yashunin Alg. 1).
         for l in (0..=level.min(top)).rev() {
-            let cands = SCRATCH.with(|cell| {
-                self.search_layer(&q, &eps, ef_c, l, &mut cell.borrow_mut())
-            });
+            self.search_layer(q, &eps, ef_c, l, scratch);
             let max_m = if l == 0 { self.m0 } else { self.m };
-            let selected = self.select_heuristic(&cands, self.m);
-            if !cands.is_empty() {
-                eps = cands.iter().map(|c| c.id).collect();
+            let selected = self.select_heuristic(&scratch.out, self.m);
+            if !scratch.out.is_empty() {
+                eps.clear();
+                eps.extend(scratch.out.iter().map(|c| c.id));
             }
             for &nb in &selected {
-                self.neighbors[id as usize][l].push(nb);
-                self.neighbors[nb as usize][l].push(id);
-                if self.neighbors[nb as usize][l].len() > max_m {
+                self.nested_mut()[id as usize][l].push(nb);
+                self.nested_mut()[nb as usize][l].push(id);
+                if self.neighbor_slice(nb, l).len() > max_m {
                     // Re-select the neighbor's list with the same heuristic.
-                    let nb_vec = self.emb.row(nb).to_vec();
-                    let mut scored: Vec<Cand> = self.neighbors[nb as usize][l]
+                    let nb_vec = emb.row(nb);
+                    let mut scored: Vec<Cand> = self
+                        .neighbor_slice(nb, l)
                         .iter()
-                        .map(|&x| Cand { id: x, score: self.sim(&nb_vec, x) })
+                        .map(|&x| Cand { id: x, score: self.sim(nb_vec, x) })
                         .collect();
                     scored.sort_by(|a, b| b.cmp(a));
-                    self.neighbors[nb as usize][l] =
-                        self.select_heuristic(&scored, max_m);
+                    let reselected = self.select_heuristic(&scored, max_m);
+                    self.nested_mut()[nb as usize][l] = reselected;
                 }
             }
         }
@@ -253,7 +445,13 @@ impl Hnsw {
         let mut best = self.sim(q, ep);
         loop {
             let mut improved = false;
-            for &nb in &self.neighbors[ep as usize][l] {
+            let nbs = self.neighbor_slice(ep, l);
+            // Pull the neighbor rows toward cache while the list itself
+            // is still hot; scoring below then hits L1/L2 instead of DRAM.
+            for &nb in nbs {
+                kernels::prefetch_f32(self.emb.row(nb).as_ptr());
+            }
+            for &nb in nbs {
                 let s = self.sim(q, nb);
                 if s > best {
                     best = s;
@@ -267,14 +465,15 @@ impl Hnsw {
         }
     }
 
-    /// Beam search at one layer using the caller-provided scratch; returns
-    /// candidates sorted best-first. The two heap allocations are rented
-    /// from the scratch and handed back empty, so steady-state searches
-    /// allocate only the output vector.
+    /// Beam search at one layer using the caller-provided scratch; leaves
+    /// the candidates sorted best-first in `scratch.out`. The two heap
+    /// allocations are rented from the scratch and handed back empty, so
+    /// steady-state searches allocate nothing.
     fn search_layer(&self, q: &[f32], eps: &[u32], ef: usize, l: usize,
-                    scratch: &mut SearchScratch) -> Vec<Cand> {
-        if scratch.stamps.len() < self.neighbors.len() {
-            scratch.stamps.resize(self.neighbors.len(), 0);
+                    scratch: &mut SearchScratch) {
+        let n = self.n_nodes();
+        if scratch.stamps.len() < n {
+            scratch.stamps.resize(n, 0);
         }
         scratch.gen = scratch.gen.wrapping_add(1);
         if scratch.gen == 0 {
@@ -303,10 +502,16 @@ impl Hnsw {
             if result.len() >= ef && c.score < worst {
                 break;
             }
-            // Clone the neighbor list id slice (short) to avoid borrow
-            // issues; lists are <= m0 long.
-            for idx in 0..self.neighbors[c.id as usize][l].len() {
-                let nb = self.neighbors[c.id as usize][l][idx];
+            let nbs = self.neighbor_slice(c.id, l);
+            // Prefetch the unvisited neighbors' embedding rows before the
+            // scoring pass: by the time `sim` needs a row its cache line
+            // is (usually) already in flight.
+            for &nb in nbs {
+                if stamps[nb as usize] != gen {
+                    kernels::prefetch_f32(self.emb.row(nb).as_ptr());
+                }
+            }
+            for &nb in nbs {
                 if stamps[nb as usize] == gen {
                     continue;
                 }
@@ -324,8 +529,9 @@ impl Hnsw {
                 }
             }
         }
-        let mut out: Vec<Cand> = result.iter().map(|m| m.0).collect();
-        out.sort_by(|a, b| b.cmp(a));
+        scratch.out.clear();
+        scratch.out.extend(result.iter().map(|m| m.0));
+        scratch.out.sort_by(|a, b| b.cmp(a));
         // Hand the (emptied) allocations back to the scratch.
         let mut cb = cand_heap.into_vec();
         cb.clear();
@@ -333,27 +539,29 @@ impl Hnsw {
         let mut rb = result.into_vec();
         rb.clear();
         scratch.result_buf = rb;
-        out
     }
 
     /// One full search against a caller-provided scratch: per-query greedy
     /// descent seeds the layer-0 beam entry point, then beam search with
-    /// ef, then top-k selection.
+    /// ef. `scratch.out` is (score desc, id asc)-sorted over unique ids,
+    /// so its first k entries are exactly the top-k selection (same order
+    /// a `TopK` heap would produce, without building one).
     fn search_with(&self, q: &[f32], k: usize, ef: usize,
                    scratch: &mut SearchScratch) -> Vec<Scored> {
-        if self.neighbors.is_empty() {
+        if self.n_nodes() == 0 {
             return Vec::new();
         }
         let mut ep = self.entry;
         for l in (1..=self.max_level).rev() {
             ep = self.greedy_step(q, ep, l);
         }
-        let cands = self.search_layer(q, &[ep], ef.max(k), 0, scratch);
-        let mut tk = TopK::new(k.max(1));
-        for c in cands {
-            tk.push(c.id, c.score);
-        }
-        tk.into_sorted()
+        self.search_layer(q, &[ep], ef.max(k), 0, scratch);
+        scratch
+            .out
+            .iter()
+            .take(k.max(1))
+            .map(|c| Scored { id: c.id, score: c.score })
+            .collect()
     }
 
     /// Full search: descend to layer 0, beam with ef, return top-k.
@@ -386,7 +594,7 @@ impl Retriever for Hnsw {
     fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
         // Exact metric: the cache scores candidates exactly even though the
         // graph walk is approximate (same as scoring visited nodes in HNSW).
-        dot_chunked(&q.dense, self.emb.row(doc))
+        kernels::dot(&q.dense, self.emb.row(doc))
     }
 
     fn len(&self) -> usize {
@@ -427,8 +635,33 @@ mod tests {
         let emb = clustered_matrix(400, 16, 8, 1);
         let a = Hnsw::build(emb.clone(), 8, 40, 32, 7);
         let b = Hnsw::build(emb, 8, 40, 32, 7);
+        assert!(a.is_sealed() && b.is_sealed());
         assert_eq!(a.entry, b.entry);
-        assert_eq!(a.neighbors, b.neighbors);
+        assert_eq!(a.debug_nested(), b.debug_nested());
+    }
+
+    #[test]
+    fn csr_matches_nested_search() {
+        // The CSR layout is a pure re-layout of the nested lists: the
+        // same walk visits the same nodes in the same order, so sealed
+        // and thawed searches agree bit-for-bit.
+        let emb = clustered_matrix(700, 16, 8, 3);
+        let sealed = Hnsw::build(emb, 12, 60, 48, 5);
+        let mut nested = sealed.clone();
+        nested.thaw();
+        assert!(sealed.is_sealed() && !nested.is_sealed());
+        assert_eq!(sealed.debug_nested(), nested.debug_nested());
+        let mut rng = Rng::new(6);
+        for _ in 0..20 {
+            let q = SpecQuery::dense_only(rng.unit_vector(16));
+            let a = sealed.retrieve_topk(&q, 10);
+            let b = nested.retrieve_topk(&q, 10);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
     }
 
     #[test]
@@ -487,18 +720,34 @@ mod tests {
     #[test]
     fn append_matches_fresh_build() {
         // The live-update invariant: growing a graph by incremental
-        // insertion is bit-identical to building from scratch over the
-        // extended matrix (levels are per-id seeded; build is sequential
-        // insertion) — so per-epoch ADR snapshots are reproducible.
+        // insertion — thawing the sealed prefix into the mutable tail,
+        // inserting, then resealing (the "publish" compaction) — is
+        // bit-identical to building from scratch over the extended matrix
+        // (levels are per-id seeded; build is sequential insertion), so
+        // per-epoch ADR snapshots are reproducible.
         let full = clustered_matrix(600, 16, 8, 13);
         let prefix = Arc::new(EmbeddingMatrix::new(
             16, full.data[..400 * 16].to_vec()));
         let mut grown = Hnsw::build(prefix, 8, 40, 32, 21);
+        assert!(grown.is_sealed());
         grown.append(full.clone());
+        assert!(!grown.is_sealed(), "append leaves the mutable tail open");
+        grown.seal();
+        assert!(grown.is_sealed(), "publish-time compaction reseals");
         let fresh = Hnsw::build(full, 8, 40, 32, 21);
         assert_eq!(grown.entry, fresh.entry);
         assert_eq!(grown.max_level, fresh.max_level);
-        assert_eq!(grown.neighbors, fresh.neighbors);
+        assert_eq!(grown.debug_nested(), fresh.debug_nested());
+        // And the searches agree bit-for-bit.
+        let mut rng = Rng::new(22);
+        let q = SpecQuery::dense_only(rng.unit_vector(16));
+        let a = grown.retrieve_topk(&q, 10);
+        let b = fresh.retrieve_topk(&q, 10);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
     }
 
     #[test]
@@ -514,13 +763,13 @@ mod tests {
 impl Hnsw {
     /// BFS reachability at layer 0 from the entry point (debug/tests).
     pub fn debug_reachable(&self) -> usize {
-        let mut seen = vec![false; self.neighbors.len()];
+        let mut seen = vec![false; self.n_nodes()];
         let mut stack = vec![self.entry];
         seen[self.entry as usize] = true;
         let mut count = 0;
         while let Some(x) = stack.pop() {
             count += 1;
-            for &nb in &self.neighbors[x as usize][0] {
+            for &nb in self.neighbor_slice(x, 0) {
                 if !seen[nb as usize] {
                     seen[nb as usize] = true;
                     stack.push(nb);

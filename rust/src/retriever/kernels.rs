@@ -1,0 +1,507 @@
+//! Vectorized scoring primitives shared by **every** retrieval path —
+//! the serving engine, the sequential references (`SpecPipeline::run`,
+//! `KnnLmSpec::run`, the baseline), the KNN-LM cache, and the HNSW walk
+//! all score through the functions here, so the repo-wide bit-identity
+//! guarantee is preserved *by construction*: there is exactly one
+//! reduction order per kernel, whatever the instruction set (DESIGN.md
+//! ADR-007).
+//!
+//! Three kernels, each with a scalar form and (behind the `simd` cargo
+//! feature + runtime CPU detection) an AVX2/NEON form:
+//!
+//! * [`dot`] — inner product (the EDR/ADR/cache similarity metric);
+//! * [`l2_sq`] — squared L2 distance (the codec-verification primitive
+//!   for quantized segments, ROADMAP item 1);
+//! * [`scan_block`] — the LANES-wide multi-query scan of the flat dense
+//!   retriever: one corpus row scored against up to [`LANES`] packed
+//!   queries per pass.
+//!
+//! ## Why scalar and SIMD results are bit-identical
+//!
+//! Both forms keep [`LANES`] independent per-lane partial sums and
+//! combine them with the same fixed reduction tree
+//! (`((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`, i.e. the halves-then-pairs
+//! order a 256-bit horizontal add produces), then add the scalar tail.
+//! Every f32 multiply and add is individually correctly rounded
+//! (IEEE 754), so identical operation order ⇒ identical bits. The one
+//! trap is *fused* multiply-add (`vfmadd`/`fmla`): it rounds once where
+//! `mul`+`add` round twice, so the SIMD paths deliberately emit separate
+//! multiply and add instructions. The cost is small (both pipelines are
+//! throughput-bound on loads here); the benefit is that the scalar
+//! fallback *is* the reference, and the dispatch decision can never
+//! change results — only speed.
+//!
+//! Dispatch is resolved once per process ([`simd_active`], cached): all
+//! threads — shard workers, the KB-call pool, the engine thread — see
+//! the same decision, so sharded scatter-gather merges scores produced
+//! by one kernel implementation.
+
+use super::DocId;
+use crate::util::TopK;
+
+/// Lane width of the multi-query scan and of the per-lane partial sums
+/// (8 × f32 = one AVX2 register, two NEON registers).
+pub const LANES: usize = 8;
+
+// The fixed reduction tree below is written for exactly 8 lanes.
+const _: () = assert!(LANES == 8);
+
+/// Whether the vectorized kernel forms are in use in this process
+/// (compile-time `simd` feature AND runtime CPU support). Resolved once
+/// and cached: the decision is process-wide constant, which the sharded
+/// retriever's bit-identical-merge property relies on.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn simd_active() -> bool {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+/// Whether the vectorized kernel forms are in use in this process. NEON
+/// is baseline on aarch64, so with the `simd` feature on this is
+/// unconditionally true.
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+pub fn simd_active() -> bool {
+    true
+}
+
+/// Whether the vectorized kernel forms are in use in this process. The
+/// `simd` feature is off (or the arch has no vector path): always false,
+/// every kernel runs its scalar form.
+#[cfg(not(all(feature = "simd",
+              any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn simd_active() -> bool {
+    false
+}
+
+/// The shared reduction tree over the 8 per-lane partial sums — the
+/// exact association a 256-bit horizontal add performs (fold the high
+/// half onto the low half, then pairs), mirrored here so the scalar
+/// kernels produce the same bits as the vector kernels.
+#[inline(always)]
+fn reduce_lanes(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[4]) + (l[2] + l[6])) + ((l[1] + l[5]) + (l[3] + l[7]))
+}
+
+/// Inner product, scalar form: 8 independent per-lane accumulators over
+/// 8-element chunks, the shared reduction tree, then a left-to-right
+/// scalar tail. This *is* the reference semantics of [`dot`]; the SIMD
+/// forms reproduce it bit-for-bit (pinned by tests/kernel_equivalence.rs
+/// across dims including non-multiple-of-8 tails).
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    for (ca, cb) in a.chunks_exact(LANES).zip(b.chunks_exact(LANES)) {
+        for ((s, &x), &y) in lanes.iter_mut().zip(ca).zip(cb) {
+            *s += x * y;
+        }
+    }
+    let mut tail = 0.0f32;
+    let done = (a.len() / LANES) * LANES;
+    for (x, y) in a[done..].iter().zip(&b[done..]) {
+        tail += x * y;
+    }
+    reduce_lanes(&lanes) + tail
+}
+
+/// Squared L2 distance, scalar form (same structure as [`dot_scalar`]:
+/// per-lane sums of `(a-b)^2`, shared reduction tree, scalar tail).
+pub fn l2_sq_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    for (ca, cb) in a.chunks_exact(LANES).zip(b.chunks_exact(LANES)) {
+        for ((s, &x), &y) in lanes.iter_mut().zip(ca).zip(cb) {
+            let d = x - y;
+            *s += d * d;
+        }
+    }
+    let mut tail = 0.0f32;
+    let done = (a.len() / LANES) * LANES;
+    for (x, y) in a[done..].iter().zip(&b[done..]) {
+        let d = x - y;
+        tail += d * d;
+    }
+    reduce_lanes(&lanes) + tail
+}
+
+/// Multi-query scan, scalar form: score every `d`-wide row of `rows`
+/// against the column-major query pack `qt` (`qt[j*LANES + lane]`,
+/// zero-padded to [`LANES`] lanes) and push `(first_id + row, score)`
+/// into the per-query heaps (`heaps.len()` ≤ LANES live lanes; padding
+/// lanes are scored but discarded). Each lane keeps a single accumulator
+/// walked in coordinate order, so scalar and SIMD lanes are trivially
+/// bit-identical — the per-lane sums never cross lanes.
+pub fn scan_block_scalar(rows: &[f32], d: usize, first_id: DocId,
+                         qt: &[f32], heaps: &mut [TopK]) {
+    debug_assert!(qt.len() >= d * LANES);
+    debug_assert!(heaps.len() <= LANES);
+    for (i, row) in rows.chunks_exact(d).enumerate() {
+        let mut scores = [0.0f32; LANES];
+        for (j, &x) in row.iter().enumerate() {
+            let qrow = &qt[j * LANES..(j + 1) * LANES];
+            for (s, &qv) in scores.iter_mut().zip(qrow) {
+                *s += x * qv;
+            }
+        }
+        for (h, &s) in heaps.iter_mut().zip(&scores) {
+            h.push(first_id + i as DocId, s);
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use super::{DocId, TopK, LANES};
+    use std::arch::x86_64::*;
+
+    /// Fold a 256-bit accumulator with the shared reduction tree:
+    /// high half onto low half (`m[j] = l[j] + l[j+4]`), then the same
+    /// pairs-then-sum association as `reduce_lanes`.
+    #[inline(always)]
+    unsafe fn hsum(acc: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps::<1>(acc);
+        let mut m = [0.0f32; 4];
+        _mm_storeu_ps(m.as_mut_ptr(), _mm_add_ps(lo, hi));
+        (m[0] + m[2]) + (m[1] + m[3])
+    }
+
+    /// AVX2 `dot`: separate `mul` + `add` (NOT `fmadd` — fusing rounds
+    /// once where the scalar form rounds twice, which would break the
+    /// scalar/SIMD bit-identity the dispatch relies on), `hsum`, then
+    /// the same scalar tail as the reference.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * LANES;
+            let va = _mm256_loadu_ps(pa.add(i));
+            let vb = _mm256_loadu_ps(pb.add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let body = hsum(acc);
+        let mut tail = 0.0f32;
+        let done = chunks * LANES;
+        for (x, y) in a[done..].iter().zip(&b[done..]) {
+            tail += x * y;
+        }
+        body + tail
+    }
+
+    /// AVX2 `l2_sq` (same structure: `sub`, `mul`, `add` — no fusing).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn l2_sq_avx2(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * LANES;
+            let dv = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)),
+                                   _mm256_loadu_ps(pb.add(i)));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(dv, dv));
+        }
+        let body = hsum(acc);
+        let mut tail = 0.0f32;
+        let done = chunks * LANES;
+        for (x, y) in a[done..].iter().zip(&b[done..]) {
+            let d = x - y;
+            tail += d * d;
+        }
+        body + tail
+    }
+
+    /// AVX2 multi-query scan: broadcast each row coordinate against the
+    /// packed query register; per-lane sums never cross lanes, so the
+    /// lanes match the scalar form bit-for-bit by construction.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scan_block_avx2(rows: &[f32], d: usize, first_id: DocId,
+                                  qt: &[f32], heaps: &mut [TopK]) {
+        debug_assert!(qt.len() >= d * LANES);
+        debug_assert!(heaps.len() <= LANES);
+        let qtp = qt.as_ptr();
+        let mut scores = [0.0f32; LANES];
+        for (i, row) in rows.chunks_exact(d).enumerate() {
+            let mut acc = _mm256_setzero_ps();
+            for (j, x) in row.iter().enumerate() {
+                let xv = _mm256_broadcast_ss(x);
+                let qv = _mm256_loadu_ps(qtp.add(j * LANES));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, qv));
+            }
+            _mm256_storeu_ps(scores.as_mut_ptr(), acc);
+            for (h, &s) in heaps.iter_mut().zip(&scores) {
+                h.push(first_id + i as DocId, s);
+            }
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod arm {
+    use super::{DocId, TopK, LANES};
+    use std::arch::aarch64::*;
+
+    /// Fold the two 128-bit accumulators (lanes 0–3, 4–7) with the
+    /// shared reduction tree: `m[j] = l[j] + l[j+4]`, then
+    /// `(m0+m2) + (m1+m3)` — the same association as `reduce_lanes`.
+    #[inline(always)]
+    unsafe fn hsum(acc0: float32x4_t, acc1: float32x4_t) -> f32 {
+        let m = vaddq_f32(acc0, acc1);
+        (vgetq_lane_f32::<0>(m) + vgetq_lane_f32::<2>(m))
+            + (vgetq_lane_f32::<1>(m) + vgetq_lane_f32::<3>(m))
+    }
+
+    /// NEON `dot`: separate `vmul` + `vadd` (no `fmla` — fusing would
+    /// break scalar/SIMD bit-identity), `hsum`, scalar tail.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let i = c * LANES;
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(pa.add(i)),
+                                             vld1q_f32(pb.add(i))));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(pa.add(i + 4)),
+                                             vld1q_f32(pb.add(i + 4))));
+        }
+        let body = hsum(acc0, acc1);
+        let mut tail = 0.0f32;
+        let done = chunks * LANES;
+        for (x, y) in a[done..].iter().zip(&b[done..]) {
+            tail += x * y;
+        }
+        body + tail
+    }
+
+    /// NEON `l2_sq` (same structure; no fusing).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn l2_sq_neon(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let i = c * LANES;
+            let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)),
+                               vld1q_f32(pb.add(i + 4)));
+            acc0 = vaddq_f32(acc0, vmulq_f32(d0, d0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(d1, d1));
+        }
+        let body = hsum(acc0, acc1);
+        let mut tail = 0.0f32;
+        let done = chunks * LANES;
+        for (x, y) in a[done..].iter().zip(&b[done..]) {
+            let d = x - y;
+            tail += d * d;
+        }
+        body + tail
+    }
+
+    /// NEON multi-query scan: broadcast each row coordinate against the
+    /// two packed query registers; per-lane sums never cross lanes.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scan_block_neon(rows: &[f32], d: usize, first_id: DocId,
+                                  qt: &[f32], heaps: &mut [TopK]) {
+        debug_assert!(qt.len() >= d * LANES);
+        debug_assert!(heaps.len() <= LANES);
+        let qtp = qt.as_ptr();
+        let mut scores = [0.0f32; LANES];
+        for (i, row) in rows.chunks_exact(d).enumerate() {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            for (j, &x) in row.iter().enumerate() {
+                let xv = vdupq_n_f32(x);
+                acc0 = vaddq_f32(acc0,
+                                 vmulq_f32(xv, vld1q_f32(qtp.add(j * LANES))));
+                acc1 = vaddq_f32(
+                    acc1,
+                    vmulq_f32(xv, vld1q_f32(qtp.add(j * LANES + 4))));
+            }
+            vst1q_f32(scores.as_mut_ptr(), acc0);
+            vst1q_f32(scores.as_mut_ptr().add(4), acc1);
+            for (h, &s) in heaps.iter_mut().zip(&scores) {
+                h.push(first_id + i as DocId, s);
+            }
+        }
+    }
+}
+
+/// Inner product of two equal-length vectors — the similarity metric of
+/// every dense path (flat scan scoring, HNSW walk, KNN-LM cache). Picks
+/// the vector form iff [`simd_active`]; the result is bit-identical
+/// either way (see the module docs).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2 support at runtime.
+        return unsafe { x86::dot_avx2(a, b) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { arm::dot_neon(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+/// Squared L2 distance of two equal-length vectors. Same dispatch and
+/// bit-identity contract as [`dot`].
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2 support at runtime.
+        return unsafe { x86::l2_sq_avx2(a, b) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { arm::l2_sq_neon(a, b) };
+    }
+    l2_sq_scalar(a, b)
+}
+
+/// Multi-query scan block — see [`scan_block_scalar`] for the exact
+/// semantics (`rows` is `n × d` row-major, `qt` the zero-padded
+/// column-major query pack, one heap per live query lane). Same dispatch
+/// and bit-identity contract as [`dot`].
+#[inline]
+pub fn scan_block(rows: &[f32], d: usize, first_id: DocId, qt: &[f32],
+                  heaps: &mut [TopK]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2 support at runtime.
+        return unsafe { x86::scan_block_avx2(rows, d, first_id, qt, heaps) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { arm::scan_block_neon(rows, d, first_id, qt, heaps) };
+    }
+    scan_block_scalar(rows, d, first_id, qt, heaps)
+}
+
+/// Best-effort prefetch of the cache line holding `ptr` (used by the
+/// HNSW walk to pull neighbor embedding rows while the current
+/// candidate is still being scored). Purely a hint: it never faults and
+/// never changes results; a no-op off x86_64 (aarch64 `prfm` has no
+/// stable intrinsic).
+#[inline(always)]
+pub fn prefetch_f32(ptr: *const f32) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch is a hint and cannot fault, even on dangling
+    // addresses; SSE is baseline on x86_64.
+    unsafe {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch(ptr as *const i8, _MM_HINT_T0);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = ptr;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// The satellite dims: tails (7), exact chunk (8), mid (64), tail
+    /// again (65), two chunks' worth of the serving dim (128).
+    const DIMS: [usize; 5] = [7, 8, 64, 65, 128];
+
+    fn pair(d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let a = (0..d).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let b = (0..d).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn dot_dispatch_matches_scalar_bitwise() {
+        for &d in &DIMS {
+            let (a, b) = pair(d, 100 + d as u64);
+            assert_eq!(dot(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits(),
+                       "d={d} simd_active={}", simd_active());
+        }
+    }
+
+    #[test]
+    fn l2_dispatch_matches_scalar_bitwise() {
+        for &d in &DIMS {
+            let (a, b) = pair(d, 200 + d as u64);
+            assert_eq!(l2_sq(&a, &b).to_bits(),
+                       l2_sq_scalar(&a, &b).to_bits(),
+                       "d={d} simd_active={}", simd_active());
+        }
+    }
+
+    #[test]
+    fn dot_scalar_matches_naive_value() {
+        for &d in &DIMS {
+            let (a, b) = pair(d, 300 + d as u64);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot_scalar(&a, &b) - naive).abs() < 1e-4, "d={d}");
+        }
+    }
+
+    #[test]
+    fn l2_scalar_matches_naive_value() {
+        for &d in &DIMS {
+            let (a, b) = pair(d, 400 + d as u64);
+            let naive: f32 =
+                a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!((l2_sq_scalar(&a, &b) - naive).abs() < 1e-4, "d={d}");
+        }
+    }
+
+    #[test]
+    fn scan_block_dispatch_matches_scalar_bitwise() {
+        for &d in &DIMS {
+            let mut rng = Rng::new(500 + d as u64);
+            let n_rows = 33;
+            let rows: Vec<f32> =
+                (0..n_rows * d).map(|_| rng.next_f32() - 0.5).collect();
+            // b = 5 < LANES exercises the zero-padded lanes too.
+            for b in [5usize, LANES] {
+                let mut qt = vec![0.0f32; d * LANES];
+                for bi in 0..b {
+                    for j in 0..d {
+                        qt[j * LANES + bi] = rng.next_f32() - 0.5;
+                    }
+                }
+                let mut h1: Vec<TopK> =
+                    (0..b).map(|_| TopK::new(10)).collect();
+                let mut h2: Vec<TopK> =
+                    (0..b).map(|_| TopK::new(10)).collect();
+                scan_block(&rows, d, 7, &qt, &mut h1);
+                scan_block_scalar(&rows, d, 7, &qt, &mut h2);
+                for (a, e) in h1.into_iter().zip(h2) {
+                    let (a, e) = (a.into_sorted(), e.into_sorted());
+                    assert_eq!(a.len(), e.len());
+                    for (x, y) in a.iter().zip(&e) {
+                        assert_eq!(x.id, y.id, "d={d} b={b}");
+                        assert_eq!(x.score.to_bits(), y.score.to_bits(),
+                                   "d={d} b={b}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_is_inert() {
+        let v = [1.0f32; 8];
+        prefetch_f32(v.as_ptr());
+        // And on an address we never dereference:
+        prefetch_f32(std::ptr::null());
+        assert_eq!(dot(&v, &v), 8.0);
+    }
+}

@@ -36,10 +36,18 @@
 //! snapshots are published atomically per epoch through
 //! [`epoch::EpochKb`] — serving reads stay lock-free against pinned
 //! snapshots while a [`epoch::KbWriter`] ingests new documents.
+//!
+//! [`kernels`] holds the scoring primitives all of the above call into
+//! (DESIGN.md ADR-007): one dot-product / multi-query-scan / L2 kernel
+//! with a scalar form and runtime-dispatched AVX2/NEON forms that are
+//! bit-identical by construction — so the serving engine, the sequential
+//! references, and the cache score through literally the same reduction
+//! order, on any host.
 
 pub mod dense;
 pub mod epoch;
 pub mod hnsw;
+pub mod kernels;
 pub mod pool;
 pub mod sharded;
 pub mod sparse;

@@ -21,6 +21,12 @@
 //!   Per-query results are trivially identical; the win is parallelism
 //!   across the batch, which is exactly the axis batched verification
 //!   exposes.
+//!
+//! One more ingredient of the bit-identity: kernel dispatch
+//! (`retriever::kernels::simd_active`, DESIGN.md ADR-007) is a
+//! process-wide constant, so every pool worker scores with the same
+//! (scalar or SIMD — themselves bit-identical) kernel form and the k-way
+//! merge never compares scores produced by different code paths.
 
 use super::dense::{DenseExact, DenseShard};
 use super::hnsw::Hnsw;

@@ -21,9 +21,33 @@ use crate::datagen::corpus::Corpus;
 use crate::util::{Scored, TopK};
 use std::cell::RefCell;
 
+/// Reusable working set for [`Bm25::retrieve_batch_range`]: the
+/// `(term, query, qtf)` fan-out list plus the dense score accumulators and
+/// their touched-doc lists. Everything is rented from a thread-local and
+/// handed back in its invariant state (pairs/touched cleared, accumulators
+/// all-zero), so steady-state batched retrieval — including every
+/// coalesced engine flush, since KB calls run on the persistent worker
+/// pool — allocates nothing.
+#[derive(Default)]
+struct SparseScratch {
+    /// (term, query index, query term frequency), sorted by (term, query):
+    /// the flat replacement for the old per-call `HashMap<term, users>` —
+    /// same traversal order (terms ascending, then queries ascending), so
+    /// accumulation order and therefore scores are bit-identical.
+    pairs: Vec<(u32, u32, f32)>,
+    /// Dense per-query score accumulators; all-zero between calls. Buffers
+    /// are zeroed once at birth and *selectively* re-zeroed (touched
+    /// entries only) on return, so per-call cost scales with postings
+    /// traversed, not with B x n_docs. (§Perf: this flattened the SR
+    /// batching curve — see EXPERIMENTS.md.)
+    acc: Vec<Vec<f32>>,
+    /// Docs with a nonzero accumulator entry, per query; cleared on return.
+    touched: Vec<Vec<DocId>>,
+}
+
 thread_local! {
-    /// Reusable all-zero score accumulators (see retrieve_batch).
-    static ACC_POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static SPARSE_SCRATCH: RefCell<SparseScratch> =
+        RefCell::new(SparseScratch::default());
 }
 
 /// `Clone` so a live-update writer (`retriever::epoch::MutableBm25`) can
@@ -186,38 +210,51 @@ impl Bm25 {
     pub(crate) fn retrieve_batch_range(&self, qs: &[SpecQuery], k: usize,
                                        lo: DocId, hi: DocId)
                                        -> Vec<Vec<Scored>> {
-        // Union the query terms; walk each posting list once and fan the
-        // contribution out to every query containing the term.
-        let per_query: Vec<Vec<(u32, f32)>> =
-            qs.iter().map(|q| self.query_terms(&q.terms)).collect();
-        let mut term_users: std::collections::HashMap<u32, Vec<(usize, f32)>> =
-            std::collections::HashMap::new();
-        for (qi, terms) in per_query.iter().enumerate() {
-            for &(t, qtf) in terms {
-                term_users.entry(t).or_default().push((qi, qtf));
+        SPARSE_SCRATCH.with(|cell| {
+            self.retrieve_batch_range_with(qs, k, lo, hi,
+                                           &mut cell.borrow_mut())
+        })
+    }
+
+    /// [`Bm25::retrieve_batch_range`] against a caller-provided scratch.
+    fn retrieve_batch_range_with(&self, qs: &[SpecQuery], k: usize,
+                                 lo: DocId, hi: DocId,
+                                 scratch: &mut SparseScratch)
+                                 -> Vec<Vec<Scored>> {
+        let SparseScratch { pairs, acc, touched } = &mut *scratch;
+        // Union the query terms as a flat (term, query, qtf) list; walk
+        // each posting list once and fan the contribution out to every
+        // query containing the term. `query_terms` emits terms sorted, so
+        // sorting the flat list by (term, query) reproduces the exact
+        // accumulation order of the per-term HashMap this replaces:
+        // terms ascending, then queries ascending.
+        pairs.clear();
+        for (qi, q) in qs.iter().enumerate() {
+            for (t, qtf) in self.query_terms(&q.terms) {
+                pairs.push((t, qi as u32, qtf));
             }
         }
-        // Dense accumulator per query from a thread-local pool: buffers are
-        // zeroed once at birth and *selectively* re-zeroed (touched entries
-        // only) on return, so per-call cost scales with postings traversed,
-        // not with B x n_docs. (§Perf: this flattened the SR batching curve
-        // — see EXPERIMENTS.md.)
-        let mut acc = ACC_POOL.with(|cell| {
-            let mut pool = cell.borrow_mut();
-            let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(qs.len());
-            for _ in 0..qs.len() {
-                let mut b = pool.pop().unwrap_or_default();
-                if b.len() < self.n_docs {
-                    b.resize(self.n_docs, 0.0);
-                }
-                bufs.push(b);
+        pairs.sort_unstable_by_key(|&(t, qi, _)| (t, qi));
+        while acc.len() < qs.len() {
+            acc.push(Vec::new());
+        }
+        for a in acc.iter_mut().take(qs.len()) {
+            if a.len() < self.n_docs {
+                a.resize(self.n_docs, 0.0);
             }
-            bufs
-        });
-        let mut touched: Vec<Vec<DocId>> = qs.iter().map(|_| Vec::new()).collect();
-        let mut terms: Vec<(&u32, &Vec<(usize, f32)>)> = term_users.iter().collect();
-        terms.sort_by_key(|(t, _)| **t); // deterministic traversal
-        for (&t, users) in terms {
+        }
+        while touched.len() < qs.len() {
+            touched.push(Vec::new());
+        }
+        let mut idx = 0;
+        while idx < pairs.len() {
+            let t = pairs[idx].0;
+            let mut end = idx + 1;
+            while end < pairs.len() && pairs[end].0 == t {
+                end += 1;
+            }
+            let users = &pairs[idx..end];
+            idx = end;
             let idf = self.idf[t as usize];
             let plist = &self.postings[t as usize];
             // Postings are doc-id-sorted: binary-search the range start,
@@ -230,7 +267,8 @@ impl Bm25 {
                 let w = idf
                     * self.term_weight(tf as f32,
                                        self.doc_len[doc as usize] as f32);
-                for &(qi, qtf) in users {
+                for &(_, qi, qtf) in users {
+                    let qi = qi as usize;
                     if acc[qi][doc as usize] == 0.0 {
                         touched[qi].push(doc);
                     }
@@ -239,20 +277,15 @@ impl Bm25 {
             }
         }
         let mut out = Vec::with_capacity(qs.len());
-        for qi in 0..qs.len() {
+        for (a, tq) in acc.iter_mut().zip(touched.iter_mut()).take(qs.len()) {
             let mut tk = TopK::new(k.max(1));
-            for &doc in &touched[qi] {
-                tk.push(doc, acc[qi][doc as usize]);
-                acc[qi][doc as usize] = 0.0; // restore scratch invariant
+            for &doc in tq.iter() {
+                tk.push(doc, a[doc as usize]);
+                a[doc as usize] = 0.0; // restore the all-zero invariant
             }
+            tq.clear();
             out.push(tk.into_sorted());
         }
-        ACC_POOL.with(|cell| {
-            let mut pool = cell.borrow_mut();
-            for b in acc.drain(..) {
-                pool.push(b);
-            }
-        });
         out
     }
 }

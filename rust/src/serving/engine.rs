@@ -234,6 +234,9 @@ pub struct ServeEngine<T: ServeTask> {
     exec: Option<RetrievalExecutor>,
     /// In-flight (or inline-running) groups keyed by correlation id.
     dispatched: HashMap<u64, Vec<GroupMember>>,
+    /// Reusable (k, epoch) group list for [`flush`](Self::flush) — kept as
+    /// a field so the sort/dedup scratch survives across flushes.
+    flush_groups: Vec<(usize, u64)>,
     next_group: u64,
     stats: EngineStats,
     finished: Vec<(u64, ReqMetrics)>,
@@ -257,6 +260,7 @@ impl<T: ServeTask> ServeEngine<T> {
             pending: Vec::new(),
             exec,
             dispatched: HashMap::new(),
+            flush_groups: Vec::new(),
             next_group: 0,
             stats: EngineStats::default(),
             finished: Vec::new(),
@@ -520,41 +524,44 @@ impl<T: ServeTask> ServeEngine<T> {
     /// of batchmates, so sub-slice routing is bit-identical to per-task
     /// retrieval.
     fn flush(&mut self) -> anyhow::Result<()> {
-        let batch = std::mem::take(&mut self.pending);
+        let mut batch = std::mem::take(&mut self.pending);
         if batch.is_empty() {
             return Ok(());
         }
-        let mut groups: Vec<(usize, u64)> =
-            batch.iter().map(|p| (p.k, p.epoch)).collect();
-        groups.sort_unstable();
-        groups.dedup();
-        let distinct_k = {
-            let mut ks: Vec<usize> = groups.iter().map(|g| g.0).collect();
-            ks.dedup(); // `groups` is sorted by k first
-            ks.len()
-        };
+        // Reuse the field-held group list (capacity survives flushes) and
+        // count distinct k values positionally — the sorted list groups by
+        // k first, so each run of equal k contributes one.
+        self.flush_groups.clear();
+        self.flush_groups.extend(batch.iter().map(|p| (p.k, p.epoch)));
+        self.flush_groups.sort_unstable();
+        self.flush_groups.dedup();
+        let groups = std::mem::take(&mut self.flush_groups);
+        let distinct_k =
+            1 + groups.windows(2).filter(|w| w[0].0 != w[1].0).count();
         self.stats.epoch_splits += (groups.len() - distinct_k) as u64;
-        for (k, epoch) in groups {
-            let idxs: Vec<usize> = (0..batch.len())
-                .filter(|&i| batch[i].k == k && batch[i].epoch == epoch)
-                .collect();
-            let queries: Vec<SpecQuery> = idxs
-                .iter()
-                .flat_map(|&i| batch[i].queries.iter().cloned())
-                .collect();
-            let members: Vec<GroupMember> = idxs
-                .iter()
-                .map(|&i| GroupMember {
-                    slot: batch[i].slot,
-                    n_queries: batch[i].queries.len(),
-                })
-                .collect();
+        for &(k, epoch) in &groups {
+            // Single pass over the buffer: move (not clone) each member's
+            // queries into the coalesced call. A member's queries are
+            // consumed exactly once — its (k, epoch) matches exactly one
+            // entry of the deduped group list.
+            let mut queries: Vec<SpecQuery> = Vec::new();
+            let mut members: Vec<GroupMember> = Vec::new();
             // Per-member coalescing delay is snapshotted immediately
             // before the group's KB call starts — on the worker for
             // dispatched groups (so executor-backlog time counts too),
             // right here for inline ones.
-            let enqueued: Vec<Stopwatch> =
-                idxs.iter().map(|&i| batch[i].enqueued).collect();
+            let mut enqueued: Vec<Stopwatch> = Vec::new();
+            for p in batch.iter_mut() {
+                if p.k != k || p.epoch != epoch {
+                    continue;
+                }
+                members.push(GroupMember {
+                    slot: p.slot,
+                    n_queries: p.queries.len(),
+                });
+                enqueued.push(p.enqueued);
+                queries.append(&mut p.queries);
+            }
             // Resolve the group's snapshot. Epoch 0 falls back to the
             // engine's default KB (the frozen-KB path); a *nonzero*
             // pinned epoch with no registered snapshot must not be
@@ -604,6 +611,13 @@ impl<T: ServeTask> ServeEngine<T> {
                 }
             }
         }
+        // Hand the group list's allocation back to the field and recycle
+        // the drained buffer as the next coalescing buffer (`route` never
+        // touches `pending`, so it is still the empty Vec `take` left).
+        self.flush_groups = groups;
+        debug_assert!(self.pending.is_empty());
+        batch.clear();
+        self.pending = batch;
         Ok(())
     }
 

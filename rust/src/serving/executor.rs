@@ -19,6 +19,12 @@
 //! results back per group, and per-request outputs are invariant to that
 //! order because every retriever scores queries independently of
 //! batchmates (the bit-identity the equivalence suites pin).
+//!
+//! Because the pool threads are persistent, the thread-local retrieval
+//! scratch (HNSW search scratch, BM25 accumulators, the dense query-pack
+//! buffer — see `retriever::kernels` and friends) stays warm across
+//! coalesced flushes: steady-state KB calls allocate nothing on the hot
+//! path.
 
 use crate::metrics::Stopwatch;
 use crate::retriever::pool::run_caught;

@@ -9,15 +9,17 @@ pub use rng::{Rng, Zipf};
 pub use stats::{linear_fit, summarize, Ema, Summary};
 pub use topk::{argmax, topk_from_scores, Scored, TopK};
 
-/// Dot product of two equal-length f32 slices (the retrieval hot loop
-/// delegates to `retriever::dense::dot_chunked`; this is the simple form
-/// used by caches and small vectors).
+/// Dot product of two equal-length f32 slices — the naive left-to-right
+/// form, kept for small vectors and as an accuracy reference. Every
+/// retrieval/cache hot loop instead goes through
+/// `retriever::kernels::dot` (DESIGN.md ADR-007), whose lane-blocked
+/// reduction order is shared bit-for-bit by the scalar and SIMD forms.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = 0.0f32;
-    for i in 0..a.len() {
-        acc += a[i] * b[i];
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
     }
     acc
 }

@@ -1,0 +1,176 @@
+//! ADR-007 equivalence pins: the dispatched scoring kernels (SIMD when
+//! active, scalar otherwise) must be **bitwise** identical to the chunked
+//! scalar reference for every dimension shape — multiples of the lane
+//! width, sub-lane vectors, and tails — and the dense batch path must be
+//! bitwise reproducible from a hand-packed `scan_block_scalar` walk.
+//!
+//! These tests are the reason the `simd` feature can default on: on a
+//! SIMD-capable host they pin `dispatch == scalar`, and the CI
+//! `scalar-fallback` leg re-runs the whole suite with `simd` off, so
+//! both sides of the feature gate produce one set of bits.
+
+use ralmspec::retriever::dense::{DenseExact, EmbeddingMatrix};
+use ralmspec::retriever::kernels::{self, LANES};
+use ralmspec::retriever::{Retriever, SpecQuery};
+use ralmspec::util::{Rng, TopK};
+use std::sync::Arc;
+
+/// Dimension sweep: sub-lane (7), exact lane (8), multiple (64),
+/// multiple + 1 tail (65), larger multiple (128).
+const DIMS: [usize; 5] = [7, 8, 64, 65, 128];
+
+fn random_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+    rng.unit_vector(d)
+}
+
+#[test]
+fn dot_dispatch_bitwise_matches_scalar_across_dims() {
+    let mut rng = Rng::new(0xE0_01);
+    for &d in &DIMS {
+        for _ in 0..32 {
+            let a = random_vec(&mut rng, d);
+            let b = random_vec(&mut rng, d);
+            assert_eq!(
+                kernels::dot(&a, &b).to_bits(),
+                kernels::dot_scalar(&a, &b).to_bits(),
+                "dot dispatch != scalar at d={d} (simd_active={})",
+                kernels::simd_active()
+            );
+        }
+    }
+}
+
+#[test]
+fn l2_dispatch_bitwise_matches_scalar_across_dims() {
+    let mut rng = Rng::new(0xE0_02);
+    for &d in &DIMS {
+        for _ in 0..32 {
+            let a = random_vec(&mut rng, d);
+            let b = random_vec(&mut rng, d);
+            assert_eq!(
+                kernels::l2_sq(&a, &b).to_bits(),
+                kernels::l2_sq_scalar(&a, &b).to_bits(),
+                "l2_sq dispatch != scalar at d={d} (simd_active={})",
+                kernels::simd_active()
+            );
+        }
+    }
+}
+
+/// Column-major query-block pack (lane `bi` holds query `bi`), the layout
+/// `scan_block` consumes; padding lanes stay zero.
+fn pack_qt(queries: &[Vec<f32>], d: usize) -> Vec<f32> {
+    assert!(queries.len() <= LANES);
+    let mut qt = vec![0.0f32; d * LANES];
+    for (bi, q) in queries.iter().enumerate() {
+        for (j, &v) in q.iter().enumerate() {
+            qt[j * LANES + bi] = v;
+        }
+    }
+    qt
+}
+
+#[test]
+fn scan_block_dispatch_bitwise_matches_scalar_across_dims() {
+    let mut rng = Rng::new(0xE0_03);
+    // 97 rows: not a multiple of anything interesting, so heap contents
+    // depend on every row being scored.
+    let n_rows = 97usize;
+    for &d in &DIMS {
+        let mut data = Vec::with_capacity(n_rows * d);
+        for _ in 0..n_rows {
+            data.extend(random_vec(&mut rng, d));
+        }
+        // Partial (3-query) and full (LANES-query) blocks.
+        for b in [3usize, LANES] {
+            let queries: Vec<Vec<f32>> =
+                (0..b).map(|_| random_vec(&mut rng, d)).collect();
+            let qt = pack_qt(&queries, d);
+
+            let mut heaps: Vec<TopK> =
+                (0..b).map(|_| TopK::new(10)).collect();
+            kernels::scan_block(&data, d, 0, &qt, &mut heaps);
+
+            let mut ref_heaps: Vec<TopK> =
+                (0..b).map(|_| TopK::new(10)).collect();
+            kernels::scan_block_scalar(&data, d, 0, &qt, &mut ref_heaps);
+
+            for (hi, (h, r)) in
+                heaps.into_iter().zip(ref_heaps).enumerate()
+            {
+                let got = h.into_sorted();
+                let want = r.into_sorted();
+                assert_eq!(got.len(), want.len(),
+                           "lane {hi} length at d={d} b={b}");
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.id, w.id, "lane {hi} id at d={d} b={b}");
+                    assert_eq!(g.score.to_bits(), w.score.to_bits(),
+                               "lane {hi} score bits at d={d} b={b}");
+                }
+            }
+        }
+    }
+}
+
+/// End-to-end: `DenseExact::retrieve_batch` (which packs query blocks and
+/// calls the dispatched `scan_block`) must be bitwise reproducible from a
+/// hand-packed `scan_block_scalar` pass over the same matrix — including
+/// a batch size that crosses a block boundary (one full block + a
+/// partial one).
+#[test]
+fn dense_batch_matches_hand_packed_scalar_reference() {
+    let mut rng = Rng::new(0xE0_04);
+    let n_docs = 500usize;
+    let k = 20usize;
+    for &d in &DIMS {
+        let mut data = Vec::with_capacity(n_docs * d);
+        for _ in 0..n_docs {
+            data.extend(random_vec(&mut rng, d));
+        }
+        let emb = Arc::new(EmbeddingMatrix::new(d, data));
+        let kb = DenseExact::new(Arc::clone(&emb));
+
+        // LANES + 3 queries: full block then a 3-wide partial block.
+        let raw: Vec<Vec<f32>> =
+            (0..LANES + 3).map(|_| random_vec(&mut rng, d)).collect();
+        let qs: Vec<SpecQuery> =
+            raw.iter().cloned().map(SpecQuery::dense_only).collect();
+        let got = kb.retrieve_batch(&qs, k);
+        assert_eq!(got.len(), qs.len());
+
+        for (block_start, chunk) in
+            raw.chunks(LANES).enumerate().map(|(ci, c)| (ci * LANES, c))
+        {
+            let qt = pack_qt(chunk, d);
+            let mut heaps: Vec<TopK> =
+                (0..chunk.len()).map(|_| TopK::new(k)).collect();
+            kernels::scan_block_scalar(&emb.data, d, 0, &qt, &mut heaps);
+            for (bi, h) in heaps.into_iter().enumerate() {
+                let want = h.into_sorted();
+                let g = &got[block_start + bi];
+                assert_eq!(g.len(), want.len(), "query {} at d={d}",
+                           block_start + bi);
+                for (gs, ws) in g.iter().zip(&want) {
+                    assert_eq!(gs.id, ws.id,
+                               "query {} id at d={d}", block_start + bi);
+                    assert_eq!(gs.score.to_bits(), ws.score.to_bits(),
+                               "query {} score bits at d={d}",
+                               block_start + bi);
+                }
+            }
+        }
+    }
+}
+
+/// The dispatch decision is a process-wide constant: repeated calls agree
+/// (the sharded scatter-gather merge relies on every worker thread
+/// scoring with the same kernel form).
+#[test]
+fn dispatch_decision_is_stable() {
+    let first = kernels::simd_active();
+    for _ in 0..8 {
+        assert_eq!(kernels::simd_active(), first);
+    }
+    #[cfg(not(feature = "simd"))]
+    assert!(!first, "simd_active must be false with the feature off");
+}
