@@ -24,7 +24,7 @@
 
 use crate::retriever::{DocId, Retriever, SpecQuery};
 use crate::util::Scored;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Default capacity: generous relative to requests' working sets; eviction
 /// is FIFO on first-insertion order (entries are re-scored on every lookup,
@@ -37,7 +37,7 @@ pub struct LocalCache {
     order: std::collections::VecDeque<DocId>,
     /// Membership + pin count (a doc re-inserted while present is not
     /// duplicated).
-    present: HashMap<DocId, ()>,
+    present: BTreeMap<DocId, ()>,
     cap: usize,
     /// Reusable id buffer for batched lookup scoring.
     ids_buf: Vec<DocId>,
@@ -67,7 +67,7 @@ impl LocalCache {
         assert!(cap > 0);
         Self {
             order: std::collections::VecDeque::new(),
-            present: HashMap::new(),
+            present: BTreeMap::new(),
             cap,
             ids_buf: Vec::new(),
             epoch: None,

@@ -9,13 +9,13 @@
 //! Global flags: --config <file.json>, plus per-command flags parsed below.
 
 use crate::config::Config;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Parsed flags: `--key value` pairs plus positional args.
 #[derive(Debug, Default)]
 pub struct Flags {
     pub positional: Vec<String>,
-    pub named: HashMap<String, String>,
+    pub named: BTreeMap<String, String>,
     pub switches: Vec<String>,
 }
 

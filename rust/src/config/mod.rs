@@ -536,8 +536,10 @@ impl IngestConfig {
     }
 }
 
-/// The three retriever classes evaluated in the paper.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// The three retriever classes evaluated in the paper. `Ord` follows
+/// declaration order (Edr < Adr < Sr) so the kind can key ordered maps
+/// (e.g. the [`crate::eval::TestBed`] sharded-wrapper cache).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum RetrieverKind {
     /// Exact dense retriever (DPR / IndexFlatIP stand-in).
     Edr,

@@ -18,7 +18,7 @@ use crate::retriever::hnsw::Hnsw;
 use crate::retriever::sparse::Bm25;
 use crate::retriever::{Retriever, ShardedRetriever};
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 pub struct TestBed {
@@ -31,7 +31,7 @@ pub struct TestBed {
     /// Cached scatter-gather wrappers, keyed by (kind, shard count) — a
     /// `ShardedRetriever` is cheap but not free to build (shard views +
     /// a leaked name label), so hand the same one back on every call.
-    sharded: RefCell<HashMap<(RetrieverKind, usize), Arc<dyn Retriever>>>,
+    sharded: RefCell<BTreeMap<(RetrieverKind, usize), Arc<dyn Retriever>>>,
 }
 
 impl TestBed {
@@ -48,7 +48,7 @@ impl TestBed {
             edr: RefCell::new(None),
             adr: RefCell::new(None),
             sr: RefCell::new(None),
-            sharded: RefCell::new(HashMap::new()),
+            sharded: RefCell::new(BTreeMap::new()),
         }
     }
 

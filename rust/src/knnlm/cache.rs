@@ -18,7 +18,7 @@
 use crate::knnlm::datastore::Datastore;
 use crate::retriever::kernels;
 use crate::util::{Scored, TopK};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 #[derive(Debug)]
 pub struct KnnCache {
@@ -27,7 +27,7 @@ pub struct KnnCache {
     /// and orphan the old one.
     order: VecDeque<(u64, u32)>,
     /// id -> stamp of its most recent insertion. Membership = key present.
-    stamps: HashMap<u32, u64>,
+    stamps: BTreeMap<u32, u64>,
     next_stamp: u64,
     cap: usize,
     /// Consecutive entries inserted per verified id (paper: n = 10).
@@ -39,7 +39,7 @@ impl KnnCache {
         assert!(cap > 0);
         Self {
             order: VecDeque::new(),
-            stamps: HashMap::new(),
+            stamps: BTreeMap::new(),
             next_stamp: 0,
             cap,
             next_n,

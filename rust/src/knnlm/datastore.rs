@@ -44,8 +44,8 @@ impl Datastore {
         let mut values = Vec::with_capacity(n);
         // Incremental sliding-window sum of token vectors.
         let mut sum = vec![0.0f32; dim];
-        let mut tokvecs: std::collections::HashMap<u32, Vec<f32>> =
-            std::collections::HashMap::new();
+        let mut tokvecs: std::collections::BTreeMap<u32, Vec<f32>> =
+            std::collections::BTreeMap::new();
         let mut vec_of = |t: u32| -> Vec<f32> {
             tokvecs
                 .entry(t)

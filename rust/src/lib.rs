@@ -25,6 +25,12 @@
 //!
 //! A quickstart, CLI flag reference, and config-key table live in the
 //! top-level README.md; design rationale is in DESIGN.md (ADRs 001–006).
+//! Source-level determinism and unsafe-hygiene invariants (ADR-008) are
+//! machine-checked by `tools/detlint`; the attribute below backs its
+//! `safety-comment` rule — every unsafe operation inside an `unsafe fn`
+//! needs its own block and `// SAFETY:` note.
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod baseline;
 pub mod cli;

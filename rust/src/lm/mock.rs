@@ -73,6 +73,7 @@ impl MockLm {
     }
 
     fn state_for(&self, tokens: Vec<u32>) -> MockState {
+        // detlint: allow(nondet-source, reason = "seeded by a pure hash of (seed, tokens): same context always yields the same logits")
         let mut rng = Rng::new(self.hash(&tokens));
         let mut logits: Vec<f32> =
             (0..self.vocab).map(|_| rng.next_f32() * 4.0 - 2.0).collect();

@@ -4,6 +4,8 @@
 //! lifting lives in the library: `ralmspec::eval` (experiment drivers),
 //! `ralmspec::serving` (router).
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use ralmspec::cli;
 
 fn main() {

@@ -89,8 +89,21 @@ thread_local! {
 pub(crate) fn scan_multi_range(emb: &EmbeddingMatrix, lo: usize, hi: usize,
                                queries: &[&[f32]], heaps: &mut [TopK]) {
     QT_SCRATCH.with(|cell| {
-        scan_multi_range_with(emb, lo, hi, queries, heaps,
-                              &mut cell.borrow_mut());
+        // Reentrancy guard: if a caller somewhere up the stack already
+        // holds this thread's scratch (e.g. a retriever wrapper that
+        // scans inside a scratch-borrowing callback), borrow_mut() would
+        // panic. Fall back to a fresh buffer instead — the scratch only
+        // caches capacity, so results are identical either way.
+        match cell.try_borrow_mut() {
+            Ok(mut qt) => {
+                scan_multi_range_with(emb, lo, hi, queries, heaps,
+                                      &mut qt);
+            }
+            Err(_) => {
+                scan_multi_range_with(emb, lo, hi, queries, heaps,
+                                      &mut Vec::new());
+            }
+        }
     });
 }
 
@@ -251,6 +264,26 @@ mod tests {
             assert_eq!(seq.iter().map(|s| s.id).collect::<Vec<_>>(),
                        b.iter().map(|s| s.id).collect::<Vec<_>>());
         }
+    }
+
+    #[test]
+    fn scan_survives_scratch_already_borrowed() {
+        let n = if cfg!(miri) { 40 } else { 120 };
+        let emb = random_matrix(n, 16, 9);
+        let r = DenseExact::new(emb);
+        let mut rng = Rng::new(10);
+        let qs: Vec<SpecQuery> = (0..4)
+            .map(|_| SpecQuery::dense_only(rng.unit_vector(16)))
+            .collect();
+        let plain = r.retrieve_batch(&qs, 5);
+        // Reentrancy: the thread-local pack buffer is held across the
+        // retrieval, forcing the fresh-allocation fallback. Must not
+        // panic, and must score identically (scratch is capacity-only).
+        let held = QT_SCRATCH.with(|cell| {
+            let _guard = cell.borrow_mut();
+            r.retrieve_batch(&qs, 5)
+        });
+        assert_eq!(plain, held);
     }
 
     #[test]

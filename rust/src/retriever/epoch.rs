@@ -305,11 +305,13 @@ impl EpochKb {
 
     /// The current epoch's snapshot. Callers pin by holding the `Arc`.
     pub fn snapshot(&self) -> Arc<EpochSnapshot> {
+        // detlint: allow(hot-panic, reason = "RwLock poisoning means a writer panicked mid-publish; serving a torn epoch would be worse")
         self.current.read().unwrap().clone()
     }
 
     /// Current epoch id (shorthand for `snapshot().epoch`).
     pub fn epoch(&self) -> u64 {
+        // detlint: allow(hot-panic, reason = "RwLock poisoning means a writer panicked mid-publish; serving a torn epoch would be worse")
         self.current.read().unwrap().epoch
     }
 
@@ -317,6 +319,7 @@ impl EpochKb {
     /// continue the epoch sequence — a torn or reordered publish is a
     /// writer bug, never something readers should be able to observe.
     fn publish(&self, next: EpochSnapshot) {
+        // detlint: allow(hot-panic, reason = "RwLock poisoning means a writer panicked mid-publish; serving a torn epoch would be worse")
         let mut cur = self.current.write().unwrap();
         assert_eq!(next.epoch, cur.epoch + 1,
                    "epochs must be published in order");

@@ -157,32 +157,51 @@ mod x86 {
     /// Fold a 256-bit accumulator with the shared reduction tree:
     /// high half onto low half (`m[j] = l[j] + l[j+4]`), then the same
     /// pairs-then-sum association as `reduce_lanes`.
+    ///
+    /// # Safety
+    /// The CPU must support AVX (implied by the AVX2 contract of every
+    /// caller in this module).
     #[inline(always)]
     unsafe fn hsum(acc: __m256) -> f32 {
-        let lo = _mm256_castps256_ps128(acc);
-        let hi = _mm256_extractf128_ps::<1>(acc);
-        let mut m = [0.0f32; 4];
-        _mm_storeu_ps(m.as_mut_ptr(), _mm_add_ps(lo, hi));
-        (m[0] + m[2]) + (m[1] + m[3])
+        // SAFETY: register-only lane arithmetic plus one unaligned
+        // store into `m`, a 4-element stack array of exactly the
+        // 128-bit store width.
+        unsafe {
+            let lo = _mm256_castps256_ps128(acc);
+            let hi = _mm256_extractf128_ps::<1>(acc);
+            let mut m = [0.0f32; 4];
+            _mm_storeu_ps(m.as_mut_ptr(), _mm_add_ps(lo, hi));
+            (m[0] + m[2]) + (m[1] + m[3])
+        }
     }
 
     /// AVX2 `dot`: separate `mul` + `add` (NOT `fmadd` — fusing rounds
     /// once where the scalar form rounds twice, which would break the
     /// scalar/SIMD bit-identity the dispatch relies on), `hsum`, then
     /// the same scalar tail as the reference.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; the dispatchers check `simd_active()`
+    /// (runtime `avx2` detection) before calling.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
         let chunks = a.len() / LANES;
         let (pa, pb) = (a.as_ptr(), b.as_ptr());
-        let mut acc = _mm256_setzero_ps();
-        for c in 0..chunks {
-            let i = c * LANES;
-            let va = _mm256_loadu_ps(pa.add(i));
-            let vb = _mm256_loadu_ps(pb.add(i));
-            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
-        }
-        let body = hsum(acc);
+        // SAFETY: each iteration loads LANES f32s at `p.add(c * LANES)`
+        // with `c < chunks = len / LANES`, so every unaligned load stays
+        // inside both slices; AVX2 availability is the caller's
+        // contract, AVX for `hsum` is implied by it.
+        let body = unsafe {
+            let mut acc = _mm256_setzero_ps();
+            for c in 0..chunks {
+                let i = c * LANES;
+                let va = _mm256_loadu_ps(pa.add(i));
+                let vb = _mm256_loadu_ps(pb.add(i));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            }
+            hsum(acc)
+        };
         let mut tail = 0.0f32;
         let done = chunks * LANES;
         for (x, y) in a[done..].iter().zip(&b[done..]) {
@@ -192,19 +211,28 @@ mod x86 {
     }
 
     /// AVX2 `l2_sq` (same structure: `sub`, `mul`, `add` — no fusing).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; the dispatchers check `simd_active()`
+    /// (runtime `avx2` detection) before calling.
     #[target_feature(enable = "avx2")]
     pub unsafe fn l2_sq_avx2(a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
         let chunks = a.len() / LANES;
         let (pa, pb) = (a.as_ptr(), b.as_ptr());
-        let mut acc = _mm256_setzero_ps();
-        for c in 0..chunks {
-            let i = c * LANES;
-            let dv = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)),
-                                   _mm256_loadu_ps(pb.add(i)));
-            acc = _mm256_add_ps(acc, _mm256_mul_ps(dv, dv));
-        }
-        let body = hsum(acc);
+        // SAFETY: same bounds argument as `dot_avx2` — every load of
+        // LANES f32s at `c * LANES` with `c < len / LANES` is in
+        // bounds; AVX2 availability is the caller's contract.
+        let body = unsafe {
+            let mut acc = _mm256_setzero_ps();
+            for c in 0..chunks {
+                let i = c * LANES;
+                let dv = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)),
+                                       _mm256_loadu_ps(pb.add(i)));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(dv, dv));
+            }
+            hsum(acc)
+        };
         let mut tail = 0.0f32;
         let done = chunks * LANES;
         for (x, y) in a[done..].iter().zip(&b[done..]) {
@@ -217,6 +245,11 @@ mod x86 {
     /// AVX2 multi-query scan: broadcast each row coordinate against the
     /// packed query register; per-lane sums never cross lanes, so the
     /// lanes match the scalar form bit-for-bit by construction.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (the dispatchers check `simd_active()`
+    /// first) and `qt` must hold at least `d * LANES` floats — the
+    /// zero-padded column-major pack the dense scan always builds.
     #[target_feature(enable = "avx2")]
     pub unsafe fn scan_block_avx2(rows: &[f32], d: usize, first_id: DocId,
                                   qt: &[f32], heaps: &mut [TopK]) {
@@ -225,13 +258,19 @@ mod x86 {
         let qtp = qt.as_ptr();
         let mut scores = [0.0f32; LANES];
         for (i, row) in rows.chunks_exact(d).enumerate() {
-            let mut acc = _mm256_setzero_ps();
-            for (j, x) in row.iter().enumerate() {
-                let xv = _mm256_broadcast_ss(x);
-                let qv = _mm256_loadu_ps(qtp.add(j * LANES));
-                acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, qv));
+            // SAFETY: `qt.len() >= d * LANES` (caller contract), so each
+            // load of LANES f32s at `qtp.add(j * LANES)` with `j < d`
+            // is in bounds; the store targets the LANES-sized stack
+            // array `scores`.
+            unsafe {
+                let mut acc = _mm256_setzero_ps();
+                for (j, x) in row.iter().enumerate() {
+                    let xv = _mm256_broadcast_ss(x);
+                    let qv = _mm256_loadu_ps(qtp.add(j * LANES));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, qv));
+                }
+                _mm256_storeu_ps(scores.as_mut_ptr(), acc);
             }
-            _mm256_storeu_ps(scores.as_mut_ptr(), acc);
             for (h, &s) in heaps.iter_mut().zip(&scores) {
                 h.push(first_id + i as DocId, s);
             }
@@ -247,30 +286,47 @@ mod arm {
     /// Fold the two 128-bit accumulators (lanes 0–3, 4–7) with the
     /// shared reduction tree: `m[j] = l[j] + l[j+4]`, then
     /// `(m0+m2) + (m1+m3)` — the same association as `reduce_lanes`.
+    ///
+    /// # Safety
+    /// The CPU must support NEON (baseline on aarch64).
     #[inline(always)]
     unsafe fn hsum(acc0: float32x4_t, acc1: float32x4_t) -> f32 {
-        let m = vaddq_f32(acc0, acc1);
-        (vgetq_lane_f32::<0>(m) + vgetq_lane_f32::<2>(m))
-            + (vgetq_lane_f32::<1>(m) + vgetq_lane_f32::<3>(m))
+        // SAFETY: register-only lane arithmetic and lane extraction
+        // with const indices 0..4, in range for a float32x4_t.
+        unsafe {
+            let m = vaddq_f32(acc0, acc1);
+            (vgetq_lane_f32::<0>(m) + vgetq_lane_f32::<2>(m))
+                + (vgetq_lane_f32::<1>(m) + vgetq_lane_f32::<3>(m))
+        }
     }
 
     /// NEON `dot`: separate `vmul` + `vadd` (no `fmla` — fusing would
     /// break scalar/SIMD bit-identity), `hsum`, scalar tail.
+    ///
+    /// # Safety
+    /// The CPU must support NEON (baseline on aarch64, which is the
+    /// only arch this module compiles on).
     #[target_feature(enable = "neon")]
     pub unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
         let chunks = a.len() / LANES;
         let (pa, pb) = (a.as_ptr(), b.as_ptr());
-        let mut acc0 = vdupq_n_f32(0.0);
-        let mut acc1 = vdupq_n_f32(0.0);
-        for c in 0..chunks {
-            let i = c * LANES;
-            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(pa.add(i)),
-                                             vld1q_f32(pb.add(i))));
-            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(pa.add(i + 4)),
-                                             vld1q_f32(pb.add(i + 4))));
-        }
-        let body = hsum(acc0, acc1);
+        // SAFETY: each iteration loads 4 f32s at offsets `c * LANES`
+        // and `c * LANES + 4` with `c < chunks = len / LANES`, so every
+        // load stays inside both slices; NEON is baseline on aarch64.
+        let body = unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            for c in 0..chunks {
+                let i = c * LANES;
+                acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(pa.add(i)),
+                                                 vld1q_f32(pb.add(i))));
+                acc1 = vaddq_f32(acc1,
+                                 vmulq_f32(vld1q_f32(pa.add(i + 4)),
+                                           vld1q_f32(pb.add(i + 4))));
+            }
+            hsum(acc0, acc1)
+        };
         let mut tail = 0.0f32;
         let done = chunks * LANES;
         for (x, y) in a[done..].iter().zip(&b[done..]) {
@@ -280,22 +336,32 @@ mod arm {
     }
 
     /// NEON `l2_sq` (same structure; no fusing).
+    ///
+    /// # Safety
+    /// The CPU must support NEON (baseline on aarch64, which is the
+    /// only arch this module compiles on).
     #[target_feature(enable = "neon")]
     pub unsafe fn l2_sq_neon(a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
         let chunks = a.len() / LANES;
         let (pa, pb) = (a.as_ptr(), b.as_ptr());
-        let mut acc0 = vdupq_n_f32(0.0);
-        let mut acc1 = vdupq_n_f32(0.0);
-        for c in 0..chunks {
-            let i = c * LANES;
-            let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
-            let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)),
-                               vld1q_f32(pb.add(i + 4)));
-            acc0 = vaddq_f32(acc0, vmulq_f32(d0, d0));
-            acc1 = vaddq_f32(acc1, vmulq_f32(d1, d1));
-        }
-        let body = hsum(acc0, acc1);
+        // SAFETY: same bounds argument as `dot_neon` — every 4-wide
+        // load at `c * LANES` / `c * LANES + 4` with `c < len / LANES`
+        // is in bounds; NEON is baseline on aarch64.
+        let body = unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            for c in 0..chunks {
+                let i = c * LANES;
+                let d0 =
+                    vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+                let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)),
+                                   vld1q_f32(pb.add(i + 4)));
+                acc0 = vaddq_f32(acc0, vmulq_f32(d0, d0));
+                acc1 = vaddq_f32(acc1, vmulq_f32(d1, d1));
+            }
+            hsum(acc0, acc1)
+        };
         let mut tail = 0.0f32;
         let done = chunks * LANES;
         for (x, y) in a[done..].iter().zip(&b[done..]) {
@@ -307,6 +373,11 @@ mod arm {
 
     /// NEON multi-query scan: broadcast each row coordinate against the
     /// two packed query registers; per-lane sums never cross lanes.
+    ///
+    /// # Safety
+    /// The CPU must support NEON (baseline on aarch64) and `qt` must
+    /// hold at least `d * LANES` floats — the zero-padded column-major
+    /// pack the dense scan always builds.
     #[target_feature(enable = "neon")]
     pub unsafe fn scan_block_neon(rows: &[f32], d: usize, first_id: DocId,
                                   qt: &[f32], heaps: &mut [TopK]) {
@@ -315,18 +386,25 @@ mod arm {
         let qtp = qt.as_ptr();
         let mut scores = [0.0f32; LANES];
         for (i, row) in rows.chunks_exact(d).enumerate() {
-            let mut acc0 = vdupq_n_f32(0.0);
-            let mut acc1 = vdupq_n_f32(0.0);
-            for (j, &x) in row.iter().enumerate() {
-                let xv = vdupq_n_f32(x);
-                acc0 = vaddq_f32(acc0,
-                                 vmulq_f32(xv, vld1q_f32(qtp.add(j * LANES))));
-                acc1 = vaddq_f32(
-                    acc1,
-                    vmulq_f32(xv, vld1q_f32(qtp.add(j * LANES + 4))));
+            // SAFETY: `qt.len() >= d * LANES` (caller contract), so the
+            // 4-wide loads at `j * LANES` and `j * LANES + 4` with
+            // `j < d` are in bounds; the stores split the LANES-sized
+            // stack array `scores` into its two register halves.
+            unsafe {
+                let mut acc0 = vdupq_n_f32(0.0);
+                let mut acc1 = vdupq_n_f32(0.0);
+                for (j, &x) in row.iter().enumerate() {
+                    let xv = vdupq_n_f32(x);
+                    acc0 = vaddq_f32(
+                        acc0,
+                        vmulq_f32(xv, vld1q_f32(qtp.add(j * LANES))));
+                    acc1 = vaddq_f32(
+                        acc1,
+                        vmulq_f32(xv, vld1q_f32(qtp.add(j * LANES + 4))));
+                }
+                vst1q_f32(scores.as_mut_ptr(), acc0);
+                vst1q_f32(scores.as_mut_ptr().add(4), acc1);
             }
-            vst1q_f32(scores.as_mut_ptr(), acc0);
-            vst1q_f32(scores.as_mut_ptr().add(4), acc1);
             for (h, &s) in heaps.iter_mut().zip(&scores) {
                 h.push(first_id + i as DocId, s);
             }

@@ -118,6 +118,7 @@ impl WorkerPool {
                     .name(format!("ralmspec-shard-{wid}"))
                     .spawn(move || loop {
                         let job = {
+                            // detlint: allow(hot-panic, reason = "queue mutex poisoning means a sibling worker panicked outside catch_unwind; propagate")
                             let mut st = shared.state.lock().unwrap();
                             loop {
                                 if let Some(j) = st.jobs.pop_front() {
@@ -126,6 +127,7 @@ impl WorkerPool {
                                 if st.shutdown {
                                     break None;
                                 }
+                                // detlint: allow(hot-panic, reason = "condvar wait only fails on a poisoned queue mutex; propagate")
                                 st = shared.cv.wait(st).unwrap();
                             }
                         };
@@ -140,6 +142,7 @@ impl WorkerPool {
                             None => return,
                         }
                     })
+                    // detlint: allow(hot-panic, reason = "spawn failure at pool construction is unrecoverable (OS thread exhaustion)")
                     .expect("spawning pool worker")
             })
             .collect();
@@ -201,6 +204,7 @@ impl WorkerPool {
 
     /// Enqueue one fire-and-forget job.
     pub fn execute(&self, job: Job) {
+        // detlint: allow(hot-panic, reason = "queue mutex poisoning means a worker panicked outside catch_unwind; propagate")
         let mut st = self.shared.state.lock().unwrap();
         st.jobs.push_back(job);
         drop(st);
@@ -239,6 +243,7 @@ impl WorkerPool {
         }
         assert_eq!(got, n, "worker pool lost {} task(s) (panicked job?)",
                    n - got);
+        // detlint: allow(hot-panic, reason = "the assert above guarantees all n slots were filled")
         out.into_iter().map(|o| o.unwrap()).collect()
     }
 }
@@ -246,6 +251,7 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
+            // detlint: allow(hot-panic, reason = "poisoned queue mutex during teardown; nothing left to preserve")
             let mut st = self.shared.state.lock().unwrap();
             st.shutdown = true;
         }

@@ -147,11 +147,12 @@ pub struct ShardedRetriever<R: Shardable> {
 /// backend name), so interning caps the leak at the handful of distinct
 /// configurations a process ever serves.
 fn interned_label(label: String) -> &'static str {
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
     use std::sync::{Mutex, OnceLock};
-    static INTERN: OnceLock<Mutex<HashMap<String, &'static str>>> =
+    static INTERN: OnceLock<Mutex<BTreeMap<String, &'static str>>> =
         OnceLock::new();
-    let map = INTERN.get_or_init(|| Mutex::new(HashMap::new()));
+    let map = INTERN.get_or_init(|| Mutex::new(BTreeMap::new()));
+    // detlint: allow(hot-panic, reason = "intern mutex poisoning means another construction panicked mid-insert; propagate")
     let mut guard = map.lock().unwrap();
     if let Some(&l) = guard.get(&label) {
         return l;

@@ -211,8 +211,16 @@ impl Bm25 {
                                        lo: DocId, hi: DocId)
                                        -> Vec<Vec<Scored>> {
         SPARSE_SCRATCH.with(|cell| {
-            self.retrieve_batch_range_with(qs, k, lo, hi,
-                                           &mut cell.borrow_mut())
+            // Reentrancy guard: fall back to a fresh scratch if this
+            // thread's is already borrowed up-stack. The scratch only
+            // caches capacity, so results are identical either way.
+            match cell.try_borrow_mut() {
+                Ok(mut s) => {
+                    self.retrieve_batch_range_with(qs, k, lo, hi, &mut s)
+                }
+                Err(_) => self.retrieve_batch_range_with(
+                    qs, k, lo, hi, &mut SparseScratch::default()),
+            }
         })
     }
 
@@ -382,6 +390,33 @@ mod tests {
                         "scan={} direct={}", s.score, direct);
             }
         }
+    }
+
+    #[test]
+    fn scan_survives_scratch_already_borrowed() {
+        let c = if cfg!(miri) {
+            Corpus::generate(&CorpusConfig {
+                n_docs: 60, n_topics: 10, doc_len: (10, 30),
+                ..CorpusConfig::default()
+            })
+        } else {
+            corpus()
+        };
+        let bm = Bm25::build(&c, 0.9, 0.4);
+        let mut rng = Rng::new(11);
+        let qs: Vec<SpecQuery> = (0..4)
+            .map(|i| SpecQuery::sparse_only(
+                c.topic_tokens(i % 10, 8, &mut rng)))
+            .collect();
+        let plain = bm.retrieve_batch(&qs, 5);
+        // Reentrancy: the thread-local accumulators are held across the
+        // retrieval, forcing the fresh-scratch fallback. Must not panic,
+        // and must score identically (scratch is capacity-only).
+        let held = SPARSE_SCRATCH.with(|cell| {
+            let _guard = cell.borrow_mut();
+            bm.retrieve_batch(&qs, 5)
+        });
+        assert_eq!(plain, held);
     }
 
     #[test]

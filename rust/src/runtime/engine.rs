@@ -9,7 +9,7 @@ use super::manifest::IndexJson;
 use crate::datagen::Encoder;
 use crate::lm::{greedy, LanguageModel, EOS, PAD};
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
@@ -17,8 +17,8 @@ pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub index: IndexJson,
-    artifacts: RefCell<HashMap<String, Rc<Artifact>>>,
-    weight_sets: RefCell<HashMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
+    artifacts: RefCell<BTreeMap<String, Rc<Artifact>>>,
+    weight_sets: RefCell<BTreeMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
 }
 
 impl Engine {
@@ -30,8 +30,8 @@ impl Engine {
             client,
             dir: artifacts_dir.to_path_buf(),
             index,
-            artifacts: RefCell::new(HashMap::new()),
-            weight_sets: RefCell::new(HashMap::new()),
+            artifacts: RefCell::new(BTreeMap::new()),
+            weight_sets: RefCell::new(BTreeMap::new()),
         })
     }
 

@@ -7,7 +7,7 @@
 //! in-tree `util::json` (no serde on this image).
 
 use crate::util::json::{self, Value};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -114,7 +114,9 @@ impl Manifest {
 #[derive(Debug, Clone)]
 pub struct IndexJson {
     pub artifacts: Vec<String>,
-    pub lm_configs: HashMap<String, Value>,
+    /// Keyed by model name; ordered so that any listing derived from it
+    /// (e.g. the "model not in artifacts index" error) is byte-stable.
+    pub lm_configs: BTreeMap<String, Value>,
     pub retrieval_dim: usize,
     pub encoder_len: usize,
     pub encoder_batch: usize,

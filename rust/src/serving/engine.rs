@@ -66,7 +66,7 @@ use crate::serving::executor::{CallOutcome, PreparedCall,
 use crate::serving::router::{Method, Request, ServeBackend};
 use crate::serving::task::{ServeTask, TaskStep};
 use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecTask};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -221,9 +221,9 @@ pub struct ServeEngine<T: ServeTask> {
     /// ([`register_epoch`](Self::register_epoch)): a task reporting
     /// `epoch() == e` has its coalesced calls issued against
     /// `epoch_kbs[e]` (ADR-006).
-    epoch_kbs: HashMap<u64, Arc<dyn Retriever>>,
+    epoch_kbs: BTreeMap<u64, Arc<dyn Retriever>>,
     /// Distinct epochs across submitted tasks (stats).
-    seen_epochs: std::collections::HashSet<u64>,
+    seen_epochs: BTreeSet<u64>,
     /// Admission queue; tasks are constructed at submission so each
     /// request's latency clock covers its admission-queue wait too.
     waiting: VecDeque<(u64, T)>,
@@ -233,7 +233,7 @@ pub struct ServeEngine<T: ServeTask> {
     /// synchronous inline flush.
     exec: Option<RetrievalExecutor>,
     /// In-flight (or inline-running) groups keyed by correlation id.
-    dispatched: HashMap<u64, Vec<GroupMember>>,
+    dispatched: BTreeMap<u64, Vec<GroupMember>>,
     /// Reusable (k, epoch) group list for [`flush`](Self::flush) — kept as
     /// a field so the sort/dedup scratch survives across flushes.
     flush_groups: Vec<(usize, u64)>,
@@ -253,13 +253,13 @@ impl<T: ServeTask> ServeEngine<T> {
         Self {
             kb,
             opts,
-            epoch_kbs: HashMap::new(),
-            seen_epochs: std::collections::HashSet::new(),
+            epoch_kbs: BTreeMap::new(),
+            seen_epochs: BTreeSet::new(),
             waiting: VecDeque::new(),
             slots: Vec::new(),
             pending: Vec::new(),
             exec,
-            dispatched: HashMap::new(),
+            dispatched: BTreeMap::new(),
             flush_groups: Vec::new(),
             next_group: 0,
             stats: EngineStats::default(),
@@ -380,6 +380,7 @@ impl<T: ServeTask> ServeEngine<T> {
                     TaskStep::Continue => runnable += 1,
                     TaskStep::Done => {
                         let task = self.slots[i].task.take()
+                            // detlint: allow(hot-panic, reason = "slot's task was just stepped to Done above, so take() is Some")
                             .expect("task was just advanced");
                         self.finished
                             .push((self.slots[i].id, task.into_metrics()));
@@ -629,6 +630,7 @@ impl<T: ServeTask> ServeEngine<T> {
         let members = self
             .dispatched
             .remove(&done.group)
+            // detlint: allow(hot-panic, reason = "group ids are inserted at dispatch and each completes exactly once")
             .expect("completion for unknown group");
         let total: usize = members.iter().map(|m| m.n_queries).sum();
         let mut results = match done.result {
@@ -657,6 +659,7 @@ impl<T: ServeTask> ServeEngine<T> {
             let rows = std::mem::replace(&mut results, rest);
             let slot = &mut self.slots[gm.slot];
             let task = slot.task.as_mut()
+                // detlint: allow(hot-panic, reason = "a slot in Awaiting keeps its task until its group is routed")
                 .expect("awaiting slot holds its task");
             // Finish the task's overlap budget before handing it results.
             // The budget is state-based; draining it here makes the
@@ -751,6 +754,7 @@ impl<L: LanguageModel> EngineBackend<L> {
         let window =
             &req.question[..req.question.len().min(self.encoder.window())];
         let embedding = self.encoder.encode(window);
+        // detlint: allow(hot-panic, reason = "mutex poisoning propagates a writer-thread panic; continuing would serve a torn index")
         let mut writer = live.writer.lock().unwrap();
         let published =
             writer.ingest(req.question.clone(), 0, embedding)?;
@@ -765,6 +769,7 @@ impl<L: LanguageModel> EngineBackend<L> {
 impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
     fn serve(&mut self, req: &Request) -> anyhow::Result<ReqMetrics> {
         let mut out = self.serve_batch(std::slice::from_ref(req));
+        // detlint: allow(hot-panic, reason = "serve_batch returns exactly one result per input request")
         out.pop().expect("serve_batch returns one result per request")
     }
 
@@ -853,12 +858,14 @@ impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
                         "request {}: Method::Knn needs a KnnEngineBackend \
                          (this worker serves the QA corpus)", req.id)));
                 }
+                // detlint: allow(hot-panic, reason = "ingest requests are resolved (or rejected) in the admission pass above")
                 Method::Ingest => unreachable!("resolved in admission pass"),
             }
         }
         resolve_engine_run(&mut engine, &mut results);
         results
             .into_iter()
+            // detlint: allow(hot-panic, reason = "admission + engine-run passes fill every results slot")
             .map(|r| r.expect("every request resolved"))
             .collect()
     }
@@ -922,6 +929,7 @@ pub struct KnnEngineBackend<L: LanguageModel> {
 impl<L: LanguageModel> ServeBackend for KnnEngineBackend<L> {
     fn serve(&mut self, req: &Request) -> anyhow::Result<ReqMetrics> {
         let mut out = self.serve_batch(std::slice::from_ref(req));
+        // detlint: allow(hot-panic, reason = "serve_batch returns exactly one result per input request")
         out.pop().expect("serve_batch returns one result per request")
     }
 
@@ -971,6 +979,7 @@ impl<L: LanguageModel> ServeBackend for KnnEngineBackend<L> {
         resolve_engine_run(&mut engine, &mut results);
         results
             .into_iter()
+            // detlint: allow(hot-panic, reason = "admission + engine-run passes fill every results slot")
             .map(|r| r.expect("every request resolved"))
             .collect()
     }

@@ -104,6 +104,7 @@ impl Router {
                 let factory = factory.clone();
                 std::thread::Builder::new()
                     .name(format!("ralmspec-worker-{wid}"))
+                    // detlint: allow(nondet-source, reason = "the router owns the worker threads; determinism is per-request (each request is served whole by one worker)")
                     .spawn(move || {
                         let mut backend = match factory() {
                             Ok(b) => b,
@@ -118,6 +119,7 @@ impl Router {
                             // jobs up to the backend's preferred batch so
                             // an engine backend can coalesce across them.
                             let job = {
+                                // detlint: allow(hot-panic, reason = "receiver mutex poisoning means a sibling worker panicked mid-recv; propagate")
                                 let guard = rx.lock().unwrap();
                                 guard.recv()
                             };
@@ -125,6 +127,7 @@ impl Router {
                             let mut jobs = vec![job];
                             let cap = backend.preferred_batch().max(1);
                             if cap > 1 {
+                                // detlint: allow(hot-panic, reason = "receiver mutex poisoning means a sibling worker panicked mid-recv; propagate")
                                 let guard = rx.lock().unwrap();
                                 while jobs.len() < cap {
                                     match guard.try_recv() {
@@ -198,6 +201,7 @@ impl Router {
                             }
                         }
                     })
+                    // detlint: allow(hot-panic, reason = "spawn failure at router construction is unrecoverable (OS thread exhaustion)")
                     .expect("spawning worker")
             })
             .collect();

@@ -152,14 +152,26 @@ impl Scheduler {
     }
 }
 
+/// `base^n` by plain repeated multiplication. `f64::powi` may lower to a
+/// `pow` libm call whose rounding differs across platforms; the stride
+/// choice must be bit-stable (ADR-007), and `n <= max_stride` is tiny, so
+/// the naive loop is both exact-ordered and cheap.
+fn pow_det(base: f64, n: usize) -> f64 {
+    let mut acc = 1.0f64;
+    for _ in 0..n {
+        acc *= base;
+    }
+    acc
+}
+
 /// The OS³ objective E(s): expected verified documents per unit time.
 pub fn objective(gamma: f64, a: f64, b: f64, s: usize, async_mode: bool)
                  -> f64 {
     let gamma = gamma.clamp(0.0, 0.999_999);
     let s_f = s as f64;
-    let expected_verified = (1.0 - gamma.powi(s as i32)) / (1.0 - gamma);
+    let g_s = pow_det(gamma, s);
+    let expected_verified = (1.0 - g_s) / (1.0 - gamma);
     let latency = if async_mode {
-        let g_s = gamma.powi(s as i32);
         g_s * ((s_f - 1.0) * a + a.max(b)) + (1.0 - g_s) * (s_f * a + b)
     } else {
         s_f * a + b

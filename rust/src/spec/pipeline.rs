@@ -532,6 +532,7 @@ impl<'a, L: LanguageModel> SpecPipeline<'a, L> {
                 let (res_tx, res_rx) =
                     std::sync::mpsc::channel::<(Vec<Vec<Scored>>, Duration)>();
                 let kb = self.kb;
+                // detlint: allow(nondet-source, reason = "scoped verifier thread: it only answers this request's retrieval batches in FIFO order, and the scope joins it before run() returns")
                 scope.spawn(move || {
                     while let Ok((qs, k)) = job_rx.recv() {
                         let t = Stopwatch::start();

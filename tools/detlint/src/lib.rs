@@ -1,0 +1,949 @@
+//! `detlint` — a determinism & unsafe-hygiene static-analysis gate.
+//!
+//! The serving crate's core guarantee is *bit-identical outputs versus a
+//! sequential reference against the pinned epoch* (DESIGN.md ADR-007 and
+//! ADR-008). That guarantee rests on a handful of source-level invariants
+//! that the compiler cannot check: no fused or re-associated float math in
+//! scoring code, no iteration over randomly-seeded hash containers on
+//! deterministic paths, `// SAFETY:` discipline around `unsafe`, wall
+//! clocks / threads / RNGs confined to whitelisted modules, and no
+//! panicking shortcuts on the serving hot path.
+//!
+//! This crate codifies those invariants as five lexical rules and runs
+//! them over `rust/src` with a hand-rolled lexer (no dependencies — the
+//! gate builds on the same offline image as the crate it checks). It is
+//! deliberately a *lexical* tool: it has no type information, so e.g. the
+//! `hash-iter` rule flags every mention of `HashMap`/`HashSet` as a proxy
+//! for the iteration hazard, forcing either a `BTreeMap`/`BTreeSet` or a
+//! reasoned pragma. False positives are escaped with
+//! `// detlint: allow(<rule>, reason = "...")`, which doubles as
+//! reviewer-visible documentation of why the site is sound.
+//!
+//! # Rules
+//!
+//! | id               | scope                           | bans |
+//! |------------------|---------------------------------|------|
+//! | `float-fusion`   | `retriever/`, `knnlm/`, `spec/` | `mul_add`, `powi`, `powf` |
+//! | `hash-iter`      | everywhere                      | `HashMap`, `HashSet` |
+//! | `safety-comment` | everywhere                      | `unsafe` without `SAFETY:` / `# Safety`; missing crate-root `#![deny(unsafe_op_in_unsafe_fn)]` |
+//! | `nondet-source`  | outside whitelisted modules     | `Instant::now`, `SystemTime`, `thread::spawn`, `.spawn(`, `Rng::new`, `thread_rng`, `from_entropy`, `OsRng` |
+//! | `hot-panic`      | `serving/`, `retriever/`        | `.unwrap(`, `.expect(`, `panic!`, `unreachable!`, `todo!`, `unimplemented!` |
+//!
+//! Code under `#[cfg(test)]` / `#[test]` items is skipped by every rule.
+//!
+//! # Pragmas
+//!
+//! * `// detlint: allow(rule-id, reason = "...")` suppresses one rule on
+//!   the same line, or on the next line that contains code when the
+//!   pragma stands alone on its own line.
+//! * `// detlint: allow-file(rule-id, reason = "...")` suppresses one
+//!   rule for the whole file.
+//!
+//! A pragma with an unknown rule id or an empty reason is itself a
+//! violation (rule id `pragma`), so escapes cannot rot silently.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The five invariant rules, in reporting order.
+pub const RULES: [&str; 5] = [
+    "float-fusion",
+    "hash-iter",
+    "safety-comment",
+    "nondet-source",
+    "hot-panic",
+];
+
+/// Meta-rule id used for malformed `detlint:` pragmas.
+pub const PRAGMA_RULE: &str = "pragma";
+
+/// A single rule violation: file, 1-based line, rule id, message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path as it should be shown to the user (CLI argument joined with
+    /// the file's relative path).
+    pub path: String,
+    /// 1-based source line of the offending token.
+    pub line: usize,
+    /// Rule id (one of [`RULES`] or [`PRAGMA_RULE`]).
+    pub rule: &'static str,
+    /// Human-readable explanation naming the offending token.
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lexer: split each source line into code text and comment text.
+// ---------------------------------------------------------------------
+
+/// One source line after lexing: `code` holds everything outside
+/// comments with string/char-literal *contents* blanked (delimiters
+/// kept), `comment` holds the bodies of `//` and `/* */` comments.
+#[derive(Debug, Default, Clone)]
+struct Line {
+    code: String,
+    comment: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested depth of `/* */` comments.
+    BlockComment(u32),
+    Str,
+    /// Raw string terminated by `"` followed by this many `#`s.
+    RawStr(u32),
+    CharLit,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Does `chars[i]` start a raw-string opener `r"`, `r#"`, `r##"`, ...?
+/// Returns the number of `#`s, or `None`. The caller guarantees that a
+/// preceding `b` (byte raw string) has already been consumed as code.
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<u32> {
+    if chars[i] != 'r' {
+        return None;
+    }
+    let mut j = i + 1;
+    let mut hashes = 0u32;
+    while j < chars.len() && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < chars.len() && chars[j] == '"' {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// Lex `src` into per-line code/comment text. Strings and char literals
+/// keep their delimiters but lose their contents, so rule tokens inside
+/// string data can never match; comment text is collected separately so
+/// `SAFETY:` markers and pragmas can be found without false code hits.
+fn split_lines(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut st = State::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            // Line comments end at the newline; block comments, strings
+            // and raw strings legitimately span lines.
+            if st == State::LineComment {
+                st = State::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = State::BlockComment(1);
+                    i += 2;
+                } else if c == 'r'
+                    && (i == 0
+                        || !is_ident_char(chars[i - 1])
+                        || chars[i - 1] == 'b')
+                    && raw_string_hashes(&chars, i).is_some()
+                {
+                    let hashes = raw_string_hashes(&chars, i)
+                        .unwrap_or_default();
+                    cur.code.push('"');
+                    st = State::RawStr(hashes);
+                    i += 2 + hashes as usize;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = State::Str;
+                    i += 1;
+                } else if c == '\'' {
+                    // Char literal iff escaped ('\n') or closed at i+2
+                    // ('x'); otherwise it is a lifetime and the quote
+                    // passes through as ordinary code.
+                    let is_char_lit = next == Some('\\')
+                        || chars.get(i + 2).copied() == Some('\'');
+                    if is_char_lit {
+                        cur.code.push('\'');
+                        st = State::CharLit;
+                    } else {
+                        cur.code.push('\'');
+                    }
+                    i += 1;
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Skip the escaped char without emitting it; an
+                    // escaped newline (line continuation) still ends
+                    // the source line so numbering stays true.
+                    if chars.get(i + 1) == Some(&'\n') {
+                        lines.push(std::mem::take(&mut cur));
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                let n = hashes as usize;
+                if c == '"'
+                    && chars[i + 1..]
+                        .iter()
+                        .take(n)
+                        .filter(|&&h| h == '#')
+                        .count()
+                        == n
+                {
+                    cur.code.push('"');
+                    st = State::Code;
+                    i += 1 + n;
+                } else {
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+// ---------------------------------------------------------------------
+// Test-region detection: skip items annotated #[cfg(test)] / #[test].
+// ---------------------------------------------------------------------
+
+/// Mark every line belonging to a `#[cfg(test)]` or `#[test]` item (the
+/// attribute line through the item's closing brace). Tracking is by
+/// brace depth on code text only, so braces in strings/comments cannot
+/// desynchronise it.
+fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    // Depth at which the current test item started, if inside one.
+    let mut region: Option<i64> = None;
+    // A test attribute was seen; the next `{` at this depth opens the
+    // item (cancelled by a `;`, e.g. `#[cfg(test)] use ...;`).
+    let mut pending = false;
+    let mut pending_from = 0usize;
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        if region.is_none()
+            && (code.contains("#[cfg(test)]") || code.contains("#[test]"))
+            && !pending
+        {
+            pending = true;
+            pending_from = idx;
+        }
+        let mut in_region_here = region.is_some() || pending;
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    if pending && region.is_none() {
+                        region = Some(depth);
+                        pending = false;
+                        in_region_here = true;
+                        // Retroactively mark the attribute lines.
+                        for m in mask.iter_mut().take(idx).skip(pending_from)
+                        {
+                            *m = true;
+                        }
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(rd) = region {
+                        if depth <= rd {
+                            region = None;
+                            in_region_here = true;
+                        }
+                    }
+                }
+                ';' => {
+                    if pending && region.is_none() {
+                        // Attribute applied to a braceless item.
+                        pending = false;
+                        in_region_here = true;
+                        for m in mask.iter_mut().take(idx).skip(pending_from)
+                        {
+                            *m = true;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        // `in_region_here` stays true when the region closed or the
+        // pending attribute resolved on this very line: the closing
+        // brace / `;` still belongs to the test item.
+        mask[idx] = in_region_here;
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------
+// Pragmas.
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct ParsedPragma {
+    line: usize, // 0-based
+    file_scope: bool,
+    rule: String,
+    reason_ok: bool,
+}
+
+/// Extract `detlint: allow(...)` / `detlint: allow-file(...)` pragmas
+/// from comment text. Returns `None` if the comment has no pragma.
+fn parse_pragma(idx: usize, comment: &str) -> Option<ParsedPragma> {
+    let start = comment.find("detlint:")?;
+    let rest = comment[start + "detlint:".len()..].trim_start();
+    let (file_scope, body) = if let Some(b) = rest.strip_prefix("allow-file(")
+    {
+        (true, b)
+    } else if let Some(b) = rest.strip_prefix("allow(") {
+        (false, b)
+    } else {
+        // `detlint:` followed by anything else is malformed.
+        return Some(ParsedPragma {
+            line: idx,
+            file_scope: false,
+            rule: String::new(),
+            reason_ok: false,
+        });
+    };
+    let rule = body
+        .split([',', ')'])
+        .next()
+        .unwrap_or("")
+        .trim()
+        .to_string();
+    // Reason: `reason = "non-empty"` somewhere after the rule id.
+    let reason_ok = match body.find("reason") {
+        Some(r) => {
+            let tail = &body[r + "reason".len()..];
+            match tail.find('"') {
+                Some(q) => {
+                    let inner = &tail[q + 1..];
+                    match inner.find('"') {
+                        Some(q2) => !inner[..q2].trim().is_empty(),
+                        None => false,
+                    }
+                }
+                None => false,
+            }
+        }
+        None => false,
+    };
+    Some(ParsedPragma { line: idx, file_scope, rule, reason_ok })
+}
+
+// ---------------------------------------------------------------------
+// Rule scoping.
+// ---------------------------------------------------------------------
+
+fn in_scoring_module(rel: &str) -> bool {
+    rel.starts_with("retriever/")
+        || rel.starts_with("knnlm/")
+        || rel.starts_with("spec/")
+}
+
+fn in_hot_path(rel: &str) -> bool {
+    rel.starts_with("serving/") || rel.starts_with("retriever/")
+}
+
+/// Modules allowed to own wall clocks, threads and RNG construction.
+/// `pool.rs` and `executor.rs` spawn the worker threads, `metrics/` and
+/// `eval/` measure wall time by design, `util/rng.rs` is the one place
+/// RNGs are built, and `datagen/` seeds corpus generators from explicit
+/// seeds (documented extension of the ISSUE whitelist in ADR-008).
+fn nondet_whitelisted(rel: &str) -> bool {
+    rel.starts_with("metrics/")
+        || rel.starts_with("eval/")
+        || rel.starts_with("datagen/")
+        || rel == "metrics.rs"
+        || rel == "eval.rs"
+        || rel == "datagen.rs"
+        || rel == "util/rng.rs"
+        || rel == "retriever/pool.rs"
+        || rel == "serving/executor.rs"
+}
+
+// ---------------------------------------------------------------------
+// Token matching helpers.
+// ---------------------------------------------------------------------
+
+/// Word-boundary occurrence of `ident` in `code` (`powi` must not match
+/// inside `powint`, `unsafe` must not match inside
+/// `unsafe_op_in_unsafe_fn`).
+fn has_ident(code: &str, ident: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find(ident) {
+        let at = from + pos;
+        let before_ok = at == 0
+            || !is_ident_char(code[..at].chars().next_back().unwrap());
+        let after = at + ident.len();
+        let after_ok = after >= code.len()
+            || !is_ident_char(code[after..].chars().next().unwrap());
+        if before_ok && after_ok {
+            return true;
+        }
+        from = after;
+    }
+    false
+}
+
+/// First banned token present in `code`, if any. Tokens starting with
+/// `.` or containing `::`/`!`/`(` are matched as substrings (their
+/// punctuation already anchors them); bare identifiers get word-boundary
+/// matching.
+fn first_banned<'t>(code: &str, tokens: &[&'t str]) -> Option<&'t str> {
+    tokens.iter().copied().find(|t| {
+        let anchored = t.contains(['.', ':', '!', '(']);
+        if anchored {
+            code.contains(t)
+        } else {
+            has_ident(code, t)
+        }
+    })
+}
+
+const FLOAT_FUSION_TOKENS: [&str; 3] = ["mul_add", "powi", "powf"];
+const HASH_ITER_TOKENS: [&str; 2] = ["HashMap", "HashSet"];
+const NONDET_TOKENS: [&str; 8] = [
+    "Instant::now",
+    "SystemTime",
+    "thread::spawn",
+    ".spawn(",
+    "Rng::new",
+    "thread_rng",
+    "from_entropy",
+    "OsRng",
+];
+const HOT_PANIC_TOKENS: [&str; 6] = [
+    ".unwrap(",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+/// Comment markers that satisfy the `safety-comment` rule: a plain
+/// `// SAFETY:` note or a rustdoc `# Safety` section heading.
+fn has_safety_marker(comment: &str) -> bool {
+    comment.contains("SAFETY:") || comment.contains("# Safety")
+}
+
+// ---------------------------------------------------------------------
+// Entry points.
+// ---------------------------------------------------------------------
+
+/// Lint one file. `rel` is the path relative to the scan root using `/`
+/// separators (it selects rule scopes); diagnostics carry `rel` as their
+/// path — callers may rewrite it for display.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Diagnostic> {
+    let lines = split_lines(src);
+    let mask = test_mask(&lines);
+
+    // Collect pragmas and malformed-pragma diagnostics first.
+    let mut file_allows: Vec<String> = Vec::new();
+    let mut line_allows: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let Some(p) = parse_pragma(idx, &line.comment) else {
+            continue;
+        };
+        let known = RULES.contains(&p.rule.as_str());
+        if !known || !p.reason_ok {
+            diags.push(Diagnostic {
+                path: rel.to_string(),
+                line: p.line + 1,
+                rule: PRAGMA_RULE,
+                msg: if known {
+                    "pragma must carry a non-empty \
+                     `reason = \"...\"`"
+                        .to_string()
+                } else {
+                    format!(
+                        "pragma names unknown rule `{}` (known: {})",
+                        p.rule,
+                        RULES.join(", ")
+                    )
+                },
+            });
+            continue;
+        }
+        if p.file_scope {
+            file_allows.push(p.rule);
+        } else {
+            // Target: this line if it has code, else the next line that
+            // does. Blank / comment-only lines are skipped.
+            let mut target = p.line;
+            while target < lines.len()
+                && lines[target].code.trim().is_empty()
+            {
+                target += 1;
+            }
+            line_allows.entry(target).or_default().push(p.rule);
+        }
+    }
+
+    let allowed = |rule: &str, idx: usize| -> bool {
+        file_allows.iter().any(|r| r == rule)
+            || line_allows
+                .get(&idx)
+                .is_some_and(|rs| rs.iter().any(|r| r == rule))
+    };
+
+    // Crate-root hygiene: lib.rs must deny implicit unsafe in unsafe fn
+    // so every unsafe operation needs its own block (and SAFETY note).
+    if rel == "lib.rs"
+        && !lines
+            .iter()
+            .any(|l| l.code.contains("#![deny(unsafe_op_in_unsafe_fn)]"))
+        && !allowed("safety-comment", 0)
+    {
+        diags.push(Diagnostic {
+            path: rel.to_string(),
+            line: 1,
+            rule: "safety-comment",
+            msg: "crate root must carry \
+                  #![deny(unsafe_op_in_unsafe_fn)]"
+                .to_string(),
+        });
+    }
+
+    for (idx, line) in lines.iter().enumerate() {
+        if mask[idx] {
+            continue;
+        }
+        let code = &line.code;
+        if code.trim().is_empty() {
+            continue;
+        }
+
+        if in_scoring_module(rel) {
+            if let Some(tok) = first_banned(code, &FLOAT_FUSION_TOKENS) {
+                if !allowed("float-fusion", idx) {
+                    diags.push(Diagnostic {
+                        path: rel.to_string(),
+                        line: idx + 1,
+                        rule: "float-fusion",
+                        msg: format!(
+                            "`{tok}` fuses or re-associates float math; \
+                             scoring modules must keep the shared \
+                             reduction order (ADR-007)"
+                        ),
+                    });
+                }
+            }
+        }
+
+        if let Some(tok) = first_banned(code, &HASH_ITER_TOKENS) {
+            if !allowed("hash-iter", idx) {
+                diags.push(Diagnostic {
+                    path: rel.to_string(),
+                    line: idx + 1,
+                    rule: "hash-iter",
+                    msg: format!(
+                        "`{tok}` iteration order is nondeterministic; \
+                         use BTreeMap/BTreeSet or pragma with the \
+                         reason the order never escapes"
+                    ),
+                });
+            }
+        }
+
+        if has_ident(code, "unsafe") && !allowed("safety-comment", idx) {
+            // Satisfied by a marker on the same line or in the
+            // contiguous comment/attribute block directly above.
+            let mut ok = has_safety_marker(&line.comment);
+            let mut k = idx;
+            while !ok && k > 0 {
+                k -= 1;
+                let above = &lines[k];
+                let code_above = above.code.trim();
+                let is_attr_only = !code_above.is_empty()
+                    && code_above.starts_with('#')
+                    && code_above.ends_with(']');
+                if !code_above.is_empty() && !is_attr_only {
+                    break; // real code interrupts the block
+                }
+                if code_above.is_empty() && above.comment.is_empty() {
+                    break; // blank line ends the block
+                }
+                ok = has_safety_marker(&above.comment);
+            }
+            if !ok {
+                diags.push(Diagnostic {
+                    path: rel.to_string(),
+                    line: idx + 1,
+                    rule: "safety-comment",
+                    msg: "`unsafe` without a `// SAFETY:` comment (or \
+                          rustdoc `# Safety` section) directly above"
+                        .to_string(),
+                });
+            }
+        }
+
+        if !nondet_whitelisted(rel) {
+            if let Some(tok) = first_banned(code, &NONDET_TOKENS) {
+                if !allowed("nondet-source", idx) {
+                    diags.push(Diagnostic {
+                        path: rel.to_string(),
+                        line: idx + 1,
+                        rule: "nondet-source",
+                        msg: format!(
+                            "`{tok}` is a nondeterminism source; only \
+                             pool.rs/executor.rs/metrics/eval/datagen/\
+                             util::rng may hold clocks, threads or RNGs"
+                        ),
+                    });
+                }
+            }
+        }
+
+        if in_hot_path(rel) {
+            if let Some(tok) = first_banned(code, &HOT_PANIC_TOKENS) {
+                if !allowed("hot-panic", idx) {
+                    diags.push(Diagnostic {
+                        path: rel.to_string(),
+                        line: idx + 1,
+                        rule: "hot-panic",
+                        msg: format!(
+                            "`{tok}` can panic on the serving hot path; \
+                             return an error or pragma with the \
+                             invariant that rules the panic out"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+/// Recursively collect `.rs` files under `root` in sorted order, so CLI
+/// output is byte-stable across filesystems.
+fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(root)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<io::Result<Vec<_>>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint a file or a directory tree. For directories, each file's rule
+/// scope is selected by its path relative to `root`; diagnostics carry
+/// the full joined path for display.
+pub fn lint_path(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    if root.is_dir() {
+        collect_rs_files(root, &mut files)?;
+    } else {
+        files.push(root.to_path_buf());
+    }
+    let mut diags = Vec::new();
+    for path in files {
+        let rel = if root.is_dir() {
+            path.strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/")
+        } else {
+            path.file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default()
+        };
+        let src = fs::read_to_string(&path)?;
+        for mut d in lint_source(&rel, &src) {
+            d.path = path.to_string_lossy().into_owned();
+            diags.push(d);
+        }
+    }
+    Ok(diags)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_at(rel: &str, src: &str) -> Vec<(&'static str, usize)> {
+        lint_source(rel, src)
+            .into_iter()
+            .map(|d| (d.rule, d.line))
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_never_match() {
+        let src = "fn f() {\n\
+                   let s = \"HashMap unsafe .unwrap( panic!\";\n\
+                   // HashMap in a comment is fine\n\
+                   /* unsafe in a block comment */\n\
+                   let c = 'u';\n\
+                   }\n";
+        assert!(rules_at("serving/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "fn f() -> &'static str {\n\
+                   r#\"HashMap \"quoted\" unsafe\"#\n\
+                   }\n";
+        assert!(rules_at("serving/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lifetimes_do_not_open_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str {\n\
+                   let map = HashMap::new();\n\
+                   x\n\
+                   }\n";
+        assert_eq!(rules_at("util/x.rs", src), vec![("hash-iter", 2)]);
+    }
+
+    #[test]
+    fn multi_line_string_swallows_tokens() {
+        let src = "fn f() -> String {\n\
+                   let s = \"first\n\
+                   HashMap unsafe\n\
+                   last\".to_string();\n\
+                   s\n\
+                   }\n";
+        assert!(rules_at("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_items_are_skipped() {
+        let src = "fn live() {\n\
+                   let m = std::collections::HashMap::new();\n\
+                   }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   use std::collections::HashSet;\n\
+                   #[test]\n\
+                   fn t() { let x = 1.0f32.powi(2); x.sqrt(); }\n\
+                   }\n";
+        assert_eq!(rules_at("retriever/x.rs", src), vec![("hash-iter", 2)]);
+    }
+
+    #[test]
+    fn cfg_test_on_braceless_item_only_masks_that_item() {
+        let src = "#[cfg(test)]\n\
+                   use std::collections::HashMap;\n\
+                   fn live() { let s: HashSet<u32> = HashSet::new(); }\n";
+        assert_eq!(rules_at("util/x.rs", src), vec![("hash-iter", 3)]);
+    }
+
+    #[test]
+    fn safety_comment_accepted_same_line_and_above() {
+        let ok1 = "fn f(p: *const f32) -> f32 {\n\
+                   unsafe { *p } // SAFETY: caller pins p\n\
+                   }\n";
+        assert!(rules_at("util/x.rs", ok1).is_empty());
+        let ok2 = "fn f(p: *const f32) -> f32 {\n\
+                   // SAFETY: caller pins p for the whole call.\n\
+                   #[allow(clippy::all)]\n\
+                   unsafe { *p }\n\
+                   }\n";
+        assert!(rules_at("util/x.rs", ok2).is_empty());
+        let ok3 = "/// Reads one float.\n\
+                   ///\n\
+                   /// # Safety\n\
+                   /// `p` must be valid for reads.\n\
+                   pub unsafe fn f(p: *const f32) -> f32 {\n\
+                   unsafe { *p } // SAFETY: contract above\n\
+                   }\n";
+        assert!(rules_at("util/x.rs", ok3).is_empty());
+        let bad = "fn f(p: *const f32) -> f32 {\n\
+                   unsafe { *p }\n\
+                   }\n";
+        assert_eq!(rules_at("util/x.rs", bad), vec![("safety-comment", 2)]);
+    }
+
+    #[test]
+    fn deny_attr_is_not_an_unsafe_token() {
+        // `unsafe_op_in_unsafe_fn` must not match the `unsafe` ident.
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]\n\
+                   pub fn ok() {}\n";
+        assert!(rules_at("lib.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lib_rs_without_deny_attr_is_flagged() {
+        let src = "pub fn ok() {}\n";
+        assert_eq!(rules_at("lib.rs", src), vec![("safety-comment", 1)]);
+        // Non-root files don't need the attribute.
+        assert!(rules_at("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn line_pragma_suppresses_own_and_next_line() {
+        let same = "fn f() {\n\
+                    let m = HashMap::new(); // detlint: allow(hash-iter, \
+                    reason = \"keyed access only\")\n\
+                    }\n";
+        assert!(rules_at("util/x.rs", same).is_empty());
+        let next = "fn f() {\n\
+                    // detlint: allow(hash-iter, reason = \"keyed \
+                    access only\")\n\
+                    let m = HashMap::new();\n\
+                    }\n";
+        assert!(rules_at("util/x.rs", next).is_empty());
+        // The pragma must not leak past its target line.
+        let leak = "fn f() {\n\
+                    // detlint: allow(hash-iter, reason = \"first only\")\n\
+                    let a = HashMap::new();\n\
+                    let b = HashSet::new();\n\
+                    }\n";
+        assert_eq!(rules_at("util/x.rs", leak), vec![("hash-iter", 4)]);
+    }
+
+    #[test]
+    fn file_pragma_covers_whole_file() {
+        let src = "// detlint: allow-file(hash-iter, reason = \"interned \
+                   label table, keyed access only\")\n\
+                   fn f() { let a = HashMap::new(); }\n\
+                   fn g() { let b = HashSet::new(); }\n";
+        assert!(rules_at("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn malformed_pragmas_are_violations() {
+        let unknown = "// detlint: allow(no-such-rule, reason = \"x\")\n";
+        assert_eq!(rules_at("util/x.rs", unknown), vec![(PRAGMA_RULE, 1)]);
+        let empty = "// detlint: allow(hash-iter, reason = \"\")\n\
+                     fn f() { let a = HashMap::new(); }\n";
+        assert_eq!(
+            rules_at("util/x.rs", empty),
+            vec![(PRAGMA_RULE, 1), ("hash-iter", 2)]
+        );
+        let missing = "// detlint: allow(hash-iter)\n\
+                       fn f() { let a = HashMap::new(); }\n";
+        assert_eq!(
+            rules_at("util/x.rs", missing),
+            vec![(PRAGMA_RULE, 1), ("hash-iter", 2)]
+        );
+    }
+
+    #[test]
+    fn float_fusion_scoped_to_scoring_modules() {
+        let src = "fn f(x: f64) -> f64 { x.powi(3) }\n";
+        assert_eq!(rules_at("spec/x.rs", src), vec![("float-fusion", 1)]);
+        assert_eq!(rules_at("knnlm/x.rs", src), vec![("float-fusion", 1)]);
+        assert!(rules_at("util/stats.rs", src).is_empty());
+        let fma = "fn f(a: f32, b: f32, c: f32) -> f32 { a.mul_add(b, c) }\n";
+        assert_eq!(
+            rules_at("retriever/x.rs", fma),
+            vec![("float-fusion", 1)]
+        );
+    }
+
+    #[test]
+    fn nondet_tokens_and_whitelist() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(rules_at("serving/x.rs", src), vec![("nondet-source", 1)]);
+        assert!(rules_at("metrics/mod.rs", src).is_empty());
+        assert!(rules_at("eval/runner.rs", src).is_empty());
+        assert!(rules_at("retriever/pool.rs", src).is_empty());
+        assert!(rules_at("serving/executor.rs", src).is_empty());
+        assert!(rules_at("util/rng.rs", src).is_empty());
+        let spawn = "fn f() { std::thread::Builder::new().spawn(g); }\n";
+        assert_eq!(
+            rules_at("serving/x.rs", spawn),
+            vec![("nondet-source", 1)]
+        );
+    }
+
+    #[test]
+    fn hot_panic_scoped_and_unwrap_or_exempt() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(rules_at("serving/x.rs", src), vec![("hot-panic", 1)]);
+        assert_eq!(rules_at("retriever/x.rs", src), vec![("hot-panic", 1)]);
+        assert!(rules_at("eval/x.rs", src).is_empty());
+        // unwrap_or / unwrap_or_else never panic and must not match.
+        let or = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n";
+        assert!(rules_at("serving/x.rs", or).is_empty());
+    }
+
+    #[test]
+    fn diagnostics_render_path_line_rule() {
+        let d = lint_source(
+            "serving/x.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        );
+        assert_eq!(d.len(), 1);
+        let shown = d[0].to_string();
+        assert!(shown.starts_with("serving/x.rs:1: [hot-panic]"), "{shown}");
+    }
+}

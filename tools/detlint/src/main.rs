@@ -1,0 +1,36 @@
+//! CLI wrapper: `cargo run -p detlint -- rust/src [more paths...]`.
+//!
+//! Exit codes: 0 = clean, 1 = violations found, 2 = usage or I/O error.
+//! Output is one `path:line: [rule-id] message` diagnostic per line, in
+//! sorted file order, so CI logs are byte-stable.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!("usage: detlint <dir-or-file>...");
+        return ExitCode::from(2);
+    }
+    let mut diags = Vec::new();
+    for arg in &args {
+        match detlint::lint_path(Path::new(arg)) {
+            Ok(d) => diags.extend(d),
+            Err(e) => {
+                eprintln!("detlint: {arg}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        println!("detlint: clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("detlint: {} violation(s)", diags.len());
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,14 @@
+// detlint-fixture: path=serving/clean.rs
+// detlint-expect:
+
+use std::collections::BTreeMap;
+
+pub fn batch_sizes(groups: &[(u64, usize)]) -> Vec<usize> {
+    let mut m: BTreeMap<u64, usize> = BTreeMap::new();
+    for &(k, v) in groups { *m.entry(k).or_insert(0) += v; }
+    m.into_values().collect()
+}
+
+pub fn checked_take(slot: &mut Option<u32>) -> Result<u32, String> {
+    slot.take().ok_or_else(|| "slot empty".to_string())
+}

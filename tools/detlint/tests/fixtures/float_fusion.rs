@@ -1,0 +1,9 @@
+// detlint-fixture: path=retriever/fused.rs
+// detlint-expect: float-fusion:6 float-fusion:9
+
+pub fn fused_dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) { acc = x.mul_add(*y, acc); }
+    acc
+}
+pub fn decay(gamma: f64, s: u32) -> f64 { gamma.powi(s as i32) }

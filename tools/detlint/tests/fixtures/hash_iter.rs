@@ -1,0 +1,12 @@
+// detlint-fixture: path=serving/batcher.rs
+// detlint-expect: hash-iter:4 hash-iter:7
+
+use std::collections::HashMap;
+
+pub fn batch_sizes(groups: &[(u64, usize)]) -> Vec<usize> {
+    let mut m: HashMap<u64, usize> = HashMap::new();
+    for &(k, v) in groups { *m.entry(k).or_insert(0) += v; }
+    let mut out: Vec<usize> = m.values().copied().collect();
+    out.sort_unstable();
+    out
+}

@@ -1,0 +1,18 @@
+// detlint-fixture: path=serving/slot.rs
+// detlint-expect: hot-panic:5 hot-panic:9
+
+pub fn take(slot: &mut Option<u32>) -> u32 {
+    slot.take().unwrap()
+}
+
+pub fn must_not_happen() -> ! {
+    panic!("invariant violated");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(Some(3).unwrap(), 3);
+    }
+}

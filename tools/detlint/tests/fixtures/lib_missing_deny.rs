@@ -1,0 +1,4 @@
+// detlint-fixture: path=lib.rs
+// detlint-expect: safety-comment:1
+
+pub mod util;

@@ -1,0 +1,5 @@
+// detlint-fixture: path=lib.rs
+// detlint-expect:
+
+#![deny(unsafe_op_in_unsafe_fn)]
+pub mod util;

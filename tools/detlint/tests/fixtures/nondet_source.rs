@@ -1,0 +1,12 @@
+// detlint-fixture: path=serving/ticker.rs
+// detlint-expect: nondet-source:6 nondet-source:11
+
+use std::time::Instant;
+
+pub fn stamp() -> Instant { Instant::now() }
+
+pub fn run_detached<F: FnOnce() + Send + 'static>(f: F) {
+    // A serving-layer module must route work through the executor
+    // pool instead of spawning ad-hoc threads.
+    std::thread::spawn(f);
+}

@@ -1,0 +1,7 @@
+// detlint-fixture: path=util/cfg.rs
+// detlint-expect: pragma:4 pragma:6 hash-iter:7
+
+// detlint: allow(no-such-rule, reason = "typo in the rule id")
+pub fn a() {}
+// detlint: allow(hash-iter, reason = "")
+pub fn b(m: &std::collections::HashMap<u32, u32>) -> usize { m.len() }

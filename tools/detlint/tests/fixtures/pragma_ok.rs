@@ -1,0 +1,15 @@
+// detlint-fixture: path=retriever/interner.rs
+// detlint-expect:
+
+use std::collections::HashMap; // detlint: allow(hash-iter, reason = "keyed access only; order never escapes")
+
+pub struct Interner {
+    // detlint: allow(hash-iter, reason = "keyed access only; order never escapes")
+    map: HashMap<String, u32>,
+}
+
+impl Interner {
+    pub fn get(&self, k: &str) -> Option<u32> {
+        self.map.get(k).copied()
+    }
+}

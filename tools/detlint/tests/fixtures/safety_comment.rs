@@ -1,0 +1,9 @@
+// detlint-fixture: path=util/ptr.rs
+// detlint-expect: safety-comment:9
+
+/// Reads the first element.
+pub fn first(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees `p` points to at least one f32.
+    unsafe { *p }
+}
+pub fn second(p: *const f32) -> f32 { unsafe { *p.add(1) } }

@@ -1,0 +1,119 @@
+//! Fixture-driven acceptance tests for detlint.
+//!
+//! Each file under `tests/fixtures/` is self-describing:
+//!
+//! ```text
+//! // detlint-fixture: path=retriever/fused.rs
+//! // detlint-expect: float-fusion:6 float-fusion:9
+//! ```
+//!
+//! `path=` is the virtual scan-relative path (it selects rule scopes);
+//! `detlint-expect:` lists the exact `rule:line` diagnostics the file
+//! must produce — line numbers count the fixture file itself, header
+//! included. An empty expect list asserts a clean pass.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn parse_header(src: &str, name: &str) -> (String, Vec<(String, usize)>) {
+    let mut lines = src.lines();
+    let first = lines.next().unwrap_or_default();
+    let rel = first
+        .strip_prefix("// detlint-fixture: path=")
+        .unwrap_or_else(|| panic!("{name}: missing fixture header"))
+        .trim()
+        .to_string();
+    let second = lines.next().unwrap_or_default();
+    let expect_src = second
+        .strip_prefix("// detlint-expect:")
+        .unwrap_or_else(|| panic!("{name}: missing expect header"));
+    let want = expect_src
+        .split_whitespace()
+        .map(|tok| {
+            let (rule, line) = tok
+                .split_once(':')
+                .unwrap_or_else(|| panic!("{name}: bad expect `{tok}`"));
+            (rule.to_string(), line.parse::<usize>().unwrap())
+        })
+        .collect();
+    (rel, want)
+}
+
+#[test]
+fn fixtures_produce_exact_rule_and_line_diagnostics() {
+    let mut paths: Vec<PathBuf> = fs::read_dir(fixtures_dir())
+        .expect("fixtures dir")
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == "rs"))
+        .collect();
+    paths.sort();
+    assert!(paths.len() >= 10, "expected >= 10 fixtures, found {paths:?}");
+    for path in paths {
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        let src = fs::read_to_string(&path).expect("read fixture");
+        let (rel, want) = parse_header(&src, &name);
+        let got: Vec<(String, usize)> = detlint::lint_source(&rel, &src)
+            .into_iter()
+            .map(|d| (d.rule.to_string(), d.line))
+            .collect();
+        assert_eq!(got, want, "fixture {name} (virtual path {rel})");
+    }
+}
+
+#[test]
+fn real_tree_is_clean() {
+    // The acceptance bar from the issue: the linter must exit clean on
+    // the actual source tree it gates.
+    let root =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    let diags = detlint::lint_path(&root).expect("scan rust/src");
+    assert!(
+        diags.is_empty(),
+        "rust/src has {} detlint violation(s):\n{}",
+        diags.len(),
+        diags
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn cli_exits_nonzero_with_diagnostics_on_violations() {
+    let fixture = fixtures_dir().join("hash_iter.rs");
+    let out = Command::new(env!("CARGO_BIN_EXE_detlint"))
+        .arg(&fixture)
+        .output()
+        .expect("run detlint binary");
+    assert_eq!(out.status.code(), Some(1), "status: {:?}", out.status);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("[hash-iter]"), "stdout: {stdout}");
+    assert!(stdout.contains("hash_iter.rs:4:"), "stdout: {stdout}");
+}
+
+#[test]
+fn cli_exits_zero_on_compliant_input() {
+    let fixture = fixtures_dir().join("clean.rs");
+    let out = Command::new(env!("CARGO_BIN_EXE_detlint"))
+        .arg(&fixture)
+        .output()
+        .expect("run detlint binary");
+    assert!(out.status.success(), "status: {:?}", out.status);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("detlint: clean"), "stdout: {stdout}");
+}
+
+#[test]
+fn cli_exits_two_on_missing_path() {
+    let out = Command::new(env!("CARGO_BIN_EXE_detlint"))
+        .arg(fixtures_dir().join("no_such_file.rs"))
+        .output()
+        .expect("run detlint binary");
+    assert_eq!(out.status.code(), Some(2), "status: {:?}", out.status);
+}
