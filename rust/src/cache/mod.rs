@@ -262,7 +262,7 @@ mod tests {
             ..CorpusConfig::default()
         });
         let mut small = big.clone();
-        small.docs.truncate(200);
+        small.truncate(200);
         let epoch0 = Bm25::build(&small, 0.9, 0.4);
         let epoch1 = Bm25::build(&big, 0.9, 0.4);
 

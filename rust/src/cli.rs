@@ -110,9 +110,22 @@ COMMANDS:
                              admitted under (outputs stay bit-identical to
                              a sequential run against that snapshot).
                              Config keys: ingest.rate / ingest.batch
+          [--kb-dir DIR] [--memtable-docs N] [--compact-segments N]
+                             persistent knowledge base (segment store,
+                             ADR-009 / docs/PERSISTENCE.md): mmap
+                             segments under DIR + an in-RAM memtable
+                             frozen every N docs; a background worker
+                             compacts once the tier count reaches
+                             --compact-segments. Results stay
+                             bit-identical to the in-RAM backends.
+                             Config keys: segment.kb_dir /
+                             segment.memtable_docs /
+                             segment.compact_segments /
+                             segment.compact_interval_ms
     bench-gate [--mock] [--out BENCH_PR3.json]
                [--engine-out BENCH_PR4.json] [--live-out BENCH_PR5.json]
                [--kernel-out BENCH_PR6.json]
+               [--storage-out BENCH_PR8.json]
                              CI perf-regression gate: quick fig4+fig5
                              speed-up ratios per retriever class, written
                              as JSON; exits non-zero if any ratio < 1.0
@@ -126,7 +139,12 @@ COMMANDS:
                              and the per-kernel latency cells
                              (--kernel-out: ns/op per scoring kernel;
                              fails if scalar/SIMD speedup < 1.0 on
-                             SIMD-active hosts)
+                             SIMD-active hosts), and the storage cells
+                             (--storage-out: segment cold-load mmap vs
+                             in-RAM rebuild, and republish cost at
+                             fixed memtable across growing corpora —
+                             fails if republish scales with the corpus
+                             instead of the memtable)
     trace [--retriever edr] [--mock]
                              emit a Fig-1(c)-style per-request timeline
     help                     this text

@@ -73,6 +73,7 @@ pub struct Config {
     pub serving: ServingConfig,
     pub engine: EngineConfig,
     pub ingest: IngestConfig,
+    pub segment: SegmentConfig,
 }
 
 impl Config {
@@ -122,6 +123,9 @@ impl Config {
         if let Some(x) = v.get("ingest") {
             self.ingest.merge(x);
         }
+        if let Some(x) = v.get("segment") {
+            self.segment.merge(x);
+        }
     }
 
     pub fn to_json(&self) -> Value {
@@ -135,6 +139,7 @@ impl Config {
             ("serving", self.serving.to_json()),
             ("engine", self.engine.to_json()),
             ("ingest", self.ingest.to_json()),
+            ("segment", self.segment.to_json()),
         ])
     }
 }
@@ -536,6 +541,65 @@ impl IngestConfig {
     }
 }
 
+/// Persistent segment store (`retriever::segment`, DESIGN.md ADR-009):
+/// `kb_dir` roots the on-disk store (`None` — the default — keeps the
+/// fully in-RAM backends of ADR-006; the empty string also means
+/// disabled so a JSON overlay can switch persistence off). When set,
+/// `memtable_docs` caps the in-RAM mutable tier before it is frozen to
+/// a segment, `compact_segments` is the tier count at which the
+/// background worker folds everything back into one segment, and
+/// `compact_interval_ms` paces that worker's polling.
+#[derive(Debug, Clone)]
+pub struct SegmentConfig {
+    pub kb_dir: Option<PathBuf>,
+    pub memtable_docs: usize,
+    pub compact_segments: usize,
+    pub compact_interval_ms: u64,
+}
+
+impl Default for SegmentConfig {
+    fn default() -> Self {
+        Self {
+            kb_dir: None,
+            memtable_docs: 4096,
+            compact_segments: 4,
+            compact_interval_ms: 250,
+        }
+    }
+}
+
+impl SegmentConfig {
+    fn merge(&mut self, v: &Value) {
+        if let Some(x) = v.get("kb_dir") {
+            if let Some(s) = x.as_str() {
+                self.kb_dir = if s.is_empty() {
+                    None
+                } else {
+                    Some(PathBuf::from(s))
+                };
+            }
+        }
+        merge_fields!(self, v, {
+            "memtable_docs" => self.memtable_docs => usize,
+            "compact_segments" => self.compact_segments => usize,
+            "compact_interval_ms" => self.compact_interval_ms => u64,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        let dir = self.kb_dir.as_ref()
+            .map(|p| p.display().to_string())
+            .unwrap_or_default();
+        Value::obj(vec![
+            ("kb_dir", Value::str(dir)),
+            ("memtable_docs", Value::num(self.memtable_docs as f64)),
+            ("compact_segments", Value::num(self.compact_segments as f64)),
+            ("compact_interval_ms",
+             Value::num(self.compact_interval_ms as f64)),
+        ])
+    }
+}
+
 /// The three retriever classes evaluated in the paper. `Ord` follows
 /// declaration order (Edr < Adr < Sr) so the kind can key ordered maps
 /// (e.g. the [`crate::eval::TestBed`] sharded-wrapper cache).
@@ -662,6 +726,31 @@ mod tests {
         assert!((c.ingest.rate - 12.5).abs() < 1e-12);
         assert_eq!(c.ingest.batch, 3);
         assert_eq!(c.engine.max_batch, 32); // untouched default
+    }
+
+    #[test]
+    fn segment_defaults_and_merge() {
+        let c = Config::default();
+        assert_eq!(c.segment.kb_dir, None); // persistence off by default
+        assert_eq!(c.segment.memtable_docs, 4096);
+        assert_eq!(c.segment.compact_segments, 4);
+        assert_eq!(c.segment.compact_interval_ms, 250);
+        let v = json::parse(
+            r#"{"segment": {"kb_dir": "/tmp/kb", "memtable_docs": 64,
+                            "compact_segments": 2,
+                            "compact_interval_ms": 10}}"#).unwrap();
+        let mut c = Config::default();
+        c.merge(&v);
+        assert_eq!(c.segment.kb_dir, Some(PathBuf::from("/tmp/kb")));
+        assert_eq!(c.segment.memtable_docs, 64);
+        assert_eq!(c.segment.compact_segments, 2);
+        assert_eq!(c.segment.compact_interval_ms, 10);
+        // Empty string switches persistence back off (round-trips the
+        // `to_json` encoding of `None`).
+        let v = json::parse(r#"{"segment": {"kb_dir": ""}}"#).unwrap();
+        c.merge(&v);
+        assert_eq!(c.segment.kb_dir, None);
+        assert_eq!(c.ingest.batch, 8); // untouched default
     }
 
     #[test]

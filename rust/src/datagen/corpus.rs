@@ -9,6 +9,7 @@
 
 use crate::config::CorpusConfig;
 use crate::util::{Rng, Zipf};
+use std::sync::Arc;
 
 /// Special token ids (bottom of the vocabulary).
 pub const PAD: u32 = 0;
@@ -27,15 +28,23 @@ pub struct Document {
 /// `retriever::epoch`): documents are append-only and never mutate, so a
 /// snapshot taken at epoch E stays byte-identical for every id < len(E)
 /// no matter how far the master has grown since.
+///
+/// Storage is split into an immutable shared `base` (behind an `Arc`) and
+/// a small mutable `tail` absorbing appends, so cloning for an epoch
+/// snapshot costs O(tail) — not O(corpus) — matching the segment tier's
+/// O(memtable) republish guarantee (DESIGN.md ADR-009). [`Corpus::seal`]
+/// folds the tail into the base; the writer calls it only on compaction,
+/// where an O(corpus) pass is already being paid in the background.
 #[derive(Debug, Clone)]
 pub struct Corpus {
-    pub docs: Vec<Document>,
+    base: Arc<Vec<Document>>,
+    tail: Vec<Document>,
     pub vocab: usize,
     pub n_topics: usize,
     /// Per-topic token pools (used by the QA workload generator to phrase
     /// questions "about" a topic).
-    topic_pools: Vec<TopicPool>,
-    common_pool: Vec<u32>,
+    topic_pools: Arc<Vec<TopicPool>>,
+    common_pool: Arc<Vec<u32>>,
 }
 
 #[derive(Debug, Clone)]
@@ -68,29 +77,38 @@ fn sample_tokens(pool: &TopicPool, common_pool: &[u32],
         .collect()
 }
 
+/// Build the token pools, consuming the same parent-RNG draws (one fork
+/// per topic) as the original inline construction — `generate` continues
+/// from the same `rng` state afterwards, so document generation is
+/// byte-identical to pre-refactor builds.
+fn make_pools(cfg: &CorpusConfig, rng: &mut Rng)
+              -> (Vec<TopicPool>, Vec<u32>) {
+    // Common pool: the most "frequent" ids right above the reserved ones.
+    let common_pool: Vec<u32> =
+        (cfg.reserved as u32..(cfg.reserved + COMMON_POOL) as u32).collect();
+    let content_lo = cfg.reserved + COMMON_POOL;
+
+    // Topic pools: deterministic per-topic subsets of the content range.
+    let mut topic_pools = Vec::with_capacity(cfg.n_topics);
+    for t in 0..cfg.n_topics {
+        let mut trng = rng.fork(t as u64 + 1);
+        let tokens: Vec<u32> = (0..TOPIC_POOL)
+            .map(|_| trng.gen_range_in(content_lo, cfg.vocab) as u32)
+            .collect();
+        topic_pools.push(TopicPool {
+            tokens,
+            zipf: Zipf::new(TOPIC_POOL, cfg.token_skew),
+        });
+    }
+    (topic_pools, common_pool)
+}
+
 impl Corpus {
     pub fn generate(cfg: &CorpusConfig) -> Self {
         assert!(cfg.vocab > cfg.reserved + COMMON_POOL + TOPIC_POOL,
                 "vocab too small for pools");
         let mut rng = Rng::new(cfg.seed);
-
-        // Common pool: the most "frequent" ids right above the reserved ones.
-        let common_pool: Vec<u32> =
-            (cfg.reserved as u32..(cfg.reserved + COMMON_POOL) as u32).collect();
-        let content_lo = cfg.reserved + COMMON_POOL;
-
-        // Topic pools: deterministic per-topic subsets of the content range.
-        let mut topic_pools = Vec::with_capacity(cfg.n_topics);
-        for t in 0..cfg.n_topics {
-            let mut trng = rng.fork(t as u64 + 1);
-            let tokens: Vec<u32> = (0..TOPIC_POOL)
-                .map(|_| trng.gen_range_in(content_lo, cfg.vocab) as u32)
-                .collect();
-            topic_pools.push(TopicPool {
-                tokens,
-                zipf: Zipf::new(TOPIC_POOL, cfg.token_skew),
-            });
-        }
+        let (topic_pools, common_pool) = make_pools(cfg, &mut rng);
         let common_zipf = Zipf::new(COMMON_POOL, 1.2);
 
         let mut docs = Vec::with_capacity(cfg.n_docs);
@@ -105,24 +123,89 @@ impl Corpus {
         }
 
         Self {
-            docs,
+            base: Arc::new(docs),
+            tail: Vec::new(),
             vocab: cfg.vocab,
             n_topics: cfg.n_topics,
-            topic_pools,
-            common_pool,
+            topic_pools: Arc::new(topic_pools),
+            common_pool: Arc::new(common_pool),
+        }
+    }
+
+    /// Reassemble a corpus from documents recovered off disk (segment
+    /// cold load): pools are regenerated deterministically from `cfg`
+    /// (they depend only on the corpus seed), documents come from the
+    /// caller. Used by `retriever::segment::SegmentStore::open`.
+    pub fn rebuild(cfg: &CorpusConfig, docs: Vec<Document>) -> Self {
+        assert!(cfg.vocab > cfg.reserved + COMMON_POOL + TOPIC_POOL,
+                "vocab too small for pools");
+        let mut rng = Rng::new(cfg.seed);
+        let (topic_pools, common_pool) = make_pools(cfg, &mut rng);
+        for (i, d) in docs.iter().enumerate() {
+            assert_eq!(d.id as usize, i, "recovered doc ids must be contiguous");
+        }
+        Self {
+            base: Arc::new(docs),
+            tail: Vec::new(),
+            vocab: cfg.vocab,
+            n_topics: cfg.n_topics,
+            topic_pools: Arc::new(topic_pools),
+            common_pool: Arc::new(common_pool),
         }
     }
 
     pub fn len(&self) -> usize {
-        self.docs.len()
+        self.base.len() + self.tail.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.docs.is_empty()
+        self.len() == 0
     }
 
     pub fn doc(&self, id: u32) -> &Document {
-        &self.docs[id as usize]
+        let i = id as usize;
+        if i < self.base.len() {
+            &self.base[i]
+        } else {
+            &self.tail[i - self.base.len()]
+        }
+    }
+
+    /// Iterate all documents in id order (base, then tail).
+    pub fn iter(&self) -> impl Iterator<Item = &Document> + '_ {
+        self.base.iter().chain(self.tail.iter())
+    }
+
+    /// Number of documents in the immutable sealed base (the rest live in
+    /// the mutable tail and are re-cloned on every snapshot).
+    pub fn sealed_len(&self) -> usize {
+        self.base.len()
+    }
+
+    /// Fold the mutable tail into the shared immutable base. O(corpus) —
+    /// the live writer calls this only on compaction, never per publish.
+    pub fn seal(&mut self) {
+        if self.tail.is_empty() {
+            return;
+        }
+        let mut docs = Vec::with_capacity(self.len());
+        docs.extend_from_slice(&self.base);
+        docs.append(&mut self.tail);
+        self.base = Arc::new(docs);
+    }
+
+    /// Drop all documents with id >= `n` (test fixtures carve a prefix
+    /// corpus out of a larger build).
+    pub fn truncate(&mut self, n: usize) {
+        if n >= self.len() {
+            return;
+        }
+        if n >= self.base.len() {
+            self.tail.truncate(n - self.base.len());
+        } else {
+            self.tail.clear();
+            self.base = Arc::new(self.base[..n].to_vec());
+        }
     }
 
     /// Sample `n` tokens "about" a topic (question phrasing).
@@ -144,11 +227,11 @@ impl Corpus {
     /// layer's doc-id ↔ row-index correspondence depends on it.
     pub fn append(&mut self, docs: Vec<Document>) {
         for d in docs {
-            assert_eq!(d.id as usize, self.docs.len(),
+            assert_eq!(d.id as usize, self.len(),
                        "ingested doc ids must be contiguous");
             assert!(d.tokens.iter().all(|&t| (t as usize) < self.vocab),
                     "ingested doc uses tokens outside the corpus vocab");
-            self.docs.push(d);
+            self.tail.push(d);
         }
     }
 
@@ -178,11 +261,11 @@ impl Corpus {
 
     /// Average document length in tokens (BM25 needs this).
     pub fn avg_doc_len(&self) -> f64 {
-        if self.docs.is_empty() {
+        if self.is_empty() {
             return 0.0;
         }
-        self.docs.iter().map(|d| d.tokens.len()).sum::<usize>() as f64
-            / self.docs.len() as f64
+        self.iter().map(|d| d.tokens.len()).sum::<usize>() as f64
+            / self.len() as f64
     }
 }
 
@@ -201,7 +284,7 @@ mod tests {
         let a = Corpus::generate(&cfg);
         let b = Corpus::generate(&cfg);
         assert_eq!(a.len(), b.len());
-        for (da, db) in a.docs.iter().zip(&b.docs) {
+        for (da, db) in a.iter().zip(b.iter()) {
             assert_eq!(da.tokens, db.tokens);
             assert_eq!(da.topic, db.topic);
         }
@@ -211,7 +294,7 @@ mod tests {
     fn doc_lengths_in_range() {
         let cfg = small_cfg();
         let c = Corpus::generate(&cfg);
-        for d in &c.docs {
+        for d in c.iter() {
             assert!(d.tokens.len() >= cfg.doc_len.0);
             assert!(d.tokens.len() <= cfg.doc_len.1);
         }
@@ -221,7 +304,7 @@ mod tests {
     fn tokens_avoid_reserved_range() {
         let cfg = small_cfg();
         let c = Corpus::generate(&cfg);
-        for d in &c.docs {
+        for d in c.iter() {
             for &t in &d.tokens {
                 assert!(t >= cfg.reserved as u32);
                 assert!((t as usize) < cfg.vocab);
@@ -243,9 +326,9 @@ mod tests {
             let inter = sa.intersection(&sb).count() as f64;
             inter / (sa.len().min(sb.len()) as f64)
         };
-        let d0 = &c.docs[0];
-        let same = c.docs.iter().find(|d| d.id != d0.id && d.topic == d0.topic);
-        let diff = c.docs.iter().find(|d| d.topic != d0.topic).unwrap();
+        let d0 = c.doc(0);
+        let same = c.iter().find(|d| d.id != d0.id && d.topic == d0.topic);
+        let diff = c.iter().find(|d| d.topic != d0.topic).unwrap();
         if let Some(same) = same {
             assert!(overlap(d0, same) > overlap(d0, diff),
                     "same-topic docs should overlap more");
@@ -312,5 +395,45 @@ mod tests {
         let c = Corpus::generate(&cfg);
         let avg = c.avg_doc_len();
         assert!(avg >= cfg.doc_len.0 as f64 && avg <= cfg.doc_len.1 as f64);
+    }
+
+    #[test]
+    fn seal_and_truncate_preserve_contents() {
+        let cfg = small_cfg();
+        let mut c = Corpus::generate(&cfg);
+        let n = c.len();
+        let fresh = c.synth_docs(9, n as u32, 7, (20, 60));
+        c.append(fresh);
+        assert_eq!(c.sealed_len(), n);
+        let all: Vec<Vec<u32>> = c.iter().map(|d| d.tokens.clone()).collect();
+        c.seal();
+        assert_eq!(c.sealed_len(), n + 7);
+        let sealed: Vec<Vec<u32>> =
+            c.iter().map(|d| d.tokens.clone()).collect();
+        assert_eq!(all, sealed, "seal never changes document contents");
+        c.truncate(n + 2);
+        assert_eq!(c.len(), n + 2);
+        assert_eq!(c.doc(3).tokens, all[3]);
+    }
+
+    #[test]
+    fn rebuild_matches_generate() {
+        let cfg = small_cfg();
+        let a = Corpus::generate(&cfg);
+        let docs: Vec<Document> = a.iter().cloned().collect();
+        let b = Corpus::rebuild(&cfg, docs);
+        assert_eq!(a.len(), b.len());
+        for (da, db) in a.iter().zip(b.iter()) {
+            assert_eq!(da.tokens, db.tokens);
+        }
+        // Pools regenerate identically: question phrasing is unchanged.
+        assert_eq!(a.topic_tokens(2, 12, &mut Rng::new(11)),
+                   b.topic_tokens(2, 12, &mut Rng::new(11)));
+        // The ingest stream continues identically too.
+        let sa = a.synth_docs(42, a.len() as u32, 3, (20, 60));
+        let sb = b.synth_docs(42, b.len() as u32, 3, (20, 60));
+        for (x, y) in sa.iter().zip(&sb) {
+            assert_eq!(x.tokens, y.tokens);
+        }
     }
 }

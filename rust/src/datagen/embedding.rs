@@ -99,10 +99,10 @@ pub fn embed_doc(enc: &dyn Encoder,
 /// Embed every corpus document (first `window` tokens, like a passage
 /// encoder). Returns a row-major [n_docs, dim] matrix.
 pub fn embed_corpus(enc: &dyn Encoder,
-                    docs: &[crate::datagen::corpus::Document]) -> Vec<f32> {
+                    corpus: &crate::datagen::corpus::Corpus) -> Vec<f32> {
     let dim = enc.dim();
-    let mut out = vec![0.0f32; docs.len() * dim];
-    let windows: Vec<&[u32]> = docs
+    let mut out = vec![0.0f32; corpus.len() * dim];
+    let windows: Vec<&[u32]> = corpus
         .iter()
         .map(|d| &d.tokens[..d.tokens.len().min(enc.window())])
         .collect();
@@ -171,7 +171,7 @@ mod tests {
                                  ..CorpusConfig::default() };
         let corpus = Corpus::generate(&cfg);
         let enc = HashEncoder::new(32, 4);
-        let emb = embed_corpus(&enc, &corpus.docs);
+        let emb = embed_corpus(&enc, &corpus);
         assert_eq!(emb.len(), 300 * 32);
         // same-topic docs should on average be closer than cross-topic
         let row = |i: usize| &emb[i * 32..(i + 1) * 32];
@@ -183,7 +183,7 @@ mod tests {
         for i in 0..60 {
             for j in (i + 1)..60 {
                 let c = cos(row(i), row(j));
-                if corpus.docs[i].topic == corpus.docs[j].topic {
+                if corpus.doc(i as u32).topic == corpus.doc(j as u32).topic {
                     same.push(c);
                 } else {
                     cross.push(c);

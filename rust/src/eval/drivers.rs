@@ -922,6 +922,16 @@ pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     if let Some(b) = flags.get_usize("ingest-batch")? {
         cfg.ingest.batch = b.max(1);
     }
+    if let Some(dir) = flags.get("kb-dir") {
+        anyhow::ensure!(!dir.is_empty(), "--kb-dir needs a directory");
+        cfg.segment.kb_dir = Some(std::path::PathBuf::from(dir));
+    }
+    if let Some(n) = flags.get_usize("memtable-docs")? {
+        cfg.segment.memtable_docs = n.max(1);
+    }
+    if let Some(n) = flags.get_usize("compact-segments")? {
+        cfg.segment.compact_segments = n.max(2);
+    }
     let model = flags.get("model").unwrap_or("gpt2m").to_string();
     if model == KNN_MODEL {
         // KNN-LM serving has its own fixture (datastore, not the QA
@@ -949,6 +959,12 @@ pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     // would hand back numbers that measure the wrong system.
     anyhow::ensure!(cfg.ingest.rate <= 0.0 || engine_scenario,
                     "--ingest-rate needs the engine scenario: add \
+                     --throughput or --concurrency N");
+    // A persistent KB serves through the live (epoch) path; accepting
+    // the flag on the sequential path would silently serve the frozen
+    // in-RAM index instead of the segment store.
+    anyhow::ensure!(cfg.segment.kb_dir.is_none() || engine_scenario,
+                    "--kb-dir needs the engine scenario: add \
                      --throughput or --concurrency N");
     let provider = Provider::from_flags(&cfg, flags)?;
     anyhow::ensure!(provider.has_model(&model), "model {model} not built");
@@ -1008,7 +1024,7 @@ fn serve_engine_scenario(cfg: &Config, provider: &Provider, model: &str,
         Some(c) => vec![c.max(1)],
         None => vec![1, 8, 32],
     };
-    if cfg.ingest.rate > 0.0 {
+    if cfg.ingest.rate > 0.0 || cfg.segment.kb_dir.is_some() {
         return serve_live_scenario(cfg, provider, model, bed,
                                    enc, kind, dataset, questions, method,
                                    &concurrencies);
@@ -1079,23 +1095,43 @@ fn serve_live_scenario(cfg: &Config, provider: &Provider, model: &str,
                        questions: &[crate::datagen::Question],
                        method: QaMethod, concurrencies: &[usize])
                        -> anyhow::Result<()> {
-    use crate::retriever::LiveKb;
+    use crate::retriever::{CompactionWorker, LiveKb};
     eprintln!("[serve] live scenario: {} requests via {} on {}/{} ({}), \
-               ingest rate={}/s batch={} shards={}",
+               ingest rate={}/s batch={} shards={} kb_dir={}",
               questions.len(), method.label(), model, kind.label(),
               dataset.label(), cfg.ingest.rate, cfg.ingest.batch,
-              cfg.retriever.shards);
+              cfg.retriever.shards,
+              cfg.segment.kb_dir.as_ref()
+                  .map(|p| p.display().to_string())
+                  .unwrap_or_else(|| "-".to_string()));
     let mut report = Report::new(
         "serve_live",
         "Live serving: requests/s + latency percentiles vs concurrency \
          under concurrent ingestion (epoch snapshots, ADR-006)");
     provider.with_lm(cfg, model, &mut |lm| {
         for &c in concurrencies {
-            let live = LiveKb::build(cfg, kind, (*bed.corpus).clone(),
-                                     bed.embeddings.data.clone(),
-                                     bed.embeddings.dim);
+            // Each concurrency level gets its own store subdirectory so
+            // levels stay comparable (same cold-start state) instead of
+            // level N+1 reopening the docs level N ingested.
+            let mut level_cfg = cfg.clone();
+            if let Some(dir) = &cfg.segment.kb_dir {
+                level_cfg.segment.kb_dir = Some(dir.join(format!("c{c}")));
+            }
+            let live = LiveKb::build_auto(&level_cfg, kind,
+                                          (*bed.corpus).clone(),
+                                          bed.embeddings.data.clone(),
+                                          bed.embeddings.dim)?;
+            let mut compactor = level_cfg.segment.kb_dir.as_ref().map(|_| {
+                CompactionWorker::spawn(
+                    live.clone(),
+                    level_cfg.segment.compact_interval_ms,
+                    level_cfg.segment.compact_segments.max(2))
+            });
             let r = lm.serve_live_throughput(enc, kind, &live, questions,
-                                             method, cfg, c)?;
+                                             method, &level_cfg, c)?;
+            if let Some(w) = compactor.as_mut() {
+                w.stop();
+            }
             let s = &r.summary;
             report.line(&format!(
                 "conc={:<3} {:>7.2} req/s  p50={:.3}s p99={:.3}s \

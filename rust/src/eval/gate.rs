@@ -44,6 +44,14 @@
 //! scalar/SIMD speedup staying ≥ 1.0: vectorization must actually pay,
 //! on every PR. These cells need no model artifacts, so they run (and
 //! can fail the command) even when fig4/fig5 are skipped.
+//!
+//! A fifth artifact (`--storage-out`, default `BENCH_PR8.json`) records
+//! the **storage-tier cells** (DESIGN.md ADR-009): segment cold-load
+//! time (mmap open vs in-RAM rebuild, recorded) and the republish cost
+//! at a fixed memtable while the corpus quadruples — **gated**: the
+//! ratio must stay ≤ 2.0, i.e. publishing an epoch against the segment
+//! store costs O(memtable), not O(corpus). Model-free like the kernel
+//! cells.
 
 use crate::cli::Flags;
 use crate::config::{Config, RetrieverKind};
@@ -386,6 +394,143 @@ fn live_ingest_sweep(lm: &dyn ErasedLm, enc: &dyn crate::datagen::Encoder,
     })
 }
 
+/// Base corpus for the storage cells; the republish comparison reruns at
+/// 4x this size with the same memtable.
+fn storage_docs() -> usize {
+    env_usize("RALMSPEC_BENCH_STORAGE_DOCS", 2_000)
+}
+
+/// Memtable size (docs) held fixed across corpus scales in the republish
+/// cell.
+const STORAGE_MEMTABLE: usize = 64;
+
+/// Max allowed republish-time growth when the corpus quadruples at fixed
+/// memtable. O(memtable) publishing should hold this near 1.0; an
+/// O(corpus) regression lands at ~4.0.
+const MAX_REPUBLISH_RATIO: f64 = 2.0;
+
+/// One storage measurement at a single (retriever, corpus-size) point.
+struct StorageCell {
+    retriever: &'static str,
+    n_docs: usize,
+    /// `SegmentedKb::open` — mmap segments, no index rebuild.
+    cold_load_s: f64,
+    /// In-RAM reference: `LiveKb::build` over the same corpus + rows.
+    ram_build_s: f64,
+    /// Whether every section came up zero-copy (mmap-aligned).
+    mapped: bool,
+    /// Min time to publish a snapshot with [`STORAGE_MEMTABLE`] pending
+    /// docs in the memtable.
+    republish_s: f64,
+}
+
+impl StorageCell {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("retriever", Value::str(self.retriever)),
+            ("n_docs", Value::num(self.n_docs as f64)),
+            ("cold_load_s", Value::num(self.cold_load_s)),
+            ("ram_build_s", Value::num(self.ram_build_s)),
+            ("mapped", Value::Bool(self.mapped)),
+            ("memtable_docs", Value::num(STORAGE_MEMTABLE as f64)),
+            ("republish_s", Value::num(self.republish_s)),
+        ])
+    }
+}
+
+/// The persistent-KB cells (DESIGN.md ADR-009): cold-load (mmap open vs
+/// in-RAM build, recorded, not gated — it is a capability trajectory) and
+/// **republish cost at fixed memtable across a 4x corpus growth**, which
+/// *is* gated: epoch publishing against the segment store must cost
+/// O(memtable), not O(corpus). EDR and SR only — ADR snapshots clone the
+/// master graph (O(corpus) by design, see ADR-009), so the republish
+/// property does not apply to it.
+fn storage_cell(cfg: &Config, kind: RetrieverKind, n_docs: usize,
+                dir: &std::path::Path) -> anyhow::Result<StorageCell> {
+    use crate::datagen::{embed_corpus, embed_doc, Corpus, HashEncoder};
+    use crate::retriever::{MutableRetriever, SegmentedKb};
+    let mut cfg = cfg.clone();
+    cfg.corpus.n_docs = n_docs;
+    // Freezing is the per-ingest path; the republish cell wants the docs
+    // *pending* in the memtable, so the cap stays out of reach.
+    cfg.segment.memtable_docs = usize::MAX / 2;
+    let dim = 32;
+    let enc = HashEncoder::new(dim, cfg.corpus.seed);
+    let corpus = Corpus::generate(&cfg.corpus);
+    let rows = embed_corpus(&enc, &corpus);
+    // A previous aborted gate run may have left a store behind.
+    let _ = std::fs::remove_dir_all(dir);
+    SegmentedKb::create(dir, &cfg, kind, &corpus, &rows, dim)?;
+    let runs = cfg.eval.runs.max(3);
+    let mut cold_load_s = f64::INFINITY;
+    let mut mapped = false;
+    for _ in 0..runs {
+        let t = std::time::Instant::now();
+        let (kb, _) = SegmentedKb::open(dir, &cfg, kind)?;
+        cold_load_s = cold_load_s.min(t.elapsed().as_secs_f64());
+        mapped = kb.all_segments_mapped();
+    }
+    let mut ram_build_s = f64::INFINITY;
+    for _ in 0..runs {
+        let t = std::time::Instant::now();
+        let live = LiveKb::build(&cfg, kind, corpus.clone(), rows.clone(),
+                                 dim);
+        ram_build_s = ram_build_s.min(t.elapsed().as_secs_f64());
+        drop(live);
+    }
+    // Republish: fixed-size memtable on top of the sealed corpus.
+    let (mut kb, corpus) = SegmentedKb::open(dir, &cfg, kind)?;
+    let docs = corpus.synth_docs(0x57, corpus.len() as u32,
+                                 STORAGE_MEMTABLE, (16, 48));
+    let embs: Vec<Vec<f32>> =
+        docs.iter().map(|d| embed_doc(&enc, d)).collect();
+    kb.append(&docs, &embs)?;
+    let mut republish_s = f64::INFINITY;
+    for _ in 0..runs.max(5) {
+        let t = std::time::Instant::now();
+        let snap = kb.snapshot(1);
+        republish_s = republish_s.min(t.elapsed().as_secs_f64());
+        drop(snap);
+    }
+    Ok(StorageCell {
+        retriever: kind.label(),
+        n_docs,
+        cold_load_s,
+        ram_build_s,
+        mapped,
+        republish_s,
+    })
+}
+
+fn storage_cells(cfg: &Config)
+                 -> anyhow::Result<(Vec<StorageCell>, Vec<(String, f64)>)> {
+    let base = storage_docs();
+    let root = std::env::temp_dir()
+        .join(format!("ralmspec-gate-storage-{}", std::process::id()));
+    let mut cells = Vec::new();
+    let mut ratios = Vec::new();
+    for kind in [RetrieverKind::Edr, RetrieverKind::Sr] {
+        let mut at_scale = Vec::new();
+        for (i, n) in [base, 4 * base].into_iter().enumerate() {
+            let dir = root.join(format!("{}-{i}", kind.label()));
+            eprintln!("[gate] storage cell: {} {n} docs...", kind.label());
+            let cell = storage_cell(cfg, kind, n, &dir);
+            let _ = std::fs::remove_dir_all(&dir);
+            let cell = cell?;
+            at_scale.push(cell.republish_s);
+            cells.push(cell);
+        }
+        let ratio = if at_scale[0] > 0.0 {
+            at_scale[1] / at_scale[0]
+        } else {
+            1.0
+        };
+        ratios.push((kind.label().to_string(), ratio));
+    }
+    let _ = std::fs::remove_dir_all(&root);
+    Ok((cells, ratios))
+}
+
 pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     let cfg = gate_config(cfg);
     let out = flags.get("out").unwrap_or("BENCH_PR3.json").to_string();
@@ -395,6 +540,8 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         flags.get("live-out").unwrap_or("BENCH_PR5.json").to_string();
     let kernel_out =
         flags.get("kernel-out").unwrap_or("BENCH_PR6.json").to_string();
+    let storage_out =
+        flags.get("storage-out").unwrap_or("BENCH_PR8.json").to_string();
     let provider = Provider::from_flags(&cfg, flags)?;
     let mut ratios: Vec<Ratio> = Vec::new();
     let mut engine_ratios: Vec<EngineRatio> = Vec::new();
@@ -405,6 +552,10 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     eprintln!("[gate] kernel cells (simd_active={})...",
               kernels::simd_active());
     let kernel_cells = kernel_bench::run_kernel_cells();
+
+    // --- Storage cells (ADR-009): also model-free — segment cold-load
+    // vs in-RAM rebuild, and the O(memtable) republish gate.
+    let (storage, storage_ratios) = storage_cells(&cfg)?;
 
     // --- fig4 trajectory: RaLMSpec+P vs RaLMSeq per QA retriever class.
     // +P (sync, fixed stride) is the most schedule-deterministic variant,
@@ -508,6 +659,50 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     }
     std::fs::write(&kernel_out, kernel_doc.pretty())?;
     println!("[gate] wrote {kernel_out}");
+
+    // --- Storage report + artifact: also model-free, written before the
+    // models-available check. Cold-load is a recorded trajectory; the
+    // republish ratio is gated (publishing must stay O(memtable)).
+    for c in &storage {
+        println!("[gate] storage {:<4} docs={:<6} cold_load={:.4}s \
+                  ram_build={:.4}s mapped={} republish={:.6}s",
+                 c.retriever, c.n_docs, c.cold_load_s, c.ram_build_s,
+                 c.mapped, c.republish_s);
+    }
+    for (kind, ratio) in &storage_ratios {
+        let verdict =
+            if *ratio <= MAX_REPUBLISH_RATIO { "ok" } else { "FAIL" };
+        println!("[gate] storage {kind:<4} republish 4x-corpus ratio \
+                  {ratio:.2}x (max {MAX_REPUBLISH_RATIO:.1}x)  {verdict}");
+        if *ratio > MAX_REPUBLISH_RATIO {
+            failures.push(format!("storage/{kind} republish {ratio:.2}x"));
+        }
+    }
+    let storage_doc = Value::obj(vec![
+        ("gate", Value::str("storage-tier")),
+        ("max_republish_ratio", Value::num(MAX_REPUBLISH_RATIO)),
+        ("base_docs", Value::num(storage_docs() as f64)),
+        ("memtable_docs", Value::num(STORAGE_MEMTABLE as f64)),
+        ("runs", Value::num(cfg.eval.runs as f64)),
+        ("pass", Value::Bool(
+            storage_ratios.iter().all(|(_, r)| *r <= MAX_REPUBLISH_RATIO))),
+        ("republish_ratios", Value::Arr(
+            storage_ratios.iter()
+                .map(|(k, r)| Value::obj(vec![
+                    ("retriever", Value::str(k.clone())),
+                    ("ratio", Value::num(*r)),
+                ]))
+                .collect())),
+        ("cells",
+         Value::Arr(storage.iter().map(|c| c.to_json()).collect())),
+    ]);
+    if let Some(dir) = std::path::Path::new(&storage_out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&storage_out, storage_doc.pretty())?;
+    println!("[gate] wrote {storage_out}");
 
     anyhow::ensure!(!ratios.is_empty(),
                     "bench-gate measured nothing (no models available)");

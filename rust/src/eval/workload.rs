@@ -38,7 +38,7 @@ impl TestBed {
     /// Generate the corpus and embed it with `encoder`.
     pub fn build(cfg: &Config, encoder: &dyn Encoder) -> Self {
         let corpus = Arc::new(Corpus::generate(&cfg.corpus));
-        let data = embed_corpus(encoder, &corpus.docs);
+        let data = embed_corpus(encoder, &corpus);
         let embeddings =
             Arc::new(EmbeddingMatrix::new(encoder.dim(), data));
         Self {

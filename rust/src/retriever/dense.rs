@@ -88,23 +88,23 @@ thread_local! {
 /// makes batched verification near-free for EDR (paper Fig 6a / §A.1).
 pub(crate) fn scan_multi_range(emb: &EmbeddingMatrix, lo: usize, hi: usize,
                                queries: &[&[f32]], heaps: &mut [TopK]) {
-    QT_SCRATCH.with(|cell| {
-        // Reentrancy guard: if a caller somewhere up the stack already
-        // holds this thread's scratch (e.g. a retriever wrapper that
-        // scans inside a scratch-borrowing callback), borrow_mut() would
-        // panic. Fall back to a fresh buffer instead — the scratch only
-        // caches capacity, so results are identical either way.
-        match cell.try_borrow_mut() {
-            Ok(mut qt) => {
-                scan_multi_range_with(emb, lo, hi, queries, heaps,
-                                      &mut qt);
-            }
-            Err(_) => {
-                scan_multi_range_with(emb, lo, hi, queries, heaps,
-                                      &mut Vec::new());
-            }
-        }
+    with_pack_scratch(|qt| {
+        scan_multi_range_with(emb, lo, hi, queries, heaps, qt);
     });
+}
+
+/// Run `f` against this thread's query-pack scratch buffer, with the
+/// reentrancy guard: if a caller somewhere up the stack already holds
+/// this thread's scratch (e.g. a retriever wrapper that scans inside a
+/// scratch-borrowing callback), borrow_mut() would panic — fall back to
+/// a fresh buffer instead. The scratch only caches capacity, so results
+/// are identical either way. Shared with the segment tier's scanner
+/// (`retriever::segment`), which packs through the same buffer.
+pub(crate) fn with_pack_scratch<R>(f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+    QT_SCRATCH.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut qt) => f(&mut qt),
+        Err(_) => f(&mut Vec::new()),
+    })
 }
 
 /// [`scan_multi_range`] with a caller-provided query-pack scratch buffer
@@ -112,9 +112,23 @@ pub(crate) fn scan_multi_range(emb: &EmbeddingMatrix, lo: usize, hi: usize,
 pub(crate) fn scan_multi_range_with(emb: &EmbeddingMatrix, lo: usize,
                                     hi: usize, queries: &[&[f32]],
                                     heaps: &mut [TopK], qt: &mut Vec<f32>) {
-    debug_assert_eq!(queries.len(), heaps.len());
     debug_assert!(lo <= hi && hi <= emb.len());
     let d = emb.dim;
+    scan_rows_with(&emb.data[lo * d..hi * d], d, lo as DocId, queries,
+                   heaps, qt);
+}
+
+/// Scan raw row-major rows (`data.len()` must be a multiple of `dim`),
+/// pushing ids offset by `base` into the per-query heaps. This is the
+/// layout-agnostic core of the EDR scan: the in-RAM matrix path above
+/// slices into it, and the segment tier (`retriever::segment`) feeds it
+/// `f32` views over mmap'd section bytes — one numeric code path, so
+/// segment-backed and in-RAM retrieval are bit-identical by construction.
+pub(crate) fn scan_rows_with(data: &[f32], dim: usize, base: DocId,
+                             queries: &[&[f32]], heaps: &mut [TopK],
+                             qt: &mut Vec<f32>) {
+    debug_assert_eq!(queries.len(), heaps.len());
+    debug_assert_eq!(data.len() % dim.max(1), 0);
     for (block_start, qblock) in (0..queries.len())
         .step_by(LANES)
         .zip(queries.chunks(LANES))
@@ -122,13 +136,13 @@ pub(crate) fn scan_multi_range_with(emb: &EmbeddingMatrix, lo: usize,
         let b = qblock.len();
         // Column-major packed query block, zero-padded to LANES.
         qt.clear();
-        qt.resize(d * LANES, 0.0);
+        qt.resize(dim * LANES, 0.0);
         for (bi, q) in qblock.iter().enumerate() {
             for (j, &v) in q.iter().enumerate() {
                 qt[j * LANES + bi] = v;
             }
         }
-        kernels::scan_block(&emb.data[lo * d..hi * d], d, lo as DocId, qt,
+        kernels::scan_block(data, dim, base, qt,
                             &mut heaps[block_start..block_start + b]);
     }
 }

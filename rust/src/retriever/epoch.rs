@@ -37,6 +37,7 @@
 
 use super::dense::{DenseExact, EmbeddingMatrix};
 use super::hnsw::Hnsw;
+use super::segment::SegmentedKb;
 use super::sparse::Bm25;
 use super::{Retriever, ShardedRetriever};
 use crate::config::{Config, RetrieverKind};
@@ -92,6 +93,21 @@ pub trait MutableRetriever: Send {
     /// Documents currently indexed (pending-but-unpublished docs are not
     /// counted — they live in the [`KbWriter`] until the next publish).
     fn len(&self) -> usize;
+
+    /// Merge internal tiers (segments + memtable) back into one. Returns
+    /// `Ok(true)` if state changed and a fresh snapshot should be
+    /// published. In-RAM backends are always fully merged: the default
+    /// is a no-op.
+    fn compact(&mut self) -> anyhow::Result<bool> {
+        Ok(false)
+    }
+
+    /// How many read tiers the next snapshot will scan. In-RAM backends
+    /// report 1; the segmented backend reports segments plus a non-empty
+    /// memtable (see `retriever::segment`).
+    fn tier_count(&self) -> usize {
+        1
+    }
 }
 
 /// Live exact-dense index ("EDR"): appending is a row append onto the
@@ -426,6 +442,34 @@ impl KbWriter {
         Ok(epoch)
     }
 
+    /// Run one backend compaction pass and, if it merged anything,
+    /// publish the result as a normal epoch (same length, same results —
+    /// only the tier layout changes). Returns whether an epoch was
+    /// published. No-op `Ok(false)` for in-RAM backends.
+    pub fn run_compaction(&mut self) -> anyhow::Result<bool> {
+        if !self.backend.compact()? {
+            return Ok(false);
+        }
+        // Fold the corpus tail into its shared base alongside the
+        // backend merge, so the per-publish corpus clone goes back to
+        // being an Arc bump (O(tail), and the tail is now empty).
+        self.corpus.seal();
+        let epoch = self.epochs.epoch() + 1;
+        self.epochs.publish(EpochSnapshot {
+            epoch,
+            kb: self.backend.snapshot(self.shards),
+            corpus: Arc::new(self.corpus.clone()),
+        });
+        self.stats.epochs_published += 1;
+        Ok(true)
+    }
+
+    /// Read tiers the backend's next snapshot will scan (see
+    /// [`MutableRetriever::tier_count`]).
+    pub fn tier_count(&self) -> usize {
+        self.backend.tier_count()
+    }
+
     pub fn stats(&self) -> IngestStats {
         self.stats
     }
@@ -486,6 +530,35 @@ impl LiveKb {
                                               cfg.ingest.batch));
         Arc::new(LiveKb { epochs, writer })
     }
+
+    /// Like [`LiveKb::build`], but honoring `cfg.segment.kb_dir`: when a
+    /// KB directory is configured the backend is a persistent
+    /// [`SegmentedKb`] (opened from disk if a store exists there, else
+    /// created from `corpus` + `embeddings` and immediately reopened via
+    /// mmap — see DESIGN.md ADR-009). On a warm open the recovered
+    /// corpus replaces the caller's. With no `kb_dir` this is exactly
+    /// `build`.
+    pub fn build_auto(cfg: &Config, kind: RetrieverKind, corpus: Corpus,
+                      embeddings: Vec<f32>, dim: usize)
+                      -> anyhow::Result<Arc<LiveKb>> {
+        let Some(dir) = &cfg.segment.kb_dir else {
+            return Ok(Self::build(cfg, kind, corpus, embeddings, dim));
+        };
+        let (backend, corpus) =
+            SegmentedKb::open_or_create(dir, cfg, kind, &corpus,
+                                        &embeddings, dim)?;
+        let backend: Box<dyn MutableRetriever> = Box::new(backend);
+        let shards = cfg.retriever.shards.max(1);
+        let epochs = Arc::new(EpochKb::new(EpochSnapshot {
+            epoch: 0,
+            kb: backend.snapshot(shards),
+            corpus: Arc::new(corpus.clone()),
+        }));
+        let writer = Mutex::new(KbWriter::new(epochs.clone(), backend,
+                                              corpus, shards,
+                                              cfg.ingest.batch));
+        Ok(Arc::new(LiveKb { epochs, writer }))
+    }
 }
 
 #[cfg(test)]
@@ -512,7 +585,7 @@ mod tests {
         cfg.ingest.batch = 4;
         let corpus = Corpus::generate(&cfg.corpus);
         let enc = HashEncoder::new(DIM, 0xE6);
-        let data = embed_corpus(&enc, &corpus.docs);
+        let data = embed_corpus(&enc, &corpus);
         (cfg, corpus, data, enc)
     }
 
@@ -582,7 +655,7 @@ mod tests {
                 c.append(fresh);
                 c
             };
-            let big_data = embed_corpus(&enc, &big.docs);
+            let big_data = embed_corpus(&enc, &big);
             let rebuilt =
                 LiveKb::build(&cfg, kind, big.clone(), big_data, DIM);
             let reference = rebuilt.epochs.snapshot();

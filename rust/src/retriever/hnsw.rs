@@ -800,6 +800,30 @@ mod tests {
     }
 
     #[test]
+    fn export_import_roundtrip() {
+        // The persistent CSR form is complete: a graph rebuilt from its
+        // export searches bit-identically (the segment tier's ADR
+        // cold-load path rests on this).
+        let emb = clustered_matrix(300, 16, 6, 15);
+        let built = Hnsw::build(emb.clone(), 8, 40, 32, 7);
+        let reloaded = Hnsw::import_csr(emb, 32, built.export_csr());
+        assert!(reloaded.is_sealed());
+        assert_eq!(built.entry, reloaded.entry);
+        assert_eq!(built.debug_nested(), reloaded.debug_nested());
+        let mut rng = Rng::new(20);
+        for _ in 0..5 {
+            let q = SpecQuery::dense_only(rng.unit_vector(16));
+            let a = built.retrieve_topk(&q, 8);
+            let b = reloaded.retrieve_topk(&q, 8);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+    }
+
+    #[test]
     fn single_node_graph() {
         let emb = clustered_matrix(1, 8, 1, 11);
         let hnsw = Hnsw::build(emb, 4, 10, 10, 12);
@@ -809,7 +833,84 @@ mod tests {
     }
 }
 
+/// The sealed graph's complete persistent state (CSR adjacency + build
+/// parameters + entry point) — what the segment layer serializes. A
+/// graph round-tripped through export/import searches bit-identically:
+/// both forms hold byte-identical neighbor lists and the same walk
+/// parameters (pinned by `export_import_roundtrip`).
+pub(crate) struct CsrExport {
+    pub m: usize,
+    pub m0: usize,
+    pub ef_construction: usize,
+    pub seed: u64,
+    pub entry: u32,
+    pub max_level: usize,
+    /// node_levels[v] = number of layers node v participates in.
+    pub node_levels: Vec<u32>,
+    /// Per layer: (offsets [n+1], packed neighbor ids).
+    pub levels: Vec<(Vec<u32>, Vec<u32>)>,
+}
+
 impl Hnsw {
+    /// Snapshot the graph as its flat persistent form. A nested (thawed)
+    /// adjacency is compacted on the fly — sealing is a pure re-layout,
+    /// so the export is identical either way.
+    pub(crate) fn export_csr(&self) -> CsrExport {
+        let csr_owned;
+        let csr = match &self.adj {
+            Adjacency::Csr(c) => c,
+            Adjacency::Nested(n) => {
+                csr_owned = CsrGraph::from_nested(n);
+                &csr_owned
+            }
+        };
+        CsrExport {
+            m: self.m,
+            m0: self.m0,
+            ef_construction: self.ef_construction,
+            seed: self.seed,
+            entry: self.entry,
+            max_level: self.max_level,
+            node_levels: csr.node_levels.clone(),
+            levels: csr
+                .levels
+                .iter()
+                .map(|l| (l.offsets.clone(), l.packed.clone()))
+                .collect(),
+        }
+    }
+
+    /// Reconstruct a sealed graph from its persistent form. `ef_search`
+    /// is a serving-time knob (not part of the graph), so the caller
+    /// supplies it from config like [`Hnsw::build`] does.
+    pub(crate) fn import_csr(emb: Arc<EmbeddingMatrix>, ef_search: usize,
+                             parts: CsrExport) -> Self {
+        assert_eq!(parts.node_levels.len(), emb.len(),
+                   "graph/matrix node count mismatch");
+        for (offsets, _) in &parts.levels {
+            assert_eq!(offsets.len(), parts.node_levels.len() + 1,
+                       "CSR offsets must be n + 1 long");
+        }
+        Self {
+            emb,
+            m: parts.m,
+            m0: parts.m0,
+            ef_search,
+            ef_construction: parts.ef_construction,
+            seed: parts.seed,
+            entry: parts.entry,
+            max_level: parts.max_level,
+            adj: Adjacency::Csr(CsrGraph {
+                node_levels: parts.node_levels,
+                levels: parts
+                    .levels
+                    .into_iter()
+                    .map(|(offsets, packed)| CsrLevel { offsets, packed })
+                    .collect(),
+            }),
+        }
+    }
+
     /// BFS reachability at layer 0 from the entry point (debug/tests).
     pub fn debug_reachable(&self) -> usize {
         let mut seen = vec![false; self.n_nodes()];

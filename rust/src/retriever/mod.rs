@@ -37,6 +37,14 @@
 //! [`epoch::EpochKb`] — serving reads stay lock-free against pinned
 //! snapshots while a [`epoch::KbWriter`] ingests new documents.
 //!
+//! [`segment`] adds the persistent, memory-bounded tier under the same
+//! epoch machinery (DESIGN.md ADR-009): immutable mmap-backed segments
+//! (docs/FORMAT.md) plus an in-RAM memtable, snapshotted as tiered
+//! retrievers whose results are bit-identical to the in-RAM backends,
+//! with a background [`segment::CompactionWorker`] folding tiers back
+//! into one segment. Republishing an epoch costs O(memtable), not
+//! O(corpus).
+//!
 //! [`kernels`] holds the scoring primitives all of the above call into
 //! (DESIGN.md ADR-007): one dot-product / multi-query-scan / L2 kernel
 //! with a scalar form and runtime-dispatched AVX2/NEON forms that are
@@ -49,12 +57,14 @@ pub mod epoch;
 pub mod hnsw;
 pub mod kernels;
 pub mod pool;
+pub mod segment;
 pub mod sharded;
 pub mod sparse;
 
 pub use epoch::{EpochKb, EpochSnapshot, KbWriter, LiveKb,
                 MutableRetriever};
 pub use pool::{JobHandle, WorkerPool};
+pub use segment::{CompactionWorker, Segment, SegmentStore, SegmentedKb};
 pub use sharded::{ShardStrategy, Shardable, ShardedRetriever};
 
 use crate::util::Scored;

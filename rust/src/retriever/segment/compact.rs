@@ -1,0 +1,93 @@
+//! Background merge/compaction worker.
+//!
+//! The worker owns a dedicated thread that periodically inspects a
+//! [`LiveKb`]'s writer: when the backend reports more than `min_tiers`
+//! tiers (segments plus a non-empty memtable), it runs one compaction
+//! pass, which merges everything into a single segment and publishes
+//! the result as a normal epoch. Serving threads never block on the
+//! merge itself — they only contend on the writer mutex for the final
+//! publish, exactly as they do for an ingest flush.
+//!
+//! Pacing uses `recv_timeout` on the stop channel rather than a bare
+//! `sleep` so that [`CompactionWorker::stop`] (and `Drop`) interrupt
+//! the wait immediately instead of after up to one full interval.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::retriever::epoch::LiveKb;
+
+/// Handle to the background compaction thread. Dropping the handle
+/// stops the thread (send + join); [`CompactionWorker::stop`] does the
+/// same explicitly so shutdown ordering can be controlled.
+///
+/// ```
+/// use ralmspec::config::Config;
+/// use ralmspec::config::RetrieverKind;
+/// use ralmspec::datagen::{embed_corpus, Corpus, HashEncoder};
+/// use ralmspec::retriever::epoch::LiveKb;
+/// use ralmspec::retriever::segment::CompactionWorker;
+///
+/// let mut cfg = Config::default();
+/// cfg.corpus.n_docs = 40;
+/// cfg.corpus.vocab = 512;
+/// cfg.corpus.n_topics = 8;
+/// let corpus = Corpus::generate(&cfg.corpus);
+/// let enc = HashEncoder::new(16, cfg.corpus.seed);
+/// let emb = embed_corpus(&enc, &corpus);
+/// let live = LiveKb::build(&cfg, RetrieverKind::Edr, corpus, emb, 16);
+///
+/// // Spawn, then stop: the worker exits promptly even mid-interval.
+/// let mut worker = CompactionWorker::spawn(live, 50, 2);
+/// worker.stop();
+/// ```
+pub struct CompactionWorker {
+    stop_tx: Option<mpsc::Sender<()>>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl CompactionWorker {
+    /// Start the worker. Every `interval_ms` it locks the writer and, if
+    /// the backend reports at least `min_tiers` tiers, runs one
+    /// compaction pass (a no-op `Ok(false)` for in-RAM backends).
+    pub fn spawn(live: Arc<LiveKb>, interval_ms: u64,
+                 min_tiers: usize) -> CompactionWorker {
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        // Compaction epochs are content-identical to the tiers they
+        // replace, so publish timing cannot change results (this file is
+        // on the ADR-008 nondet-source whitelist for exactly that reason).
+        // detlint: allow(nondet-source, reason = "dedicated maintenance thread; timing only picks when a content-identical epoch publishes")
+        let handle = thread::spawn(move || loop {
+            match stop_rx.recv_timeout(Duration::from_millis(
+                interval_ms.max(1))) {
+                Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+            }
+            let Ok(mut w) = live.writer.lock() else { break };
+            if w.tier_count() >= min_tiers {
+                // Failure is not fatal to serving: the tiered snapshot
+                // stays live and the next tick retries.
+                let _ = w.run_compaction();
+            }
+        });
+        CompactionWorker { stop_tx: Some(stop_tx), handle: Some(handle) }
+    }
+
+    /// Signal the thread and wait for it to exit. Idempotent.
+    pub fn stop(&mut self) {
+        if let Some(tx) = self.stop_tx.take() {
+            let _ = tx.send(());
+        }
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for CompactionWorker {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}

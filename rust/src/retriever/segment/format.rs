@@ -1,0 +1,515 @@
+//! The `RSEG` on-disk container: versioned magic/header, a checksummed
+//! section table, and 16-byte-aligned little-endian payload sections.
+//!
+//! `docs/FORMAT.md` is the byte-for-byte normative spec for this file
+//! layout; the `format_spec_matches_impl` test asserts the constants and
+//! offsets documented there against this serializer, so spec and
+//! implementation cannot drift apart silently.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! [0..4)        magic "RSEG"
+//! [4..8)        format version (u32, currently 1)
+//! [8..12)       section count k (u32)
+//! [12..16)      pad (u32, zero)
+//! [16..16+32k)  section table, one 32-byte entry per section:
+//!                 +0  tag (u32)      +4  pad (u32, zero)
+//!                 +8  offset (u64)   +16 len (u64)
+//!                 +24 checksum (u64, FNV-1a 64 of the payload bytes)
+//! [16+32k..24+32k)  table checksum (u64, FNV-1a 64 of the table bytes)
+//! ...           payload sections, each 16-byte aligned, zero padding
+//!               between sections
+//! ```
+//!
+//! Readers validate magic, version, bounds, the table checksum, and every
+//! per-section checksum before any payload byte is interpreted — a torn
+//! or truncated write is rejected wholesale at open, which is what lets
+//! [`super::store::SegmentStore`] fall back to the previous manifest.
+
+use crate::runtime::Blob;
+use std::sync::Arc;
+
+/// File magic, bytes `[0..4)` of every segment.
+pub const MAGIC: [u8; 4] = *b"RSEG";
+/// Format version, bytes `[4..8)`.
+pub const VERSION: u32 = 1;
+/// Fixed header length in bytes (magic + version + count + pad).
+pub const HEADER_LEN: usize = 16;
+/// One section-table entry: tag, pad, offset, len, checksum.
+pub const SECTION_ENTRY_LEN: usize = 32;
+/// Every payload section starts on a multiple of this (so `f32`/`u32`
+/// views over an mmap'ed file are always correctly aligned).
+pub const SECTION_ALIGN: usize = 16;
+/// FNV-1a 64 offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64 prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Segment metadata (kind, doc range, dims, total doc length).
+pub const TAG_META: u32 = 1;
+/// Raw documents: token offsets, topics, packed token ids.
+pub const TAG_DOCS: u32 = 2;
+/// Dense embedding rows (`(doc_hi - doc_lo) * dim` little-endian f32s).
+pub const TAG_DENSE: u32 = 3;
+/// Packed BM25 postings: per-term offsets, global doc ids, term freqs.
+pub const TAG_POSTINGS: u32 = 4;
+/// Per-document token counts (u32 each).
+pub const TAG_DOCLEN: u32 = 5;
+/// Per-document sorted (term, tf) stats: offsets, terms, tfs.
+pub const TAG_DOCTERMS: u32 = 6;
+/// Sealed HNSW CSR adjacency (full-range ADR segments only).
+pub const TAG_GRAPH: u32 = 7;
+
+/// FNV-1a 64 over `bytes` — the only checksum the format uses.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Round `n` up to the next multiple of `align` (a power of two).
+pub(crate) fn align_up(n: usize, align: usize) -> usize {
+    (n + align - 1) & !(align - 1)
+}
+
+// ---------------------------------------------------------------------
+// Little-endian encode helpers (writer side).
+
+pub(crate) fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn push_u32s(out: &mut Vec<u8>, vals: &[u32]) {
+    for &v in vals {
+        push_u32(out, v);
+    }
+}
+
+pub(crate) fn push_u16s(out: &mut Vec<u8>, vals: &[u16]) {
+    for &v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub(crate) fn push_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    for &v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bounds-checked little-endian decode helpers (reader side).
+
+fn slice_at<'a>(b: &'a [u8], off: usize, len: usize)
+                -> anyhow::Result<&'a [u8]> {
+    b.get(off..off.checked_add(len).unwrap_or(usize::MAX))
+        .ok_or_else(|| anyhow::anyhow!(
+            "segment truncated: need [{off}, {off}+{len}) of {}", b.len()))
+}
+
+pub(crate) fn get_u32(b: &[u8], off: usize) -> anyhow::Result<u32> {
+    let s = slice_at(b, off, 4)?;
+    Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+}
+
+pub(crate) fn get_u64(b: &[u8], off: usize) -> anyhow::Result<u64> {
+    let s = slice_at(b, off, 8)?;
+    Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+}
+
+/// Decode `n` little-endian u32s starting at `off`.
+pub(crate) fn decode_u32s(b: &[u8], off: usize, n: usize)
+                          -> anyhow::Result<Vec<u32>> {
+    let s = slice_at(b, off, n * 4)?;
+    Ok((0..n)
+        .map(|i| u32::from_le_bytes([s[4 * i], s[4 * i + 1],
+                                     s[4 * i + 2], s[4 * i + 3]]))
+        .collect())
+}
+
+pub(crate) fn decode_u16s(b: &[u8], off: usize, n: usize)
+                          -> anyhow::Result<Vec<u16>> {
+    let s = slice_at(b, off, n * 2)?;
+    Ok((0..n)
+        .map(|i| u16::from_le_bytes([s[2 * i], s[2 * i + 1]]))
+        .collect())
+}
+
+pub(crate) fn decode_f32s(b: &[u8], off: usize, n: usize)
+                          -> anyhow::Result<Vec<f32>> {
+    let s = slice_at(b, off, n * 4)?;
+    Ok((0..n)
+        .map(|i| f32::from_le_bytes([s[4 * i], s[4 * i + 1],
+                                     s[4 * i + 2], s[4 * i + 3]]))
+        .collect())
+}
+
+// ---------------------------------------------------------------------
+// Writer.
+
+/// Assembles one segment file: push payload sections, then [`finish`]
+/// lays out header + checksummed table + aligned payloads.
+///
+/// [`finish`]: SegmentWriter::finish
+pub(crate) struct SegmentWriter {
+    sections: Vec<(u32, Vec<u8>)>,
+}
+
+impl SegmentWriter {
+    pub fn new() -> Self {
+        Self { sections: Vec::new() }
+    }
+
+    pub fn push_section(&mut self, tag: u32, payload: Vec<u8>) {
+        debug_assert!(!self.sections.iter().any(|(t, _)| *t == tag),
+                      "duplicate section tag {tag}");
+        self.sections.push((tag, payload));
+    }
+
+    /// Serialize to the final byte image (see the module docs for the
+    /// layout).
+    pub fn finish(self) -> Vec<u8> {
+        let k = self.sections.len();
+        let table_end = HEADER_LEN + k * SECTION_ENTRY_LEN + 8;
+        // Assign aligned payload offsets.
+        let mut offsets = Vec::with_capacity(k);
+        let mut off = align_up(table_end, SECTION_ALIGN);
+        for (_, payload) in &self.sections {
+            offsets.push(off);
+            off = align_up(off + payload.len(), SECTION_ALIGN);
+        }
+        let total = offsets
+            .last()
+            .map(|&o| {
+                // Snapshot of `off` before its final align_up would also
+                // work; recompute from the last section for clarity.
+                let last_len = self.sections[k - 1].1.len();
+                o + last_len
+            })
+            .unwrap_or(table_end);
+
+        let mut out = Vec::with_capacity(total);
+        out.extend_from_slice(&MAGIC);
+        push_u32(&mut out, VERSION);
+        push_u32(&mut out, k as u32);
+        push_u32(&mut out, 0); // pad
+
+        let mut table = Vec::with_capacity(k * SECTION_ENTRY_LEN);
+        for (i, (tag, payload)) in self.sections.iter().enumerate() {
+            push_u32(&mut table, *tag);
+            push_u32(&mut table, 0); // pad
+            push_u64(&mut table, offsets[i] as u64);
+            push_u64(&mut table, payload.len() as u64);
+            push_u64(&mut table, fnv1a64(payload));
+        }
+        let table_sum = fnv1a64(&table);
+        out.extend_from_slice(&table);
+        push_u64(&mut out, table_sum);
+
+        for (i, (_, payload)) in self.sections.iter().enumerate() {
+            out.resize(offsets[i], 0); // zero pad up to the aligned start
+            out.extend_from_slice(payload);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader.
+
+#[derive(Debug, Clone, Copy)]
+struct SectionEntry {
+    tag: u32,
+    off: usize,
+    len: usize,
+}
+
+/// A parsed, checksum-validated segment file over its backing [`Blob`].
+///
+/// Parsing validates everything up front (magic, version, table bounds,
+/// table checksum, per-section bounds and checksums); accessors after a
+/// successful parse cannot fail on corruption.
+pub(crate) struct SegmentFile {
+    pub blob: Arc<Blob>,
+    sections: Vec<SectionEntry>,
+}
+
+impl SegmentFile {
+    pub fn parse(blob: Arc<Blob>) -> anyhow::Result<Self> {
+        let b = blob.bytes();
+        let magic = slice_at(b, 0, 4)?;
+        anyhow::ensure!(magic == MAGIC, "bad segment magic {magic:02x?}");
+        let version = get_u32(b, 4)?;
+        anyhow::ensure!(version == VERSION,
+                        "unsupported segment version {version}");
+        let k = get_u32(b, 8)? as usize;
+        let table_off = HEADER_LEN;
+        let table_len = k * SECTION_ENTRY_LEN;
+        let table = slice_at(b, table_off, table_len)?;
+        let stored_sum = get_u64(b, table_off + table_len)?;
+        anyhow::ensure!(fnv1a64(table) == stored_sum,
+                        "segment section table checksum mismatch");
+        let mut sections = Vec::with_capacity(k);
+        for i in 0..k {
+            let e = table_off + i * SECTION_ENTRY_LEN;
+            let tag = get_u32(b, e)?;
+            let off = get_u64(b, e + 8)?;
+            let len = get_u64(b, e + 16)?;
+            let sum = get_u64(b, e + 24)?;
+            let off = usize::try_from(off)
+                .map_err(|_| anyhow::anyhow!("section offset overflow"))?;
+            let len = usize::try_from(len)
+                .map_err(|_| anyhow::anyhow!("section len overflow"))?;
+            anyhow::ensure!(off % SECTION_ALIGN == 0,
+                            "section {tag} offset {off} unaligned");
+            let payload = slice_at(b, off, len)?;
+            anyhow::ensure!(fnv1a64(payload) == sum,
+                            "section {tag} checksum mismatch");
+            anyhow::ensure!(
+                !sections.iter().any(|s: &SectionEntry| s.tag == tag),
+                "duplicate section tag {tag}");
+            sections.push(SectionEntry { tag, off, len });
+        }
+        Ok(Self { blob, sections })
+    }
+
+    /// (offset, len) of the section with `tag`, if present.
+    pub fn section(&self, tag: u32) -> Option<(usize, usize)> {
+        self.sections
+            .iter()
+            .find(|s| s.tag == tag)
+            .map(|s| (s.off, s.len))
+    }
+
+    pub fn require(&self, tag: u32) -> anyhow::Result<(usize, usize)> {
+        self.section(tag)
+            .ok_or_else(|| anyhow::anyhow!("segment missing section {tag}"))
+    }
+
+    /// The raw payload bytes of a section already validated by `parse`.
+    pub fn payload(&self, off: usize, len: usize) -> &[u8] {
+        &self.blob.bytes()[off..off + len]
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed views: zero-copy slices over mapped section bytes where the
+// platform allows it, decoded owned vectors otherwise. Constructors
+// validate alignment once; on big-endian hosts every view decodes (the
+// on-disk format is little-endian).
+
+macro_rules! typed_view {
+    ($name:ident, $ty:ty, $decode:ident, $width:expr) => {
+        /// A typed view over one packed array inside a segment section:
+        /// `Mapped` borrows the (aligned) mmap'ed bytes zero-copy,
+        /// `Owned` holds decoded values (heap-read fallback, misaligned
+        /// bytes, big-endian hosts, or frozen in-RAM memtable tiers).
+        #[derive(Clone)]
+        pub(crate) enum $name {
+            Mapped { blob: Arc<Blob>, off: usize, n: usize },
+            Owned(Arc<Vec<$ty>>),
+        }
+
+        impl $name {
+            /// View `n` values at byte offset `off` inside `blob`,
+            /// borrowing zero-copy when the bytes are properly aligned
+            /// (mmap + 16-byte section alignment guarantees this on the
+            /// mapped path) and decoding otherwise.
+            pub fn from_blob(blob: &Arc<Blob>, off: usize, n: usize)
+                             -> anyhow::Result<Self> {
+                let bytes = blob
+                    .bytes()
+                    .get(off..off + n * $width)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "typed view out of section bounds"))?;
+                #[cfg(target_endian = "little")]
+                {
+                    // SAFETY: align_to on POD scalar types; we only
+                    // inspect the split, never transmute invalid values
+                    // (all bit patterns are valid for u16/u32/f32).
+                    let (pre, mid, post) =
+                        unsafe { bytes.align_to::<$ty>() };
+                    if pre.is_empty() && post.is_empty() && mid.len() == n {
+                        return Ok(Self::Mapped {
+                            blob: blob.clone(),
+                            off,
+                            n,
+                        });
+                    }
+                }
+                Ok(Self::Owned(Arc::new($decode(bytes, 0, n)?)))
+            }
+
+            /// Wrap already-decoded values (memtable tiers).
+            pub fn owned(vals: Vec<$ty>) -> Self {
+                Self::Owned(Arc::new(vals))
+            }
+
+            pub fn as_slice(&self) -> &[$ty] {
+                match self {
+                    Self::Mapped { blob, off, n } => {
+                        let bytes =
+                            &blob.bytes()[*off..*off + *n * $width];
+                        // SAFETY: alignment and length were validated in
+                        // `from_blob`; the blob is immutable and outlives
+                        // `&self`; all bit patterns are valid values.
+                        let (pre, mid, post) =
+                            unsafe { bytes.align_to::<$ty>() };
+                        debug_assert!(pre.is_empty() && post.is_empty());
+                        debug_assert_eq!(mid.len(), *n);
+                        mid
+                    }
+                    Self::Owned(v) => v,
+                }
+            }
+
+            pub fn len(&self) -> usize {
+                match self {
+                    Self::Mapped { n, .. } => *n,
+                    Self::Owned(v) => v.len(),
+                }
+            }
+        }
+    };
+}
+
+typed_view!(F32View, f32, decode_f32s, 4);
+typed_view!(U32View, u32, decode_u32s, 4);
+typed_view!(U16View, u16, decode_u16s, 2);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_file() -> Vec<u8> {
+        let mut w = SegmentWriter::new();
+        let mut meta = Vec::new();
+        push_u32(&mut meta, 7);
+        w.push_section(TAG_META, meta);
+        let mut dense = Vec::new();
+        push_f32s(&mut dense, &[1.0, -2.5, 3.25]);
+        w.push_section(TAG_DENSE, dense);
+        w.finish()
+    }
+
+    #[test]
+    fn roundtrip_parses_and_reads() {
+        let bytes = sample_file();
+        let f = SegmentFile::parse(Arc::new(Blob::from_vec(bytes))).unwrap();
+        let (off, len) = f.require(TAG_META).unwrap();
+        assert_eq!(len, 4);
+        assert_eq!(get_u32(f.payload(off, len), 0).unwrap(), 7);
+        let (doff, dlen) = f.require(TAG_DENSE).unwrap();
+        assert_eq!(dlen, 12);
+        let v = F32View::from_blob(&f.blob, doff, 3).unwrap();
+        assert_eq!(v.as_slice(), &[1.0, -2.5, 3.25]);
+        assert!(f.section(TAG_GRAPH).is_none());
+    }
+
+    #[test]
+    fn header_layout_is_as_documented() {
+        let bytes = sample_file();
+        assert_eq!(&bytes[0..4], b"RSEG");
+        assert_eq!(get_u32(&bytes, 4).unwrap(), VERSION);
+        assert_eq!(get_u32(&bytes, 8).unwrap(), 2); // section count
+        assert_eq!(get_u32(&bytes, 12).unwrap(), 0); // pad
+        // First table entry starts at HEADER_LEN; its offset field is
+        // 16-byte aligned and past the table + table checksum.
+        let off0 = get_u64(&bytes, HEADER_LEN + 8).unwrap() as usize;
+        assert_eq!(off0 % SECTION_ALIGN, 0);
+        assert!(off0 >= HEADER_LEN + 2 * SECTION_ENTRY_LEN + 8);
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let good = sample_file();
+        // Flip one payload byte: the per-section checksum catches it.
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        assert!(SegmentFile::parse(Arc::new(Blob::from_vec(bad))).is_err());
+        // Truncate mid-payload: bounds check catches it.
+        let mut short = good.clone();
+        short.truncate(good.len() - 4);
+        assert!(
+            SegmentFile::parse(Arc::new(Blob::from_vec(short))).is_err());
+        // Corrupt the table itself: the table checksum catches it.
+        let mut tbl = good.clone();
+        tbl[HEADER_LEN] ^= 0x01;
+        assert!(SegmentFile::parse(Arc::new(Blob::from_vec(tbl))).is_err());
+        // Wrong magic.
+        let mut magic = good;
+        magic[0] = b'X';
+        assert!(
+            SegmentFile::parse(Arc::new(Blob::from_vec(magic))).is_err());
+    }
+
+    #[test]
+    fn views_decode_owned_when_unaligned() {
+        // An Owned copy from a deliberately misaligned byte offset must
+        // still produce the right values (this is the heap-read and
+        // big-endian fallback path).
+        let mut bytes = vec![0u8; 1];
+        push_u32s(&mut bytes, &[10, 20, 30]);
+        let blob = Arc::new(Blob::from_vec(bytes));
+        let v = U32View::from_blob(&blob, 1, 3).unwrap();
+        assert_eq!(v.as_slice(), &[10, 20, 30]);
+        assert_eq!(v.len(), 3);
+    }
+
+    #[test]
+    fn fnv_vector() {
+        // FNV-1a 64 test vectors (empty string hashes to the offset
+        // basis; "a" to the classic published value).
+        assert_eq!(fnv1a64(b""), FNV_OFFSET);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn format_spec_matches_impl() {
+        // docs/FORMAT.md is the normative spec: every constant the
+        // serializer uses must appear there verbatim, so the document
+        // cannot drift from the implementation.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"),
+                           "/../docs/FORMAT.md");
+        let spec = std::fs::read_to_string(path)
+            .expect("docs/FORMAT.md must exist next to the rust crate");
+        for needle in [
+            "`RSEG`",
+            "version: 1",
+            "0xcbf29ce484222325",
+            "0x100000001b3",
+            "32-byte",
+            "16-byte",
+            "little-endian",
+            "META = 1",
+            "DOCS = 2",
+            "DENSE = 3",
+            "POSTINGS = 4",
+            "DOCLEN = 5",
+            "DOCTERMS = 6",
+            "GRAPH = 7",
+        ] {
+            assert!(spec.contains(needle),
+                    "docs/FORMAT.md lost required spec text: {needle}");
+        }
+        // And the documented numerology matches the code.
+        assert_eq!(HEADER_LEN, 16);
+        assert_eq!(SECTION_ENTRY_LEN, 32);
+        assert_eq!(SECTION_ALIGN, 16);
+        assert_eq!(FNV_OFFSET, 0xcbf29ce484222325);
+        assert_eq!(FNV_PRIME, 0x100000001b3);
+        assert_eq!(
+            [TAG_META, TAG_DOCS, TAG_DENSE, TAG_POSTINGS, TAG_DOCLEN,
+             TAG_DOCTERMS, TAG_GRAPH],
+            [1, 2, 3, 4, 5, 6, 7]);
+    }
+}

@@ -1,0 +1,740 @@
+//! Segment-based persistent knowledge-base tier (DESIGN.md ADR-009).
+//!
+//! The in-RAM mutable backends (`retriever::epoch`) rebuild or clone
+//! O(corpus) state per publish and lose everything on restart. This
+//! module adds the tiered, persistent, memory-bounded alternative:
+//!
+//! * **[`store`]** — immutable on-disk segments in the `RSEG` container
+//!   format (`docs/FORMAT.md`): versioned magic/header, per-section
+//!   FNV-1a checksums, zero-copy mmap loading via the runtime [`Blob`],
+//!   with a numbered-manifest commit protocol whose recovery path
+//!   tolerates torn writes (newest fully-validating manifest wins).
+//! * **[`SegmentedKb`]** — a [`MutableRetriever`] whose ingest lands in
+//!   a bounded in-RAM **memtable**; when full, the memtable is frozen to
+//!   a new segment. Publishing an epoch snapshot costs O(memtable +
+//!   vocab), not O(corpus): sealed tiers are shared views over mmap'd
+//!   sections, only the memtable overlay is copied.
+//! * **[`tiered`]** — the read path: per-tier scans into shared top-k
+//!   heaps, bit-identical to the monolithic in-RAM indexes for all three
+//!   backends (EDR/ADR/SR).
+//! * **[`CompactionWorker`]** — a background thread that periodically
+//!   merges segments + memtable back into one full-range segment,
+//!   bounding tier count (and, for ADR, re-persisting the HNSW graph).
+//!
+//! The epoch/pinning machinery (ADR-006) is reused unchanged: a
+//! [`SegmentedKb`] is just another `MutableRetriever` behind
+//! [`KbWriter`], and its snapshots are ordinary `Arc<dyn Retriever>`s.
+//!
+//! Durability note: the memtable is volatile (no WAL). A crash loses
+//! documents ingested since the last freeze/compaction — the recovery
+//! guarantee is that the store reopens at the newest *consistent*
+//! manifest, never a torn one. See `docs/PERSISTENCE.md`.
+//!
+//! [`Blob`]: crate::runtime::Blob
+//! [`KbWriter`]: crate::retriever::epoch::KbWriter
+//! [`MutableRetriever`]: crate::retriever::epoch::MutableRetriever
+
+mod compact;
+mod format;
+mod store;
+mod tiered;
+
+pub use compact::CompactionWorker;
+pub use format::fnv1a64;
+pub use store::{Segment, SegmentStore};
+pub use tiered::{TieredDense, TieredDenseShard, TieredSparse,
+                 TieredSparseShard};
+
+use crate::config::{Config, RetrieverKind};
+use crate::datagen::corpus::{Corpus, Document};
+use crate::retriever::dense::EmbeddingMatrix;
+use crate::retriever::epoch::MutableRetriever;
+use crate::retriever::hnsw::Hnsw;
+use crate::retriever::sparse::{bm25_idf, doc_term_stats};
+use crate::retriever::Retriever;
+use std::path::Path;
+use std::sync::Arc;
+use store::{build_segment_bytes, SegmentBuild};
+use tiered::maybe_shard;
+
+/// The bounded in-RAM write buffer absorbing ingest between freezes.
+#[derive(Default)]
+struct Memtable {
+    docs: Vec<Document>,
+    /// Dense rows (EDR/ADR), `docs.len() * dim`.
+    rows: Vec<f32>,
+    /// Per-doc sorted (term, tf) stats (SR).
+    doc_terms: Vec<Vec<(u32, u16)>>,
+    /// Memtable-only document frequency per term (SR), vocab-sized.
+    df: Vec<u32>,
+    total_len: u64,
+}
+
+impl Memtable {
+    fn clear(&mut self) {
+        self.docs.clear();
+        self.rows.clear();
+        self.doc_terms.clear();
+        for d in self.df.iter_mut() {
+            *d = 0;
+        }
+        self.total_len = 0;
+    }
+}
+
+/// Tiered, persistent knowledge base: mmap'd segments + memtable, a
+/// drop-in [`MutableRetriever`] whose epoch publish is O(memtable).
+///
+/// ```
+/// use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+/// use ralmspec::datagen::embedding::{embed_corpus, HashEncoder};
+/// use ralmspec::datagen::{Corpus, Document};
+/// use ralmspec::retriever::segment::SegmentedKb;
+/// use ralmspec::retriever::MutableRetriever;
+///
+/// let mut cfg = Config::default();
+/// cfg.corpus = CorpusConfig { n_docs: 60, n_topics: 4, doc_len: (8, 16),
+///                             ..CorpusConfig::default() };
+/// let corpus = Corpus::generate(&cfg.corpus);
+/// let enc = HashEncoder::new(16, 3);
+/// let rows = embed_corpus(&enc, &corpus);
+/// let dir = std::env::temp_dir()
+///     .join(format!("ralmspec-segkb-doc-{}", std::process::id()));
+/// let _ = std::fs::remove_dir_all(&dir);
+///
+/// // First run: builds the store on disk, then reopens it (mmap path).
+/// let (mut kb, recovered) = SegmentedKb::open_or_create(
+///     &dir, &cfg, RetrieverKind::Edr, &corpus, &rows, 16).unwrap();
+/// assert_eq!(recovered.len(), 60);
+///
+/// // Ingest lands in the memtable; snapshots see it immediately.
+/// let doc = Document { id: 60, topic: 0, tokens: vec![70, 71, 72] };
+/// kb.append(&[doc], &[vec![0.25; 16]]).unwrap();
+/// assert_eq!(kb.len(), 61);
+/// assert_eq!(kb.snapshot(1).len(), 61);
+///
+/// // Compaction folds segments + memtable into one full-range segment.
+/// assert!(kb.compact().unwrap());
+/// assert_eq!(kb.tier_count(), 1);
+/// std::fs::remove_dir_all(&dir).unwrap();
+/// ```
+pub struct SegmentedKb {
+    kind: RetrieverKind,
+    dim: usize,
+    vocab: usize,
+    k1: f32,
+    b: f32,
+    hnsw_m: usize,
+    hnsw_efc: usize,
+    hnsw_efs: usize,
+    hnsw_seed: u64,
+    memtable_cap: usize,
+    store: SegmentStore,
+    mem: Memtable,
+    /// Docs frozen into segments (memtable docs not included).
+    sealed_len: usize,
+    /// Token count across sealed segments.
+    sealed_total_len: u64,
+    /// Document frequency per term across sealed segments (SR).
+    sealed_df: Vec<u32>,
+    /// ADR master graph over *all* rows (sealed + memtable), kept in the
+    /// nested mutable form between publishes like `MutableHnsw`.
+    graph: Option<Hnsw>,
+    /// ADR: full row-major matrix backing the master graph.
+    all_rows: Vec<f32>,
+    tf_scratch: Vec<u16>,
+}
+
+/// The HNSW seed derivation shared with `LiveKb::build`'s in-RAM path —
+/// both must agree for segment-backed ADR to be bit-identical.
+pub(crate) fn hnsw_seed(cfg: &Config) -> u64 {
+    cfg.corpus.seed ^ 0x48
+}
+
+impl SegmentedKb {
+    /// Initialize `dir` with one full-range segment holding `corpus`
+    /// (plus the persisted HNSW graph for ADR). Errors if a store
+    /// already exists there.
+    pub fn create(dir: &Path, cfg: &Config, kind: RetrieverKind,
+                  corpus: &Corpus, rows: &[f32], dim: usize)
+                  -> anyhow::Result<()> {
+        let mut st = SegmentStore::create(dir)?;
+        if corpus.is_empty() {
+            return Ok(());
+        }
+        let docs: Vec<Document> = corpus.iter().cloned().collect();
+        let mut doc_terms = Vec::new();
+        if kind == RetrieverKind::Sr {
+            let mut tf = vec![0u16; corpus.vocab];
+            doc_terms = docs.iter()
+                .map(|d| doc_term_stats(&d.tokens, &mut tf))
+                .collect();
+        }
+        let graph = match kind {
+            RetrieverKind::Adr => {
+                anyhow::ensure!(rows.len() == docs.len() * dim,
+                                "embedding rows/dim mismatch");
+                let emb = Arc::new(EmbeddingMatrix::new(dim,
+                                                        rows.to_vec()));
+                let g = Hnsw::build(emb, cfg.retriever.hnsw_m,
+                                    cfg.retriever.hnsw_ef_construction,
+                                    cfg.retriever.hnsw_ef_search,
+                                    hnsw_seed(cfg));
+                Some(g.export_csr())
+            }
+            RetrieverKind::Edr => {
+                anyhow::ensure!(rows.len() == docs.len() * dim,
+                                "embedding rows/dim mismatch");
+                None
+            }
+            RetrieverKind::Sr => None,
+        };
+        let bytes = build_segment_bytes(&SegmentBuild {
+            kind,
+            doc_lo: 0,
+            docs: &docs,
+            rows: if kind == RetrieverKind::Sr { &[] } else { rows },
+            dim,
+            vocab: corpus.vocab,
+            doc_terms: &doc_terms,
+            graph: graph.as_ref(),
+        });
+        st.add_segment(&bytes)
+    }
+
+    /// Recover the store from `dir` and rebuild the corpus from the
+    /// persisted documents. This is the cold-load path: dense rows and
+    /// postings are mmap'd views, only the ADR graph's embedding matrix
+    /// is materialized in RAM.
+    pub fn open(dir: &Path, cfg: &Config, kind: RetrieverKind)
+                -> anyhow::Result<(Self, Corpus)> {
+        let store = SegmentStore::open(dir)?;
+        let vocab = cfg.corpus.vocab;
+        let dim = store.segments().first()
+            .map_or(crate::runtime::RETRIEVAL_DIM, |s| s.dim());
+        let mut docs = Vec::with_capacity(store.n_docs());
+        let mut sealed_total_len = 0u64;
+        let mut sealed_df = vec![0u32; vocab];
+        for seg in store.segments() {
+            anyhow::ensure!(seg.kind() == kind,
+                            "segment kind {:?} != configured {:?}",
+                            seg.kind(), kind);
+            anyhow::ensure!(seg.dim() == dim, "segment dim mismatch");
+            sealed_total_len += seg.total_doc_len();
+            match kind {
+                RetrieverKind::Edr | RetrieverKind::Adr => {
+                    anyhow::ensure!(seg.dense.is_some(),
+                                    "dense segment missing DENSE");
+                }
+                RetrieverKind::Sr => {
+                    anyhow::ensure!(seg.vocab() == vocab,
+                                    "segment vocab {} != configured {}",
+                                    seg.vocab(), vocab);
+                    let post = seg.post.as_ref().ok_or_else(
+                        || anyhow::anyhow!("SR segment missing POSTINGS"))?;
+                    anyhow::ensure!(seg.doc_len.is_some()
+                                    && seg.doc_terms.is_some(),
+                                    "SR segment missing doc stats");
+                    let off = post.offsets.as_slice();
+                    for t in 0..vocab {
+                        sealed_df[t] += off[t + 1] - off[t];
+                    }
+                }
+            }
+            docs.extend(seg.docs()?);
+        }
+        let sealed_len = docs.len();
+
+        let mut kb = Self {
+            kind,
+            dim,
+            vocab,
+            k1: cfg.retriever.bm25_k1,
+            b: cfg.retriever.bm25_b,
+            hnsw_m: cfg.retriever.hnsw_m,
+            hnsw_efc: cfg.retriever.hnsw_ef_construction,
+            hnsw_efs: cfg.retriever.hnsw_ef_search,
+            hnsw_seed: hnsw_seed(cfg),
+            memtable_cap: cfg.segment.memtable_docs.max(1),
+            store,
+            mem: Memtable { df: vec![0; vocab], ..Memtable::default() },
+            sealed_len,
+            sealed_total_len,
+            sealed_df,
+            graph: None,
+            all_rows: Vec::new(),
+            tf_scratch: vec![0; vocab],
+        };
+        if kind == RetrieverKind::Adr {
+            kb.rebuild_adr_master(cfg)?;
+        }
+        let corpus = Corpus::rebuild(&cfg.corpus, docs);
+        Ok((kb, corpus))
+    }
+
+    /// [`open`] if a store exists in `dir`, else [`create`] then
+    /// [`open`] — so the mmap read path is exercised on every startup,
+    /// not only on restarts.
+    ///
+    /// [`open`]: SegmentedKb::open
+    /// [`create`]: SegmentedKb::create
+    pub fn open_or_create(dir: &Path, cfg: &Config, kind: RetrieverKind,
+                          corpus: &Corpus, rows: &[f32], dim: usize)
+                          -> anyhow::Result<(Self, Corpus)> {
+        if !SegmentStore::exists(dir) {
+            Self::create(dir, cfg, kind, corpus, rows, dim)?;
+        }
+        Self::open(dir, cfg, kind)
+    }
+
+    /// Reconstruct the ADR master: import the persisted CSR graph over
+    /// its prefix of rows, then insert any rows from later (graph-less)
+    /// segments incrementally — append ≡ rebuild, so the result is
+    /// bit-identical to building over the full matrix.
+    fn rebuild_adr_master(&mut self, cfg: &Config) -> anyhow::Result<()> {
+        self.all_rows.clear();
+        for seg in self.store.segments() {
+            if let Some(v) = &seg.dense {
+                self.all_rows.extend_from_slice(v.as_slice());
+            }
+        }
+        let persisted = match self.store.segments().first() {
+            Some(seg) => seg.graph()?,
+            None => None,
+        };
+        let efs = cfg.retriever.hnsw_ef_search;
+        let mut graph = match persisted {
+            Some(csr) => {
+                anyhow::ensure!(
+                    csr.m == self.hnsw_m
+                        && csr.ef_construction == self.hnsw_efc
+                        && csr.seed == self.hnsw_seed,
+                    "persisted graph params (m={}, efc={}, seed={:#x}) \
+                     differ from config (m={}, efc={}, seed={:#x})",
+                    csr.m, csr.ef_construction, csr.seed,
+                    self.hnsw_m, self.hnsw_efc, self.hnsw_seed);
+                let g_n = csr.node_levels.len();
+                anyhow::ensure!(g_n * self.dim <= self.all_rows.len(),
+                                "graph covers more rows than segments");
+                let prefix = Arc::new(EmbeddingMatrix::new(
+                    self.dim, self.all_rows[..g_n * self.dim].to_vec()));
+                let mut g = Hnsw::import_csr(prefix, efs, csr);
+                g.thaw();
+                if g_n * self.dim < self.all_rows.len() {
+                    g.append(Arc::new(EmbeddingMatrix::new(
+                        self.dim, self.all_rows.clone())));
+                }
+                g
+            }
+            None => Hnsw::build(
+                Arc::new(EmbeddingMatrix::new(self.dim,
+                                              self.all_rows.clone())),
+                self.hnsw_m, self.hnsw_efc, efs, self.hnsw_seed),
+        };
+        graph.thaw();
+        self.graph = Some(graph);
+        Ok(())
+    }
+
+    /// Freeze the memtable into a new on-disk segment (no-op when
+    /// empty). Called automatically when the memtable reaches
+    /// `segment.memtable_docs`, and by [`SegmentedKb::compact`].
+    pub fn freeze_memtable(&mut self) -> anyhow::Result<()> {
+        if self.mem.docs.is_empty() {
+            return Ok(());
+        }
+        let bytes = build_segment_bytes(&SegmentBuild {
+            kind: self.kind,
+            doc_lo: self.sealed_len as u32,
+            docs: &self.mem.docs,
+            rows: &self.mem.rows,
+            dim: self.dim,
+            vocab: self.vocab,
+            doc_terms: &self.mem.doc_terms,
+            graph: None,
+        });
+        self.store.add_segment(&bytes)?;
+        self.seal_mem_stats();
+        Ok(())
+    }
+
+    /// Fold the memtable's statistics into the sealed totals and clear
+    /// it (the docs themselves just became segment-resident).
+    fn seal_mem_stats(&mut self) {
+        self.sealed_len += self.mem.docs.len();
+        self.sealed_total_len += self.mem.total_len;
+        for (s, m) in self.sealed_df.iter_mut().zip(self.mem.df.iter()) {
+            *s += m;
+        }
+        self.mem.clear();
+    }
+
+    /// Tiers currently serving reads: segments + a non-empty memtable.
+    pub fn tier_count(&self) -> usize {
+        self.store.segments().len()
+            + usize::from(!self.mem.docs.is_empty())
+    }
+
+    /// True when every sealed tier is served from a live mmap.
+    pub fn all_segments_mapped(&self) -> bool {
+        self.store.segments().iter().all(|s| s.is_mapped())
+    }
+
+    /// Merge all segments + memtable into one full-range segment and
+    /// publish it as the store's only tier (for ADR, re-persisting the
+    /// master graph's CSR export). Returns `false` when already fully
+    /// compacted. Read equivalence is unchanged: the merged tier walk
+    /// equals the multi-tier walk, which equals the monolithic scan.
+    pub fn compact(&mut self) -> anyhow::Result<bool> {
+        if self.store.segments().len() <= 1 && self.mem.docs.is_empty() {
+            return Ok(false);
+        }
+        let mut docs = Vec::with_capacity(self.len());
+        for seg in self.store.segments() {
+            docs.extend(seg.docs()?);
+        }
+        docs.extend(self.mem.docs.iter().cloned());
+
+        let rows: Vec<f32> = match self.kind {
+            RetrieverKind::Adr => self.all_rows.clone(),
+            RetrieverKind::Edr => {
+                let mut out =
+                    Vec::with_capacity(docs.len() * self.dim);
+                for seg in self.store.segments() {
+                    if let Some(v) = &seg.dense {
+                        out.extend_from_slice(v.as_slice());
+                    }
+                }
+                out.extend_from_slice(&self.mem.rows);
+                out
+            }
+            RetrieverKind::Sr => Vec::new(),
+        };
+        let mut doc_terms = Vec::new();
+        if self.kind == RetrieverKind::Sr {
+            doc_terms = docs.iter()
+                .map(|d| doc_term_stats(&d.tokens,
+                                        &mut self.tf_scratch))
+                .collect();
+        }
+        let graph = match (&self.kind, &self.graph) {
+            (RetrieverKind::Adr, Some(g)) => Some(g.export_csr()),
+            _ => None,
+        };
+        let bytes = build_segment_bytes(&SegmentBuild {
+            kind: self.kind,
+            doc_lo: 0,
+            docs: &docs,
+            rows: &rows,
+            dim: self.dim,
+            vocab: self.vocab,
+            doc_terms: &doc_terms,
+            graph: graph.as_ref(),
+        });
+        self.store.replace_all(&bytes)?;
+        self.seal_mem_stats();
+        debug_assert_eq!(self.sealed_len, self.store.n_docs());
+        Ok(true)
+    }
+
+    fn snapshot_dense(&self, shards: usize) -> Arc<dyn Retriever> {
+        let mut tiers: Vec<tiered::DenseTier> = self.store.segments()
+            .iter()
+            .filter_map(|s| s.dense_tier())
+            .collect();
+        if !self.mem.docs.is_empty() {
+            tiers.push(tiered::DenseTier {
+                doc_lo: self.sealed_len as u32,
+                doc_hi: (self.sealed_len + self.mem.docs.len()) as u32,
+                rows: format::F32View::owned(self.mem.rows.clone()),
+            });
+        }
+        maybe_shard(Arc::new(TieredDense::new(tiers, self.dim)), shards)
+    }
+
+    fn snapshot_sparse(&self, shards: usize) -> Arc<dyn Retriever> {
+        let n = self.len();
+        // Global statistics over sealed + memtable docs, same arithmetic
+        // as the monolithic build (integer sum -> f64 divide -> f32).
+        let idf: Vec<f32> = self.sealed_df.iter()
+            .zip(self.mem.df.iter())
+            .map(|(&s, &m)| bm25_idf(n, (s + m) as usize))
+            .collect();
+        let total = self.sealed_total_len + self.mem.total_len;
+        let avgdl = if n == 0 {
+            0.0
+        } else {
+            (total as f64 / n as f64) as f32
+        };
+        let mut tiers: Vec<tiered::SparseTier> = self.store.segments()
+            .iter()
+            .filter_map(|s| s.sparse_tier())
+            .collect();
+        if !self.mem.docs.is_empty() {
+            tiers.push(self.memtable_sparse_tier());
+        }
+        maybe_shard(Arc::new(TieredSparse::new(tiers, Arc::new(idf),
+                                               self.k1, self.b, avgdl)),
+                    shards)
+    }
+
+    /// Package the memtable as one owned sparse tier — O(vocab +
+    /// memtable tokens), the SR publish cost.
+    fn memtable_sparse_tier(&self) -> tiered::SparseTier {
+        let lo = self.sealed_len as u32;
+        let (offsets, pdocs, ptfs) = store::postings_arrays(
+            self.vocab, lo, &self.mem.doc_terms);
+        let mut dt_off = vec![0u32];
+        let mut dt_terms = Vec::new();
+        let mut dt_tfs = Vec::new();
+        for dt in &self.mem.doc_terms {
+            for &(t, f) in dt {
+                dt_terms.push(t);
+                dt_tfs.push(f);
+            }
+            dt_off.push(dt_terms.len() as u32);
+        }
+        tiered::SparseTier {
+            doc_lo: lo,
+            doc_hi: lo + self.mem.docs.len() as u32,
+            post: store::PostingsView {
+                offsets: format::U32View::owned(offsets),
+                docs: format::U32View::owned(pdocs),
+                tfs: format::U16View::owned(ptfs),
+            },
+            doc_len: format::U32View::owned(
+                self.mem.docs.iter()
+                    .map(|d| d.tokens.len() as u32).collect()),
+            doc_terms: store::DocTermsView {
+                offsets: format::U32View::owned(dt_off),
+                terms: format::U32View::owned(dt_terms),
+                tfs: format::U16View::owned(dt_tfs),
+            },
+        }
+    }
+
+    fn snapshot_hnsw(&self, shards: usize) -> Arc<dyn Retriever> {
+        // Same publish-time compaction as `MutableHnsw::snapshot`: clone
+        // the master, seal the clone to CSR. O(corpus) — documented in
+        // ADR-009 (the graph itself is the whole-corpus state).
+        match &self.graph {
+            Some(master) => {
+                let mut g = master.clone();
+                g.seal();
+                maybe_shard(Arc::new(g), shards)
+            }
+            // Unreachable after open(); serve an empty dense scan so a
+            // mis-ordered call degrades loudly in tests, not via panic.
+            None => Arc::new(TieredDense::new(Vec::new(), self.dim)),
+        }
+    }
+}
+
+impl MutableRetriever for SegmentedKb {
+    fn append(&mut self, docs: &[Document], embeddings: &[Vec<f32>])
+              -> anyhow::Result<()> {
+        anyhow::ensure!(docs.len() == embeddings.len(),
+                        "{} docs but {} embedding rows",
+                        docs.len(), embeddings.len());
+        let dense = self.kind != RetrieverKind::Sr;
+        for (i, (d, e)) in docs.iter().zip(embeddings).enumerate() {
+            anyhow::ensure!(!dense || e.len() == self.dim,
+                            "doc {}: embedding dim {} != {}",
+                            d.id, e.len(), self.dim);
+            anyhow::ensure!(d.id as usize == self.len() + i,
+                            "doc {}: ids must be contiguous", d.id);
+            anyhow::ensure!(
+                d.tokens.iter().all(|&t| (t as usize) < self.vocab),
+                "doc {}: token outside vocab {}", d.id, self.vocab);
+        }
+        for (d, e) in docs.iter().zip(embeddings) {
+            self.mem.total_len += d.tokens.len() as u64;
+            if dense {
+                self.mem.rows.extend_from_slice(e);
+            }
+            if self.kind == RetrieverKind::Sr {
+                let dt = doc_term_stats(&d.tokens,
+                                        &mut self.tf_scratch);
+                for &(t, _) in &dt {
+                    self.mem.df[t as usize] += 1;
+                }
+                self.mem.doc_terms.push(dt);
+            }
+            self.mem.docs.push(d.clone());
+        }
+        if self.kind == RetrieverKind::Adr {
+            for e in embeddings {
+                self.all_rows.extend_from_slice(e);
+            }
+            let emb = Arc::new(EmbeddingMatrix::new(
+                self.dim, self.all_rows.clone()));
+            match &mut self.graph {
+                Some(g) => g.append(emb),
+                None => {
+                    let mut g = Hnsw::build(emb, self.hnsw_m,
+                                            self.hnsw_efc,
+                                            self.hnsw_efs,
+                                            self.hnsw_seed);
+                    g.thaw();
+                    self.graph = Some(g);
+                }
+            }
+        }
+        if self.mem.docs.len() >= self.memtable_cap {
+            self.freeze_memtable()?;
+        }
+        Ok(())
+    }
+
+    fn snapshot(&self, shards: usize) -> Arc<dyn Retriever> {
+        match self.kind {
+            RetrieverKind::Edr => self.snapshot_dense(shards),
+            RetrieverKind::Sr => self.snapshot_sparse(shards),
+            RetrieverKind::Adr => self.snapshot_hnsw(shards),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.sealed_len + self.mem.docs.len()
+    }
+
+    fn compact(&mut self) -> anyhow::Result<bool> {
+        SegmentedKb::compact(self)
+    }
+
+    fn tier_count(&self) -> usize {
+        SegmentedKb::tier_count(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+    use crate::datagen::embedding::{embed_corpus, embed_doc, Encoder,
+                                    HashEncoder};
+    use crate::retriever::epoch::{MutableBm25, MutableDense,
+                                  MutableHnsw};
+    use crate::retriever::sparse::Bm25;
+    use crate::retriever::SpecQuery;
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    const DIM: usize = 24;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ralmspec-segkb-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn small_cfg(n: usize, memtable: usize) -> Config {
+        let mut cfg = Config::default();
+        cfg.corpus = CorpusConfig {
+            n_docs: n, n_topics: 8, doc_len: (16, 48),
+            ..CorpusConfig::default()
+        };
+        cfg.retriever.hnsw_ef_construction = 40;
+        cfg.retriever.hnsw_ef_search = 24;
+        cfg.segment.memtable_docs = memtable;
+        cfg
+    }
+
+    fn probe_queries(c: &Corpus, enc: &HashEncoder, n: usize)
+                     -> Vec<SpecQuery> {
+        let mut rng = Rng::new(0xBEEF);
+        (0..n)
+            .map(|i| {
+                let terms =
+                    c.topic_tokens((i % c.n_topics) as u32, 8, &mut rng);
+                SpecQuery {
+                    dense: enc.encode(&terms),
+                    terms,
+                }
+            })
+            .collect()
+    }
+
+    fn ingest_batch(c: &Corpus, enc: &HashEncoder, start: u32, n: usize)
+                    -> (Vec<Document>, Vec<Vec<f32>>) {
+        let docs = c.synth_docs(0x51, start, n, (16, 48));
+        let embs: Vec<Vec<f32>> =
+            docs.iter().map(|d| embed_doc(enc, d)).collect();
+        (docs, embs)
+    }
+
+    fn kind_equivalence(kind: RetrieverKind) {
+        let cfg = small_cfg(220, 16);
+        let c = Corpus::generate(&cfg.corpus);
+        let enc = HashEncoder::new(DIM, 0xE6);
+        let rows = embed_corpus(&enc, &c);
+        let dir = tmpdir(&format!("equiv-{kind:?}"));
+
+        let (mut seg_kb, rec) = SegmentedKb::open_or_create(
+            &dir, &cfg, kind, &c, &rows, DIM).unwrap();
+        assert_eq!(rec.len(), 220);
+        let mut ram_kb: Box<dyn MutableRetriever> = match kind {
+            RetrieverKind::Edr =>
+                Box::new(MutableDense::new(DIM, rows.clone())),
+            RetrieverKind::Adr => Box::new(MutableHnsw::new(
+                DIM, rows.clone(), cfg.retriever.hnsw_m,
+                cfg.retriever.hnsw_ef_construction,
+                cfg.retriever.hnsw_ef_search, hnsw_seed(&cfg))),
+            RetrieverKind::Sr => Box::new(MutableBm25::new(
+                Bm25::build(&c, cfg.retriever.bm25_k1,
+                            cfg.retriever.bm25_b))),
+        };
+        let qs = probe_queries(&c, &enc, 6);
+        for shards in [1usize, 2] {
+            assert_eq!(ram_kb.snapshot(shards).retrieve_batch(&qs, 5),
+                       seg_kb.snapshot(shards).retrieve_batch(&qs, 5),
+                       "{kind:?} epoch0 shards={shards}");
+        }
+        // Ingest enough to force at least two memtable freezes.
+        let mut next = 220u32;
+        for _ in 0..3 {
+            let (docs, embs) = ingest_batch(&c, &enc, next, 14);
+            next += 14;
+            ram_kb.append(&docs, &embs).unwrap();
+            seg_kb.append(&docs, &embs).unwrap();
+            for shards in [1usize, 2] {
+                assert_eq!(
+                    ram_kb.snapshot(shards).retrieve_batch(&qs, 5),
+                    seg_kb.snapshot(shards).retrieve_batch(&qs, 5),
+                    "{kind:?} post-ingest shards={shards}");
+            }
+        }
+        assert!(seg_kb.tier_count() > 1, "freezes should create tiers");
+        // Compaction must not change any result.
+        assert!(SegmentedKb::compact(&mut seg_kb).unwrap());
+        assert_eq!(SegmentedKb::tier_count(&seg_kb), 1);
+        assert_eq!(ram_kb.snapshot(1).retrieve_batch(&qs, 5),
+                   seg_kb.snapshot(1).retrieve_batch(&qs, 5),
+                   "{kind:?} post-compaction");
+        // And the compacted store must round-trip through a cold open.
+        drop(seg_kb);
+        let (reopened, rec2) =
+            SegmentedKb::open(&dir, &cfg, kind).unwrap();
+        assert_eq!(rec2.len(), next as usize);
+        assert_eq!(ram_kb.snapshot(1).retrieve_batch(&qs, 5),
+                   reopened.snapshot(1).retrieve_batch(&qs, 5),
+                   "{kind:?} after reopen");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn edr_matches_in_ram_backend() {
+        kind_equivalence(RetrieverKind::Edr);
+    }
+
+    #[test]
+    fn sr_matches_in_ram_backend() {
+        kind_equivalence(RetrieverKind::Sr);
+    }
+
+    #[test]
+    fn adr_matches_in_ram_backend() {
+        kind_equivalence(RetrieverKind::Adr);
+    }
+}

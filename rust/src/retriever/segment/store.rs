@@ -1,0 +1,910 @@
+//! Immutable on-disk segments and the manifest-backed [`SegmentStore`].
+//!
+//! A **segment** is one `RSEG` container file (see [`super::format`] and
+//! `docs/FORMAT.md`) holding a contiguous doc-id range `[doc_lo, doc_hi)`
+//! of the knowledge base: the raw documents, plus the per-backend index
+//! payloads (dense rows for EDR/ADR, packed BM25 postings for SR, the
+//! sealed HNSW CSR adjacency for full-range ADR segments). Segments are
+//! written once and never mutated — crash safety comes from writing to a
+//! temp file, `fsync`, then an atomic rename, with the set of live
+//! segments recorded in a numbered manifest.
+//!
+//! The **manifest** (`MANIFEST-<seq>.json` + a `CURRENT` pointer) is the
+//! only mutable metadata. Recovery tries the newest manifest whose
+//! segment files all pass their checksums and falls back to older ones,
+//! so a torn write of the latest segment loses at most the most recent
+//! (unfsynced) ingest tail, never the store (pinned by the
+//! `torn_segment_falls_back_to_previous_manifest` test).
+
+use super::format::{self, F32View, SegmentFile, SegmentWriter, U16View,
+                    U32View};
+use crate::config::RetrieverKind;
+use crate::datagen::corpus::Document;
+use crate::retriever::hnsw::CsrExport;
+use crate::runtime::Blob;
+use crate::util::json::{self, Value};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn kind_code(kind: RetrieverKind) -> u32 {
+    match kind {
+        RetrieverKind::Edr => 0,
+        RetrieverKind::Adr => 1,
+        RetrieverKind::Sr => 2,
+    }
+}
+
+fn kind_from_code(code: u32) -> anyhow::Result<RetrieverKind> {
+    match code {
+        0 => Ok(RetrieverKind::Edr),
+        1 => Ok(RetrieverKind::Adr),
+        2 => Ok(RetrieverKind::Sr),
+        _ => anyhow::bail!("unknown retriever kind code {code}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Section encoders/decoders.
+
+/// Everything needed to serialize one segment. `rows` and `doc_terms`
+/// are consulted per [`RetrieverKind`]; `graph` only for full-range ADR
+/// segments (create/compaction output).
+pub(crate) struct SegmentBuild<'a> {
+    pub kind: RetrieverKind,
+    pub doc_lo: u32,
+    pub docs: &'a [Document],
+    /// Row-major dense rows, `docs.len() * dim` (EDR/ADR; empty for SR).
+    pub rows: &'a [f32],
+    pub dim: usize,
+    pub vocab: usize,
+    /// Per-doc sorted (term, tf) stats (SR; empty otherwise).
+    pub doc_terms: &'a [Vec<(u32, u16)>],
+    pub graph: Option<&'a CsrExport>,
+}
+
+fn meta_section(b: &SegmentBuild, total_doc_len: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32);
+    format::push_u32(&mut out, kind_code(b.kind));
+    format::push_u32(&mut out, b.doc_lo);
+    format::push_u32(&mut out, b.doc_lo + b.docs.len() as u32);
+    format::push_u32(&mut out, b.dim as u32);
+    format::push_u32(&mut out, b.vocab as u32);
+    format::push_u32(&mut out, 0); // pad so total_doc_len is 8-aligned
+    format::push_u64(&mut out, total_doc_len);
+    out
+}
+
+fn docs_section(docs: &[Document]) -> Vec<u8> {
+    let n = docs.len();
+    let total: usize = docs.iter().map(|d| d.tokens.len()).sum();
+    let mut out = Vec::with_capacity(4 * (1 + n + 1 + n) + 4 * total);
+    format::push_u32(&mut out, n as u32);
+    let mut off = 0u32;
+    format::push_u32(&mut out, 0);
+    for d in docs {
+        off += d.tokens.len() as u32;
+        format::push_u32(&mut out, off);
+    }
+    for d in docs {
+        format::push_u32(&mut out, d.topic);
+    }
+    for d in docs {
+        format::push_u32s(&mut out, &d.tokens);
+    }
+    out
+}
+
+fn parse_docs(payload: &[u8], doc_lo: u32, n_expected: usize)
+              -> anyhow::Result<Vec<Document>> {
+    let n = format::get_u32(payload, 0)? as usize;
+    anyhow::ensure!(n == n_expected,
+                    "DOCS count {n} != meta doc range {n_expected}");
+    let offsets = format::decode_u32s(payload, 4, n + 1)?;
+    let topics = format::decode_u32s(payload, 4 * (n + 2), n)?;
+    let tok_base = 4 * (2 * n + 2);
+    let mut docs = Vec::with_capacity(n);
+    for i in 0..n {
+        let (a, b) = (offsets[i] as usize, offsets[i + 1] as usize);
+        anyhow::ensure!(a <= b, "DOCS offsets not monotonic");
+        let tokens =
+            format::decode_u32s(payload, tok_base + 4 * a, b - a)?;
+        docs.push(Document {
+            id: doc_lo + i as u32,
+            topic: topics[i],
+            tokens,
+        });
+    }
+    Ok(docs)
+}
+
+/// Packed postings arrays from per-doc term stats: per-term offsets
+/// (`vocab + 1`), global doc ids, and tfs — doc-ascending within each
+/// term by construction (docs are appended in id order), exactly the
+/// order [`crate::retriever::sparse::Bm25`] builds its posting lists in.
+pub(crate) fn postings_arrays(vocab: usize, doc_lo: u32,
+                              doc_terms: &[Vec<(u32, u16)>])
+                              -> (Vec<u32>, Vec<u32>, Vec<u16>) {
+    let mut offsets = vec![0u32; vocab + 1];
+    for dt in doc_terms {
+        for &(t, _) in dt {
+            offsets[t as usize + 1] += 1;
+        }
+    }
+    for t in 0..vocab {
+        offsets[t + 1] += offsets[t];
+    }
+    let nnz = offsets[vocab] as usize;
+    let mut docs = vec![0u32; nnz];
+    let mut tfs = vec![0u16; nnz];
+    let mut cursor: Vec<u32> = offsets[..vocab].to_vec();
+    for (i, dt) in doc_terms.iter().enumerate() {
+        let doc = doc_lo + i as u32;
+        for &(t, tf) in dt {
+            let p = cursor[t as usize] as usize;
+            docs[p] = doc;
+            tfs[p] = tf;
+            cursor[t as usize] += 1;
+        }
+    }
+    (offsets, docs, tfs)
+}
+
+fn postings_section(vocab: usize, doc_lo: u32,
+                    doc_terms: &[Vec<(u32, u16)>]) -> Vec<u8> {
+    let (offsets, docs, tfs) = postings_arrays(vocab, doc_lo, doc_terms);
+    let mut out =
+        Vec::with_capacity(4 * offsets.len() + 4 * docs.len()
+                           + 2 * tfs.len());
+    format::push_u32s(&mut out, &offsets);
+    format::push_u32s(&mut out, &docs);
+    format::push_u16s(&mut out, &tfs);
+    out
+}
+
+fn docterms_section(doc_terms: &[Vec<(u32, u16)>]) -> Vec<u8> {
+    let n = doc_terms.len();
+    let nnz: usize = doc_terms.iter().map(|dt| dt.len()).sum();
+    let mut out = Vec::with_capacity(4 * (n + 1) + 6 * nnz);
+    let mut off = 0u32;
+    format::push_u32(&mut out, 0);
+    for dt in doc_terms {
+        off += dt.len() as u32;
+        format::push_u32(&mut out, off);
+    }
+    for dt in doc_terms {
+        for &(t, _) in dt {
+            format::push_u32(&mut out, t);
+        }
+    }
+    for dt in doc_terms {
+        for &(_, tf) in dt {
+            out.extend_from_slice(&tf.to_le_bytes());
+        }
+    }
+    out
+}
+
+fn graph_section(g: &CsrExport) -> Vec<u8> {
+    let mut out = Vec::new();
+    format::push_u32(&mut out, g.m as u32);
+    format::push_u32(&mut out, g.m0 as u32);
+    format::push_u32(&mut out, g.ef_construction as u32);
+    format::push_u32(&mut out, g.entry);
+    format::push_u32(&mut out, g.max_level as u32);
+    format::push_u32(&mut out, g.node_levels.len() as u32);
+    format::push_u32(&mut out, g.levels.len() as u32);
+    format::push_u32(&mut out, 0); // pad so seed is 8-aligned
+    format::push_u64(&mut out, g.seed);
+    format::push_u32s(&mut out, &g.node_levels);
+    for (offsets, packed) in &g.levels {
+        format::push_u32(&mut out, offsets.len() as u32);
+        format::push_u32(&mut out, packed.len() as u32);
+        format::push_u32s(&mut out, offsets);
+        format::push_u32s(&mut out, packed);
+    }
+    out
+}
+
+fn parse_graph(payload: &[u8]) -> anyhow::Result<CsrExport> {
+    let m = format::get_u32(payload, 0)? as usize;
+    let m0 = format::get_u32(payload, 4)? as usize;
+    let ef_construction = format::get_u32(payload, 8)? as usize;
+    let entry = format::get_u32(payload, 12)?;
+    let max_level = format::get_u32(payload, 16)? as usize;
+    let n = format::get_u32(payload, 20)? as usize;
+    let n_levels = format::get_u32(payload, 24)? as usize;
+    let seed = format::get_u64(payload, 32)?;
+    let node_levels = format::decode_u32s(payload, 40, n)?;
+    let mut off = 40 + 4 * n;
+    let mut levels = Vec::with_capacity(n_levels);
+    for _ in 0..n_levels {
+        let ol = format::get_u32(payload, off)? as usize;
+        let pl = format::get_u32(payload, off + 4)? as usize;
+        let offsets = format::decode_u32s(payload, off + 8, ol)?;
+        let packed = format::decode_u32s(payload, off + 8 + 4 * ol, pl)?;
+        off += 8 + 4 * (ol + pl);
+        levels.push((offsets, packed));
+    }
+    Ok(CsrExport { m, m0, ef_construction, seed, entry, max_level,
+                   node_levels, levels })
+}
+
+/// Serialize one segment to its full `RSEG` byte image.
+pub(crate) fn build_segment_bytes(b: &SegmentBuild) -> Vec<u8> {
+    let total_doc_len: u64 =
+        b.docs.iter().map(|d| d.tokens.len() as u64).sum();
+    let mut w = SegmentWriter::new();
+    w.push_section(format::TAG_META, meta_section(b, total_doc_len));
+    w.push_section(format::TAG_DOCS, docs_section(b.docs));
+    match b.kind {
+        RetrieverKind::Edr | RetrieverKind::Adr => {
+            debug_assert_eq!(b.rows.len(), b.docs.len() * b.dim);
+            let mut dense = Vec::with_capacity(4 * b.rows.len());
+            format::push_f32s(&mut dense, b.rows);
+            w.push_section(format::TAG_DENSE, dense);
+        }
+        RetrieverKind::Sr => {
+            debug_assert_eq!(b.doc_terms.len(), b.docs.len());
+            w.push_section(format::TAG_POSTINGS,
+                           postings_section(b.vocab, b.doc_lo,
+                                            b.doc_terms));
+            let mut dl = Vec::with_capacity(4 * b.docs.len());
+            for d in b.docs {
+                format::push_u32(&mut dl, d.tokens.len() as u32);
+            }
+            w.push_section(format::TAG_DOCLEN, dl);
+            w.push_section(format::TAG_DOCTERMS,
+                           docterms_section(b.doc_terms));
+        }
+    }
+    if let Some(g) = b.graph {
+        w.push_section(format::TAG_GRAPH, graph_section(g));
+    }
+    w.finish()
+}
+
+// ---------------------------------------------------------------------
+// Segment: a loaded, validated, view-carrying segment file.
+
+/// Packed BM25 postings over one segment's doc range: per-term offsets
+/// (`vocab + 1`), then global doc ids and tfs, doc-ascending per term.
+#[derive(Clone)]
+pub(crate) struct PostingsView {
+    pub offsets: U32View,
+    pub docs: U32View,
+    pub tfs: U16View,
+}
+
+/// Per-doc sorted (term, tf) stats: offsets (`n + 1`), terms, tfs.
+#[derive(Clone)]
+pub(crate) struct DocTermsView {
+    pub offsets: U32View,
+    pub terms: U32View,
+    pub tfs: U16View,
+}
+
+/// One immutable on-disk segment, loaded (zero-copy via mmap where the
+/// platform allows) and checksum-validated.
+///
+/// ```
+/// use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+/// use ralmspec::datagen::embedding::{embed_corpus, HashEncoder};
+/// use ralmspec::datagen::Corpus;
+/// use ralmspec::retriever::segment::{SegmentStore, SegmentedKb};
+///
+/// let mut cfg = Config::default();
+/// cfg.corpus = CorpusConfig { n_docs: 50, n_topics: 4, doc_len: (8, 16),
+///                             ..CorpusConfig::default() };
+/// let corpus = Corpus::generate(&cfg.corpus);
+/// let enc = HashEncoder::new(16, 1);
+/// let rows = embed_corpus(&enc, &corpus);
+/// let dir = std::env::temp_dir()
+///     .join(format!("ralmspec-segment-doc-{}", std::process::id()));
+/// let _ = std::fs::remove_dir_all(&dir);
+/// SegmentedKb::create(&dir, &cfg, RetrieverKind::Edr, &corpus, &rows, 16)
+///     .unwrap();
+///
+/// let store = SegmentStore::open(&dir).unwrap();
+/// let seg = &store.segments()[0];
+/// assert_eq!(seg.kind(), RetrieverKind::Edr);
+/// assert_eq!(seg.doc_range(), (0, 50));
+/// assert_eq!(seg.n_docs(), 50);
+/// std::fs::remove_dir_all(&dir).unwrap();
+/// ```
+pub struct Segment {
+    name: String,
+    kind: RetrieverKind,
+    doc_lo: u32,
+    doc_hi: u32,
+    dim: usize,
+    vocab: usize,
+    total_doc_len: u64,
+    file: SegmentFile,
+    pub(crate) dense: Option<F32View>,
+    pub(crate) post: Option<PostingsView>,
+    pub(crate) doc_len: Option<U32View>,
+    pub(crate) doc_terms: Option<DocTermsView>,
+}
+
+impl Segment {
+    /// Load and validate a segment file. Every section checksum is
+    /// verified before any payload is interpreted.
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let name = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| anyhow::anyhow!("bad segment path {}",
+                                           path.display()))?
+            .to_string();
+        let blob = Arc::new(Blob::open(path)?);
+        let file = SegmentFile::parse(blob)?;
+        let (moff, mlen) = file.require(format::TAG_META)?;
+        anyhow::ensure!(mlen >= 32, "META section too short ({mlen})");
+        let meta = file.payload(moff, mlen);
+        let kind = kind_from_code(format::get_u32(meta, 0)?)?;
+        let doc_lo = format::get_u32(meta, 4)?;
+        let doc_hi = format::get_u32(meta, 8)?;
+        let dim = format::get_u32(meta, 12)? as usize;
+        let vocab = format::get_u32(meta, 16)? as usize;
+        let total_doc_len = format::get_u64(meta, 24)?;
+        anyhow::ensure!(doc_lo <= doc_hi, "inverted doc range");
+        let n = (doc_hi - doc_lo) as usize;
+
+        let dense = match file.section(format::TAG_DENSE) {
+            Some((off, len)) => {
+                anyhow::ensure!(len == 4 * n * dim,
+                                "DENSE len {len} != 4 * {n} * {dim}");
+                Some(F32View::from_blob(&file.blob, off, n * dim)?)
+            }
+            None => None,
+        };
+        let post = match file.section(format::TAG_POSTINGS) {
+            Some((off, len)) => {
+                let head = 4 * (vocab + 1);
+                anyhow::ensure!(len >= head && (len - head) % 6 == 0,
+                                "POSTINGS len {len} malformed");
+                let nnz = (len - head) / 6;
+                Some(PostingsView {
+                    offsets: U32View::from_blob(&file.blob, off,
+                                                vocab + 1)?,
+                    docs: U32View::from_blob(&file.blob, off + head,
+                                             nnz)?,
+                    tfs: U16View::from_blob(&file.blob,
+                                            off + head + 4 * nnz, nnz)?,
+                })
+            }
+            None => None,
+        };
+        let doc_len = match file.section(format::TAG_DOCLEN) {
+            Some((off, len)) => {
+                anyhow::ensure!(len == 4 * n, "DOCLEN len {len} != 4n");
+                Some(U32View::from_blob(&file.blob, off, n)?)
+            }
+            None => None,
+        };
+        let doc_terms = match file.section(format::TAG_DOCTERMS) {
+            Some((off, len)) => {
+                let head = 4 * (n + 1);
+                anyhow::ensure!(len >= head && (len - head) % 6 == 0,
+                                "DOCTERMS len {len} malformed");
+                let nnz = (len - head) / 6;
+                Some(DocTermsView {
+                    offsets: U32View::from_blob(&file.blob, off, n + 1)?,
+                    terms: U32View::from_blob(&file.blob, off + head,
+                                              nnz)?,
+                    tfs: U16View::from_blob(&file.blob,
+                                            off + head + 4 * nnz, nnz)?,
+                })
+            }
+            None => None,
+        };
+        Ok(Self { name, kind, doc_lo, doc_hi, dim, vocab, total_doc_len,
+                  file, dense, post, doc_len, doc_terms })
+    }
+
+    /// The on-disk file name (e.g. `seg-000001.rseg`).
+    pub fn file_name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn kind(&self) -> RetrieverKind {
+        self.kind
+    }
+
+    /// The contiguous global doc-id range `[lo, hi)` this segment holds.
+    pub fn doc_range(&self) -> (u32, u32) {
+        (self.doc_lo, self.doc_hi)
+    }
+
+    pub fn n_docs(&self) -> usize {
+        (self.doc_hi - self.doc_lo) as usize
+    }
+
+    pub(crate) fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub(crate) fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub(crate) fn total_doc_len(&self) -> u64 {
+        self.total_doc_len
+    }
+
+    /// True when the backing file is a live mmap (vs a heap read) — the
+    /// storage bench reports this so a silent fallback is visible.
+    pub fn is_mapped(&self) -> bool {
+        self.file.blob.is_mapped()
+    }
+
+    /// Decode the raw documents (cold-load corpus reconstruction).
+    pub fn docs(&self) -> anyhow::Result<Vec<Document>> {
+        let (off, len) = self.file.require(format::TAG_DOCS)?;
+        parse_docs(self.file.payload(off, len), self.doc_lo,
+                   self.n_docs())
+    }
+
+    /// Package this segment as a dense read tier (shared mmap views).
+    pub(crate) fn dense_tier(&self) -> Option<super::tiered::DenseTier> {
+        self.dense.clone().map(|rows| super::tiered::DenseTier {
+            doc_lo: self.doc_lo,
+            doc_hi: self.doc_hi,
+            rows,
+        })
+    }
+
+    /// Package this segment as a sparse read tier (shared mmap views).
+    pub(crate) fn sparse_tier(&self)
+                              -> Option<super::tiered::SparseTier> {
+        match (&self.post, &self.doc_len, &self.doc_terms) {
+            (Some(post), Some(doc_len), Some(doc_terms)) => {
+                Some(super::tiered::SparseTier {
+                    doc_lo: self.doc_lo,
+                    doc_hi: self.doc_hi,
+                    post: post.clone(),
+                    doc_len: doc_len.clone(),
+                    doc_terms: doc_terms.clone(),
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// The persisted HNSW adjacency, if this segment carries one.
+    pub(crate) fn graph(&self) -> anyhow::Result<Option<CsrExport>> {
+        match self.file.section(format::TAG_GRAPH) {
+            Some((off, len)) => {
+                Ok(Some(parse_graph(self.file.payload(off, len))?))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SegmentStore: manifest, recovery, retention.
+
+fn manifest_name(seq: u64) -> String {
+    format!("MANIFEST-{seq:06}.json")
+}
+
+fn segment_name(id: u64) -> String {
+    format!("seg-{id:06}.rseg")
+}
+
+/// Write `bytes` to `path` crash-safely: temp file in the same
+/// directory, `sync_all`, atomic rename.
+fn atomic_write(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+struct ManifestDoc {
+    seq: u64,
+    next_seg: u64,
+    files: Vec<String>,
+}
+
+fn parse_manifest(text: &str) -> anyhow::Result<ManifestDoc> {
+    let v = json::parse(text)?;
+    let seq = v.req("seq")?.as_u64()
+        .ok_or_else(|| anyhow::anyhow!("manifest seq not a number"))?;
+    let next_seg = v.req("next_segment_id")?.as_u64()
+        .ok_or_else(|| anyhow::anyhow!("manifest next_segment_id bad"))?;
+    let files = v.req("segments")?.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("manifest segments not a list"))?
+        .iter()
+        .map(|f| f.as_str().map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("segment name not a string")))
+        .collect::<anyhow::Result<Vec<String>>>()?;
+    Ok(ManifestDoc { seq, next_seg, files })
+}
+
+/// The tiered store's on-disk root: a directory of immutable segment
+/// files plus numbered manifests naming the live set.
+///
+/// ```
+/// use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+/// use ralmspec::datagen::embedding::{embed_corpus, HashEncoder};
+/// use ralmspec::datagen::Corpus;
+/// use ralmspec::retriever::segment::{SegmentStore, SegmentedKb};
+///
+/// let mut cfg = Config::default();
+/// cfg.corpus = CorpusConfig { n_docs: 40, n_topics: 4, doc_len: (8, 16),
+///                             ..CorpusConfig::default() };
+/// let corpus = Corpus::generate(&cfg.corpus);
+/// let enc = HashEncoder::new(16, 2);
+/// let rows = embed_corpus(&enc, &corpus);
+/// let dir = std::env::temp_dir()
+///     .join(format!("ralmspec-store-doc-{}", std::process::id()));
+/// let _ = std::fs::remove_dir_all(&dir);
+/// SegmentedKb::create(&dir, &cfg, RetrieverKind::Sr, &corpus, &rows, 16)
+///     .unwrap();
+///
+/// // Recovery = open the newest manifest whose segments all validate.
+/// let store = SegmentStore::open(&dir).unwrap();
+/// assert_eq!(store.segments().len(), 1);
+/// assert_eq!(store.segments()[0].doc_range(), (0, 40));
+/// std::fs::remove_dir_all(&dir).unwrap();
+/// ```
+pub struct SegmentStore {
+    dir: PathBuf,
+    seq: u64,
+    next_seg: u64,
+    segments: Vec<Segment>,
+}
+
+impl SegmentStore {
+    /// True if `dir` holds a store (any manifest present).
+    pub fn exists(dir: &Path) -> bool {
+        std::fs::read_dir(dir).map(|entries| {
+            entries.flatten().any(|e| {
+                e.file_name().to_string_lossy().starts_with("MANIFEST-")
+            })
+        }).unwrap_or(false)
+    }
+
+    /// Initialize an empty store (writes `MANIFEST-000001`). Fails if a
+    /// manifest already exists — recovery must go through [`open`].
+    ///
+    /// [`open`]: SegmentStore::open
+    pub fn create(dir: &Path) -> anyhow::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        anyhow::ensure!(!Self::exists(dir),
+                        "segment store already exists in {}",
+                        dir.display());
+        let mut store = Self {
+            dir: dir.to_path_buf(),
+            seq: 0,
+            next_seg: 1,
+            segments: Vec::new(),
+        };
+        store.write_manifest()?;
+        Ok(store)
+    }
+
+    /// Recover the store: try the `CURRENT`-named manifest first, then
+    /// every other manifest newest-first, accepting the first whose
+    /// segment files all load and checksum-validate with a contiguous
+    /// doc range from 0.
+    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+        let mut candidates: Vec<(u64, String)> = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let name = entry?.file_name().to_string_lossy().to_string();
+            if let Some(seq) = name
+                .strip_prefix("MANIFEST-")
+                .and_then(|s| s.strip_suffix(".json"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                candidates.push((seq, name));
+            }
+        }
+        candidates.sort_by(|a, b| b.0.cmp(&a.0));
+        if let Ok(cur) = std::fs::read_to_string(dir.join("CURRENT")) {
+            let cur = cur.trim().to_string();
+            if let Some(pos) =
+                candidates.iter().position(|(_, n)| *n == cur)
+            {
+                let hint = candidates.remove(pos);
+                candidates.insert(0, hint);
+            }
+        }
+        anyhow::ensure!(!candidates.is_empty(),
+                        "no manifest in {}", dir.display());
+        let mut last_err = anyhow::anyhow!("unreachable");
+        for (_, name) in &candidates {
+            match Self::try_manifest(dir, name) {
+                Ok(store) => return Ok(store),
+                Err(e) => {
+                    last_err = e.context(format!("manifest {name}"));
+                }
+            }
+        }
+        Err(last_err.context(format!(
+            "no usable manifest among {} candidates in {}",
+            candidates.len(), dir.display())))
+    }
+
+    fn try_manifest(dir: &Path, name: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join(name))?;
+        let doc = parse_manifest(&text)?;
+        let mut segments = Vec::with_capacity(doc.files.len());
+        for f in &doc.files {
+            segments.push(Segment::load(&dir.join(f))?);
+        }
+        let mut expect = 0u32;
+        for s in &segments {
+            anyhow::ensure!(s.doc_lo == expect,
+                            "segment doc ranges not contiguous: {} != {}",
+                            s.doc_lo, expect);
+            expect = s.doc_hi;
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            seq: doc.seq,
+            next_seg: doc.next_seg,
+            segments,
+        })
+    }
+
+    /// The live segments, ascending contiguous doc ranges from 0.
+    pub fn segments(&self) -> &[Segment] {
+        &self.segments
+    }
+
+    /// Total documents across all segments.
+    pub fn n_docs(&self) -> usize {
+        self.segments.last().map_or(0, |s| s.doc_hi as usize)
+    }
+
+    /// Persist a new segment and publish a manifest including it.
+    pub(crate) fn add_segment(&mut self, bytes: &[u8])
+                              -> anyhow::Result<()> {
+        let seg = self.write_segment_file(bytes)?;
+        self.segments.push(seg);
+        self.write_manifest()
+    }
+
+    /// Persist a merged full-range segment and publish a manifest in
+    /// which it replaces every previous segment (compaction commit).
+    pub(crate) fn replace_all(&mut self, bytes: &[u8])
+                              -> anyhow::Result<()> {
+        let seg = self.write_segment_file(bytes)?;
+        self.segments = vec![seg];
+        self.write_manifest()
+    }
+
+    fn write_segment_file(&mut self, bytes: &[u8])
+                          -> anyhow::Result<Segment> {
+        let name = segment_name(self.next_seg);
+        self.next_seg += 1;
+        let path = self.dir.join(&name);
+        atomic_write(&path, bytes)?;
+        Segment::load(&path)
+    }
+
+    /// Write `MANIFEST-<seq+1>` + `CURRENT`, then garbage-collect files
+    /// referenced by neither of the two newest manifests (keeping the
+    /// previous manifest's files is what makes torn-write fallback
+    /// possible).
+    fn write_manifest(&mut self) -> anyhow::Result<()> {
+        self.seq += 1;
+        let name = manifest_name(self.seq);
+        let files: Vec<String> = self
+            .segments
+            .iter()
+            .map(|s| s.file_name().to_string())
+            .collect();
+        let doc = Value::obj(vec![
+            ("seq", Value::num(self.seq as f64)),
+            ("next_segment_id", Value::num(self.next_seg as f64)),
+            ("segments",
+             Value::Arr(files.iter()
+                            .map(|f| Value::str(f.clone())).collect())),
+        ]);
+        atomic_write(&self.dir.join(&name), doc.pretty().as_bytes())?;
+        atomic_write(&self.dir.join("CURRENT"), name.as_bytes())?;
+        #[cfg(unix)]
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        self.collect_garbage(&files);
+        Ok(())
+    }
+
+    /// Best-effort GC: remove segment files and manifests not needed by
+    /// the two newest manifests. Errors are ignored — a leaked file is
+    /// harmless, a failed publish is not.
+    fn collect_garbage(&self, current_files: &[String]) {
+        let mut keep: Vec<String> = current_files.to_vec();
+        let prev = manifest_name(self.seq.saturating_sub(1));
+        if let Ok(text) = std::fs::read_to_string(self.dir.join(&prev)) {
+            if let Ok(doc) = parse_manifest(&text) {
+                keep.extend(doc.files);
+            }
+        }
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().to_string();
+            let stale_seg = name.ends_with(".rseg")
+                && !keep.iter().any(|k| *k == name);
+            let stale_manifest = name
+                .strip_prefix("MANIFEST-")
+                .and_then(|s| s.strip_suffix(".json"))
+                .and_then(|s| s.parse::<u64>().ok())
+                .is_some_and(|seq| seq + 1 < self.seq);
+            let stale_tmp = name.ends_with(".tmp");
+            if stale_seg || stale_manifest || stale_tmp {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+    use crate::datagen::corpus::Corpus;
+    use crate::retriever::sparse::doc_term_stats;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ralmspec-store-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn small_corpus(n: usize) -> Corpus {
+        Corpus::generate(&CorpusConfig {
+            n_docs: n, n_topics: 4, doc_len: (8, 20),
+            ..CorpusConfig::default()
+        })
+    }
+
+    fn sr_build(corpus: &Corpus, lo: usize, hi: usize)
+                -> (Vec<Document>, Vec<Vec<(u32, u16)>>) {
+        let docs: Vec<Document> =
+            corpus.iter().skip(lo).take(hi - lo).cloned().collect();
+        let mut tf = vec![0u16; corpus.vocab];
+        let dts = docs.iter()
+            .map(|d| doc_term_stats(&d.tokens, &mut tf))
+            .collect();
+        (docs, dts)
+    }
+
+    #[test]
+    fn sr_segment_roundtrips() {
+        let c = small_corpus(30);
+        let (docs, dts) = sr_build(&c, 0, 30);
+        let bytes = build_segment_bytes(&SegmentBuild {
+            kind: RetrieverKind::Sr,
+            doc_lo: 0,
+            docs: &docs,
+            rows: &[],
+            dim: 0,
+            vocab: c.vocab,
+            doc_terms: &dts,
+            graph: None,
+        });
+        let dir = tmpdir("sr-roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seg.rseg");
+        std::fs::write(&path, &bytes).unwrap();
+        let seg = Segment::load(&path).unwrap();
+        assert_eq!(seg.kind(), RetrieverKind::Sr);
+        assert_eq!(seg.doc_range(), (0, 30));
+        let back = seg.docs().unwrap();
+        assert_eq!(back.len(), 30);
+        for (a, b) in back.iter().zip(c.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.topic, b.topic);
+            assert_eq!(a.tokens, b.tokens);
+        }
+        // Postings agree with a direct Bm25-build-order construction.
+        let post = seg.post.as_ref().unwrap();
+        let (offsets, pdocs, ptfs) =
+            postings_arrays(c.vocab, 0, &dts);
+        assert_eq!(post.offsets.as_slice(), &offsets[..]);
+        assert_eq!(post.docs.as_slice(), &pdocs[..]);
+        assert_eq!(post.tfs.as_slice(), &ptfs[..]);
+        // Doc lengths and term stats.
+        let dl = seg.doc_len.as_ref().unwrap();
+        for (i, d) in docs.iter().enumerate() {
+            assert_eq!(dl.as_slice()[i], d.tokens.len() as u32);
+        }
+        let dt = seg.doc_terms.as_ref().unwrap();
+        let off = dt.offsets.as_slice();
+        for (i, want) in dts.iter().enumerate() {
+            let (a, b) = (off[i] as usize, off[i + 1] as usize);
+            let terms = &dt.terms.as_slice()[a..b];
+            let tfs = &dt.tfs.as_slice()[a..b];
+            let got: Vec<(u32, u16)> = terms.iter().copied()
+                .zip(tfs.iter().copied()).collect();
+            assert_eq!(&got, want);
+        }
+        assert!(seg.graph().unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_add_open_and_fallback() {
+        let dir = tmpdir("fallback");
+        let c = small_corpus(24);
+        let mut store = SegmentStore::create(&dir).unwrap();
+        let (d1, t1) = sr_build(&c, 0, 16);
+        store.add_segment(&build_segment_bytes(&SegmentBuild {
+            kind: RetrieverKind::Sr, doc_lo: 0, docs: &d1, rows: &[],
+            dim: 0, vocab: c.vocab, doc_terms: &t1, graph: None,
+        })).unwrap();
+        let (d2, t2) = sr_build(&c, 16, 24);
+        store.add_segment(&build_segment_bytes(&SegmentBuild {
+            kind: RetrieverKind::Sr, doc_lo: 16, docs: &d2, rows: &[],
+            dim: 0, vocab: c.vocab, doc_terms: &t2, graph: None,
+        })).unwrap();
+        drop(store);
+
+        let reopened = SegmentStore::open(&dir).unwrap();
+        assert_eq!(reopened.segments().len(), 2);
+        assert_eq!(reopened.n_docs(), 24);
+
+        // Torn write: truncate the newest segment file. Recovery must
+        // reject the newest manifest (checksum failure) and fall back to
+        // the previous one, which references only the first segment.
+        let newest = reopened.segments()[1].file_name().to_string();
+        drop(reopened);
+        let path = dir.join(&newest);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let recovered = SegmentStore::open(&dir).unwrap();
+        assert_eq!(recovered.segments().len(), 1);
+        assert_eq!(recovered.n_docs(), 16);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_keeps_two_manifests_of_files() {
+        let dir = tmpdir("gc");
+        let c = small_corpus(20);
+        let mut store = SegmentStore::create(&dir).unwrap();
+        for (lo, hi) in [(0usize, 10usize), (10, 20)] {
+            let (d, t) = sr_build(&c, lo, hi);
+            store.add_segment(&build_segment_bytes(&SegmentBuild {
+                kind: RetrieverKind::Sr, doc_lo: lo as u32, docs: &d,
+                rows: &[], dim: 0, vocab: c.vocab, doc_terms: &t,
+                graph: None,
+            })).unwrap();
+        }
+        // Compact: replace both with one full segment. The two old
+        // segment files must survive (previous manifest still lists
+        // them) until the *next* manifest write.
+        let (d, t) = sr_build(&c, 0, 20);
+        store.replace_all(&build_segment_bytes(&SegmentBuild {
+            kind: RetrieverKind::Sr, doc_lo: 0, docs: &d, rows: &[],
+            dim: 0, vocab: c.vocab, doc_terms: &t, graph: None,
+        })).unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir).unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().to_string())
+            .collect();
+        // seg-000003 is the compacted output; seg-000001/2 are still
+        // listed by the previous manifest and must survive this GC.
+        assert!(names.iter().any(|n| n == "seg-000003.rseg"),
+                "compacted segment missing: {names:?}");
+        assert!(names.iter().any(|n| n == "seg-000001.rseg"),
+                "previous-manifest file GC'd too early: {names:?}");
+        assert!(names.iter().any(|n| n == "seg-000002.rseg"),
+                "previous-manifest file GC'd too early: {names:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,542 @@
+//! Tiered read path: one [`Retriever`] over N segment tiers plus the
+//! memtable overlay.
+//!
+//! Bit-identity with the monolithic in-RAM backends is by construction,
+//! not by tolerance:
+//!
+//! * **EDR** — each tier's rows feed the *same* blocked multi-query
+//!   kernel ([`scan_rows_with`]) the in-RAM flat scan uses, with the
+//!   tier's first doc id as the base offset. Per-doc dot products are
+//!   range-independent, tiers are walked in ascending doc order, and the
+//!   shared [`TopK`] keeps a total order (score desc, id asc), so the
+//!   kept set and its sorted output equal the monolithic scan's exactly.
+//! * **SR** — the term-major outer loop is the monolithic walk with the
+//!   per-term posting list split at tier boundaries: for each term, tiers
+//!   are visited in ascending doc order, so every `(query, doc)`
+//!   accumulation — and even the first-touch push order feeding the heap
+//!   — is *identical* to [`Bm25::retrieve_batch`]'s, float op for float
+//!   op (global idf/avgdl, `w = idf * term_weight(tf, dl)`,
+//!   `acc += qtf * w`).
+//!
+//! Both are [`Shardable`] by doc range, so `--shards N` composes with
+//! tiering unchanged (the scatter-gather merge is already order-blind).
+//!
+//! [`Bm25::retrieve_batch`]: crate::retriever::sparse::Bm25
+//! [`scan_rows_with`]: crate::retriever::dense::scan_rows_with
+
+use super::format::{F32View, U32View};
+use super::store::{DocTermsView, PostingsView};
+use crate::retriever::dense::{dot_chunked, scan_rows_with,
+                              with_pack_scratch};
+use crate::retriever::sharded::{shard_bounds, ShardStrategy, Shardable,
+                                ShardedRetriever};
+use crate::retriever::sparse::{bm25_query_terms, bm25_term_weight};
+use crate::retriever::{DocId, Retriever, SpecQuery};
+use crate::util::{Scored, TopK};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// Dense tiers.
+
+/// One contiguous run of embedding rows: a sealed segment's mmap'd
+/// `DENSE` section, or the memtable's owned rows.
+pub(crate) struct DenseTier {
+    pub doc_lo: DocId,
+    pub doc_hi: DocId,
+    pub rows: F32View,
+}
+
+/// Tiered exact dense retriever: the flat scan split across segment
+/// tiers + memtable, sharing heaps so results match `DenseExact`
+/// bit-for-bit.
+pub struct TieredDense {
+    tiers: Arc<Vec<DenseTier>>,
+    dim: usize,
+    n_docs: usize,
+}
+
+impl TieredDense {
+    pub(crate) fn new(tiers: Vec<DenseTier>, dim: usize) -> Self {
+        let mut expect = 0;
+        for t in tiers.iter() {
+            assert_eq!(t.doc_lo, expect, "tiers must be contiguous");
+            assert_eq!(t.rows.len(),
+                       (t.doc_hi - t.doc_lo) as usize * dim,
+                       "tier row count mismatch");
+            expect = t.doc_hi;
+        }
+        Self { tiers: Arc::new(tiers), dim, n_docs: expect as usize }
+    }
+
+    /// The monolithic `batch_over_range`, with the scan split at tier
+    /// boundaries (ascending doc order; shared heaps).
+    fn batch_over_range(&self, qs: &[SpecQuery], k: usize, lo: DocId,
+                        hi: DocId) -> Vec<Vec<Scored>> {
+        for q in qs {
+            assert_eq!(q.dense.len(), self.dim, "query dim mismatch");
+        }
+        let mut heaps: Vec<TopK> =
+            qs.iter().map(|_| TopK::new(k.max(1))).collect();
+        let qrefs: Vec<&[f32]> =
+            qs.iter().map(|q| q.dense.as_slice()).collect();
+        with_pack_scratch(|qt| {
+            for t in self.tiers.iter() {
+                let a = t.doc_lo.max(lo);
+                let b = t.doc_hi.min(hi);
+                if a >= b {
+                    continue;
+                }
+                let s = (a - t.doc_lo) as usize * self.dim;
+                let e = (b - t.doc_lo) as usize * self.dim;
+                scan_rows_with(&t.rows.as_slice()[s..e], self.dim, a,
+                               &qrefs, &mut heaps, qt);
+            }
+        });
+        heaps.into_iter().map(|h| h.into_sorted()).collect()
+    }
+
+    fn row(&self, doc: DocId) -> &[f32] {
+        let i = self.tiers.partition_point(|t| t.doc_hi <= doc);
+        let t = &self.tiers[i];
+        let s = (doc - t.doc_lo) as usize * self.dim;
+        &t.rows.as_slice()[s..s + self.dim]
+    }
+}
+
+impl Retriever for TieredDense {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize)
+                      -> Vec<Vec<Scored>> {
+        self.batch_over_range(qs, k, 0, self.n_docs as DocId)
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
+        dot_chunked(&q.dense, self.row(doc))
+    }
+
+    fn len(&self) -> usize {
+        self.n_docs
+    }
+
+    fn name(&self) -> &'static str {
+        "EDR(tiered)"
+    }
+}
+
+/// Doc-range shard view over a shared [`TieredDense`].
+pub struct TieredDenseShard {
+    index: Arc<TieredDense>,
+    lo: DocId,
+    hi: DocId,
+}
+
+impl Retriever for TieredDenseShard {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize)
+                      -> Vec<Vec<Scored>> {
+        self.index.batch_over_range(qs, k, self.lo, self.hi)
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
+        self.index.score_doc(q, doc)
+    }
+
+    fn len(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    fn name(&self) -> &'static str {
+        "EDR(tiered-shard)"
+    }
+}
+
+impl Shardable for TieredDense {
+    type Shard = TieredDenseShard;
+
+    fn strategy() -> ShardStrategy {
+        ShardStrategy::DocRange
+    }
+
+    fn make_shards(this: &Arc<Self>, n: usize) -> Vec<Arc<Self::Shard>> {
+        shard_bounds(this.n_docs, n)
+            .into_iter()
+            .map(|(lo, hi)| Arc::new(TieredDenseShard {
+                index: this.clone(),
+                lo: lo as DocId,
+                hi: hi as DocId,
+            }))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sparse tiers.
+
+/// One tier of the BM25 index: packed postings + per-doc stats over a
+/// contiguous doc range (segment sections or owned memtable arrays).
+pub(crate) struct SparseTier {
+    pub doc_lo: DocId,
+    pub doc_hi: DocId,
+    pub post: PostingsView,
+    pub doc_len: U32View,
+    pub doc_terms: DocTermsView,
+}
+
+/// Tiered BM25: per-term posting walks split at tier boundaries, scored
+/// with **global** statistics (idf over all tiers, global avgdl) so
+/// scores equal the monolithic index's bit-for-bit.
+pub struct TieredSparse {
+    tiers: Arc<Vec<SparseTier>>,
+    idf: Arc<Vec<f32>>,
+    k1: f32,
+    b: f32,
+    avgdl: f32,
+    n_docs: usize,
+}
+
+impl TieredSparse {
+    pub(crate) fn new(tiers: Vec<SparseTier>, idf: Arc<Vec<f32>>,
+                      k1: f32, b: f32, avgdl: f32) -> Self {
+        let mut expect = 0;
+        for t in tiers.iter() {
+            assert_eq!(t.doc_lo, expect, "tiers must be contiguous");
+            expect = t.doc_hi;
+        }
+        Self { tiers: Arc::new(tiers), idf, k1, b, avgdl,
+               n_docs: expect as usize }
+    }
+
+    #[inline]
+    fn term_weight(&self, tf: f32, dl: f32) -> f32 {
+        bm25_term_weight(tf, dl, self.k1, self.b, self.avgdl)
+    }
+
+    /// The monolithic `Bm25::retrieve_batch_range`, with each posting
+    /// list walked tier by tier in ascending doc order — identical
+    /// accumulation and first-touch order, not merely an equivalent set.
+    fn retrieve_batch_range(&self, qs: &[SpecQuery], k: usize, lo: DocId,
+                            hi: DocId) -> Vec<Vec<Scored>> {
+        let mut pairs: Vec<(u32, u32, f32)> = Vec::new();
+        for (qi, q) in qs.iter().enumerate() {
+            for (t, qtf) in bm25_query_terms(&q.terms, &self.idf) {
+                pairs.push((t, qi as u32, qtf));
+            }
+        }
+        pairs.sort_unstable_by_key(|&(t, qi, _)| (t, qi));
+        let mut acc: Vec<Vec<f32>> =
+            qs.iter().map(|_| vec![0.0f32; self.n_docs]).collect();
+        let mut touched: Vec<Vec<DocId>> =
+            qs.iter().map(|_| Vec::new()).collect();
+        let mut idx = 0;
+        while idx < pairs.len() {
+            let t = pairs[idx].0;
+            let mut end = idx + 1;
+            while end < pairs.len() && pairs[end].0 == t {
+                end += 1;
+            }
+            let users = &pairs[idx..end];
+            idx = end;
+            let idf = self.idf[t as usize];
+            for tier in self.tiers.iter() {
+                if tier.doc_hi <= lo {
+                    continue;
+                }
+                if tier.doc_lo >= hi {
+                    break;
+                }
+                let offsets = tier.post.offsets.as_slice();
+                let (pa, pb) = (offsets[t as usize] as usize,
+                                offsets[t as usize + 1] as usize);
+                let docs = &tier.post.docs.as_slice()[pa..pb];
+                let tfs = &tier.post.tfs.as_slice()[pa..pb];
+                let dls = tier.doc_len.as_slice();
+                let start = docs.partition_point(|&d| d < lo);
+                for (i, &doc) in docs.iter().enumerate().skip(start) {
+                    if doc >= hi {
+                        break;
+                    }
+                    let dl = dls[(doc - tier.doc_lo) as usize] as f32;
+                    let w = idf * self.term_weight(tfs[i] as f32, dl);
+                    for &(_, qi, qtf) in users {
+                        let qi = qi as usize;
+                        if acc[qi][doc as usize] == 0.0 {
+                            touched[qi].push(doc);
+                        }
+                        acc[qi][doc as usize] += qtf * w;
+                    }
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(qs.len());
+        for (a, tq) in acc.iter_mut().zip(touched.iter()) {
+            let mut tk = TopK::new(k.max(1));
+            for &doc in tq.iter() {
+                tk.push(doc, a[doc as usize]);
+            }
+            out.push(tk.into_sorted());
+        }
+        out
+    }
+}
+
+impl Retriever for TieredSparse {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize)
+                      -> Vec<Vec<Scored>> {
+        self.retrieve_batch_range(qs, k, 0, self.n_docs as DocId)
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
+        // Exact BM25 from the stored per-doc term stats, same float op
+        // order as `Bm25::score_doc`.
+        let terms = bm25_query_terms(&q.terms, &self.idf);
+        let i = self.tiers.partition_point(|t| t.doc_hi <= doc);
+        let tier = &self.tiers[i];
+        let local = (doc - tier.doc_lo) as usize;
+        let off = tier.doc_terms.offsets.as_slice();
+        let (a, b) = (off[local] as usize, off[local + 1] as usize);
+        let dterms = &tier.doc_terms.terms.as_slice()[a..b];
+        let dtfs = &tier.doc_terms.tfs.as_slice()[a..b];
+        let dl = tier.doc_len.as_slice()[local] as f32;
+        let mut score = 0.0;
+        for (t, qtf) in terms {
+            if let Ok(j) = dterms.binary_search(&t) {
+                score += qtf * self.idf[t as usize]
+                    * self.term_weight(dtfs[j] as f32, dl);
+            }
+        }
+        score
+    }
+
+    fn len(&self) -> usize {
+        self.n_docs
+    }
+
+    fn name(&self) -> &'static str {
+        "SR(tiered)"
+    }
+}
+
+/// Doc-range shard view over a shared [`TieredSparse`].
+pub struct TieredSparseShard {
+    index: Arc<TieredSparse>,
+    lo: DocId,
+    hi: DocId,
+}
+
+impl Retriever for TieredSparseShard {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize)
+                      -> Vec<Vec<Scored>> {
+        self.index.retrieve_batch_range(qs, k, self.lo, self.hi)
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
+        self.index.score_doc(q, doc)
+    }
+
+    fn len(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    fn name(&self) -> &'static str {
+        "SR(tiered-shard)"
+    }
+}
+
+impl Shardable for TieredSparse {
+    type Shard = TieredSparseShard;
+
+    fn strategy() -> ShardStrategy {
+        ShardStrategy::DocRange
+    }
+
+    fn make_shards(this: &Arc<Self>, n: usize) -> Vec<Arc<Self::Shard>> {
+        shard_bounds(this.n_docs, n)
+            .into_iter()
+            .map(|(lo, hi)| Arc::new(TieredSparseShard {
+                index: this.clone(),
+                lo: lo as DocId,
+                hi: hi as DocId,
+            }))
+            .collect()
+    }
+}
+
+/// Wrap a tiered backend per the configured shard count, mirroring the
+/// monolithic snapshot path (`shards <= 1` stays unwrapped).
+pub(crate) fn maybe_shard<T>(base: Arc<T>, shards: usize)
+                             -> Arc<dyn Retriever>
+where
+    T: Shardable + Retriever + Send + Sync + 'static,
+{
+    if shards > 1 {
+        Arc::new(ShardedRetriever::new(base, shards))
+    } else {
+        base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::format::U16View;
+    use crate::config::CorpusConfig;
+    use crate::datagen::corpus::Corpus;
+    use crate::datagen::embedding::{embed_corpus, HashEncoder};
+    use crate::retriever::dense::{DenseExact, EmbeddingMatrix};
+    use crate::retriever::sparse::{bm25_idf, doc_term_stats, Bm25};
+    use crate::retriever::segment::store::postings_arrays;
+    use crate::util::Rng;
+
+    const DIM: usize = 24;
+
+    fn corpus(n: usize) -> Corpus {
+        Corpus::generate(&CorpusConfig {
+            n_docs: n, n_topics: 8, doc_len: (16, 60),
+            ..CorpusConfig::default()
+        })
+    }
+
+    fn dense_tiers(rows: &[f32], cuts: &[usize]) -> Vec<DenseTier> {
+        let mut tiers = Vec::new();
+        let mut lo = 0usize;
+        for &hi in cuts {
+            tiers.push(DenseTier {
+                doc_lo: lo as DocId,
+                doc_hi: hi as DocId,
+                rows: F32View::owned(rows[lo * DIM..hi * DIM].to_vec()),
+            });
+            lo = hi;
+        }
+        tiers
+    }
+
+    fn sparse_tiers(c: &Corpus, cuts: &[usize])
+                    -> (Vec<SparseTier>, Arc<Vec<f32>>, f32) {
+        let docs: Vec<_> = c.iter().cloned().collect();
+        let mut tf = vec![0u16; c.vocab];
+        let all_terms: Vec<Vec<(u32, u16)>> = docs.iter()
+            .map(|d| doc_term_stats(&d.tokens, &mut tf))
+            .collect();
+        let mut df = vec![0usize; c.vocab];
+        for dt in &all_terms {
+            for &(t, _) in dt {
+                df[t as usize] += 1;
+            }
+        }
+        let n = docs.len();
+        let idf: Vec<f32> =
+            df.iter().map(|&d| bm25_idf(n, d)).collect();
+        let avgdl = c.avg_doc_len() as f32;
+        let mut tiers = Vec::new();
+        let mut lo = 0usize;
+        for &hi in cuts {
+            let dts = &all_terms[lo..hi];
+            let (offsets, pdocs, ptfs) =
+                postings_arrays(c.vocab, lo as DocId, dts);
+            let mut dt_off = vec![0u32];
+            let mut dt_terms = Vec::new();
+            let mut dt_tfs = Vec::new();
+            for dt in dts {
+                for &(t, f) in dt {
+                    dt_terms.push(t);
+                    dt_tfs.push(f);
+                }
+                dt_off.push(dt_terms.len() as u32);
+            }
+            tiers.push(SparseTier {
+                doc_lo: lo as DocId,
+                doc_hi: hi as DocId,
+                post: PostingsView {
+                    offsets: U32View::owned(offsets),
+                    docs: U32View::owned(pdocs),
+                    tfs: U16View::owned(ptfs),
+                },
+                doc_len: U32View::owned(
+                    docs[lo..hi].iter()
+                        .map(|d| d.tokens.len() as u32).collect()),
+                doc_terms: DocTermsView {
+                    offsets: U32View::owned(dt_off),
+                    terms: U32View::owned(dt_terms),
+                    tfs: U16View::owned(dt_tfs),
+                },
+            });
+            lo = hi;
+        }
+        (tiers, Arc::new(idf), avgdl)
+    }
+
+    #[test]
+    fn tiered_dense_matches_monolithic() {
+        let c = corpus(300);
+        let enc = HashEncoder::new(DIM, 7);
+        let rows = embed_corpus(&enc, &c);
+        let mono = DenseExact::new(Arc::new(
+            EmbeddingMatrix::new(DIM, rows.clone())));
+        let tiered =
+            TieredDense::new(dense_tiers(&rows, &[100, 250, 300]), DIM);
+        let mut rng = Rng::new(3);
+        let qs: Vec<SpecQuery> = (0..5)
+            .map(|_| SpecQuery::dense_only(rng.unit_vector(DIM)))
+            .collect();
+        assert_eq!(mono.retrieve_batch(&qs, 7),
+                   tiered.retrieve_batch(&qs, 7));
+        for q in &qs {
+            for d in [0u32, 99, 100, 299] {
+                assert_eq!(mono.score_doc(q, d), tiered.score_doc(q, d));
+            }
+        }
+    }
+
+    #[test]
+    fn tiered_dense_shards_match_monolithic() {
+        let c = corpus(200);
+        let enc = HashEncoder::new(DIM, 8);
+        let rows = embed_corpus(&enc, &c);
+        let mono = DenseExact::new(Arc::new(
+            EmbeddingMatrix::new(DIM, rows.clone())));
+        let tiered = Arc::new(
+            TieredDense::new(dense_tiers(&rows, &[64, 200]), DIM));
+        let sharded = maybe_shard(tiered, 2);
+        let mut rng = Rng::new(4);
+        let qs: Vec<SpecQuery> = (0..4)
+            .map(|_| SpecQuery::dense_only(rng.unit_vector(DIM)))
+            .collect();
+        assert_eq!(mono.retrieve_batch(&qs, 5),
+                   sharded.retrieve_batch(&qs, 5));
+    }
+
+    #[test]
+    fn tiered_sparse_matches_monolithic() {
+        let c = corpus(300);
+        let mono = Bm25::build(&c, 0.9, 0.4);
+        let (tiers, idf, avgdl) = sparse_tiers(&c, &[80, 200, 300]);
+        let tiered = TieredSparse::new(tiers, idf, 0.9, 0.4, avgdl);
+        let mut rng = Rng::new(5);
+        let qs: Vec<SpecQuery> = (0..5)
+            .map(|i| SpecQuery::sparse_only(
+                c.topic_tokens(i % 8, 8, &mut rng)))
+            .collect();
+        assert_eq!(mono.retrieve_batch(&qs, 7),
+                   tiered.retrieve_batch(&qs, 7));
+        for q in &qs {
+            for d in [0u32, 79, 80, 299] {
+                assert_eq!(mono.score_doc(q, d), tiered.score_doc(q, d));
+            }
+        }
+    }
+
+    #[test]
+    fn tiered_sparse_shards_match_monolithic() {
+        let c = corpus(240);
+        let mono = Bm25::build(&c, 0.9, 0.4);
+        let (tiers, idf, avgdl) = sparse_tiers(&c, &[100, 240]);
+        let tiered = Arc::new(
+            TieredSparse::new(tiers, idf, 0.9, 0.4, avgdl));
+        let sharded = maybe_shard(tiered, 3);
+        let mut rng = Rng::new(6);
+        let qs: Vec<SpecQuery> = (0..4)
+            .map(|i| SpecQuery::sparse_only(
+                c.topic_tokens(i % 8, 8, &mut rng)))
+            .collect();
+        assert_eq!(mono.retrieve_batch(&qs, 5),
+                   sharded.retrieve_batch(&qs, 5));
+    }
+}

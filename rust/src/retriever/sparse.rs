@@ -50,6 +50,65 @@ thread_local! {
         RefCell::new(SparseScratch::default());
 }
 
+/// The BM25 tf-saturation / length-normalization weight, as a free
+/// function so the segment tier (`retriever::segment`) scores mapped
+/// postings through literally the same expression as the in-RAM index.
+#[inline]
+pub(crate) fn bm25_term_weight(tf: f32, dl: f32, k1: f32, b: f32,
+                               avgdl: f32) -> f32 {
+    // BM25 tf saturation with length normalization.
+    tf * (k1 + 1.0) / (tf + k1 * (1.0 - b + b * dl / avgdl))
+}
+
+/// Robertson IDF floored at 0, same arithmetic as [`Bm25::build`]'s
+/// inline computation (f32 throughout).
+#[inline]
+pub(crate) fn bm25_idf(n_docs: usize, df: usize) -> f32 {
+    let df = df as f32;
+    ((n_docs as f32 - df + 0.5) / (df + 0.5)).ln().max(0.0)
+}
+
+/// Query terms with multiplicity collapsed to (term, qtf), zero-idf
+/// terms dropped — the single tokenization every BM25 scorer shares.
+pub(crate) fn bm25_query_terms(terms: &[u32], idf: &[f32])
+                               -> Vec<(u32, f32)> {
+    let mut sorted: Vec<u32> = terms.to_vec();
+    sorted.sort_unstable();
+    let mut out: Vec<(u32, f32)> = Vec::new();
+    for &t in &sorted {
+        if (t as usize) >= idf.len() || idf[t as usize] <= 0.0 {
+            continue;
+        }
+        match out.last_mut() {
+            Some((lt, c)) if *lt == t => *c += 1.0,
+            _ => out.push((t, 1.0)),
+        }
+    }
+    out
+}
+
+/// Sorted-unique (term, tf) pairs for one document, `u16`-saturated —
+/// the per-doc bookkeeping walk shared by [`Bm25::build`],
+/// [`Bm25::append_docs`], and the segment serializer. `tf_scratch` must
+/// be all-zero and vocab-sized on entry; it is restored on return.
+pub(crate) fn doc_term_stats(tokens: &[u32], tf_scratch: &mut [u16])
+                             -> Vec<(u32, u16)> {
+    let mut seen: Vec<u32> = Vec::with_capacity(tokens.len());
+    for &t in tokens {
+        if tf_scratch[t as usize] == 0 {
+            seen.push(t);
+        }
+        tf_scratch[t as usize] = tf_scratch[t as usize].saturating_add(1);
+    }
+    seen.sort_unstable();
+    let terms: Vec<(u32, u16)> =
+        seen.iter().map(|&t| (t, tf_scratch[t as usize])).collect();
+    for &(t, _) in &terms {
+        tf_scratch[t as usize] = 0;
+    }
+    terms
+}
+
 /// `Clone` so a live-update writer (`retriever::epoch::MutableBm25`) can
 /// keep a mutable master index and publish immutable per-epoch snapshots.
 #[derive(Debug, Clone)]
@@ -77,61 +136,31 @@ impl Bm25 {
         let mut doc_terms = Vec::with_capacity(n_docs);
         let mut tf_scratch: Vec<u16> = vec![0; vocab];
 
-        for doc in &corpus.docs {
+        for doc in corpus.iter() {
             doc_len.push(doc.tokens.len() as u32);
-            let mut seen: Vec<u32> = Vec::with_capacity(doc.tokens.len());
-            for &t in &doc.tokens {
-                if tf_scratch[t as usize] == 0 {
-                    seen.push(t);
-                }
-                tf_scratch[t as usize] = tf_scratch[t as usize].saturating_add(1);
-            }
-            seen.sort_unstable();
-            let terms: Vec<(u32, u16)> =
-                seen.iter().map(|&t| (t, tf_scratch[t as usize])).collect();
+            let terms = doc_term_stats(&doc.tokens, &mut tf_scratch);
             for &(t, tf) in &terms {
                 postings[t as usize].push((doc.id, tf));
-                tf_scratch[t as usize] = 0;
             }
             doc_terms.push(terms);
         }
 
         let avgdl = corpus.avg_doc_len() as f32;
-        let idf: Vec<f32> = postings
-            .iter()
-            .map(|p| {
-                let df = p.len() as f32;
-                let x = ((n_docs as f32 - df + 0.5) / (df + 0.5)).ln();
-                x.max(0.0)
-            })
-            .collect();
+        let idf: Vec<f32> =
+            postings.iter().map(|p| bm25_idf(n_docs, p.len())).collect();
 
         Self { k1, b, n_docs, avgdl, doc_len, postings, idf, doc_terms }
     }
 
     #[inline]
     fn term_weight(&self, tf: f32, dl: f32) -> f32 {
-        // BM25 tf saturation with length normalization.
-        tf * (self.k1 + 1.0)
-            / (tf + self.k1 * (1.0 - self.b + self.b * dl / self.avgdl))
+        bm25_term_weight(tf, dl, self.k1, self.b, self.avgdl)
     }
 
     /// Query terms with multiplicity collapsed to (term, qtf), zero-idf
     /// terms dropped (consistent everywhere).
     fn query_terms(&self, terms: &[u32]) -> Vec<(u32, f32)> {
-        let mut sorted: Vec<u32> = terms.to_vec();
-        sorted.sort_unstable();
-        let mut out: Vec<(u32, f32)> = Vec::new();
-        for &t in &sorted {
-            if (t as usize) >= self.idf.len() || self.idf[t as usize] <= 0.0 {
-                continue;
-            }
-            match out.last_mut() {
-                Some((lt, c)) if *lt == t => *c += 1.0,
-                _ => out.push((t, 1.0)),
-            }
-        }
-        out
+        bm25_query_terms(terms, &self.idf)
     }
 
     pub fn stats(&self) -> (usize, f32) {
@@ -159,20 +188,9 @@ impl Bm25 {
             assert!(doc.tokens.iter().all(|&t| (t as usize) < vocab),
                     "ingested doc uses tokens outside the index vocab");
             self.doc_len.push(doc.tokens.len() as u32);
-            let mut seen: Vec<u32> = Vec::with_capacity(doc.tokens.len());
-            for &t in &doc.tokens {
-                if tf_scratch[t as usize] == 0 {
-                    seen.push(t);
-                }
-                tf_scratch[t as usize] =
-                    tf_scratch[t as usize].saturating_add(1);
-            }
-            seen.sort_unstable();
-            let terms: Vec<(u32, u16)> =
-                seen.iter().map(|&t| (t, tf_scratch[t as usize])).collect();
+            let terms = doc_term_stats(&doc.tokens, &mut tf_scratch);
             for &(t, tf) in &terms {
                 self.postings[t as usize].push((doc.id, tf));
-                tf_scratch[t as usize] = 0;
             }
             self.doc_terms.push(terms);
             self.n_docs += 1;
@@ -190,11 +208,7 @@ impl Bm25 {
         self.idf = self
             .postings
             .iter()
-            .map(|p| {
-                let df = p.len() as f32;
-                let x = ((n_docs as f32 - df + 0.5) / (df + 0.5)).ln();
-                x.max(0.0)
-            })
+            .map(|p| bm25_idf(n_docs, p.len()))
             .collect();
     }
 }
@@ -505,9 +519,10 @@ mod tests {
             ..CorpusConfig::default()
         });
         let mut small = big.clone();
-        small.docs.truncate(350);
+        small.truncate(350);
         let mut grown = Bm25::build(&small, 0.9, 0.4);
-        grown.append_docs(&big.docs[350..]);
+        let fresh_docs: Vec<_> = big.iter().skip(350).cloned().collect();
+        grown.append_docs(&fresh_docs);
         let fresh = Bm25::build(&big, 0.9, 0.4);
         assert_eq!(grown.n_docs, fresh.n_docs);
         assert_eq!(grown.doc_len, fresh.doc_len);

@@ -1,0 +1,219 @@
+//! Read-only byte blobs with zero-copy `mmap` backing.
+//!
+//! Immutable KB segment files (`retriever::segment`) are loaded through
+//! [`Blob`]: on Unix the file is `mmap`ed read-only (`PROT_READ` +
+//! `MAP_PRIVATE`), so a cold load costs page-table setup rather than a
+//! full copy and the kernel pages index bytes in on first touch; on other
+//! platforms — or if the mapping fails — the file is read into the heap,
+//! which is slower but bit-identical (the segment layer never observes
+//! the difference). Frozen in-RAM tiers use [`Blob::from_vec`], so one
+//! scan implementation covers mapped and owned bytes alike.
+//!
+//! The syscalls are declared directly (`std` already links libc on every
+//! Unix target) — no new dependency, per the repo's no-new-crates rule.
+
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(addr: *mut c_void, len: usize, prot: c_int,
+                    flags: c_int, fd: c_int, offset: i64) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub fn map_failed() -> *mut c_void {
+        -1isize as *mut c_void
+    }
+}
+
+enum Backing {
+    /// A live read-only file mapping (unmapped on drop).
+    #[cfg(unix)]
+    Mapped {
+        ptr: *mut std::os::raw::c_void,
+        len: usize,
+    },
+    /// Heap-owned bytes: non-Unix fallback, empty files, and frozen
+    /// in-RAM tiers.
+    Heap(Vec<u8>),
+}
+
+/// An immutable byte buffer, either `mmap`ed from a file or heap-owned.
+///
+/// ```
+/// use ralmspec::runtime::Blob;
+///
+/// let path = std::env::temp_dir()
+///     .join(format!("ralmspec-blob-doc-{}", std::process::id()));
+/// std::fs::write(&path, b"segment bytes").unwrap();
+/// let blob = Blob::open(&path).unwrap();
+/// assert_eq!(blob.bytes(), b"segment bytes");
+/// std::fs::remove_file(&path).unwrap();
+/// ```
+pub struct Blob {
+    backing: Backing,
+}
+
+// SAFETY: the mapping is created PROT_READ and never mutated or remapped
+// after construction; the pointer is exclusively owned by this Blob and
+// only released in Drop. Concurrent `&self` reads of immutable memory
+// are safe from any thread.
+unsafe impl Send for Blob {}
+// SAFETY: see the Send impl — all access is read-only.
+unsafe impl Sync for Blob {}
+
+impl Blob {
+    /// Map `path` read-only. Falls back to a heap read if the platform
+    /// has no mmap or the mapping fails; empty files always use the heap
+    /// backing (zero-length mappings are an error on most systems).
+    pub fn open(path: &Path) -> anyhow::Result<Self> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path).map_err(|e| {
+                anyhow::anyhow!("opening {}: {e}", path.display())
+            })?;
+            let len = file.metadata()?.len() as usize;
+            if len == 0 {
+                return Ok(Self { backing: Backing::Heap(Vec::new()) });
+            }
+            // SAFETY: fd is a valid open file descriptor for the whole
+            // call; NULL addr + MAP_PRIVATE lets the kernel pick the
+            // address; we only ever read the returned region and unmap
+            // it exactly once (Drop).
+            let ptr = unsafe {
+                sys::mmap(std::ptr::null_mut(), len, sys::PROT_READ,
+                          sys::MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr != sys::map_failed() {
+                return Ok(Self { backing: Backing::Mapped { ptr, len } });
+            }
+            // Mapping failed (exotic filesystem, resource limits):
+            // degrade to a plain read.
+        }
+        let bytes = std::fs::read(path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e}", path.display())
+        })?;
+        Ok(Self { backing: Backing::Heap(bytes) })
+    }
+
+    /// Wrap heap-owned bytes (frozen memtable tiers use this so mapped
+    /// and in-RAM segments share one code path).
+    pub fn from_vec(bytes: Vec<u8>) -> Self {
+        Self { backing: Backing::Heap(bytes) }
+    }
+
+    /// The full byte contents.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { ptr, len } => {
+                // SAFETY: ptr/len describe a live PROT_READ mapping owned
+                // by self; the lifetime of the slice is tied to &self,
+                // and the mapping outlives self only until Drop.
+                unsafe {
+                    std::slice::from_raw_parts(*ptr as *const u8, *len)
+                }
+            }
+            Backing::Heap(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { len, .. } => *len,
+            Backing::Heap(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when backed by a live file mapping (vs heap bytes) — the
+    /// storage bench reports this so a silent heap fallback is visible.
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { .. } => true,
+            Backing::Heap(_) => false,
+        }
+    }
+}
+
+impl Drop for Blob {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = self.backing {
+            // SAFETY: ptr/len came from a successful mmap in `open` and
+            // are unmapped exactly once, here.
+            unsafe {
+                sys::munmap(ptr, len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Blob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Blob")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("ralmspec-blob-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn open_roundtrips_bytes() {
+        let p = tmp("roundtrip");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&p, &payload).unwrap();
+        let b = Blob::open(&p).unwrap();
+        assert_eq!(b.bytes(), &payload[..]);
+        assert_eq!(b.len(), payload.len());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn empty_file_is_heap_backed() {
+        let p = tmp("empty");
+        std::fs::write(&p, b"").unwrap();
+        let b = Blob::open(&p).unwrap();
+        assert!(b.is_empty());
+        assert!(!b.is_mapped());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn from_vec_is_owned() {
+        let b = Blob::from_vec(vec![1, 2, 3]);
+        assert_eq!(b.bytes(), &[1, 2, 3]);
+        assert!(!b.is_mapped());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_open_uses_mmap() {
+        let p = tmp("mapped");
+        std::fs::write(&p, b"x".repeat(4096)).unwrap();
+        let b = Blob::open(&p).unwrap();
+        assert!(b.is_mapped(), "non-empty files should map on unix");
+        std::fs::remove_file(&p).unwrap();
+    }
+}

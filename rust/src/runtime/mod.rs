@@ -8,10 +8,12 @@
 //! 64-bit-id serialized protos; the text parser reassigns ids).
 
 pub mod artifact;
+pub mod blob;
 pub mod engine;
 pub mod manifest;
 
 pub use artifact::{Artifact, ArgValue};
+pub use blob::Blob;
 pub use engine::{Engine, HiddenExtractor, PjrtEncoder, PjrtLm, PjrtState};
 pub use manifest::{IndexJson, IoEntry, Manifest};
 

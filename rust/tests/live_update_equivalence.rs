@@ -143,7 +143,7 @@ fn sweep_kind(kind: RetrieverKind, seed: u64) {
         let mut cfg = small_config(seed);
         cfg.retriever.shards = shards;
         let corpus = Corpus::generate(&cfg.corpus);
-        let emb = embed_corpus(&enc, &corpus.docs);
+        let emb = embed_corpus(&enc, &corpus);
         let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
         let live = LiveKb::build(&cfg, kind, corpus, emb, DIM);
         for (cell, &(concurrency, kb_parallel)) in
@@ -267,7 +267,7 @@ fn router_ingest_while_serving_smoke() {
     let cfg = small_config(seed);
     let enc = HashEncoder::new(DIM, seed ^ 0xEC);
     let corpus = Corpus::generate(&cfg.corpus);
-    let emb = embed_corpus(&enc, &corpus.docs);
+    let emb = embed_corpus(&enc, &corpus);
     let live = LiveKb::build(&cfg, RetrieverKind::Edr, corpus.clone(),
                              emb, DIM);
     let base_snapshot = live.epochs.snapshot();

@@ -1,0 +1,346 @@
+//! THE persistence correctness property (DESIGN.md ADR-009): a
+//! segment-backed knowledge base — mmap'd immutable segments + in-RAM
+//! memtable, frozen and compacted in the background — must be
+//! **bit-identical** to the fully in-RAM backends of ADR-006, for every
+//! retriever class, at every epoch, across freezes, compactions, process
+//! restarts (save → mmap-load → query), and torn writes (a truncated
+//! segment is rejected by its checksum and recovery falls back to the
+//! previous manifest).
+//!
+//! Sweeps: EDR / HNSW / SR × shards {1, 2} (writer-driven, fully
+//! deterministic) and EDR / HNSW / SR × kb_parallel {0, 4} engine-served
+//! under concurrent ingestion **and** live compaction.
+
+use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+use ralmspec::datagen::{embed_corpus, embed_doc, generate_questions,
+                        Corpus, Dataset, Encoder, HashEncoder};
+use ralmspec::eval::{build_spec_options, run_engine_cell_live, QaMethod};
+use ralmspec::lm::MockLm;
+use ralmspec::retriever::{CompactionWorker, LiveKb, MutableRetriever,
+                          Retriever, SegmentStore, SegmentedKb, SpecQuery};
+use ralmspec::spec::{QueryBuilder, QueryMode, SpecPipeline};
+use ralmspec::util::Scored;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const DIM: usize = ralmspec::runtime::RETRIEVAL_DIM;
+
+fn small_config(seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.corpus = CorpusConfig {
+        n_docs: 220,
+        n_topics: 12,
+        doc_len: (24, 64),
+        seed,
+        ..CorpusConfig::default()
+    };
+    cfg.retriever.hnsw_ef_construction = 40;
+    cfg.retriever.hnsw_ef_search = 32;
+    cfg.spec.max_new_tokens = 20;
+    cfg.ingest.batch = 5;
+    // Tiny memtable so a handful of ingested docs forces segment
+    // freezes (the paths under test).
+    cfg.segment.memtable_docs = 8;
+    cfg.segment.compact_interval_ms = 5;
+    cfg.segment.compact_segments = 2;
+    cfg
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ralmspec-segtest-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Probe queries that exercise both retrieval views (dense + terms).
+fn probes(corpus: &Corpus, enc: &HashEncoder, n: usize,
+          seed: u64) -> Vec<SpecQuery> {
+    let mut rng = ralmspec::util::Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let topic = (i % corpus.n_topics) as u32;
+            let terms = corpus.topic_tokens(topic, 24, &mut rng);
+            SpecQuery { dense: enc.encode(&terms), terms }
+        })
+        .collect()
+}
+
+fn bits(kb: &dyn Retriever, qs: &[SpecQuery]) -> Vec<Vec<(u32, u32)>> {
+    kb.retrieve_batch(qs, 10)
+        .into_iter()
+        .map(|hits: Vec<Scored>| {
+            hits.into_iter()
+                .map(|s| (s.id, s.score.to_bits()))
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_same(reference: &Arc<LiveKb>, segmented: &Arc<LiveKb>,
+               qs: &[SpecQuery], ctx: &str) {
+    let r = reference.epochs.snapshot();
+    let s = segmented.epochs.snapshot();
+    assert_eq!(r.kb.len(), s.kb.len(), "{ctx}: KB length diverged");
+    assert_eq!(r.corpus.len(), s.corpus.len(), "{ctx}: corpus diverged");
+    assert_eq!(bits(r.kb.as_ref(), qs), bits(s.kb.as_ref(), qs),
+               "{ctx}: SEGMENT-BACKED RETRIEVAL DIVERGED FROM IN-RAM");
+    // The cache-side metric must agree too (rank preservation, §3).
+    for (qi, q) in qs.iter().enumerate() {
+        for doc in [0u32, (r.kb.len() as u32) / 2, r.kb.len() as u32 - 1] {
+            assert_eq!(r.kb.score_doc(q, doc).to_bits(),
+                       s.kb.score_doc(q, doc).to_bits(),
+                       "{ctx}: score_doc diverged (q={qi} doc={doc})");
+        }
+    }
+}
+
+/// Writer-driven equivalence: an in-RAM LiveKb and a segment-backed one
+/// fed the exact same ingest sequence must publish bit-identical
+/// snapshots at every epoch — through memtable freezes, an explicit
+/// compaction, and a cold reopen from disk.
+fn check_kind(kind: RetrieverKind, seed: u64) {
+    for shards in [1usize, 2] {
+        let mut cfg = small_config(seed);
+        cfg.retriever.shards = shards;
+        let dir = fresh_dir(&format!("{:?}-s{shards}", kind));
+        let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+        let corpus = Corpus::generate(&cfg.corpus);
+        let emb = embed_corpus(&enc, &corpus);
+        let reference =
+            LiveKb::build(&cfg, kind, corpus.clone(), emb.clone(), DIM);
+        let mut seg_cfg = cfg.clone();
+        seg_cfg.segment.kb_dir = Some(dir.clone());
+        let segmented = LiveKb::build_auto(&seg_cfg, kind, corpus.clone(),
+                                           emb.clone(), DIM)
+            .unwrap();
+        let qs = probes(&corpus, &enc, 6, seed ^ 0x9A);
+        assert_same(&reference, &segmented, &qs,
+                    &format!("{kind:?} shards={shards} epoch0"));
+
+        // Three ingest rounds of 10 docs: with memtable_docs=8 the
+        // segment side freezes mid-stream while the publish cadence
+        // (batch=5) stays identical on both sides.
+        let mut next_id = corpus.len() as u32;
+        for round in 0u64..3 {
+            let docs = corpus.synth_docs(seed ^ (0x51 + round), next_id,
+                                         10, (24, 64));
+            next_id += docs.len() as u32;
+            for live in [&reference, &segmented] {
+                let mut w = live.writer.lock().unwrap();
+                for d in &docs {
+                    w.ingest(d.tokens.clone(), d.topic,
+                             embed_doc(&enc, d)).unwrap();
+                }
+                w.flush().unwrap();
+            }
+            assert_eq!(reference.epochs.epoch(), segmented.epochs.epoch());
+            assert_same(&reference, &segmented, &qs,
+                        &format!("{kind:?} shards={shards} round={round}"));
+        }
+
+        // Compaction folds every tier into one segment and republishes:
+        // one more epoch, zero result changes.
+        {
+            let mut w = segmented.writer.lock().unwrap();
+            assert!(w.tier_count() > 1,
+                    "{kind:?}: ingest rounds must have left tiers behind");
+            assert!(w.run_compaction().unwrap());
+            assert_eq!(w.tier_count(), 1);
+        }
+        assert_same(&reference, &segmented, &qs,
+                    &format!("{kind:?} shards={shards} post-compaction"));
+
+        // Cold restart: reopen from disk (mmap path) and compare again.
+        drop(segmented);
+        let reopened = LiveKb::build_auto(&seg_cfg, kind, corpus.clone(),
+                                          emb.clone(), DIM)
+            .unwrap();
+        assert_eq!(reopened.epochs.snapshot().kb.len(),
+                   reference.epochs.snapshot().kb.len());
+        assert_same(&reference, &reopened, &qs,
+                    &format!("{kind:?} shards={shards} reopened"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn segment_backed_matches_in_ram_edr() {
+    check_kind(RetrieverKind::Edr, 0xA1FE);
+}
+
+#[test]
+fn segment_backed_matches_in_ram_adr() {
+    check_kind(RetrieverKind::Adr, 0xA2FE);
+}
+
+#[test]
+fn segment_backed_matches_in_ram_sr() {
+    check_kind(RetrieverKind::Sr, 0xA3FE);
+}
+
+#[test]
+fn save_mmap_load_query_roundtrip() {
+    // The direct SegmentedKb API: create on disk, reopen (which maps the
+    // segment files), and verify the mapped store answers queries
+    // bit-identically to an in-RAM build over the same corpus.
+    let seed = 0xB4FE;
+    let cfg = small_config(seed);
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let corpus = Corpus::generate(&cfg.corpus);
+    let emb = embed_corpus(&enc, &corpus);
+    let qs = probes(&corpus, &enc, 6, seed ^ 0x9A);
+    for kind in [RetrieverKind::Edr, RetrieverKind::Adr, RetrieverKind::Sr] {
+        let dir = fresh_dir(&format!("roundtrip-{kind:?}"));
+        let (kb, recovered) =
+            SegmentedKb::open_or_create(&dir, &cfg, kind, &corpus, &emb,
+                                        DIM)
+                .unwrap();
+        assert!(kb.all_segments_mapped(),
+                "{kind:?}: reopened segments must be zero-copy mmaps");
+        assert_eq!(recovered.len(), corpus.len());
+        let reference =
+            LiveKb::build(&cfg, kind, corpus.clone(), emb.clone(), DIM);
+        assert_eq!(
+            bits(kb.snapshot(1).as_ref(), &qs),
+            bits(reference.epochs.snapshot().kb.as_ref(), &qs),
+            "{kind:?}: mmap-loaded store diverged from in-RAM build");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn torn_write_falls_back_to_last_good_manifest() {
+    // Crash-safety: truncate the newest segment file (a torn write at
+    // freeze time). Its checksum/length validation must reject it, and
+    // recovery must fall back to the previous manifest — the docs of the
+    // torn memtable freeze are lost (documented: the memtable is
+    // volatile), everything sealed before it survives.
+    let seed = 0xC5FE;
+    let cfg = small_config(seed);
+    let dir = fresh_dir("torn");
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let corpus = Corpus::generate(&cfg.corpus);
+    let emb = embed_corpus(&enc, &corpus);
+    let n0 = corpus.len();
+    SegmentedKb::create(&dir, &cfg, RetrieverKind::Sr, &corpus, &emb, DIM)
+        .unwrap();
+    let (mut kb, recovered) =
+        SegmentedKb::open(&dir, &cfg, RetrieverKind::Sr).unwrap();
+    // Two full memtables -> two frozen segments -> three manifests.
+    for round in 0u64..2 {
+        let docs = recovered.synth_docs(seed ^ (0x51 + round),
+                                        kb.len() as u32,
+                                        cfg.segment.memtable_docs,
+                                        (24, 64));
+        let embs: Vec<Vec<f32>> =
+            docs.iter().map(|d| embed_doc(&enc, d)).collect();
+        kb.append(&docs, &embs).unwrap();
+    }
+    assert_eq!(kb.len(), n0 + 2 * cfg.segment.memtable_docs);
+    drop(kb);
+
+    let store = SegmentStore::open(&dir).unwrap();
+    assert_eq!(store.segments().len(), 3);
+    let newest = dir.join(store.segments().last().unwrap().file_name());
+    drop(store);
+    let len = std::fs::metadata(&newest).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&newest).unwrap();
+    f.set_len(len / 2).unwrap();
+    drop(f);
+
+    let (kb, recovered) =
+        SegmentedKb::open(&dir, &cfg, RetrieverKind::Sr).unwrap();
+    assert_eq!(kb.len(), n0 + cfg.segment.memtable_docs,
+               "recovery must fall back to the manifest before the torn \
+                segment");
+    assert_eq!(recovered.len(), kb.len());
+    // The recovered store still serves.
+    let qs = probes(&corpus, &enc, 4, seed ^ 0x9A);
+    assert_eq!(bits(kb.snapshot(1).as_ref(), &qs).len(), qs.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serving_stays_pinned_under_compaction() {
+    // Engine serving against a segment-backed live KB while a background
+    // CompactionWorker runs: with a tiny memtable the concurrent ingest
+    // stream freezes segments mid-run and the worker compacts them away,
+    // yet every request must stay bit-identical to a sequential run
+    // against its pinned epoch snapshot — swept over all three
+    // retriever classes × kb_parallel {0, 4}.
+    for (kind, seed) in [(RetrieverKind::Edr, 0xD6FEu64),
+                         (RetrieverKind::Adr, 0xD7FE),
+                         (RetrieverKind::Sr, 0xD8FE)] {
+        for kb_parallel in [0usize, 4] {
+            let mut cfg = small_config(seed);
+            let dir = fresh_dir(&format!("serve-{kind:?}-p{kb_parallel}"));
+            cfg.segment.kb_dir = Some(dir.clone());
+            let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+            let corpus = Corpus::generate(&cfg.corpus);
+            let emb = embed_corpus(&enc, &corpus);
+            let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+            let live =
+                LiveKb::build_auto(&cfg, kind, corpus.clone(), emb, DIM)
+                    .unwrap();
+            let mut worker = CompactionWorker::spawn(
+                live.clone(), cfg.segment.compact_interval_ms,
+                cfg.segment.compact_segments);
+            let n = 6;
+            let questions =
+                generate_questions(Dataset::WikiQa, &corpus, n, seed ^ 0x9);
+            let methods: Vec<QaMethod> =
+                (0..n).map(|_| QaMethod::plain_spec()).collect();
+            let opts = ralmspec::serving::EngineOptions {
+                max_batch: 64,
+                flush_us: 200,
+                max_inflight: 8,
+                kb_parallel,
+            };
+            let out = run_engine_cell_live(&lm, &enc, kind, &live,
+                                           &questions, &methods, &cfg,
+                                           opts, 3, 200.0)
+                .unwrap();
+            worker.stop();
+            assert_eq!(out.metrics.len(), n);
+            for i in 0..n {
+                let pin = &out.pins[i];
+                let QaMethod::Spec { prefetch, os3, async_verify, stride } =
+                    methods[i]
+                else {
+                    unreachable!()
+                };
+                let pipe = SpecPipeline {
+                    lm: &lm,
+                    kb: pin.kb.as_ref(),
+                    corpus: &*pin.corpus,
+                    queries: QueryBuilder {
+                        encoder: &enc,
+                        mode: match kind {
+                            RetrieverKind::Sr => QueryMode::Sparse,
+                            _ => QueryMode::Dense,
+                        },
+                        dense_len: cfg.retriever.dense_query_len,
+                        sparse_len: cfg.retriever.sparse_query_len,
+                    },
+                    opts: build_spec_options(&cfg, prefetch, os3,
+                                             async_verify, stride),
+                };
+                let reference = pipe.run(&questions[i].tokens).unwrap();
+                assert_eq!(
+                    out.metrics[i].tokens_out, reference.tokens_out,
+                    "SERVING UNDER COMPACTION DIVERGED: {kind:?} \
+                     kb_parallel={kb_parallel} req={i} epoch={}",
+                    pin.epoch);
+            }
+            // The writer still works after the run; compaction leaves a
+            // single tier behind.
+            {
+                let mut w = live.writer.lock().unwrap();
+                w.run_compaction().unwrap();
+                assert_eq!(w.tier_count(), 1);
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
