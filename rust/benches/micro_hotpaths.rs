@@ -40,6 +40,12 @@ fn main() {
         &ralmspec::eval::kernel_bench::run_kernel_cells());
     println!();
 
+    // Shared SQ8 quantization cells (the BENCH_PR9.json trajectory):
+    // quantized vs full-precision end-to-end flat scan per row count.
+    let (_, quant) = ralmspec::eval::kernel_bench::run_quant_cells();
+    ralmspec::eval::kernel_bench::print_quant_cells(&quant);
+    println!();
+
     let mut cfg = Config::default();
     cfg.corpus = CorpusConfig { n_docs: 60_000, n_topics: 256,
                                 ..CorpusConfig::default() };

@@ -122,10 +122,20 @@ COMMANDS:
                              segment.memtable_docs /
                              segment.compact_segments /
                              segment.compact_interval_ms
+          [--dense-codec full|sq8] [--oversample X]
+                             dense storage codec (ADR-010): sq8 stores
+                             per-row scalar-quantized u8 codes (4x
+                             denser scans), generates candidates with
+                             integer kernels, and re-scores survivors
+                             from the retained f32 rows — top-k results
+                             are bit-identical to full. --oversample
+                             sizes the pruning heap (default 2.0).
+                             Config keys: dense.codec / dense.oversample
     bench-gate [--mock] [--out BENCH_PR3.json]
                [--engine-out BENCH_PR4.json] [--live-out BENCH_PR5.json]
                [--kernel-out BENCH_PR6.json]
                [--storage-out BENCH_PR8.json]
+               [--quant-out BENCH_PR9.json]
                              CI perf-regression gate: quick fig4+fig5
                              speed-up ratios per retriever class, written
                              as JSON; exits non-zero if any ratio < 1.0
@@ -144,7 +154,12 @@ COMMANDS:
                              in-RAM rebuild, and republish cost at
                              fixed memtable across growing corpora —
                              fails if republish scales with the corpus
-                             instead of the memtable)
+                             instead of the memtable), and the SQ8
+                             quantization cells (--quant-out: i8 scan
+                             SIMD vs scalar — fails if < 1.0 on
+                             SIMD-active hosts — plus the quantized vs
+                             full-precision end-to-end scan trajectory
+                             at RALMSPEC_BENCH_QUANT_ROWS row counts)
     trace [--retriever edr] [--mock]
                              emit a Fig-1(c)-style per-request timeline
     help                     this text

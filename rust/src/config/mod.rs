@@ -74,6 +74,7 @@ pub struct Config {
     pub engine: EngineConfig,
     pub ingest: IngestConfig,
     pub segment: SegmentConfig,
+    pub dense: DenseConfig,
 }
 
 impl Config {
@@ -126,6 +127,9 @@ impl Config {
         if let Some(x) = v.get("segment") {
             self.segment.merge(x);
         }
+        if let Some(x) = v.get("dense") {
+            self.dense.merge(x);
+        }
     }
 
     pub fn to_json(&self) -> Value {
@@ -140,6 +144,7 @@ impl Config {
             ("engine", self.engine.to_json()),
             ("ingest", self.ingest.to_json()),
             ("segment", self.segment.to_json()),
+            ("dense", self.dense.to_json()),
         ])
     }
 }
@@ -600,6 +605,82 @@ impl SegmentConfig {
     }
 }
 
+/// Dense storage codec (DESIGN.md ADR-010): `Full` stores/scans f32
+/// rows only; `Sq8` adds per-row scalar-quantized u8 codes scanned by
+/// the integer kernels for candidate generation, with survivors
+/// re-scored from the retained f32 rows — final top-k is bit-identical
+/// to `Full` (tests/quantized_equivalence.rs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DenseCodec {
+    #[default]
+    Full,
+    Sq8,
+}
+
+impl DenseCodec {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DenseCodec::Full => "full",
+            DenseCodec::Sq8 => "sq8",
+        }
+    }
+}
+
+impl std::str::FromStr for DenseCodec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" | "f32" => Ok(DenseCodec::Full),
+            "sq8" | "quantized" => Ok(DenseCodec::Sq8),
+            other => Err(anyhow::anyhow!("unknown dense codec: {other}")),
+        }
+    }
+}
+
+/// Dense (EDR) storage/scan policy: the codec, plus the SQ8 pruning
+/// heap factor — the quantized candidate phase keeps at least
+/// `ceil(k * oversample)` exact scores before it starts pruning rows
+/// whose score upper bound falls below the running threshold. Larger
+/// values prune less (more exact re-scores); correctness never depends
+/// on it.
+#[derive(Debug, Clone)]
+pub struct DenseConfig {
+    pub codec: DenseCodec,
+    pub oversample: f64,
+}
+
+impl Default for DenseConfig {
+    fn default() -> Self {
+        Self {
+            codec: DenseCodec::Full,
+            oversample:
+                crate::retriever::dense::DEFAULT_SQ8_OVERSAMPLE,
+        }
+    }
+}
+
+impl DenseConfig {
+    fn merge(&mut self, v: &Value) {
+        if let Some(x) = v.get("codec") {
+            if let Some(s) = x.as_str() {
+                if let Ok(c) = s.parse() {
+                    self.codec = c;
+                }
+            }
+        }
+        merge_fields!(self, v, {
+            "oversample" => self.oversample => f64,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("codec", Value::str(self.codec.label().to_string())),
+            ("oversample", Value::num(self.oversample)),
+        ])
+    }
+}
+
 /// The three retriever classes evaluated in the paper. `Ord` follows
 /// declaration order (Edr < Adr < Sr) so the kind can key ordered maps
 /// (e.g. the [`crate::eval::TestBed`] sharded-wrapper cache).
@@ -751,6 +832,26 @@ mod tests {
         c.merge(&v);
         assert_eq!(c.segment.kb_dir, None);
         assert_eq!(c.ingest.batch, 8); // untouched default
+    }
+
+    #[test]
+    fn dense_codec_defaults_and_merge() {
+        let c = Config::default();
+        assert_eq!(c.dense.codec, DenseCodec::Full);
+        assert!((c.dense.oversample - 2.0).abs() < 1e-12);
+        let v = json::parse(
+            r#"{"dense": {"codec": "sq8", "oversample": 4.0}}"#)
+            .unwrap();
+        let mut c = Config::default();
+        c.merge(&v);
+        assert_eq!(c.dense.codec, DenseCodec::Sq8);
+        assert!((c.dense.oversample - 4.0).abs() < 1e-12);
+        assert_eq!(c.segment.memtable_docs, 4096); // untouched default
+        // Label round-trips through FromStr and to_json.
+        assert_eq!("full".parse::<DenseCodec>().unwrap(),
+                   DenseCodec::Full);
+        assert_eq!(DenseCodec::Sq8.label(), "sq8");
+        assert!("pq4".parse::<DenseCodec>().is_err());
     }
 
     #[test]

@@ -932,6 +932,13 @@ pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     if let Some(n) = flags.get_usize("compact-segments")? {
         cfg.segment.compact_segments = n.max(2);
     }
+    if let Some(c) = flags.get("dense-codec") {
+        cfg.dense.codec = c.parse()?;
+    }
+    if let Some(x) = flags.get_f64("oversample")? {
+        anyhow::ensure!(x >= 1.0, "--oversample must be >= 1.0");
+        cfg.dense.oversample = x;
+    }
     let model = flags.get("model").unwrap_or("gpt2m").to_string();
     if model == KNN_MODEL {
         // KNN-LM serving has its own fixture (datastore, not the QA

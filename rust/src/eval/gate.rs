@@ -52,6 +52,15 @@
 //! ratio must stay ≤ 2.0, i.e. publishing an epoch against the segment
 //! store costs O(memtable), not O(corpus). Model-free like the kernel
 //! cells.
+//!
+//! A sixth artifact (`--quant-out`, default `BENCH_PR9.json`) records
+//! the **SQ8 quantization cells** (DESIGN.md ADR-010): the i8-scan
+//! kernel vs its scalar twin — **gated** ≥ 1.0 when SIMD is active,
+//! same rule as the other pure-kernel cells — plus the quantized vs
+//! full-precision end-to-end flat-scan trajectory at each
+//! `RALMSPEC_BENCH_QUANT_ROWS` corpus size (recorded, not gated: the
+//! density win is a memory-bandwidth story that only shows once rows
+//! spill the last-level cache). Model-free.
 
 use crate::cli::Flags;
 use crate::config::{Config, RetrieverKind};
@@ -542,6 +551,8 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         flags.get("kernel-out").unwrap_or("BENCH_PR6.json").to_string();
     let storage_out =
         flags.get("storage-out").unwrap_or("BENCH_PR8.json").to_string();
+    let quant_out =
+        flags.get("quant-out").unwrap_or("BENCH_PR9.json").to_string();
     let provider = Provider::from_flags(&cfg, flags)?;
     let mut ratios: Vec<Ratio> = Vec::new();
     let mut engine_ratios: Vec<EngineRatio> = Vec::new();
@@ -552,6 +563,11 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     eprintln!("[gate] kernel cells (simd_active={})...",
               kernels::simd_active());
     let kernel_cells = kernel_bench::run_kernel_cells();
+
+    // --- SQ8 quantization cells (ADR-010): also model-free — the gated
+    // i8-scan kernel plus the quantized-vs-full scan trajectory.
+    eprintln!("[gate] quantization cells...");
+    let (quant_kernels, quant_cells) = kernel_bench::run_quant_cells();
 
     // --- Storage cells (ADR-009): also model-free — segment cold-load
     // vs in-RAM rebuild, and the O(memtable) republish gate.
@@ -659,6 +675,40 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     }
     std::fs::write(&kernel_out, kernel_doc.pretty())?;
     println!("[gate] wrote {kernel_out}");
+
+    // --- Quantization report + artifact (ADR-010): the i8-scan cell is
+    // gated like the other pure kernels; the end-to-end quantized-vs-
+    // full trajectory is recorded. Model-free, written before the
+    // models-available check.
+    kernel_bench::print_cells(&quant_kernels);
+    kernel_bench::print_quant_cells(&quant_cells);
+    for c in &quant_kernels {
+        if c.gated && c.speedup().is_some_and(|s| s < MIN_KERNEL_SPEEDUP) {
+            failures.push(format!("quant/{} {:.2}x", c.kernel,
+                                  c.speedup().unwrap_or(0.0)));
+        }
+    }
+    let quant_doc = Value::obj(vec![
+        ("gate", Value::str("sq8-quantization")),
+        ("min_required_speedup", Value::num(MIN_KERNEL_SPEEDUP)),
+        ("simd_active", Value::Bool(kernels::simd_active())),
+        ("arch", Value::str(std::env::consts::ARCH)),
+        ("runs", Value::num(cfg.eval.runs as f64)),
+        ("pass", Value::Bool(!quant_kernels.iter().any(|c| {
+            c.gated && c.speedup().is_some_and(|s| s < MIN_KERNEL_SPEEDUP)
+        }))),
+        ("kernels",
+         Value::Arr(quant_kernels.iter().map(|c| c.to_json()).collect())),
+        ("scan_trajectory",
+         Value::Arr(quant_cells.iter().map(|c| c.to_json()).collect())),
+    ]);
+    if let Some(dir) = std::path::Path::new(&quant_out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&quant_out, quant_doc.pretty())?;
+    println!("[gate] wrote {quant_out}");
 
     // --- Storage report + artifact: also model-free, written before the
     // models-available check. Cold-load is a recorded trajectory; the
@@ -808,8 +858,8 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
     // spec-vs-baseline speedups (the speculation pipeline), "async/..."
     // are the ADR-005 async/sync engine throughput ratios (the
     // executor), "kernel/..." are the ADR-007 scalar-vs-SIMD speedups
-    // (the scoring kernels) — so a red CI job points at the right
-    // subsystem.
+    // (the scoring kernels), "quant/..." is the ADR-010 i8-scan speedup
+    // (the SQ8 codec) — so a red CI job points at the right subsystem.
     anyhow::ensure!(
         failures.is_empty(),
         "bench gate ratios below {MIN_RATIO:.1}x on: {}",

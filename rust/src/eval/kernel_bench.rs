@@ -4,8 +4,8 @@
 //! walk, the BM25 postings walk, and top-k selection — measured as the
 //! **min over runs** (same stability choice as the other gate cells).
 //!
-//! The two pure-kernel cells (dense dot, multi-query scan) also time
-//! their scalar twin and report the scalar/SIMD speedup; when the SIMD
+//! The pure-kernel cells (dense dot, multi-query scan, SQ8 i8 scan) also
+//! time their scalar twin and report the scalar/SIMD speedup; when the SIMD
 //! forms are active ([`crate::retriever::kernels::simd_active`]) those
 //! cells are *gated*: a speedup below [`MIN_KERNEL_SPEEDUP`] fails the
 //! bench-gate command, pinning "vectorization actually pays" as a CI
@@ -14,13 +14,19 @@
 //! kernel time with memory layout and heap maintenance, so they track
 //! regressions across PRs rather than gating a ratio.
 //!
+//! [`run_quant_cells`] (`bench-gate --quant-out`, `BENCH_PR9.json`) adds
+//! the SQ8 codec view: the gated i8-scan cell plus an ungated quantized
+//! vs full-precision end-to-end scan trajectory across row counts.
+//!
 //! Scale knobs: `RALMSPEC_BENCH_RUNS` (repetitions, shared with the rest
-//! of the gate) and `RALMSPEC_BENCH_KERNEL_{ROWS,HNSW,SRDOCS,SCORES}`
-//! (fixture sizes), so CI pins one set of knobs for the whole gate.
+//! of the gate), `RALMSPEC_BENCH_KERNEL_{ROWS,HNSW,SRDOCS,SCORES}`
+//! (fixture sizes), and `RALMSPEC_BENCH_QUANT_ROWS` (quantized-scan
+//! corpus sizes), so CI pins one set of knobs for the whole gate.
 
 use crate::config::CorpusConfig;
 use crate::datagen::corpus::Corpus;
-use crate::retriever::dense::EmbeddingMatrix;
+use crate::retriever::dense::{DenseExact, EmbeddingMatrix,
+                              DEFAULT_SQ8_OVERSAMPLE};
 use crate::retriever::hnsw::Hnsw;
 use crate::retriever::kernels::{self, LANES};
 use crate::retriever::sparse::Bm25;
@@ -40,7 +46,7 @@ const DIM: usize = 64;
 
 /// One measured kernel cell.
 pub struct KernelCell {
-    /// Cell name (`dense-dot`, `multi-scan`, `hnsw-walk`,
+    /// Cell name (`dense-dot`, `multi-scan`, `i8-scan`, `hnsw-walk`,
     /// `bm25-postings`, `topk-select`).
     pub kernel: &'static str,
     /// What one "op" is for this cell (row dot, row scan, query, ...).
@@ -101,6 +107,17 @@ pub fn print_cells(cells: &[KernelCell]) {
 
 fn env_usize(k: &str, d: usize) -> usize {
     std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+/// Comma-separated usize list from the environment, defaulting to `d`
+/// when unset or unparseable (e.g. `RALMSPEC_BENCH_QUANT_ROWS=4096,65536`).
+fn env_usize_list(k: &str, d: &[usize]) -> Vec<usize> {
+    let Ok(v) = std::env::var(k) else {
+        return d.to_vec();
+    };
+    let parsed: Vec<usize> =
+        v.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+    if parsed.is_empty() { d.to_vec() } else { parsed }
 }
 
 /// Min ns/op over `runs` timed repetitions of `f` (which returns the
@@ -195,6 +212,12 @@ pub fn run_kernel_cells() -> Vec<KernelCell> {
         gated: simd,
     });
 
+    // --- i8 scan: the SQ8 candidate-generation primitive (ADR-010) —
+    // one quantized query against every packed u8 row, dispatched vs
+    // scalar. Same gate semantics as the f32 cells: integer kernels are
+    // exact, so the only thing the SIMD form can buy is speed.
+    cells.push(i8_scan_cell(runs, n_rows, simd));
+
     // --- HNSW walk: per-query greedy descent + layer-0 beam over the
     // sealed CSR graph (trajectory cell: layout + prefetch + kernel).
     let hnsw_n = env_usize("RALMSPEC_BENCH_KERNEL_HNSW", 4000);
@@ -264,4 +287,110 @@ pub fn run_kernel_cells() -> Vec<KernelCell> {
     });
 
     cells
+}
+
+/// Measure the dispatched-vs-scalar i8 scan over `n_rows` quantized rows
+/// (shared by the kernel trajectory and the `--quant-out` gate).
+fn i8_scan_cell(runs: usize, n_rows: usize, simd: bool) -> KernelCell {
+    let q8 = crate::retriever::dense::Sq8Rows::encode(
+        &random_rows(n_rows, DIM, 0x5108), DIM);
+    let qq = crate::retriever::dense::Sq8Query::new(
+        &Rng::new(0x5109).unit_vector(DIM));
+    let mut idot = vec![0i32; n_rows];
+    let i8_ns = best_ns(runs, || {
+        kernels::scan_i8(black_box(&q8.codes), DIM, black_box(&qq.codes),
+                         &mut idot);
+        black_box(idot[0]);
+        n_rows
+    });
+    let i8_scalar_ns = best_ns(runs, || {
+        kernels::scan_i8_scalar(black_box(&q8.codes), DIM,
+                                black_box(&qq.codes), &mut idot);
+        black_box(idot[0]);
+        n_rows
+    });
+    KernelCell {
+        kernel: "i8-scan",
+        unit: "row-scan",
+        ns: i8_ns,
+        scalar_ns: Some(i8_scalar_ns),
+        gated: simd,
+    }
+}
+
+/// One end-to-end quantized-vs-full scan cell: the same flat retrieval
+/// (`retrieve_batch`, k = 20) through the full-precision packed scan and
+/// through the SQ8 two-phase scan, at one corpus size.
+pub struct QuantCell {
+    /// Corpus rows scanned per query.
+    pub rows: usize,
+    /// Full-precision ns per row-scan (min over runs).
+    pub full_ns: f64,
+    /// SQ8 two-phase ns per row-scan, re-scoring included.
+    pub sq8_ns: f64,
+}
+
+impl QuantCell {
+    /// full / sq8 ns ratio (> 1.0 means the quantized scan is faster).
+    pub fn speedup(&self) -> f64 {
+        if self.sq8_ns > 0.0 { self.full_ns / self.sq8_ns } else { 0.0 }
+    }
+
+    /// JSON row for the `BENCH_PR9.json` artifact.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("cell", Value::str("quant-scan")),
+            ("rows", Value::num(self.rows as f64)),
+            ("full_ns_per_row", Value::num(self.full_ns)),
+            ("sq8_ns_per_row", Value::num(self.sq8_ns)),
+            ("speedup", Value::num(self.speedup())),
+        ])
+    }
+}
+
+/// Print one line per quantization trajectory cell.
+pub fn print_quant_cells(cells: &[QuantCell]) {
+    for c in cells {
+        println!("[quant] rows {:<8} full {:>8.2} ns/row | sq8 {:>8.2} \
+                  ns/row | speedup {:>5.2}x",
+                 c.rows, c.full_ns, c.sq8_ns, c.speedup());
+    }
+}
+
+/// Measure the SQ8 quantization cells (`bench-gate --quant-out`, the
+/// `BENCH_PR9.json` artifact): the gated i8-scan kernel cell plus the
+/// ungated quantized-vs-full end-to-end scan trajectory at each row
+/// count in `RALMSPEC_BENCH_QUANT_ROWS` (comma-separated; the default
+/// covers one cache-resident and one memory-bound corpus — density is a
+/// bandwidth story, so the speedup is only expected once rows spill the
+/// last-level cache).
+pub fn run_quant_cells() -> (Vec<KernelCell>, Vec<QuantCell>) {
+    let runs = env_usize("RALMSPEC_BENCH_RUNS", 3);
+    let n_rows = env_usize("RALMSPEC_BENCH_KERNEL_ROWS", 4096);
+    let simd = kernels::simd_active();
+    let kernel_cells = vec![i8_scan_cell(runs, n_rows, simd)];
+
+    let row_counts =
+        env_usize_list("RALMSPEC_BENCH_QUANT_ROWS", &[4096, 32_768]);
+    let mut rng = Rng::new(0x510A);
+    let qs: Vec<SpecQuery> =
+        (0..4).map(|_| SpecQuery::dense_only(rng.unit_vector(DIM))).collect();
+    let mut quant_cells = Vec::new();
+    for n in row_counts {
+        let emb =
+            Arc::new(EmbeddingMatrix::new(DIM, random_rows(n, DIM, 0x510B)));
+        let full = DenseExact::new(emb.clone());
+        let sq8 = DenseExact::with_sq8(emb, DEFAULT_SQ8_OVERSAMPLE);
+        let per_pass = n * qs.len();
+        let full_ns = best_ns(runs, || {
+            black_box(full.retrieve_batch(black_box(&qs), 20).len());
+            per_pass
+        });
+        let sq8_ns = best_ns(runs, || {
+            black_box(sq8.retrieve_batch(black_box(&qs), 20).len());
+            per_pass
+        });
+        quant_cells.push(QuantCell { rows: n, full_ns, sq8_ns });
+    }
+    (kernel_cells, quant_cells)
 }

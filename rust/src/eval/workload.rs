@@ -54,8 +54,18 @@ impl TestBed {
 
     fn edr(&self) -> Arc<DenseExact> {
         if self.edr.borrow().is_none() {
-            *self.edr.borrow_mut() =
-                Some(Arc::new(DenseExact::new(self.embeddings.clone())));
+            // `dense.codec = sq8` routes flat scans through the
+            // two-phase quantized path; results are bit-identical to
+            // the full-precision scan (ADR-010), so every experiment
+            // grid can flip the codec without changing outputs.
+            let d = &self.cfg.dense;
+            let built = match d.codec {
+                crate::config::DenseCodec::Sq8 => DenseExact::with_sq8(
+                    self.embeddings.clone(), d.oversample),
+                crate::config::DenseCodec::Full =>
+                    DenseExact::new(self.embeddings.clone()),
+            };
+            *self.edr.borrow_mut() = Some(Arc::new(built));
         }
         self.edr.borrow().as_ref().unwrap().clone()
     }

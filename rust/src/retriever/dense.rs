@@ -5,8 +5,23 @@
 //! batched retrieval (the verification step) amortizes the full memory pass
 //! over all queries, which is why total batched latency is near-constant in
 //! batch size (paper Fig 6a) — the effect RaLMSpec's saving rests on.
+//!
+//! ## SQ8 two-phase scan (DESIGN.md ADR-010)
+//!
+//! With `dense.codec = sq8` the scan is two-phase: phase 1 streams 1-byte
+//! scalar-quantized row codes (4x the row density of f32, so a
+//! memory-bandwidth-bound scan moves 4x fewer bytes) through the exact
+//! integer kernel [`kernels::scan_i8`] and keeps every row whose score
+//! **upper bound** reaches the running `prune_k`-th best **exact** score;
+//! phase 2 re-scores survivors from the full-precision rows with
+//! [`kernels::rescore_dot`], whose operation order reproduces
+//! [`kernels::scan_block`]'s per-lane bits. Because the bound is
+//! conservative (quantization error + f32 evaluation error, evaluated in
+//! f64), a pruned row provably cannot be in the true top-k, so the final
+//! `(score desc, id asc)` top-k is **bit-identical** to the full-precision
+//! scan — pinned by tests/quantized_equivalence.rs.
 
-use super::kernels::{self, LANES};
+use super::kernels::{self, LANES, SQ8_QMAX};
 use super::{DocId, Retriever, SpecQuery};
 use crate::util::{Scored, TopK};
 use std::cell::RefCell;
@@ -52,17 +67,360 @@ pub fn dot_chunked(a: &[f32], b: &[f32]) -> f32 {
     kernels::dot(a, b)
 }
 
+// ---------------------------------------------------------------------------
+// SQ8 scalar-quantized codec (DESIGN.md ADR-010)
+// ---------------------------------------------------------------------------
+
+/// Default candidate-oversample factor for the SQ8 two-phase scan: the
+/// pruning threshold tracks the `max(k, ceil(k * oversample))`-th best
+/// exact score instead of the k-th, a safety margin that admits more
+/// borderline rows to the exact re-score. Correctness never depends on
+/// it (the bound alone is sufficient); it only trades re-score work
+/// against pruning aggressiveness.
+pub const DEFAULT_SQ8_OVERSAMPLE: f64 = 2.0;
+
+/// Relative inflation applied to every stored/derived bound quantity so
+/// f64-evaluation rounding (a handful of operations, each within
+/// `2^-52` relative) can never make a bound optimistic.
+const BOUND_SLACK: f64 = 1e-9;
+
+/// Per-row scalar quantization of a row-major f32 matrix: row `r` is
+/// stored as u8 codes `c` with `x̂[j] = scale[r]·c[j] + bias[r]`
+/// (`bias` = row min, `scale` = row range / 255), plus the two per-row
+/// bound ingredients the two-phase scan needs: `rerr[r] =
+/// max_j |x[j] − x̂[j]|` (reconstruction error, rounded up) and
+/// `asum[r] = Σ_j |x̂[j]|` (rounded up). The same struct backs the
+/// in-RAM codec and the `DENSE_SQ8` segment section (docs/FORMAT.md).
+#[derive(Debug)]
+pub struct Sq8Rows {
+    pub dim: usize,
+    pub scale: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub asum: Vec<f32>,
+    pub rerr: Vec<f32>,
+    pub codes: Vec<u8>,
+}
+
+/// Borrowed view of SQ8 row blocks — the common shape of [`Sq8Rows`]
+/// slices and mmap'd `DENSE_SQ8` segment sections.
+#[derive(Clone, Copy)]
+pub struct Sq8RowsRef<'a> {
+    pub scale: &'a [f32],
+    pub bias: &'a [f32],
+    pub asum: &'a [f32],
+    pub rerr: &'a [f32],
+    pub codes: &'a [u8],
+}
+
+impl Sq8Rows {
+    /// Quantize `n = rows.len() / dim` row-major f32 rows. All bound
+    /// arithmetic runs in f64 against the *stored* f32 scale/bias (the
+    /// values the scan will use), so `rerr`/`asum` bound exactly the
+    /// reconstruction the scan reasons about.
+    pub fn encode(rows: &[f32], dim: usize) -> Self {
+        assert!(dim > 0 && rows.len() % dim == 0, "sq8 shape mismatch");
+        let n = rows.len() / dim;
+        let mut out = Self {
+            dim,
+            scale: Vec::with_capacity(n),
+            bias: Vec::with_capacity(n),
+            asum: Vec::with_capacity(n),
+            rerr: Vec::with_capacity(n),
+            codes: Vec::with_capacity(n * dim),
+        };
+        for row in rows.chunks_exact(dim) {
+            out.push_row(row);
+        }
+        out
+    }
+
+    /// Quantize and append one row (the memtable-freeze path encodes
+    /// incrementally).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim, "sq8 row dim mismatch");
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in row {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let scale = ((hi as f64 - lo as f64) / 255.0) as f32;
+        let bias = lo;
+        let (sf, bf) = (scale as f64, bias as f64);
+        let mut rerr = 0.0f64;
+        let mut asum = 0.0f64;
+        for &x in row {
+            let c = if sf > 0.0 {
+                (((x as f64 - bf) / sf).round()).clamp(0.0, 255.0) as u8
+            } else {
+                0u8
+            };
+            self.codes.push(c);
+            // Reconstruction in f64: `sf * c` is exact (24-bit f32
+            // mantissa × 8-bit code fits in 53 bits), `+ bf` rounds once
+            // within 2^-52 — absorbed by BOUND_SLACK below.
+            let recon = sf * c as f64 + bf;
+            rerr = rerr.max((x as f64 - recon).abs());
+            asum += recon.abs();
+        }
+        self.scale.push(scale);
+        self.bias.push(bias);
+        // Round the bound ingredients *up* past both the f64 summation
+        // slop and the f64→f32 store rounding.
+        self.rerr.push((rerr * (1.0 + 1e-6)) as f32);
+        self.asum.push((asum * (1.0 + 1e-6)) as f32);
+    }
+
+    pub fn len(&self) -> usize {
+        self.scale.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scale.is_empty()
+    }
+
+    /// Borrow rows `[lo, hi)` (the shard-view primitive).
+    pub fn slice(&self, lo: usize, hi: usize) -> Sq8RowsRef<'_> {
+        Sq8RowsRef {
+            scale: &self.scale[lo..hi],
+            bias: &self.bias[lo..hi],
+            asum: &self.asum[lo..hi],
+            rerr: &self.rerr[lo..hi],
+            codes: &self.codes[lo * self.dim..hi * self.dim],
+        }
+    }
+}
+
+/// A query quantized for the SQ8 phase-1 scan: symmetric signed codes
+/// `qc[j] = round(q[j] / qscale)` in `[-SQ8_QMAX, SQ8_QMAX]` (so the
+/// integer kernel is saturation-free, see [`SQ8_QMAX`]), plus the
+/// query-side bound ingredients. With symmetric quantization
+/// `q̂[j] = qscale·qc[j]`, so the approximate score recovers from the
+/// integer dot as `qscale·scale·Σqc·c + qscale·bias·Σqc` — two exact
+/// integer sums scaled in f64.
+pub struct Sq8Query {
+    pub codes: Vec<i8>,
+    /// Σ qc[j] — exact.
+    pub qcsum: i64,
+    pub qscale: f64,
+    /// max_j |q[j] − q̂[j]|, rounded up.
+    pub qerr: f64,
+    /// Σ_j |q[j]|, rounded up.
+    pub qnorm1: f64,
+    /// max_j |q[j]|.
+    pub qmaxabs: f64,
+}
+
+impl Sq8Query {
+    pub fn new(q: &[f32]) -> Self {
+        let mut qmaxabs = 0.0f64;
+        let mut qnorm1 = 0.0f64;
+        for &v in q {
+            qmaxabs = qmaxabs.max((v as f64).abs());
+            qnorm1 += (v as f64).abs();
+        }
+        let qscale =
+            if qmaxabs > 0.0 { qmaxabs / SQ8_QMAX as f64 } else { 0.0 };
+        let mut codes = Vec::with_capacity(q.len());
+        let mut qcsum = 0i64;
+        let mut qerr = 0.0f64;
+        for &v in q {
+            let c = if qscale > 0.0 {
+                ((v as f64 / qscale).round())
+                    .clamp(-(SQ8_QMAX as f64), SQ8_QMAX as f64)
+                    as i64
+            } else {
+                0i64
+            };
+            codes.push(c as i8);
+            qcsum += c;
+            qerr = qerr.max((v as f64 - qscale * c as f64).abs());
+        }
+        Self {
+            codes,
+            qcsum,
+            qscale,
+            qerr: qerr * (1.0 + BOUND_SLACK),
+            qnorm1: qnorm1 * (1.0 + BOUND_SLACK),
+            qmaxabs,
+        }
+    }
+}
+
+/// Deterministic fixed-capacity f64 min-heap tracking the `cap` largest
+/// values pushed so far — the running pruning threshold of the two-phase
+/// scan (`root()` = the `cap`-th best exact score seen, `None` until
+/// `cap` values arrived). Ordering is `f64::total_cmp`; NaN never enters
+/// (scores of finite inputs are finite).
+pub(crate) struct MinF64Heap {
+    cap: usize,
+    vals: Vec<f64>,
+}
+
+impl MinF64Heap {
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), vals: Vec::with_capacity(cap.max(1)) }
+    }
+
+    /// The current threshold: the smallest of the kept values, only once
+    /// the heap is full (pruning before that could drop a top-k row).
+    #[inline]
+    pub fn root(&self) -> Option<f64> {
+        if self.vals.len() == self.cap { Some(self.vals[0]) } else { None }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if self.vals.len() < self.cap {
+            self.vals.push(v);
+            let mut i = self.vals.len() - 1;
+            while i > 0 {
+                let p = (i - 1) / 2;
+                if self.vals[i].total_cmp(&self.vals[p]).is_lt() {
+                    self.vals.swap(i, p);
+                    i = p;
+                } else {
+                    break;
+                }
+            }
+        } else if v.total_cmp(&self.vals[0]).is_gt() {
+            self.vals[0] = v;
+            let mut i = 0usize;
+            loop {
+                let (l, r) = (2 * i + 1, 2 * i + 2);
+                let mut m = i;
+                if l < self.vals.len()
+                    && self.vals[l].total_cmp(&self.vals[m]).is_lt()
+                {
+                    m = l;
+                }
+                if r < self.vals.len()
+                    && self.vals[r].total_cmp(&self.vals[m]).is_lt()
+                {
+                    m = r;
+                }
+                if m == i {
+                    break;
+                }
+                self.vals.swap(i, m);
+                i = m;
+            }
+        }
+    }
+}
+
+/// The pruning heap size: `max(k, ceil(k * oversample))`.
+pub(crate) fn sq8_prune_k(k: usize, oversample: f64) -> usize {
+    let os = if oversample.is_finite() && oversample > 1.0 {
+        (k as f64 * oversample).ceil() as usize
+    } else {
+        k
+    };
+    os.max(k).max(1)
+}
+
+/// Phase-1 chunk size (rows): bounds the integer-score scratch and lets
+/// the pruning threshold tighten between chunks.
+const SQ8_CHUNK_ROWS: usize = 1024;
+
+/// Two-phase SQ8 scan of one row block for one query, pushing exact
+/// scores (bit-identical to the full-precision scan's, see the module
+/// docs) of surviving rows into `heap`. `full` holds the same rows at
+/// full precision; `prune` carries the running threshold across blocks
+/// (tiers, segments) of the same query; `idot` is reusable scratch.
+///
+/// Safety of pruning (the ADR-010 argument, checked in f64): for row `r`
+/// with exact integer dot `I`, the real dot `q̂·x̂ = qscale·scale_r·I +
+/// qscale·bias_r·Σqc`. The true real dot differs from it by at most
+/// `rerr_r·‖q‖₁ + qerr·Σ|x̂|`, and the f32-evaluated score differs from
+/// the true real dot by at most `~d·ε₃₂·max|q|·Σ|x|`. `ub` adds all
+/// three (inflated by `BOUND_SLACK` for the f64 evaluation itself), so
+/// `score(r) ≤ ub(r)`. A row is pruned only when `ub(r) < t` where `t`
+/// is the `prune_k`-th best *exact* score already in `prune` — i.e. at
+/// least `prune_k ≥ k` distinct rows score strictly above row `r`, so
+/// `r` cannot enter the `(score desc, id asc)` top-k for any tie-break.
+pub(crate) fn scan_sq8_rows(sq8: Sq8RowsRef<'_>, dim: usize, full: &[f32],
+                            base: DocId, q: &[f32], qq: &Sq8Query,
+                            prune: &mut MinF64Heap, heap: &mut TopK,
+                            idot: &mut Vec<i32>) {
+    let n = sq8.scale.len();
+    debug_assert_eq!(sq8.codes.len(), n * dim);
+    debug_assert_eq!(full.len(), n * dim);
+    debug_assert_eq!(q.len(), dim);
+    let d64 = dim as f64;
+    // One ε₃₂ covers each of the ≤ d roundings of the sequential f32
+    // re-score; the factor 2 and BOUND_SLACK are margin.
+    let feval = 2.0 * d64 * (f32::EPSILON as f64) * qq.qmaxabs;
+    let mut row = 0usize;
+    while row < n {
+        let chunk = SQ8_CHUNK_ROWS.min(n - row);
+        idot.clear();
+        idot.resize(chunk, 0);
+        kernels::scan_i8(&sq8.codes[row * dim..(row + chunk) * dim], dim,
+                         &qq.codes, idot);
+        for i in 0..chunk {
+            let r = row + i;
+            let (sf, bf) = (sq8.scale[r] as f64, sq8.bias[r] as f64);
+            let (re, asum) = (sq8.rerr[r] as f64, sq8.asum[r] as f64);
+            let approx = qq.qscale * sf * idot[i] as f64
+                + qq.qscale * bf * qq.qcsum as f64;
+            let err = (re * qq.qnorm1 + qq.qerr * asum
+                       + feval * (asum + d64 * re))
+                * (1.0 + BOUND_SLACK)
+                + approx.abs() * 1e-12
+                + f64::MIN_POSITIVE;
+            let ub = approx + err;
+            if let Some(t) = prune.root() {
+                if ub < t {
+                    continue;
+                }
+            }
+            let exact =
+                kernels::rescore_dot(&full[r * dim..(r + 1) * dim], q);
+            heap.push(base + r as DocId, exact);
+            prune.push(exact as f64);
+        }
+        row += chunk;
+    }
+}
+
 pub struct DenseExact {
     emb: Arc<EmbeddingMatrix>,
+    sq8: Option<Arc<Sq8Index>>,
+}
+
+/// The quantized companion of an embedding matrix plus its scan knob —
+/// shared (one `Arc`) between a [`DenseExact`] and its shard views so
+/// re-sharding never re-encodes.
+pub struct Sq8Index {
+    pub rows: Sq8Rows,
+    pub oversample: f64,
+}
+
+impl Sq8Index {
+    pub fn encode(emb: &EmbeddingMatrix, oversample: f64) -> Self {
+        Self { rows: Sq8Rows::encode(&emb.data, emb.dim), oversample }
+    }
 }
 
 impl DenseExact {
     pub fn new(emb: Arc<EmbeddingMatrix>) -> Self {
-        Self { emb }
+        Self { emb, sq8: None }
+    }
+
+    /// EDR with the SQ8 codec: scans quantized codes first and re-scores
+    /// survivors, bit-identical to [`DenseExact::new`]'s output
+    /// (tests/quantized_equivalence.rs).
+    pub fn with_sq8(emb: Arc<EmbeddingMatrix>, oversample: f64) -> Self {
+        let sq8 = Arc::new(Sq8Index::encode(&emb, oversample));
+        Self { emb, sq8: Some(sq8) }
     }
 
     pub fn embeddings(&self) -> &Arc<EmbeddingMatrix> {
         &self.emb
+    }
+
+    pub(crate) fn sq8(&self) -> Option<&Arc<Sq8Index>> {
+        self.sq8.as_ref()
     }
 }
 
@@ -148,15 +506,33 @@ pub(crate) fn scan_rows_with(data: &[f32], dim: usize, base: DocId,
 }
 
 /// Range-restricted batched top-k (shared by [`DenseExact`] and
-/// [`DenseShard`]).
+/// [`DenseShard`]). With an SQ8 index the scan runs two-phase per query
+/// (per-query pruning thresholds rule out the LANES-packed pass); the
+/// output is bit-identical either way (module docs).
 fn batch_over_range(emb: &EmbeddingMatrix, lo: usize, hi: usize,
-                    qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+                    qs: &[SpecQuery], k: usize, sq8: Option<&Sq8Index>)
+                    -> Vec<Vec<Scored>> {
     for q in qs {
         assert_eq!(q.dense.len(), emb.dim, "query dim mismatch");
     }
     let mut heaps: Vec<TopK> = qs.iter().map(|_| TopK::new(k.max(1))).collect();
-    let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.dense.as_slice()).collect();
-    scan_multi_range(emb, lo, hi, &qrefs, &mut heaps);
+    if let Some(ix) = sq8 {
+        let d = emb.dim;
+        let view = ix.rows.slice(lo, hi);
+        let full = &emb.data[lo * d..hi * d];
+        let prune_cap = sq8_prune_k(k.max(1), ix.oversample);
+        let mut idot = Vec::new();
+        for (q, heap) in qs.iter().zip(&mut heaps) {
+            let qq = Sq8Query::new(&q.dense);
+            let mut prune = MinF64Heap::new(prune_cap);
+            scan_sq8_rows(view, d, full, lo as DocId, &q.dense, &qq,
+                          &mut prune, heap, &mut idot);
+        }
+    } else {
+        let qrefs: Vec<&[f32]> =
+            qs.iter().map(|q| q.dense.as_slice()).collect();
+        scan_multi_range(emb, lo, hi, &qrefs, &mut heaps);
+    }
     heaps.into_iter().map(|h| h.into_sorted()).collect()
 }
 
@@ -171,7 +547,8 @@ impl Retriever for DenseExact {
         // score it against every query (blocked multi-query kernel). This
         // is the batched-verification primitive whose near-constant total
         // cost drives RaLMSpec.
-        batch_over_range(&self.emb, 0, self.emb.len(), qs, k)
+        batch_over_range(&self.emb, 0, self.emb.len(), qs, k,
+                         self.sq8.as_deref())
     }
 
     fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
@@ -194,18 +571,27 @@ pub struct DenseShard {
     emb: Arc<EmbeddingMatrix>,
     lo: usize,
     hi: usize,
+    sq8: Option<Arc<Sq8Index>>,
 }
 
 impl DenseShard {
     pub fn new(emb: Arc<EmbeddingMatrix>, lo: usize, hi: usize) -> Self {
+        Self::with_sq8(emb, lo, hi, None)
+    }
+
+    /// Shard view carrying the parent's codec (shared `Arc`, so shard
+    /// construction stays allocation-light — no re-encode).
+    pub(crate) fn with_sq8(emb: Arc<EmbeddingMatrix>, lo: usize, hi: usize,
+                           sq8: Option<Arc<Sq8Index>>) -> Self {
         assert!(lo <= hi && hi <= emb.len(), "shard bounds out of range");
-        Self { emb, lo, hi }
+        Self { emb, lo, hi, sq8 }
     }
 }
 
 impl Retriever for DenseShard {
     fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
-        batch_over_range(&self.emb, self.lo, self.hi, qs, k)
+        batch_over_range(&self.emb, self.lo, self.hi, qs, k,
+                         self.sq8.as_deref())
     }
 
     fn score_doc(&self, q: &SpecQuery, doc: DocId) -> f32 {
@@ -298,6 +684,126 @@ mod tests {
             r.retrieve_batch(&qs, 5)
         });
         assert_eq!(plain, held);
+    }
+
+    /// Bit-compare two batched retrievals (ids and score bits).
+    fn assert_bitwise_eq(a: &[Vec<Scored>], b: &[Vec<Scored>]) {
+        assert_eq!(a.len(), b.len());
+        for (qa, qb) in a.iter().zip(b) {
+            assert_eq!(qa.len(), qb.len());
+            for (x, y) in qa.iter().zip(qb) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sq8_bounds_hold_for_every_row() {
+        let emb = random_matrix(if cfg!(miri) { 20 } else { 200 }, 24, 11);
+        let sq8 = Sq8Rows::encode(&emb.data, emb.dim);
+        for r in 0..emb.len() {
+            let row = emb.row(r as u32);
+            let (sf, bf) = (sq8.scale[r] as f64, sq8.bias[r] as f64);
+            let mut asum = 0.0f64;
+            for (j, &x) in row.iter().enumerate() {
+                let recon = sf * sq8.codes[r * emb.dim + j] as f64 + bf;
+                assert!((x as f64 - recon).abs() <= sq8.rerr[r] as f64,
+                        "row {r} coord {j}: |x - x̂| exceeds stored rerr");
+                asum += recon.abs();
+            }
+            assert!(asum <= sq8.asum[r] as f64,
+                    "row {r}: Σ|x̂| exceeds stored asum");
+        }
+    }
+
+    #[test]
+    fn sq8_constant_and_zero_rows_encode_safely() {
+        // Constant row (range 0 → scale 0) and all-zero row: codes are 0,
+        // reconstruction is the bias, rerr stays ~0.
+        let d = 8;
+        let mut data = vec![0.25f32; d];
+        data.extend(vec![0.0f32; d]);
+        let sq8 = Sq8Rows::encode(&data, d);
+        assert_eq!(sq8.scale[0], 0.0);
+        assert!(sq8.rerr[0] <= 1e-6);
+        assert_eq!(sq8.bias[1], 0.0);
+        assert_eq!(&sq8.codes[d..2 * d], &[0u8; 8]);
+        // Zero query: every bound degenerates but nothing divides by 0.
+        let qq = Sq8Query::new(&vec![0.0f32; d]);
+        assert_eq!(qq.qscale, 0.0);
+        assert!(qq.codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn sq8_query_codes_within_qmax() {
+        let mut rng = Rng::new(12);
+        for d in [7usize, 64] {
+            let q: Vec<f32> =
+                (0..d).map(|_| (rng.next_f32() - 0.5) * 10.0).collect();
+            let qq = Sq8Query::new(&q);
+            for (j, &c) in qq.codes.iter().enumerate() {
+                assert!((c as i32).abs() <= kernels::SQ8_QMAX, "j={j}");
+                assert!((q[j] as f64 - qq.qscale * c as f64).abs()
+                            <= qq.qerr,
+                        "j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn sq8_min_heap_tracks_kth_largest() {
+        let mut h = MinF64Heap::new(3);
+        assert_eq!(h.root(), None);
+        for v in [5.0, 1.0, 3.0] {
+            h.push(v);
+        }
+        assert_eq!(h.root(), Some(1.0));
+        h.push(4.0); // evicts 1.0
+        assert_eq!(h.root(), Some(3.0));
+        h.push(0.5); // below root: ignored
+        assert_eq!(h.root(), Some(3.0));
+    }
+
+    #[test]
+    fn sq8_two_phase_matches_full_bitwise() {
+        let n = if cfg!(miri) { 60 } else { 400 };
+        for (d, seed) in [(16usize, 21u64), (24, 22), (64, 23)] {
+            let emb = random_matrix(n, d, seed);
+            let full = DenseExact::new(emb.clone());
+            let mut rng = Rng::new(seed + 100);
+            let qs: Vec<SpecQuery> = (0..5)
+                .map(|_| SpecQuery::dense_only(rng.unit_vector(d)))
+                .collect();
+            for k in [1usize, 5, 17] {
+                let want = full.retrieve_batch(&qs, k);
+                for os in [1.0f64, 2.0, 8.0] {
+                    let q8 = DenseExact::with_sq8(emb.clone(), os);
+                    assert_bitwise_eq(&q8.retrieve_batch(&qs, k), &want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sq8_sharded_views_match_full_shards_bitwise() {
+        let n = if cfg!(miri) { 50 } else { 300 };
+        let emb = random_matrix(n, 16, 31);
+        let full = Arc::new(DenseExact::new(emb.clone()));
+        let q8 = Arc::new(DenseExact::with_sq8(emb, 2.0));
+        let mut rng = Rng::new(32);
+        let qs: Vec<SpecQuery> = (0..4)
+            .map(|_| SpecQuery::dense_only(rng.unit_vector(16)))
+            .collect();
+        use crate::retriever::sharded::Shardable;
+        for shards in [2usize, 3] {
+            let fs = <DenseExact as Shardable>::make_shards(&full, shards);
+            let q8s = <DenseExact as Shardable>::make_shards(&q8, shards);
+            for (f, q8shard) in fs.iter().zip(&q8s) {
+                assert_bitwise_eq(&q8shard.retrieve_batch(&qs, 6),
+                                  &f.retrieve_batch(&qs, 6));
+            }
+        }
     }
 
     #[test]

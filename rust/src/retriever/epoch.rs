@@ -40,7 +40,7 @@ use super::hnsw::Hnsw;
 use super::segment::SegmentedKb;
 use super::sparse::Bm25;
 use super::{Retriever, ShardedRetriever};
-use crate::config::{Config, RetrieverKind};
+use crate::config::{Config, DenseCodec, RetrieverKind};
 use crate::datagen::corpus::{Corpus, Document};
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -117,13 +117,26 @@ pub trait MutableRetriever: Send {
 pub struct MutableDense {
     dim: usize,
     data: Vec<f32>,
+    codec: DenseCodec,
+    oversample: f64,
 }
 
 impl MutableDense {
     pub fn new(dim: usize, data: Vec<f32>) -> Self {
+        Self::with_codec(dim, data, DenseCodec::Full,
+                         super::dense::DEFAULT_SQ8_OVERSAMPLE)
+    }
+
+    /// `dense.codec = sq8` snapshots scan quantized codes and re-score
+    /// survivors from f32 rows — bit-identical results (ADR-010). Each
+    /// publish re-encodes the matrix; the snapshot is already O(corpus)
+    /// (the matrix clone), so the codec doesn't change its complexity
+    /// class — the memory-bounded path is the segment store.
+    pub fn with_codec(dim: usize, data: Vec<f32>, codec: DenseCodec,
+                      oversample: f64) -> Self {
         assert!(dim > 0 && data.len() % dim == 0,
                 "embedding data shape mismatch");
-        Self { dim, data }
+        Self { dim, data, codec, oversample }
     }
 }
 
@@ -160,7 +173,11 @@ impl MutableRetriever for MutableDense {
     fn snapshot(&self, shards: usize) -> Arc<dyn Retriever> {
         let emb = Arc::new(EmbeddingMatrix::new(self.dim,
                                                 self.data.clone()));
-        let base = Arc::new(DenseExact::new(emb));
+        let base = Arc::new(match self.codec {
+            DenseCodec::Sq8 =>
+                DenseExact::with_sq8(emb, self.oversample),
+            DenseCodec::Full => DenseExact::new(emb),
+        });
         if shards > 1 {
             Arc::new(ShardedRetriever::new(base, shards))
         } else {
@@ -506,7 +523,9 @@ impl LiveKb {
         let r = &cfg.retriever;
         let backend: Box<dyn MutableRetriever> = match kind {
             RetrieverKind::Edr => {
-                Box::new(MutableDense::new(dim, embeddings))
+                Box::new(MutableDense::with_codec(
+                    dim, embeddings, cfg.dense.codec,
+                    cfg.dense.oversample))
             }
             RetrieverKind::Adr => {
                 Box::new(MutableHnsw::new(dim, embeddings, r.hnsw_m,

@@ -458,7 +458,8 @@ impl Hnsw {
             // Pull the neighbor rows toward cache while the list itself
             // is still hot; scoring below then hits L1/L2 instead of DRAM.
             for &nb in nbs {
-                kernels::prefetch_f32(self.emb.row(nb).as_ptr());
+                let row = self.emb.row(nb);
+                kernels::prefetch_row(row.as_ptr().cast(), row.len() * 4);
             }
             for &nb in nbs {
                 let s = self.sim(q, nb);
@@ -517,7 +518,8 @@ impl Hnsw {
             // is (usually) already in flight.
             for &nb in nbs {
                 if stamps[nb as usize] != gen {
-                    kernels::prefetch_f32(self.emb.row(nb).as_ptr());
+                    let row = self.emb.row(nb);
+                    kernels::prefetch_row(row.as_ptr().cast(), row.len() * 4);
                 }
             }
             for &nb in nbs {

@@ -6,7 +6,7 @@
 //! reduction order per kernel, whatever the instruction set (DESIGN.md
 //! ADR-007).
 //!
-//! Three kernels, each with a scalar form and (behind the `simd` cargo
+//! Five kernels, each with a scalar form and (behind the `simd` cargo
 //! feature + runtime CPU detection) an AVX2/NEON form:
 //!
 //! * [`dot`] — inner product (the EDR/ADR/cache similarity metric);
@@ -14,7 +14,14 @@
 //!   for quantized segments, ROADMAP item 1);
 //! * [`scan_block`] — the LANES-wide multi-query scan of the flat dense
 //!   retriever: one corpus row scored against up to [`LANES`] packed
-//!   queries per pass.
+//!   queries per pass;
+//! * [`dot_u8i8`] / [`scan_i8`] — the SQ8 quantized-candidate kernels
+//!   (DESIGN.md ADR-010): integer dot of a signed-i8 query against
+//!   unsigned-u8 row codes, streamed at 1 byte per coordinate — the 4x
+//!   memory-density win the two-phase dense scan rests on. Integer
+//!   arithmetic is exact, so the scalar twin and the `maddubs`/widening
+//!   NEON forms agree bit-for-bit by construction (no reduction-order
+//!   discipline needed — there is no rounding to order).
 //!
 //! ## Why scalar and SIMD results are bit-identical
 //!
@@ -45,6 +52,20 @@ pub const LANES: usize = 8;
 
 // The fixed reduction tree below is written for exactly 8 lanes.
 const _: () = assert!(LANES == 8);
+
+/// Magnitude bound on SQ8 *query* codes (`[-SQ8_QMAX, SQ8_QMAX]`, 129
+/// levels). Chosen so the AVX2 `maddubs` adjacent-pair i16 sums can never
+/// saturate: each pair sum is at most `2 · 255 · SQ8_QMAX = 32640 <
+/// i16::MAX`. Row codes use the full unsigned `0..=255` range; the query
+/// side pays one bit of resolution for an exact (saturation-free) integer
+/// kernel, and the reconstruction-error bound absorbs the difference
+/// (DESIGN.md ADR-010).
+pub const SQ8_QMAX: i32 = 64;
+
+/// How many rows ahead the block scans issue a software prefetch for.
+/// Far enough to cover the per-row scoring latency, near enough that the
+/// line is still resident when the scan arrives.
+const PREFETCH_ROWS: usize = 4;
 
 /// Whether the vectorized kernel forms are in use in this process
 /// (compile-time `simd` feature AND runtime CPU support). Resolved once
@@ -136,6 +157,10 @@ pub fn scan_block_scalar(rows: &[f32], d: usize, first_id: DocId,
     debug_assert!(qt.len() >= d * LANES);
     debug_assert!(heaps.len() <= LANES);
     for (i, row) in rows.chunks_exact(d).enumerate() {
+        let ahead = (i + PREFETCH_ROWS) * d;
+        if ahead + d <= rows.len() {
+            prefetch_row(rows[ahead..].as_ptr().cast(), d * 4);
+        }
         let mut scores = [0.0f32; LANES];
         for (j, &x) in row.iter().enumerate() {
             let qrow = &qt[j * LANES..(j + 1) * LANES];
@@ -151,7 +176,7 @@ pub fn scan_block_scalar(rows: &[f32], d: usize, first_id: DocId,
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 mod x86 {
-    use super::{DocId, TopK, LANES};
+    use super::{DocId, TopK, LANES, PREFETCH_ROWS};
     use std::arch::x86_64::*;
 
     /// Fold a 256-bit accumulator with the shared reduction tree:
@@ -258,6 +283,10 @@ mod x86 {
         let qtp = qt.as_ptr();
         let mut scores = [0.0f32; LANES];
         for (i, row) in rows.chunks_exact(d).enumerate() {
+            let ahead = (i + PREFETCH_ROWS) * d;
+            if ahead + d <= rows.len() {
+                super::prefetch_row(rows[ahead..].as_ptr().cast(), d * 4);
+            }
             // SAFETY: `qt.len() >= d * LANES` (caller contract), so each
             // load of LANES f32s at `qtp.add(j * LANES)` with `j < d`
             // is in bounds; the store targets the LANES-sized stack
@@ -276,11 +305,96 @@ mod x86 {
             }
         }
     }
+
+    /// Fold the 8 i32 partial sums of a 256-bit integer accumulator.
+    /// Integer addition is exact, so (unlike the f32 `hsum`) the fold
+    /// order is free — any association yields the same value.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (every caller's contract).
+    #[inline(always)]
+    unsafe fn hsum_i32(acc: __m256i) -> i32 {
+        // SAFETY: register-only lane arithmetic plus one unaligned
+        // store into `m`, a 4-element stack array of exactly the
+        // 128-bit store width.
+        unsafe {
+            let lo = _mm256_castsi256_si128(acc);
+            let hi = _mm256_extracti128_si256::<1>(acc);
+            let mut m = [0i32; 4];
+            _mm_storeu_si128(m.as_mut_ptr() as *mut __m128i,
+                             _mm_add_epi32(lo, hi));
+            (m[0] + m[2]) + (m[1] + m[3])
+        }
+    }
+
+    /// AVX2 quantized dot: 32 code bytes per iteration through
+    /// `maddubs` (u8 × i8 → adjacent-pair i16 sums — saturation-free
+    /// because query codes are bounded by `SQ8_QMAX`, see its doc) and
+    /// `madd` against ones (i16 pairs → i32), accumulated in 8 i32
+    /// lanes. Every operation is exact integer arithmetic, so the value
+    /// equals the scalar twin's for any input — not just bit-identical
+    /// rounding, the same number.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; the dispatchers check `simd_active()`
+    /// (runtime `avx2` detection) before calling.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_u8i8_avx2(a: &[u8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        const STEP: usize = 32;
+        let chunks = a.len() / STEP;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        // SAFETY: each iteration loads 32 bytes at `p.add(c * STEP)`
+        // with `c < chunks = len / STEP`, so every unaligned load stays
+        // inside both slices; AVX2 availability is the caller's
+        // contract, and `hsum_i32`'s AVX2 requirement is implied by it.
+        let body = unsafe {
+            let ones = _mm256_set1_epi16(1);
+            let mut acc = _mm256_setzero_si256();
+            for c in 0..chunks {
+                let i = c * STEP;
+                let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+                let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+                let p16 = _mm256_maddubs_epi16(va, vb);
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(p16, ones));
+            }
+            hsum_i32(acc)
+        };
+        let mut tail = 0i32;
+        let done = chunks * STEP;
+        for (&x, &y) in a[done..].iter().zip(&b[done..]) {
+            tail += x as i32 * y as i32;
+        }
+        body + tail
+    }
+
+    /// AVX2 quantized candidate scan — the `scan_i8` vector form, with
+    /// the same stride-aware prefetch ahead as the scalar twin (`d`
+    /// bytes per row, not `4 * d`).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; the dispatchers check `simd_active()`
+    /// before calling.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scan_i8_avx2(rows: &[u8], d: usize, q: &[i8],
+                               out: &mut [i32]) {
+        debug_assert!(d > 0 && rows.len() % d == 0);
+        debug_assert_eq!(q.len(), d);
+        debug_assert!(out.len() >= rows.len() / d);
+        for (i, row) in rows.chunks_exact(d).enumerate() {
+            let ahead = (i + PREFETCH_ROWS) * d;
+            if ahead + d <= rows.len() {
+                super::prefetch_row(rows[ahead..].as_ptr(), d);
+            }
+            // SAFETY: AVX2 availability is this function's own contract.
+            out[i] = unsafe { dot_u8i8_avx2(row, q) };
+        }
+    }
 }
 
 #[cfg(all(feature = "simd", target_arch = "aarch64"))]
 mod arm {
-    use super::{DocId, TopK, LANES};
+    use super::{DocId, TopK, LANES, PREFETCH_ROWS};
     use std::arch::aarch64::*;
 
     /// Fold the two 128-bit accumulators (lanes 0–3, 4–7) with the
@@ -386,6 +500,10 @@ mod arm {
         let qtp = qt.as_ptr();
         let mut scores = [0.0f32; LANES];
         for (i, row) in rows.chunks_exact(d).enumerate() {
+            let ahead = (i + PREFETCH_ROWS) * d;
+            if ahead + d <= rows.len() {
+                super::prefetch_row(rows[ahead..].as_ptr().cast(), d * 4);
+            }
             // SAFETY: `qt.len() >= d * LANES` (caller contract), so the
             // 4-wide loads at `j * LANES` and `j * LANES + 4` with
             // `j < d` are in bounds; the stores split the LANES-sized
@@ -408,6 +526,78 @@ mod arm {
             for (h, &s) in heaps.iter_mut().zip(&scores) {
                 h.push(first_id + i as DocId, s);
             }
+        }
+    }
+
+    /// NEON quantized dot: 16 code bytes per iteration — widen the u8
+    /// row codes to i16 (values ≤ 255 fit losslessly) and the i8 query
+    /// codes to i16, then four widening multiply-accumulates
+    /// (`vmlal_s16`) into two i32x4 accumulators. Every operation is
+    /// exact integer arithmetic, so the value equals the scalar twin's
+    /// for any input.
+    ///
+    /// # Safety
+    /// The CPU must support NEON (baseline on aarch64, which is the
+    /// only arch this module compiles on).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_u8i8_neon(a: &[u8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        const STEP: usize = 16;
+        let chunks = a.len() / STEP;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        // SAFETY: each iteration loads 16 bytes at `p.add(c * STEP)`
+        // with `c < chunks = len / STEP`, so every load stays inside
+        // both slices; the rest is register-only lane arithmetic. NEON
+        // is baseline on aarch64.
+        let body = unsafe {
+            let mut acc0 = vdupq_n_s32(0);
+            let mut acc1 = vdupq_n_s32(0);
+            for c in 0..chunks {
+                let i = c * STEP;
+                let va = vld1q_u8(pa.add(i));
+                let vb = vld1q_s8(pb.add(i));
+                let a_lo = vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(va)));
+                let a_hi = vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(va)));
+                let b_lo = vmovl_s8(vget_low_s8(vb));
+                let b_hi = vmovl_s8(vget_high_s8(vb));
+                acc0 = vmlal_s16(acc0, vget_low_s16(a_lo),
+                                 vget_low_s16(b_lo));
+                acc1 = vmlal_s16(acc1, vget_high_s16(a_lo),
+                                 vget_high_s16(b_lo));
+                acc0 = vmlal_s16(acc0, vget_low_s16(a_hi),
+                                 vget_low_s16(b_hi));
+                acc1 = vmlal_s16(acc1, vget_high_s16(a_hi),
+                                 vget_high_s16(b_hi));
+            }
+            vaddvq_s32(vaddq_s32(acc0, acc1))
+        };
+        let mut tail = 0i32;
+        let done = chunks * STEP;
+        for (&x, &y) in a[done..].iter().zip(&b[done..]) {
+            tail += x as i32 * y as i32;
+        }
+        body + tail
+    }
+
+    /// NEON quantized candidate scan — the `scan_i8` vector form (the
+    /// prefetch call is a no-op on aarch64 but keeps the two forms
+    /// structurally identical).
+    ///
+    /// # Safety
+    /// The CPU must support NEON (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scan_i8_neon(rows: &[u8], d: usize, q: &[i8],
+                               out: &mut [i32]) {
+        debug_assert!(d > 0 && rows.len() % d == 0);
+        debug_assert_eq!(q.len(), d);
+        debug_assert!(out.len() >= rows.len() / d);
+        for (i, row) in rows.chunks_exact(d).enumerate() {
+            let ahead = (i + PREFETCH_ROWS) * d;
+            if ahead + d <= rows.len() {
+                super::prefetch_row(rows[ahead..].as_ptr(), d);
+            }
+            // SAFETY: NEON availability is this function's own contract.
+            out[i] = unsafe { dot_u8i8_neon(row, q) };
         }
     }
 }
@@ -468,22 +658,128 @@ pub fn scan_block(rows: &[f32], d: usize, first_id: DocId, qt: &[f32],
     scan_block_scalar(rows, d, first_id, qt, heaps)
 }
 
-/// Best-effort prefetch of the cache line holding `ptr` (used by the
-/// HNSW walk to pull neighbor embedding rows while the current
-/// candidate is still being scored). Purely a hint: it never faults and
-/// never changes results; a no-op off x86_64 (aarch64 `prfm` has no
-/// stable intrinsic).
+/// Best-effort **stride-aware** prefetch of one packed row: hints every
+/// cache line covering `row_bytes` bytes starting at `ptr`. The caller
+/// passes the element-width-correct byte length — `4 * dim` for f32 rows,
+/// `dim` for packed-i8 code rows — which is what makes the hint correct
+/// for both layouts (the old `prefetch_f32` helper covered a single line
+/// and implicitly assumed the f32 row stride, so for wide rows the scan
+/// still missed on the row's tail lines, and for 1-byte-per-coordinate
+/// rows there was no correct way to call it at all). Used by the HNSW
+/// walk and by both the f32 and packed-i8 block scans. Purely a hint: it
+/// never faults and never changes results; a no-op off x86_64 (aarch64
+/// `prfm` has no stable intrinsic).
 #[inline(always)]
-pub fn prefetch_f32(ptr: *const f32) {
+pub fn prefetch_row(ptr: *const u8, row_bytes: usize) {
     #[cfg(target_arch = "x86_64")]
     // SAFETY: prefetch is a hint and cannot fault, even on dangling
-    // addresses; SSE is baseline on x86_64.
+    // addresses; SSE is baseline on x86_64. The 64-byte step matches the
+    // x86 cache-line size, and the line addresses are formed with
+    // `wrapping_add` so the helper is sound for *any* `ptr`/`row_bytes`
+    // pair — no in-bounds obligation on the caller.
     unsafe {
         use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
-        _mm_prefetch(ptr as *const i8, _MM_HINT_T0);
+        let mut off = 0usize;
+        loop {
+            _mm_prefetch(ptr.wrapping_add(off) as *const i8, _MM_HINT_T0);
+            off += 64;
+            if off >= row_bytes {
+                break;
+            }
+        }
     }
     #[cfg(not(target_arch = "x86_64"))]
-    let _ = ptr;
+    let _ = (ptr, row_bytes);
+}
+
+/// Exact re-score of one row in [`scan_block`]'s **per-lane operation
+/// order**: a single f32 accumulator walked in coordinate order. This is
+/// deliberately NOT [`dot`] (whose 8-partial-sum tree rounds
+/// differently): the SQ8 two-phase scan re-scores surviving candidate
+/// rows with this so its final scores are bit-identical to what the
+/// full-precision block scan would have produced for the same (row,
+/// query) pair — `scan_block`'s lanes accumulate exactly this sequence,
+/// in scalar and SIMD form alike (DESIGN.md ADR-010).
+#[inline]
+pub fn rescore_dot(row: &[f32], q: &[f32]) -> f32 {
+    debug_assert_eq!(row.len(), q.len());
+    let mut s = 0.0f32;
+    for (&x, &y) in row.iter().zip(q) {
+        s += x * y;
+    }
+    s
+}
+
+/// Quantized dot, scalar twin: `Σ a[j] · b[j]` with `a` unsigned row
+/// codes and `b` signed query codes, accumulated in i32. Exact — every
+/// product and sum is an integer, so this *is* the semantics of
+/// [`dot_u8i8`] on any host, bit for bit. The i32 accumulator cannot
+/// overflow for any dimension the retrieval stack uses: `|a·b| ≤ 255 ·
+/// SQ8_QMAX = 16320` per coordinate bounds the sum for `d` up to ~131k.
+pub fn dot_u8i8_scalar(a: &[u8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as i32 * y as i32;
+    }
+    acc
+}
+
+/// Quantized candidate scan, scalar twin: integer dot of one signed
+/// query-code vector against `n = rows.len() / d` packed u8 code rows,
+/// writing `out[i] = Σ_j rows[i·d + j] · q[j]` (exact i32). The packed
+/// rows stream at 1 byte per coordinate — 4x the row density of the f32
+/// scan — which is the entire point at memory-bandwidth-bound corpus
+/// sizes (DESIGN.md ADR-010).
+pub fn scan_i8_scalar(rows: &[u8], d: usize, q: &[i8], out: &mut [i32]) {
+    debug_assert!(d > 0 && rows.len() % d == 0);
+    debug_assert_eq!(q.len(), d);
+    debug_assert!(out.len() >= rows.len() / d);
+    for (i, row) in rows.chunks_exact(d).enumerate() {
+        let ahead = (i + PREFETCH_ROWS) * d;
+        if ahead + d <= rows.len() {
+            prefetch_row(rows[ahead..].as_ptr(), d);
+        }
+        out[i] = dot_u8i8_scalar(row, q);
+    }
+}
+
+/// Quantized dot — integer inner product of unsigned row codes against
+/// signed query codes. Same dispatch policy as [`dot`]; the guarantee is
+/// even stronger here — integer arithmetic is exact, so scalar and SIMD
+/// forms compute the same *value* by construction, not merely the same
+/// rounding.
+#[inline]
+pub fn dot_u8i8(a: &[u8], b: &[i8]) -> i32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2 support at runtime.
+        return unsafe { x86::dot_u8i8_avx2(a, b) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { arm::dot_u8i8_neon(a, b) };
+    }
+    dot_u8i8_scalar(a, b)
+}
+
+/// Quantized candidate scan — see [`scan_i8_scalar`] for the exact
+/// semantics. Same dispatch policy as [`scan_block`]; exact integer
+/// output either way.
+#[inline]
+pub fn scan_i8(rows: &[u8], d: usize, q: &[i8], out: &mut [i32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2 support at runtime.
+        return unsafe { x86::scan_i8_avx2(rows, d, q, out) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if simd_active() {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { arm::scan_i8_neon(rows, d, q, out) };
+    }
+    scan_i8_scalar(rows, d, q, out)
 }
 
 #[cfg(test)]
@@ -576,10 +872,99 @@ mod tests {
 
     #[test]
     fn prefetch_is_inert() {
-        let v = [1.0f32; 8];
-        prefetch_f32(v.as_ptr());
-        // And on an address we never dereference:
-        prefetch_f32(std::ptr::null());
-        assert_eq!(dot(&v, &v), 8.0);
+        let v = [1.0f32; 40];
+        // A multi-line row (160 bytes = 3 cache lines at any alignment).
+        prefetch_row(v.as_ptr().cast(), std::mem::size_of_val(&v));
+        // A 1-byte row, and an address we never dereference:
+        prefetch_row(v.as_ptr().cast(), 1);
+        prefetch_row(std::ptr::null(), 256);
+        assert_eq!(dot(&v, &v), 40.0);
+    }
+
+    /// Random SQ8 operands: row codes over the full `0..=255` range,
+    /// query codes over `[-SQ8_QMAX, SQ8_QMAX]` — the exact domains the
+    /// codec produces.
+    fn sq8_pair(d: usize, seed: u64) -> (Vec<u8>, Vec<i8>) {
+        let mut rng = Rng::new(seed);
+        let a = (0..d).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+        let span = 2 * SQ8_QMAX as u64 + 1;
+        let b = (0..d)
+            .map(|_| (rng.next_u64() % span) as i64 - SQ8_QMAX as i64)
+            .map(|v| v as i8)
+            .collect();
+        (a, b)
+    }
+
+    #[test]
+    fn sq8_dot_dispatch_matches_scalar() {
+        // DIMS plus tails around the 32-byte AVX2 / 16-byte NEON steps.
+        for &d in &[7usize, 8, 16, 31, 32, 33, 64, 65, 100, 128] {
+            let (a, b) = sq8_pair(d, 600 + d as u64);
+            assert_eq!(dot_u8i8(&a, &b), dot_u8i8_scalar(&a, &b),
+                       "d={d} simd_active={}", simd_active());
+        }
+    }
+
+    #[test]
+    fn sq8_dot_scalar_matches_naive_i64() {
+        for &d in &DIMS {
+            let (a, b) = sq8_pair(d, 700 + d as u64);
+            let naive: i64 = a.iter().zip(&b)
+                .map(|(&x, &y)| x as i64 * y as i64)
+                .sum();
+            assert_eq!(dot_u8i8_scalar(&a, &b) as i64, naive, "d={d}");
+        }
+    }
+
+    #[test]
+    fn sq8_scan_dispatch_matches_scalar() {
+        for &d in &[7usize, 32, 33, 64] {
+            let n = 21;
+            let mut rng = Rng::new(800 + d as u64);
+            let rows: Vec<u8> =
+                (0..n * d).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+            let (_, q) = sq8_pair(d, 900 + d as u64);
+            let mut o1 = vec![0i32; n];
+            let mut o2 = vec![0i32; n];
+            scan_i8(&rows, d, &q, &mut o1);
+            scan_i8_scalar(&rows, d, &q, &mut o2);
+            assert_eq!(o1, o2, "d={d} simd_active={}", simd_active());
+            // And each entry is the per-row dot of the same codes.
+            for (i, row) in rows.chunks_exact(d).enumerate() {
+                assert_eq!(o1[i], dot_u8i8_scalar(row, &q), "d={d} i={i}");
+            }
+        }
+    }
+
+    /// The exactness keystone: `rescore_dot` must reproduce the
+    /// *per-lane* bits of `scan_block` (single accumulator, coordinate
+    /// order) — this is what lets the two-phase SQ8 scan re-score
+    /// survivors and land on scores bit-identical to the full-precision
+    /// scan's (DESIGN.md ADR-010).
+    #[test]
+    fn sq8_rescore_matches_scan_block_lane_bits() {
+        for &d in &DIMS {
+            let mut rng = Rng::new(1000 + d as u64);
+            let n = 17;
+            let rows: Vec<f32> =
+                (0..n * d).map(|_| rng.next_f32() - 0.5).collect();
+            let q: Vec<f32> =
+                (0..d).map(|_| rng.next_f32() - 0.5).collect();
+            let mut qt = vec![0.0f32; d * LANES];
+            for j in 0..d {
+                qt[j * LANES] = q[j];
+            }
+            // k = n keeps every row, so the heap holds every lane score.
+            let mut heaps = vec![TopK::new(n)];
+            scan_block(&rows, d, 0, &qt, &mut heaps);
+            let got = heaps.pop().map(|h| h.into_sorted()).unwrap_or_default();
+            assert_eq!(got.len(), n);
+            for s in got {
+                let row = &rows[s.id as usize * d..(s.id as usize + 1) * d];
+                assert_eq!(s.score.to_bits(),
+                           rescore_dot(row, &q).to_bits(),
+                           "d={d} id={}", s.id);
+            }
+        }
     }
 }

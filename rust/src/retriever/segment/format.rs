@@ -60,6 +60,11 @@ pub const TAG_DOCLEN: u32 = 5;
 pub const TAG_DOCTERMS: u32 = 6;
 /// Sealed HNSW CSR adjacency (full-range ADR segments only).
 pub const TAG_GRAPH: u32 = 7;
+/// SQ8 scalar-quantized dense rows (optional, EDR segments with
+/// `dense.codec = sq8`): per-row scale/bias/asum/rerr f32 arrays followed
+/// by `n * dim` u8 codes — see docs/FORMAT.md. Always accompanied by a
+/// full-precision `DENSE` section (the exact re-score source).
+pub const TAG_DENSE_SQ8: u32 = 8;
 
 /// FNV-1a 64 over `bytes` — the only checksum the format uses.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -141,6 +146,13 @@ pub(crate) fn decode_u16s(b: &[u8], off: usize, n: usize)
     Ok((0..n)
         .map(|i| u16::from_le_bytes([s[2 * i], s[2 * i + 1]]))
         .collect())
+}
+
+/// Decode `n` raw bytes starting at `off` (the u8-code fallback of the
+/// `U8View` typed view — bounds-checked like its wider siblings).
+pub(crate) fn decode_u8s(b: &[u8], off: usize, n: usize)
+                         -> anyhow::Result<Vec<u8>> {
+    Ok(slice_at(b, off, n)?.to_vec())
 }
 
 pub(crate) fn decode_f32s(b: &[u8], off: usize, n: usize)
@@ -384,6 +396,7 @@ macro_rules! typed_view {
 typed_view!(F32View, f32, decode_f32s, 4);
 typed_view!(U32View, u32, decode_u32s, 4);
 typed_view!(U16View, u16, decode_u16s, 2);
+typed_view!(U8View, u8, decode_u8s, 1);
 
 #[cfg(test)]
 mod tests {
@@ -497,6 +510,7 @@ mod tests {
             "DOCLEN = 5",
             "DOCTERMS = 6",
             "GRAPH = 7",
+            "DENSE_SQ8 = 8",
         ] {
             assert!(spec.contains(needle),
                     "docs/FORMAT.md lost required spec text: {needle}");
@@ -509,7 +523,7 @@ mod tests {
         assert_eq!(FNV_PRIME, 0x100000001b3);
         assert_eq!(
             [TAG_META, TAG_DOCS, TAG_DENSE, TAG_POSTINGS, TAG_DOCLEN,
-             TAG_DOCTERMS, TAG_GRAPH],
-            [1, 2, 3, 4, 5, 6, 7]);
+             TAG_DOCTERMS, TAG_GRAPH, TAG_DENSE_SQ8],
+            [1, 2, 3, 4, 5, 6, 7, 8]);
     }
 }

@@ -45,7 +45,7 @@ pub use store::{Segment, SegmentStore};
 pub use tiered::{TieredDense, TieredDenseShard, TieredSparse,
                  TieredSparseShard};
 
-use crate::config::{Config, RetrieverKind};
+use crate::config::{Config, DenseCodec, RetrieverKind};
 use crate::datagen::corpus::{Corpus, Document};
 use crate::retriever::dense::EmbeddingMatrix;
 use crate::retriever::epoch::MutableRetriever;
@@ -129,6 +129,11 @@ pub struct SegmentedKb {
     hnsw_efs: usize,
     hnsw_seed: u64,
     memtable_cap: usize,
+    /// Write EDR segments with the SQ8 quantized companion section
+    /// (`dense.codec = sq8`; always false for ADR/SR).
+    sq8_codec: bool,
+    /// SQ8 pruning-heap factor handed to snapshots (`dense.oversample`).
+    oversample: f64,
     store: SegmentStore,
     mem: Memtable,
     /// Docs frozen into segments (memtable docs not included).
@@ -198,6 +203,8 @@ impl SegmentedKb {
             vocab: corpus.vocab,
             doc_terms: &doc_terms,
             graph: graph.as_ref(),
+            sq8: kind == RetrieverKind::Edr
+                && cfg.dense.codec == DenseCodec::Sq8,
         });
         st.add_segment(&bytes)
     }
@@ -256,6 +263,9 @@ impl SegmentedKb {
             hnsw_efs: cfg.retriever.hnsw_ef_search,
             hnsw_seed: hnsw_seed(cfg),
             memtable_cap: cfg.segment.memtable_docs.max(1),
+            sq8_codec: kind == RetrieverKind::Edr
+                && cfg.dense.codec == DenseCodec::Sq8,
+            oversample: cfg.dense.oversample,
             store,
             mem: Memtable { df: vec![0; vocab], ..Memtable::default() },
             sealed_len,
@@ -352,6 +362,7 @@ impl SegmentedKb {
             vocab: self.vocab,
             doc_terms: &self.mem.doc_terms,
             graph: None,
+            sq8: self.sq8_codec,
         });
         self.store.add_segment(&bytes)?;
         self.seal_mem_stats();
@@ -430,6 +441,7 @@ impl SegmentedKb {
             vocab: self.vocab,
             doc_terms: &doc_terms,
             graph: graph.as_ref(),
+            sq8: self.sq8_codec,
         });
         self.store.replace_all(&bytes)?;
         self.seal_mem_stats();
@@ -447,9 +459,12 @@ impl SegmentedKb {
                 doc_lo: self.sealed_len as u32,
                 doc_hi: (self.sealed_len + self.mem.docs.len()) as u32,
                 rows: format::F32View::owned(self.mem.rows.clone()),
+                sq8: None,
             });
         }
-        maybe_shard(Arc::new(TieredDense::new(tiers, self.dim)), shards)
+        maybe_shard(Arc::new(TieredDense::new(tiers, self.dim)
+                        .with_oversample(self.oversample)),
+                    shards)
     }
 
     fn snapshot_sparse(&self, shards: usize) -> Arc<dyn Retriever> {
@@ -664,12 +679,13 @@ mod tests {
         (docs, embs)
     }
 
-    fn kind_equivalence(kind: RetrieverKind) {
-        let cfg = small_cfg(220, 16);
+    fn kind_equivalence(kind: RetrieverKind, codec: DenseCodec) {
+        let mut cfg = small_cfg(220, 16);
+        cfg.dense.codec = codec;
         let c = Corpus::generate(&cfg.corpus);
         let enc = HashEncoder::new(DIM, 0xE6);
         let rows = embed_corpus(&enc, &c);
-        let dir = tmpdir(&format!("equiv-{kind:?}"));
+        let dir = tmpdir(&format!("equiv-{kind:?}-{}", codec.label()));
 
         let (mut seg_kb, rec) = SegmentedKb::open_or_create(
             &dir, &cfg, kind, &c, &rows, DIM).unwrap();
@@ -725,16 +741,25 @@ mod tests {
 
     #[test]
     fn edr_matches_in_ram_backend() {
-        kind_equivalence(RetrieverKind::Edr);
+        kind_equivalence(RetrieverKind::Edr, DenseCodec::Full);
+    }
+
+    /// Same drive as `edr_matches_in_ram_backend` but with quantized
+    /// segments: every freeze/compaction writes `DENSE_SQ8`, every
+    /// snapshot scans through the two-phase path — and every result
+    /// must still equal the in-RAM f32 backend's bit for bit.
+    #[test]
+    fn edr_sq8_codec_matches_in_ram_backend() {
+        kind_equivalence(RetrieverKind::Edr, DenseCodec::Sq8);
     }
 
     #[test]
     fn sr_matches_in_ram_backend() {
-        kind_equivalence(RetrieverKind::Sr);
+        kind_equivalence(RetrieverKind::Sr, DenseCodec::Full);
     }
 
     #[test]
     fn adr_matches_in_ram_backend() {
-        kind_equivalence(RetrieverKind::Adr);
+        kind_equivalence(RetrieverKind::Adr, DenseCodec::Full);
     }
 }

@@ -17,9 +17,10 @@
 //! `torn_segment_falls_back_to_previous_manifest` test).
 
 use super::format::{self, F32View, SegmentFile, SegmentWriter, U16View,
-                    U32View};
+                    U32View, U8View};
 use crate::config::RetrieverKind;
 use crate::datagen::corpus::Document;
+use crate::retriever::dense::{Sq8Rows, Sq8RowsRef};
 use crate::retriever::hnsw::CsrExport;
 use crate::runtime::Blob;
 use crate::util::json::{self, Value};
@@ -60,6 +61,10 @@ pub(crate) struct SegmentBuild<'a> {
     /// Per-doc sorted (term, tf) stats (SR; empty otherwise).
     pub doc_terms: &'a [Vec<(u32, u16)>],
     pub graph: Option<&'a CsrExport>,
+    /// Also emit a `DENSE_SQ8` section quantizing `rows` (EDR segments
+    /// under `dense.codec = sq8`). The full-precision `DENSE` section is
+    /// still written — the exact re-score phase reads it.
+    pub sq8: bool,
 }
 
 fn meta_section(b: &SegmentBuild, total_doc_len: u64) -> Vec<u8> {
@@ -184,6 +189,21 @@ fn docterms_section(doc_terms: &[Vec<(u32, u16)>]) -> Vec<u8> {
     out
 }
 
+/// `DENSE_SQ8` payload (`docs/FORMAT.md`): SoA per-row quantization
+/// arrays — scale, bias, asum, rerr (`n` f32 each), then row-major u8
+/// codes (`n * dim`). Total length `16 * n + n * dim`.
+fn dense_sq8_section(rows: &[f32], dim: usize) -> Vec<u8> {
+    let q = Sq8Rows::encode(rows, dim);
+    let n = q.len();
+    let mut out = Vec::with_capacity(16 * n + n * dim);
+    format::push_f32s(&mut out, &q.scale);
+    format::push_f32s(&mut out, &q.bias);
+    format::push_f32s(&mut out, &q.asum);
+    format::push_f32s(&mut out, &q.rerr);
+    out.extend_from_slice(&q.codes);
+    out
+}
+
 fn graph_section(g: &CsrExport) -> Vec<u8> {
     let mut out = Vec::new();
     format::push_u32(&mut out, g.m as u32);
@@ -242,6 +262,10 @@ pub(crate) fn build_segment_bytes(b: &SegmentBuild) -> Vec<u8> {
             let mut dense = Vec::with_capacity(4 * b.rows.len());
             format::push_f32s(&mut dense, b.rows);
             w.push_section(format::TAG_DENSE, dense);
+            if b.sq8 {
+                w.push_section(format::TAG_DENSE_SQ8,
+                               dense_sq8_section(b.rows, b.dim));
+            }
         }
         RetrieverKind::Sr => {
             debug_assert_eq!(b.doc_terms.len(), b.docs.len());
@@ -283,6 +307,32 @@ pub(crate) struct DocTermsView {
     pub tfs: U16View,
 }
 
+/// SQ8 quantization arrays over one segment's dense rows
+/// (`DENSE_SQ8` in `docs/FORMAT.md`): per-row scale/bias/asum/rerr,
+/// then row-major u8 codes. Only ever present alongside a full-
+/// precision `DENSE` section — the exact re-score phase reads f32 rows.
+#[derive(Clone)]
+pub(crate) struct Sq8View {
+    pub scale: F32View,
+    pub bias: F32View,
+    pub asum: F32View,
+    pub rerr: F32View,
+    pub codes: U8View,
+}
+
+impl Sq8View {
+    /// Borrow the whole segment's arrays as a scan-ready row view.
+    pub fn as_rows_ref(&self) -> Sq8RowsRef<'_> {
+        Sq8RowsRef {
+            scale: self.scale.as_slice(),
+            bias: self.bias.as_slice(),
+            asum: self.asum.as_slice(),
+            rerr: self.rerr.as_slice(),
+            codes: self.codes.as_slice(),
+        }
+    }
+}
+
 /// One immutable on-disk segment, loaded (zero-copy via mmap where the
 /// platform allows) and checksum-validated.
 ///
@@ -321,6 +371,7 @@ pub struct Segment {
     total_doc_len: u64,
     file: SegmentFile,
     pub(crate) dense: Option<F32View>,
+    pub(crate) sq8: Option<Sq8View>,
     pub(crate) post: Option<PostingsView>,
     pub(crate) doc_len: Option<U32View>,
     pub(crate) doc_terms: Option<DocTermsView>,
@@ -355,6 +406,27 @@ impl Segment {
                 anyhow::ensure!(len == 4 * n * dim,
                                 "DENSE len {len} != 4 * {n} * {dim}");
                 Some(F32View::from_blob(&file.blob, off, n * dim)?)
+            }
+            None => None,
+        };
+        let sq8 = match file.section(format::TAG_DENSE_SQ8) {
+            Some((off, len)) => {
+                anyhow::ensure!(dense.is_some(),
+                                "DENSE_SQ8 section without DENSE");
+                anyhow::ensure!(
+                    len == 16 * n + n * dim,
+                    "DENSE_SQ8 len {len} != 16 * {n} + {n} * {dim}");
+                Some(Sq8View {
+                    scale: F32View::from_blob(&file.blob, off, n)?,
+                    bias: F32View::from_blob(&file.blob, off + 4 * n,
+                                             n)?,
+                    asum: F32View::from_blob(&file.blob, off + 8 * n,
+                                             n)?,
+                    rerr: F32View::from_blob(&file.blob, off + 12 * n,
+                                             n)?,
+                    codes: U8View::from_blob(&file.blob, off + 16 * n,
+                                             n * dim)?,
+                })
             }
             None => None,
         };
@@ -399,7 +471,7 @@ impl Segment {
             None => None,
         };
         Ok(Self { name, kind, doc_lo, doc_hi, dim, vocab, total_doc_len,
-                  file, dense, post, doc_len, doc_terms })
+                  file, dense, sq8, post, doc_len, doc_terms })
     }
 
     /// The on-disk file name (e.g. `seg-000001.rseg`).
@@ -451,6 +523,7 @@ impl Segment {
             doc_lo: self.doc_lo,
             doc_hi: self.doc_hi,
             rows,
+            sq8: self.sq8.clone(),
         })
     }
 
@@ -796,6 +869,7 @@ mod tests {
             vocab: c.vocab,
             doc_terms: &dts,
             graph: None,
+            sq8: false,
         });
         let dir = tmpdir("sr-roundtrip");
         std::fs::create_dir_all(&dir).unwrap();
@@ -838,6 +912,49 @@ mod tests {
     }
 
     #[test]
+    fn edr_sq8_segment_roundtrips_bitwise() {
+        let c = small_corpus(17);
+        let docs: Vec<Document> = c.iter().cloned().collect();
+        let dim = 12usize;
+        let mut rng = crate::util::rng::Rng::new(0x5108);
+        let rows: Vec<f32> = (0..docs.len() * dim)
+            .map(|_| rng.next_f32() * 2.0 - 1.0)
+            .collect();
+        let bytes = build_segment_bytes(&SegmentBuild {
+            kind: RetrieverKind::Edr,
+            doc_lo: 0,
+            docs: &docs,
+            rows: &rows,
+            dim,
+            vocab: c.vocab,
+            doc_terms: &[],
+            graph: None,
+            sq8: true,
+        });
+        let dir = tmpdir("sq8-roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seg.rseg");
+        std::fs::write(&path, &bytes).unwrap();
+        let seg = Segment::load(&path).unwrap();
+        // Full-precision rows survive untouched.
+        let dense = seg.dense.as_ref().unwrap();
+        assert_eq!(dense.as_slice(), &rows[..]);
+        // Quantization arrays match a fresh in-RAM encode bitwise.
+        let want = Sq8Rows::encode(&rows, dim);
+        let got = seg.sq8.as_ref().unwrap().as_rows_ref();
+        assert_eq!(got.codes, &want.codes[..]);
+        for (g, w) in [(got.scale, &want.scale), (got.bias, &want.bias),
+                       (got.asum, &want.asum), (got.rerr, &want.rerr)]
+        {
+            assert_eq!(g.len(), w.len());
+            for (a, b) in g.iter().zip(w.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn store_add_open_and_fallback() {
         let dir = tmpdir("fallback");
         let c = small_corpus(24);
@@ -846,11 +963,13 @@ mod tests {
         store.add_segment(&build_segment_bytes(&SegmentBuild {
             kind: RetrieverKind::Sr, doc_lo: 0, docs: &d1, rows: &[],
             dim: 0, vocab: c.vocab, doc_terms: &t1, graph: None,
+            sq8: false,
         })).unwrap();
         let (d2, t2) = sr_build(&c, 16, 24);
         store.add_segment(&build_segment_bytes(&SegmentBuild {
             kind: RetrieverKind::Sr, doc_lo: 16, docs: &d2, rows: &[],
             dim: 0, vocab: c.vocab, doc_terms: &t2, graph: None,
+            sq8: false,
         })).unwrap();
         drop(store);
 
@@ -882,7 +1001,7 @@ mod tests {
             store.add_segment(&build_segment_bytes(&SegmentBuild {
                 kind: RetrieverKind::Sr, doc_lo: lo as u32, docs: &d,
                 rows: &[], dim: 0, vocab: c.vocab, doc_terms: &t,
-                graph: None,
+                graph: None, sq8: false,
             })).unwrap();
         }
         // Compact: replace both with one full segment. The two old
@@ -892,6 +1011,7 @@ mod tests {
         store.replace_all(&build_segment_bytes(&SegmentBuild {
             kind: RetrieverKind::Sr, doc_lo: 0, docs: &d, rows: &[],
             dim: 0, vocab: c.vocab, doc_terms: &t, graph: None,
+            sq8: false,
         })).unwrap();
         let names: Vec<String> = std::fs::read_dir(&dir).unwrap()
             .flatten()

@@ -25,9 +25,12 @@
 //! [`scan_rows_with`]: crate::retriever::dense::scan_rows_with
 
 use super::format::{F32View, U32View};
-use super::store::{DocTermsView, PostingsView};
-use crate::retriever::dense::{dot_chunked, scan_rows_with,
-                              with_pack_scratch};
+use super::store::{DocTermsView, PostingsView, Sq8View};
+use crate::retriever::dense::{dot_chunked, scan_rows_with, scan_sq8_rows,
+                              sq8_prune_k, with_pack_scratch,
+                              MinF64Heap, Sq8Query, Sq8RowsRef,
+                              DEFAULT_SQ8_OVERSAMPLE};
+use crate::retriever::kernels;
 use crate::retriever::sharded::{shard_bounds, ShardStrategy, Shardable,
                                 ShardedRetriever};
 use crate::retriever::sparse::{bm25_query_terms, bm25_term_weight};
@@ -44,6 +47,10 @@ pub(crate) struct DenseTier {
     pub doc_lo: DocId,
     pub doc_hi: DocId,
     pub rows: F32View,
+    /// SQ8 quantization arrays over the same rows (segments written
+    /// under `dense.codec = sq8`). `None` for full-precision segments
+    /// and the memtable overlay — tiers mix freely within one store.
+    pub sq8: Option<Sq8View>,
 }
 
 /// Tiered exact dense retriever: the flat scan split across segment
@@ -53,6 +60,9 @@ pub struct TieredDense {
     tiers: Arc<Vec<DenseTier>>,
     dim: usize,
     n_docs: usize,
+    /// SQ8 pruning-heap factor (only consulted when a tier carries
+    /// quantized views); see [`sq8_prune_k`].
+    oversample: f64,
 }
 
 impl TieredDense {
@@ -60,12 +70,23 @@ impl TieredDense {
         let mut expect = 0;
         for t in tiers.iter() {
             assert_eq!(t.doc_lo, expect, "tiers must be contiguous");
-            assert_eq!(t.rows.len(),
-                       (t.doc_hi - t.doc_lo) as usize * dim,
-                       "tier row count mismatch");
+            let n = (t.doc_hi - t.doc_lo) as usize;
+            assert_eq!(t.rows.len(), n * dim, "tier row count mismatch");
+            if let Some(v) = &t.sq8 {
+                assert_eq!(v.scale.len(), n, "sq8 tier row mismatch");
+                assert_eq!(v.codes.len(), n * dim,
+                           "sq8 tier code mismatch");
+            }
             expect = t.doc_hi;
         }
-        Self { tiers: Arc::new(tiers), dim, n_docs: expect as usize }
+        Self { tiers: Arc::new(tiers), dim, n_docs: expect as usize,
+               oversample: DEFAULT_SQ8_OVERSAMPLE }
+    }
+
+    /// Override the SQ8 oversample knob (`dense.oversample`).
+    pub(crate) fn with_oversample(mut self, oversample: f64) -> Self {
+        self.oversample = oversample;
+        self
     }
 
     /// The monolithic `batch_over_range`, with the scan split at tier
@@ -77,22 +98,81 @@ impl TieredDense {
         }
         let mut heaps: Vec<TopK> =
             qs.iter().map(|_| TopK::new(k.max(1))).collect();
-        let qrefs: Vec<&[f32]> =
-            qs.iter().map(|q| q.dense.as_slice()).collect();
-        with_pack_scratch(|qt| {
+        if self.tiers.iter().any(|t| t.sq8.is_some()) {
+            self.scan_sq8(qs, k, lo, hi, &mut heaps);
+        } else {
+            let qrefs: Vec<&[f32]> =
+                qs.iter().map(|q| q.dense.as_slice()).collect();
+            with_pack_scratch(|qt| {
+                for t in self.tiers.iter() {
+                    let a = t.doc_lo.max(lo);
+                    let b = t.doc_hi.min(hi);
+                    if a >= b {
+                        continue;
+                    }
+                    let s = (a - t.doc_lo) as usize * self.dim;
+                    let e = (b - t.doc_lo) as usize * self.dim;
+                    scan_rows_with(&t.rows.as_slice()[s..e], self.dim,
+                                   a, &qrefs, &mut heaps, qt);
+                }
+            });
+        }
+        heaps.into_iter().map(|h| h.into_sorted()).collect()
+    }
+
+    /// Mixed-tier two-phase scan, per query: quantized tiers go through
+    /// [`scan_sq8_rows`] (candidate generation + exact re-score),
+    /// full-precision tiers (the memtable overlay) are scored row by row
+    /// with [`kernels::rescore_dot`] — the same single-accumulator
+    /// arithmetic `scan_block` applies per lane, so every pushed score
+    /// is bitwise the packed scan's. One [`MinF64Heap`] of *exact*
+    /// scores spans all tiers of a query, so earlier tiers (either
+    /// kind) tighten the pruning threshold for later quantized ones.
+    fn scan_sq8(&self, qs: &[SpecQuery], k: usize, lo: DocId, hi: DocId,
+                heaps: &mut [TopK]) {
+        let mut idot: Vec<i32> = Vec::new();
+        for (qi, q) in qs.iter().enumerate() {
+            let qq = Sq8Query::new(&q.dense);
+            let mut prune =
+                MinF64Heap::new(sq8_prune_k(k.max(1), self.oversample));
             for t in self.tiers.iter() {
                 let a = t.doc_lo.max(lo);
                 let b = t.doc_hi.min(hi);
                 if a >= b {
                     continue;
                 }
-                let s = (a - t.doc_lo) as usize * self.dim;
-                let e = (b - t.doc_lo) as usize * self.dim;
-                scan_rows_with(&t.rows.as_slice()[s..e], self.dim, a,
-                               &qrefs, &mut heaps, qt);
+                let (rl, rh) = ((a - t.doc_lo) as usize,
+                                (b - t.doc_lo) as usize);
+                let full =
+                    &t.rows.as_slice()[rl * self.dim..rh * self.dim];
+                match &t.sq8 {
+                    Some(v) => {
+                        let rr = v.as_rows_ref();
+                        let view = Sq8RowsRef {
+                            scale: &rr.scale[rl..rh],
+                            bias: &rr.bias[rl..rh],
+                            asum: &rr.asum[rl..rh],
+                            rerr: &rr.rerr[rl..rh],
+                            codes: &rr.codes[rl * self.dim
+                                             ..rh * self.dim],
+                        };
+                        scan_sq8_rows(view, self.dim, full, a,
+                                      &q.dense, &qq, &mut prune,
+                                      &mut heaps[qi], &mut idot);
+                    }
+                    None => {
+                        for (i, row) in
+                            full.chunks_exact(self.dim).enumerate()
+                        {
+                            let exact =
+                                kernels::rescore_dot(row, &q.dense);
+                            heaps[qi].push(a + i as DocId, exact);
+                            prune.push(exact as f64);
+                        }
+                    }
+                }
             }
-        });
-        heaps.into_iter().map(|h| h.into_sorted()).collect()
+        }
     }
 
     fn row(&self, doc: DocId) -> &[f32] {
@@ -402,10 +482,22 @@ mod tests {
                 doc_lo: lo as DocId,
                 doc_hi: hi as DocId,
                 rows: F32View::owned(rows[lo * DIM..hi * DIM].to_vec()),
+                sq8: None,
             });
             lo = hi;
         }
         tiers
+    }
+
+    fn sq8_view(rows: &[f32]) -> Sq8View {
+        let q = crate::retriever::dense::Sq8Rows::encode(rows, DIM);
+        Sq8View {
+            scale: F32View::owned(q.scale),
+            bias: F32View::owned(q.bias),
+            asum: F32View::owned(q.asum),
+            rerr: F32View::owned(q.rerr),
+            codes: super::super::format::U8View::owned(q.codes),
+        }
     }
 
     fn sparse_tiers(c: &Corpus, cuts: &[usize])
@@ -501,6 +593,39 @@ mod tests {
             .collect();
         assert_eq!(mono.retrieve_batch(&qs, 5),
                    sharded.retrieve_batch(&qs, 5));
+    }
+
+    #[test]
+    fn tiered_dense_sq8_mixed_tiers_match_monolithic() {
+        // Two quantized tiers + one full-precision tier (the memtable
+        // shape) must stay bit-identical to the monolithic f32 scan,
+        // plain and sharded, across oversample settings.
+        let c = corpus(260);
+        let enc = HashEncoder::new(DIM, 9);
+        let rows = embed_corpus(&enc, &c);
+        let mono = DenseExact::new(Arc::new(
+            EmbeddingMatrix::new(DIM, rows.clone())));
+        let mut rng = Rng::new(11);
+        let qs: Vec<SpecQuery> = (0..5)
+            .map(|_| SpecQuery::dense_only(rng.unit_vector(DIM)))
+            .collect();
+        for oversample in [1.0f64, 2.0, 8.0] {
+            let mut tiers = dense_tiers(&rows, &[90, 210, 260]);
+            tiers[0].sq8 = Some(sq8_view(&rows[..90 * DIM]));
+            tiers[1].sq8 =
+                Some(sq8_view(&rows[90 * DIM..210 * DIM]));
+            let tiered = Arc::new(TieredDense::new(tiers, DIM)
+                .with_oversample(oversample));
+            for k in [1usize, 5, 12] {
+                assert_eq!(mono.retrieve_batch(&qs, k),
+                           tiered.retrieve_batch(&qs, k),
+                           "oversample={oversample} k={k}");
+            }
+            let sharded = maybe_shard(tiered, 2);
+            assert_eq!(mono.retrieve_batch(&qs, 5),
+                       sharded.retrieve_batch(&qs, 5),
+                       "sharded oversample={oversample}");
+        }
     }
 
     #[test]

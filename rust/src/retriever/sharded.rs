@@ -90,7 +90,13 @@ impl Shardable for DenseExact {
         shard_bounds(this.len(), n)
             .into_iter()
             .map(|(lo, hi)| {
-                Arc::new(DenseShard::new(this.embeddings().clone(), lo, hi))
+                // Shards inherit the parent's codec (shared Arc): a
+                // sharded sq8 EDR scans quantized per shard and merges
+                // bit-identically to the unsharded scan, because each
+                // shard's output is bit-identical to its full scan.
+                Arc::new(DenseShard::with_sq8(this.embeddings().clone(),
+                                              lo, hi,
+                                              this.sq8().cloned()))
             })
             .collect()
     }

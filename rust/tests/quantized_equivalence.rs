@@ -1,0 +1,343 @@
+//! THE quantization correctness property (DESIGN.md ADR-010): the SQ8
+//! codec — u8 scalar-quantized candidate generation + exact f32 re-score
+//! of every surviving row — must be **bit-identical** to the
+//! full-precision flat scan, not approximately equal. The per-row
+//! reconstruction-error bound makes pruning conservative, and survivors
+//! are re-scored with the same reduction order as the packed f32 scan,
+//! so `(score desc, id asc)` top-k lists match to the last bit.
+//!
+//! Sweeps: dims × k × oversample × shards {1, 2} in RAM; the
+//! segment-persisted codec (`DENSE_SQ8` sections) vs the in-RAM
+//! full-precision backend through ingest rounds, compaction, and a cold
+//! reopen; engine serving × kb_parallel {0, 4} under live compaction;
+//! and a one-byte `DENSE_SQ8` payload corruption, which the section
+//! checksum must reject at open — falling back to the last good
+//! manifest — before any payload byte is interpreted.
+
+use ralmspec::config::{Config, CorpusConfig, DenseCodec, RetrieverKind};
+use ralmspec::datagen::{embed_corpus, embed_doc, generate_questions,
+                        Corpus, Dataset, Encoder, HashEncoder};
+use ralmspec::eval::{build_spec_options, run_engine_cell_live, QaMethod};
+use ralmspec::lm::MockLm;
+use ralmspec::retriever::dense::{DenseExact, EmbeddingMatrix};
+use ralmspec::retriever::{CompactionWorker, LiveKb, MutableRetriever,
+                          Retriever, SegmentStore, SegmentedKb,
+                          ShardedRetriever, SpecQuery};
+use ralmspec::spec::{QueryBuilder, QueryMode, SpecPipeline};
+use ralmspec::util::{Rng, Scored};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const DIM: usize = ralmspec::runtime::RETRIEVAL_DIM;
+
+fn small_config(seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.corpus = CorpusConfig {
+        n_docs: 220,
+        n_topics: 12,
+        doc_len: (24, 64),
+        seed,
+        ..CorpusConfig::default()
+    };
+    cfg.retriever.hnsw_ef_construction = 40;
+    cfg.retriever.hnsw_ef_search = 32;
+    cfg.spec.max_new_tokens = 20;
+    cfg.ingest.batch = 5;
+    cfg.segment.memtable_docs = 8;
+    cfg.segment.compact_interval_ms = 5;
+    cfg.segment.compact_segments = 2;
+    cfg
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ralmspec-sq8test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn probes(corpus: &Corpus, enc: &HashEncoder, n: usize,
+          seed: u64) -> Vec<SpecQuery> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let topic = (i % corpus.n_topics) as u32;
+            let terms = corpus.topic_tokens(topic, 24, &mut rng);
+            SpecQuery { dense: enc.encode(&terms), terms }
+        })
+        .collect()
+}
+
+fn bits(kb: &dyn Retriever, qs: &[SpecQuery],
+        k: usize) -> Vec<Vec<(u32, u32)>> {
+    kb.retrieve_batch(qs, k)
+        .into_iter()
+        .map(|hits: Vec<Scored>| {
+            hits.into_iter()
+                .map(|s| (s.id, s.score.to_bits()))
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_same(reference: &Arc<LiveKb>, quantized: &Arc<LiveKb>,
+               qs: &[SpecQuery], ctx: &str) {
+    let r = reference.epochs.snapshot();
+    let s = quantized.epochs.snapshot();
+    assert_eq!(r.kb.len(), s.kb.len(), "{ctx}: KB length diverged");
+    assert_eq!(bits(r.kb.as_ref(), qs, 10), bits(s.kb.as_ref(), qs, 10),
+               "{ctx}: SQ8 RETRIEVAL DIVERGED FROM FULL PRECISION");
+    for (qi, q) in qs.iter().enumerate() {
+        for doc in [0u32, (r.kb.len() as u32) / 2, r.kb.len() as u32 - 1] {
+            assert_eq!(r.kb.score_doc(q, doc).to_bits(),
+                       s.kb.score_doc(q, doc).to_bits(),
+                       "{ctx}: score_doc diverged (q={qi} doc={doc})");
+        }
+    }
+}
+
+#[test]
+fn sq8_flat_scan_matches_full_precision() {
+    // In-RAM codec sweep: dims (including a non-lane-multiple), k,
+    // oversample (1.0 = tightest pruning heap), and shard counts. The
+    // fixture mixes degenerate rows (all-zero, constant — scale = 0) in
+    // with random unit vectors so the quantizer's flat-row path is on
+    // the sweep too.
+    for &dim in &[8usize, 33, 64] {
+        let mut rng = Rng::new(0x9000 + dim as u64);
+        let n = 300;
+        let mut data = vec![0.0f32; dim];         // all-zero row
+        data.extend(std::iter::repeat(0.5).take(dim)); // constant row
+        for _ in 2..n {
+            data.extend(rng.unit_vector(dim));
+        }
+        let emb = Arc::new(EmbeddingMatrix::new(dim, data));
+        let full = Arc::new(DenseExact::new(emb.clone()));
+        let qs: Vec<SpecQuery> = (0..7)
+            .map(|_| SpecQuery::dense_only(rng.unit_vector(dim)))
+            .collect();
+        for &oversample in &[1.0f64, 2.0, 6.0] {
+            let sq8 =
+                Arc::new(DenseExact::with_sq8(emb.clone(), oversample));
+            for &k in &[1usize, 5, 20, 64] {
+                assert_eq!(
+                    bits(full.as_ref(), &qs, k), bits(sq8.as_ref(), &qs, k),
+                    "dim={dim} oversample={oversample} k={k}: \
+                     SQ8 top-k diverged from full precision");
+            }
+            for shards in [1usize, 2] {
+                let sf = ShardedRetriever::new(full.clone(), shards);
+                let ss = ShardedRetriever::new(sq8.clone(), shards);
+                assert_eq!(
+                    bits(&sf, &qs, 10), bits(&ss, &qs, 10),
+                    "dim={dim} oversample={oversample} shards={shards}: \
+                     sharded SQ8 diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn sq8_segment_backend_matches_full_in_ram() {
+    // The full persistence × quantization cross: a segment-backed KB
+    // under `dense.codec = sq8` (every freeze and compaction writes
+    // DENSE_SQ8 sections, every scan runs the two-phase quantized path)
+    // must stay bit-identical to the fully in-RAM **full-precision**
+    // backend at every epoch — through memtable freezes, an explicit
+    // compaction, and a cold reopen from disk.
+    let seed = 0xE1FE;
+    for shards in [1usize, 2] {
+        let mut cfg = small_config(seed);
+        cfg.retriever.shards = shards;
+        let dir = fresh_dir(&format!("seg-s{shards}"));
+        let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+        let corpus = Corpus::generate(&cfg.corpus);
+        let emb = embed_corpus(&enc, &corpus);
+        let reference = LiveKb::build(&cfg, RetrieverKind::Edr,
+                                      corpus.clone(), emb.clone(), DIM);
+        let mut sq8_cfg = cfg.clone();
+        sq8_cfg.dense.codec = DenseCodec::Sq8;
+        // One shard case on the tightest pruning heap, the other on the
+        // default.
+        sq8_cfg.dense.oversample = if shards == 1 { 1.0 } else { 2.0 };
+        sq8_cfg.segment.kb_dir = Some(dir.clone());
+        let quantized = LiveKb::build_auto(&sq8_cfg, RetrieverKind::Edr,
+                                           corpus.clone(), emb.clone(), DIM)
+            .unwrap();
+        let qs = probes(&corpus, &enc, 6, seed ^ 0x9A);
+        assert_same(&reference, &quantized, &qs,
+                    &format!("shards={shards} epoch0"));
+
+        let mut next_id = corpus.len() as u32;
+        for round in 0u64..3 {
+            let docs = corpus.synth_docs(seed ^ (0x51 + round), next_id,
+                                         10, (24, 64));
+            next_id += docs.len() as u32;
+            for live in [&reference, &quantized] {
+                let mut w = live.writer.lock().unwrap();
+                for d in &docs {
+                    w.ingest(d.tokens.clone(), d.topic,
+                             embed_doc(&enc, d)).unwrap();
+                }
+                w.flush().unwrap();
+            }
+            assert_eq!(reference.epochs.epoch(), quantized.epochs.epoch());
+            assert_same(&reference, &quantized, &qs,
+                        &format!("shards={shards} round={round}"));
+        }
+
+        {
+            let mut w = quantized.writer.lock().unwrap();
+            assert!(w.tier_count() > 1,
+                    "ingest rounds must have left tiers behind");
+            assert!(w.run_compaction().unwrap());
+            assert_eq!(w.tier_count(), 1);
+        }
+        assert_same(&reference, &quantized, &qs,
+                    &format!("shards={shards} post-compaction"));
+
+        drop(quantized);
+        let reopened = LiveKb::build_auto(&sq8_cfg, RetrieverKind::Edr,
+                                          corpus.clone(), emb.clone(), DIM)
+            .unwrap();
+        assert_same(&reference, &reopened, &qs,
+                    &format!("shards={shards} reopened"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn sq8_serving_stays_pinned_under_compaction() {
+    // Engine serving against an SQ8 segment-backed live KB while a
+    // background CompactionWorker runs: every request must stay
+    // bit-identical to a sequential run against its pinned epoch
+    // snapshot — swept over kb_parallel {0, 4}.
+    let seed = 0xE9FEu64;
+    for kb_parallel in [0usize, 4] {
+        let mut cfg = small_config(seed);
+        cfg.dense.codec = DenseCodec::Sq8;
+        let dir = fresh_dir(&format!("serve-p{kb_parallel}"));
+        cfg.segment.kb_dir = Some(dir.clone());
+        let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+        let corpus = Corpus::generate(&cfg.corpus);
+        let emb = embed_corpus(&enc, &corpus);
+        let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+        let live = LiveKb::build_auto(&cfg, RetrieverKind::Edr,
+                                      corpus.clone(), emb, DIM)
+            .unwrap();
+        let mut worker = CompactionWorker::spawn(
+            live.clone(), cfg.segment.compact_interval_ms,
+            cfg.segment.compact_segments);
+        let n = 6;
+        let questions =
+            generate_questions(Dataset::WikiQa, &corpus, n, seed ^ 0x9);
+        let methods: Vec<QaMethod> =
+            (0..n).map(|_| QaMethod::plain_spec()).collect();
+        let opts = ralmspec::serving::EngineOptions {
+            max_batch: 64,
+            flush_us: 200,
+            max_inflight: 8,
+            kb_parallel,
+        };
+        let out = run_engine_cell_live(&lm, &enc, RetrieverKind::Edr,
+                                       &live, &questions, &methods, &cfg,
+                                       opts, 3, 200.0)
+            .unwrap();
+        worker.stop();
+        assert_eq!(out.metrics.len(), n);
+        for i in 0..n {
+            let pin = &out.pins[i];
+            let QaMethod::Spec { prefetch, os3, async_verify, stride } =
+                methods[i]
+            else {
+                unreachable!()
+            };
+            let pipe = SpecPipeline {
+                lm: &lm,
+                kb: pin.kb.as_ref(),
+                corpus: &*pin.corpus,
+                queries: QueryBuilder {
+                    encoder: &enc,
+                    mode: QueryMode::Dense,
+                    dense_len: cfg.retriever.dense_query_len,
+                    sparse_len: cfg.retriever.sparse_query_len,
+                },
+                opts: build_spec_options(&cfg, prefetch, os3,
+                                         async_verify, stride),
+            };
+            let reference = pipe.run(&questions[i].tokens).unwrap();
+            assert_eq!(
+                out.metrics[i].tokens_out, reference.tokens_out,
+                "SQ8 SERVING UNDER COMPACTION DIVERGED: \
+                 kb_parallel={kb_parallel} req={i} epoch={}",
+                pin.epoch);
+        }
+        {
+            let mut w = live.writer.lock().unwrap();
+            w.run_compaction().unwrap();
+            assert_eq!(w.tier_count(), 1);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn sq8_payload_corruption_falls_back_to_last_good_manifest() {
+    // Flip one byte in the newest segment's DENSE_SQ8 payload. An EDR
+    // segment under `dense.codec = sq8` lays its sections out as META,
+    // DOCS, DENSE, DENSE_SQ8, and the file ends exactly at the last
+    // payload byte (the writer pads *between* sections only) — so the
+    // final byte of the file is the last u8 code of the DENSE_SQ8
+    // section. The per-section FNV checksum must reject the segment at
+    // open, before any payload byte is interpreted, and recovery must
+    // fall back to the previous manifest.
+    let seed = 0xF2FE;
+    let mut cfg = small_config(seed);
+    cfg.dense.codec = DenseCodec::Sq8;
+    let dir = fresh_dir("corrupt");
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let corpus = Corpus::generate(&cfg.corpus);
+    let emb = embed_corpus(&enc, &corpus);
+    let n0 = corpus.len();
+    SegmentedKb::create(&dir, &cfg, RetrieverKind::Edr, &corpus, &emb, DIM)
+        .unwrap();
+    let (mut kb, recovered) =
+        SegmentedKb::open(&dir, &cfg, RetrieverKind::Edr).unwrap();
+    for round in 0u64..2 {
+        let docs = recovered.synth_docs(seed ^ (0x51 + round),
+                                        kb.len() as u32,
+                                        cfg.segment.memtable_docs,
+                                        (24, 64));
+        let embs: Vec<Vec<f32>> =
+            docs.iter().map(|d| embed_doc(&enc, d)).collect();
+        kb.append(&docs, &embs).unwrap();
+    }
+    assert_eq!(kb.len(), n0 + 2 * cfg.segment.memtable_docs);
+    drop(kb);
+
+    let store = SegmentStore::open(&dir).unwrap();
+    assert_eq!(store.segments().len(), 3);
+    let newest = dir.join(store.segments().last().unwrap().file_name());
+    drop(store);
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    std::fs::write(&newest, &bytes).unwrap();
+
+    let (kb, recovered) =
+        SegmentedKb::open(&dir, &cfg, RetrieverKind::Edr).unwrap();
+    assert_eq!(kb.len(), n0 + cfg.segment.memtable_docs,
+               "recovery must fall back to the manifest before the \
+                corrupt DENSE_SQ8 segment");
+    assert_eq!(recovered.len(), kb.len());
+    // The fallback store still answers bit-identically to a fresh
+    // in-RAM build over the surviving docs.
+    let emb2 = embed_corpus(&enc, &recovered);
+    let reference = LiveKb::build(&cfg, RetrieverKind::Edr,
+                                  recovered.clone(), emb2, DIM);
+    let qs = probes(&corpus, &enc, 4, seed ^ 0x9A);
+    assert_eq!(bits(kb.snapshot(1).as_ref(), &qs, 10),
+               bits(reference.epochs.snapshot().kb.as_ref(), &qs, 10),
+               "fallback store diverged from in-RAM rebuild");
+    let _ = std::fs::remove_dir_all(&dir);
+}

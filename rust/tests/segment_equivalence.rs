@@ -262,6 +262,65 @@ fn torn_write_falls_back_to_last_good_manifest() {
 }
 
 #[test]
+fn dense_payload_corruption_falls_back_to_last_good_manifest() {
+    // Bit-rot safety (complements the torn-write test above, which only
+    // covers truncation): flip ONE byte inside the newest segment's
+    // DENSE payload. An EDR segment lays its sections out as META, DOCS,
+    // DENSE — and the file ends exactly at the last payload byte (the
+    // writer pads *between* sections only) — so the final byte of the
+    // file is inside the DENSE f32 rows. The per-section FNV checksum
+    // must reject the segment at open, before any payload byte is
+    // interpreted, and recovery must fall back to the previous manifest.
+    let seed = 0xC9FE;
+    let cfg = small_config(seed);
+    let dir = fresh_dir("bitrot");
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let corpus = Corpus::generate(&cfg.corpus);
+    let emb = embed_corpus(&enc, &corpus);
+    let n0 = corpus.len();
+    SegmentedKb::create(&dir, &cfg, RetrieverKind::Edr, &corpus, &emb, DIM)
+        .unwrap();
+    let (mut kb, recovered) =
+        SegmentedKb::open(&dir, &cfg, RetrieverKind::Edr).unwrap();
+    for round in 0u64..2 {
+        let docs = recovered.synth_docs(seed ^ (0x51 + round),
+                                        kb.len() as u32,
+                                        cfg.segment.memtable_docs,
+                                        (24, 64));
+        let embs: Vec<Vec<f32>> =
+            docs.iter().map(|d| embed_doc(&enc, d)).collect();
+        kb.append(&docs, &embs).unwrap();
+    }
+    drop(kb);
+
+    let store = SegmentStore::open(&dir).unwrap();
+    assert_eq!(store.segments().len(), 3);
+    let newest = dir.join(store.segments().last().unwrap().file_name());
+    drop(store);
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    std::fs::write(&newest, &bytes).unwrap();
+
+    let (kb, recovered) =
+        SegmentedKb::open(&dir, &cfg, RetrieverKind::Edr).unwrap();
+    assert_eq!(kb.len(), n0 + cfg.segment.memtable_docs,
+               "recovery must fall back to the manifest before the \
+                corrupt DENSE segment");
+    assert_eq!(recovered.len(), kb.len());
+    // The fallback store still answers bit-identically to a fresh
+    // in-RAM build over the surviving docs.
+    let emb2 = embed_corpus(&enc, &recovered);
+    let reference = LiveKb::build(&cfg, RetrieverKind::Edr,
+                                  recovered.clone(), emb2, DIM);
+    let qs = probes(&corpus, &enc, 4, seed ^ 0x9A);
+    assert_eq!(bits(kb.snapshot(1).as_ref(), &qs),
+               bits(reference.epochs.snapshot().kb.as_ref(), &qs),
+               "fallback store diverged from in-RAM rebuild");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn serving_stays_pinned_under_compaction() {
     // Engine serving against a segment-backed live KB while a background
     // CompactionWorker runs: with a tiny memtable the concurrent ingest
