@@ -131,11 +131,32 @@ COMMANDS:
                              are bit-identical to full. --oversample
                              sizes the pruning heap (default 2.0).
                              Config keys: dense.codec / dense.oversample
+          [--tenants N] [--priority-mix H:N:L] [--p99-target-us U]
+                             multi-tenant serving (ADR-011): N tenants,
+                             each with its own live knowledge base,
+                             epoch stream, and (tenant, k, epoch) flush
+                             namespace, replaying a seeded
+                             priority-mixed trace through one engine.
+                             --priority-mix sets the weighted-admission
+                             credits per class (default 4:2:1); under
+                             overload the engine preempts the
+                             lowest-priority in-flight task at a
+                             speculation boundary and requeues it —
+                             outputs stay bit-identical.
+                             --p99-target-us U arms the adaptive flush
+                             controller: max_batch/flush_us/kb_parallel
+                             are retuned against the observed p99
+                             (0 = off). Reports per-(tenant, class)
+                             p50/p99. Config keys: tenant.count /
+                             tenant.weight_{high,normal,low} /
+                             tenant.quota_docs / engine.preempt /
+                             slo.p99_target_us
     bench-gate [--mock] [--out BENCH_PR3.json]
                [--engine-out BENCH_PR4.json] [--live-out BENCH_PR5.json]
                [--kernel-out BENCH_PR6.json]
                [--storage-out BENCH_PR8.json]
                [--quant-out BENCH_PR9.json]
+               [--tenant-out BENCH_PR10.json]
                              CI perf-regression gate: quick fig4+fig5
                              speed-up ratios per retriever class, written
                              as JSON; exits non-zero if any ratio < 1.0
@@ -159,7 +180,13 @@ COMMANDS:
                              SIMD vs scalar — fails if < 1.0 on
                              SIMD-active hosts — plus the quantized vs
                              full-precision end-to-end scan trajectory
-                             at RALMSPEC_BENCH_QUANT_ROWS row counts)
+                             at RALMSPEC_BENCH_QUANT_ROWS row counts),
+                             and the multi-tenant isolation cell
+                             (--tenant-out: per-(tenant, class) p50/p99
+                             with an ingest storm on tenant A on vs
+                             off — fails if tenant B's high-priority
+                             p99 degrades more than 1.5x under the
+                             storm)
     trace [--retriever edr] [--mock]
                              emit a Fig-1(c)-style per-request timeline
     help                     this text

@@ -60,6 +60,10 @@ mod conv {
         }
         Some((a[0].as_usize()?, a[1].as_usize()?))
     }
+
+    pub fn bool(v: &Value) -> Option<bool> {
+        v.as_bool()
+    }
 }
 
 #[derive(Debug, Clone, Default)]
@@ -75,6 +79,8 @@ pub struct Config {
     pub ingest: IngestConfig,
     pub segment: SegmentConfig,
     pub dense: DenseConfig,
+    pub tenant: TenantConfig,
+    pub slo: SloConfig,
 }
 
 impl Config {
@@ -130,6 +136,12 @@ impl Config {
         if let Some(x) = v.get("dense") {
             self.dense.merge(x);
         }
+        if let Some(x) = v.get("tenant") {
+            self.tenant.merge(x);
+        }
+        if let Some(x) = v.get("slo") {
+            self.slo.merge(x);
+        }
     }
 
     pub fn to_json(&self) -> Value {
@@ -145,6 +157,8 @@ impl Config {
             ("ingest", self.ingest.to_json()),
             ("segment", self.segment.to_json()),
             ("dense", self.dense.to_json()),
+            ("tenant", self.tenant.to_json()),
+            ("slo", self.slo.to_json()),
         ])
     }
 }
@@ -486,11 +500,20 @@ pub struct EngineConfig {
     pub max_batch: usize,
     pub flush_us: u64,
     pub kb_parallel: usize,
+    /// Speculation preemption (DESIGN.md ADR-011): under overload
+    /// (`max_inflight` saturated with a strictly-higher-priority request
+    /// waiting) the engine cancels the lowest-priority in-flight task at
+    /// a speculation boundary and requeues it — abandoned speculation is
+    /// re-derivable, so per-request output stays bit-identical. All-
+    /// default-priority traffic is never preempted, so the flag only
+    /// matters for mixed-class workloads.
+    pub preempt: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { max_batch: 32, flush_us: 200, kb_parallel: 4 }
+        Self { max_batch: 32, flush_us: 200, kb_parallel: 4,
+               preempt: true }
     }
 }
 
@@ -500,6 +523,7 @@ impl EngineConfig {
             "max_batch" => self.max_batch => usize,
             "flush_us" => self.flush_us => u64,
             "kb_parallel" => self.kb_parallel => usize,
+            "preempt" => self.preempt => bool,
         });
     }
 
@@ -508,6 +532,113 @@ impl EngineConfig {
             ("max_batch", Value::num(self.max_batch as f64)),
             ("flush_us", Value::num(self.flush_us as f64)),
             ("kb_parallel", Value::num(self.kb_parallel as f64)),
+            ("preempt", Value::Bool(self.preempt)),
+        ])
+    }
+}
+
+/// Multi-tenant serving (DESIGN.md ADR-011): `count` tenants, each with
+/// its own `LiveKb`/epoch stream and flush namespace; the per-class
+/// admission weights set the weighted round-robin ratio (every
+/// `weight_high` high-class admissions cede one slot cycle to
+/// `weight_normal` normal and `weight_low` low ones); `quota_docs` caps
+/// each tenant writer's lifetime ingest (0 = unlimited).
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    pub count: usize,
+    pub weight_high: u64,
+    pub weight_normal: u64,
+    pub weight_low: u64,
+    pub quota_docs: usize,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        Self {
+            count: 1,
+            weight_high: 4,
+            weight_normal: 2,
+            weight_low: 1,
+            quota_docs: 0,
+        }
+    }
+}
+
+impl TenantConfig {
+    /// Admission weights indexed by `Priority::index()` (High, Normal,
+    /// Low), each at least 1 so no class can be starved outright.
+    pub fn weights(&self) -> [u64; 3] {
+        [self.weight_high.max(1), self.weight_normal.max(1),
+         self.weight_low.max(1)]
+    }
+
+    fn merge(&mut self, v: &Value) {
+        merge_fields!(self, v, {
+            "count" => self.count => usize,
+            "weight_high" => self.weight_high => u64,
+            "weight_normal" => self.weight_normal => u64,
+            "weight_low" => self.weight_low => u64,
+            "quota_docs" => self.quota_docs => usize,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("count", Value::num(self.count as f64)),
+            ("weight_high", Value::num(self.weight_high as f64)),
+            ("weight_normal", Value::num(self.weight_normal as f64)),
+            ("weight_low", Value::num(self.weight_low as f64)),
+            ("quota_docs", Value::num(self.quota_docs as f64)),
+        ])
+    }
+}
+
+/// SLO-adaptive flush control (`serving::slo`, DESIGN.md ADR-011):
+/// `p99_target_us > 0` arms the controller — the engine tracks a
+/// `window`-request latency window and, while its p99 overshoots the
+/// target, shrinks the coalescing window (`max_batch`/`flush_us`, never
+/// below the minima here) and raises `kb_parallel` (never above
+/// `max_kb_parallel`). 0 — the default — keeps the fixed configured
+/// plan.
+#[derive(Debug, Clone)]
+pub struct SloConfig {
+    pub p99_target_us: u64,
+    pub window: usize,
+    pub min_batch: usize,
+    pub min_flush_us: u64,
+    pub max_kb_parallel: usize,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        Self {
+            p99_target_us: 0,
+            window: 64,
+            min_batch: 1,
+            min_flush_us: 50,
+            max_kb_parallel: 16,
+        }
+    }
+}
+
+impl SloConfig {
+    fn merge(&mut self, v: &Value) {
+        merge_fields!(self, v, {
+            "p99_target_us" => self.p99_target_us => u64,
+            "window" => self.window => usize,
+            "min_batch" => self.min_batch => usize,
+            "min_flush_us" => self.min_flush_us => u64,
+            "max_kb_parallel" => self.max_kb_parallel => usize,
+        });
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("p99_target_us", Value::num(self.p99_target_us as f64)),
+            ("window", Value::num(self.window as f64)),
+            ("min_batch", Value::num(self.min_batch as f64)),
+            ("min_flush_us", Value::num(self.min_flush_us as f64)),
+            ("max_kb_parallel", Value::num(self.max_kb_parallel as f64)),
         ])
     }
 }
@@ -852,6 +983,49 @@ mod tests {
                    DenseCodec::Full);
         assert_eq!(DenseCodec::Sq8.label(), "sq8");
         assert!("pq4".parse::<DenseCodec>().is_err());
+    }
+
+    #[test]
+    fn tenant_defaults_and_merge() {
+        let c = Config::default();
+        assert_eq!(c.tenant.count, 1); // single-tenant by default
+        assert_eq!(c.tenant.weights(), [4, 2, 1]);
+        assert_eq!(c.tenant.quota_docs, 0); // unlimited ingest
+        assert!(c.engine.preempt); // preemption armed (no-op single-class)
+        let v = json::parse(
+            r#"{"tenant": {"count": 4, "weight_high": 8, "weight_low": 0,
+                           "quota_docs": 500},
+                "engine": {"preempt": false}}"#).unwrap();
+        let mut c = Config::default();
+        c.merge(&v);
+        assert_eq!(c.tenant.count, 4);
+        // weight_low 0 would starve the class; weights() floors at 1.
+        assert_eq!(c.tenant.weights(), [8, 2, 1]);
+        assert_eq!(c.tenant.quota_docs, 500);
+        assert!(!c.engine.preempt);
+        assert_eq!(c.engine.max_batch, 32); // untouched default
+    }
+
+    #[test]
+    fn slo_defaults_and_merge() {
+        let c = Config::default();
+        assert_eq!(c.slo.p99_target_us, 0); // adaptation off by default
+        assert_eq!(c.slo.window, 64);
+        assert_eq!(c.slo.min_batch, 1);
+        assert_eq!(c.slo.min_flush_us, 50);
+        assert_eq!(c.slo.max_kb_parallel, 16);
+        let v = json::parse(
+            r#"{"slo": {"p99_target_us": 250000, "window": 32,
+                        "min_batch": 4, "min_flush_us": 20,
+                        "max_kb_parallel": 8}}"#).unwrap();
+        let mut c = Config::default();
+        c.merge(&v);
+        assert_eq!(c.slo.p99_target_us, 250_000);
+        assert_eq!(c.slo.window, 32);
+        assert_eq!(c.slo.min_batch, 4);
+        assert_eq!(c.slo.min_flush_us, 20);
+        assert_eq!(c.slo.max_kb_parallel, 8);
+        assert_eq!(c.tenant.count, 1); // untouched default
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::datagen::{Dataset, Encoder, HashEncoder};
 use crate::eval::report::{cell_stats, speedup, CellStats, Report};
 use crate::eval::runner::{questions_for, run_qa_cell, QaMethod,
                           ServeSummary};
-use crate::eval::workload::TestBed;
+use crate::eval::workload::{generate_trace, TestBed, TraceSpec};
 use crate::knnlm::{Datastore, KnnLmBaseline, KnnLmSpec, KnnServeOptions};
 use crate::lm::{LanguageModel, MockLm};
 use crate::metrics::ReqMetrics;
@@ -154,6 +154,18 @@ pub trait ErasedLm {
                                   concurrency: usize)
                                   -> anyhow::Result<ServeSummary>;
 
+    /// Replay a seeded multi-tenant traffic trace (ADR-011) — see
+    /// `eval::runner::serve_tenant_trace`.
+    #[allow(clippy::too_many_arguments)]
+    fn serve_tenant_trace(
+        &self, encoder: &dyn Encoder, kind: RetrieverKind,
+        kbs: &[std::sync::Arc<crate::retriever::LiveKb>],
+        questions: &[crate::datagen::Question], method: QaMethod,
+        trace: &[crate::eval::workload::TrafficEvent], cfg: &Config,
+        concurrency: usize,
+        storm: Option<crate::serving::TenantId>)
+        -> anyhow::Result<crate::eval::runner::TenantCellReport>;
+
     fn qproj_of_prompt(&self, prompt: &[u32]) -> anyhow::Result<Vec<f32>>;
 }
 
@@ -252,6 +264,20 @@ macro_rules! impl_holder {
                 -> anyhow::Result<ServeSummary> {
                 crate::eval::runner::serve_knn_throughput_mixed(
                     &self.0, kb, ds, opts_per, prompts, cfg, concurrency)
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            fn serve_tenant_trace(
+                &self, encoder: &dyn Encoder, kind: RetrieverKind,
+                kbs: &[std::sync::Arc<crate::retriever::LiveKb>],
+                questions: &[crate::datagen::Question], method: QaMethod,
+                trace: &[crate::eval::workload::TrafficEvent],
+                cfg: &Config, concurrency: usize,
+                storm: Option<crate::serving::TenantId>)
+                -> anyhow::Result<crate::eval::runner::TenantCellReport> {
+                crate::eval::runner::serve_tenant_trace(
+                    &self.0, encoder, kind, kbs, questions, method, trace,
+                    cfg, concurrency, storm)
             }
 
             fn qproj_of_prompt(&self, prompt: &[u32])
@@ -915,6 +941,27 @@ pub fn run_serve(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         // 0 = synchronous inline flush; >= 1 = async executor cap.
         cfg.engine.kb_parallel = n;
     }
+    if let Some(n) = flags.get_usize("tenants")? {
+        anyhow::ensure!(n >= 1, "--tenants must be >= 1");
+        cfg.tenant.count = n;
+    }
+    if let Some(mix) = flags.get("priority-mix") {
+        let parts: Vec<&str> = mix.split(':').collect();
+        anyhow::ensure!(parts.len() == 3,
+                        "--priority-mix wants high:normal:low weights, \
+                         got {mix:?}");
+        let w = |p: &str| -> anyhow::Result<u64> {
+            p.trim().parse().map_err(|_| anyhow::anyhow!(
+                "bad weight {p:?} in --priority-mix {mix:?}"))
+        };
+        cfg.tenant.weight_high = w(parts[0])?;
+        cfg.tenant.weight_normal = w(parts[1])?;
+        cfg.tenant.weight_low = w(parts[2])?;
+    }
+    if let Some(us) = flags.get_usize("p99-target-us")? {
+        // 0 disables the adaptive flush controller.
+        cfg.slo.p99_target_us = us as u64;
+    }
     if let Some(r) = flags.get_f64("ingest-rate")? {
         anyhow::ensure!(r >= 0.0, "--ingest-rate must be >= 0");
         cfg.ingest.rate = r;
@@ -1031,6 +1078,14 @@ fn serve_engine_scenario(cfg: &Config, provider: &Provider, model: &str,
         Some(c) => vec![c.max(1)],
         None => vec![1, 8, 32],
     };
+    if cfg.tenant.count > 1 {
+        anyhow::ensure!(cfg.segment.kb_dir.is_none(),
+                        "--tenants serves per-tenant in-RAM live KBs; \
+                         --kb-dir is single-tenant");
+        return serve_tenant_scenario(cfg, provider, model, bed, enc, kind,
+                                     dataset, questions, method,
+                                     &concurrencies);
+    }
     if cfg.ingest.rate > 0.0 || cfg.segment.kb_dir.is_some() {
         return serve_live_scenario(cfg, provider, model, bed,
                                    enc, kind, dataset, questions, method,
@@ -1081,6 +1136,103 @@ fn serve_engine_scenario(cfg: &Config, provider: &Provider, model: &str,
                 ("overlap_per_round", Value::num(s.overlap_per_round)),
                 ("epochs_served", Value::num(s.epochs_served as f64)),
                 ("epoch_splits", Value::num(s.epoch_splits as f64)),
+            ]));
+        }
+        Ok(())
+    })?;
+    report.write(&cfg.paths.reports)
+}
+
+/// The multi-tenant scenario (`serve --tenants N`, DESIGN.md ADR-011):
+/// each concurrency level builds one live knowledge base per tenant,
+/// replays a seeded priority-mixed traffic trace (class weights from
+/// `--priority-mix` / `cfg.tenant`, ingest bursts when `--ingest-rate`
+/// is set) through one engine, and reports the aggregate plus the
+/// per-(tenant, class) latency slices. `--p99-target-us` arms the
+/// adaptive flush controller for the run.
+#[allow(clippy::too_many_arguments)]
+fn serve_tenant_scenario(cfg: &Config, provider: &Provider, model: &str,
+                         bed: &TestBed, enc: &dyn Encoder,
+                         kind: RetrieverKind, dataset: Dataset,
+                         questions: &[crate::datagen::Question],
+                         method: QaMethod, concurrencies: &[usize])
+                         -> anyhow::Result<()> {
+    use crate::retriever::LiveKb;
+    eprintln!("[serve] tenant scenario: {} requests via {} on {}/{} ({}), \
+               tenants={} mix={:?} p99_target_us={} preempt={}",
+              questions.len(), method.label(), model, kind.label(),
+              dataset.label(), cfg.tenant.count, cfg.tenant.weights(),
+              cfg.slo.p99_target_us, cfg.engine.preempt);
+    let trace = generate_trace(&TraceSpec {
+        seed: cfg.eval.seed ^ 0x7E4A_11,
+        tenants: cfg.tenant.count,
+        requests: questions.len(),
+        mix: cfg.tenant.weights(),
+        ingest_bursts: if cfg.ingest.rate > 0.0 { 2 } else { 0 },
+        burst_docs: cfg.ingest.batch,
+    });
+    let mut report = Report::new(
+        "serve_tenant",
+        "Multi-tenant serving: per-(tenant, class) latency under \
+         weighted admission + speculation preemption (ADR-011)");
+    provider.with_lm(cfg, model, &mut |lm| {
+        for &c in concurrencies {
+            // Fresh per-tenant KBs per level so levels stay comparable.
+            let kbs: Vec<std::sync::Arc<LiveKb>> = (0..cfg.tenant.count)
+                .map(|_| LiveKb::build(cfg, kind, (*bed.corpus).clone(),
+                                       bed.embeddings.data.clone(),
+                                       bed.embeddings.dim))
+                .collect();
+            let r = lm.serve_tenant_trace(enc, kind, &kbs, questions,
+                                          method, &trace, cfg, c, None)?;
+            let s = &r.summary;
+            report.line(&format!(
+                "conc={:<3} {:>7.2} req/s  p50={:.3}s p99={:.3}s \
+                 wall={:.2}s  tenants={} tenant_splits={} preempt={} \
+                 forced={} adapt={}",
+                s.concurrency, s.rps, s.p50_s, s.p99_s, s.wall_s,
+                r.tenants_served, r.tenant_splits, r.preemptions,
+                r.forced_admissions, r.adaptations));
+            for pc in &r.per_class {
+                report.line(&format!(
+                    "         t{} {:<6} n={:<3} {:>7.2} req/s \
+                     p50={:.3}s p99={:.3}s",
+                    pc.tenant, pc.class.label(), pc.requests, pc.rps,
+                    pc.p50_s, pc.p99_s));
+            }
+            report.row(Value::obj(vec![
+                ("model", Value::str(model)),
+                ("retriever", Value::str(kind.label())),
+                ("dataset", Value::str(dataset.label())),
+                ("method", Value::str(method.label())),
+                ("concurrency", Value::num(s.concurrency as f64)),
+                ("tenants", Value::num(cfg.tenant.count as f64)),
+                ("requests", Value::num(s.requests as f64)),
+                ("rps", Value::num(s.rps)),
+                ("p50_s", Value::num(s.p50_s)),
+                ("p99_s", Value::num(s.p99_s)),
+                ("wall_s", Value::num(s.wall_s)),
+                ("p99_target_us",
+                 Value::num(cfg.slo.p99_target_us as f64)),
+                ("tenants_served", Value::num(r.tenants_served as f64)),
+                ("tenant_splits", Value::num(r.tenant_splits as f64)),
+                ("preemptions", Value::num(r.preemptions as f64)),
+                ("forced_admissions",
+                 Value::num(r.forced_admissions as f64)),
+                ("adaptations", Value::num(r.adaptations as f64)),
+                ("docs_ingested", Value::num(r.docs_ingested as f64)),
+                ("per_class", Value::Arr(
+                    r.per_class.iter()
+                        .map(|pc| Value::obj(vec![
+                            ("tenant", Value::num(pc.tenant as f64)),
+                            ("class", Value::str(pc.class.label())),
+                            ("requests",
+                             Value::num(pc.requests as f64)),
+                            ("rps", Value::num(pc.rps)),
+                            ("p50_s", Value::num(pc.p50_s)),
+                            ("p99_s", Value::num(pc.p99_s)),
+                        ]))
+                        .collect())),
             ]));
         }
         Ok(())

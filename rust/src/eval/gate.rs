@@ -62,6 +62,16 @@
 //! density win is a memory-bandwidth story that only shows once rows
 //! spill the last-level cache). Model-free.
 
+//!
+//! A seventh artifact (`--tenant-out`, default `BENCH_PR10.json`)
+//! records the **multi-tenant isolation cell** (DESIGN.md ADR-011):
+//! two tenants with their own live KBs replay a seeded priority-mixed
+//! trace at [`ENGINE_CONC`], once with no ingest storm and once with a
+//! background writer flooding tenant A — **gated**: tenant B's
+//! high-priority p99 with the storm on must stay within
+//! [`MAX_TENANT_P99_RATIO`] of its storm-off p99. One tenant's ingest
+//! burst must not destroy another tenant's latency SLO.
+
 use crate::cli::Flags;
 use crate::config::{Config, RetrieverKind};
 use crate::datagen::Dataset;
@@ -70,10 +80,11 @@ use crate::eval::drivers::{knn_fixture, knn_retriever, ErasedLm, Provider,
 use crate::eval::kernel_bench::{self, MIN_KERNEL_SPEEDUP};
 use crate::retriever::kernels;
 use crate::eval::runner::{questions_for, LiveServeReport, QaMethod,
-                          ServeSummary};
-use crate::eval::workload::TestBed;
+                          ServeSummary, TenantCellReport};
+use crate::eval::workload::{generate_trace, TestBed, TraceSpec};
 use crate::knnlm::KnnServeOptions;
 use crate::retriever::{InjectedLatency, LiveKb, Retriever};
+use crate::serving::Priority;
 use crate::spec::StridePolicy;
 use crate::util::json::Value;
 use std::sync::Arc;
@@ -403,6 +414,144 @@ fn live_ingest_sweep(lm: &dyn ErasedLm, enc: &dyn crate::datagen::Encoder,
     })
 }
 
+/// Max allowed degradation of tenant B's **high-priority** p99 when
+/// tenant A runs an ingest storm, vs the storm-off run of the same
+/// trace. The isolation contract (ADR-011): per-tenant epoch streams and
+/// (tenant, k, epoch) flush namespaces keep one tenant's publish burst
+/// from invalidating another tenant's coalesced batches.
+const MAX_TENANT_P99_RATIO: f64 = 1.5;
+
+/// The multi-tenant isolation cell (PR 10): tenants A (=0) and B (=1)
+/// with their own live KBs replay one seeded trace — B's traffic split
+/// high/normal, A all normal — at [`ENGINE_CONC`], storm off vs storm on
+/// (a background writer flooding tenant A at the live cell's ingest
+/// rate). Best-of-runs on each side; gated on B-high p99 staying within
+/// [`MAX_TENANT_P99_RATIO`].
+struct TenantCell {
+    off: TenantCellReport,
+    on: TenantCellReport,
+}
+
+impl TenantCell {
+    /// Tenant B's high-priority p99 on one side of the sweep.
+    fn b_high_p99(r: &TenantCellReport) -> Option<f64> {
+        r.per_class
+            .iter()
+            .find(|c| c.tenant == 1 && c.class == Priority::High)
+            .map(|c| c.p99_s)
+    }
+
+    /// storm-on / storm-off ratio of tenant B's high-priority p99. Both
+    /// arms replay the same trace, so the slice exists on both sides or
+    /// on neither (nothing to gate → 1.0).
+    fn ratio(&self) -> f64 {
+        match (Self::b_high_p99(&self.off), Self::b_high_p99(&self.on)) {
+            (Some(off), Some(on)) if off > 0.0 => on / off,
+            (None, None) => 1.0,
+            _ => f64::INFINITY,
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        let side = |r: &TenantCellReport| -> Value {
+            Value::obj(vec![
+                ("rps", Value::num(r.summary.rps)),
+                ("p50_s", Value::num(r.summary.p50_s)),
+                ("p99_s", Value::num(r.summary.p99_s)),
+                ("tenants_served",
+                 Value::num(r.tenants_served as f64)),
+                ("tenant_splits", Value::num(r.tenant_splits as f64)),
+                ("preemptions", Value::num(r.preemptions as f64)),
+                ("adaptations", Value::num(r.adaptations as f64)),
+                ("docs_ingested", Value::num(r.docs_ingested as f64)),
+                ("per_class", Value::Arr(
+                    r.per_class.iter()
+                        .map(|c| Value::obj(vec![
+                            ("tenant", Value::num(c.tenant as f64)),
+                            ("class", Value::str(c.class.label())),
+                            ("requests", Value::num(c.requests as f64)),
+                            ("rps", Value::num(c.rps)),
+                            ("p50_s", Value::num(c.p50_s)),
+                            ("p99_s", Value::num(c.p99_s)),
+                        ]))
+                        .collect())),
+            ])
+        };
+        Value::obj(vec![
+            ("concurrency", Value::num(ENGINE_CONC as f64)),
+            ("storm_off", side(&self.off)),
+            ("storm_on", side(&self.on)),
+            ("b_high_p99_ratio", Value::num(self.ratio())),
+        ])
+    }
+}
+
+fn tenant_isolation_sweep(lm: &dyn ErasedLm,
+                          enc: &dyn crate::datagen::Encoder,
+                          bed: &TestBed, cfg: &Config)
+                          -> anyhow::Result<TenantCell> {
+    eprintln!("[gate] tenant isolation cell: conc={ENGINE_CONC}, \
+               storm rate={}/s...", ingest_rate());
+    let mut cfg = cfg.clone();
+    cfg.tenant.count = 2;
+    cfg.ingest.rate = ingest_rate();
+    let n = (4 * ENGINE_CONC).max(cfg.eval.requests);
+    let questions = questions_for(bed, Dataset::WikiQa, n, 0,
+                                  cfg.eval.seed);
+    let method = QaMethod::spec(crate::config::PREFETCH, false, false);
+    // One fixed trace for both arms: tenants alternate, B's requests
+    // split high/normal while A stays normal — the contended class mix
+    // the gate's ratio reads.
+    let trace: Vec<crate::eval::workload::TrafficEvent> = generate_trace(
+        &TraceSpec {
+            seed: cfg.eval.seed ^ 0x7E4A_10,
+            tenants: 2,
+            requests: n,
+            mix: [1, 1, 0],
+            ingest_bursts: 2,
+            burst_docs: cfg.ingest.batch,
+        })
+        .into_iter()
+        .map(|e| match e {
+            // Tenant A is the storm's victim-side noise floor: keep all
+            // of its traffic Normal so the gated slice (B-high) exists
+            // on both arms with a stable request count.
+            crate::eval::workload::TrafficEvent::Arrive {
+                tenant: 0, at, ..
+            } => crate::eval::workload::TrafficEvent::Arrive {
+                tenant: 0,
+                class: Priority::Normal,
+                at,
+            },
+            other => other,
+        })
+        .collect();
+    let runs = cfg.eval.runs.max(1);
+    let arm = |storm: Option<crate::serving::TenantId>|
+               -> anyhow::Result<TenantCellReport> {
+        let mut best: Option<TenantCellReport> = None;
+        for _ in 0..runs {
+            // Fresh per-tenant KBs per run so runs stay comparable.
+            let kbs: Vec<Arc<LiveKb>> = (0..2)
+                .map(|_| LiveKb::build(&cfg, RetrieverKind::Edr,
+                                       (*bed.corpus).clone(),
+                                       bed.embeddings.data.clone(),
+                                       bed.embeddings.dim))
+                .collect();
+            let r = lm.serve_tenant_trace(enc, RetrieverKind::Edr, &kbs,
+                                          &questions, method, &trace,
+                                          &cfg, ENGINE_CONC, storm)?;
+            if best.as_ref().map_or(true, |b| {
+                r.summary.rps > b.summary.rps
+            }) {
+                best = Some(r);
+            }
+        }
+        best.ok_or_else(|| anyhow::anyhow!("runs >= 1"))
+    };
+    Ok(TenantCell { off: arm(None)?, on: arm(Some(0))? })
+}
+
 /// Base corpus for the storage cells; the republish comparison reruns at
 /// 4x this size with the same memtable.
 fn storage_docs() -> usize {
@@ -553,10 +702,13 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         flags.get("storage-out").unwrap_or("BENCH_PR8.json").to_string();
     let quant_out =
         flags.get("quant-out").unwrap_or("BENCH_PR9.json").to_string();
+    let tenant_out =
+        flags.get("tenant-out").unwrap_or("BENCH_PR10.json").to_string();
     let provider = Provider::from_flags(&cfg, flags)?;
     let mut ratios: Vec<Ratio> = Vec::new();
     let mut engine_ratios: Vec<EngineRatio> = Vec::new();
     let mut live_cells: Vec<LiveCell> = Vec::new();
+    let mut tenant_cells: Vec<TenantCell> = Vec::new();
 
     // --- Kernel latency cells first: model-free, cheap, and the most
     // direct readout of this PR family's hot-path work (ADR-007).
@@ -602,6 +754,8 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
                                                &cfg)?);
             live_cells.push(live_ingest_sweep(lm, enc.as_ref(), &bed,
                                               &cfg)?);
+            tenant_cells.push(tenant_isolation_sweep(lm, enc.as_ref(),
+                                                     &bed, &cfg)?);
             Ok(())
         })?;
     } else {
@@ -854,12 +1008,62 @@ pub fn run_gate(cfg: &Config, flags: &Flags) -> anyhow::Result<()> {
         std::fs::write(&live_out, live_doc.pretty())?;
         println!("[gate] wrote {live_out}");
     }
+    if !tenant_cells.is_empty() {
+        for c in &tenant_cells {
+            for (label, r) in [("off", &c.off), ("on", &c.on)] {
+                for s in &r.per_class {
+                    println!("[gate] tenant storm-{label:<3} t{} {:<6} \
+                              n={:<3} {:.2} req/s p50={:.4}s p99={:.4}s",
+                             s.tenant, s.class.label(), s.requests, s.rps,
+                             s.p50_s, s.p99_s);
+                }
+                println!("[gate] tenant storm-{label:<3} preemptions={} \
+                          tenant_splits={} adaptations={} ingested={}",
+                         r.preemptions, r.tenant_splits, r.adaptations,
+                         r.docs_ingested);
+            }
+            let verdict = if c.ratio() <= MAX_TENANT_P99_RATIO {
+                "ok"
+            } else {
+                "FAIL"
+            };
+            println!("[gate] tenant B-high p99 storm-on/off ratio \
+                      {:.2}x (max {MAX_TENANT_P99_RATIO:.1}x)  {verdict}",
+                     c.ratio());
+            if c.ratio() > MAX_TENANT_P99_RATIO {
+                failures.push(format!("tenant/b-high-p99 {:.2}x",
+                                      c.ratio()));
+            }
+        }
+        let tenant_doc = Value::obj(vec![
+            ("gate", Value::str("tenant-isolation")),
+            ("max_b_high_p99_ratio", Value::num(MAX_TENANT_P99_RATIO)),
+            ("concurrency", Value::num(ENGINE_CONC as f64)),
+            ("ingest_rate", Value::num(ingest_rate())),
+            ("runs", Value::num(cfg.eval.runs as f64)),
+            ("pass", Value::Bool(
+                tenant_cells.iter()
+                    .all(|c| c.ratio() <= MAX_TENANT_P99_RATIO))),
+            ("cells",
+             Value::Arr(tenant_cells.iter()
+                            .map(|c| c.to_json()).collect())),
+        ]);
+        if let Some(dir) = std::path::Path::new(&tenant_out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&tenant_out, tenant_doc.pretty())?;
+        println!("[gate] wrote {tenant_out}");
+    }
     // Entries are labeled by origin: "fig4/EDR ..." / "fig5/..." are
     // spec-vs-baseline speedups (the speculation pipeline), "async/..."
     // are the ADR-005 async/sync engine throughput ratios (the
     // executor), "kernel/..." are the ADR-007 scalar-vs-SIMD speedups
     // (the scoring kernels), "quant/..." is the ADR-010 i8-scan speedup
-    // (the SQ8 codec) — so a red CI job points at the right subsystem.
+    // (the SQ8 codec), "tenant/..." is the ADR-011 cross-tenant p99
+    // isolation ratio (multi-tenant serving) — so a red CI job points at
+    // the right subsystem.
     anyhow::ensure!(
         failures.is_empty(),
         "bench gate ratios below {MIN_RATIO:.1}x on: {}",

@@ -14,7 +14,8 @@ pub use runner::{build_spec_options, ingest_synthetic, query_mode,
                  run_engine_cell_live, run_knn_engine_cell,
                  run_knn_engine_cell_mixed, run_qa_cell,
                  serve_knn_throughput, serve_knn_throughput_mixed,
-                 serve_live_throughput, serve_throughput,
-                 serve_throughput_kb, LiveCellOutcome, LiveServeReport,
-                 QaMethod, ServeSummary};
-pub use workload::TestBed;
+                 serve_live_throughput, serve_tenant_trace,
+                 serve_throughput, serve_throughput_kb, LiveCellOutcome,
+                 LiveServeReport, QaMethod, ServeSummary,
+                 TenantCellReport, TenantClassSummary};
+pub use workload::{generate_trace, TestBed, TraceSpec, TrafficEvent};

@@ -4,15 +4,17 @@
 use crate::baseline::{BaselineOptions, RalmSeq};
 use crate::config::{Config, RetrieverKind};
 use crate::datagen::{embed_doc, Dataset, Encoder, Question};
-use crate::eval::workload::TestBed;
+use crate::eval::workload::{TestBed, TrafficEvent};
 use crate::lm::LanguageModel;
 use crate::metrics::{ReqMetrics, Stopwatch};
 use crate::knnlm::{Datastore, KnnServeOptions, KnnTask};
 use crate::retriever::epoch::{EpochSnapshot, IngestStats, LiveKb};
 use crate::retriever::Retriever;
-use crate::serving::{EngineOptions, EngineStats, ServeEngine};
+use crate::serving::{EngineOptions, EngineStats, Priority, ServeEngine,
+                     SubmitOpts, TenantId};
 use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecPipeline,
                   SpecTask};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -490,6 +492,227 @@ pub fn serve_live_throughput<L: LanguageModel>(
         epochs_published: ingest.epochs_published,
         kb_len_start,
         kb_len_end: live.epochs.snapshot().kb.len(),
+    })
+}
+
+/// Per-(tenant, priority-class) latency slice of one multi-tenant
+/// trace replay ([`serve_tenant_trace`]).
+#[derive(Debug, Clone)]
+pub struct TenantClassSummary {
+    pub tenant: TenantId,
+    pub class: Priority,
+    pub requests: usize,
+    pub rps: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+/// Outcome of one multi-tenant trace replay (DESIGN.md ADR-011): the
+/// aggregate [`ServeSummary`] plus the per-(tenant, class) slices the
+/// isolation gate compares, and the tenant-serving counters behind them.
+#[derive(Debug, Clone)]
+pub struct TenantCellReport {
+    pub summary: ServeSummary,
+    /// Sorted by (tenant, class); only populated combinations appear.
+    pub per_class: Vec<TenantClassSummary>,
+    pub tenants_served: u64,
+    /// Coalesced-call splits forced by the tenant namespace alone
+    /// (same (k, epoch), different tenant).
+    pub tenant_splits: u64,
+    pub preemptions: u64,
+    pub forced_admissions: u64,
+    pub adaptations: u64,
+    /// Total documents ingested across every tenant's writer.
+    pub docs_ingested: u64,
+}
+
+/// Replay a seeded multi-tenant traffic trace (see
+/// [`crate::eval::workload::generate_trace`]) through one coalescing
+/// [`ServeEngine`] (DESIGN.md ADR-011). `kbs[t]` is tenant `t`'s live
+/// knowledge base (tenant ids beyond `kbs.len()` clamp to the last KB);
+/// `questions[i % questions.len()]` feeds the `i`-th arrival.
+///
+/// Events run in trace order: each `Ingest` goes through the owning
+/// tenant's writer (publishing an epoch), and each `Arrive` pins the
+/// tenant's then-current snapshot and submits with
+/// `SubmitOpts { tenant, class, after_done: at }` — so admission
+/// pressure, and therefore every preemption decision, is a pure function
+/// of the trace. With `storm = Some(t)` a background writer floods
+/// tenant `t` with pre-embedded documents for the whole run at
+/// `cfg.ingest.rate` docs/s (the isolation gate's storm-on arm).
+///
+/// Per-request outputs stay bit-identical to a sequential
+/// `SpecPipeline::run` against each request's pinned snapshot
+/// (tests/tenant_equivalence.rs).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_tenant_trace<L: LanguageModel>(
+    lm: &L, encoder: &dyn Encoder, kind: RetrieverKind,
+    kbs: &[Arc<LiveKb>], questions: &[Question], method: QaMethod,
+    trace: &[TrafficEvent], cfg: &Config, concurrency: usize,
+    storm: Option<TenantId>) -> anyhow::Result<TenantCellReport> {
+    anyhow::ensure!(!kbs.is_empty(), "need at least one tenant KB");
+    anyhow::ensure!(!questions.is_empty(), "need at least one question");
+    let QaMethod::Spec { prefetch, os3, async_verify, stride } = method
+    else {
+        anyhow::bail!("engine serving requires speculative methods");
+    };
+    let queries = QueryBuilder {
+        encoder,
+        mode: query_mode(kind),
+        dense_len: cfg.retriever.dense_query_len,
+        sparse_len: cfg.retriever.sparse_query_len,
+    };
+    // Pass 1 — replay the schedule against each tenant's writer and
+    // resolve every arrival's pinned snapshot (the borrow of each pin
+    // must outlive the engine; ingestion must not move under a
+    // constructed task).
+    let mut pins: Vec<(TenantId, Priority, usize, Arc<EpochSnapshot>)> =
+        Vec::new();
+    for (i, ev) in trace.iter().enumerate() {
+        match ev {
+            TrafficEvent::Ingest { tenant, docs, .. } => {
+                let t = (*tenant as usize).min(kbs.len() - 1);
+                ingest_synthetic(&kbs[t], encoder, *docs,
+                                 cfg.corpus.seed
+                                     ^ (0x7E4A_0000 + i as u64),
+                                 cfg.corpus.doc_len)?;
+            }
+            TrafficEvent::Arrive { tenant, class, at } => {
+                let t = (*tenant as usize).min(kbs.len() - 1);
+                pins.push((t as TenantId, *class, *at,
+                           kbs[t].epochs.snapshot()));
+            }
+        }
+    }
+    anyhow::ensure!(!pins.is_empty(), "trace has no arrivals");
+    // Pre-embedded payload for the ingest-storm thread (the encoder is
+    // not `Send`; token synthesis + embedding happen here).
+    let storm_t = storm.map(|t| (t as usize).min(kbs.len() - 1));
+    let storm_payload: Vec<(Vec<u32>, u32, Vec<f32>)> = match storm_t {
+        Some(t) => {
+            let writer = kbs[t].writer.lock().unwrap();
+            writer
+                .corpus()
+                .synth_docs(cfg.corpus.seed ^ 0x5702_0000,
+                            writer.next_id(),
+                            4 * cfg.ingest.batch.max(1),
+                            cfg.corpus.doc_len)
+                .into_iter()
+                .map(|d| {
+                    let e = embed_doc(encoder, &d);
+                    (d.tokens, d.topic, e)
+                })
+                .collect()
+        }
+        None => Vec::new(),
+    };
+
+    let opts = build_spec_options(cfg, prefetch, os3, async_verify,
+                                  stride);
+    let mut engine: ServeEngine<SpecTask<L>> = ServeEngine::new(
+        pins[0].3.kb.clone(),
+        EngineOptions::from_config(cfg, concurrency.max(1)));
+    for (t, _, _, pin) in &pins {
+        engine.register_tenant_epoch(*t, pin.epoch, pin.kb.clone());
+    }
+    for (i, (t, class, at, pin)) in pins.iter().enumerate() {
+        let q = &questions[i % questions.len()];
+        engine.submit_opts(
+            i as u64,
+            SpecTask::new(lm, pin.kb.as_ref(), &pin.corpus, queries,
+                          opts.clone(), &q.tokens)
+                .pin_epoch(pin.epoch)
+                .pin_tenant(*t),
+            SubmitOpts { tenant: *t, class: *class, after_done: *at });
+    }
+
+    // Storm writer: floods one tenant while the engine reads its pinned
+    // snapshots — the isolation gate asserts the *other* tenants'
+    // high-priority p99 survives this.
+    let stop = Arc::new(AtomicBool::new(false));
+    let sw = Stopwatch::start();
+    let bg = match storm_t {
+        Some(t) if !storm_payload.is_empty() => {
+            let live = kbs[t].clone();
+            let stop = stop.clone();
+            let interval = std::time::Duration::from_secs_f64(
+                1.0 / cfg.ingest.rate.max(1e-9));
+            Some(std::thread::spawn(move || {
+                for (tokens, topic, emb) in storm_payload {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    {
+                        let mut w = live.writer.lock().unwrap();
+                        let _ = w.ingest(tokens, topic, emb);
+                    }
+                    std::thread::sleep(interval);
+                }
+                let mut w = live.writer.lock().unwrap();
+                let _ = w.flush();
+            }))
+        }
+        _ => None,
+    };
+
+    let run = engine.run();
+    stop.store(true, Ordering::Relaxed);
+    if let Some(bg) = bg {
+        let _ = bg.join();
+    }
+    let done = run?;
+    ensure_no_failures(&mut engine)?;
+    let wall = sw.elapsed().as_secs_f64().max(1e-9);
+    let stats = engine.stats().clone();
+    drop(engine);
+    let ms: Vec<ReqMetrics> =
+        done.into_iter().map(|(_, m)| m).collect();
+    anyhow::ensure!(ms.len() == pins.len(),
+                    "{} results for {} arrivals", ms.len(), pins.len());
+    let summary = summarize_serve(concurrency, &ms, &stats, wall);
+
+    // Slice latencies by (tenant, class); ids are pin indices (results
+    // come back sorted by id), so ms[i] belongs to pins[i].
+    let mut groups: BTreeMap<(TenantId, Priority), Vec<f64>> =
+        BTreeMap::new();
+    for (i, m) in ms.iter().enumerate() {
+        groups
+            .entry((pins[i].0, pins[i].1))
+            .or_default()
+            .push(m.total.as_secs_f64());
+    }
+    let per_class = groups
+        .into_iter()
+        .map(|((tenant, class), mut lat)| {
+            lat.sort_by(|a, b| {
+                a.partial_cmp(b).expect("finite latencies")
+            });
+            let pct = |p: f64| -> f64 {
+                lat[(((lat.len() - 1) as f64) * p).round() as usize]
+            };
+            TenantClassSummary {
+                tenant,
+                class,
+                requests: lat.len(),
+                rps: lat.len() as f64 / wall,
+                p50_s: pct(0.50),
+                p99_s: pct(0.99),
+            }
+        })
+        .collect();
+    let docs_ingested: u64 = kbs
+        .iter()
+        .map(|kb| kb.writer.lock().unwrap().stats().docs_ingested)
+        .sum();
+    Ok(TenantCellReport {
+        summary,
+        per_class,
+        tenants_served: stats.tenants_served,
+        tenant_splits: stats.tenant_splits,
+        preemptions: stats.preemptions,
+        forced_admissions: stats.forced_admissions,
+        adaptations: stats.adaptations,
+        docs_ingested,
     })
 }
 

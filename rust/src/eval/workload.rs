@@ -1,6 +1,7 @@
 //! Shared experiment fixtures: corpus, embeddings, and the three
 //! retrievers, built once and shared across every cell of an experiment
-//! grid.
+//! grid — plus the seeded multi-tenant traffic-trace generator
+//! ([`generate_trace`], DESIGN.md ADR-011).
 //!
 //! Embeddings come from whichever [`Encoder`] the caller provides — the
 //! PJRT `encode_batch` artifact in real runs, the HashEncoder in
@@ -17,6 +18,8 @@ use crate::retriever::dense::{DenseExact, EmbeddingMatrix};
 use crate::retriever::hnsw::Hnsw;
 use crate::retriever::sparse::Bm25;
 use crate::retriever::{Retriever, ShardedRetriever};
+use crate::serving::tenant::{Priority, TenantId};
+use crate::util::Rng;
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -140,5 +143,169 @@ impl TestBed {
 
     pub fn config(&self) -> &Config {
         &self.cfg
+    }
+}
+
+/// Parameters of a seeded multi-tenant traffic trace (ADR-011): how many
+/// tenants and requests, the priority mix, and how many tenant-targeted
+/// ingest bursts to interleave. Same spec → byte-identical trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSpec {
+    pub seed: u64,
+    pub tenants: usize,
+    pub requests: usize,
+    /// Priority-class weights `[high, normal, low]`; all zero = every
+    /// request Normal.
+    pub mix: [u64; Priority::COUNT],
+    /// Ingest bursts to scatter across the trace (each targets one
+    /// random tenant).
+    pub ingest_bursts: usize,
+    /// Documents per ingest burst.
+    pub burst_docs: usize,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self {
+            seed: 0x7E4A,
+            tenants: 2,
+            requests: 16,
+            mix: [1, 2, 1],
+            ingest_bursts: 2,
+            burst_docs: 4,
+        }
+    }
+}
+
+/// One event of a seeded multi-tenant traffic trace (ADR-011). `at` is
+/// **logical** time — the number of requests that must have *resolved*
+/// before the event becomes due (fed to `SubmitOpts::after_done` for
+/// arrivals, and used as the interleave point for ingest bursts). No
+/// wall-clock sampling anywhere: replaying a trace reproduces the exact
+/// admission pressure, and therefore the exact preemption decisions,
+/// run after run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TrafficEvent {
+    /// One request arrives for `tenant` at priority `class`.
+    Arrive { tenant: TenantId, class: Priority, at: usize },
+    /// `tenant` ingests `docs` documents (an ingest-storm slice).
+    Ingest { tenant: TenantId, docs: usize, at: usize },
+}
+
+impl TrafficEvent {
+    /// The event's logical due time.
+    pub fn at(&self) -> usize {
+        match self {
+            TrafficEvent::Arrive { at, .. }
+            | TrafficEvent::Ingest { at, .. } => *at,
+        }
+    }
+}
+
+/// Generate the trace for `spec`: `spec.requests` arrivals (tenant
+/// uniform, class weighted by `spec.mix`, each gated at most 4 logical
+/// steps before its own index — so replaying arrivals in order can
+/// always admit something) plus `spec.ingest_bursts` ingest events,
+/// sorted by logical time with ties kept in emission order. Pure
+/// function of `spec` (deterministic [`Rng`], no clock), pinned by
+/// `same_seed_replays_identical_event_sequence`.
+pub fn generate_trace(spec: &TraceSpec) -> Vec<TrafficEvent> {
+    let mut rng = Rng::new(spec.seed ^ 0x7247_ACE5);
+    let tenants = spec.tenants.max(1);
+    let total: u64 = spec.mix.iter().sum();
+    let mut events = Vec::with_capacity(spec.requests + spec.ingest_bursts);
+    for j in 0..spec.requests {
+        let tenant = rng.gen_range(tenants) as TenantId;
+        let class = if total == 0 {
+            Priority::Normal
+        } else {
+            let mut r = rng.gen_range(total as usize) as u64;
+            let mut picked = Priority::Low;
+            for (i, &w) in spec.mix.iter().enumerate() {
+                if r < w {
+                    picked = Priority::from_index(i);
+                    break;
+                }
+                r -= w;
+            }
+            picked
+        };
+        // Progress invariant: at <= j, so the j-th arrival (in sorted
+        // order) is gated on at most j earlier resolutions.
+        let lag = rng.gen_range(5).min(j);
+        events.push(TrafficEvent::Arrive { tenant, class, at: j - lag });
+    }
+    for _ in 0..spec.ingest_bursts {
+        let tenant = rng.gen_range(tenants) as TenantId;
+        let at = rng.gen_range(spec.requests.max(1));
+        events.push(TrafficEvent::Ingest {
+            tenant,
+            docs: spec.burst_docs,
+            at,
+        });
+    }
+    // Stable sort: same-time events keep their emission order.
+    events.sort_by_key(|e| e.at());
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_replays_identical_event_sequence() {
+        let spec = TraceSpec {
+            seed: 0xBEEF,
+            tenants: 3,
+            requests: 40,
+            mix: [4, 2, 1],
+            ingest_bursts: 5,
+            burst_docs: 6,
+        };
+        let a = generate_trace(&spec);
+        let b = generate_trace(&spec);
+        assert_eq!(a, b, "same seed must replay the identical trace");
+        let c = generate_trace(&TraceSpec { seed: 0xBEF0, ..spec });
+        assert_ne!(a, c, "a different seed must shuffle the trace");
+    }
+
+    #[test]
+    fn trace_shape_and_arrival_gates_are_sound() {
+        let spec = TraceSpec {
+            seed: 1,
+            tenants: 2,
+            requests: 32,
+            mix: [1, 1, 1],
+            ingest_bursts: 3,
+            burst_docs: 2,
+        };
+        let t = generate_trace(&spec);
+        assert_eq!(t.len(), 32 + 3);
+        let arrivals: Vec<(TenantId, Priority, usize)> = t
+            .iter()
+            .filter_map(|e| match e {
+                TrafficEvent::Arrive { tenant, class, at } => {
+                    Some((*tenant, *class, *at))
+                }
+                TrafficEvent::Ingest { .. } => None,
+            })
+            .collect();
+        assert_eq!(arrivals.len(), 32);
+        // Sorted by logical time.
+        let ats: Vec<usize> = t.iter().map(|e| e.at()).collect();
+        assert!(ats.windows(2).all(|w| w[0] <= w[1]), "unsorted trace");
+        // Progress invariant: the i-th arrival's gate never exceeds i,
+        // so an in-order replay can always admit something (the i-th
+        // arrival needs at most i earlier resolutions).
+        for (i, (tenant, _, at)) in arrivals.iter().enumerate() {
+            assert!(*at <= i, "arrival {i} gated at {at}");
+            assert!((*tenant as usize) < 2, "tenant out of range");
+        }
+        // A [1, 1, 1] mix over 32 requests hits every class.
+        for p in Priority::all() {
+            assert!(arrivals.iter().any(|(_, c, _)| *c == p),
+                    "class {p:?} missing from the trace");
+        }
     }
 }

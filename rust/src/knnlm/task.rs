@@ -27,7 +27,7 @@ use crate::knnlm::serve::KnnServeOptions;
 use crate::lm::{LanguageModel, EOS};
 use crate::metrics::{timed, ReqMetrics, Stopwatch};
 use crate::retriever::SpecQuery;
-use crate::serving::{ServeTask, TaskStep};
+use crate::serving::{ServeTask, TaskStep, TenantId};
 use crate::spec::Scheduler;
 use crate::util::Scored;
 use std::time::Duration;
@@ -82,6 +82,9 @@ pub struct KnnTask<'a, L: LanguageModel> {
     /// Datastore-index epoch this task is pinned to (0 for a frozen
     /// datastore) — same grouping contract as `SpecTask` (ADR-006).
     epoch: u64,
+    /// Tenant namespace (0 = default) — same grouping contract as
+    /// `SpecTask` (ADR-011).
+    tenant: TenantId,
 }
 
 impl<'a, L: LanguageModel> KnnTask<'a, L> {
@@ -104,6 +107,7 @@ impl<'a, L: LanguageModel> KnnTask<'a, L> {
             pending: Vec::new(),
             overlap: Vec::new(),
             epoch: 0,
+            tenant: 0,
         }
     }
 
@@ -114,6 +118,14 @@ impl<'a, L: LanguageModel> KnnTask<'a, L> {
     pub fn pin_epoch(mut self, epoch: u64) -> Self {
         self.epoch = epoch;
         self.m.epoch = epoch;
+        self
+    }
+
+    /// Pin this task to a tenant namespace (DESIGN.md ADR-011) — same
+    /// contract as `SpecTask::pin_tenant`; tenant 0 (the default)
+    /// preserves single-tenant behaviour exactly.
+    pub fn pin_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = tenant;
         self
     }
 
@@ -381,6 +393,10 @@ impl<'a, L: LanguageModel> ServeTask for KnnTask<'a, L> {
 
     fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    fn tenant(&self) -> TenantId {
+        self.tenant
     }
 
     fn overlap_step(&mut self) -> anyhow::Result<bool> {

@@ -385,6 +385,11 @@ pub struct KbWriter {
     corpus: Corpus,
     shards: usize,
     batch: usize,
+    /// Ingest quota (DESIGN.md ADR-011): max documents this writer will
+    /// ever accept; 0 = unlimited. In multi-tenant serving each tenant
+    /// owns its own writer, so the quota bounds how far one tenant's
+    /// ingest storm can grow its — and only its — knowledge base.
+    quota_docs: usize,
     pending: Vec<(Document, Vec<f32>)>,
     stats: IngestStats,
 }
@@ -400,9 +405,16 @@ impl KbWriter {
             corpus,
             shards: shards.max(1),
             batch: batch.max(1),
+            quota_docs: 0,
             pending: Vec::new(),
             stats: IngestStats::default(),
         }
+    }
+
+    /// Set the lifetime ingest quota (0 = unlimited, the default); see
+    /// [`ingest`](Self::ingest).
+    pub fn set_quota(&mut self, quota_docs: usize) {
+        self.quota_docs = quota_docs;
     }
 
     /// The id the next ingested document will receive.
@@ -418,6 +430,10 @@ impl KbWriter {
         // Validate here (an error Response for the client) rather than
         // letting the index-side assertions panic under the writer
         // mutex, which would poison it for every later ingest.
+        anyhow::ensure!(
+            self.quota_docs == 0
+                || (self.stats.docs_ingested as usize) < self.quota_docs,
+            "tenant ingest quota exhausted ({} docs)", self.quota_docs);
         anyhow::ensure!(
             tokens.iter().all(|&t| (t as usize) < self.corpus.vocab),
             "ingested document uses token ids outside the corpus vocab \
@@ -544,9 +560,10 @@ impl LiveKb {
             kb: backend.snapshot(shards),
             corpus: Arc::new(corpus.clone()),
         }));
-        let writer = Mutex::new(KbWriter::new(epochs.clone(), backend,
-                                              corpus, shards,
-                                              cfg.ingest.batch));
+        let mut writer = KbWriter::new(epochs.clone(), backend, corpus,
+                                       shards, cfg.ingest.batch);
+        writer.set_quota(cfg.tenant.quota_docs);
+        let writer = Mutex::new(writer);
         Arc::new(LiveKb { epochs, writer })
     }
 
@@ -573,9 +590,10 @@ impl LiveKb {
             kb: backend.snapshot(shards),
             corpus: Arc::new(corpus.clone()),
         }));
-        let writer = Mutex::new(KbWriter::new(epochs.clone(), backend,
-                                              corpus, shards,
-                                              cfg.ingest.batch));
+        let mut writer = KbWriter::new(epochs.clone(), backend, corpus,
+                                       shards, cfg.ingest.batch);
+        writer.set_quota(cfg.tenant.quota_docs);
+        let writer = Mutex::new(writer);
         Ok(Arc::new(LiveKb { epochs, writer }))
     }
 }
@@ -790,6 +808,34 @@ mod tests {
                 "writer must recover after a rejected batch");
         assert_eq!(live.epochs.snapshot().kb.len(), 64);
         assert_eq!(live.epochs.snapshot().corpus.len(), 64);
+    }
+
+    #[test]
+    fn ingest_quota_rejects_after_limit() {
+        // ADR-011: a tenant's writer stops accepting documents once its
+        // lifetime quota is spent — the error is a clean per-request
+        // rejection (no panic, no poisoned mutex) and already-published
+        // epochs keep serving.
+        let (mut cfg, corpus, data, enc) = fixture(50);
+        cfg.tenant.quota_docs = 3;
+        let live = LiveKb::build(&cfg, RetrieverKind::Edr, corpus, data,
+                                 DIM);
+        let mut w = live.writer.lock().unwrap();
+        let docs = w.corpus().synth_docs(0xAAA, w.next_id(), 4, (16, 48));
+        for (i, d) in docs.into_iter().enumerate() {
+            let e = embed_doc(&enc, &d);
+            let r = w.ingest(d.tokens, d.topic, e);
+            if i < 3 {
+                r.unwrap();
+            } else {
+                let err = r.expect_err("quota must reject the 4th doc");
+                assert!(err.to_string().contains("quota"),
+                        "unexpected error: {err:#}");
+            }
+        }
+        w.flush().unwrap();
+        assert_eq!(w.stats().docs_ingested, 3);
+        assert_eq!(w.epochs().snapshot().kb.len(), 53);
     }
 
     #[test]

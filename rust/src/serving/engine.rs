@@ -34,12 +34,32 @@
 //!
 //! **Live knowledge bases (ADR-006)**: every task reports the epoch it is
 //! pinned to ([`ServeTask::epoch`]); the flush groups pending batches by
-//! *(top-k, epoch)* and issues each group against that epoch's registered
-//! snapshot ([`ServeEngine::register_epoch`]). Queries of differently
+//! *(tenant, top-k, epoch)* and issues each group against that tenant and
+//! epoch's registered snapshot ([`ServeEngine::register_epoch`] /
+//! [`ServeEngine::register_tenant_epoch`]). Queries of differently
 //! pinned tasks never share a KB call — epochs change global scoring
 //! statistics, so sharing would silently hand a member rows scored under
 //! the wrong snapshot. A frozen KB is the degenerate case: all tasks at
 //! epoch 0, one group per k, identical to the pre-ADR-006 engine.
+//!
+//! **Multi-tenant serving (ADR-011)**: requests may carry a
+//! [`TenantId`] and a [`Priority`] class
+//! ([`ServeEngine::submit_opts`]). Tenants are isolation domains — each
+//! owns its own knowledge base (epoch stream + ingest quota), and the
+//! (tenant, k, epoch) flush grouping means one tenant's ingest storm
+//! (a burst of epoch publishes) never splits or invalidates another
+//! tenant's coalesced batches. Priority classes get weighted
+//! round-robin admission, and under overload the engine **preempts
+//! speculation**: the lowest-priority in-flight task is cancelled at a
+//! speculation boundary (never while a verification of it is pending or
+//! in flight) and requeued. Abandoned speculation is re-derivable — a
+//! task is a resumable state machine whose output is a pure function of
+//! its own query/result sequence against its pinned epoch — so
+//! preempted requests stay bit-identical to the sequential reference
+//! (tests/tenant_equivalence.rs). An optional SLO controller
+//! ([`crate::serving::slo::AdaptiveFlush`]) retunes
+//! `max_batch`/`flush_us`/`kb_parallel` against a p99 target from the
+//! engine's own completion latencies.
 //!
 //! **Why per-request outputs survive coalescing and out-of-order
 //! completion bit-for-bit**: every retriever scores a query independently
@@ -64,7 +84,9 @@ use crate::retriever::{Retriever, SpecQuery};
 use crate::serving::executor::{CallOutcome, PreparedCall,
                                RetrievalExecutor};
 use crate::serving::router::{Method, Request, ServeBackend};
+use crate::serving::slo::{AdaptiveFlush, FlushPlan, SloOptions};
 use crate::serving::task::{ServeTask, TaskStep};
+use crate::serving::tenant::{Priority, SubmitOpts, TenantId};
 use crate::spec::{QueryBuilder, QueryMode, SpecOptions, SpecTask};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
@@ -84,6 +106,22 @@ pub struct EngineOptions {
     /// synchronous inline flush on the engine thread. Per-request output
     /// is bit-identical across every setting.
     pub kb_parallel: usize,
+    /// Preempt the lowest-priority in-flight speculation (at a
+    /// speculation boundary — never while its verification is pending or
+    /// in flight) when a higher-priority request is waiting and
+    /// `max_inflight` is saturated (ADR-011). Per-request output is
+    /// bit-identical either way; only the schedule changes.
+    pub preempt: bool,
+    /// Weighted round-robin admission credits per priority class
+    /// (`[high, normal, low]`, ADR-011); each refill grants class *c*
+    /// `class_weights[c]` admissions before lower-weight classes recycle.
+    pub class_weights: [u64; Priority::COUNT],
+    /// SLO adaptation (ADR-011): `Some` with a nonzero
+    /// `p99_target_us` lets the engine retune
+    /// `max_batch`/`flush_us`/`kb_parallel` against the target from its
+    /// own completion latencies; `None` (or target 0) keeps the fixed
+    /// plan above.
+    pub slo: Option<SloOptions>,
 }
 
 impl Default for EngineOptions {
@@ -94,6 +132,9 @@ impl Default for EngineOptions {
             flush_us: c.flush_us,
             max_inflight: 0,
             kb_parallel: c.kb_parallel,
+            preempt: c.preempt,
+            class_weights: crate::config::TenantConfig::default().weights(),
+            slo: None,
         }
     }
 }
@@ -105,6 +146,15 @@ impl EngineOptions {
             flush_us: cfg.engine.flush_us,
             max_inflight,
             kb_parallel: cfg.engine.kb_parallel,
+            preempt: cfg.engine.preempt,
+            class_weights: cfg.tenant.weights(),
+            slo: Some(SloOptions {
+                p99_target_us: cfg.slo.p99_target_us,
+                window: cfg.slo.window,
+                min_batch: cfg.slo.min_batch,
+                min_flush_us: cfg.slo.min_flush_us,
+                max_kb_parallel: cfg.slo.max_kb_parallel,
+            }),
         }
     }
 }
@@ -151,6 +201,22 @@ pub struct EngineStats {
     /// Times the engine parked on the completion queue (deadline-aware
     /// wait instead of a busy-spin).
     pub parks: u64,
+    /// Distinct tenants across submitted tasks (1 for every pre-ADR-011
+    /// caller — everything under tenant 0).
+    pub tenants_served: u64,
+    /// Extra coalesced calls forced by tenant boundaries: same-(k, epoch)
+    /// queries that could have shared one call had they not belonged to
+    /// different tenants (ADR-011 — the price of tenant isolation).
+    pub tenant_splits: u64,
+    /// In-flight speculations cancelled at a speculation boundary and
+    /// requeued to make room for a higher-priority request (ADR-011).
+    pub preemptions: u64,
+    /// Deadlock-backstop admissions: a deferred-arrival task admitted
+    /// before its `after_done` gate because nothing else could progress.
+    pub forced_admissions: u64,
+    /// Times the adaptive SLO controller changed the effective flush
+    /// plan.
+    pub adaptations: u64,
 }
 
 impl EngineStats {
@@ -191,8 +257,27 @@ struct Slot<T> {
     id: u64,
     task: Option<T>,
     /// True while the task's `NeedsVerify` sits in the coalescing buffer
-    /// or rides an in-flight KB call.
+    /// or rides an in-flight KB call. An awaiting slot is never a
+    /// preemption victim — outstanding `pending`/`dispatched` entries
+    /// reference it by index.
     awaiting: bool,
+    tenant: TenantId,
+    class: Priority,
+    /// Submission sequence number; preserved across preemption so a
+    /// requeued task keeps its place among same-class peers.
+    seq: u64,
+    after_done: usize,
+}
+
+/// One admission-queue entry (ADR-011: per-class queues).
+struct Waiting<T> {
+    seq: u64,
+    id: u64,
+    task: T,
+    tenant: TenantId,
+    class: Priority,
+    /// Deferred arrival: admissible once this many requests resolved.
+    after_done: usize,
 }
 
 /// One parked verification batch awaiting flush.
@@ -200,9 +285,12 @@ struct PendingVerify {
     slot: usize,
     queries: Vec<SpecQuery>,
     k: usize,
-    /// The owning task's pinned epoch: flush groups by (k, epoch) so a
-    /// coalesced call never mixes epochs (ADR-006).
+    /// The owning task's pinned epoch: flush groups by (tenant, k, epoch)
+    /// so a coalesced call never mixes epochs (ADR-006) or tenants
+    /// (ADR-011).
     epoch: u64,
+    /// The owning slot's tenant namespace.
+    tenant: TenantId,
     enqueued: Stopwatch,
 }
 
@@ -218,15 +306,28 @@ pub struct ServeEngine<T: ServeTask> {
     kb: Arc<dyn Retriever>,
     opts: EngineOptions,
     /// Pinned-epoch snapshots registered by the caller
-    /// ([`register_epoch`](Self::register_epoch)): a task reporting
-    /// `epoch() == e` has its coalesced calls issued against
-    /// `epoch_kbs[e]` (ADR-006).
-    epoch_kbs: BTreeMap<u64, Arc<dyn Retriever>>,
+    /// ([`register_tenant_epoch`](Self::register_tenant_epoch)): a task
+    /// of tenant `t` reporting `epoch() == e` has its coalesced calls
+    /// issued against `epoch_kbs[(t, e)]` (ADR-006 / ADR-011).
+    epoch_kbs: BTreeMap<(TenantId, u64), Arc<dyn Retriever>>,
     /// Distinct epochs across submitted tasks (stats).
     seen_epochs: BTreeSet<u64>,
-    /// Admission queue; tasks are constructed at submission so each
-    /// request's latency clock covers its admission-queue wait too.
-    waiting: VecDeque<(u64, T)>,
+    /// Distinct tenants across submitted tasks (stats).
+    seen_tenants: BTreeSet<TenantId>,
+    /// Per-class admission queues (index = [`Priority::index`]), each
+    /// ordered by (after_done, seq); tasks are constructed at submission
+    /// so each request's latency clock covers its admission-queue wait
+    /// too.
+    waiting: [VecDeque<Waiting<T>>; Priority::COUNT],
+    /// Weighted round-robin admission credits, refilled from
+    /// `opts.class_weights` when every class with eligible work is spent.
+    credits: [u64; Priority::COUNT],
+    /// Monotone submission counter (ties broken FIFO within a class).
+    next_seq: u64,
+    /// Requests resolved so far (finished + failed) — the deferred
+    /// arrival clock for `SubmitOpts::after_done`. Monotone across
+    /// `take_finished`/`take_failed` drains.
+    resolved: usize,
     slots: Vec<Slot<T>>,
     pending: Vec<PendingVerify>,
     /// Asynchronous call executor (`kb_parallel >= 1`); `None` keeps the
@@ -234,10 +335,15 @@ pub struct ServeEngine<T: ServeTask> {
     exec: Option<RetrievalExecutor>,
     /// In-flight (or inline-running) groups keyed by correlation id.
     dispatched: BTreeMap<u64, Vec<GroupMember>>,
-    /// Reusable (k, epoch) group list for [`flush`](Self::flush) — kept as
-    /// a field so the sort/dedup scratch survives across flushes.
-    flush_groups: Vec<(usize, u64)>,
+    /// Reusable (tenant, k, epoch) group list for [`flush`](Self::flush) —
+    /// kept as a field so the sort/dedup scratch survives across flushes.
+    flush_groups: Vec<(TenantId, usize, u64)>,
     next_group: u64,
+    /// SLO controller (ADR-011); `None` keeps the fixed flush plan.
+    adaptive: Option<AdaptiveFlush>,
+    /// The effective flush plan — `opts`-derived base until the adaptive
+    /// controller (if any) retunes it.
+    eff: FlushPlan,
     stats: EngineStats,
     finished: Vec<(u64, ReqMetrics)>,
     failed: Vec<(u64, String)>,
@@ -250,18 +356,34 @@ impl<T: ServeTask> ServeEngine<T> {
         } else {
             None
         };
+        let eff = FlushPlan {
+            max_batch: opts.max_batch.max(1),
+            flush_us: opts.flush_us,
+            kb_parallel: opts.kb_parallel,
+        };
+        let adaptive = opts
+            .slo
+            .filter(|s| s.p99_target_us > 0)
+            .map(|s| AdaptiveFlush::new(s, eff));
+        let credits = opts.class_weights;
         Self {
             kb,
             opts,
             epoch_kbs: BTreeMap::new(),
             seen_epochs: BTreeSet::new(),
-            waiting: VecDeque::new(),
+            seen_tenants: BTreeSet::new(),
+            waiting: std::array::from_fn(|_| VecDeque::new()),
+            credits,
+            next_seq: 0,
+            resolved: 0,
             slots: Vec::new(),
             pending: Vec::new(),
             exec,
             dispatched: BTreeMap::new(),
             flush_groups: Vec::new(),
             next_group: 0,
+            adaptive,
+            eff,
             stats: EngineStats::default(),
             finished: Vec::new(),
             failed: Vec::new(),
@@ -269,23 +391,63 @@ impl<T: ServeTask> ServeEngine<T> {
     }
 
     /// Register the snapshot a pinned epoch's calls must run against
-    /// (live knowledge bases, ADR-006). Callers register each snapshot
-    /// before (or at) submitting tasks pinned to it; unregistered epochs
-    /// fall back to the engine's default `kb`, which keeps frozen-KB
-    /// callers (every task at epoch 0) working unchanged.
+    /// (live knowledge bases, ADR-006) in the default tenant-0 namespace.
+    /// Callers register each snapshot before (or at) submitting tasks
+    /// pinned to it; unregistered epochs fall back to the engine's
+    /// default `kb`, which keeps frozen-KB callers (every task at epoch
+    /// 0) working unchanged.
     pub fn register_epoch(&mut self, epoch: u64, kb: Arc<dyn Retriever>) {
-        self.epoch_kbs.insert(epoch, kb);
+        self.register_tenant_epoch(0, epoch, kb);
+    }
+
+    /// Register a tenant's pinned-epoch snapshot (ADR-011): coalesced
+    /// calls of tenant `tenant`'s tasks pinned to `epoch` run against
+    /// this retriever, and only same-tenant queries ever share them.
+    pub fn register_tenant_epoch(&mut self, tenant: TenantId, epoch: u64,
+                                 kb: Arc<dyn Retriever>) {
+        self.epoch_kbs.insert((tenant, epoch), kb);
     }
 
     /// Enqueue one request's task (construct it at submission so the
     /// request's latency clock covers its admission-queue wait too —
     /// reported p50/p99 then include what a client would observe, not
-    /// just in-flight service time). Admission happens inside
-    /// [`run`](Self::run), honouring `max_inflight`.
+    /// just in-flight service time) under the task's own tenant at the
+    /// default class. Admission happens inside [`run`](Self::run),
+    /// honouring `max_inflight`.
     pub fn submit(&mut self, id: u64, task: T) {
+        let opts = SubmitOpts { tenant: task.tenant(),
+                                ..SubmitOpts::default() };
+        self.submit_opts(id, task, opts);
+    }
+
+    /// Enqueue one request's task with explicit tenant / priority class /
+    /// deferred-arrival options (ADR-011).
+    pub fn submit_opts(&mut self, id: u64, task: T, sub: SubmitOpts) {
         self.seen_epochs.insert(task.epoch());
         self.stats.epochs_served = self.seen_epochs.len() as u64;
-        self.waiting.push_back((id, task));
+        self.seen_tenants.insert(sub.tenant);
+        self.stats.tenants_served = self.seen_tenants.len() as u64;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.enqueue(Waiting {
+            seq,
+            id,
+            task,
+            tenant: sub.tenant,
+            class: sub.class,
+            after_done: sub.after_done,
+        });
+    }
+
+    /// Insert into the class queue ordered by (after_done, seq): heads
+    /// are always the entry closest to (or past) its arrival gate, and
+    /// preempted tasks — which keep their original seq — re-enter ahead
+    /// of later arrivals.
+    fn enqueue(&mut self, w: Waiting<T>) {
+        let q = &mut self.waiting[w.class.index()];
+        let key = (w.after_done, w.seq);
+        let pos = q.partition_point(|x| (x.after_done, x.seq) <= key);
+        q.insert(pos, w);
     }
 
     pub fn stats(&self) -> &EngineStats {
@@ -314,6 +476,59 @@ impl<T: ServeTask> ServeEngine<T> {
         self.slots.iter().filter(|s| s.task.is_some()).count()
     }
 
+    /// The effective flush plan currently driving the coalescing policy
+    /// (the configured base, unless the SLO controller retuned it).
+    pub fn effective_plan(&self) -> FlushPlan {
+        self.eff
+    }
+
+    fn waiting_empty(&self) -> bool {
+        self.waiting.iter().all(|q| q.is_empty())
+    }
+
+    /// Pick the next class to admit from under weighted round-robin:
+    /// spend one credit of the highest-priority class that still has
+    /// both credits and an *eligible* head (its `after_done` gate
+    /// passed); when every such class is spent, refill all credits from
+    /// the configured weights and retry once. `None` = nothing eligible.
+    fn pick_class(&mut self) -> Option<usize> {
+        for _pass in 0..2 {
+            for c in 0..Priority::COUNT {
+                if self.credits[c] == 0 {
+                    continue;
+                }
+                let eligible = self.waiting[c]
+                    .front()
+                    .map_or(false, |w| w.after_done <= self.resolved);
+                if eligible {
+                    self.credits[c] -= 1;
+                    return Some(c);
+                }
+            }
+            self.credits = self.opts.class_weights;
+        }
+        None
+    }
+
+    /// Place a task into a slot. Recycle a free slot (its pending
+    /// entries, if any existed, were consumed before the slot was freed)
+    /// to keep the slot indices stored in `pending`/`dispatched` stable.
+    fn place(&mut self, w: Waiting<T>) {
+        let slot = Slot {
+            id: w.id,
+            task: Some(w.task),
+            awaiting: false,
+            tenant: w.tenant,
+            class: w.class,
+            seq: w.seq,
+            after_done: w.after_done,
+        };
+        match self.slots.iter().position(|s| s.task.is_none()) {
+            Some(i) => self.slots[i] = slot,
+            None => self.slots.push(slot),
+        }
+    }
+
     fn admit(&mut self) {
         let cap = if self.opts.max_inflight == 0 {
             usize::MAX
@@ -321,23 +536,86 @@ impl<T: ServeTask> ServeEngine<T> {
             self.opts.max_inflight
         };
         while self.inflight() < cap {
-            let Some((id, task)) = self.waiting.pop_front() else {
-                break;
+            let Some(c) = self.pick_class() else { break };
+            let Some(w) = self.waiting[c].pop_front() else { break };
+            self.place(w);
+        }
+        if self.opts.preempt && cap != usize::MAX {
+            self.preempt(cap);
+        }
+    }
+
+    /// Speculation preemption (ADR-011): while a higher-priority request
+    /// waits and admission is saturated, cancel the lowest-priority
+    /// in-flight task *at a speculation boundary* (`awaiting == false`:
+    /// no coalescing-buffer entry or in-flight KB call references its
+    /// slot) and requeue it with its original sequence number. Abandoned
+    /// speculation is re-derivable — a task's output is a pure function
+    /// of its own query/result sequence against its pinned epoch — so
+    /// the preempted request's eventual output is bit-identical; only
+    /// its latency (and the engine schedule) changes. Each iteration
+    /// swaps one strictly-lower-priority task out, so the loop
+    /// terminates.
+    fn preempt(&mut self, cap: usize) {
+        loop {
+            let Some(wc) = (0..Priority::COUNT).find(|&c| {
+                self.waiting[c]
+                    .front()
+                    .map_or(false, |w| w.after_done <= self.resolved)
+            }) else {
+                return;
             };
-            // Recycle a free slot (its pending entries, if any existed,
-            // were consumed before the slot was freed) to keep the slot
-            // indices stored in `pending`/`dispatched` stable.
-            match self.slots.iter().position(|s| s.task.is_none()) {
-                Some(i) => {
-                    self.slots[i] =
-                        Slot { id, task: Some(task), awaiting: false };
-                }
-                None => {
-                    self.slots.push(
-                        Slot { id, task: Some(task), awaiting: false });
+            if self.inflight() < cap {
+                return; // a free slot exists; plain admission covers it
+            }
+            let victim = self
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| {
+                    s.task.is_some() && !s.awaiting
+                        && s.class.index() > wc
+                })
+                .max_by_key(|(_, s)| (s.class.index(), s.seq))
+                .map(|(i, _)| i);
+            let Some(vi) = victim else { return };
+            let s = &mut self.slots[vi];
+            let Some(task) = s.task.take() else { return };
+            let requeued = Waiting {
+                seq: s.seq,
+                id: s.id,
+                task,
+                tenant: s.tenant,
+                class: s.class,
+                after_done: s.after_done,
+            };
+            self.stats.preemptions += 1;
+            self.enqueue(requeued);
+            let Some(w) = self.waiting[wc].pop_front() else { return };
+            self.place(w);
+        }
+    }
+
+    /// Deadlock backstop for deferred arrivals: when nothing is in
+    /// flight, nothing is pending, and every waiting head is still gated
+    /// on `after_done`, admit the entry closest to its gate anyway
+    /// (counted in [`EngineStats::forced_admissions`]). Without this, a
+    /// trace whose gates exceed the number of submitted requests would
+    /// stall the engine forever.
+    fn force_admit_one(&mut self) -> bool {
+        let mut best: Option<(usize, (usize, usize, u64))> = None;
+        for c in 0..Priority::COUNT {
+            if let Some(w) = self.waiting[c].front() {
+                let key = (w.after_done, c, w.seq);
+                if best.map_or(true, |(_, bk)| key < bk) {
+                    best = Some((c, key));
                 }
             }
         }
+        let Some((c, _)) = best else { return false };
+        let Some(w) = self.waiting[c].pop_front() else { return false };
+        self.place(w);
+        true
     }
 
     /// Drive every submitted request to completion, coalescing
@@ -355,7 +633,7 @@ impl<T: ServeTask> ServeEngine<T> {
             // Route completions that have already landed so their tasks
             // advance this very iteration.
             let mut progressed = self.route_ready()?;
-            if self.waiting.is_empty()
+            if self.waiting_empty()
                 && self.slots.iter().all(|s| s.task.is_none())
             {
                 break;
@@ -382,8 +660,24 @@ impl<T: ServeTask> ServeEngine<T> {
                         let task = self.slots[i].task.take()
                             // detlint: allow(hot-panic, reason = "slot's task was just stepped to Done above, so take() is Some")
                             .expect("task was just advanced");
-                        self.finished
-                            .push((self.slots[i].id, task.into_metrics()));
+                        let m = task.into_metrics();
+                        self.resolved += 1;
+                        // Feed the SLO controller this completion's
+                        // latency and adopt its (pure, replay-stable)
+                        // plan — schedule-not-semantics, so per-request
+                        // outputs are unaffected (ADR-011).
+                        if let Some(a) = self.adaptive.as_mut() {
+                            a.observe(m.total);
+                            let plan = a.plan();
+                            if plan != self.eff {
+                                self.eff = plan;
+                                self.stats.adaptations += 1;
+                                if let Some(e) = self.exec.as_mut() {
+                                    e.set_cap(plan.kb_parallel.max(1));
+                                }
+                            }
+                        }
+                        self.finished.push((self.slots[i].id, m));
                     }
                     TaskStep::NeedsVerify { queries, k } => {
                         let epoch = self.slots[i]
@@ -398,6 +692,7 @@ impl<T: ServeTask> ServeEngine<T> {
                             queries,
                             k,
                             epoch,
+                            tenant: self.slots[i].tenant,
                             enqueued: Stopwatch::start(),
                         });
                     }
@@ -444,12 +739,12 @@ impl<T: ServeTask> ServeEngine<T> {
                     Some(exec) => runnable == 0 && exec.has_free_slot(),
                     None => runnable == 0 && !overlapped,
                 };
-                if pending_q >= self.opts.max_batch {
+                if pending_q >= self.eff.max_batch {
                     self.stats.size_flushes += 1;
                     self.flush()?;
                     progressed = true;
                 } else if self.pending[0].enqueued.elapsed()
-                    >= Duration::from_micros(self.opts.flush_us)
+                    >= Duration::from_micros(self.eff.flush_us)
                 {
                     self.stats.deadline_flushes += 1;
                     self.flush()?;
@@ -472,11 +767,19 @@ impl<T: ServeTask> ServeEngine<T> {
                     .as_ref()
                     .map(|e| e.outstanding())
                     .unwrap_or(0);
+                if outstanding == 0 && self.force_admit_one() {
+                    // Every waiting head was still gated on `after_done`
+                    // with nothing in flight to resolve more requests:
+                    // admit the closest one rather than stall (ADR-011
+                    // deferred-arrival backstop).
+                    self.stats.forced_admissions += 1;
+                    continue;
+                }
                 anyhow::ensure!(outstanding > 0,
                                 "engine stalled: tasks parked with no \
                                  in-flight KB call and nothing pending");
                 let timeout = match self.pending.first() {
-                    Some(p) => Duration::from_micros(self.opts.flush_us)
+                    Some(p) => Duration::from_micros(self.eff.flush_us)
                         .saturating_sub(p.enqueued.elapsed())
                         .max(Duration::from_micros(1)),
                     None => Duration::from_millis(200),
@@ -516,35 +819,45 @@ impl<T: ServeTask> ServeEngine<T> {
     }
 
     /// Issue the coalesced KB call(s) for everything in the buffer:
-    /// grouped by (top-k, pinned epoch) — tasks with different prefetch
-    /// sizes cannot share one retrieve_batch call, and tasks pinned to
-    /// different epochs must not (their snapshots score differently,
-    /// ADR-006) — then dispatched to the executor (`kb_parallel >= 1`)
-    /// or run inline against the group's epoch snapshot. Within a group,
-    /// submission order is preserved; per-query results are independent
-    /// of batchmates, so sub-slice routing is bit-identical to per-task
-    /// retrieval.
+    /// grouped by (tenant, top-k, pinned epoch) — tasks with different
+    /// prefetch sizes cannot share one retrieve_batch call, tasks pinned
+    /// to different epochs must not (their snapshots score differently,
+    /// ADR-006), and tasks of different tenants must not (each tenant
+    /// owns its own knowledge base, ADR-011) — then dispatched to the
+    /// executor (`kb_parallel >= 1`) or run inline against the group's
+    /// snapshot. Within a group, submission order is preserved;
+    /// per-query results are independent of batchmates, so sub-slice
+    /// routing is bit-identical to per-task retrieval.
     fn flush(&mut self) -> anyhow::Result<()> {
         let mut batch = std::mem::take(&mut self.pending);
         if batch.is_empty() {
             return Ok(());
         }
-        // Reuse the field-held group list (capacity survives flushes) and
-        // count distinct k values positionally — the sorted list groups by
-        // k first, so each run of equal k contributes one.
+        // Reuse the field-held group list (capacity survives flushes).
         self.flush_groups.clear();
-        self.flush_groups.extend(batch.iter().map(|p| (p.k, p.epoch)));
+        self.flush_groups
+            .extend(batch.iter().map(|p| (p.tenant, p.k, p.epoch)));
         self.flush_groups.sort_unstable();
         self.flush_groups.dedup();
         let groups = std::mem::take(&mut self.flush_groups);
-        let distinct_k =
-            1 + groups.windows(2).filter(|w| w[0].0 != w[1].0).count();
-        self.stats.epoch_splits += (groups.len() - distinct_k) as u64;
-        for &(k, epoch) in &groups {
+        // Attribute the extra calls this flush pays for isolation:
+        // collapsing the tenant axis leaves the (k, epoch) groups — the
+        // calls a single-tenant engine would have issued — and further
+        // collapsing epochs leaves the per-k minimum. The differences
+        // are the tenant- and epoch-forced splits respectively.
+        let mut ke: Vec<(usize, u64)> =
+            groups.iter().map(|&(_, k, e)| (k, e)).collect();
+        ke.sort_unstable();
+        ke.dedup();
+        let mut ks: Vec<usize> = ke.iter().map(|&(k, _)| k).collect();
+        ks.dedup();
+        self.stats.tenant_splits += (groups.len() - ke.len()) as u64;
+        self.stats.epoch_splits += (ke.len() - ks.len()) as u64;
+        for &(tenant, k, epoch) in &groups {
             // Single pass over the buffer: move (not clone) each member's
             // queries into the coalesced call. A member's queries are
-            // consumed exactly once — its (k, epoch) matches exactly one
-            // entry of the deduped group list.
+            // consumed exactly once — its (tenant, k, epoch) matches
+            // exactly one entry of the deduped group list.
             let mut queries: Vec<SpecQuery> = Vec::new();
             let mut members: Vec<GroupMember> = Vec::new();
             // Per-member coalescing delay is snapshotted immediately
@@ -553,7 +866,7 @@ impl<T: ServeTask> ServeEngine<T> {
             // right here for inline ones.
             let mut enqueued: Vec<Stopwatch> = Vec::new();
             for p in batch.iter_mut() {
-                if p.k != k || p.epoch != epoch {
+                if p.tenant != tenant || p.k != k || p.epoch != epoch {
                     continue;
                 }
                 members.push(GroupMember {
@@ -569,15 +882,16 @@ impl<T: ServeTask> ServeEngine<T> {
             // silently scored by the wrong KB — that is exactly the bug
             // class ADR-006 exists to prevent — so the group fails loudly
             // while the engine keeps serving everyone else.
-            let kb = match self.epoch_kbs.get(&epoch) {
+            let kb = match self.epoch_kbs.get(&(tenant, epoch)) {
                 Some(kb) => kb.clone(),
                 None if epoch == 0 => self.kb.clone(),
                 None => {
                     self.fail_group(
                         &members,
-                        &format!("task pinned to epoch {epoch} but no \
-                                  snapshot was registered for it \
-                                  (ServeEngine::register_epoch)"));
+                        &format!("tenant {tenant} task pinned to epoch \
+                                  {epoch} but no snapshot was registered \
+                                  for it \
+                                  (ServeEngine::register_tenant_epoch)"));
                     continue;
                 }
             };
@@ -688,6 +1002,7 @@ impl<T: ServeTask> ServeEngine<T> {
             let slot = &mut self.slots[gm.slot];
             slot.task = None;
             slot.awaiting = false;
+            self.resolved += 1;
             self.failed.push((
                 slot.id,
                 format!("knowledge-base call failed: {msg}"),
@@ -731,6 +1046,12 @@ pub struct EngineBackend<L: LanguageModel> {
     /// Live knowledge base (epoch snapshots + writer); `None` serves the
     /// frozen `kb`/`corpus` pair above.
     pub live: Option<std::sync::Arc<LiveKb>>,
+    /// Per-tenant live knowledge bases (ADR-011): tenant `t`'s requests
+    /// pin snapshots from — and ingest into — `tenant_kbs[t]`, so one
+    /// tenant's ingest storm advances only its own epoch stream. Empty =
+    /// single-tenant serving (tenant 0 falls back to `live`, every other
+    /// tenant serves the frozen default KB).
+    pub tenant_kbs: Vec<std::sync::Arc<LiveKb>>,
 }
 
 impl<L: LanguageModel> EngineBackend<L> {
@@ -781,17 +1102,33 @@ impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
                    -> Vec<anyhow::Result<ReqMetrics>> {
         let queries = self.query_builder();
         let live = self.live.clone();
+        let tenant_kbs = self.tenant_kbs.clone();
         let mut results: Vec<Option<anyhow::Result<ReqMetrics>>> =
             reqs.iter().map(|_| None).collect();
-        // Admission pass: ingest requests go to the writer immediately
-        // (so a drain's later query requests already see their epochs),
-        // and every query request pins the snapshot current at its own
-        // admission. `pins` is declared before the engine so the tasks
-        // below may borrow from the pinned snapshots.
+        // Admission pass: ingest requests go to their tenant's writer
+        // immediately (so a drain's later query requests already see
+        // their epochs), and every query request pins the snapshot of
+        // *its own tenant's* KB current at its own admission (ADR-011).
+        // `pins` is declared before the engine so the tasks below may
+        // borrow from the pinned snapshots.
         let mut pins: Vec<Option<std::sync::Arc<EpochSnapshot>>> =
             Vec::with_capacity(reqs.len());
         for (i, req) in reqs.iter().enumerate() {
-            match (&live, req.method) {
+            // Per-tenant KB resolution: an explicit `tenant_kbs[t]`
+            // wins; tenant 0 falls back to the single-tenant `live`; any
+            // other tenant without a registered KB serves the frozen
+            // default (queries fine at epoch 0, ingest rejected below).
+            let lkb = {
+                let t = req.tenant as usize;
+                if t < tenant_kbs.len() {
+                    Some(&tenant_kbs[t])
+                } else if req.tenant == 0 {
+                    live.as_ref()
+                } else {
+                    None
+                }
+            };
+            match (lkb, req.method) {
                 (Some(l), Method::Ingest) => {
                     results[i] = Some(self.serve_ingest(l, req));
                     pins.push(None);
@@ -799,8 +1136,8 @@ impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
                 (None, Method::Ingest) => {
                     results[i] = Some(Err(anyhow::anyhow!(
                         "request {}: Method::Ingest needs a live \
-                         knowledge base (this worker serves a frozen \
-                         corpus)", req.id)));
+                         knowledge base for tenant {} (this worker \
+                         serves a frozen corpus)", req.id, req.tenant)));
                     pins.push(None);
                 }
                 (Some(l), _) => pins.push(Some(l.epochs.snapshot())),
@@ -809,8 +1146,11 @@ impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
         }
         let mut engine: ServeEngine<SpecTask<L>> =
             ServeEngine::new(self.kb.clone(), self.engine_opts.clone());
-        for pin in pins.iter().flatten() {
-            engine.register_epoch(pin.epoch, pin.kb.clone());
+        for (req, pin) in reqs.iter().zip(pins.iter()) {
+            if let Some(p) = pin {
+                engine.register_tenant_epoch(req.tenant, p.epoch,
+                                             p.kb.clone());
+            }
         }
         for (i, req) in reqs.iter().enumerate() {
             if results[i].is_some() {
@@ -844,14 +1184,18 @@ impl<L: LanguageModel> ServeBackend for EngineBackend<L> {
                         }));
                 }
                 Method::Spec { prefetch, os3, async_verify } => {
-                    engine.submit(
+                    engine.submit_opts(
                         i as u64,
                         SpecTask::new(
                             &self.lm, kb, corpus, queries,
                             spec_options_for(&self.cfg, prefetch, os3,
                                              async_verify),
                             &req.question)
-                            .pin_epoch(epoch));
+                            .pin_epoch(epoch)
+                            .pin_tenant(req.tenant),
+                        SubmitOpts { tenant: req.tenant,
+                                     class: req.class,
+                                     after_done: 0 });
                 }
                 Method::Knn => {
                     results[i] = Some(Err(anyhow::anyhow!(
@@ -946,10 +1290,14 @@ impl<L: LanguageModel> ServeBackend for KnnEngineBackend<L> {
         for (i, req) in reqs.iter().enumerate() {
             match req.method {
                 Method::Knn => {
-                    engine.submit(
+                    engine.submit_opts(
                         i as u64,
                         KnnTask::new(&self.lm, self.ds.as_ref(),
-                                     self.opts.clone(), &req.question));
+                                     self.opts.clone(), &req.question)
+                            .pin_tenant(req.tenant),
+                        SubmitOpts { tenant: req.tenant,
+                                     class: req.class,
+                                     after_done: 0 });
                 }
                 Method::Baseline => {
                     let pipe = KnnLmBaseline {

@@ -111,6 +111,15 @@ impl RetrievalExecutor {
         self.inflight + self.backlog.len()
     }
 
+    /// Retune the in-flight cap (ADR-011: the SLO controller raises
+    /// `kb_parallel` under overload). Raising it immediately dispatches
+    /// backlogged calls into the new slots; lowering it never cancels
+    /// in-flight work — the cap re-binds as completions land.
+    pub fn set_cap(&mut self, cap: usize) {
+        self.cap = cap.max(1);
+        self.pump();
+    }
+
     /// Whether a submitted call would start immediately (an in-flight
     /// slot is free). `pump` keeps the backlog empty while below the
     /// cap, so a non-empty backlog implies saturation. The engine uses

@@ -28,9 +28,13 @@
 pub mod engine;
 pub(crate) mod executor;
 pub mod router;
+pub mod slo;
 pub mod task;
+pub mod tenant;
 
 pub use engine::{spec_options_for, EngineBackend, EngineOptions,
                  EngineStats, KnnEngineBackend, ServeEngine};
 pub use router::{Method, Request, Response, Router, ServeBackend};
+pub use slo::{AdaptiveFlush, FlushPlan, P99Window, SloOptions};
 pub use task::{ServeTask, TaskStep};
+pub use tenant::{Priority, SubmitOpts, TenantId};

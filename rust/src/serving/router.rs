@@ -6,6 +6,7 @@
 //! front-end the deployment wraps around this binary.
 
 use crate::metrics::ReqMetrics;
+use crate::serving::tenant::{Priority, TenantId};
 use std::sync::mpsc as smpsc;
 use std::sync::{Arc, Mutex};
 
@@ -35,6 +36,25 @@ pub struct Request {
     pub id: u64,
     pub question: Vec<u32>,
     pub method: Method,
+    /// Tenant namespace (DESIGN.md ADR-011): engine backends pin this
+    /// tenant's knowledge base and never coalesce its queries with
+    /// another tenant's. 0 (the default) is the single-tenant namespace.
+    pub tenant: TenantId,
+    /// Priority class (ADR-011): weighted admission and — under
+    /// overload — speculation preemption inside the serving engine.
+    pub class: Priority,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Self {
+            id: 0,
+            question: Vec::new(),
+            method: Method::Baseline,
+            tenant: 0,
+            class: Priority::Normal,
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -270,6 +290,7 @@ mod tests {
                     id: i,
                     question: vec![i as u32, 7],
                     method: Method::Baseline,
+                    ..Request::default()
                 })
                 .unwrap();
             assert_eq!(resp.id, i);
@@ -291,6 +312,7 @@ mod tests {
         let pending: Vec<_> = (0..8u64)
             .map(|i| router.submit(Request {
                 id: i, question: vec![i as u32], method: Method::Baseline,
+                ..Request::default()
             }).unwrap())
             .collect();
         for (i, rx) in pending.into_iter().enumerate() {
@@ -318,7 +340,8 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..64u64 {
             match router.submit(Request { id: i, question: vec![1],
-                                          method: Method::Baseline }) {
+                                          method: Method::Baseline,
+                                          ..Request::default() }) {
                 Ok(rx) => rxs.push(rx),
                 Err(_) => { saw_backpressure = true; break; }
             }
@@ -351,6 +374,7 @@ mod tests {
                 id: 7,
                 question: vec![round],
                 method: Method::Baseline,
+                ..Request::default()
             });
             let err = err.expect_err("panicking request must error");
             assert!(err.to_string().contains("panicked"),
@@ -360,6 +384,7 @@ mod tests {
                 id: round as u64,
                 question: vec![1],
                 method: Method::Baseline,
+                ..Request::default()
             }).expect("worker must stay alive after a panic");
             assert_eq!(ok.tokens, vec![round as u32]);
         }
@@ -407,14 +432,16 @@ mod tests {
         });
         let mut rxs = vec![router
             .submit(Request { id: 0, question: vec![0],
-                              method: Method::Baseline })
+                              method: Method::Baseline,
+                              ..Request::default() })
             .unwrap()];
         started_rx.recv().expect("worker entered the first batch");
         // These five enqueue while the worker is parked in batch one...
         for i in 1..6u64 {
             rxs.push(router
                 .submit(Request { id: i, question: vec![i as u32],
-                                  method: Method::Baseline })
+                                  method: Method::Baseline,
+                                  ..Request::default() })
                 .unwrap());
         }
         release_tx.send(()).unwrap(); // finish batch one
@@ -460,14 +487,16 @@ mod tests {
         // here it cannot pop another job until released.
         let mut rxs = vec![router
             .submit(Request { id: 0, question: vec![1],
-                              method: Method::Baseline })
+                              method: Method::Baseline,
+                              ..Request::default() })
             .unwrap()];
         started_rx.recv().expect("worker picked up the first job");
         // Fill the 1-slot queue; the next submit must hit backpressure.
         let mut full = false;
         for i in 1..4u64 {
             match router.submit(Request { id: i, question: vec![1],
-                                          method: Method::Baseline }) {
+                                          method: Method::Baseline,
+                                          ..Request::default() }) {
                 Ok(rx) => rxs.push(rx),
                 Err(_) => { full = true; break; }
             }
@@ -477,6 +506,7 @@ mod tests {
         // fail immediately rather than blocking for a slot.
         let res = router.submit_blocking(Request {
             id: 99, question: vec![2], method: Method::Baseline,
+            ..Request::default()
         });
         assert!(res.is_err(), "must report backpressure");
         // Drain: one release per pending serve call.

@@ -1,0 +1,309 @@
+//! SLO-aware adaptive flush control (DESIGN.md ADR-011): tune the
+//! engine's coalescing policy — `max_batch`, `flush_us`, `kb_parallel` —
+//! against a p99 latency target instead of fixed config.
+//!
+//! The controller is **replay-stable by construction**: it owns no clock
+//! and no RNG. The engine feeds it each completed request's measured
+//! total latency ([`AdaptiveFlush::observe`]); the plan it emits
+//! ([`AdaptiveFlush::plan`]) is a pure function of the window contents,
+//! so a replayed trace with the same observed latencies reproduces the
+//! same knob trajectory. Per-request *outputs* never depend on the plan
+//! at all — batch composition and flush timing are
+//! schedule-not-semantics (the coalescing bit-identity argument of
+//! ADR-003/ADR-005 covers every plan the controller can emit), which is
+//! what makes an adaptive policy safe to ship inside the serving engine.
+//!
+//! Policy (deliberately simple, monotone, and clamped): while the
+//! windowed p99 exceeds the target by a factor `f`, shrink the
+//! coalescing window — `max_batch` and `flush_us` scale down by `f`
+//! (bounded below by the configured minima) so requests stop paying
+//! queueing delay for batching headroom that overload has already
+//! consumed — and scale `kb_parallel` *up* by `f` (bounded by
+//! `max_kb_parallel`) so the extra, smaller calls still overlap. At or
+//! under target, the base (configured) plan is restored.
+
+use std::collections::VecDeque;
+
+/// Sliding window of request latencies (µs) with nearest-rank
+/// percentiles — the engine's p99 estimate. Fixed capacity, FIFO
+/// eviction; `percentile` uses the same nearest-rank convention as the
+/// eval harness's `summarize_serve` (sort ascending, index
+/// `round((len-1) * p)`), so a window covering exactly one bench cell
+/// reproduces the cell's reported p99.
+#[derive(Debug, Clone)]
+pub struct P99Window {
+    cap: usize,
+    samples: VecDeque<u64>,
+}
+
+impl P99Window {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self { cap, samples: VecDeque::with_capacity(cap) }
+    }
+
+    pub fn push(&mut self, latency_us: u64) {
+        if self.samples.len() == self.cap {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(latency_us);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Nearest-rank percentile over the current window (`p` in [0, 1]);
+    /// `None` while the window is empty.
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<u64> = self.samples.iter().copied().collect();
+        sorted.sort_unstable();
+        let idx = (((sorted.len() - 1) as f64) * p.clamp(0.0, 1.0)).round()
+            as usize;
+        Some(sorted[idx])
+    }
+
+    pub fn p99(&self) -> Option<u64> {
+        self.percentile(0.99)
+    }
+}
+
+/// One effective coalescing configuration — what the engine actually
+/// runs with at a given moment (the adaptive controller's output; equal
+/// to the configured base plan when the SLO is met or adaptation is
+/// off).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlushPlan {
+    pub max_batch: usize,
+    pub flush_us: u64,
+    pub kb_parallel: usize,
+}
+
+/// SLO knobs carried inside `EngineOptions` (plain data so the options
+/// stay `Clone`): a p99 target plus the clamp bounds the controller must
+/// respect. `p99_target_us == 0` disables adaptation entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SloOptions {
+    /// Windowed-p99 target in µs; 0 = adaptation off (fixed plan).
+    pub p99_target_us: u64,
+    /// Latency window size (requests) for the p99 estimate.
+    pub window: usize,
+    /// Lower clamp for the adapted `max_batch`.
+    pub min_batch: usize,
+    /// Lower clamp for the adapted `flush_us`.
+    pub min_flush_us: u64,
+    /// Upper clamp for the adapted `kb_parallel`.
+    pub max_kb_parallel: usize,
+}
+
+impl Default for SloOptions {
+    fn default() -> Self {
+        let c = crate::config::SloConfig::default();
+        Self {
+            p99_target_us: c.p99_target_us,
+            window: c.window,
+            min_batch: c.min_batch,
+            min_flush_us: c.min_flush_us,
+            max_kb_parallel: c.max_kb_parallel,
+        }
+    }
+}
+
+/// The adaptive flush controller: a latency window plus the pure policy
+/// mapping its p99 to a [`FlushPlan`]. Constructed by the engine from
+/// [`SloOptions`] and the configured base plan.
+#[derive(Debug, Clone)]
+pub struct AdaptiveFlush {
+    target_us: u64,
+    base: FlushPlan,
+    min_batch: usize,
+    min_flush_us: u64,
+    max_kb_parallel: usize,
+    window: P99Window,
+}
+
+impl AdaptiveFlush {
+    pub fn new(slo: SloOptions, base: FlushPlan) -> Self {
+        Self {
+            target_us: slo.p99_target_us.max(1),
+            base,
+            // Clamp bounds are sanitized here, once, so `plan` can use
+            // `clamp` without ever tripping its `min <= max` contract.
+            min_batch: slo.min_batch.clamp(1, base.max_batch.max(1)),
+            min_flush_us: slo.min_flush_us.min(base.flush_us),
+            max_kb_parallel: slo.max_kb_parallel.max(base.kb_parallel),
+            window: P99Window::new(slo.window),
+        }
+    }
+
+    /// Record one completed request's total latency.
+    pub fn observe(&mut self, total: std::time::Duration) {
+        self.window.push(total.as_micros() as u64);
+    }
+
+    /// Current windowed p99 (µs), if any sample has landed.
+    pub fn p99_us(&self) -> Option<u64> {
+        self.window.p99()
+    }
+
+    /// The effective plan for the current window — a pure function of
+    /// the observed samples (no clock, no RNG, no hidden state), so
+    /// replaying the same latency sequence replays the same plans.
+    pub fn plan(&self) -> FlushPlan {
+        let Some(p99) = self.window.p99() else { return self.base };
+        if p99 <= self.target_us {
+            return self.base;
+        }
+        // Overload factor >= 1: how far the window's p99 overshoots.
+        let f = p99 as f64 / self.target_us as f64;
+        let max_batch = ((self.base.max_batch as f64 / f) as usize)
+            .clamp(self.min_batch, self.base.max_batch.max(1));
+        let flush_us = ((self.base.flush_us as f64 / f) as u64)
+            .clamp(self.min_flush_us, self.base.flush_us);
+        // kb_parallel == 0 is the synchronous mode — a structural choice
+        // (no executor exists), not a knob the controller may flip.
+        let kb_parallel = if self.base.kb_parallel == 0 {
+            0
+        } else {
+            ((self.base.kb_parallel as f64 * f) as usize)
+                .clamp(self.base.kb_parallel, self.max_kb_parallel)
+        };
+        FlushPlan { max_batch, flush_us, kb_parallel }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn window_percentiles_are_exact_on_known_sequences() {
+        let mut w = P99Window::new(8);
+        assert_eq!(w.p99(), None);
+        w.push(100);
+        assert_eq!(w.p99(), Some(100));
+        assert_eq!(w.percentile(0.5), Some(100));
+        for v in [300u64, 200, 800, 400, 700, 500, 600] {
+            w.push(v);
+        }
+        // Window = {100..800}: nearest-rank p50 index round(7*0.5)=4
+        // -> 500; p99 index round(7*0.99)=7 -> 800; p0 -> 100.
+        assert_eq!(w.len(), 8);
+        assert_eq!(w.percentile(0.0), Some(100));
+        assert_eq!(w.percentile(0.5), Some(500));
+        assert_eq!(w.p99(), Some(800));
+        // FIFO eviction: pushing 150 evicts the oldest sample (100).
+        w.push(150);
+        assert_eq!(w.percentile(0.0), Some(150));
+        assert_eq!(w.p99(), Some(800));
+    }
+
+    #[test]
+    fn window_eviction_keeps_capacity() {
+        let mut w = P99Window::new(3);
+        for v in 0..10u64 {
+            w.push(v);
+        }
+        assert_eq!(w.len(), 3);
+        // Only {7, 8, 9} remain.
+        assert_eq!(w.percentile(0.0), Some(7));
+        assert_eq!(w.p99(), Some(9));
+    }
+
+    fn base() -> FlushPlan {
+        FlushPlan { max_batch: 32, flush_us: 200, kb_parallel: 4 }
+    }
+
+    fn slo(target_us: u64) -> SloOptions {
+        SloOptions {
+            p99_target_us: target_us,
+            window: 16,
+            min_batch: 2,
+            min_flush_us: 50,
+            max_kb_parallel: 16,
+        }
+    }
+
+    #[test]
+    fn under_target_keeps_the_base_plan() {
+        let mut a = AdaptiveFlush::new(slo(10_000), base());
+        assert_eq!(a.plan(), base(), "empty window must not adapt");
+        for _ in 0..16 {
+            a.observe(Duration::from_micros(5_000));
+        }
+        assert_eq!(a.plan(), base());
+    }
+
+    #[test]
+    fn overload_shrinks_window_and_raises_parallelism() {
+        let mut a = AdaptiveFlush::new(slo(10_000), base());
+        for _ in 0..16 {
+            a.observe(Duration::from_micros(20_000)); // f = 2.0
+        }
+        let p = a.plan();
+        assert_eq!(p.max_batch, 16);
+        assert_eq!(p.flush_us, 100);
+        assert_eq!(p.kb_parallel, 8);
+    }
+
+    #[test]
+    fn plan_is_a_pure_function_of_the_samples() {
+        // Replay stability: two controllers fed the identical sample
+        // sequence emit the identical plan sequence.
+        let seq: Vec<u64> =
+            (0..40).map(|i| 4_000 + (i * 1_731) % 30_000).collect();
+        let mut a = AdaptiveFlush::new(slo(10_000), base());
+        let mut b = AdaptiveFlush::new(slo(10_000), base());
+        for &us in &seq {
+            a.observe(Duration::from_micros(us));
+            b.observe(Duration::from_micros(us));
+            assert_eq!(a.plan(), b.plan());
+        }
+        // And calling plan() repeatedly without new samples is stable.
+        assert_eq!(a.plan(), a.plan());
+    }
+
+    #[test]
+    fn clamps_respect_configured_bounds() {
+        // Extreme overload: every knob pins to its clamp, never beyond.
+        let mut a = AdaptiveFlush::new(slo(10), base());
+        for _ in 0..16 {
+            a.observe(Duration::from_micros(10_000_000)); // f = 1e6
+        }
+        let p = a.plan();
+        assert_eq!(p.max_batch, 2, "max_batch floors at min_batch");
+        assert_eq!(p.flush_us, 50, "flush_us floors at min_flush_us");
+        assert_eq!(p.kb_parallel, 16,
+                   "kb_parallel caps at max_kb_parallel");
+        // Inconsistent bounds are sanitized at construction: a min_batch
+        // above the base max_batch clamps to it instead of panicking.
+        let weird = SloOptions { min_batch: 100, min_flush_us: 9_999,
+                                 ..slo(10) };
+        let mut a = AdaptiveFlush::new(weird, base());
+        for _ in 0..4 {
+            a.observe(Duration::from_micros(1_000_000));
+        }
+        let p = a.plan();
+        assert_eq!(p.max_batch, base().max_batch);
+        assert_eq!(p.flush_us, base().flush_us);
+    }
+
+    #[test]
+    fn synchronous_mode_is_never_flipped_async() {
+        let sync_base =
+            FlushPlan { max_batch: 16, flush_us: 100, kb_parallel: 0 };
+        let mut a = AdaptiveFlush::new(slo(10), sync_base);
+        for _ in 0..8 {
+            a.observe(Duration::from_micros(1_000_000));
+        }
+        assert_eq!(a.plan().kb_parallel, 0);
+    }
+}

@@ -18,6 +18,7 @@
 
 use crate::metrics::ReqMetrics;
 use crate::retriever::SpecQuery;
+use crate::serving::tenant::TenantId;
 use crate::util::Scored;
 use std::time::Duration;
 
@@ -111,6 +112,16 @@ pub trait ServeTask {
     /// under the wrong epoch. Tasks of a frozen (non-live) knowledge
     /// base report the default epoch 0 and coalesce as before.
     fn epoch(&self) -> u64 {
+        0
+    }
+
+    /// The tenant namespace this task belongs to (DESIGN.md ADR-011):
+    /// the engine only ever coalesces its queries with same-tenant,
+    /// same-(k, epoch) batchmates, and resolves their snapshot from that
+    /// tenant's registrations ([`super::ServeEngine::register_tenant_epoch`]).
+    /// Pre-ADR-011 tasks report the default tenant 0 and coalesce as
+    /// before.
+    fn tenant(&self) -> TenantId {
         0
     }
 

@@ -1,0 +1,128 @@
+//! Multi-tenant identity and priority classes (DESIGN.md ADR-011).
+//!
+//! A **tenant** is an isolation domain: its own knowledge base (own
+//! `LiveKb` epoch stream and ingest quota) and its own flush namespace —
+//! the engine groups coalesced verification calls by *(tenant, top-k,
+//! epoch)*, so one tenant's ingest storm (a burst of epoch publishes)
+//! can neither invalidate nor starve another tenant's coalesced batches.
+//! Tenant 0 is the default namespace; single-tenant callers never see a
+//! behavioural difference.
+//!
+//! A **priority class** is an admission lever inside one engine:
+//! weighted round-robin admission (see
+//! [`SubmitOpts`] / `ServeEngine::submit_opts`) plus speculation
+//! preemption under overload — speculative work is free to abandon, so
+//! the engine may cancel the lowest-priority in-flight task at a
+//! speculation boundary and requeue it, bit-identically (the task is a
+//! resumable state machine whose output is a pure function of its own
+//! query/result sequence against its pinned epoch; see
+//! `tests/tenant_equivalence.rs`).
+
+/// Tenant namespace id. Tenant 0 is the default (single-tenant)
+/// namespace; every pre-ADR-011 code path reports 0.
+pub type TenantId = u32;
+
+/// Request priority class. `Ord` follows declaration order — smaller is
+/// *more* important — so `High < Normal < Low` and class indices can key
+/// per-class queues directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive traffic: admitted with the largest weight and
+    /// never preempted by the classes below.
+    High,
+    /// The default class.
+    Normal,
+    /// Best-effort traffic: first to be preempted under overload.
+    Low,
+}
+
+impl Priority {
+    /// Number of classes (array dimension for per-class state).
+    pub const COUNT: usize = 3;
+
+    pub fn all() -> [Priority; Priority::COUNT] {
+        [Priority::High, Priority::Normal, Priority::Low]
+    }
+
+    /// Queue index: 0 = High … 2 = Low.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Priority {
+        match i {
+            0 => Priority::High,
+            1 => Priority::Normal,
+            _ => Priority::Low,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
+
+impl Default for Priority {
+    fn default() -> Self {
+        Priority::Normal
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "high" | "h" => Ok(Priority::High),
+            "normal" | "n" => Ok(Priority::Normal),
+            "low" | "l" => Ok(Priority::Low),
+            other => Err(anyhow::anyhow!("unknown priority class: {other}")),
+        }
+    }
+}
+
+/// Per-submission serving options (`ServeEngine::submit_opts`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubmitOpts {
+    /// Tenant namespace the request belongs to: its coalesced calls only
+    /// ever share a KB call with same-tenant, same-(k, epoch) queries.
+    pub tenant: TenantId,
+    /// Admission/preemption class.
+    pub class: Priority,
+    /// Deferred arrival for deterministic traffic replay: the request
+    /// becomes admissible only once this many requests have *resolved*
+    /// (finished or failed). 0 — the default — is "arrived already".
+    /// Replaying a seeded trace through this knob reproduces admission
+    /// pressure (and therefore preemption decisions) without any
+    /// wall-clock sampling.
+    pub after_done: usize,
+}
+
+impl Default for SubmitOpts {
+    fn default() -> Self {
+        Self { tenant: 0, class: Priority::Normal, after_done: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_order_and_indexing() {
+        assert!(Priority::High < Priority::Normal);
+        assert!(Priority::Normal < Priority::Low);
+        for (i, p) in Priority::all().into_iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert_eq!(Priority::from_index(i), p);
+            assert_eq!(p.label().parse::<Priority>().unwrap(), p);
+        }
+        assert!("urgent".parse::<Priority>().is_err());
+        assert_eq!(SubmitOpts::default().class, Priority::Normal);
+        assert_eq!(SubmitOpts::default().tenant, 0);
+        assert_eq!(SubmitOpts::default().after_done, 0);
+    }
+}

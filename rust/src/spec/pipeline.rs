@@ -45,6 +45,7 @@ use std::time::Duration;
 // ADR-004); re-exported here because SpecTask is its original
 // implementation and existing consumers import it from `spec`.
 pub use crate::serving::task::{ServeTask, TaskStep};
+use crate::serving::tenant::TenantId;
 
 #[derive(Debug, Clone)]
 pub struct SpecOptions {
@@ -159,6 +160,10 @@ pub struct SpecTask<'a, L: LanguageModel> {
     /// `kb`/`corpus` must be that epoch's snapshot, and the engine groups
     /// coalesced calls by it (DESIGN.md ADR-006).
     epoch: u64,
+    /// Tenant namespace this task serves (0 = default, DESIGN.md
+    /// ADR-011): the engine groups coalesced calls by it, so queries
+    /// never cross tenant knowledge bases.
+    tenant: TenantId,
 }
 
 /// One speculation step: query → cache lookup → (maybe re-prefill) →
@@ -217,6 +222,7 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
             pending: Vec::new(),
             extra: Vec::new(),
             epoch: 0,
+            tenant: 0,
         }
     }
 
@@ -229,6 +235,15 @@ impl<'a, L: LanguageModel> SpecTask<'a, L> {
     pub fn pin_epoch(mut self, epoch: u64) -> Self {
         self.epoch = epoch;
         self.m.epoch = epoch;
+        self
+    }
+
+    /// Pin this task to a tenant namespace (DESIGN.md ADR-011): the
+    /// engine resolves its snapshot from that tenant's registrations and
+    /// only coalesces its queries with same-tenant batchmates. The
+    /// default tenant 0 preserves single-tenant behaviour exactly.
+    pub fn pin_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = tenant;
         self
     }
 
@@ -483,6 +498,10 @@ impl<'a, L: LanguageModel> ServeTask for SpecTask<'a, L> {
 
     fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    fn tenant(&self) -> TenantId {
+        self.tenant
     }
 
     fn overlap_step(&mut self) -> anyhow::Result<bool> {

@@ -96,6 +96,7 @@ fn check_equivalence(seed: u64, kind: RetrieverKind, shards: usize,
             flush_us: 200,
             max_inflight: concurrency,
             kb_parallel,
+            ..EngineOptions::default()
         };
         let (got, stats) =
             run_engine_cell(&lm, &enc, &bed, kind, &questions, &methods,
@@ -170,7 +171,8 @@ fn engine_smoke_32_concurrent() {
     let questions = generate_questions(Dataset::Nq, &bed.corpus, n, 9);
     let methods = mixed_methods(n);
     let opts = EngineOptions { max_batch: 64, flush_us: 200,
-                               max_inflight: 32, kb_parallel: 4 };
+                               max_inflight: 32, kb_parallel: 4,
+                               ..EngineOptions::default() };
     let (ms, stats) = run_engine_cell(&lm, &enc, &bed, RetrieverKind::Edr,
                                       &questions, &methods, &cfg, opts)
         .unwrap();
@@ -357,7 +359,8 @@ fn panicking_kb_call_fails_only_owning_requests() {
         let mut engine: ServeEngine<SpecTask<MockLm>> = ServeEngine::new(
             kb.clone(),
             EngineOptions { max_batch: 64, flush_us: 200, max_inflight: 2,
-                            kb_parallel });
+                            kb_parallel,
+                            ..EngineOptions::default() });
         let opts = ralmspec::eval::build_spec_options(&cfg, 1, false,
                                                       false, 3);
         for (i, q) in questions.iter().enumerate() {

@@ -107,6 +107,7 @@ fn check_equivalence(seed: u64, shards: usize, concurrency: usize,
                     flush_us: 200,
                     max_inflight: concurrency,
                     kb_parallel,
+                    ..EngineOptions::default()
                 };
                 let (got, stats) = run_knn_engine_cell(
                     &f.lm, &kb, &f.ds, &o, &f.prompts, engine_opts)
@@ -172,7 +173,8 @@ fn knn_engine_smoke_32_concurrent() {
         Arc::new(DenseExact::new(f.ds.keys.clone()));
     let o = opts(8, StridePolicy::Fixed(3));
     let engine_opts = EngineOptions { max_batch: 64, flush_us: 200,
-                                      max_inflight: 32, kb_parallel: 4 };
+                                      max_inflight: 32, kb_parallel: 4,
+                                      ..EngineOptions::default() };
     let (ms, stats) = run_knn_engine_cell(&f.lm, &kb, &f.ds, &o,
                                           &f.prompts, engine_opts)
         .unwrap();
@@ -227,7 +229,8 @@ fn router_round_trips_knn_requests() {
             ds: ds.clone(),
             opts: o2.clone(),
             engine_opts: EngineOptions { max_batch: 64, flush_us: 200,
-                                         max_inflight: 0, kb_parallel: 2 },
+                                         max_inflight: 0, kb_parallel: 2,
+                                         ..EngineOptions::default() },
         })
     });
     let rxs: Vec<_> = f
@@ -237,7 +240,8 @@ fn router_round_trips_knn_requests() {
         .map(|(i, p)| {
             router
                 .submit(Request { id: i as u64, question: p.clone(),
-                                  method: Method::Knn })
+                                  method: Method::Knn,
+                                  ..Request::default() })
                 .unwrap()
         })
         .collect();
@@ -306,7 +310,8 @@ fn router_surfaces_panicking_kb_as_error_responses() {
             // max_inflight 2: only the first admitted pair rides the
             // poisoned first flush; the rest must survive.
             engine_opts: EngineOptions { max_batch: 64, flush_us: 200,
-                                         max_inflight: 2, kb_parallel: 2 },
+                                         max_inflight: 2, kb_parallel: 2,
+                                         ..EngineOptions::default() },
         })
     });
     let rxs: Vec<_> = f
@@ -316,7 +321,8 @@ fn router_surfaces_panicking_kb_as_error_responses() {
         .map(|(i, p)| {
             router
                 .submit(Request { id: i as u64, question: p.clone(),
-                                  method: Method::Knn })
+                                  method: Method::Knn,
+                                  ..Request::default() })
                 .unwrap()
         })
         .collect();
@@ -344,7 +350,8 @@ fn router_surfaces_panicking_kb_as_error_responses() {
     // The worker survived: a fresh request now succeeds end to end.
     let rx = router
         .submit(Request { id: 99, question: f.prompts[0].clone(),
-                          method: Method::Knn })
+                          method: Method::Knn,
+                          ..Request::default() })
         .unwrap();
     let resp = rx.recv().unwrap().unwrap();
     assert_eq!(resp.id, 99);

@@ -83,6 +83,7 @@ fn check_live_cell(cfg: &Config, enc: &HashEncoder, lm: &MockLm,
         flush_us: 200,
         max_inflight: concurrency,
         kb_parallel,
+        ..EngineOptions::default()
     };
     let out = run_engine_cell_live(lm, enc, kind, live, &questions,
                                    &methods, cfg, opts, 3, 200.0)
@@ -221,7 +222,7 @@ fn knn_tasks_pin_epochs_and_stay_bit_identical() {
     let mut engine: ServeEngine<KnnTask<MockLm>> = ServeEngine::new(
         snaps[0].clone(),
         EngineOptions { max_batch: 64, flush_us: 200, max_inflight: 8,
-                        kb_parallel: 2 });
+                        kb_parallel: 2, ..EngineOptions::default() });
     for (e, snap) in snaps.iter().enumerate() {
         engine.register_epoch(e as u64, snap.clone());
     }
@@ -291,8 +292,10 @@ fn router_ingest_while_serving_smoke() {
                 flush_us: 500,
                 max_inflight: 0,
                 kb_parallel: 2,
+                ..EngineOptions::default()
             },
             live: Some(live2.clone()),
+            tenant_kbs: Vec::new(),
         })
     });
 
@@ -308,6 +311,7 @@ fn router_ingest_while_serving_smoke() {
                     id,
                     question: d.tokens.clone(),
                     method: Method::Ingest,
+                    ..Request::default()
                 })
                 .unwrap();
             assert!(resp.tokens.is_empty(),
@@ -326,6 +330,7 @@ fn router_ingest_while_serving_smoke() {
                     os3: false,
                     async_verify: false,
                 },
+                ..Request::default()
             })
             .unwrap();
         assert!(!resp.tokens.is_empty(),
@@ -369,7 +374,8 @@ fn unregistered_pinned_epoch_fails_loudly() {
         ServeEngine::new(
             kb.clone(),
             EngineOptions { max_batch: 16, flush_us: 200,
-                            max_inflight: 0, kb_parallel: 0 });
+                            max_inflight: 0, kb_parallel: 0,
+                            ..EngineOptions::default() });
     engine.submit(0, ralmspec::spec::SpecTask::new(
         &lm, kb.as_ref(), &bed.corpus, queries, opts.clone(),
         &questions[0].tokens));
@@ -409,8 +415,10 @@ fn frozen_worker_rejects_ingest() {
                 flush_us: 200,
                 max_inflight: 0,
                 kb_parallel: 0,
+                ..EngineOptions::default()
             },
             live: None,
+            tenant_kbs: Vec::new(),
         })
     });
     let err = router
@@ -418,6 +426,7 @@ fn frozen_worker_rejects_ingest() {
             id: 1,
             question: vec![100, 101, 102],
             method: Method::Ingest,
+            ..Request::default()
         })
         .unwrap_err();
     assert!(err.to_string().contains("live"),

@@ -238,6 +238,7 @@ fn sq8_serving_stays_pinned_under_compaction() {
             flush_us: 200,
             max_inflight: 8,
             kb_parallel,
+            ..ralmspec::serving::EngineOptions::default()
         };
         let out = run_engine_cell_live(&lm, &enc, RetrieverKind::Edr,
                                        &live, &questions, &methods, &cfg,

@@ -355,6 +355,7 @@ fn serving_stays_pinned_under_compaction() {
                 flush_us: 200,
                 max_inflight: 8,
                 kb_parallel,
+                ..ralmspec::serving::EngineOptions::default()
             };
             let out = run_engine_cell_live(&lm, &enc, kind, &live,
                                            &questions, &methods, &cfg,

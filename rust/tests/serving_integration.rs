@@ -114,6 +114,7 @@ fn router_serves_qa_requests_end_to_end() {
                             async_verify: false,
                         }
                     },
+                    ..Request::default()
                 })
                 .unwrap()
         })
@@ -133,6 +134,7 @@ fn router_serves_qa_requests_end_to_end() {
             id: 100,
             question: questions[0].tokens.clone(),
             method: ralmspec::serving::router::Method::Baseline,
+            ..Request::default()
         })
         .unwrap();
     assert_eq!(again.tokens, responses[0].tokens,
@@ -166,8 +168,10 @@ fn engine_backend_serves_spec_requests_through_router() {
                 flush_us: 500,
                 max_inflight: 0,
                 kb_parallel: 2,
+                ..EngineOptions::default()
             },
             live: None,
+            tenant_kbs: Vec::new(),
         })
     });
     let questions = generate_questions(Dataset::WikiQa, &bed.corpus, 4, 9);
@@ -176,6 +180,7 @@ fn engine_backend_serves_spec_requests_through_router() {
             id: i as u64 * 2,
             question: q.tokens.clone(),
             method: Method::Baseline,
+            ..Request::default()
         }).unwrap();
         let spec = router.submit_blocking(Request {
             id: i as u64 * 2 + 1,
@@ -183,6 +188,7 @@ fn engine_backend_serves_spec_requests_through_router() {
             method: Method::Spec {
                 prefetch: true, os3: false, async_verify: false,
             },
+            ..Request::default()
         }).unwrap();
         assert_eq!(base.tokens, spec.tokens,
                    "engine-served spec diverged on question {i}");
@@ -199,6 +205,7 @@ fn engine_backend_serves_spec_requests_through_router() {
                 method: Method::Spec {
                     prefetch: false, os3: true, async_verify: true,
                 },
+                ..Request::default()
             }).unwrap()
         })
         .collect();
@@ -231,6 +238,7 @@ fn spec_and_baseline_agree_through_router() {
             id: i as u64 * 2,
             question: q.tokens.clone(),
             method: ralmspec::serving::router::Method::Baseline,
+            ..Request::default()
         }).unwrap();
         let spec = router.submit_blocking(Request {
             id: i as u64 * 2 + 1,
@@ -238,6 +246,7 @@ fn spec_and_baseline_agree_through_router() {
             method: ralmspec::serving::router::Method::Spec {
                 prefetch: true, os3: false, async_verify: true,
             },
+            ..Request::default()
         }).unwrap();
         assert_eq!(base.tokens, spec.tokens, "question {i}");
         assert!(spec.metrics.kb_calls <= base.metrics.kb_calls);

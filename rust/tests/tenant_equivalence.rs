@@ -1,0 +1,688 @@
+//! THE multi-tenant serving correctness property (DESIGN.md ADR-011):
+//! tenant namespaces, priority classes, speculation preemption, and the
+//! adaptive SLO controller are all **schedule, not semantics** — every
+//! request's token output must stay bit-identical to a sequential
+//! `SpecPipeline::run` of that request alone against its pinned
+//! (tenant, epoch) snapshot, no matter how the engine interleaves,
+//! preempts, or retunes around it.
+//!
+//! Covered here:
+//!   - a hand-built two-tenant trace (mixed classes, deferred arrivals,
+//!     per-tenant ingestion between waves) swept over preemption on/off ×
+//!     (concurrency, kb_parallel) — bit-identity per request;
+//!   - preemption determinism: a replayed overload schedule preempts the
+//!     same victim at the same boundary and reproduces identical outputs
+//!     AND identical engine counters (the trace-replay claim);
+//!   - tenant isolation at the flush layer (same (k, epoch), different
+//!     tenant → split coalesced calls) and at the failure boundary (a
+//!     poisoned tenant KB fails only that tenant's requests);
+//!   - the per-tenant ingest quota through the eval-harness ingest path;
+//!   - the seeded trace generator replayed end-to-end through
+//!     `serve_tenant_trace` (the CI engine-smoke mixed-tenant cell);
+//!   - the adaptive flush controller leaving outputs untouched while it
+//!     retunes.
+
+use ralmspec::config::{Config, CorpusConfig, RetrieverKind};
+use ralmspec::datagen::{embed_corpus, generate_questions, Corpus, Dataset,
+                        HashEncoder, Question};
+use ralmspec::eval::{build_spec_options, generate_trace, ingest_synthetic,
+                     serve_tenant_trace, QaMethod, TraceSpec,
+                     TrafficEvent};
+use ralmspec::lm::MockLm;
+use ralmspec::retriever::epoch::EpochSnapshot;
+use ralmspec::retriever::{LiveKb, Retriever, SpecQuery};
+use ralmspec::serving::{EngineOptions, Priority, ServeEngine, SloOptions,
+                        SubmitOpts, TenantId};
+use ralmspec::spec::{QueryBuilder, QueryMode, SpecOptions, SpecPipeline,
+                     SpecTask};
+use ralmspec::util::Scored;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const DIM: usize = ralmspec::runtime::RETRIEVAL_DIM;
+
+fn small_config(seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.corpus = CorpusConfig {
+        n_docs: 300,
+        n_topics: 10,
+        doc_len: (24, 64),
+        seed,
+        ..CorpusConfig::default()
+    };
+    cfg.retriever.hnsw_ef_construction = 40;
+    cfg.retriever.hnsw_ef_search = 32;
+    cfg.spec.max_new_tokens = 18;
+    // Small publish batches: one burst = one published epoch.
+    cfg.ingest.batch = 4;
+    cfg
+}
+
+/// One tenant's serving world: its own corpus (distinct seed) and its
+/// own live knowledge base / epoch stream.
+fn build_tenants(cfg: &Config, enc: &HashEncoder, tenants: usize,
+                 n_questions: usize)
+                 -> (Vec<Arc<LiveKb>>, Vec<Vec<Question>>) {
+    let mut kbs = Vec::new();
+    let mut questions = Vec::new();
+    for t in 0..tenants {
+        let mut ccfg = cfg.corpus.clone();
+        ccfg.seed = cfg.corpus.seed ^ ((t as u64 + 1) << 20);
+        let corpus = Corpus::generate(&ccfg);
+        let emb = embed_corpus(enc, &corpus);
+        questions.push(generate_questions(Dataset::WikiQa, &corpus,
+                                          n_questions,
+                                          ccfg.seed ^ 0x0A));
+        kbs.push(LiveKb::build(cfg, RetrieverKind::Edr, corpus, emb, DIM));
+    }
+    (kbs, questions)
+}
+
+/// Heterogeneous speculative options per arrival: distinct prefetch
+/// sizes (distinct top-k groups), OS³, async verification, a long
+/// stride — so coalesced flushes carry several (tenant, k, epoch)
+/// groups at once.
+fn opts_for(cfg: &Config, i: usize) -> SpecOptions {
+    match i % 5 {
+        0 => build_spec_options(cfg, 1, false, false, 3),
+        1 => build_spec_options(cfg, 20, false, false, 3),
+        2 => build_spec_options(cfg, 1, true, false, 3),
+        3 => build_spec_options(cfg, 1, false, true, 3),
+        _ => build_spec_options(cfg, 1, false, false, 8),
+    }
+}
+
+/// A hand-built two-tenant trace: mixed priority classes, deferred
+/// arrival gates (sound: the i-th arrival's gate never exceeds i), and
+/// per-tenant ingest events between waves so arrivals pin epochs 0..=2
+/// for tenant 0 and 0..=1 for tenant 1.
+fn two_tenant_trace() -> Vec<TrafficEvent> {
+    use Priority::{High, Low, Normal};
+    vec![
+        TrafficEvent::Arrive { tenant: 0, class: Normal, at: 0 },
+        TrafficEvent::Arrive { tenant: 1, class: Normal, at: 0 },
+        TrafficEvent::Ingest { tenant: 0, docs: 4, at: 0 },
+        TrafficEvent::Ingest { tenant: 1, docs: 4, at: 0 },
+        TrafficEvent::Arrive { tenant: 0, class: High, at: 1 },
+        TrafficEvent::Arrive { tenant: 1, class: High, at: 0 },
+        TrafficEvent::Arrive { tenant: 0, class: Low, at: 2 },
+        TrafficEvent::Arrive { tenant: 1, class: Low, at: 2 },
+        TrafficEvent::Ingest { tenant: 0, docs: 4, at: 4 },
+        TrafficEvent::Arrive { tenant: 0, class: Normal, at: 4 },
+        TrafficEvent::Arrive { tenant: 1, class: Normal, at: 3 },
+        TrafficEvent::Arrive { tenant: 0, class: High, at: 5 },
+        TrafficEvent::Arrive { tenant: 1, class: Low, at: 6 },
+        TrafficEvent::Arrive { tenant: 0, class: Low, at: 6 },
+    ]
+}
+
+/// Replay `trace` against per-tenant writers, pinning every arrival's
+/// snapshot (the same two-pass shape as `serve_tenant_trace`, inlined
+/// here so the test can keep per-request task handles and compare
+/// outputs).
+fn resolve_pins(trace: &[TrafficEvent], kbs: &[Arc<LiveKb>],
+                enc: &HashEncoder, cfg: &Config)
+                -> Vec<(TenantId, Priority, usize, Arc<EpochSnapshot>)> {
+    let mut pins = Vec::new();
+    for (i, ev) in trace.iter().enumerate() {
+        match ev {
+            TrafficEvent::Ingest { tenant, docs, .. } => {
+                let t = (*tenant as usize).min(kbs.len() - 1);
+                ingest_synthetic(&kbs[t], enc, *docs,
+                                 cfg.corpus.seed ^ (0x9000 + i as u64),
+                                 cfg.corpus.doc_len)
+                    .unwrap();
+            }
+            TrafficEvent::Arrive { tenant, class, at } => {
+                let t = (*tenant as usize).min(kbs.len() - 1);
+                pins.push((t as TenantId, *class, *at,
+                           kbs[t].epochs.snapshot()));
+            }
+        }
+    }
+    pins
+}
+
+/// One equivalence cell: replay the hand-built trace through a fresh
+/// engine (the tenants' knowledge bases keep growing across cells —
+/// that is the point) and compare every request against a sequential
+/// `SpecPipeline::run` on its pinned snapshot.
+fn check_tenant_cell(cfg: &Config, enc: &HashEncoder, lm: &MockLm,
+                     kbs: &[Arc<LiveKb>], questions: &[Vec<Question>],
+                     preempt: bool, concurrency: usize,
+                     kb_parallel: usize) {
+    let trace = two_tenant_trace();
+    let pins = resolve_pins(&trace, kbs, enc, cfg);
+    let n = pins.len();
+    let queries = QueryBuilder {
+        encoder: enc,
+        mode: QueryMode::Dense,
+        dense_len: cfg.retriever.dense_query_len,
+        sparse_len: cfg.retriever.sparse_query_len,
+    };
+    let mut engine: ServeEngine<SpecTask<MockLm>> = ServeEngine::new(
+        pins[0].3.kb.clone(),
+        EngineOptions {
+            max_batch: 64,
+            flush_us: 200,
+            max_inflight: concurrency,
+            kb_parallel,
+            preempt,
+            ..EngineOptions::default()
+        });
+    for (t, _, _, pin) in &pins {
+        engine.register_tenant_epoch(*t, pin.epoch, pin.kb.clone());
+    }
+    for (i, (t, class, at, pin)) in pins.iter().enumerate() {
+        let q = &questions[*t as usize][i % questions[*t as usize].len()];
+        engine.submit_opts(
+            i as u64,
+            SpecTask::new(lm, pin.kb.as_ref(), &*pin.corpus, queries,
+                          opts_for(cfg, i), &q.tokens)
+                .pin_epoch(pin.epoch)
+                .pin_tenant(*t),
+            SubmitOpts { tenant: *t, class: *class, after_done: *at });
+    }
+    let done = engine.run().unwrap();
+    let failed = engine.take_failed();
+    assert!(failed.is_empty(),
+            "preempt={preempt} conc={concurrency} \
+             kb_parallel={kb_parallel}: unexpected failures {failed:?}");
+    assert_eq!(done.len(), n);
+    let stats = engine.stats().clone();
+    assert_eq!(stats.tenants_served, 2,
+               "both tenants must be seen by the engine");
+    assert!(stats.epochs_served >= 2,
+            "arrivals span several published epochs \
+             (saw {})", stats.epochs_served);
+
+    // THE property: per request, engine output == sequential run against
+    // the pinned (tenant, epoch) snapshot — preemption, class weights,
+    // and tenant-split flushes change only the schedule.
+    for (id, m) in &done {
+        let i = *id as usize;
+        let (t, class, _, pin) = &pins[i];
+        assert_eq!(m.epoch, pin.epoch,
+                   "request {i} must report its pinned epoch");
+        let q = &questions[*t as usize][i % questions[*t as usize].len()];
+        let reference = SpecPipeline {
+            lm,
+            kb: pin.kb.as_ref(),
+            corpus: &*pin.corpus,
+            queries,
+            opts: opts_for(cfg, i),
+        }
+        .run(&q.tokens)
+        .unwrap();
+        assert_eq!(
+            m.tokens_out, reference.tokens_out,
+            "TENANT SERVING DIVERGED FROM PINNED SNAPSHOT: req={i} \
+             tenant={t} class={class:?} epoch={} preempt={preempt} \
+             conc={concurrency} kb_parallel={kb_parallel}",
+            pin.epoch);
+    }
+}
+
+#[test]
+fn tenant_serving_matches_pinned_snapshots() {
+    // The ADR-011 acceptance sweep: preemption on/off × admission caps ×
+    // sync/async retrieval execution, all over the same pair of growing
+    // tenant knowledge bases.
+    let seed = 0x7E4A;
+    let cfg = small_config(seed);
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+    let (kbs, questions) = build_tenants(&cfg, &enc, 2, 14);
+    for &(preempt, concurrency, kb_parallel) in
+        &[(false, 2, 0), (true, 2, 0), (false, 8, 0), (true, 8, 4)]
+    {
+        check_tenant_cell(&cfg, &enc, &lm, &kbs, &questions, preempt,
+                          concurrency, kb_parallel);
+    }
+}
+
+/// Run one fixed overload schedule: two Low requests admitted first
+/// (the High arrivals are gated behind the first resolution), one of
+/// them deliberately short so its completion opens the gate while the
+/// other Low is still mid-speculation — the second High must then
+/// preempt it. Synchronous retrieval + an effectively-infinite flush
+/// deadline make the whole schedule a pure function of the submissions.
+fn run_preemption_schedule(seed: u64)
+                           -> (Vec<(u64, Vec<u32>)>,
+                               ralmspec::serving::EngineStats) {
+    let cfg = small_config(seed);
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let bed = ralmspec::eval::TestBed::build(&cfg, &enc);
+    let kb = bed.retriever(RetrieverKind::Edr);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+    let questions = generate_questions(Dataset::WikiQa, &bed.corpus, 4, 7);
+    let queries = QueryBuilder {
+        encoder: &enc,
+        mode: QueryMode::Dense,
+        dense_len: cfg.retriever.dense_query_len,
+        sparse_len: cfg.retriever.sparse_query_len,
+    };
+    let mut short = build_spec_options(&cfg, 1, false, false, 3);
+    short.max_new = 6;
+    let mut long = build_spec_options(&cfg, 1, false, false, 3);
+    long.max_new = 24;
+    let mut engine: ServeEngine<SpecTask<MockLm>> = ServeEngine::new(
+        kb.clone(),
+        EngineOptions {
+            max_batch: 64,
+            // Deadline flushes are the one wall-clock input to the
+            // schedule; park them out of reach so only the (replayable)
+            // size/drain conditions fire.
+            flush_us: 1_000_000,
+            max_inflight: 2,
+            kb_parallel: 0,
+            preempt: true,
+            ..EngineOptions::default()
+        });
+    let subs: [(SpecOptions, Priority, usize); 4] = [
+        (short.clone(), Priority::Low, 0),
+        (long.clone(), Priority::Low, 0),
+        (long.clone(), Priority::High, 1),
+        (long.clone(), Priority::High, 1),
+    ];
+    for (i, (opts, class, at)) in subs.iter().enumerate() {
+        engine.submit_opts(
+            i as u64,
+            SpecTask::new(&lm, kb.as_ref(), &*bed.corpus, queries,
+                          opts.clone(), &questions[i].tokens),
+            SubmitOpts { tenant: 0, class: *class, after_done: *at });
+    }
+    let done = engine.run().unwrap();
+    assert!(engine.take_failed().is_empty());
+    let stats = engine.stats().clone();
+
+    // Bit-identity: the preempted Low resumes from its own state and
+    // still matches an uninterrupted sequential run.
+    for (id, m) in &done {
+        let i = *id as usize;
+        let reference = SpecPipeline {
+            lm: &lm,
+            kb: kb.as_ref(),
+            corpus: &*bed.corpus,
+            queries,
+            opts: subs[i].0.clone(),
+        }
+        .run(&questions[i].tokens)
+        .unwrap();
+        assert_eq!(m.tokens_out, reference.tokens_out,
+                   "PREEMPTION PERTURBED OUTPUT: req={i} \
+                    class={:?}", subs[i].1);
+    }
+    (done.iter().map(|(id, m)| (*id, m.tokens_out.clone())).collect(),
+     stats)
+}
+
+#[test]
+fn preemption_is_deterministic_and_bit_identical() {
+    let seed = 0x9E4A;
+    let (out_a, stats_a) = run_preemption_schedule(seed);
+    assert_eq!(out_a.len(), 4, "every request must resolve");
+    assert!(stats_a.preemptions >= 1,
+            "the gated High arrivals must preempt the in-flight Low \
+             (preemptions = {})", stats_a.preemptions);
+    assert_eq!(stats_a.forced_admissions, 0,
+               "no gate in this schedule needs the deadlock backstop");
+
+    // Replay determinism: the identical submission sequence reproduces
+    // the identical outputs AND the identical schedule counters — the
+    // property that makes trace-replay debugging of preemption possible.
+    let (out_b, stats_b) = run_preemption_schedule(seed);
+    assert_eq!(out_a, out_b, "replayed outputs must match exactly");
+    assert_eq!(stats_a.preemptions, stats_b.preemptions);
+    assert_eq!(stats_a.kb_calls, stats_b.kb_calls);
+    assert_eq!(stats_a.coalesced_queries, stats_b.coalesced_queries);
+    assert_eq!(stats_a.size_flushes, stats_b.size_flushes);
+    assert_eq!(stats_a.drain_flushes, stats_b.drain_flushes);
+    assert_eq!(stats_a.deadline_flushes, 0,
+               "a 1 s deadline must never fire in this schedule");
+}
+
+#[test]
+fn tenant_namespaces_split_coalesced_calls() {
+    // Two tenants, identical top-k, identical epoch: without ADR-011 the
+    // flush would coalesce all eight requests into one KB call; the
+    // tenant namespace must force (at least) one split per flush round —
+    // and the isolation price is visible in `tenant_splits` while
+    // outputs stay bit-identical.
+    let seed = 0xAE4A;
+    let cfg = small_config(seed);
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+    let (kbs, questions) = build_tenants(&cfg, &enc, 2, 4);
+    let pins: Vec<Arc<EpochSnapshot>> =
+        kbs.iter().map(|kb| kb.epochs.snapshot()).collect();
+    let queries = QueryBuilder {
+        encoder: &enc,
+        mode: QueryMode::Dense,
+        dense_len: cfg.retriever.dense_query_len,
+        sparse_len: cfg.retriever.sparse_query_len,
+    };
+    let opts = build_spec_options(&cfg, 1, false, false, 3);
+    let mut engine: ServeEngine<SpecTask<MockLm>> = ServeEngine::new(
+        pins[0].kb.clone(),
+        EngineOptions { max_batch: 64, flush_us: 1_000_000,
+                        max_inflight: 0, kb_parallel: 0,
+                        ..EngineOptions::default() });
+    for (t, pin) in pins.iter().enumerate() {
+        engine.register_tenant_epoch(t as TenantId, pin.epoch,
+                                     pin.kb.clone());
+    }
+    let n_per = 4usize;
+    for t in 0..2usize {
+        for j in 0..n_per {
+            let q = &questions[t][j];
+            engine.submit_opts(
+                (t * n_per + j) as u64,
+                SpecTask::new(&lm, pins[t].kb.as_ref(), &*pins[t].corpus,
+                              queries, opts.clone(), &q.tokens)
+                    .pin_epoch(pins[t].epoch)
+                    .pin_tenant(t as TenantId),
+                SubmitOpts { tenant: t as TenantId,
+                             class: Priority::Normal,
+                             after_done: 0 });
+        }
+    }
+    let done = engine.run().unwrap();
+    assert_eq!(done.len(), 2 * n_per);
+    let stats = engine.stats().clone();
+    assert_eq!(stats.tenants_served, 2);
+    assert!(stats.tenant_splits >= 1,
+            "same-(k, epoch) flushes across two tenants must split \
+             (tenant_splits = {})", stats.tenant_splits);
+    for (id, m) in &done {
+        let i = *id as usize;
+        let (t, j) = (i / n_per, i % n_per);
+        let reference = SpecPipeline {
+            lm: &lm,
+            kb: pins[t].kb.as_ref(),
+            corpus: &*pins[t].corpus,
+            queries,
+            opts: opts.clone(),
+        }
+        .run(&questions[t][j].tokens)
+        .unwrap();
+        assert_eq!(m.tokens_out, reference.tokens_out,
+                   "tenant split perturbed output: tenant={t} req={j}");
+    }
+}
+
+/// A KB wrapper whose first `retrieve_batch` panics; later calls
+/// delegate (same shape as the engine_equivalence poison test).
+struct PanicOnce {
+    inner: Arc<dyn Retriever>,
+    fired: AtomicBool,
+}
+
+impl Retriever for PanicOnce {
+    fn retrieve_batch(&self, qs: &[SpecQuery], k: usize) -> Vec<Vec<Scored>> {
+        if !self.fired.swap(true, Ordering::SeqCst) {
+            panic!("poisoned tenant knowledge-base call");
+        }
+        self.inner.retrieve_batch(qs, k)
+    }
+
+    fn score_doc(&self, q: &SpecQuery, doc: u32) -> f32 {
+        self.inner.score_doc(q, doc)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "panic-once"
+    }
+}
+
+#[test]
+fn poisoned_tenant_kb_fails_only_that_tenant() {
+    // Failure isolation: tenant 1's knowledge base panics on its first
+    // coalesced call. Exactly tenant 1's requests (their queries all
+    // ride that one call) must fail; tenant 0's requests complete
+    // bit-identically — a tenant's outage is its own.
+    let seed = 0xBE4A;
+    let cfg = small_config(seed);
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+    let (kbs, questions) = build_tenants(&cfg, &enc, 2, 3);
+    let pin0 = kbs[0].epochs.snapshot();
+    let pin1 = kbs[1].epochs.snapshot();
+    let poisoned: Arc<dyn Retriever> = Arc::new(PanicOnce {
+        inner: pin1.kb.clone(),
+        fired: AtomicBool::new(false),
+    });
+    let queries = QueryBuilder {
+        encoder: &enc,
+        mode: QueryMode::Dense,
+        dense_len: cfg.retriever.dense_query_len,
+        sparse_len: cfg.retriever.sparse_query_len,
+    };
+    let opts = build_spec_options(&cfg, 1, false, false, 3);
+    let mut engine: ServeEngine<SpecTask<MockLm>> = ServeEngine::new(
+        pin0.kb.clone(),
+        EngineOptions { max_batch: 64, flush_us: 1_000_000,
+                        max_inflight: 0, kb_parallel: 0,
+                        ..EngineOptions::default() });
+    engine.register_tenant_epoch(0, pin0.epoch, pin0.kb.clone());
+    engine.register_tenant_epoch(1, pin1.epoch, poisoned.clone());
+    let n_per = 3usize;
+    for t in 0..2usize {
+        let pin = if t == 0 { &pin0 } else { &pin1 };
+        let kb: &dyn Retriever = if t == 0 {
+            pin0.kb.as_ref()
+        } else {
+            poisoned.as_ref()
+        };
+        for j in 0..n_per {
+            engine.submit_opts(
+                (t * n_per + j) as u64,
+                SpecTask::new(&lm, kb, &*pin.corpus, queries, opts.clone(),
+                              &questions[t][j].tokens)
+                    .pin_epoch(pin.epoch)
+                    .pin_tenant(t as TenantId),
+                SubmitOpts { tenant: t as TenantId,
+                             class: Priority::Normal,
+                             after_done: 0 });
+        }
+    }
+    let done = engine.run().unwrap();
+    let failed = engine.take_failed();
+    assert_eq!(done.len() + failed.len(), 2 * n_per,
+               "every request resolves exactly once");
+    let failed_ids: Vec<u64> = failed.iter().map(|(id, _)| *id).collect();
+    assert_eq!(failed_ids, vec![3, 4, 5],
+               "exactly tenant 1's requests must fail");
+    for (_, msg) in &failed {
+        assert!(msg.contains("poisoned tenant knowledge-base call"),
+                "failure must carry the panic payload: {msg}");
+    }
+    for (id, m) in &done {
+        let j = *id as usize;
+        assert!(j < n_per, "tenant 0 ids only");
+        let reference = SpecPipeline {
+            lm: &lm,
+            kb: pin0.kb.as_ref(),
+            corpus: &*pin0.corpus,
+            queries,
+            opts: opts.clone(),
+        }
+        .run(&questions[0][j].tokens)
+        .unwrap();
+        assert_eq!(m.tokens_out, reference.tokens_out,
+                   "tenant 0 req {j} must survive tenant 1's outage \
+                    bit-identically");
+    }
+}
+
+#[test]
+fn ingest_quota_bounds_one_tenant_through_the_harness_path() {
+    // ADR-011 quota through the eval-harness ingest path: the writer
+    // accepts exactly `tenant.quota_docs` documents, rejects the rest
+    // with a pointed error, and already-published epochs keep serving.
+    let seed = 0xCE4A;
+    let mut cfg = small_config(seed);
+    cfg.tenant.quota_docs = 6;
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let corpus = Corpus::generate(&cfg.corpus);
+    let emb = embed_corpus(&enc, &corpus);
+    let questions = generate_questions(Dataset::WikiQa, &corpus, 2, 5);
+    let live = LiveKb::build(&cfg, RetrieverKind::Edr, corpus, emb, DIM);
+
+    // First burst fits the quota (4 of 6)...
+    ingest_synthetic(&live, &enc, 4, seed ^ 0xD0C1, cfg.corpus.doc_len)
+        .unwrap();
+    // ...the second burst exhausts it mid-way and must surface the quota.
+    let err = ingest_synthetic(&live, &enc, 4, seed ^ 0xD0C2,
+                               cfg.corpus.doc_len)
+        .expect_err("the 7th document must exceed the quota of 6");
+    assert!(err.to_string().contains("quota"),
+            "rejection must name the quota: {err:#}");
+    {
+        let mut w = live.writer.lock().unwrap();
+        assert_eq!(w.stats().docs_ingested, 6,
+                   "exactly the quota is accepted");
+        w.flush().unwrap();
+    }
+    // Published epochs keep serving after the rejection.
+    let pin = live.epochs.snapshot();
+    assert!(pin.epoch >= 1, "accepted bursts must have published");
+    let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+    let reference = SpecPipeline {
+        lm: &lm,
+        kb: pin.kb.as_ref(),
+        corpus: &*pin.corpus,
+        queries: QueryBuilder {
+            encoder: &enc,
+            mode: QueryMode::Dense,
+            dense_len: cfg.retriever.dense_query_len,
+            sparse_len: cfg.retriever.sparse_query_len,
+        },
+        opts: build_spec_options(&cfg, 1, false, false, 3),
+    }
+    .run(&questions[0].tokens)
+    .unwrap();
+    assert!(!reference.tokens_out.is_empty(),
+            "the quota-capped tenant must still serve");
+}
+
+#[test]
+fn mixed_tenant_trace_replay_smoke() {
+    // The CI engine-smoke mixed-tenant cell: a seeded generated trace
+    // replayed end-to-end through `serve_tenant_trace` — every arrival
+    // resolves, both ingest bursts land in some tenant's writer, and the
+    // per-(tenant, class) report accounts for every request.
+    let seed = 0xDE4A;
+    let cfg = small_config(seed);
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+    let spec = TraceSpec {
+        seed: seed ^ 0x77,
+        tenants: 2,
+        requests: 12,
+        mix: [1, 2, 1],
+        ingest_bursts: 2,
+        burst_docs: cfg.ingest.batch,
+    };
+    let trace = generate_trace(&spec);
+    let arrivals = trace
+        .iter()
+        .filter(|e| matches!(e, TrafficEvent::Arrive { .. }))
+        .count();
+    assert_eq!(arrivals, spec.requests);
+    let tenants_in_trace: std::collections::BTreeSet<TenantId> = trace
+        .iter()
+        .filter_map(|e| match e {
+            TrafficEvent::Arrive { tenant, .. } => Some(*tenant),
+            TrafficEvent::Ingest { .. } => None,
+        })
+        .collect();
+    let (kbs, questions) = build_tenants(&cfg, &enc, 2, spec.requests);
+    let report = serve_tenant_trace(
+        &lm, &enc, RetrieverKind::Edr, &kbs, &questions[0],
+        QaMethod::spec(1, false, false), &trace, &cfg, 8, None)
+        .unwrap();
+    assert_eq!(report.summary.requests, arrivals);
+    assert_eq!(report.tenants_served, tenants_in_trace.len() as u64);
+    let per_class_total: usize =
+        report.per_class.iter().map(|c| c.requests).sum();
+    assert_eq!(per_class_total, arrivals,
+               "per-(tenant, class) slices must account for every \
+                request");
+    for c in &report.per_class {
+        assert!(c.p50_s <= c.p99_s + 1e-12,
+                "percentiles must be ordered per slice");
+    }
+    assert_eq!(report.docs_ingested,
+               (spec.ingest_bursts * spec.burst_docs) as u64,
+               "every generated ingest burst lands in a tenant writer");
+}
+
+#[test]
+fn adaptive_slo_controller_never_perturbs_outputs() {
+    // An absurdly tight p99 target forces the controller to retune the
+    // flush plan almost immediately; the retuned schedule must still
+    // produce bit-identical per-request outputs (schedule, not
+    // semantics), and the engine must count its adaptations.
+    let seed = 0xEE4A;
+    let cfg = small_config(seed);
+    let enc = HashEncoder::new(DIM, seed ^ 0xEC);
+    let bed = ralmspec::eval::TestBed::build(&cfg, &enc);
+    let kb = bed.retriever(RetrieverKind::Edr);
+    let lm = MockLm::new(cfg.corpus.vocab, 320, seed ^ 0x11);
+    let n = 8;
+    let questions = generate_questions(Dataset::WikiQa, &bed.corpus, n, 3);
+    let queries = QueryBuilder {
+        encoder: &enc,
+        mode: QueryMode::Dense,
+        dense_len: cfg.retriever.dense_query_len,
+        sparse_len: cfg.retriever.sparse_query_len,
+    };
+    let mut engine: ServeEngine<SpecTask<MockLm>> = ServeEngine::new(
+        kb.clone(),
+        EngineOptions {
+            max_batch: 64,
+            flush_us: 500,
+            max_inflight: 4,
+            kb_parallel: 0,
+            slo: Some(SloOptions {
+                p99_target_us: 1,
+                window: 4,
+                min_batch: 1,
+                min_flush_us: 50,
+                max_kb_parallel: 8,
+            }),
+            ..EngineOptions::default()
+        });
+    for (i, q) in questions.iter().enumerate() {
+        engine.submit_opts(
+            i as u64,
+            SpecTask::new(&lm, kb.as_ref(), &*bed.corpus, queries,
+                          opts_for(&cfg, i), &q.tokens),
+            SubmitOpts::default());
+    }
+    let done = engine.run().unwrap();
+    assert_eq!(done.len(), n);
+    let stats = engine.stats().clone();
+    assert!(stats.adaptations >= 1,
+            "a 1 µs p99 target must force at least one retune \
+             (adaptations = {})", stats.adaptations);
+    for (id, m) in &done {
+        let i = *id as usize;
+        let reference = SpecPipeline {
+            lm: &lm,
+            kb: kb.as_ref(),
+            corpus: &*bed.corpus,
+            queries,
+            opts: opts_for(&cfg, i),
+        }
+        .run(&questions[i].tokens)
+        .unwrap();
+        assert_eq!(m.tokens_out, reference.tokens_out,
+                   "SLO adaptation perturbed output: req={i}");
+    }
+}
